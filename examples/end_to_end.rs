@@ -1,0 +1,115 @@
+//! END-TO-END DRIVER: exercises the full three-layer stack on real small
+//! workloads and regenerates every paper table/figure (recorded in
+//! EXPERIMENTS.md).
+//!
+//! Layers proven to compose here:
+//!   L1/L2: AOT Pallas/JAX artifacts (rcam_step / rcam_program / golden_*)
+//!          loaded and executed from rust via PJRT, checked bit-exact
+//!          against the native simulator and numerically against PRINS.
+//!   L3   : the PRINS device (controller + storage + register protocol +
+//!          TCP server) running all five paper kernels.
+//!
+//!   cargo run --release --example end_to_end
+use prins::algorithms::histogram_baseline;
+use prins::controller::kernels::KernelId;
+use prins::controller::registers::Status;
+use prins::host::{server::Server, PrinsDevice};
+use prins::model::figures;
+use prins::runtime::{Golden, Runtime, XlaRcamBackend};
+use prins::workloads::{synth_hist_samples, synth_samples, synth_uniform};
+use std::io::{BufRead, BufReader, Write};
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    println!("### PRINS end-to-end driver ###\n");
+
+    // ---- 1. cross-layer equivalence: native simulator vs Pallas kernel --
+    match Runtime::open("artifacts") {
+        Ok(rt) => {
+            let mut xla = XlaRcamBackend::new(rt);
+            let mut native = prins::rcam::PrinsArray::single(xla.rows(), 32);
+            for r in 0..4096usize {
+                let v = (r as u64).wrapping_mul(0x9E3779B97F4A7C15) & 0xFFFF_FFFF;
+                native.load_row_bits(r, 0, 32, v);
+                xla.load_row_bits(r, 0, 32, v);
+            }
+            let cpat = vec![(3u16, true), (17u16, false)];
+            let wpat = vec![(29u16, true)];
+            native.compare(&cpat);
+            native.write(&wpat);
+            xla.step(&cpat, &wpat).expect("xla step");
+            for r in 0..4096usize {
+                assert_eq!(
+                    native.fetch_row_bits(r, 0, 32),
+                    xla.fetch_row_bits(r, 0, 32)
+                );
+            }
+            println!("[L1<->L3] Pallas rcam_step == native bit-sliced simulator (4096 rows) OK");
+        }
+        Err(e) => println!("[L1<->L3] skipped (run `make artifacts`): {e:#}"),
+    }
+
+    // ---- 2. PRINS results vs golden XLA executors ------------------------
+    match Golden::open_default() {
+        Ok(mut golden) => {
+            let (n, dims) = (512usize, 8usize);
+            let x = synth_samples(n, dims, 4, 21);
+            let c = synth_uniform(dims, 22);
+            // PRINS associative ED
+            let layout = prins::algorithms::euclidean::EuclideanLayout::new(dims);
+            let mut array = prins::rcam::PrinsArray::single(n, layout.width as usize);
+            let mut sm = prins::storage::StorageManager::new(n);
+            let kern =
+                prins::algorithms::EuclideanKernel::load(&mut sm, &mut array, &x, n, dims);
+            let mut ctl = prins::controller::Controller::new(array);
+            let res = kern.run(&mut ctl, &sm, &c, 1);
+            // golden (AOT JAX kernel via PJRT)
+            let gd = golden.euclidean(&x, n, dims, &c).expect("golden ed");
+            let mut max_rel = 0f32;
+            for i in 0..n {
+                let rel = (res.dists[0][i] - gd[i]).abs() / gd[i].abs().max(1.0);
+                max_rel = max_rel.max(rel);
+            }
+            assert!(max_rel < 1e-4, "max_rel {max_rel}");
+            println!(
+                "[L2<->L3] PRINS associative fp32 ED == golden XLA kernel (n={n}, max rel err {max_rel:.2e}) OK"
+            );
+        }
+        Err(e) => println!("[L2<->L3] skipped: {e:#}"),
+    }
+
+    // ---- 3. the device + TCP server path --------------------------------
+    {
+        let samples = synth_hist_samples(20_000, 5);
+        let dev = PrinsDevice::new(20_000, 64);
+        dev.load_samples_for_histogram(&samples);
+        let st = dev.run_kernel(KernelId::Histogram, &[], &[]);
+        assert_eq!(st, Status::Done);
+        let out = dev.take_outputs();
+        assert_eq!(out.u64s, histogram_baseline(&samples));
+        println!(
+            "[host]    register-protocol histogram on 20k samples: {} cycles, {:.1} nJ OK",
+            out.cycles,
+            out.energy_j * 1e9
+        );
+
+        let server = Server::spawn("127.0.0.1:0").expect("server");
+        let mut conn = std::net::TcpStream::connect(server.addr).expect("connect");
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        writeln!(conn, "HIST 5000 3").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("OK"), "{line}");
+        println!("[server]  TCP appliance protocol: {}", line.trim());
+        server.shutdown();
+    }
+
+    // ---- 4. regenerate every paper figure --------------------------------
+    println!();
+    println!("{}", figures::fig12(figures::DIMS, 512).render());
+    println!("{}", figures::fig13(1200).render());
+    println!("{}", figures::fig14(1 << 10).render());
+    println!("{}", figures::fig15().render());
+
+    println!("total driver time: {:?}", t0.elapsed());
+}

@@ -1,0 +1,40 @@
+//! Quickstart: stand up a PRINS device, store a dataset *in* it, and run
+//! an associative kernel through the host register protocol — the
+//! fifty-line tour of the public API.
+//!
+//!   cargo run --release --example quickstart
+use prins::controller::kernels::KernelId;
+use prins::controller::registers::Status;
+use prins::host::PrinsDevice;
+use prins::workloads::synth_hist_samples;
+
+fn main() {
+    // 1. a PRINS device: 64Ki rows of 64-bit RCAM storage
+    let device = PrinsDevice::new(1 << 16, 64);
+
+    // 2. the dataset lives in the storage (paper §5.3: "the datasets on
+    //    which PRINS operates must reside in PRINS")
+    let samples = synth_hist_samples(50_000, 42);
+    device.load_samples_for_histogram(&samples);
+
+    // 3. trigger the histogram kernel by ID and poll the status register
+    let status = device.run_kernel(KernelId::Histogram, &[], &[]);
+    assert_eq!(status, Status::Done);
+
+    // 4. read results + the performance counters
+    let out = device.take_outputs();
+    let top = out
+        .u64s
+        .iter()
+        .enumerate()
+        .max_by_key(|(_, &c)| c)
+        .unwrap();
+    println!("histogram over {} samples:", samples.len());
+    println!("  hottest bin       : {} ({} samples)", top.0, top.1);
+    println!("  device cycles     : {} (independent of sample count!)", out.cycles);
+    println!(
+        "  device time@500MHz: {:.2} µs",
+        out.cycles as f64 / 500e6 * 1e6
+    );
+    println!("  energy            : {:.2} nJ", out.energy_j * 1e9);
+}

@@ -1,0 +1,162 @@
+"""AOT compile path: lower every PRINS entry point to HLO text artifacts.
+
+Run once at build time (`make artifacts`); the rust runtime
+(rust/src/runtime/) loads artifacts/*.hlo.txt via
+HloModuleProto::from_text_file and executes them on the PJRT CPU client.
+Python is never on the request path.
+
+Interchange format is HLO *text*, NOT a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the image's
+xla_extension 0.5.1 rejects (proto.id() <= INT_MAX); the text parser
+reassigns ids and round-trips cleanly. Lowered with return_tuple=True and
+unwrapped with to_tuple{1,2}() on the rust side.
+(See /opt/xla-example/README.md.)
+
+Every artifact's shapes are fixed at lowering time; artifacts/manifest.json
+records them so the rust side can pad/validate inputs.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import golden
+from .kernels import rcam_step as k
+
+# --- fixed AOT shapes (recorded in the manifest) ---------------------------
+W = 256           # bit columns per RCAM row (paper 5.1)
+NW = 2048         # u32 words per plane -> 65,536 rows per executor call
+P = 128           # microprogram executor pass-table length
+GOLDEN_N = 4096   # golden ED/DP rows
+GOLDEN_D = 16     # golden ED/DP dims (paper: 16-dimensional DP vectors)
+SPMV_NNZ = 16384  # golden SpMV nonzeros (padded COO)
+SPMV_NB = 1024    # golden SpMV vector length
+HIST_N = 65536    # golden histogram samples
+
+
+def u32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.uint32)
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# Entry points. Wrapped so every output is a tuple (return_tuple=True keeps
+# the rust side uniform: execute -> to_tupleN).
+def ep_rcam_step(planes, key, cmask, wkey, wmask):
+    planes2, tags = k.rcam_step(planes, key, cmask, wkey, wmask)
+    return (planes2, tags)
+
+
+def ep_rcam_program(planes, passes):
+    return (model.run_program(planes, passes),)
+
+
+def ep_compare_count(planes, key, cmask):
+    return (model.compare_count(planes, key, cmask),)
+
+
+def ep_tag_field_popcount(tags, field):
+    return (k.tag_field_popcount(tags, field),)
+
+
+def ep_golden_ed(x, center):
+    return (golden.euclidean(x, center),)
+
+
+def ep_golden_dp(x, h):
+    return (golden.dot_product(x, h),)
+
+
+def ep_golden_hist(x):
+    return (golden.histogram256(x),)
+
+
+def ep_golden_spmv(rows, cols, vals, x):
+    return (golden.spmv(rows, cols, vals, x),)
+
+
+ENTRY_POINTS = {
+    # name -> (fn, arg specs, output arity)
+    "rcam_step": (
+        ep_rcam_step,
+        [u32(W, NW), u32(W), u32(W), u32(W), u32(W)],
+        2,
+    ),
+    "rcam_program": (ep_rcam_program, [u32(W, NW), u32(P, 4, W)], 1),
+    "compare_count": (ep_compare_count, [u32(W, NW), u32(W), u32(W)], 1),
+    "tag_field_popcount": (ep_tag_field_popcount, [u32(NW), u32(NW)], 1),
+    "golden_ed": (ep_golden_ed, [f32(GOLDEN_N, GOLDEN_D), f32(GOLDEN_D)], 1),
+    "golden_dp": (ep_golden_dp, [f32(GOLDEN_N, GOLDEN_D), f32(GOLDEN_D)], 1),
+    "golden_hist": (ep_golden_hist, [u32(HIST_N)], 1),
+    "golden_spmv": (
+        ep_golden_spmv,
+        [i32(SPMV_NNZ), i32(SPMV_NNZ), f32(SPMV_NNZ), f32(SPMV_NB)],
+        1,
+    ),
+}
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument("--only", default=None, help="comma-separated entry names")
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    names = list(ENTRY_POINTS) if args.only is None else args.only.split(",")
+    manifest = {
+        "W": W,
+        "NW": NW,
+        "P": P,
+        "BLOCK_WORDS": k.BLOCK_WORDS,
+        "GOLDEN_N": GOLDEN_N,
+        "GOLDEN_D": GOLDEN_D,
+        "SPMV_NNZ": SPMV_NNZ,
+        "SPMV_NB": SPMV_NB,
+        "HIST_N": HIST_N,
+        "entry_points": {},
+    }
+    for name in names:
+        fn, specs, arity = ENTRY_POINTS[name]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["entry_points"][name] = {
+            "file": f"{name}.hlo.txt",
+            "outputs": arity,
+            "args": [
+                {"shape": list(s.shape), "dtype": s.dtype.name} for s in specs
+            ],
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {manifest_path}")
+
+
+if __name__ == "__main__":
+    main()

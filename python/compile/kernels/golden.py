@@ -1,0 +1,92 @@
+"""Golden kernels: the reference architecture's numeric computations.
+
+These implement the same workloads PRINS runs associatively (Euclidean
+distance, dot product, histogram, SpMV) as straight dataflow kernels.
+They serve two roles:
+
+ 1. Build-time oracle — pytest checks the associative L2 programs against
+    them (and them against ref.py).
+ 2. Run-time validator — aot.py lowers them to artifacts/golden_*.hlo.txt;
+    the rust `prins validate` command and the integration tests execute
+    them via PJRT to cross-check PRINS results end-to-end.
+
+ED and DP are written as Pallas kernels (they are the MXU-shaped side of
+the workload; see DESIGN.md Hardware-Adaptation); histogram and SpMV use
+scatter-adds, which XLA handles natively.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_BLOCK = 256
+
+
+def _ed_kernel(center_ref, x_ref, out_ref):
+    """Squared Euclidean distance of a [BN, D] sample block to one center."""
+    x = x_ref[...]
+    c = center_ref[...]
+    d = x - c[None, :]
+    out_ref[...] = jnp.sum(d * d, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("row_block",))
+def euclidean(x, center, *, row_block=ROW_BLOCK):
+    """x: f32[N, D], center: f32[D] -> f32[N] squared distances."""
+    n, d = x.shape
+    assert n % row_block == 0
+    return pl.pallas_call(
+        _ed_kernel,
+        grid=(n // row_block,),
+        in_specs=[
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((row_block, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((row_block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(center, x)
+
+
+def _dp_kernel(h_ref, x_ref, out_ref):
+    """Dot product of a [BN, D] vector block with the hyperplane h."""
+    out_ref[...] = x_ref[...] @ h_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("row_block",))
+def dot_product(x, h, *, row_block=ROW_BLOCK):
+    """x: f32[N, D], h: f32[D] -> f32[N]."""
+    n, d = x.shape
+    assert n % row_block == 0
+    return pl.pallas_call(
+        _dp_kernel,
+        grid=(n // row_block,),
+        in_specs=[
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((row_block, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((row_block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(h, x)
+
+
+@jax.jit
+def histogram256(x):
+    """Paper Algorithm 3 semantics: bin on bits [31..24] of u32. x: u32[N]."""
+    idx = (x >> jnp.uint32(24)).astype(jnp.int32)
+    return jnp.zeros((256,), jnp.int32).at[idx].add(1)
+
+
+@jax.jit
+def spmv(rows, cols, vals, x):
+    """COO SpMV: y[rows[k]] += vals[k] * x[cols[k]].
+
+    rows/cols: i32[NNZ], vals: f32[NNZ], x: f32[NB] -> y: f32[NB].
+    Padding convention (rust side): pad entries use vals == 0.
+    """
+    contrib = vals * x[cols]
+    return jnp.zeros_like(x).at[rows].add(contrib)

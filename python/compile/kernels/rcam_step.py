@@ -1,0 +1,149 @@
+"""L1 Pallas kernels: the PRINS compute hot-spot.
+
+One associative pass over the RCAM bit-plane state — compare the key
+against the (compare-)masked bit columns of every row in parallel, then
+write the (write-)masked key bits into every tagged row. This is the
+operation PRINS executes at 500 MHz on the memristive crossbar; here it is
+the TPU-shaped kernel (see DESIGN.md section "Hardware-Adaptation"): bit
+planes are u32 lane vectors resident in VMEM, a compare is a fused
+XNOR+AND reduction across planes on the VPU, a tagged write is a
+predicated blend.
+
+All kernels use interpret=True: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO, which both pytest and
+the rust runtime (via artifacts/*.hlo.txt) can run.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+UINT32_ALL = jnp.uint32(0xFFFFFFFF)
+
+# Words-per-block for the grid. 256 u32 words x W<=256 planes = 256 KB per
+# block at W=256 — the VMEM working-set target from DESIGN.md.
+BLOCK_WORDS = 256
+
+
+def _step_kernel(key_ref, cmask_ref, wkey_ref, wmask_ref, planes_ref,
+                 out_planes_ref, tags_ref):
+    """One associative pass on a [W, BN] block of bit-planes.
+
+    tag computation: tag = AND_j ( cmask_j ? (key_j ? plane_j : ~plane_j)
+                                           : ALL_ONES )
+    tagged write:    plane_j' = wmask_j ? (key up) blend : plane_j
+    """
+    planes = planes_ref[...]                       # [W, BN] u32
+    key = key_ref[...]                             # [W] u32 (0/1)
+    cmask = cmask_ref[...]
+    wkey = wkey_ref[...]
+    wmask = wmask_ref[...]
+
+    # Select plane or complement per compare-key bit, neutralize unmasked
+    # columns, then reduce with bitwise AND across planes. Constants must be
+    # materialized inside the kernel (pallas rejects captured tracers).
+    all_ones = jnp.full(planes.shape, 0xFFFFFFFF, jnp.uint32)
+    sel = jnp.where(key[:, None] != 0, planes, ~planes)
+    contrib = jnp.where(cmask[:, None] != 0, sel, all_ones)
+    tags = jnp.bitwise_and.reduce(contrib, axis=0)
+
+    # Two-phase tagged write (paper 3.1): set-then-reset, modeled as a blend.
+    set_bits = planes | tags[None, :]
+    clr_bits = planes & ~tags[None, :]
+    written = jnp.where(wkey[:, None] != 0, set_bits, clr_bits)
+    out_planes_ref[...] = jnp.where(wmask[:, None] != 0, written, planes)
+    tags_ref[...] = tags
+
+
+@functools.partial(jax.jit, static_argnames=("block_words",))
+def rcam_step(planes, key, cmask, wkey, wmask, *, block_words=BLOCK_WORDS):
+    """Apply one associative compare+write pass.
+
+    planes: u32[W, NW]; key/cmask/wkey/wmask: u32[W] with 0/1 entries.
+    Returns (planes', tags) with tags: u32[NW].
+    NW must be a multiple of block_words (the rust caller pads).
+    """
+    w, nw = planes.shape
+    assert nw % block_words == 0, (nw, block_words)
+    grid = (nw // block_words,)
+    return pl.pallas_call(
+        _step_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((w,), lambda i: (0,)),            # key
+            pl.BlockSpec((w,), lambda i: (0,)),            # cmask
+            pl.BlockSpec((w,), lambda i: (0,)),            # wkey
+            pl.BlockSpec((w,), lambda i: (0,)),            # wmask
+            pl.BlockSpec((w, block_words), lambda i: (0, i)),  # planes
+        ],
+        out_specs=[
+            pl.BlockSpec((w, block_words), lambda i: (0, i)),
+            pl.BlockSpec((block_words,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((w, nw), jnp.uint32),
+            jax.ShapeDtypeStruct((nw,), jnp.uint32),
+        ],
+        interpret=True,
+    )(key, cmask, wkey, wmask, planes)
+
+
+def _popcount_kernel(tags_ref, out_ref):
+    """Reduction tree (paper 3.1): logarithmic summation of tag bits.
+
+    Per-block popcount; the host (or the surrounding jax graph) sums the
+    per-block partials — the same two-level structure as the cascaded
+    module counters in Fig. 4.
+    """
+    tags = tags_ref[...]
+    counts = jax.lax.population_count(tags).astype(jnp.uint32)
+    out_ref[...] = jnp.sum(counts, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("block_words",))
+def tag_popcount(tags, *, block_words=BLOCK_WORDS):
+    """Total number of tagged rows. tags: u32[NW] -> u32 scalar."""
+    (nw,) = tags.shape
+    assert nw % block_words == 0
+    grid = (nw // block_words,)
+    partials = pl.pallas_call(
+        _popcount_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_words,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((nw // block_words,), jnp.uint32),
+        interpret=True,
+    )(tags)
+    return jnp.sum(partials, dtype=jnp.uint32)
+
+
+def _weighted_popcount_kernel(tags_ref, field_ref, out_ref):
+    """Popcount of (tags AND field-plane) — the reduction-tree input used by
+    the bit-serial field reduction (histogram increments, SpMV row sums)."""
+    tags = tags_ref[...]
+    field = field_ref[...]
+    counts = jax.lax.population_count(tags & field).astype(jnp.uint32)
+    out_ref[...] = jnp.sum(counts, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("block_words",))
+def tag_field_popcount(tags, field_plane, *, block_words=BLOCK_WORDS):
+    """Number of rows that are tagged AND have the field-plane bit set."""
+    (nw,) = tags.shape
+    assert nw % block_words == 0
+    grid = (nw // block_words,)
+    partials = pl.pallas_call(
+        _weighted_popcount_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_words,), lambda i: (i,)),
+            pl.BlockSpec((block_words,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((nw // block_words,), jnp.uint32),
+        interpret=True,
+    )(tags, field_plane)
+    return jnp.sum(partials, dtype=jnp.uint32)

@@ -1,0 +1,139 @@
+"""Pure-numpy/jnp oracles for the PRINS kernels.
+
+These are the correctness references against which the Pallas kernels
+(rcam_step.py, golden.py) and the composed L2 programs (model.py) are
+checked by pytest + hypothesis. They implement the RCAM semantics of the
+paper (section 3.1/4) directly, row by row, with no cleverness.
+
+Bit-plane layout convention (shared with the rust simulator, see
+rust/src/rcam/bitmatrix.rs): the RCAM array of N rows x W bit-columns is
+stored as W planes of ceil(N/32) uint32 words; bit r of plane j is
+row r's bit-column j. Row r matches the key iff for every column j with
+cmask[j] == 1, plane[j] bit r == key[j].
+"""
+from __future__ import annotations
+
+import numpy as np
+
+UINT32_ALL = np.uint32(0xFFFFFFFF)
+
+
+def unpack_rows(planes: np.ndarray, n_rows: int) -> np.ndarray:
+    """planes [W, NW] u32 -> bits [n_rows, W] u8 (row-major view)."""
+    w, nw = planes.shape
+    assert n_rows <= nw * 32
+    bits = np.zeros((n_rows, w), dtype=np.uint8)
+    for j in range(w):
+        for r in range(n_rows):
+            bits[r, j] = (planes[j, r // 32] >> np.uint32(r % 32)) & np.uint32(1)
+    return bits
+
+
+def pack_rows(bits: np.ndarray, nw: int | None = None) -> np.ndarray:
+    """bits [N, W] u8 -> planes [W, NW] u32."""
+    n, w = bits.shape
+    if nw is None:
+        nw = (n + 31) // 32
+    planes = np.zeros((w, nw), dtype=np.uint32)
+    for j in range(w):
+        for r in range(n):
+            if bits[r, j]:
+                planes[j, r // 32] |= np.uint32(1) << np.uint32(r % 32)
+    return planes
+
+
+def rcam_compare_ref(
+    planes: np.ndarray, key: np.ndarray, cmask: np.ndarray
+) -> np.ndarray:
+    """Reference compare: returns tag words [NW] u32 (bit r set = row r matched).
+
+    A column with cmask[j] == 0 is ignored ("Bit and Bit-not lines kept
+    floating", paper 3.1). An all-zero cmask therefore matches every row.
+    """
+    w, nw = planes.shape
+    tags = np.full(nw, UINT32_ALL, dtype=np.uint32)
+    for j in range(w):
+        if cmask[j] == 0:
+            continue
+        if key[j]:
+            tags &= planes[j]
+        else:
+            tags &= ~planes[j]
+    return tags
+
+
+def rcam_write_ref(
+    planes: np.ndarray, tags: np.ndarray, wkey: np.ndarray, wmask: np.ndarray
+) -> np.ndarray:
+    """Reference tagged write: for every column j with wmask[j] == 1, set
+    bit-column j of every tagged row to wkey[j]. Untagged rows and unmasked
+    columns are untouched (paper 3.1: two-phase write affects only tagged
+    rows)."""
+    w, _ = planes.shape
+    out = planes.copy()
+    for j in range(w):
+        if wmask[j] == 0:
+            continue
+        if wkey[j]:
+            out[j] |= tags
+        else:
+            out[j] &= ~tags
+    return out
+
+
+def rcam_step_ref(planes, key, cmask, wkey, wmask):
+    """compare + tagged write (one associative pass). Returns (planes', tags)."""
+    tags = rcam_compare_ref(planes, key, cmask)
+    return rcam_write_ref(planes, tags, wkey, wmask), tags
+
+
+def run_program_ref(planes, passes):
+    """Iterate rcam_step_ref over a pass table [P, 4, W] (key,cmask,wkey,wmask)."""
+    out = planes.copy()
+    for p in range(passes.shape[0]):
+        key, cmask, wkey, wmask = passes[p]
+        out, _ = rcam_step_ref(out, key, cmask, wkey, wmask)
+    return out
+
+
+def popcount_ref(tags: np.ndarray, n_rows: int) -> int:
+    """Reduction-tree oracle: number of tagged rows among the first n_rows."""
+    total = 0
+    for i, word in enumerate(tags):
+        for b in range(32):
+            r = i * 32 + b
+            if r >= n_rows:
+                break
+            total += (int(word) >> b) & 1
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Golden (reference-architecture) kernels: the numeric computations PRINS
+# implements associatively. Used to validate end-to-end PRINS results.
+# ---------------------------------------------------------------------------
+
+def euclidean_ref(x: np.ndarray, center: np.ndarray) -> np.ndarray:
+    """Squared Euclidean distance of every sample to one center. x [N, D]."""
+    d = x.astype(np.float32) - center.astype(np.float32)[None, :]
+    return np.sum(d * d, axis=1, dtype=np.float32)
+
+
+def dot_ref(x: np.ndarray, h: np.ndarray) -> np.ndarray:
+    """Dot product of every vector with the hyperplane h. x [N, D]."""
+    return (x.astype(np.float32) * h.astype(np.float32)[None, :]).sum(
+        axis=1, dtype=np.float32
+    )
+
+
+def histogram_ref(x: np.ndarray, bins: int = 256) -> np.ndarray:
+    """Paper Algorithm 3: 256-bin histogram binned on bits [31..24] of u32."""
+    idx = (x.astype(np.uint32) >> np.uint32(24)).astype(np.int64)
+    return np.bincount(idx, minlength=bins).astype(np.int32)
+
+
+def spmv_ref(rows, cols, vals, x, n_out):
+    """COO SpMV oracle: y[rows[k]] += vals[k] * x[cols[k]]."""
+    y = np.zeros(n_out, dtype=np.float32)
+    np.add.at(y, rows.astype(np.int64), vals.astype(np.float32) * x[cols.astype(np.int64)])
+    return y

@@ -1,0 +1,152 @@
+"""L2: the PRINS associative machine as a JAX compute graph.
+
+The machine state is the bit-plane array u32[W, NW] (W bit-columns,
+NW = N/32 words; see kernels/ref.py for the layout). One associative pass
+is the L1 Pallas kernel (kernels/rcam_step.py). A *microprogram* is a pass
+table u32[P, 4, W] of (key, cmask, wkey, wmask) rows; `run_program` folds
+the kernel over the table with lax.scan so an entire bit-serial arithmetic
+operation (e.g. a full 16-bit vector add = 128 truth-table passes, paper
+section 4 / Fig. 6) lowers to ONE HLO module with no host round-trips.
+
+The rust coordinator generates pass tables from its own microcode
+assembler (rust/src/micro/) and feeds them to the AOT-compiled executor as
+runtime inputs — the artifact is a *generic* microprogram executor, not a
+baked-in program. A pass with wmask == 0 writes nothing and is the padding
+no-op.
+
+This module also contains a small python mirror of the rust full-adder
+microcode generator (`vecadd_passes`). It exists so the scan-composed
+executor can be tested end-to-end (packed vectors in, integer sums out)
+against numpy, pinning down the exact pass-table convention the rust side
+must emit.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import rcam_step as k
+
+
+@functools.partial(jax.jit, static_argnames=("block_words",))
+def associative_step(planes, key, cmask, wkey, wmask, *, block_words=k.BLOCK_WORDS):
+    """One compare+write pass. Thin re-export of the L1 kernel."""
+    return k.rcam_step(planes, key, cmask, wkey, wmask, block_words=block_words)
+
+
+@functools.partial(jax.jit, static_argnames=("block_words",))
+def run_program(planes, passes, *, block_words=k.BLOCK_WORDS):
+    """Fold a microprogram over the machine state.
+
+    planes: u32[W, NW]; passes: u32[P, 4, W] -> u32[W, NW].
+    """
+
+    def body(st, pass_row):
+        key, cmask, wkey, wmask = (
+            pass_row[0],
+            pass_row[1],
+            pass_row[2],
+            pass_row[3],
+        )
+        nxt, _tags = k.rcam_step(st, key, cmask, wkey, wmask, block_words=block_words)
+        return nxt, ()
+
+    out, _ = jax.lax.scan(body, planes, passes)
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("block_words",))
+def compare_count(planes, key, cmask, *, block_words=k.BLOCK_WORDS):
+    """compare + reduction tree: number of rows matching (key, cmask).
+
+    This is the inner step of Algorithm 3 (histogram): compare a bin index
+    against a field, count tags with the logarithmic reduction tree.
+    """
+    _, tags = k.rcam_step(
+        planes,
+        key,
+        cmask,
+        jnp.zeros_like(key),
+        jnp.zeros_like(key),  # wmask = 0: no write
+        block_words=block_words,
+    )
+    return k.tag_popcount(tags, block_words=block_words)
+
+
+# ---------------------------------------------------------------------------
+# Python mirror of the rust microcode generator (full-adder truth table).
+# ---------------------------------------------------------------------------
+
+# Full-adder truth table, paper Fig. 6(a): input (c, a, b) -> output (c', s).
+#
+# ORDERING MATTERS (classic associative-processing hazard, Foster 1976):
+# a pass that flips the carry bit moves a row onto another entry's input
+# pattern; if that entry runs later the row is processed twice and the sum
+# is corrupted. Only two entries flip c: (0,1,1)->c=1 lands on (1,1,1),
+# and (1,0,0)->c=0 lands on (0,0,0). Processing (1,1,1) before (0,1,1) and
+# (0,0,0) before (1,0,0) makes every carry flip land on an
+# already-processed pattern. rust/src/micro/add.rs uses the same order.
+FULL_ADDER = [
+    # (c, a, b)  ->  (c', s)
+    ((1, 1, 1), (1, 1)),
+    ((0, 1, 1), (1, 0)),
+    ((0, 0, 0), (0, 0)),
+    ((1, 0, 0), (0, 1)),
+    ((0, 0, 1), (0, 1)),
+    ((0, 1, 0), (0, 1)),
+    ((1, 0, 1), (1, 0)),
+    ((1, 1, 0), (1, 0)),
+]
+
+
+def _pass_row(w, key_bits, cmask_bits, wkey_bits, wmask_bits):
+    row = np.zeros((4, w), dtype=np.uint32)
+    for j, v in key_bits:
+        row[0, j] = v
+    for j, v in cmask_bits:
+        row[1, j] = v
+    for j, v in wkey_bits:
+        row[2, j] = v
+    for j, v in wmask_bits:
+        row[3, j] = v
+    return row
+
+
+def vecadd_passes(w, a_base, b_base, s_base, c_col, m_bits):
+    """Generate the pass table for S = A + B over m-bit fields.
+
+    Matches rust/src/micro/add.rs: for each bit i (LSB first), walk the
+    full-adder truth table entries; only entries whose output differs from
+    a no-op need a write, but we emit all 8 for fidelity to the paper's
+    cycle count ("eight steps of one compare and one write", section 4).
+    Columns: a_base+i, b_base+i (inputs), s_base+i (sum), c_col (carry).
+    The carry column must be zeroed by the caller beforehand.
+    """
+    passes = []
+    for i in range(m_bits):
+        a, b, s = a_base + i, b_base + i, s_base + i
+        for (cin, av, bv), (cout, sv) in FULL_ADDER:
+            # NOTE the write ordering subtlety: writing c in the same pass
+            # that compared c is safe because the compare happens before
+            # the write within a pass (tag is latched, paper 3.2).
+            passes.append(
+                _pass_row(
+                    w,
+                    key_bits=[(c_col, cin), (a, av), (b, bv)],
+                    cmask_bits=[(c_col, 1), (a, 1), (b, 1)],
+                    wkey_bits=[(c_col, cout), (s, sv)],
+                    wmask_bits=[(c_col, 1), (s, 1)],
+                )
+            )
+    return np.stack(passes)
+
+
+def pad_program(passes, p_total):
+    """Pad a pass table with no-ops (wmask == 0) to a fixed AOT length."""
+    p, four, w = passes.shape
+    assert four == 4 and p <= p_total, (passes.shape, p_total)
+    pad = np.zeros((p_total - p, 4, w), dtype=np.uint32)
+    return np.concatenate([passes, pad], axis=0)

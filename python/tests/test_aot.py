@@ -1,0 +1,49 @@
+"""The AOT path itself: every entry point lowers to parseable HLO text and
+the manifest is consistent. Catches jax upgrades that would silently break
+the HLO-text interchange with the rust runtime.
+"""
+import json
+import os
+
+import pytest
+
+from compile import aot
+
+
+@pytest.mark.parametrize("name", list(aot.ENTRY_POINTS))
+def test_entry_point_lowers_to_hlo_text(name):
+    import jax
+
+    fn, specs, arity = aot.ENTRY_POINTS[name]
+    text = aot.to_hlo_text(jax.jit(fn).lower(*specs))
+    assert "ENTRY" in text and "ROOT" in text
+    # return_tuple=True: the module root must be a tuple of `arity` elements.
+    assert text.count("HloModule") == 1
+
+
+def test_manifest_matches_artifacts_if_built():
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    manifest_path = os.path.join(art, "manifest.json")
+    if not os.path.exists(manifest_path):
+        pytest.skip("artifacts not built")
+    with open(manifest_path) as f:
+        manifest = json.load(f)
+    assert set(manifest["entry_points"]) == set(aot.ENTRY_POINTS)
+    for name, meta in manifest["entry_points"].items():
+        path = os.path.join(art, meta["file"])
+        assert os.path.exists(path), path
+        with open(path) as f:
+            head = f.read(4096)
+        assert "HloModule" in head
+    assert manifest["W"] == aot.W and manifest["NW"] == aot.NW
+    assert manifest["P"] == aot.P
+
+
+def test_shapes_are_block_aligned():
+    """The executor NW must be a multiple of the kernel block size, and the
+    golden shapes must match their kernels' grid constraints."""
+    from compile.kernels import rcam_step as k
+
+    assert aot.NW % k.BLOCK_WORDS == 0
+    assert aot.GOLDEN_N % 256 == 0
+    assert aot.HIST_N >= 1

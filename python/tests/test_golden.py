@@ -1,0 +1,93 @@
+"""Golden (reference-architecture) kernels vs numpy oracles."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import golden, ref
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n_blocks=st.integers(min_value=1, max_value=4),
+    d=st.sampled_from([1, 4, 16, 64]),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_euclidean(n_blocks, d, seed):
+    rng = np.random.default_rng(seed)
+    n = n_blocks * 256
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    c = rng.normal(size=d).astype(np.float32)
+    np.testing.assert_allclose(
+        np.asarray(golden.euclidean(x, c)), ref.euclidean_ref(x, c),
+        rtol=1e-4, atol=1e-5,
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n_blocks=st.integers(min_value=1, max_value=4),
+    d=st.sampled_from([1, 4, 16, 64]),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_dot_product(n_blocks, d, seed):
+    rng = np.random.default_rng(seed)
+    n = n_blocks * 256
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    h = rng.normal(size=d).astype(np.float32)
+    np.testing.assert_allclose(
+        np.asarray(golden.dot_product(x, h)), ref.dot_ref(x, h),
+        rtol=1e-4, atol=1e-5,
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31),
+       n=st.sampled_from([64, 1024, 65536]))
+def test_histogram(seed, n):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, 2**32, n, dtype=np.uint32)
+    got = np.asarray(golden.histogram256(x))
+    exp = ref.histogram_ref(x)
+    np.testing.assert_array_equal(got, exp)
+    assert got.sum() == n
+
+
+def test_histogram_bins_on_top_byte():
+    """Algorithm 3 binning: bits [31..24], not the low byte."""
+    x = np.array([0x00000000, 0x01FFFFFF, 0xFF000000, 0xFF0000FF], dtype=np.uint32)
+    got = np.asarray(golden.histogram256(x))
+    assert got[0] == 1 and got[1] == 1 and got[255] == 2
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    nb=st.sampled_from([16, 64, 256]),
+    density=st.floats(min_value=0.01, max_value=0.5),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_spmv(nb, density, seed):
+    rng = np.random.default_rng(seed)
+    nnz = max(1, int(nb * nb * density))
+    rows = rng.integers(0, nb, nnz).astype(np.int32)
+    cols = rng.integers(0, nb, nnz).astype(np.int32)
+    vals = rng.normal(size=nnz).astype(np.float32)
+    x = rng.normal(size=nb).astype(np.float32)
+    np.testing.assert_allclose(
+        np.asarray(golden.spmv(rows, cols, vals, x)),
+        ref.spmv_ref(rows, cols, vals, x, nb),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+def test_spmv_zero_padding_convention():
+    """Padding entries (vals == 0) must not perturb the result even when
+    their row/col indices alias real entries."""
+    nb = 8
+    rows = np.array([0, 1, 0, 0], dtype=np.int32)
+    cols = np.array([1, 2, 0, 0], dtype=np.int32)
+    vals = np.array([2.0, 3.0, 0.0, 0.0], dtype=np.float32)
+    x = np.arange(nb, dtype=np.float32)
+    got = np.asarray(golden.spmv(rows, cols, vals, x))
+    exp = np.zeros(nb, dtype=np.float32)
+    exp[0] = 2.0 * x[1]
+    exp[1] = 3.0 * x[2]
+    np.testing.assert_allclose(got, exp)

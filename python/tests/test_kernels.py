@@ -1,0 +1,118 @@
+"""L1 Pallas kernels vs pure-numpy oracles (ref.py).
+
+Hypothesis sweeps the kernel's shape space (plane count W, word count NW,
+block size) and dense/sparse mask patterns; every case asserts exact
+bit-equality — the RCAM is a digital machine, there is no tolerance.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import rcam_step as k
+from compile.kernels import ref
+
+
+def mk_case(draw_ints, w, nw, seed):
+    rng = np.random.default_rng(seed)
+    planes = rng.integers(0, 2**32, (w, nw), dtype=np.uint32)
+    key = rng.integers(0, 2, w).astype(np.uint32)
+    cmask = rng.integers(0, 2, w).astype(np.uint32)
+    wkey = rng.integers(0, 2, w).astype(np.uint32)
+    wmask = rng.integers(0, 2, w).astype(np.uint32)
+    return planes, key, cmask, wkey, wmask
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    w=st.integers(min_value=1, max_value=64),
+    nw_blocks=st.integers(min_value=1, max_value=4),
+    block=st.sampled_from([1, 2, 4]),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_step_matches_ref(w, nw_blocks, block, seed):
+    nw = nw_blocks * block
+    planes, key, cmask, wkey, wmask = mk_case(None, w, nw, seed)
+    got_planes, got_tags = k.rcam_step(
+        planes, key, cmask, wkey, wmask, block_words=block
+    )
+    exp_planes, exp_tags = ref.rcam_step_ref(planes, key, cmask, wkey, wmask)
+    np.testing.assert_array_equal(np.asarray(got_tags), exp_tags)
+    np.testing.assert_array_equal(np.asarray(got_planes), exp_planes)
+
+
+def test_empty_cmask_matches_all_rows():
+    """Paper 3.1: floating Bit/Bit-not lines (mask = 0) never discharge the
+    match line, so an all-zero compare mask tags every row."""
+    rng = np.random.default_rng(7)
+    planes = rng.integers(0, 2**32, (8, 4), dtype=np.uint32)
+    zeros = np.zeros(8, dtype=np.uint32)
+    _, tags = k.rcam_step(planes, zeros, zeros, zeros, zeros, block_words=4)
+    assert np.all(np.asarray(tags) == np.uint32(0xFFFFFFFF))
+
+
+def test_zero_wmask_is_noop():
+    rng = np.random.default_rng(8)
+    planes = rng.integers(0, 2**32, (8, 4), dtype=np.uint32)
+    key = rng.integers(0, 2, 8).astype(np.uint32)
+    cmask = np.ones(8, dtype=np.uint32)
+    zeros = np.zeros(8, dtype=np.uint32)
+    got, _ = k.rcam_step(planes, key, cmask, key, zeros, block_words=4)
+    np.testing.assert_array_equal(np.asarray(got), planes)
+
+
+def test_write_affects_only_tagged_rows():
+    """Construct a single-row match and check only that row's bits move."""
+    w, nw = 8, 2
+    bits = np.zeros((64, w), dtype=np.uint8)
+    bits[37, 0] = 1  # row 37 uniquely has column 0 set
+    planes = ref.pack_rows(bits, nw)
+    key = np.zeros(w, dtype=np.uint32)
+    key[0] = 1
+    cmask = np.zeros(w, dtype=np.uint32)
+    cmask[0] = 1
+    wkey = np.zeros(w, dtype=np.uint32)
+    wkey[5] = 1
+    wmask = np.zeros(w, dtype=np.uint32)
+    wmask[5] = 1
+    got, tags = k.rcam_step(planes, key, cmask, wkey, wmask, block_words=2)
+    assert ref.popcount_ref(np.asarray(tags), 64) == 1
+    obits = ref.unpack_rows(np.asarray(got), 64)
+    assert obits[37, 5] == 1
+    obits[37, 5] = 0
+    np.testing.assert_array_equal(obits, bits)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    nw_blocks=st.integers(min_value=1, max_value=4),
+    block=st.sampled_from([1, 2, 4]),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_popcount_matches_ref(nw_blocks, block, seed):
+    nw = nw_blocks * block
+    rng = np.random.default_rng(seed)
+    tags = rng.integers(0, 2**32, nw, dtype=np.uint32)
+    got = int(k.tag_popcount(tags, block_words=block))
+    assert got == ref.popcount_ref(tags, nw * 32)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    nw_blocks=st.integers(min_value=1, max_value=4),
+    block=st.sampled_from([1, 2, 4]),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_field_popcount_matches_ref(nw_blocks, block, seed):
+    nw = nw_blocks * block
+    rng = np.random.default_rng(seed)
+    tags = rng.integers(0, 2**32, nw, dtype=np.uint32)
+    field = rng.integers(0, 2**32, nw, dtype=np.uint32)
+    got = int(k.tag_field_popcount(tags, field, block_words=block))
+    assert got == ref.popcount_ref(tags & field, nw * 32)
+
+
+def test_pack_unpack_roundtrip():
+    rng = np.random.default_rng(9)
+    bits = rng.integers(0, 2, (100, 12)).astype(np.uint8)
+    planes = ref.pack_rows(bits, nw=4)
+    np.testing.assert_array_equal(ref.unpack_rows(planes, 100), bits)

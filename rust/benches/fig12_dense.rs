@@ -1,0 +1,14 @@
+//! Regenerates paper Fig. 12: ED / DP / Histogram performance normalized
+//! to a bandwidth-limited external-storage architecture (10 GB/s appliance
+//! and 24 GB/s NVDIMM), for 1M / 10M / 100M elements, plus the §6
+//! GFLOPS/W numbers. Run: `cargo bench --bench fig12_dense`.
+use prins::model::figures;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let t = figures::fig12(figures::DIMS, 1024);
+    println!("{}", t.render());
+    println!("paper shape: ED/DP/Hist normalized speedup grows linearly in N,");
+    println!("reaching 3-4 orders of magnitude at 100M; efficiency ~2-4 GFLOPS/W.");
+    println!("(simulated in {:?})", t0.elapsed());
+}

@@ -1,0 +1,15 @@
+//! Regenerates paper Fig. 14: BFS performance normalized to the 2.5 GTEPS
+//! (10 GB/s) and 6 GTEPS (24 GB/s) references, over the Table 3 graphs
+//! ordered by average out-degree. Reports BOTH the literal Algorithm 5
+//! measurement and the paper's vertex-serial model (see EXPERIMENTS.md).
+use prins::model::figures;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let t = figures::fig14(1 << 11);
+    println!("{}", t.render());
+    println!("paper shape (model columns): speedup ordered by avg out-degree,");
+    println!("up to ~7x for hollywood-09; the literal edge-serial Algorithm 5");
+    println!("is far slower — see EXPERIMENTS.md for the discrepancy analysis.");
+    println!("(simulated in {:?})", t0.elapsed());
+}

@@ -1,0 +1,15 @@
+//! Regenerates paper Fig. 15: the roofline of KNL behind a 10 GB/s storage
+//! appliance vs a 4 TB PRINS whose compute never leaves the storage
+//! arrays. Run: `cargo bench --bench fig15_roofline`.
+use prins::model::figures;
+use prins::model::roofline;
+use prins::rcam::DeviceModel;
+
+fn main() {
+    let t = figures::fig15();
+    println!("{}", t.render());
+    let dev = DeviceModel::default();
+    let bw = roofline::prins_internal_bandwidth_gb_s(1_000_000_000_000, dev.freq_hz);
+    println!("PRINS internal bandwidth (bit-column -> tags, 1T rows): {bw:.2e} GB/s");
+    println!("vs external appliance 10 GB/s and NVDIMM 24 GB/s.");
+}

@@ -1,0 +1,60 @@
+//! Simulator hot-path microbenchmarks (L3 perf target, DESIGN.md §6):
+//! word-ops/second of the bit-sliced compare/write inner loops, the
+//! microcode executor, and the chain field-shift. These are the numbers
+//! the §Perf optimization loop tracks.
+use prins::controller::Controller;
+use prins::isa::{Field, Program};
+use prins::metrics::bench::time_it;
+use prins::micro;
+use prins::rcam::PrinsArray;
+
+fn main() {
+    let rows = 1 << 20; // 1M rows
+    println!("rows = {rows}");
+
+    let pat3: Vec<(u16, bool)> = vec![(0, true), (5, false), (9, true)];
+    let wpat: Vec<(u16, bool)> = vec![(12, true), (13, false)];
+
+    let mut arr = PrinsArray::single(rows, 64);
+    let t = time_it("compare (3 cols) x100", 3, 10, || {
+        for _ in 0..100 {
+            arr.compare(&pat3);
+        }
+    });
+    println!("{}", t.report());
+    let per = t.min().as_secs_f64() / 100.0;
+    println!(
+        "  -> {:.2e} row-col ops/s",
+        (rows as f64 * 3.0) / per
+    );
+
+    let t = time_it("compare+write pass x100", 3, 10, || {
+        for _ in 0..100 {
+            arr.compare(&pat3);
+            arr.write(&wpat);
+        }
+    });
+    println!("{}", t.report());
+
+    // full 16-bit add microprogram over 1M rows
+    let (a, b) = (Field::new(0, 16), Field::new(16, 16));
+    let mut prog = Program::new();
+    micro::add_inplace(&mut prog, a, b, 60);
+    let mut ctl = Controller::new(PrinsArray::single(rows, 64));
+    let t = time_it("16-bit vec add (1M rows)", 1, 5, || {
+        ctl.execute(&prog);
+    });
+    println!("{}", t.report());
+    let passes = prog.n_passes() as f64;
+    println!(
+        "  -> {:.2e} row-passes/s",
+        rows as f64 * passes / t.min().as_secs_f64()
+    );
+
+    // chain shift
+    let mut arr = PrinsArray::new(4, rows / 4, 160);
+    let t = time_it("chain shift 48 cols x16 hops", 1, 5, || {
+        arr.shift_columns_to(0, 64, 48, 16);
+    });
+    println!("{}", t.report());
+}

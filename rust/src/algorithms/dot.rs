@@ -1,0 +1,197 @@
+//! Algorithm 2 (paper Fig. 8): fully associative dot product — the SVM
+//! classification inner loop. For each attribute i: broadcast H_i, then
+//! Mult = x_i × H_i and DP += Mult at all rows in parallel; the runtime is
+//! independent of the number of vectors.
+
+use crate::controller::{Controller, ExecStats};
+use crate::isa::{Field, Instr, Program, RowLayout};
+use crate::micro::float::{
+    bits_to_f32, unpacked_bits, FloatField, FpScratch, FP_MUL_SCRATCH_BITS, FP_SCRATCH_BITS,
+};
+use crate::micro::{self};
+use crate::rcam::PrinsArray;
+use crate::storage::{Dataset, StorageManager};
+
+pub struct DotLayout {
+    pub dims: usize,
+    pub x: Vec<FloatField>,
+    pub h: FloatField,
+    pub mult: FloatField,
+    pub acc: FloatField,
+    pub out: FloatField,
+    pub scratch: FpScratch,
+    pub wexp: Field,
+    pub mul_scratch: u16,
+    pub width: u16,
+}
+
+impl DotLayout {
+    pub fn new(dims: usize) -> Self {
+        let mut base = 0u16;
+        let mut next = |w: u16| {
+            let b = base;
+            base += w;
+            b
+        };
+        let x: Vec<FloatField> = (0..dims).map(|_| FloatField::at(next(33))).collect();
+        let h = FloatField::at(next(33));
+        let mult = FloatField::at(next(33));
+        let acc = FloatField::at(next(33));
+        let out = FloatField::at(next(33));
+        let scratch = FpScratch::at(next(FP_SCRATCH_BITS));
+        let wexp = Field::new(next(8), 8);
+        let mul_scratch = next(FP_MUL_SCRATCH_BITS);
+        DotLayout {
+            dims,
+            x,
+            h,
+            mult,
+            acc,
+            out,
+            scratch,
+            wexp,
+            mul_scratch,
+            width: base,
+        }
+    }
+}
+
+pub struct DotResult {
+    pub dp: Vec<f32>,
+    pub stats: ExecStats,
+}
+
+pub struct DotKernel {
+    pub layout: DotLayout,
+    pub n: usize,
+    ds: Dataset,
+}
+
+impl DotKernel {
+    pub fn load(
+        sm: &mut StorageManager,
+        array: &mut PrinsArray,
+        x: &[f32],
+        n: usize,
+        dims: usize,
+    ) -> Self {
+        assert_eq!(x.len(), n * dims);
+        let layout = DotLayout::new(dims);
+        assert!((layout.width as usize) <= array.width());
+        let ds = sm
+            .alloc(n, RowLayout::new(layout.width))
+            .expect("storage full");
+        for i in 0..n {
+            for j in 0..dims {
+                array.load_row_bits(
+                    ds.rows.start + i,
+                    layout.x[j].sign as usize,
+                    33,
+                    unpacked_bits(x[i * dims + j]),
+                );
+            }
+        }
+        DotKernel { layout, n, ds }
+    }
+
+    pub fn program(&self, h: &[f32]) -> Program {
+        let l = &self.layout;
+        assert_eq!(h.len(), l.dims);
+        let mut prog = Program::new();
+        // acc := 0
+        prog.push(Instr::SetTagsAll);
+        let mut zero = l.acc.exp.pattern(0);
+        zero.extend(l.acc.man.pattern(0));
+        zero.push((l.acc.sign, false));
+        prog.push(Instr::Write(zero));
+        for j in 0..l.dims {
+            // broadcast H_j
+            prog.push(Instr::SetTagsAll);
+            let bits = unpacked_bits(h[j]);
+            let mut w = l.h.exp.pattern((bits >> 1) & 0xFF);
+            w.extend(l.h.man.pattern(bits >> 9));
+            w.push((l.h.sign, bits & 1 == 1));
+            prog.push(Instr::Write(w));
+            // Mult_j = x_j * H_j   (line 3)
+            micro::float::fp_mul(&mut prog, l.x[j], l.h, l.mult, l.mul_scratch);
+            // DP += Mult           (line 4): out = acc + mult, acc := out
+            micro::float::fp_add(&mut prog, l.acc, l.mult, l.out, l.scratch, l.wexp);
+            micro::copy_field_cond(&mut prog, l.out.exp, l.acc.exp, &vec![]);
+            micro::copy_field_cond(&mut prog, l.out.man, l.acc.man, &vec![]);
+            micro::shift::copy_col_cond(&mut prog, l.out.sign, l.acc.sign, &vec![]);
+        }
+        prog
+    }
+
+    pub fn run(&self, ctl: &mut Controller, sm: &StorageManager, h: &[f32]) -> DotResult {
+        ctl.begin_stats();
+        let prog = self.program(h);
+        ctl.execute(&prog);
+        let l = &self.layout;
+        let dp = (0..self.n)
+            .map(|i| {
+                bits_to_f32(ctl.array.fetch_row_bits(
+                    sm.translate(&self.ds, i),
+                    l.acc.sign as usize,
+                    33,
+                ))
+            })
+            .collect();
+        DotResult {
+            dp,
+            stats: ctl.stats(),
+        }
+    }
+}
+
+/// Scalar CPU baseline.
+pub fn dot_baseline(x: &[f32], n: usize, dims: usize, h: &[f32]) -> Vec<f32> {
+    (0..n)
+        .map(|i| (0..dims).map(|j| x[i * dims + j] * h[j]).sum())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::Rng;
+
+    #[test]
+    fn dp_matches_baseline() {
+        let (n, dims) = (40usize, 4usize);
+        let mut rng = Rng::seed_from(3);
+        let x: Vec<f32> = (0..n * dims).map(|_| rng.f32_range(-4.0, 4.0)).collect();
+        let h: Vec<f32> = (0..dims).map(|_| rng.f32_range(-4.0, 4.0)).collect();
+        let layout = DotLayout::new(dims);
+        let mut array = PrinsArray::single(n, layout.width as usize);
+        let mut sm = StorageManager::new(n);
+        let kern = DotKernel::load(&mut sm, &mut array, &x, n, dims);
+        let mut ctl = Controller::new(array);
+        let res = kern.run(&mut ctl, &sm, &h);
+        let expect = dot_baseline(&x, n, dims, &h);
+        for i in 0..n {
+            assert!(
+                (res.dp[i] - expect[i]).abs() <= 3e-5 * expect[i].abs().max(1.0),
+                "dp[{i}]: {} vs {}",
+                res.dp[i],
+                expect[i]
+            );
+        }
+    }
+
+    #[test]
+    fn dp_cycles_independent_of_vector_count() {
+        let dims = 2;
+        let layout = DotLayout::new(dims);
+        let run_n = |n: usize| -> u64 {
+            let mut rng = Rng::seed_from(9);
+            let x: Vec<f32> = (0..n * dims).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+            let mut array = PrinsArray::single(n, layout.width as usize);
+            let mut sm = StorageManager::new(n);
+            let kern = DotKernel::load(&mut sm, &mut array, &x, n, dims);
+            let mut ctl = Controller::new(array);
+            kern.run(&mut ctl, &sm, &[0.3, -0.7]).stats.cycles
+        };
+        assert_eq!(run_n(8), run_n(128));
+    }
+}

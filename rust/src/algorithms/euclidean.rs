@@ -1,0 +1,253 @@
+//! Algorithm 1 (paper Fig. 7): fully associative Euclidean distance.
+//!
+//! Samples live one-attribute-set-per-row (a sample's D attributes occupy
+//! one row's data fields). For every cluster center: broadcast the center
+//! coordinates to all rows (a single tagged write per attribute — the
+//! CAM broadcast), then per attribute compute dist = x − c, square it,
+//! and accumulate — all in fp32 microcode, all rows in parallel. The
+//! cycle count is independent of the number of samples, which is the
+//! paper's headline property.
+
+use crate::controller::{Controller, ExecStats};
+use crate::isa::{Field, Program, RowLayout};
+use crate::micro::float::{bits_to_f32, unpacked_bits, FloatField, FpScratch, FP_SCRATCH_BITS};
+use crate::micro::{self};
+use crate::rcam::PrinsArray;
+use crate::storage::{Dataset, StorageManager};
+
+/// Row layout: D attribute slots + center copy + work area.
+/// 33 bits per unpacked fp32; W must fit x, c, diff, acc + scratch.
+pub struct EuclideanLayout {
+    pub dims: usize,
+    pub x: Vec<FloatField>,
+    pub c: FloatField,
+    pub diff: FloatField,
+    pub sq: FloatField,
+    pub acc: FloatField,
+    pub ycopy: FloatField,
+    pub scratch: FpScratch,
+    pub wexp: Field,
+    pub mul_scratch: u16,
+    pub width: u16,
+}
+
+impl EuclideanLayout {
+    /// Columns: D×33 attributes | c | diff | sq | acc | ycopy | scratch.
+    pub fn new(dims: usize) -> Self {
+        let mut base = 0u16;
+        let mut next = |w: u16| {
+            let b = base;
+            base += w;
+            b
+        };
+        let x: Vec<FloatField> = (0..dims).map(|_| FloatField::at(next(33))).collect();
+        let c = FloatField::at(next(33));
+        let diff = FloatField::at(next(33));
+        let sq = FloatField::at(next(33));
+        let acc = FloatField::at(next(33));
+        let ycopy = FloatField::at(next(33));
+        let scratch = FpScratch::at(next(FP_SCRATCH_BITS));
+        let wexp = Field::new(next(8), 8);
+        let mul_scratch = next(crate::micro::float::FP_MUL_SCRATCH_BITS);
+        EuclideanLayout {
+            dims,
+            x,
+            c,
+            diff,
+            sq,
+            acc,
+            ycopy,
+            scratch,
+            wexp,
+            mul_scratch,
+            width: base,
+        }
+    }
+
+    pub fn row_layout(&self) -> RowLayout {
+        RowLayout::new(self.width.max(256))
+    }
+}
+
+/// Result of one ED run: per-sample squared distance to each center +
+/// execution stats.
+pub struct EdResult {
+    /// dists[center][sample]
+    pub dists: Vec<Vec<f32>>,
+    pub stats: ExecStats,
+}
+
+pub struct EuclideanKernel {
+    pub layout: EuclideanLayout,
+    pub n: usize,
+    ds: Dataset,
+}
+
+impl EuclideanKernel {
+    /// Allocate + load samples (row-major n×dims).
+    pub fn load(
+        sm: &mut StorageManager,
+        array: &mut PrinsArray,
+        x: &[f32],
+        n: usize,
+        dims: usize,
+    ) -> Self {
+        assert_eq!(x.len(), n * dims);
+        let layout = EuclideanLayout::new(dims);
+        assert!(
+            (layout.width as usize) <= array.width(),
+            "row width {} exceeds array width {} — reduce dims or widen rows",
+            layout.width,
+            array.width()
+        );
+        let ds = sm.alloc(n, layout.row_layout()).expect("storage full");
+        for i in 0..n {
+            for j in 0..dims {
+                let f = layout.x[j];
+                array.load_row_bits(
+                    ds.rows.start + i,
+                    f.sign as usize,
+                    33,
+                    unpacked_bits(x[i * dims + j]),
+                );
+            }
+        }
+        EuclideanKernel { layout, n, ds }
+    }
+
+    /// The per-center associative program (Fig. 7 lines 2–7).
+    pub fn center_program(&self, center: &[f32]) -> Program {
+        let l = &self.layout;
+        assert_eq!(center.len(), l.dims);
+        let mut prog = Program::new();
+        // line 3: broadcast center coords — here one write per attribute
+        // iteration (the center value is folded into the write key).
+        // acc := 0
+        prog.push(crate::isa::Instr::SetTagsAll);
+        let mut zero = l.acc.exp.pattern(0);
+        zero.extend(l.acc.man.pattern(0));
+        zero.push((l.acc.sign, false));
+        prog.push(crate::isa::Instr::Write(zero));
+        for j in 0..l.dims {
+            // broadcast c_j into the center field of every row
+            prog.push(crate::isa::Instr::SetTagsAll);
+            let bits = unpacked_bits(center[j]);
+            let mut w = l.c.exp.pattern((bits >> 1) & 0xFF);
+            w.extend(l.c.man.pattern(bits >> 9));
+            w.push((l.c.sign, bits & 1 == 1));
+            prog.push(crate::isa::Instr::Write(w));
+            // diff = x_j - c   (line 5)
+            micro::float::fp_sub(
+                &mut prog, l.x[j], l.c, l.diff, l.ycopy, l.scratch, l.wexp,
+            );
+            // sq = diff^2      (line 6, associative mult)
+            micro::float::fp_mul(&mut prog, l.diff, l.diff, l.sq, l.mul_scratch);
+            // acc += sq        (line 7)
+            micro::float::fp_add(&mut prog, l.acc, l.sq, l.diff, l.scratch, l.wexp);
+            // fp_add writes into `diff` (reused as output); move back
+            micro::copy_field_cond(&mut prog, l.diff.exp, l.acc.exp, &vec![]);
+            micro::copy_field_cond(&mut prog, l.diff.man, l.acc.man, &vec![]);
+            micro::shift::copy_col_cond(&mut prog, l.diff.sign, l.acc.sign, &vec![]);
+        }
+        prog
+    }
+
+    /// Run for all centers (Fig. 7 line 1 loop), reading distances back.
+    pub fn run(
+        &self,
+        ctl: &mut Controller,
+        sm: &StorageManager,
+        centers: &[f32],
+        n_centers: usize,
+    ) -> EdResult {
+        let l = &self.layout;
+        ctl.begin_stats();
+        let mut dists = Vec::with_capacity(n_centers);
+        for c in 0..n_centers {
+            let prog = self.center_program(&centers[c * l.dims..(c + 1) * l.dims]);
+            ctl.execute(&prog);
+            // readout (storage path, not counted as kernel time by the
+            // paper's convention: results stay in storage)
+            let mut out = Vec::with_capacity(self.n);
+            for i in 0..self.n {
+                let bits = ctl.array.fetch_row_bits(
+                    sm.translate(&self.ds, i),
+                    l.acc.sign as usize,
+                    33,
+                );
+                out.push(bits_to_f32(bits));
+            }
+            dists.push(out);
+        }
+        EdResult {
+            dists,
+            stats: ctl.stats(),
+        }
+    }
+}
+
+/// Scalar CPU baseline (the reference architecture's computation).
+pub fn euclidean_baseline(x: &[f32], n: usize, dims: usize, centers: &[f32], k: usize) -> Vec<Vec<f32>> {
+    (0..k)
+        .map(|c| {
+            (0..n)
+                .map(|i| {
+                    (0..dims)
+                        .map(|j| {
+                            let d = x[i * dims + j] - centers[c * dims + j];
+                            d * d
+                        })
+                        .sum()
+                })
+                .collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::Rng;
+
+    #[test]
+    fn ed_matches_baseline_within_float_tolerance() {
+        let (n, dims, k) = (48usize, 3usize, 2usize);
+        let mut rng = Rng::seed_from(1);
+        let x: Vec<f32> = (0..n * dims).map(|_| rng.f32_range(-8.0, 8.0)).collect();
+        let centers: Vec<f32> = (0..k * dims).map(|_| rng.f32_range(-8.0, 8.0)).collect();
+        let layout = EuclideanLayout::new(dims);
+        let mut array = PrinsArray::single(n, layout.width as usize);
+        let mut sm = StorageManager::new(n);
+        let kern = EuclideanKernel::load(&mut sm, &mut array, &x, n, dims);
+        let mut ctl = Controller::new(array);
+        let res = kern.run(&mut ctl, &sm, &centers, k);
+        let expect = euclidean_baseline(&x, n, dims, &centers, k);
+        for c in 0..k {
+            for i in 0..n {
+                let (got, exp) = (res.dists[c][i], expect[c][i]);
+                assert!(
+                    (got - exp).abs() <= 2e-5 * exp.abs().max(1.0),
+                    "center {c} sample {i}: {got} vs {exp}"
+                );
+            }
+        }
+        assert!(res.stats.cycles > 0);
+    }
+
+    #[test]
+    fn cycles_independent_of_sample_count() {
+        // The paper's central property: kernel latency does not depend on N.
+        let dims = 2;
+        let layout = EuclideanLayout::new(dims);
+        let run_n = |n: usize| -> u64 {
+            let mut rng = Rng::seed_from(7);
+            let x: Vec<f32> = (0..n * dims).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+            let mut array = PrinsArray::single(n, layout.width as usize);
+            let mut sm = StorageManager::new(n);
+            let kern = EuclideanKernel::load(&mut sm, &mut array, &x, n, dims);
+            let mut ctl = Controller::new(array);
+            kern.run(&mut ctl, &sm, &[0.5, -0.5], 1).stats.cycles
+        };
+        assert_eq!(run_n(16), run_n(256));
+    }
+}

@@ -1,0 +1,15 @@
+//! The paper's workload suite (§5.4): fully associative implementations of
+//! Euclidean distance, dot product, histogram, SpMV and BFS, each with a
+//! scalar CPU-baseline twin for cross-validation.
+
+pub mod bfs;
+pub mod dot;
+pub mod euclidean;
+pub mod histogram;
+pub mod spmv;
+
+pub use bfs::{measured_teps, paper_model_teps, BfsKernel, BfsResult};
+pub use dot::{dot_baseline, DotKernel};
+pub use euclidean::{euclidean_baseline, EuclideanKernel};
+pub use histogram::{histogram_baseline, HistogramKernel};
+pub use spmv::{spmv_baseline_quantized, ReduceEngine, SpmvKernel};

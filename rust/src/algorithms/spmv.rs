@@ -1,0 +1,404 @@
+//! Algorithm 4 (paper Fig. 10): fully associative SpMV, y = A·x.
+//!
+//! One CSR nonzero per RCAM row: (row index, column index, value).
+//! Three phases, exactly the paper's:
+//!
+//!  1. **Broadcast** — for each element x_j: one compare of j against the
+//!     column-index field (tags every nonzero in column j) and one write
+//!     of x_j next to those nonzeros. O(n) serial over the vector, each
+//!     step hitting all matching nonzeros at once.
+//!  2. **Multiply** — one fixed-point multiply microprogram computes
+//!     e_A · x_col for ALL nonzeros in parallel (the number of
+//!     simultaneous multiplications equals nnz — the paper's parallelism
+//!     claim).
+//!  3. **Reduce** — per-row summation. Two interchangeable engines:
+//!     * `ChainTree` (default): segmented Hillis–Steele suffix scan over
+//!       the daisy-chain interconnect, log₂(max row length) levels, all
+//!       rows in parallel — the method of the paper's companion [79].
+//!     * `SerialTree`: the literal per-matrix-row reduction-tree loop of
+//!       Fig. 10 lines 5–6 (O(n) reduce issues). Kept as an ablation;
+//!       `ablation_microcode` quantifies the gap.
+//!
+//! Numerics: values are quantized to Q1.14 sign-magnitude (the paper's
+//! reduction tree sums *bits*, so PRINS SpMV is fixed-point here;
+//! substitution ledger in DESIGN.md). Products are Q2.28 in a 48-bit
+//! two's-complement accumulator.
+
+use crate::controller::{Controller, ExecStats};
+use crate::isa::{Field, Instr, Program, RowLayout};
+use crate::micro;
+use crate::rcam::PrinsArray;
+use crate::storage::{Dataset, StorageManager};
+use crate::workloads::Csr;
+
+pub const QFRAC: u32 = 14; // Q1.14 operands
+pub const PFRAC: u32 = 2 * QFRAC; // Q2.28 products
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReduceEngine {
+    /// Segmented chain scan ([79]-style, all rows parallel).
+    ChainTree,
+    /// Paper Fig. 10 literal: per-row reduction-tree sweep.
+    SerialTree,
+}
+
+/// Quantize to Q1.14 sign-magnitude (sign bit, 15-bit magnitude).
+pub fn quantize(v: f32) -> (bool, u64) {
+    let clamped = v.clamp(-1.999, 1.999);
+    let mag = (clamped.abs() * (1 << QFRAC) as f32).round() as u64;
+    (clamped < 0.0, mag.min((1 << 15) - 1))
+}
+
+pub fn dequantize_product(acc: i64) -> f32 {
+    acc as f32 / (1u64 << PFRAC) as f32
+}
+
+/// Row layout (≤ 256 bits):
+///   rowid(24) | colid(24) | a_sign(1) a_mag(15) | b_sign(1) b_mag(15)
+///   | pmag(30) | prod(48 two's complement) | nb_rowid(24) | nb_prod(48)
+///   | flags/carry (6)
+pub struct SpmvLayout {
+    pub rowid: Field,
+    pub colid: Field,
+    pub a_sign: u16,
+    pub a_mag: Field,
+    pub b_sign: u16,
+    pub b_mag: Field,
+    pub pmag: Field,
+    pub prod: Field,
+    pub nb_rowid: Field,
+    pub nb_prod: Field,
+    pub carry: u16,
+    pub psign: u16,
+    pub tmp: u16,
+    pub eq: u16,
+    pub lt: u16,
+    pub width: u16,
+}
+
+impl SpmvLayout {
+    pub fn new() -> Self {
+        let mut base = 0u16;
+        let mut next = |w: u16| {
+            let b = base;
+            base += w;
+            b
+        };
+        let l = SpmvLayout {
+            rowid: Field::new(next(24), 24),
+            colid: Field::new(next(24), 24),
+            a_sign: next(1),
+            a_mag: Field::new(next(15), 15),
+            b_sign: next(1),
+            b_mag: Field::new(next(15), 15),
+            pmag: Field::new(next(30), 30),
+            prod: Field::new(next(48), 48),
+            nb_rowid: Field::new(next(24), 24),
+            nb_prod: Field::new(next(48), 48),
+            carry: next(1),
+            psign: next(1),
+            tmp: next(1),
+            eq: next(1),
+            lt: next(1),
+            width: 0,
+        };
+        SpmvLayout { width: base, ..l }
+    }
+
+    /// The contiguous (rowid, prod) source/dest regions must mirror each
+    /// other for the chain shift; assert the invariant.
+    fn check(&self) {
+        assert!(self.width <= 256, "spmv layout exceeds 256-bit rows");
+    }
+}
+
+impl Default for SpmvLayout {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+pub struct SpmvResult {
+    pub y: Vec<f32>,
+    pub stats: ExecStats,
+    pub broadcast_cycles: u64,
+    pub multiply_cycles: u64,
+    pub reduce_cycles: u64,
+}
+
+pub struct SpmvKernel {
+    pub layout: SpmvLayout,
+    pub nnz: usize,
+    pub n: usize,
+    max_row_nnz: usize,
+    /// physical row of the first nonzero of each matrix row (readout)
+    row_heads: Vec<Option<usize>>,
+    ds: Dataset,
+}
+
+impl SpmvKernel {
+    pub fn load(sm: &mut StorageManager, array: &mut PrinsArray, a: &Csr) -> Self {
+        let layout = SpmvLayout::new();
+        layout.check();
+        assert!(array.width() >= layout.width as usize);
+        assert!(a.n < (1 << 24), "rowid field is 24 bits");
+        let nnz = a.nnz();
+        let ds = sm
+            .alloc(nnz, RowLayout::new(layout.width))
+            .expect("storage full");
+        let mut row_heads = vec![None; a.n];
+        let mut k = 0usize;
+        for (r, c, v) in a.triplets() {
+            let phys = ds.rows.start + k;
+            if row_heads[r as usize].is_none() {
+                row_heads[r as usize] = Some(phys);
+            }
+            array.load_row_bits(phys, layout.rowid.base as usize, 24, r as u64);
+            array.load_row_bits(phys, layout.colid.base as usize, 24, c as u64);
+            let (s, m) = quantize(v);
+            array.load_row_bits(phys, layout.a_sign as usize, 1, s as u64);
+            array.load_row_bits(phys, layout.a_mag.base as usize, 15, m);
+            k += 1;
+        }
+        SpmvKernel {
+            layout,
+            nnz,
+            n: a.n,
+            max_row_nnz: a.max_row_nnz(),
+            row_heads,
+            ds,
+        }
+    }
+
+    /// Phase 1 (Fig. 10 lines 1–3): broadcast x into the b fields.
+    fn broadcast(&self, ctl: &mut Controller, x: &[f32]) {
+        let l = &self.layout;
+        for (j, &xv) in x.iter().enumerate() {
+            let (s, m) = quantize(xv);
+            // line 2: compare i_B with all column indices
+            ctl.step(&Instr::Compare(l.colid.pattern(j as u64)));
+            // line 3: write e_B into all matching rows
+            let mut w = l.b_mag.pattern(m);
+            w.push((l.b_sign, s));
+            ctl.step(&Instr::Write(w));
+        }
+    }
+
+    /// Phase 2 (Fig. 10 line 4): PR ← e_B · e_A for all nonzeros at once.
+    fn multiply_program(&self) -> Program {
+        let l = &self.layout;
+        let mut prog = Program::new();
+        micro::mul(&mut prog, l.a_mag, l.b_mag, l.pmag, l.carry);
+        // prod := (a_sign ^ b_sign) ? -pmag : +pmag, two's complement 48b
+        let t = micro::TruthTable::from_fn(
+            vec![l.a_sign, l.b_sign],
+            vec![l.psign],
+            |i| vec![i[0] ^ i[1]],
+        );
+        t.emit(&mut prog, true);
+        prog.clear_field(l.prod);
+        micro::copy_field_cond(&mut prog, l.pmag, l.prod.slice(0, 30), &vec![]);
+        // conditional negate where psign == 1 (staged via tmp)
+        micro::sub::neg_inplace_cond(&mut prog, l.prod, l.carry, l.tmp, &vec![(l.psign, true)]);
+        prog
+    }
+
+    /// Phase 3a: segmented suffix scan over the daisy chain.
+    fn reduce_chain(&self, ctl: &mut Controller) {
+        let l = &self.layout;
+        let levels = (self.max_row_nnz.max(2) as f64).log2().ceil() as u32;
+        for k in 0..levels {
+            let hops = 1usize << k;
+            // neighbor fields := (rowid, prod) shifted down by `hops`
+            ctl.array
+                .shift_columns_to(l.rowid.base, l.nb_rowid.base, 24, hops);
+            ctl.array
+                .shift_columns_to(l.prod.base, l.nb_prod.base, 48, hops);
+            let mut prog = Program::new();
+            // eq := (rowid == nb_rowid)
+            micro::field_cmp(&mut prog, l.rowid, l.nb_rowid, l.lt, l.eq);
+            // prod += nb_prod where eq (two's complement: signs included)
+            micro::add_inplace_cond(&mut prog, l.prod, l.nb_prod, l.carry, &vec![(l.eq, true)]);
+            ctl.execute(&prog);
+        }
+    }
+
+    /// Phase 3b: the literal Fig. 10 lines 5–6 per-row reduction sweep.
+    /// Positive and negative products are tallied separately (the tree
+    /// sums tag bits); the controller subtracts.
+    fn reduce_serial(&self, ctl: &mut Controller) -> Vec<i64> {
+        let l = &self.layout;
+        let mut sums = vec![0i64; self.n];
+        for (r, head) in self.row_heads.iter().enumerate() {
+            if head.is_none() {
+                continue;
+            }
+            let mut prog = Program::new();
+            // tag positive-product nonzeros of row r, sum magnitude planes
+            let mut pat = l.rowid.pattern(r as u64);
+            pat.push((l.psign, false));
+            prog.push(Instr::Compare(pat));
+            micro::emit_field_sum(&mut prog, l.pmag);
+            let pos = ctl.execute_collect(&prog);
+            let mut prog = Program::new();
+            let mut pat = l.rowid.pattern(r as u64);
+            pat.push((l.psign, true));
+            prog.push(Instr::Compare(pat));
+            micro::emit_field_sum(&mut prog, l.pmag);
+            let neg = ctl.execute_collect(&prog);
+            sums[r] = micro::combine_field_sum(&pos) as i64
+                - micro::combine_field_sum(&neg) as i64;
+        }
+        ctl.array.charge_reduction_latency();
+        sums
+    }
+
+    /// Full SpMV. Returns y plus per-phase cycle accounting.
+    pub fn run(&self, ctl: &mut Controller, x: &[f32], engine: ReduceEngine) -> SpmvResult {
+        assert_eq!(x.len(), self.n);
+        ctl.begin_stats();
+        let c0 = ctl.array.cycles;
+        self.broadcast(ctl, x);
+        let c1 = ctl.array.cycles;
+        let prog = self.multiply_program();
+        ctl.execute(&prog);
+        let c2 = ctl.array.cycles;
+        let y = match engine {
+            ReduceEngine::ChainTree => {
+                self.reduce_chain(ctl);
+                // readout: first nonzero of each row holds the row sum
+                self.row_heads
+                    .iter()
+                    .map(|h| match h {
+                        Some(phys) => {
+                            let bits = ctl.array.fetch_row_bits(
+                                *phys,
+                                self.layout.prod.base as usize,
+                                48,
+                            );
+                            // sign-extend 48 bits
+                            let v = ((bits << 16) as i64) >> 16;
+                            dequantize_product(v)
+                        }
+                        None => 0.0,
+                    })
+                    .collect()
+            }
+            ReduceEngine::SerialTree => self
+                .reduce_serial(ctl)
+                .into_iter()
+                .map(dequantize_product)
+                .collect(),
+        };
+        let c3 = ctl.array.cycles;
+        SpmvResult {
+            y,
+            stats: ctl.stats(),
+            broadcast_cycles: c1 - c0,
+            multiply_cycles: c2 - c1,
+            reduce_cycles: c3 - c2,
+        }
+    }
+}
+
+/// Quantized scalar baseline (bit-exact vs the associative fixed-point
+/// pipeline, up to identical quantization).
+pub fn spmv_baseline_quantized(a: &Csr, x: &[f32]) -> Vec<f32> {
+    let mut y = vec![0f32; a.n];
+    for (r, c, v) in a.triplets() {
+        let (sa, ma) = quantize(v);
+        let (sb, mb) = quantize(x[c as usize]);
+        let p = (ma * mb) as i64;
+        let p = if sa ^ sb { -p } else { p };
+        y[r as usize] += dequantize_product(p);
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::{synth_csr, Rng};
+
+    fn setup(n: usize, nnz: usize, seed: u64) -> (Csr, Vec<f32>) {
+        let a = synth_csr(n, nnz, seed);
+        let mut rng = Rng::seed_from(seed + 1);
+        let x: Vec<f32> = (0..n).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+        (a, x)
+    }
+
+    #[test]
+    fn chain_reduce_matches_quantized_baseline() {
+        let (a, x) = setup(64, 500, 5);
+        let mut array = PrinsArray::new(4, (a.nnz() + 3) / 4 + 1, 256);
+        let mut sm = StorageManager::new(array.total_rows());
+        let kern = SpmvKernel::load(&mut sm, &mut array, &a);
+        let mut ctl = Controller::new(array);
+        let res = kern.run(&mut ctl, &x, ReduceEngine::ChainTree);
+        let expect = spmv_baseline_quantized(&a, &x);
+        for r in 0..a.n {
+            assert!(
+                (res.y[r] - expect[r]).abs() < 1e-6,
+                "row {r}: {} vs {}",
+                res.y[r],
+                expect[r]
+            );
+        }
+        // quantization error vs float reference stays bounded
+        let float_ref = a.spmv(&x);
+        for r in 0..a.n {
+            assert!((res.y[r] - float_ref[r]).abs() < 1e-2, "row {r} float drift");
+        }
+    }
+
+    #[test]
+    fn serial_reduce_matches_chain_reduce() {
+        // n large enough that the O(n)-sweep serial engine loses to the
+        // O(log maxrow) chain scan (tiny n favours the serial engine)
+        let (a, x) = setup(256, 1400, 9);
+        let run = |engine| {
+            let mut array = PrinsArray::single(a.nnz(), 256);
+            let mut sm = StorageManager::new(a.nnz());
+            let kern = SpmvKernel::load(&mut sm, &mut array, &a);
+            let mut ctl = Controller::new(array);
+            kern.run(&mut ctl, &x, engine)
+        };
+        let chain = run(ReduceEngine::ChainTree);
+        let serial = run(ReduceEngine::SerialTree);
+        for r in 0..a.n {
+            assert!(
+                (chain.y[r] - serial.y[r]).abs() < 1e-6,
+                "row {r}: {} vs {}",
+                chain.y[r],
+                serial.y[r]
+            );
+        }
+        // the chain engine's reduce phase must be asymptotically cheaper
+        assert!(chain.reduce_cycles < serial.reduce_cycles);
+    }
+
+    #[test]
+    fn multiply_phase_cost_independent_of_nnz() {
+        let (a1, x1) = setup(32, 100, 11);
+        let (a2, x2) = setup(32, 400, 12);
+        let run = |a: &Csr, x: &[f32]| {
+            let mut array = PrinsArray::single(a.nnz(), 256);
+            let mut sm = StorageManager::new(a.nnz());
+            let kern = SpmvKernel::load(&mut sm, &mut array, a);
+            let mut ctl = Controller::new(array);
+            kern.run(&mut ctl, x, ReduceEngine::ChainTree).multiply_cycles
+        };
+        assert_eq!(run(&a1, &x1), run(&a2, &x2));
+    }
+
+    #[test]
+    fn broadcast_cost_is_3_cycles_per_element() {
+        let (a, x) = setup(40, 200, 13);
+        let mut array = PrinsArray::single(a.nnz(), 256);
+        let mut sm = StorageManager::new(a.nnz());
+        let kern = SpmvKernel::load(&mut sm, &mut array, &a);
+        let mut ctl = Controller::new(array);
+        let res = kern.run(&mut ctl, &x, ReduceEngine::ChainTree);
+        assert_eq!(res.broadcast_cycles, 3 * a.n as u64);
+    }
+}

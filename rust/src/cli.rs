@@ -1,0 +1,224 @@
+//! `prins` command line: drive the PRINS system from a shell.
+//!
+//!   prins run <ed|dp|hist|spmv|bfs> [--n N] [--dims D] [--seed S]
+//!   prins validate            # PRINS vs golden XLA kernels (needs artifacts/)
+//!   prins serve [--bind ADDR] # TCP storage-appliance front-end
+//!   prins report <fig12|fig13|fig14|fig15|all> [--csv]
+//!   prins info                # device model + artifact inventory
+//!
+//! (Hand-rolled argument parsing; the vendored crate set has no clap.)
+
+use crate::controller::Controller;
+use crate::model::figures;
+use crate::rcam::{DeviceModel, PrinsArray};
+use crate::storage::StorageManager;
+use crate::workloads::*;
+use anyhow::{bail, Result};
+
+fn flag(args: &[String], name: &str, default: u64) -> u64 {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+pub fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(|s| s.as_str()) {
+        Some("run") => run(&args[1..]),
+        Some("validate") => validate(),
+        Some("serve") => serve(&args[1..]),
+        Some("report") => report(&args[1..]),
+        Some("info") => info(),
+        _ => {
+            eprintln!("usage: prins <run|validate|serve|report|info> ...");
+            eprintln!("  run <ed|dp|hist|spmv|bfs> [--n N] [--dims D] [--seed S]");
+            eprintln!("  validate");
+            eprintln!("  serve [--bind ADDR]");
+            eprintln!("  report <fig12|fig13|fig14|fig15|all> [--csv]");
+            Ok(())
+        }
+    }
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let n = flag(args, "--n", 1024) as usize;
+    let dims = flag(args, "--dims", 8) as usize;
+    let seed = flag(args, "--seed", 1);
+    let dev = DeviceModel::default();
+    match args.first().map(|s| s.as_str()) {
+        Some("ed") => {
+            let x = synth_samples(n, dims, 4, seed);
+            let c = synth_uniform(dims, seed + 1);
+            let layout = crate::algorithms::euclidean::EuclideanLayout::new(dims);
+            let mut array = PrinsArray::single(n, layout.width as usize);
+            let mut sm = StorageManager::new(n);
+            let kern = crate::algorithms::EuclideanKernel::load(&mut sm, &mut array, &x, n, dims);
+            let mut ctl = Controller::new(array);
+            let res = kern.run(&mut ctl, &sm, &c, 1);
+            print_stats("euclidean distance", &res.stats, &dev, 3.0 * (n * dims) as f64);
+        }
+        Some("dp") => {
+            let x = synth_samples(n, dims, 4, seed);
+            let h = synth_uniform(dims, seed + 1);
+            let layout = crate::algorithms::dot::DotLayout::new(dims);
+            let mut array = PrinsArray::single(n, layout.width as usize);
+            let mut sm = StorageManager::new(n);
+            let kern = crate::algorithms::DotKernel::load(&mut sm, &mut array, &x, n, dims);
+            let mut ctl = Controller::new(array);
+            let res = kern.run(&mut ctl, &sm, &h);
+            print_stats("dot product", &res.stats, &dev, 2.0 * (n * dims) as f64);
+        }
+        Some("hist") => {
+            let xs = synth_hist_samples(n, seed);
+            let mut array = PrinsArray::single(n, 40);
+            let mut sm = StorageManager::new(n);
+            let kern = crate::algorithms::HistogramKernel::load(&mut sm, &mut array, &xs);
+            let mut ctl = Controller::new(array);
+            let res = kern.run(&mut ctl);
+            print_stats("histogram (256 bins)", &res.stats, &dev, 2.0 * n as f64);
+        }
+        Some("spmv") => {
+            use crate::algorithms::spmv::{ReduceEngine, SpmvKernel};
+            let a = synth_csr(n, n * 8, seed);
+            let mut rng = Rng::seed_from(seed + 1);
+            let x: Vec<f32> = (0..n).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+            let mut array = PrinsArray::single(a.nnz(), 256);
+            let mut sm = StorageManager::new(a.nnz());
+            let kern = SpmvKernel::load(&mut sm, &mut array, &a);
+            let mut ctl = Controller::new(array);
+            let res = kern.run(&mut ctl, &x, ReduceEngine::ChainTree);
+            println!(
+                "phases: broadcast {} + multiply {} + reduce {} cycles",
+                res.broadcast_cycles, res.multiply_cycles, res.reduce_cycles
+            );
+            print_stats("spmv", &res.stats, &dev, 2.0 * a.nnz() as f64);
+        }
+        Some("bfs") => {
+            let g = synth_power_law(n, (dims as f64).max(2.0), 2.5, seed);
+            let mut array = PrinsArray::single(g.edges(), 128);
+            let mut sm = StorageManager::new(g.edges());
+            let kern = crate::algorithms::BfsKernel::load(&mut sm, &mut array, &g);
+            let mut ctl = Controller::new(array);
+            let res = kern.run(&mut ctl, 0);
+            println!(
+                "levels {} iterations {} reached {}",
+                res.levels,
+                res.iterations,
+                res.dist.iter().filter(|&&d| d != u32::MAX).count()
+            );
+            print_stats("bfs", &res.stats, &dev, res.iterations as f64);
+        }
+        other => bail!("unknown kernel {other:?}"),
+    }
+    Ok(())
+}
+
+fn print_stats(name: &str, stats: &crate::controller::ExecStats, dev: &DeviceModel, flops: f64) {
+    let eff = crate::model::power::efficiency(stats, dev, flops);
+    println!("kernel       : {name}");
+    println!("device cycles: {} ({})", stats.cycles,
+        crate::metrics::table::fmt_si(eff.runtime_s, "s"));
+    println!("passes       : {}", stats.passes);
+    println!("throughput   : {}", crate::metrics::table::fmt_si(eff.gflops * 1e9, "FLOPS"));
+    println!("energy       : {}", crate::metrics::table::fmt_si(eff.energy_j, "J"));
+    println!("efficiency   : {:.2} GFLOPS/W", eff.gflops_per_w);
+}
+
+fn validate() -> Result<()> {
+    use crate::runtime::Golden;
+    let mut g = Golden::open_default()?;
+    let (n, dims) = (512usize, 8usize);
+    let x = synth_samples(n, dims, 4, 3);
+    let c = synth_uniform(dims, 4);
+    let layout = crate::algorithms::euclidean::EuclideanLayout::new(dims);
+    let mut array = PrinsArray::single(n, layout.width as usize);
+    let mut sm = StorageManager::new(n);
+    let kern = crate::algorithms::EuclideanKernel::load(&mut sm, &mut array, &x, n, dims);
+    let mut ctl = Controller::new(array);
+    let res = kern.run(&mut ctl, &sm, &c, 1);
+    let gd = g.euclidean(&x, n, dims, &c)?;
+    let mut max_rel = 0f32;
+    for i in 0..n {
+        max_rel = max_rel.max((res.dists[0][i] - gd[i]).abs() / gd[i].abs().max(1.0));
+    }
+    println!("ED   : PRINS vs golden XLA kernel, max rel err {max_rel:.2e}");
+    if max_rel >= 1e-4 {
+        bail!("ED validation failed");
+    }
+    let xs = synth_hist_samples(20_000, 5);
+    let mut array = PrinsArray::single(xs.len(), 40);
+    let mut sm = StorageManager::new(xs.len());
+    let kern = crate::algorithms::HistogramKernel::load(&mut sm, &mut array, &xs);
+    let mut ctl = Controller::new(array);
+    let got = kern.run(&mut ctl).hist;
+    let gold = g.histogram(&xs)?;
+    if got.iter().zip(&gold).any(|(&a, &b)| a as i64 != b as i64) {
+        bail!("histogram validation failed");
+    }
+    println!("Hist : PRINS vs golden XLA kernel, exact match over 20k samples");
+    println!("validate: OK");
+    Ok(())
+}
+
+fn serve(args: &[String]) -> Result<()> {
+    let bind = args
+        .iter()
+        .position(|a| a == "--bind")
+        .and_then(|i| args.get(i + 1).cloned())
+        .unwrap_or_else(|| "127.0.0.1:7411".to_string());
+    let server = crate::host::server::Server::spawn(&bind)?;
+    println!("prins storage appliance listening on {}", server.addr);
+    println!("protocol: PING | HIST n seed | DP n dims seed | ED n dims k seed | QUIT");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn report(args: &[String]) -> Result<()> {
+    let csv = args.iter().any(|a| a == "--csv");
+    let which = args.first().map(|s| s.as_str()).unwrap_or("all");
+    let mut tables = Vec::new();
+    match which {
+        "fig12" => tables.push(figures::fig12(figures::DIMS, 512)),
+        "fig13" => tables.push(figures::fig13(1200)),
+        "fig14" => tables.push(figures::fig14(1 << 10)),
+        "fig15" => tables.push(figures::fig15()),
+        "all" => {
+            tables.push(figures::fig12(figures::DIMS, 512));
+            tables.push(figures::fig13(1200));
+            tables.push(figures::fig14(1 << 10));
+            tables.push(figures::fig15());
+        }
+        other => bail!("unknown report {other:?}"),
+    }
+    for t in tables {
+        if csv {
+            println!("{}", t.to_csv());
+        } else {
+            println!("{}", t.render());
+        }
+    }
+    Ok(())
+}
+
+fn info() -> Result<()> {
+    let dev = DeviceModel::default();
+    println!("PRINS device model:");
+    println!("  technology : {}", dev.technology);
+    println!("  frequency  : {} MHz", dev.freq_hz / 1e6);
+    println!("  E(compare) : {} fJ/bit", dev.e_compare_bit * 1e15);
+    println!("  E(write)   : {} fJ/bit", dev.e_write_bit * 1e15);
+    println!("  endurance  : {:.0e} writes", dev.endurance);
+    match crate::runtime::Runtime::open_default() {
+        Ok(rt) => {
+            println!("artifacts ({}):", rt.platform());
+            for (name, ep) in &rt.manifest.entry_points {
+                println!("  {name:<20} {} arg(s), {} output(s)", ep.args.len(), ep.outputs);
+            }
+        }
+        Err(e) => println!("artifacts: unavailable ({e:#})"),
+    }
+    Ok(())
+}

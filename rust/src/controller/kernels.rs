@@ -1,0 +1,59 @@
+//! Kernel registry (paper §5.3: the host triggers a kernel by ID; the
+//! controller holds the kernel's associative primitive sequence).
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u64)]
+pub enum KernelId {
+    EuclideanDistance = 1,
+    DotProduct = 2,
+    Histogram = 3,
+    Spmv = 4,
+    Bfs = 5,
+}
+
+impl KernelId {
+    pub fn from_u64(v: u64) -> Option<KernelId> {
+        Some(match v {
+            1 => KernelId::EuclideanDistance,
+            2 => KernelId::DotProduct,
+            3 => KernelId::Histogram,
+            4 => KernelId::Spmv,
+            5 => KernelId::Bfs,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelId::EuclideanDistance => "euclidean_distance",
+            KernelId::DotProduct => "dot_product",
+            KernelId::Histogram => "histogram",
+            KernelId::Spmv => "spmv",
+            KernelId::Bfs => "bfs",
+        }
+    }
+
+    pub fn all() -> [KernelId; 5] {
+        [
+            KernelId::EuclideanDistance,
+            KernelId::DotProduct,
+            KernelId::Histogram,
+            KernelId::Spmv,
+            KernelId::Bfs,
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn id_roundtrip() {
+        for k in KernelId::all() {
+            assert_eq!(KernelId::from_u64(k as u64), Some(k));
+        }
+        assert_eq!(KernelId::from_u64(0), None);
+        assert_eq!(KernelId::from_u64(99), None);
+    }
+}

@@ -1,0 +1,213 @@
+//! The PRINS controller (paper Fig. 4, §3.3): issues associative
+//! instructions to the daisy-chained RCAM modules, manages the key/mask
+//! broadcast, collects reduction-tree outputs into its data buffer, and
+//! exposes kernel dispatch to the host interface.
+
+pub mod kernels;
+pub mod registers;
+
+use crate::isa::{Instr, Program};
+use crate::rcam::{DeviceModel, EnergyLedger, PrinsArray};
+
+/// Execution statistics for one program/kernel invocation.
+#[derive(Clone, Debug, Default)]
+pub struct ExecStats {
+    pub cycles: u64,
+    pub instructions: u64,
+    pub passes: u64,
+    pub ledger: EnergyLedger,
+}
+
+impl ExecStats {
+    pub fn runtime_s(&self, dev: &DeviceModel) -> f64 {
+        dev.cycles_to_seconds(self.cycles)
+    }
+
+    pub fn energy_j(&self, dev: &DeviceModel) -> f64 {
+        self.ledger.total_energy_j(dev, self.cycles)
+    }
+
+    pub fn avg_power_w(&self, dev: &DeviceModel) -> f64 {
+        self.ledger.avg_power_w(dev, self.cycles)
+    }
+}
+
+/// The controller: owns the array, executes programs, buffers results.
+///
+/// Reduction-tree outputs and `read`/`if_match` results are pushed into
+/// `buffer` in program order (the hardware's "data buffer, which stores
+/// the reduction tree outputs", §3.3). A `read` that finds no tagged row
+/// pushes `u64::MAX` as a sentinel (hardware would raise an exception
+/// status; see `host::registers`).
+pub struct Controller {
+    pub array: PrinsArray,
+    pub buffer: Vec<u64>,
+    /// Cycle/ledger snapshot at the last `begin_stats` call.
+    stats_cycles0: u64,
+    stats_ledger0: EnergyLedger,
+}
+
+pub const READ_NO_MATCH: u64 = u64::MAX;
+
+impl Controller {
+    pub fn new(array: PrinsArray) -> Self {
+        let l0 = array.ledger();
+        let c0 = array.cycles;
+        Controller {
+            array,
+            buffer: Vec::new(),
+            stats_cycles0: c0,
+            stats_ledger0: l0,
+        }
+    }
+
+    pub fn device(&self) -> &DeviceModel {
+        &self.array.device
+    }
+
+    /// Reset the stats window (kernel start).
+    pub fn begin_stats(&mut self) {
+        self.stats_cycles0 = self.array.cycles;
+        self.stats_ledger0 = self.array.ledger();
+    }
+
+    /// Stats accumulated since the last `begin_stats`.
+    pub fn stats(&self) -> ExecStats {
+        let mut ledger = self.array.ledger();
+        let base = &self.stats_ledger0;
+        ledger.compare_bit_events -= base.compare_bit_events;
+        ledger.write_bit_events -= base.write_bit_events;
+        ledger.reduce_bit_events -= base.reduce_bit_events;
+        ledger.chain_bit_events -= base.chain_bit_events;
+        ledger.n_compare -= base.n_compare;
+        ledger.n_write -= base.n_write;
+        ledger.n_read -= base.n_read;
+        ledger.n_reduce -= base.n_reduce;
+        ledger.n_tag_op -= base.n_tag_op;
+        ExecStats {
+            cycles: self.array.cycles - self.stats_cycles0,
+            instructions: ledger.n_compare
+                + ledger.n_write
+                + ledger.n_read
+                + ledger.n_reduce
+                + ledger.n_tag_op,
+            passes: ledger.n_compare,
+            ledger,
+        }
+    }
+
+    /// Execute one instruction; results (read/reduce/if_match) append to
+    /// the data buffer.
+    pub fn step(&mut self, instr: &Instr) {
+        match instr {
+            Instr::Compare(p) => self.array.compare(p),
+            Instr::Write(p) => self.array.write(p),
+            Instr::Read { base, width } => {
+                let v = self
+                    .array
+                    .read_first(*base, *width)
+                    .unwrap_or(READ_NO_MATCH);
+                self.buffer.push(v);
+            }
+            Instr::IfMatch => {
+                let m = self.array.if_match();
+                self.buffer.push(m as u64);
+            }
+            Instr::FirstMatch => {
+                self.array.first_match();
+            }
+            Instr::ReduceCount => {
+                let n = self.array.count_tags();
+                self.buffer.push(n);
+            }
+            Instr::ReduceField { col } => {
+                let n = self.array.count_tags_and_col(*col);
+                self.buffer.push(n);
+            }
+            Instr::SetTagsAll => self.array.set_tags_all(),
+            Instr::ShiftTagsUp(h) => self.array.shift_tags_up(*h as usize),
+            Instr::ShiftTagsDown(h) => self.array.shift_tags_down(*h as usize),
+            Instr::ClearColumns { base, width } => {
+                self.array.clear_columns(*base, *width)
+            }
+        }
+    }
+
+    /// Execute a straight-line program; returns the data-buffer slice it
+    /// produced.
+    pub fn execute(&mut self, prog: &Program) -> &[u64] {
+        let start = self.buffer.len();
+        for instr in &prog.instrs {
+            self.step(instr);
+        }
+        &self.buffer[start..]
+    }
+
+    /// Execute and drain the produced buffer values.
+    pub fn execute_collect(&mut self, prog: &Program) -> Vec<u64> {
+        let start = self.buffer.len();
+        for instr in &prog.instrs {
+            self.step(instr);
+        }
+        self.buffer.split_off(start)
+    }
+
+    pub fn clear_buffer(&mut self) {
+        self.buffer.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Field;
+    use crate::rcam::PrinsArray;
+
+    fn controller(rows: usize, width: usize) -> Controller {
+        Controller::new(PrinsArray::single(rows, width))
+    }
+
+    #[test]
+    fn execute_collects_results_in_order() {
+        let mut c = controller(64, 16);
+        let f = Field::new(0, 8);
+        for r in 0..10 {
+            c.array.load_row_bits(r, 0, 8, 0x3C);
+        }
+        c.array.load_row_bits(3, 8, 8, 0x7F);
+        let mut p = Program::new();
+        p.compare_field(f, 0x3C);
+        p.push(Instr::ReduceCount);
+        p.push(Instr::IfMatch);
+        p.push(Instr::Read { base: 8, width: 8 });
+        let out = c.execute_collect(&p);
+        assert_eq!(out, vec![10, 1, 0]); // row 0 is first match; its cols 8.. are 0
+        c.array.compare(&f.pattern(0x3C));
+        c.array.first_match(); // row 0
+        assert_eq!(c.array.read_first(8, 8), Some(0));
+    }
+
+    #[test]
+    fn read_without_match_pushes_sentinel() {
+        let mut c = controller(16, 8);
+        let mut p = Program::new();
+        p.compare_field(Field::new(0, 4), 0xF);
+        p.push(Instr::Read { base: 0, width: 4 });
+        let out = c.execute_collect(&p);
+        assert_eq!(out, vec![READ_NO_MATCH]);
+    }
+
+    #[test]
+    fn stats_window_isolates_kernels() {
+        let mut c = controller(64, 8);
+        c.array.compare(&[(0, true)]);
+        c.begin_stats();
+        c.array.compare(&[(0, true)]);
+        c.array.write(&[(1, true)]);
+        let s = c.stats();
+        assert_eq!(s.cycles, 3);
+        assert_eq!(s.passes, 1);
+        assert_eq!(s.ledger.n_compare, 1);
+        assert_eq!(s.ledger.n_write, 1);
+    }
+}

@@ -1,0 +1,144 @@
+//! Host-visible memory-mapped register file (paper §5.3): "The host uses
+//! memory-mapped registers to communicate with PRINS ... transfers
+//! parameters such as data starting addresses, kernel configuration
+//! starting addresses, and kernel ID and triggers kernel execution ...
+//! PRINS can notify the host of its execution status by writing to the
+//! status registers. The host periodically polls these memory-mapped
+//! status registers."
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u64)]
+pub enum Status {
+    Idle = 0,
+    Running = 1,
+    Done = 2,
+    Error = 3,
+}
+
+impl Status {
+    pub fn from_u64(v: u64) -> Status {
+        match v {
+            0 => Status::Idle,
+            1 => Status::Running,
+            2 => Status::Done,
+            _ => Status::Error,
+        }
+    }
+}
+
+pub const N_PARAMS: usize = 16;
+pub const N_RESULTS: usize = 8;
+
+/// The register file. All fields are atomics: the host side polls while
+/// the device side executes, without any lock (the paper: "The status
+/// register read by the host does not intervene in PRINS operation").
+#[derive(Debug, Default)]
+pub struct RegisterFile {
+    pub kernel_id: AtomicU64,
+    pub params: [AtomicU64; N_PARAMS],
+    pub status: AtomicU64,
+    pub results: [AtomicU64; N_RESULTS],
+    pub error_code: AtomicU64,
+    /// monotonically increasing completion counter (lets the host detect
+    /// back-to-back completions of the same kernel id)
+    pub completions: AtomicU64,
+}
+
+impl RegisterFile {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    // --- host side ---
+
+    pub fn write_param(&self, i: usize, v: u64) {
+        self.params[i].store(v, Ordering::Release);
+    }
+
+    pub fn trigger(&self, kernel_id: u64) {
+        self.kernel_id.store(kernel_id, Ordering::Release);
+        self.status.store(Status::Running as u64, Ordering::Release);
+    }
+
+    pub fn poll_status(&self) -> Status {
+        Status::from_u64(self.status.load(Ordering::Acquire))
+    }
+
+    pub fn read_result(&self, i: usize) -> u64 {
+        self.results[i].load(Ordering::Acquire)
+    }
+
+    /// Busy-poll until the device leaves Running (the paper's polling
+    /// protocol; the host "can accurately estimate the execution time ...
+    /// thereby polling status when the kernel execution is about to
+    /// finish" — we just spin-yield).
+    pub fn wait_done(&self) -> Status {
+        loop {
+            let s = self.poll_status();
+            if s != Status::Running {
+                return s;
+            }
+            std::thread::yield_now();
+        }
+    }
+
+    // --- device side ---
+
+    pub fn read_param(&self, i: usize) -> u64 {
+        self.params[i].load(Ordering::Acquire)
+    }
+
+    pub fn kernel(&self) -> u64 {
+        self.kernel_id.load(Ordering::Acquire)
+    }
+
+    pub fn write_result(&self, i: usize, v: u64) {
+        self.results[i].store(v, Ordering::Release);
+    }
+
+    pub fn complete(&self, ok: bool, error_code: u64) {
+        self.error_code.store(error_code, Ordering::Release);
+        self.completions.fetch_add(1, Ordering::AcqRel);
+        self.status.store(
+            if ok { Status::Done } else { Status::Error } as u64,
+            Ordering::Release,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn host_device_handshake_across_threads() {
+        let regs = Arc::new(RegisterFile::new());
+        let dev = regs.clone();
+        let worker = std::thread::spawn(move || {
+            while dev.poll_status() != Status::Running {
+                std::thread::yield_now();
+            }
+            assert_eq!(dev.kernel(), 42);
+            let p = dev.read_param(0);
+            dev.write_result(0, p * 2);
+            dev.complete(true, 0);
+        });
+        regs.write_param(0, 21);
+        regs.trigger(42);
+        assert_eq!(regs.wait_done(), Status::Done);
+        assert_eq!(regs.read_result(0), 42);
+        worker.join().unwrap();
+    }
+
+    #[test]
+    fn error_path() {
+        let regs = RegisterFile::new();
+        regs.trigger(1);
+        regs.complete(false, 7);
+        assert_eq!(regs.poll_status(), Status::Error);
+        assert_eq!(regs.error_code.load(Ordering::Acquire), 7);
+    }
+}

@@ -1,0 +1,257 @@
+//! Host interface (paper §5.3): the PRINS device as the host sees it.
+//!
+//! `PrinsDevice` packages the controller + storage manager behind the
+//! memory-mapped register protocol: the host loads datasets (which then
+//! *live in PRINS* — "the datasets on which PRINS operates must reside in
+//! PRINS and should not be left in the host memory"), writes kernel
+//! parameters, triggers execution by kernel ID, and polls the status
+//! register. A worker thread plays the PRINS controller; during kernel
+//! execution the storage is not host-accessible (no coherence hardware,
+//! §5.3).
+//!
+//! `server` exposes the same protocol over a TCP socket (std::net +
+//! threads; the vendored crate set has no tokio) so external processes
+//! can drive PRINS like a storage appliance.
+
+pub mod server;
+
+use crate::algorithms::{DotKernel, EuclideanKernel, HistogramKernel};
+use crate::controller::kernels::KernelId;
+use crate::controller::registers::{RegisterFile, Status};
+use crate::controller::Controller;
+use crate::rcam::{DeviceModel, PrinsArray};
+use crate::storage::StorageManager;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+/// What is currently resident in the device's storage.
+enum Resident {
+    None,
+    Euclidean { kern: EuclideanKernel, centers_dim: usize },
+    Dot { kern: DotKernel },
+    Histogram { kern: HistogramKernel },
+}
+
+enum Request {
+    Run { params: Vec<f64> },
+    Shutdown,
+}
+
+/// Results the host reads back after Done (floats don't fit registers; the
+/// paper's host reads outputs from PRINS storage — modeled as this buffer).
+#[derive(Default)]
+pub struct OutputBuffer {
+    pub f32s: Vec<f32>,
+    pub u64s: Vec<u64>,
+    pub cycles: u64,
+    pub energy_j: f64,
+}
+
+pub struct PrinsDevice {
+    pub regs: Arc<RegisterFile>,
+    pub outputs: Arc<Mutex<OutputBuffer>>,
+    tx: mpsc::Sender<Request>,
+    worker: Option<std::thread::JoinHandle<()>>,
+    state: Arc<Mutex<DeviceState>>,
+}
+
+struct DeviceState {
+    ctl: Controller,
+    sm: StorageManager,
+    resident: Resident,
+}
+
+impl PrinsDevice {
+    /// Bring up a device with `rows`×`width` of RCAM storage.
+    pub fn new(rows: usize, width: usize) -> Self {
+        Self::with_device_model(rows, width, DeviceModel::default())
+    }
+
+    pub fn with_device_model(rows: usize, width: usize, dm: DeviceModel) -> Self {
+        let array = PrinsArray::with_device(1, rows, width, dm);
+        let state = Arc::new(Mutex::new(DeviceState {
+            ctl: Controller::new(array),
+            sm: StorageManager::new(rows),
+            resident: Resident::None,
+        }));
+        let regs = Arc::new(RegisterFile::new());
+        let outputs = Arc::new(Mutex::new(OutputBuffer::default()));
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (wregs, wout, wstate) = (regs.clone(), outputs.clone(), state.clone());
+        let worker = std::thread::spawn(move || {
+            while let Ok(req) = rx.recv() {
+                match req {
+                    Request::Shutdown => break,
+                    Request::Run { params } => {
+                        let ok = Self::execute(&wregs, &wout, &wstate, &params);
+                        wregs.complete(ok, if ok { 0 } else { 1 });
+                    }
+                }
+            }
+        });
+        PrinsDevice {
+            regs,
+            outputs,
+            tx,
+            worker: Some(worker),
+            state,
+        }
+    }
+
+    fn execute(
+        regs: &RegisterFile,
+        out: &Mutex<OutputBuffer>,
+        state: &Mutex<DeviceState>,
+        params: &[f64],
+    ) -> bool {
+        let Some(kid) = KernelId::from_u64(regs.kernel()) else {
+            return false;
+        };
+        let mut st = state.lock().unwrap();
+        let st = &mut *st;
+        let dev = st.ctl.device().clone();
+        let mut buf = OutputBuffer::default();
+        let ok = match (&st.resident, kid) {
+            (Resident::Euclidean { kern, centers_dim }, KernelId::EuclideanDistance) => {
+                let dims = *centers_dim;
+                let k = regs.read_param(0) as usize;
+                if params.len() != k * dims {
+                    return false;
+                }
+                let centers: Vec<f32> = params.iter().map(|&v| v as f32).collect();
+                let res = kern.run(&mut st.ctl, &st.sm, &centers, k);
+                for d in &res.dists {
+                    buf.f32s.extend_from_slice(d);
+                }
+                buf.cycles = res.stats.cycles;
+                buf.energy_j = res.stats.energy_j(&dev);
+                true
+            }
+            (Resident::Dot { kern }, KernelId::DotProduct) => {
+                let h: Vec<f32> = params.iter().map(|&v| v as f32).collect();
+                if h.len() != kern.layout.dims {
+                    return false;
+                }
+                let res = kern.run(&mut st.ctl, &st.sm, &h);
+                buf.f32s = res.dp;
+                buf.cycles = res.stats.cycles;
+                buf.energy_j = res.stats.energy_j(&dev);
+                true
+            }
+            (Resident::Histogram { kern }, KernelId::Histogram) => {
+                let res = kern.run(&mut st.ctl);
+                buf.u64s = res.hist;
+                buf.cycles = res.stats.cycles;
+                buf.energy_j = res.stats.energy_j(&dev);
+                true
+            }
+            _ => false,
+        };
+        if ok {
+            regs.write_result(0, buf.cycles);
+            regs.write_result(1, (buf.energy_j * 1e12) as u64); // pJ
+            *out.lock().unwrap() = buf;
+        }
+        ok
+    }
+
+    // ----- host-side dataset loading (device must be idle) --------------
+
+    pub fn load_samples_for_euclidean(&self, x: &[f32], n: usize, dims: usize) {
+        let mut st = self.state.lock().unwrap();
+        let st = &mut *st;
+        let kern = EuclideanKernel::load(&mut st.sm, &mut st.ctl.array, x, n, dims);
+        st.resident = Resident::Euclidean {
+            kern,
+            centers_dim: dims,
+        };
+    }
+
+    pub fn load_vectors_for_dot(&self, x: &[f32], n: usize, dims: usize) {
+        let mut st = self.state.lock().unwrap();
+        let st = &mut *st;
+        let kern = DotKernel::load(&mut st.sm, &mut st.ctl.array, x, n, dims);
+        st.resident = Resident::Dot { kern };
+    }
+
+    pub fn load_samples_for_histogram(&self, x: &[u32]) {
+        let mut st = self.state.lock().unwrap();
+        let st = &mut *st;
+        let kern = HistogramKernel::load(&mut st.sm, &mut st.ctl.array, x);
+        st.resident = Resident::Histogram { kern };
+    }
+
+    // ----- host-side kernel invocation (register protocol) --------------
+
+    /// Trigger a kernel and block until completion (poll loop).
+    pub fn run_kernel(&self, kid: KernelId, reg_params: &[u64], data_params: &[f64]) -> Status {
+        for (i, &p) in reg_params.iter().enumerate() {
+            self.regs.write_param(i, p);
+        }
+        self.regs.trigger(kid as u64);
+        self.tx
+            .send(Request::Run {
+                params: data_params.to_vec(),
+            })
+            .expect("device worker gone");
+        self.regs.wait_done()
+    }
+
+    /// Read back the output buffer after Done.
+    pub fn take_outputs(&self) -> OutputBuffer {
+        std::mem::take(&mut *self.outputs.lock().unwrap())
+    }
+}
+
+impl Drop for PrinsDevice {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::histogram_baseline;
+    use crate::workloads::synth_hist_samples;
+
+    #[test]
+    fn histogram_through_register_protocol() {
+        let xs = synth_hist_samples(2000, 5);
+        let dev = PrinsDevice::new(2048, 64);
+        dev.load_samples_for_histogram(&xs);
+        let st = dev.run_kernel(KernelId::Histogram, &[], &[]);
+        assert_eq!(st, Status::Done);
+        let out = dev.take_outputs();
+        assert_eq!(out.u64s, histogram_baseline(&xs));
+        assert!(out.cycles > 0);
+        assert_eq!(dev.regs.read_result(0), out.cycles);
+    }
+
+    #[test]
+    fn wrong_kernel_for_resident_dataset_errors() {
+        let dev = PrinsDevice::new(256, 64);
+        dev.load_samples_for_histogram(&[1, 2, 3]);
+        let st = dev.run_kernel(KernelId::DotProduct, &[], &[]);
+        assert_eq!(st, Status::Error);
+    }
+
+    #[test]
+    fn dot_product_through_device() {
+        let (n, dims) = (16usize, 2usize);
+        let x: Vec<f32> = (0..n * dims).map(|i| i as f32 * 0.1).collect();
+        let layout = crate::algorithms::dot::DotLayout::new(dims);
+        let dev = PrinsDevice::new(n, layout.width as usize);
+        dev.load_vectors_for_dot(&x, n, dims);
+        let st = dev.run_kernel(KernelId::DotProduct, &[], &[0.5, -1.5]);
+        assert_eq!(st, Status::Done);
+        let out = dev.take_outputs();
+        let expect = crate::algorithms::dot_baseline(&x, n, dims, &[0.5, -1.5]);
+        for i in 0..n {
+            assert!((out.f32s[i] - expect[i]).abs() < 1e-4, "dp[{i}]");
+        }
+    }
+}

@@ -1,0 +1,215 @@
+//! TCP front-end for the PRINS device: a line-oriented protocol so
+//! external processes (or `prins serve` + netcat) can drive the device
+//! like a network-attached storage appliance.
+//!
+//! Protocol (one request per line, one reply line):
+//!   PING                      -> PONG
+//!   HIST <n> <seed>           -> OK cycles=<c> energy_pj=<e> top_bin=<b> total=<n>
+//!   DP <n> <dims> <seed>      -> OK cycles=<c> energy_pj=<e> checksum=<s>
+//!   ED <n> <dims> <k> <seed>  -> OK cycles=<c> energy_pj=<e> checksum=<s>
+//!   QUIT                      -> BYE (closes connection)
+//!
+//! (std::net + a thread per connection; the vendored crate set has no
+//! tokio — documented in Cargo.toml.)
+
+use super::PrinsDevice;
+use crate::controller::kernels::KernelId;
+use crate::controller::registers::Status;
+use crate::workloads::{synth_hist_samples, synth_samples, synth_uniform};
+use anyhow::{bail, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind and serve on a background thread. `rows`/`width` size the
+    /// device built for each request batch.
+    pub fn spawn(bind: &str) -> Result<Server> {
+        let listener = TcpListener::bind(bind)?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::spawn(move || {
+            while !stop2.load(Ordering::Acquire) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        stream.set_nonblocking(false).ok();
+                        let st = stop2.clone();
+                        std::thread::spawn(move || {
+                            let _ = handle_conn(stream, st);
+                        });
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        Ok(Server {
+            addr,
+            stop,
+            handle: Some(handle),
+        })
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, stop: Arc<AtomicBool>) -> Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut out = stream;
+    let mut line = String::new();
+    while !stop.load(Ordering::Acquire) {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // client closed
+        }
+        let reply = match dispatch(line.trim()) {
+            Ok(Some(r)) => r,
+            Ok(None) => {
+                writeln!(out, "BYE")?;
+                return Ok(());
+            }
+            Err(e) => format!("ERR {e}"),
+        };
+        writeln!(out, "{reply}")?;
+    }
+    Ok(())
+}
+
+fn dispatch(line: &str) -> Result<Option<String>> {
+    let parts: Vec<&str> = line.split_whitespace().collect();
+    match parts.as_slice() {
+        ["PING"] => Ok(Some("PONG".into())),
+        ["QUIT"] => Ok(None),
+        ["HIST", n, seed] => {
+            let (n, seed): (usize, u64) = (n.parse()?, seed.parse()?);
+            if n == 0 || n > 1 << 20 {
+                bail!("n out of range");
+            }
+            let xs = synth_hist_samples(n, seed);
+            let dev = PrinsDevice::new(n, 64);
+            dev.load_samples_for_histogram(&xs);
+            if dev.run_kernel(KernelId::Histogram, &[], &[]) != Status::Done {
+                bail!("kernel error");
+            }
+            let o = dev.take_outputs();
+            let top = o.u64s.iter().enumerate().max_by_key(|(_, &v)| v).unwrap().0;
+            let total: u64 = o.u64s.iter().sum();
+            Ok(Some(format!(
+                "OK cycles={} energy_pj={:.1} top_bin={} total={}",
+                o.cycles,
+                o.energy_j * 1e12,
+                top,
+                total
+            )))
+        }
+        ["DP", n, dims, seed] => {
+            let (n, dims, seed): (usize, usize, u64) =
+                (n.parse()?, dims.parse()?, seed.parse()?);
+            if n == 0 || n > 1 << 16 || dims == 0 || dims > 16 {
+                bail!("size out of range");
+            }
+            let x = synth_samples(n, dims, 4, seed);
+            let h = synth_uniform(dims, seed + 1);
+            let layout = crate::algorithms::dot::DotLayout::new(dims);
+            let dev = PrinsDevice::new(n, layout.width as usize);
+            dev.load_vectors_for_dot(&x, n, dims);
+            let hp: Vec<f64> = h.iter().map(|&v| v as f64).collect();
+            if dev.run_kernel(KernelId::DotProduct, &[], &hp) != Status::Done {
+                bail!("kernel error");
+            }
+            let o = dev.take_outputs();
+            let checksum: f32 = o.f32s.iter().sum();
+            Ok(Some(format!(
+                "OK cycles={} energy_pj={:.1} checksum={:.4}",
+                o.cycles,
+                o.energy_j * 1e12,
+                checksum
+            )))
+        }
+        ["ED", n, dims, k, seed] => {
+            let (n, dims, k, seed): (usize, usize, usize, u64) =
+                (n.parse()?, dims.parse()?, k.parse()?, seed.parse()?);
+            if n == 0 || n > 1 << 16 || dims == 0 || dims > 8 || k == 0 || k > 16 {
+                bail!("size out of range");
+            }
+            let x = synth_samples(n, dims, k, seed);
+            let centers = synth_uniform(k * dims, seed + 1);
+            let layout = crate::algorithms::euclidean::EuclideanLayout::new(dims);
+            let dev = PrinsDevice::new(n, layout.width as usize);
+            dev.load_samples_for_euclidean(&x, n, dims);
+            let cp: Vec<f64> = centers.iter().map(|&v| v as f64).collect();
+            if dev.run_kernel(KernelId::EuclideanDistance, &[k as u64], &cp) != Status::Done {
+                bail!("kernel error");
+            }
+            let o = dev.take_outputs();
+            let checksum: f32 = o.f32s.iter().sum();
+            Ok(Some(format!(
+                "OK cycles={} energy_pj={:.1} checksum={:.4}",
+                o.cycles,
+                o.energy_j * 1e12,
+                checksum
+            )))
+        }
+        _ => bail!("unknown command"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{BufRead, BufReader, Write};
+
+    #[test]
+    fn ping_and_hist_over_tcp() {
+        let server = Server::spawn("127.0.0.1:0").unwrap();
+        let mut conn = TcpStream::connect(server.addr).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+
+        writeln!(conn, "PING").unwrap();
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(line.trim(), "PONG");
+
+        line.clear();
+        writeln!(conn, "HIST 500 7").unwrap();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("OK cycles="), "{line}");
+        assert!(line.contains("total=500"), "{line}");
+
+        line.clear();
+        writeln!(conn, "BOGUS").unwrap();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("ERR"), "{line}");
+
+        line.clear();
+        writeln!(conn, "QUIT").unwrap();
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(line.trim(), "BYE");
+        server.shutdown();
+    }
+}

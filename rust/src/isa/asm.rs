@@ -1,0 +1,189 @@
+//! Textual assembly for PRINS programs.
+//!
+//! The paper (§5.3) states "PRINS code is manually encoded at assembly
+//! language level"; this module provides that assembly. One instruction
+//! per line; `#` starts a comment. Patterns are `c<col>=<0|1>` terms:
+//!
+//! ```text
+//! # histogram inner loop body
+//! compare c24=1 c25=0 c26=1
+//! write   c30=1
+//! read    base=8 width=16
+//! ifmatch
+//! firstmatch
+//! reduce
+//! reducefield col=12
+//! settagsall
+//! shiftup 3
+//! shiftdown 1
+//! clearcols base=40 width=8
+//! ```
+
+use super::program::{Instr, Pat, Program};
+use anyhow::{anyhow, bail, Context, Result};
+use std::fmt::Write as _;
+
+pub fn format_pattern(p: &Pat) -> String {
+    p.iter()
+        .map(|&(c, b)| format!("c{}={}", c, if b { 1 } else { 0 }))
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+pub fn format_instr(i: &Instr) -> String {
+    match i {
+        Instr::Compare(p) => format!("compare {}", format_pattern(p)).trim_end().into(),
+        Instr::Write(p) => format!("write {}", format_pattern(p)).trim_end().into(),
+        Instr::Read { base, width } => format!("read base={base} width={width}"),
+        Instr::IfMatch => "ifmatch".into(),
+        Instr::FirstMatch => "firstmatch".into(),
+        Instr::ReduceCount => "reduce".into(),
+        Instr::ReduceField { col } => format!("reducefield col={col}"),
+        Instr::SetTagsAll => "settagsall".into(),
+        Instr::ShiftTagsUp(h) => format!("shiftup {h}"),
+        Instr::ShiftTagsDown(h) => format!("shiftdown {h}"),
+        Instr::ClearColumns { base, width } => {
+            format!("clearcols base={base} width={width}")
+        }
+    }
+}
+
+pub fn format_program(p: &Program) -> String {
+    let mut s = String::new();
+    for i in &p.instrs {
+        let _ = writeln!(s, "{}", format_instr(i));
+    }
+    s
+}
+
+fn parse_pattern(terms: &[&str]) -> Result<Pat> {
+    terms
+        .iter()
+        .map(|t| {
+            let t = t.strip_prefix('c').ok_or_else(|| anyhow!("bad term {t:?}"))?;
+            let (col, bit) = t
+                .split_once('=')
+                .ok_or_else(|| anyhow!("bad term c{t:?}"))?;
+            let col: u16 = col.parse().context("column")?;
+            let bit = match bit {
+                "0" => false,
+                "1" => true,
+                _ => bail!("bit must be 0/1, got {bit:?}"),
+            };
+            Ok((col, bit))
+        })
+        .collect()
+}
+
+fn kv(term: &str, key: &str) -> Result<u16> {
+    let (k, v) = term
+        .split_once('=')
+        .ok_or_else(|| anyhow!("expected {key}=<n>, got {term:?}"))?;
+    if k != key {
+        bail!("expected key {key:?}, got {k:?}");
+    }
+    Ok(v.parse()?)
+}
+
+pub fn parse_instr(line: &str) -> Result<Instr> {
+    let mut parts = line.split_whitespace();
+    let op = parts.next().ok_or_else(|| anyhow!("empty instruction"))?;
+    let rest: Vec<&str> = parts.collect();
+    Ok(match op {
+        "compare" => Instr::Compare(parse_pattern(&rest)?),
+        "write" => Instr::Write(parse_pattern(&rest)?),
+        "read" => {
+            if rest.len() != 2 {
+                bail!("read needs base= and width=");
+            }
+            Instr::Read {
+                base: kv(rest[0], "base")?,
+                width: kv(rest[1], "width")?,
+            }
+        }
+        "ifmatch" => Instr::IfMatch,
+        "firstmatch" => Instr::FirstMatch,
+        "reduce" => Instr::ReduceCount,
+        "reducefield" => Instr::ReduceField {
+            col: kv(rest.first().ok_or_else(|| anyhow!("reducefield col="))?, "col")?,
+        },
+        "settagsall" => Instr::SetTagsAll,
+        "shiftup" => Instr::ShiftTagsUp(
+            rest.first().ok_or_else(|| anyhow!("shiftup <n>"))?.parse()?,
+        ),
+        "shiftdown" => Instr::ShiftTagsDown(
+            rest.first().ok_or_else(|| anyhow!("shiftdown <n>"))?.parse()?,
+        ),
+        "clearcols" => {
+            if rest.len() != 2 {
+                bail!("clearcols needs base= and width=");
+            }
+            Instr::ClearColumns {
+                base: kv(rest[0], "base")?,
+                width: kv(rest[1], "width")?,
+            }
+        }
+        _ => bail!("unknown instruction {op:?}"),
+    })
+}
+
+pub fn parse_program(text: &str) -> Result<Program> {
+    let mut prog = Program::new();
+    for (ln, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let instr =
+            parse_instr(line).with_context(|| format!("line {}: {raw:?}", ln + 1))?;
+        prog.push(instr);
+    }
+    Ok(prog)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Program {
+        let mut p = Program::new();
+        p.pass(vec![(3, true), (7, false)], vec![(9, true)]);
+        p.push(Instr::Read { base: 8, width: 16 });
+        p.push(Instr::IfMatch);
+        p.push(Instr::FirstMatch);
+        p.push(Instr::ReduceCount);
+        p.push(Instr::ReduceField { col: 12 });
+        p.push(Instr::SetTagsAll);
+        p.push(Instr::ShiftTagsUp(3));
+        p.push(Instr::ShiftTagsDown(1));
+        p.push(Instr::ClearColumns { base: 40, width: 8 });
+        p
+    }
+
+    #[test]
+    fn roundtrip() {
+        let p = sample();
+        let text = format_program(&p);
+        let q = parse_program(&text).unwrap();
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let p = parse_program("# a comment\n\n  compare c1=1 # tail\n").unwrap();
+        assert_eq!(p.instrs, vec![Instr::Compare(vec![(1, true)])]);
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = parse_program("compare c1=1\nbogus op\n").unwrap_err();
+        assert!(format!("{err:#}").contains("line 2"));
+    }
+
+    #[test]
+    fn empty_compare_is_valid() {
+        // compare with empty mask = tag all rows
+        let p = parse_program("compare\n").unwrap();
+        assert_eq!(p.instrs, vec![Instr::Compare(vec![])]);
+    }
+}

@@ -1,0 +1,217 @@
+//! Row layout: named bit-fields inside the W-bit RCAM row (paper §5.1 —
+//! "data element normally occupies only a part of the row, while the rest
+//! of it is used for temporary storage").
+
+use std::collections::BTreeMap;
+
+/// A contiguous bit-field inside the row: columns [base, base+width).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Field {
+    pub base: u16,
+    pub width: u16,
+}
+
+impl Field {
+    pub fn new(base: u16, width: u16) -> Self {
+        Field { base, width }
+    }
+
+    /// Column index of bit `i` (LSB first).
+    #[inline]
+    pub fn col(&self, i: u16) -> u16 {
+        debug_assert!(i < self.width);
+        self.base + i
+    }
+
+    /// Columns LSB→MSB.
+    pub fn cols(&self) -> impl Iterator<Item = u16> + '_ {
+        (0..self.width).map(|i| self.base + i)
+    }
+
+    /// Columns MSB→LSB (for lexicographic compares).
+    pub fn cols_msb_first(&self) -> impl Iterator<Item = u16> + '_ {
+        (0..self.width).rev().map(|i| self.base + i)
+    }
+
+    /// Full-field key/write pattern for `value` (LSB first).
+    pub fn pattern(&self, value: u64) -> Vec<(u16, bool)> {
+        assert!(self.width <= 64);
+        (0..self.width)
+            .map(|i| (self.base + i, (value >> i) & 1 == 1))
+            .collect()
+    }
+
+    /// Sub-field covering bits [lo, lo+width) of this field.
+    pub fn slice(&self, lo: u16, width: u16) -> Field {
+        assert!(lo + width <= self.width);
+        Field {
+            base: self.base + lo,
+            width,
+        }
+    }
+
+    pub fn overlaps(&self, other: &Field) -> bool {
+        self.base < other.base + other.width && other.base < self.base + self.width
+    }
+
+    pub fn end(&self) -> u16 {
+        self.base + self.width
+    }
+
+    /// Maximum value storable (width < 64).
+    pub fn max_value(&self) -> u64 {
+        if self.width >= 64 {
+            u64::MAX
+        } else {
+            (1u64 << self.width) - 1
+        }
+    }
+}
+
+/// First-fit allocator of named fields over the row width.
+#[derive(Clone, Debug)]
+pub struct RowLayout {
+    width: u16,
+    fields: BTreeMap<String, Field>,
+}
+
+impl RowLayout {
+    pub fn new(width: u16) -> Self {
+        RowLayout {
+            width,
+            fields: BTreeMap::new(),
+        }
+    }
+
+    pub fn width(&self) -> u16 {
+        self.width
+    }
+
+    /// Allocate `width` columns under `name`. First-fit over the free gaps.
+    pub fn alloc(&mut self, name: &str, width: u16) -> Field {
+        assert!(
+            !self.fields.contains_key(name),
+            "field {name:?} already allocated"
+        );
+        let mut used: Vec<(u16, u16)> = self
+            .fields
+            .values()
+            .map(|f| (f.base, f.end()))
+            .collect();
+        used.sort_unstable();
+        let mut cursor = 0u16;
+        for (s, e) in used {
+            if cursor + width <= s {
+                break;
+            }
+            cursor = cursor.max(e);
+        }
+        assert!(
+            cursor + width <= self.width,
+            "row overflow: cannot fit {width} bits for {name:?} in {}-bit row",
+            self.width
+        );
+        let f = Field::new(cursor, width);
+        self.fields.insert(name.to_string(), f);
+        f
+    }
+
+    /// Allocate at a fixed base (paper-specified layouts, e.g. BFS Table 2).
+    pub fn alloc_at(&mut self, name: &str, base: u16, width: u16) -> Field {
+        let f = Field::new(base, width);
+        assert!(f.end() <= self.width, "field {name:?} exceeds row width");
+        for (other, g) in &self.fields {
+            assert!(
+                !f.overlaps(g),
+                "field {name:?} overlaps {other:?}"
+            );
+        }
+        assert!(!self.fields.contains_key(name));
+        self.fields.insert(name.to_string(), f);
+        f
+    }
+
+    pub fn free(&mut self, name: &str) {
+        self.fields.remove(name);
+    }
+
+    pub fn get(&self, name: &str) -> Field {
+        *self
+            .fields
+            .get(name)
+            .unwrap_or_else(|| panic!("unknown field {name:?}"))
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.fields.keys().map(|s| s.as_str())
+    }
+
+    /// Bits still unallocated.
+    pub fn free_bits(&self) -> u16 {
+        self.width - self.fields.values().map(|f| f.width).sum::<u16>()
+    }
+
+    /// Check the no-overlap invariant (proptest target).
+    pub fn assert_disjoint(&self) {
+        let fields: Vec<_> = self.fields.iter().collect();
+        for (i, (na, fa)) in fields.iter().enumerate() {
+            for (nb, fb) in fields.iter().skip(i + 1) {
+                assert!(!fa.overlaps(fb), "{na} overlaps {nb}");
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pattern_is_lsb_first() {
+        let f = Field::new(4, 8);
+        let p = f.pattern(0b1010_0001);
+        assert_eq!(p[0], (4, true));
+        assert_eq!(p[1], (5, false));
+        assert_eq!(p[7], (11, true));
+    }
+
+    #[test]
+    fn alloc_first_fit_and_free() {
+        let mut l = RowLayout::new(64);
+        let a = l.alloc("a", 16);
+        let b = l.alloc("b", 16);
+        assert_eq!((a.base, b.base), (0, 16));
+        l.free("a");
+        let c = l.alloc("c", 8);
+        assert_eq!(c.base, 0); // reuses the gap
+        let d = l.alloc("d", 16);
+        assert_eq!(d.base, 32); // 8..16 gap too small
+        l.assert_disjoint();
+        assert_eq!(l.free_bits(), 64 - 8 - 16 - 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "row overflow")]
+    fn alloc_overflow_panics() {
+        let mut l = RowLayout::new(16);
+        l.alloc("a", 12);
+        l.alloc("b", 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "overlaps")]
+    fn alloc_at_overlap_panics() {
+        let mut l = RowLayout::new(64);
+        l.alloc_at("a", 0, 10);
+        l.alloc_at("b", 5, 10);
+    }
+
+    #[test]
+    fn slice_and_overlap() {
+        let f = Field::new(8, 16);
+        let s = f.slice(4, 4);
+        assert_eq!((s.base, s.width), (12, 4));
+        assert!(f.overlaps(&s));
+        assert!(!f.overlaps(&Field::new(24, 4)));
+    }
+}

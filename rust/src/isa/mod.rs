@@ -1,0 +1,10 @@
+//! The PRINS associative ISA (paper §5.2): instruction set, program
+//! container, row-layout (field) management, and the textual assembly the
+//! paper says PRINS is programmed in.
+
+pub mod asm;
+pub mod fields;
+pub mod program;
+
+pub use fields::{Field, RowLayout};
+pub use program::{Instr, Pat, Program};

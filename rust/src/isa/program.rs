@@ -1,0 +1,178 @@
+//! The PRINS associative instruction set (paper §5.2) and the program
+//! container the controller executes.
+//!
+//! The paper's five architectural instructions are `compare`, `write`,
+//! `read`, `if_match`, `first_match`. The remaining variants are
+//! controller macros (paper §3.3: the controller "issues instructions,
+//! sets the key and mask registers, handles control sequences"): reduction
+//! tree issues, tag-chain shifts, and bulk column clears.
+
+use super::fields::Field;
+use crate::rcam::device::{
+    CYCLES_COMPARE, CYCLES_READ, CYCLES_REDUCE_ISSUE, CYCLES_TAG_OP, CYCLES_WRITE,
+};
+
+/// Sparse key/mask pattern: (bit-column, key bit); unlisted columns are
+/// masked out.
+pub type Pat = Vec<(u16, bool)>;
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Instr {
+    /// compare (y1==x1, ...): tag rows matching the pattern.
+    Compare(Pat),
+    /// write (y1=x1, ...): write pattern into all tagged rows.
+    Write(Pat),
+    /// read (y): read a field of the first tagged row into the key register
+    /// (result lands in the controller data buffer).
+    Read { base: u16, width: u16 },
+    /// Signal whether any row is tagged (result in data buffer: 0/1).
+    IfMatch,
+    /// Keep only the first (top-most) tag.
+    FirstMatch,
+    /// Reduction tree over tags: count of tagged rows → data buffer.
+    ReduceCount,
+    /// Reduction over tags AND bit-column `col` → data buffer (weighted
+    /// popcount used by bit-serial field sums).
+    ReduceField { col: u16 },
+    /// Tag every row.
+    SetTagsAll,
+    /// Daisy-chain tag shift, towards higher rows.
+    ShiftTagsUp(u32),
+    /// Daisy-chain tag shift, towards lower rows.
+    ShiftTagsDown(u32),
+    /// Untagged parallel clear of a column range (controller bulk macro).
+    ClearColumns { base: u16, width: u16 },
+}
+
+impl Instr {
+    /// Documented cycle cost (DESIGN.md §4).
+    pub fn cycles(&self) -> u64 {
+        match self {
+            Instr::Compare(_) => CYCLES_COMPARE,
+            Instr::Write(_) => CYCLES_WRITE,
+            Instr::Read { .. } => CYCLES_READ,
+            Instr::IfMatch | Instr::FirstMatch | Instr::SetTagsAll => CYCLES_TAG_OP,
+            Instr::ReduceCount | Instr::ReduceField { .. } => CYCLES_REDUCE_ISSUE,
+            Instr::ShiftTagsUp(h) | Instr::ShiftTagsDown(h) => {
+                (*h as u64) * CYCLES_TAG_OP
+            }
+            Instr::ClearColumns { .. } => CYCLES_WRITE,
+        }
+    }
+}
+
+/// A straight-line associative program (the paper's "associative
+/// primitives that are downloaded into and executed by the PRINS
+/// controller", §5.3).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Program {
+    pub instrs: Vec<Instr>,
+}
+
+impl Program {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, i: Instr) {
+        self.instrs.push(i);
+    }
+
+    /// Append a compare+write microcode pass.
+    pub fn pass(&mut self, cpat: Pat, wpat: Pat) {
+        self.instrs.push(Instr::Compare(cpat));
+        self.instrs.push(Instr::Write(wpat));
+    }
+
+    /// Compare a full field against a constant.
+    pub fn compare_field(&mut self, f: Field, value: u64) {
+        self.instrs.push(Instr::Compare(f.pattern(value)));
+    }
+
+    /// Write a constant into a full field of all tagged rows.
+    pub fn write_field(&mut self, f: Field, value: u64) {
+        self.instrs.push(Instr::Write(f.pattern(value)));
+    }
+
+    pub fn clear_field(&mut self, f: Field) {
+        self.instrs.push(Instr::ClearColumns {
+            base: f.base,
+            width: f.width,
+        });
+    }
+
+    pub fn len(&self) -> usize {
+        self.instrs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.instrs.is_empty()
+    }
+
+    /// Static cycle cost of the whole program.
+    pub fn cycle_estimate(&self) -> u64 {
+        self.instrs.iter().map(|i| i.cycles()).sum()
+    }
+
+    /// Number of compare+write passes (microcode cost metric).
+    pub fn n_passes(&self) -> usize {
+        self.instrs
+            .iter()
+            .filter(|i| matches!(i, Instr::Compare(_)))
+            .count()
+    }
+
+    pub fn extend(&mut self, other: Program) {
+        self.instrs.extend(other.instrs);
+    }
+
+    /// Highest bit-column referenced (for width validation).
+    pub fn max_column(&self) -> Option<u16> {
+        self.instrs
+            .iter()
+            .flat_map(|i| match i {
+                Instr::Compare(p) | Instr::Write(p) => {
+                    p.iter().map(|&(c, _)| c).max()
+                }
+                Instr::Read { base, width } => Some(base + width - 1),
+                Instr::ReduceField { col } => Some(*col),
+                Instr::ClearColumns { base, width } => Some(base + width - 1),
+                _ => None,
+            })
+            .max()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cycle_costs_match_design_doc() {
+        assert_eq!(Instr::Compare(vec![]).cycles(), 1);
+        assert_eq!(Instr::Write(vec![]).cycles(), 2);
+        assert_eq!(Instr::Read { base: 0, width: 8 }.cycles(), 1);
+        assert_eq!(Instr::ShiftTagsUp(5).cycles(), 5);
+    }
+
+    #[test]
+    fn program_accounting() {
+        let mut p = Program::new();
+        let f = Field::new(0, 8);
+        p.compare_field(f, 0xAA);
+        p.write_field(f, 0x55);
+        p.push(Instr::ReduceCount);
+        assert_eq!(p.len(), 3);
+        assert_eq!(p.n_passes(), 1);
+        assert_eq!(p.cycle_estimate(), 1 + 2 + 1);
+        assert_eq!(p.max_column(), Some(7));
+    }
+
+    #[test]
+    fn pass_appends_compare_then_write() {
+        let mut p = Program::new();
+        p.pass(vec![(0, true)], vec![(1, false)]);
+        assert!(matches!(p.instrs[0], Instr::Compare(_)));
+        assert!(matches!(p.instrs[1], Instr::Write(_)));
+    }
+}

@@ -1,0 +1,23 @@
+//! # PRINS — Resistive CAM Processing in Storage
+//!
+//! Full-system reproduction of Yavits, Kaplan & Ginosar, *"PRINS:
+//! Resistive CAM Processing in Storage"* (2018): an in-data
+//! processing-in-storage architecture in which the storage array is a
+//! resistive CAM and every row is a bit-serial associative processing
+//! unit.
+//!
+//! See `DESIGN.md` for the architecture and `EXPERIMENTS.md` for the
+//! paper-vs-measured results.
+
+pub mod algorithms;
+pub mod cli;
+pub mod controller;
+pub mod host;
+pub mod isa;
+pub mod micro;
+pub mod metrics;
+pub mod model;
+pub mod rcam;
+pub mod runtime;
+pub mod storage;
+pub mod workloads;

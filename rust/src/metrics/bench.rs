@@ -1,0 +1,63 @@
+//! Minimal self-timing harness for the `harness = false` benches
+//! (criterion is not in the vendored crate set): warmup + N timed
+//! iterations, reporting min/mean.
+
+use std::time::{Duration, Instant};
+
+pub struct BenchTimer {
+    pub name: String,
+    pub samples: Vec<Duration>,
+}
+
+impl BenchTimer {
+    pub fn mean(&self) -> Duration {
+        if self.samples.is_empty() {
+            return Duration::ZERO;
+        }
+        self.samples.iter().sum::<Duration>() / self.samples.len() as u32
+    }
+
+    pub fn min(&self) -> Duration {
+        self.samples.iter().min().copied().unwrap_or(Duration::ZERO)
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} min {:>12?}  mean {:>12?}  ({} samples)",
+            self.name,
+            self.min(),
+            self.mean(),
+            self.samples.len()
+        )
+    }
+}
+
+/// Time `f` with `warmup` unmeasured runs and `iters` measured runs.
+pub fn time_it<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchTimer {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed());
+    }
+    BenchTimer {
+        name: name.to_string(),
+        samples,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_collects_samples() {
+        let t = time_it("noop", 1, 5, || 1 + 1);
+        assert_eq!(t.samples.len(), 5);
+        assert!(t.min() <= t.mean());
+        assert!(t.report().contains("noop"));
+    }
+}

@@ -1,0 +1,9 @@
+//! Reporting utilities: table rendering for the paper-figure harnesses and
+//! a tiny self-timing bench helper (the vendored crate set has no
+//! criterion; benches are `harness = false` binaries built on this).
+
+pub mod bench;
+pub mod table;
+
+pub use bench::{time_it, BenchTimer};
+pub use table::Table;

@@ -1,0 +1,136 @@
+//! Fixed-width text tables — every figure harness prints the paper's
+//! rows/series through this, so EXPERIMENTS.md and bench output agree.
+
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>width$}", c, width = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// CSV (for plotting outside).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&self.headers.join(","));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&r.join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format a speedup/ratio compactly (paper figures are log-scale).
+pub fn fmt_ratio(x: f64) -> String {
+    if x >= 100.0 {
+        format!("{x:.0}")
+    } else if x >= 1.0 {
+        format!("{x:.1}")
+    } else {
+        format!("{x:.3}")
+    }
+}
+
+/// Format engineering quantities.
+pub fn fmt_si(x: f64, unit: &str) -> String {
+    let (v, p) = if x >= 1e12 {
+        (x / 1e12, "T")
+    } else if x >= 1e9 {
+        (x / 1e9, "G")
+    } else if x >= 1e6 {
+        (x / 1e6, "M")
+    } else if x >= 1e3 {
+        (x / 1e3, "k")
+    } else if x >= 1.0 || x == 0.0 {
+        (x, "")
+    } else if x >= 1e-3 {
+        (x * 1e3, "m")
+    } else if x >= 1e-6 {
+        (x * 1e6, "µ")
+    } else {
+        (x * 1e9, "n")
+    };
+    format!("{v:.2} {p}{unit}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_aligns_columns() {
+        let mut t = Table::new("demo", &["name", "value"]);
+        t.row(vec!["a".into(), "1".into()]);
+        t.row(vec!["long-name".into(), "12345".into()]);
+        let s = t.render();
+        assert!(s.contains("== demo =="));
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines[1].len(), lines[3].len());
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        assert_eq!(t.to_csv(), "a,b\n1,2\n");
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_ratio(1234.5), "1234");  // {:.0} uses round-half-even
+        assert_eq!(fmt_ratio(3.25), "3.2");
+        assert_eq!(fmt_ratio(0.5), "0.500");
+        assert_eq!(fmt_si(2.5e9, "FLOPS"), "2.50 GFLOPS");
+        assert_eq!(fmt_si(0.002, "s"), "2.00 ms");
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn row_width_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+}

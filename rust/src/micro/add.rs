@@ -1,0 +1,298 @@
+//! Bit-serial, word-parallel addition microcode (paper §4, Fig. 6).
+//!
+//! Two families:
+//!  * [`vec_add`] — the paper-faithful form: S = A + B into a separate sum
+//!    field, eight compare+write passes per bit ("Overall, eight steps of
+//!    one compare and one write operation are performed to complete a
+//!    single-bit addition", §4).
+//!  * [`add_inplace`]/[`add_const`] — the optimized in-place form used by
+//!    the higher-level generators (multiply, float): only truth-table
+//!    entries that change state are emitted (4 passes per bit, 2 per pure
+//!    carry-ripple bit). The ablation bench `ablation_microcode`
+//!    quantifies the difference.
+//!
+//! All tables go through [`TruthTable::safe_order`], so the carry-hazard
+//! ordering is machine-checked rather than hand-proved.
+
+use super::table::TruthTable;
+use crate::isa::{Field, Instr, Pat, Program};
+
+/// Where an addend bit comes from: a bit-column of the row, or a constant
+/// folded into the truth table.
+#[derive(Clone, Copy, Debug)]
+pub enum BitSrc {
+    Col(u16),
+    Const(bool),
+}
+
+/// Emit one in-place single-bit add: `acc_col += src (+ carry)`, under an
+/// optional conjunction of condition bits prepended to every compare.
+fn add_bit_inplace(
+    prog: &mut Program,
+    acc_col: u16,
+    src: BitSrc,
+    c_col: u16,
+    cond: &Pat,
+    skip_stationary: bool,
+) {
+    let mut ccols: Vec<u16> = cond.iter().map(|&(c, _)| c).collect();
+    ccols.push(c_col);
+    ccols.push(acc_col);
+    let condvals: Vec<bool> = cond.iter().map(|&(_, v)| v).collect();
+    let ncond = condvals.len();
+    match src {
+        BitSrc::Col(b_col) => {
+            debug_assert!(b_col != acc_col && b_col != c_col);
+            ccols.push(b_col);
+            let t = TruthTable::from_fn(ccols, vec![c_col, acc_col], |i| {
+                if i[..ncond] != condvals[..] {
+                    // condition not met: no state change
+                    return vec![i[ncond], i[ncond + 1]];
+                }
+                let sum =
+                    i[ncond] as u8 + i[ncond + 1] as u8 + i[ncond + 2] as u8;
+                vec![sum >= 2, sum % 2 == 1]
+            });
+            t.emit(prog, skip_stationary);
+        }
+        BitSrc::Const(bv) => {
+            let t = TruthTable::from_fn(ccols, vec![c_col, acc_col], |i| {
+                if i[..ncond] != condvals[..] {
+                    return vec![i[ncond], i[ncond + 1]];
+                }
+                let sum = i[ncond] as u8 + i[ncond + 1] as u8 + bv as u8;
+                vec![sum >= 2, sum % 2 == 1]
+            });
+            t.emit(prog, skip_stationary);
+        }
+    }
+}
+
+/// In-place add: `acc += src`, LSB first, carry through `c_col`.
+///
+/// `src(j)` supplies the addend bit for position j; positions past
+/// `src_bits` ripple the carry only. The carry column is cleared first and
+/// the result is `acc (mod 2^acc.width)` (the final carry is dropped, as
+/// in any fixed-width register).
+pub fn add_inplace_src(
+    prog: &mut Program,
+    acc: Field,
+    src: impl Fn(u16) -> BitSrc,
+    src_bits: u16,
+    c_col: u16,
+    cond: &Pat,
+    skip_stationary: bool,
+) {
+    assert!(src_bits <= acc.width);
+    prog.push(Instr::ClearColumns { base: c_col, width: 1 });
+    for j in 0..acc.width {
+        let s = if j < src_bits { src(j) } else { BitSrc::Const(false) };
+        add_bit_inplace(prog, acc.col(j), s, c_col, cond, skip_stationary);
+    }
+}
+
+/// `acc += b` in place (optimized form).
+pub fn add_inplace(prog: &mut Program, acc: Field, b: Field, c_col: u16) {
+    add_inplace_cond(prog, acc, b, c_col, &vec![]);
+}
+
+/// `acc += b` in place, only in rows where every `cond` bit matches.
+pub fn add_inplace_cond(prog: &mut Program, acc: Field, b: Field, c_col: u16, cond: &Pat) {
+    assert!(!acc.overlaps(&b), "in-place add operands overlap");
+    add_inplace_src(
+        prog,
+        acc,
+        |j| {
+            let col = b.col(j);
+            // If the addend bit is also a condition bit, its value is known.
+            match cond.iter().find(|&&(c, _)| c == col) {
+                Some(&(_, v)) => BitSrc::Const(v),
+                None => BitSrc::Col(col),
+            }
+        },
+        b.width.min(acc.width),
+        c_col,
+        cond,
+        true,
+    );
+}
+
+/// `f += k` in place (constant addend folded into the tables).
+pub fn add_const(prog: &mut Program, f: Field, k: u64, c_col: u16) {
+    add_inplace_src(
+        prog,
+        f,
+        |j| BitSrc::Const((k >> j) & 1 == 1),
+        f.width,
+        c_col,
+        &vec![],
+        true,
+    );
+}
+
+/// Paper-faithful vector add: `s = a + b`, eight passes per bit.
+///
+/// `a`, `b`, `s` must be mutually disjoint and of equal width; if
+/// `s.width == a.width + 1` the final carry becomes the top sum bit.
+/// The carry column is cleared first.
+pub fn vec_add(prog: &mut Program, a: Field, b: Field, s: Field, c_col: u16) {
+    assert_eq!(a.width, b.width);
+    assert!(s.width == a.width || s.width == a.width + 1);
+    assert!(!a.overlaps(&s) && !b.overlaps(&s) && !a.overlaps(&b));
+    prog.push(Instr::ClearColumns { base: c_col, width: 1 });
+    for j in 0..a.width {
+        let t = TruthTable::from_fn(
+            vec![c_col, a.col(j), b.col(j)],
+            vec![c_col, s.col(j)],
+            |i| {
+                let sum = i[0] as u8 + i[1] as u8 + i[2] as u8;
+                vec![sum >= 2, sum % 2 == 1]
+            },
+        );
+        t.emit(prog, false); // fidelity mode: all 8 entries
+    }
+    if s.width == a.width + 1 {
+        // copy the final carry into the top sum bit (2 passes)
+        let t = TruthTable::from_fn(vec![c_col], vec![s.col(a.width)], |i| vec![i[0]]);
+        t.emit(prog, false);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::controller::Controller;
+    use crate::rcam::PrinsArray;
+
+    fn ctl(rows: usize, width: usize) -> Controller {
+        Controller::new(PrinsArray::single(rows, width))
+    }
+
+    fn splitmix(seed: &mut u64) -> u64 {
+        *seed = seed.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = *seed;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    #[test]
+    fn vec_add_is_parallel_add() {
+        let (a, b, s) = (Field::new(0, 8), Field::new(8, 8), Field::new(16, 9));
+        let mut prog = Program::new();
+        vec_add(&mut prog, a, b, s, 30);
+        assert_eq!(prog.n_passes(), 8 * 8 + 2); // paper count + carry-out copy
+        let mut c = ctl(64, 32);
+        let mut seed = 1u64;
+        let mut expect = Vec::new();
+        for r in 0..64 {
+            let av = splitmix(&mut seed) & 0xFF;
+            let bv = splitmix(&mut seed) & 0xFF;
+            c.array.load_row_bits(r, 0, 8, av);
+            c.array.load_row_bits(r, 8, 8, bv);
+            expect.push(av + bv);
+        }
+        c.execute(&prog);
+        for (r, e) in expect.iter().enumerate() {
+            assert_eq!(c.array.fetch_row_bits(r, 16, 9), *e, "row {r}");
+        }
+    }
+
+    #[test]
+    fn add_inplace_wraps_mod_width() {
+        let (acc, b) = (Field::new(0, 8), Field::new(8, 8));
+        let mut prog = Program::new();
+        add_inplace(&mut prog, acc, b, 20);
+        let mut c = ctl(32, 24);
+        let mut seed = 7u64;
+        let mut expect = Vec::new();
+        for r in 0..32 {
+            let av = splitmix(&mut seed) & 0xFF;
+            let bv = splitmix(&mut seed) & 0xFF;
+            c.array.load_row_bits(r, 0, 8, av);
+            c.array.load_row_bits(r, 8, 8, bv);
+            expect.push((av + bv) & 0xFF);
+        }
+        c.execute(&prog);
+        for (r, e) in expect.iter().enumerate() {
+            assert_eq!(c.array.fetch_row_bits(r, 0, 8), *e, "row {r}");
+        }
+    }
+
+    #[test]
+    fn add_inplace_is_cheaper_than_paper_form() {
+        let (a, b, s) = (Field::new(0, 16), Field::new(16, 16), Field::new(32, 16));
+        let mut p8 = Program::new();
+        vec_add(&mut p8, a, b, s, 60);
+        let mut p4 = Program::new();
+        add_inplace(&mut p4, a, b, 60);
+        assert_eq!(p4.n_passes(), 4 * 16);
+        assert!(p4.cycle_estimate() < p8.cycle_estimate());
+    }
+
+    #[test]
+    fn add_inplace_wider_acc_ripples_carry() {
+        let (acc, b) = (Field::new(0, 12), Field::new(16, 8));
+        let mut prog = Program::new();
+        add_inplace(&mut prog, acc, b, 30);
+        let mut c = ctl(16, 32);
+        c.array.load_row_bits(0, 0, 12, 0xFF0); // acc
+        c.array.load_row_bits(0, 16, 8, 0x20); // b
+        c.execute(&prog);
+        assert_eq!(c.array.fetch_row_bits(0, 0, 12), 0x010); // 0xFF0+0x20 mod 2^12
+    }
+
+    #[test]
+    fn add_const_works() {
+        let f = Field::new(4, 10);
+        let mut prog = Program::new();
+        add_const(&mut prog, f, 0x17F, 20);
+        let mut c = ctl(16, 24);
+        let vals = [0u64, 1, 0x280, 0x3FF];
+        for (r, v) in vals.iter().enumerate() {
+            c.array.load_row_bits(r, 4, 10, *v);
+        }
+        c.execute(&prog);
+        for (r, v) in vals.iter().enumerate() {
+            assert_eq!(c.array.fetch_row_bits(r, 4, 10), (v + 0x17F) & 0x3FF);
+        }
+    }
+
+    #[test]
+    fn conditional_add_only_hits_matching_rows() {
+        let (acc, b) = (Field::new(0, 8), Field::new(8, 8));
+        let flag = 19u16;
+        let mut prog = Program::new();
+        add_inplace_cond(&mut prog, acc, b, 22, &vec![(flag, true)]);
+        let mut c = ctl(8, 24);
+        for r in 0..8 {
+            c.array.load_row_bits(r, 0, 8, 10 * r as u64);
+            c.array.load_row_bits(r, 8, 8, 5);
+            c.array.load_row_bits(r, flag as usize, 1, (r % 2) as u64);
+        }
+        c.execute(&prog);
+        for r in 0..8 {
+            let e = if r % 2 == 1 { 10 * r as u64 + 5 } else { 10 * r as u64 };
+            assert_eq!(c.array.fetch_row_bits(r, 0, 8), e, "row {r}");
+        }
+    }
+
+    #[test]
+    fn conditional_add_with_cond_inside_addend() {
+        // cond bit IS one of the addend bits (the multiply/square case):
+        // acc += b only where b bit1 == 1.
+        let (acc, b) = (Field::new(0, 4), Field::new(8, 4));
+        let mut prog = Program::new();
+        add_inplace_cond(&mut prog, acc, b, 20, &vec![(b.col(1), true)]);
+        let mut c = ctl(4, 24);
+        for (r, bv) in [0b0000u64, 0b0010, 0b0111, 0b1101].iter().enumerate() {
+            c.array.load_row_bits(r, 0, 4, 3);
+            c.array.load_row_bits(r, 8, 4, *bv);
+        }
+        c.execute(&prog);
+        for (r, bv) in [0b0000u64, 0b0010, 0b0111, 0b1101].iter().enumerate() {
+            let e = if (bv >> 1) & 1 == 1 { (3 + bv) & 0xF } else { 3 };
+            assert_eq!(c.array.fetch_row_bits(r, 0, 4), e, "row {r}");
+        }
+    }
+}

@@ -1,0 +1,199 @@
+//! Comparison microcode: content-addressed equality (the CAM's native
+//! single-pass superpower) plus bit-serial magnitude comparison.
+
+use super::table::TruthTable;
+use crate::isa::{Field, Instr, Program};
+
+/// Tag all rows whose field equals `value` — one compare instruction.
+/// This is the primitive behind histogram binning (Algorithm 3) and the
+/// SpMV broadcast (Algorithm 4).
+pub fn mark_eq(prog: &mut Program, f: Field, value: u64) {
+    prog.compare_field(f, value);
+}
+
+/// Set `flag_col` in every row whose unsigned field is strictly less than
+/// the constant `k`. O(width) passes: one pass per set bit of `k`
+/// (standard CAM prefix trick: f < k iff for some bit i with k_i = 1,
+/// f agrees with k above i and f_i = 0).
+pub fn flag_lt_const(prog: &mut Program, f: Field, k: u64, flag_col: u16) {
+    prog.push(Instr::ClearColumns { base: flag_col, width: 1 });
+    for i in (0..f.width).rev() {
+        if (k >> i) & 1 == 0 {
+            continue;
+        }
+        let mut cpat = vec![(f.col(i), false)];
+        for j in (i + 1)..f.width {
+            cpat.push((f.col(j), (k >> j) & 1 == 1));
+        }
+        prog.pass(cpat, vec![(flag_col, true)]);
+    }
+}
+
+/// Set `flag_col` where the field is strictly greater than `k` (dual trick).
+pub fn flag_gt_const(prog: &mut Program, f: Field, k: u64, flag_col: u16) {
+    prog.push(Instr::ClearColumns { base: flag_col, width: 1 });
+    for i in (0..f.width).rev() {
+        if (k >> i) & 1 == 1 {
+            continue;
+        }
+        let mut cpat = vec![(f.col(i), true)];
+        for j in (i + 1)..f.width {
+            cpat.push((f.col(j), (k >> j) & 1 == 1));
+        }
+        prog.pass(cpat, vec![(flag_col, true)]);
+    }
+}
+
+/// Lexicographic field-vs-field comparison over explicit column lists
+/// (MSB first): after execution, `lt_col` = (a < b), `eq_col` = (a == b),
+/// per row. 2 passes per bit plus initialization. Used by float alignment
+/// (compare exponents, then mantissas) — pass concatenated col lists.
+pub fn field_cmp_cols(
+    prog: &mut Program,
+    a_cols_msb: &[u16],
+    b_cols_msb: &[u16],
+    lt_col: u16,
+    eq_col: u16,
+) {
+    assert_eq!(a_cols_msb.len(), b_cols_msb.len());
+    // init: lt = 0 everywhere, eq = 1 everywhere
+    prog.push(Instr::ClearColumns { base: lt_col, width: 1 });
+    prog.push(Instr::SetTagsAll);
+    prog.push(Instr::Write(vec![(eq_col, true)]));
+    for (&ac, &bc) in a_cols_msb.iter().zip(b_cols_msb) {
+        // while still equal, the first differing bit decides
+        let mut t = TruthTable::from_fn(
+            vec![eq_col, ac, bc],
+            vec![eq_col, lt_col],
+            |i| {
+                if !i[0] {
+                    return vec![false, false]; // never reached (retained out)
+                }
+                match (i[1], i[2]) {
+                    (false, true) => vec![false, true], // a<b decided
+                    (true, false) => vec![false, false], // a>b decided
+                    _ => vec![true, false],              // still equal
+                }
+            },
+        );
+        t.retain(|e| e.input[0]); // only eq==1 rows participate
+        t.emit(prog, true);
+    }
+}
+
+/// Convenience: compare two equal-width fields.
+pub fn field_cmp(prog: &mut Program, a: Field, b: Field, lt_col: u16, eq_col: u16) {
+    assert_eq!(a.width, b.width);
+    let ac: Vec<u16> = a.cols_msb_first().collect();
+    let bc: Vec<u16> = b.cols_msb_first().collect();
+    field_cmp_cols(prog, &ac, &bc, lt_col, eq_col);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::controller::Controller;
+    use crate::rcam::PrinsArray;
+
+    fn ctl(rows: usize, width: usize) -> Controller {
+        Controller::new(PrinsArray::single(rows, width))
+    }
+
+    #[test]
+    fn mark_eq_is_single_compare() {
+        let f = Field::new(0, 8);
+        let mut p = Program::new();
+        mark_eq(&mut p, f, 0x5A);
+        assert_eq!(p.len(), 1);
+        let mut c = ctl(16, 8);
+        c.array.load_row_bits(3, 0, 8, 0x5A);
+        c.array.load_row_bits(9, 0, 8, 0x5A);
+        c.array.load_row_bits(5, 0, 8, 0x5B);
+        c.execute(&p);
+        assert_eq!(
+            c.array.tags_snapshot().iter_ones().collect::<Vec<_>>(),
+            vec![3, 9]
+        );
+    }
+
+    #[test]
+    fn flag_lt_gt_const_exhaustive() {
+        // all 64 values vs several constants, exhaustively
+        for k in [0u64, 1, 17, 31, 32, 63] {
+            let f = Field::new(0, 6);
+            let mut plt = Program::new();
+            flag_lt_const(&mut plt, f, k, 8);
+            let mut pgt = Program::new();
+            flag_gt_const(&mut pgt, f, k, 9);
+            let mut c = ctl(64, 10);
+            for v in 0..64u64 {
+                c.array.load_row_bits(v as usize, 0, 6, v);
+            }
+            c.execute(&plt);
+            c.execute(&pgt);
+            for v in 0..64u64 {
+                assert_eq!(
+                    c.array.fetch_row_bits(v as usize, 8, 1) == 1,
+                    v < k,
+                    "lt: v={v} k={k}"
+                );
+                assert_eq!(
+                    c.array.fetch_row_bits(v as usize, 9, 1) == 1,
+                    v > k,
+                    "gt: v={v} k={k}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn field_cmp_exhaustive_4bit() {
+        let (a, b) = (Field::new(0, 4), Field::new(4, 4));
+        let mut p = Program::new();
+        field_cmp(&mut p, a, b, 10, 11);
+        let mut c = ctl(256, 12);
+        for av in 0..16u64 {
+            for bv in 0..16u64 {
+                let r = (av * 16 + bv) as usize;
+                c.array.load_row_bits(r, 0, 4, av);
+                c.array.load_row_bits(r, 4, 4, bv);
+            }
+        }
+        c.execute(&p);
+        for av in 0..16u64 {
+            for bv in 0..16u64 {
+                let r = (av * 16 + bv) as usize;
+                assert_eq!(c.array.fetch_row_bits(r, 10, 1) == 1, av < bv, "{av} vs {bv}");
+                assert_eq!(c.array.fetch_row_bits(r, 11, 1) == 1, av == bv, "{av} vs {bv}");
+            }
+        }
+    }
+
+    #[test]
+    fn field_cmp_cols_concatenated_exponent_mantissa() {
+        // lexicographic (hi, lo) comparison across two separate fields
+        let (ahi, alo) = (Field::new(0, 2), Field::new(2, 2));
+        let (bhi, blo) = (Field::new(4, 2), Field::new(6, 2));
+        let mut p = Program::new();
+        let ac: Vec<u16> = ahi.cols_msb_first().chain(alo.cols_msb_first()).collect();
+        let bc: Vec<u16> = bhi.cols_msb_first().chain(blo.cols_msb_first()).collect();
+        field_cmp_cols(&mut p, &ac, &bc, 12, 13);
+        let mut c = ctl(256, 14);
+        for av in 0..16u64 {
+            for bv in 0..16u64 {
+                let r = (av * 16 + bv) as usize;
+                c.array.load_row_bits(r, 0, 2, av >> 2);
+                c.array.load_row_bits(r, 2, 2, av & 3);
+                c.array.load_row_bits(r, 4, 2, bv >> 2);
+                c.array.load_row_bits(r, 6, 2, bv & 3);
+            }
+        }
+        c.execute(&p);
+        for av in 0..16u64 {
+            for bv in 0..16u64 {
+                let r = (av * 16 + bv) as usize;
+                assert_eq!(c.array.fetch_row_bits(r, 12, 1) == 1, av < bv);
+            }
+        }
+    }
+}

@@ -1,0 +1,28 @@
+//! Microcode generators: compile arithmetic to associative compare+write
+//! passes (paper §4: word-parallel, bit-serial arithmetic with
+//! truth-table execution).
+//!
+//! Every generator routes through [`table::TruthTable::safe_order`], which
+//! machine-checks the classic associative-processing write-ordering
+//! hazard instead of relying on hand-proved pass orders.
+
+pub mod add;
+pub mod cmp;
+pub mod float;
+pub mod mul;
+pub mod reduce;
+pub mod shift;
+pub mod sub;
+pub mod table;
+
+pub use add::{add_const, add_inplace, add_inplace_cond, vec_add, BitSrc};
+pub use cmp::{field_cmp, field_cmp_cols, flag_gt_const, flag_lt_const, mark_eq};
+pub use float::{fp_add, fp_mul, fp_sub, FloatField, FpScratch, FP_MUL_SCRATCH_BITS, FP_SCRATCH_BITS, UNPACKED_BITS};
+pub use mul::{mac, mul, square};
+pub use reduce::{combine_field_sum, combine_field_sum_signed, emit_field_sum};
+pub use shift::{
+    copy_field, copy_field_cond, leading_zero_count, set_field_cond,
+    shift_left_inplace, shift_right_inplace, var_shift_left, var_shift_right,
+};
+pub use sub::{abs_inplace, neg_inplace, neg_inplace_cond, sub_const, sub_inplace, sub_inplace_cond};
+pub use table::TruthTable;

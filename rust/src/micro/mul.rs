@@ -1,0 +1,154 @@
+//! Bit-serial multiplication microcode: shift-and-conditional-add
+//! (paper §4: "Fixed point multiplication and division in PRINS require
+//! O(m²) cycles").
+//!
+//! `p += a << i` is executed for every multiplier bit `b_i`, as an
+//! in-place conditional add with the condition `b_i == 1` folded into the
+//! compare patterns — rows whose multiplier bit is 0 simply never match,
+//! so the add is skipped *per row*, which is the associative analogue of
+//! a multiplexer.
+
+use super::add::add_inplace_cond;
+use crate::isa::{Field, Instr, Program};
+
+/// `p = a * b` (unsigned). `p` must be disjoint from `a` and `b` and at
+/// least `a.width + b.width` wide; it is cleared first.
+pub fn mul(prog: &mut Program, a: Field, b: Field, p: Field, c_col: u16) {
+    assert!(p.width >= a.width + b.width, "product field too narrow");
+    assert!(!p.overlaps(&a) && !p.overlaps(&b));
+    prog.push(Instr::ClearColumns { base: p.base, width: p.width });
+    for i in 0..b.width {
+        // p[i..] += a, where b_i == 1
+        let acc = p.slice(i, p.width - i);
+        add_inplace_cond(prog, acc, a, c_col, &vec![(b.col(i), true)]);
+    }
+}
+
+/// `p = a * a` (unsigned square). Works even though the condition bit is
+/// one of the addend bits: `add_inplace_cond` folds coinciding columns to
+/// constants.
+pub fn square(prog: &mut Program, a: Field, p: Field, c_col: u16) {
+    assert!(p.width >= 2 * a.width, "square field too narrow");
+    assert!(!p.overlaps(&a));
+    prog.push(Instr::ClearColumns { base: p.base, width: p.width });
+    for i in 0..a.width {
+        let acc = p.slice(i, p.width - i);
+        add_inplace_cond(prog, acc, a, c_col, &vec![(a.col(i), true)]);
+    }
+}
+
+/// Multiply-accumulate: `p += a * b` without clearing `p` (used by dot
+/// product; p must be wide enough to absorb the accumulation).
+pub fn mac(prog: &mut Program, a: Field, b: Field, p: Field, c_col: u16) {
+    assert!(p.width >= a.width + b.width);
+    assert!(!p.overlaps(&a) && !p.overlaps(&b));
+    for i in 0..b.width {
+        let acc = p.slice(i, p.width - i);
+        add_inplace_cond(prog, acc, a, c_col, &vec![(b.col(i), true)]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::controller::Controller;
+    use crate::rcam::PrinsArray;
+
+    fn ctl(rows: usize, width: usize) -> Controller {
+        Controller::new(PrinsArray::single(rows, width))
+    }
+
+    fn splitmix(seed: &mut u64) -> u64 {
+        *seed = seed.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = *seed;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    #[test]
+    fn mul_8x8() {
+        let (a, b, p) = (Field::new(0, 8), Field::new(8, 8), Field::new(16, 16));
+        let mut prog = Program::new();
+        mul(&mut prog, a, b, p, 40);
+        let mut c = ctl(64, 48);
+        let mut seed = 3u64;
+        let mut cases = Vec::new();
+        for r in 0..64 {
+            let av = splitmix(&mut seed) & 0xFF;
+            let bv = splitmix(&mut seed) & 0xFF;
+            c.array.load_row_bits(r, 0, 8, av);
+            c.array.load_row_bits(r, 8, 8, bv);
+            cases.push((av, bv));
+        }
+        c.execute(&prog);
+        for (r, (av, bv)) in cases.iter().enumerate() {
+            assert_eq!(c.array.fetch_row_bits(r, 16, 16), av * bv, "row {r}");
+        }
+    }
+
+    #[test]
+    fn mul_edge_values() {
+        let (a, b, p) = (Field::new(0, 8), Field::new(8, 8), Field::new(16, 16));
+        let mut prog = Program::new();
+        mul(&mut prog, a, b, p, 40);
+        let mut c = ctl(8, 48);
+        let cases = [(0u64, 0u64), (0, 255), (255, 0), (255, 255), (1, 171), (128, 2), (3, 85), (16, 16)];
+        for (r, (av, bv)) in cases.iter().enumerate() {
+            c.array.load_row_bits(r, 0, 8, *av);
+            c.array.load_row_bits(r, 8, 8, *bv);
+        }
+        c.execute(&prog);
+        for (r, (av, bv)) in cases.iter().enumerate() {
+            assert_eq!(c.array.fetch_row_bits(r, 16, 16), av * bv);
+        }
+    }
+
+    #[test]
+    fn square_matches_mul_by_self() {
+        let (a, p) = (Field::new(0, 8), Field::new(8, 16));
+        let mut prog = Program::new();
+        square(&mut prog, a, p, 30);
+        let mut c = ctl(32, 32);
+        for r in 0..32 {
+            c.array.load_row_bits(r, 0, 8, (r * 8 + 3) as u64 & 0xFF);
+        }
+        c.execute(&prog);
+        for r in 0..32 {
+            let v = (r * 8 + 3) as u64 & 0xFF;
+            assert_eq!(c.array.fetch_row_bits(r, 8, 16), v * v, "row {r}");
+        }
+    }
+
+    #[test]
+    fn mac_accumulates() {
+        let (a, b, p) = (Field::new(0, 4), Field::new(4, 4), Field::new(8, 12));
+        let mut prog = Program::new();
+        prog.push(Instr::ClearColumns { base: 8, width: 12 });
+        mac(&mut prog, a, b, p, 24);
+        mac(&mut prog, a, b, p, 24); // p = 2ab
+        let mut c = ctl(16, 32);
+        for r in 0..16 {
+            c.array.load_row_bits(r, 0, 4, r as u64);
+            c.array.load_row_bits(r, 4, 4, 15 - r as u64);
+        }
+        c.execute(&prog);
+        for r in 0..16 {
+            let e = 2 * (r as u64) * (15 - r as u64);
+            assert_eq!(c.array.fetch_row_bits(r, 8, 12), e, "row {r}");
+        }
+    }
+
+    #[test]
+    fn mul_cost_is_quadratic() {
+        let mk = |m: u16| {
+            let (a, b, p) = (Field::new(0, m), Field::new(m, m), Field::new(2 * m, 2 * m));
+            let mut prog = Program::new();
+            mul(&mut prog, a, b, p, 200);
+            prog.n_passes() as f64
+        };
+        let (p8, p16) = (mk(8), mk(16));
+        let ratio = p16 / p8;
+        assert!(ratio > 3.0 && ratio < 5.0, "O(m^2) scaling, got ratio {ratio}");
+    }
+}

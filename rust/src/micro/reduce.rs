@@ -1,0 +1,106 @@
+//! Field reduction via the tag-counter/reduction tree (paper §3.1: "a
+//! reduction (adding) tree, enabling logarithmic summation of tag bits...
+//! useful whenever a vector needs to be reduced to a scalar").
+//!
+//! A multi-bit field is summed bit-serially: for each bit-plane i of the
+//! field, the tree counts the tagged rows whose bit i is set; the
+//! controller accumulates Σ count_i · 2^i in its data buffer — the
+//! "baseline processing, such as normalization of the reduction tree
+//! results" the paper assigns to the controller (§3.3).
+
+use crate::isa::{Field, Instr, Program};
+
+/// Emit the reduction of `f` over the currently tagged rows: one
+/// `ReduceField` per bit-plane. The caller combines the buffer values
+/// with [`combine_field_sum`].
+pub fn emit_field_sum(prog: &mut Program, f: Field) {
+    for c in f.cols() {
+        prog.push(Instr::ReduceField { col: c });
+    }
+}
+
+/// Combine the per-plane counts produced by [`emit_field_sum`] into the
+/// field sum (counts[i] = number of tagged rows with bit i set).
+pub fn combine_field_sum(counts: &[u64]) -> u128 {
+    counts
+        .iter()
+        .enumerate()
+        .map(|(i, &c)| (c as u128) << i)
+        .sum()
+}
+
+/// Two's-complement signed combination: the MSB plane carries weight
+/// -2^(w-1).
+pub fn combine_field_sum_signed(counts: &[u64]) -> i128 {
+    let w = counts.len();
+    assert!(w >= 1);
+    let mut s: i128 = 0;
+    for (i, &c) in counts.iter().enumerate() {
+        let weight = if i == w - 1 {
+            -((1i128) << i)
+        } else {
+            1i128 << i
+        };
+        s += weight * c as i128;
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::controller::Controller;
+    use crate::isa::Field;
+    use crate::rcam::PrinsArray;
+
+    #[test]
+    fn field_sum_over_tagged_rows() {
+        let f = Field::new(0, 8);
+        let mut c = Controller::new(PrinsArray::single(64, 10));
+        let mut expect = 0u128;
+        for r in 0..64 {
+            let v = (r * 23 + 7) as u64 & 0xFF;
+            c.array.load_row_bits(r, 0, 8, v);
+            let sel = r % 3 == 0;
+            c.array.load_row_bits(r, 9, 1, sel as u64);
+            if sel {
+                expect += v as u128;
+            }
+        }
+        let mut p = Program::new();
+        p.push(Instr::Compare(vec![(9, true)]));
+        emit_field_sum(&mut p, f);
+        let counts = c.execute_collect(&p);
+        assert_eq!(combine_field_sum(&counts), expect);
+    }
+
+    #[test]
+    fn signed_combination() {
+        let f = Field::new(0, 8);
+        let mut c = Controller::new(PrinsArray::single(8, 8));
+        let vals: [i64; 5] = [-100, -1, 0, 77, 127];
+        for (r, v) in vals.iter().enumerate() {
+            c.array.load_row_bits(r, 0, 8, (*v as u64) & 0xFF);
+        }
+        let mut p = Program::new();
+        p.push(Instr::SetTagsAll);
+        emit_field_sum(&mut p, f);
+        let counts = c.execute_collect(&p);
+        // rows 5..8 are zero-filled and contribute 0
+        assert_eq!(
+            combine_field_sum_signed(&counts),
+            vals.iter().map(|&v| v as i128).sum::<i128>()
+        );
+    }
+
+    #[test]
+    fn empty_tags_sum_to_zero() {
+        let f = Field::new(0, 4);
+        let mut c = Controller::new(PrinsArray::single(16, 8));
+        let mut p = Program::new();
+        p.compare_field(Field::new(4, 4), 0xF); // matches nothing
+        emit_field_sum(&mut p, f);
+        let counts = c.execute_collect(&p);
+        assert_eq!(combine_field_sum(&counts), 0);
+    }
+}

@@ -1,0 +1,270 @@
+//! Field copy and shift microcode.
+//!
+//! Bit-column copies are 2 passes each (compare src=1 → write dst=1;
+//! compare src=0 → write dst=0). In-place shifts order the per-bit copies
+//! so that no column is read after it has been overwritten. Variable
+//! (per-row) shifts are barrel-style: one conditional constant shift per
+//! bit of the per-row shift-amount field — the associative analogue of a
+//! barrel shifter, used by float alignment/normalization.
+
+use super::table::TruthTable;
+use crate::isa::{Field, Instr, Pat, Program};
+
+/// dst_col := src_col in all rows satisfying `cond` (2 passes; 1 pass when
+/// the source bit's value is implied by the condition itself).
+pub fn copy_col_cond(prog: &mut Program, src: u16, dst: u16, cond: &Pat) {
+    assert_ne!(src, dst);
+    if let Some(&(_, v)) = cond.iter().find(|&&(c, _)| c == src) {
+        // source bit value is fixed by the condition: constant write
+        prog.push(Instr::Compare(cond.clone()));
+        prog.push(Instr::Write(vec![(dst, v)]));
+        return;
+    }
+    let condvals: Vec<bool> = cond.iter().map(|&(_, v)| v).collect();
+    let ncond = condvals.len();
+    let mut ccols: Vec<u16> = cond.iter().map(|&(c, _)| c).collect();
+    ccols.push(src);
+    let mut t = TruthTable::from_fn(ccols, vec![dst], |i| vec![*i.last().unwrap()]);
+    t.retain(|e| e.input[..ncond] == condvals[..]);
+    t.emit(prog, false);
+}
+
+/// dst := src for equal-width, non-overlapping fields.
+pub fn copy_field(prog: &mut Program, src: Field, dst: Field) {
+    copy_field_cond(prog, src, dst, &vec![]);
+}
+
+/// dst := src under a row condition.
+pub fn copy_field_cond(prog: &mut Program, src: Field, dst: Field, cond: &Pat) {
+    assert_eq!(src.width, dst.width);
+    assert!(!src.overlaps(&dst), "copy_field fields overlap; use shift_*");
+    for j in 0..src.width {
+        copy_col_cond(prog, src.col(j), dst.col(j), cond);
+    }
+}
+
+/// Write a constant into a field of rows satisfying `cond` (compare once,
+/// write once — the CAM-native broadcast).
+pub fn set_field_cond(prog: &mut Program, f: Field, value: u64, cond: &Pat) {
+    prog.push(Instr::Compare(cond.clone()));
+    prog.push(Instr::Write(f.pattern(value)));
+}
+
+/// In-place logical shift left by `k` (toward the MSB): f := f << k,
+/// zero-filling the low bits. Copies MSB-down so sources are read before
+/// being overwritten.
+pub fn shift_left_inplace(prog: &mut Program, f: Field, k: u16, cond: &Pat) {
+    if k == 0 {
+        return;
+    }
+    if k >= f.width {
+        clear_field_cond(prog, f, cond);
+        return;
+    }
+    for j in (k..f.width).rev() {
+        copy_col_cond(prog, f.col(j - k), f.col(j), cond);
+    }
+    for j in 0..k {
+        set_col_cond(prog, f.col(j), false, cond);
+    }
+}
+
+/// In-place logical shift right by `k` (toward the LSB), zero-filling.
+pub fn shift_right_inplace(prog: &mut Program, f: Field, k: u16, cond: &Pat) {
+    if k == 0 {
+        return;
+    }
+    if k >= f.width {
+        clear_field_cond(prog, f, cond);
+        return;
+    }
+    for j in 0..(f.width - k) {
+        copy_col_cond(prog, f.col(j + k), f.col(j), cond);
+    }
+    for j in (f.width - k)..f.width {
+        set_col_cond(prog, f.col(j), false, cond);
+    }
+}
+
+fn set_col_cond(prog: &mut Program, col: u16, v: bool, cond: &Pat) {
+    prog.push(Instr::Compare(cond.clone()));
+    prog.push(Instr::Write(vec![(col, v)]));
+}
+
+fn clear_field_cond(prog: &mut Program, f: Field, cond: &Pat) {
+    if cond.is_empty() {
+        prog.clear_field(f);
+    } else {
+        prog.push(Instr::Compare(cond.clone()));
+        prog.push(Instr::Write(f.pattern(0)));
+    }
+}
+
+/// Per-row variable right shift: f := f >> amount, where `amount` is a
+/// field of the same row. Barrel decomposition: for each bit b of the
+/// amount, conditionally shift by 2^b. Shift amounts ≥ f.width clear the
+/// field (handled naturally by the barrel stages).
+pub fn var_shift_right(prog: &mut Program, f: Field, amount: Field, cond: &Pat) {
+    assert!(!f.overlaps(&amount));
+    for b in 0..amount.width {
+        let mut c = cond.clone();
+        c.push((amount.col(b), true));
+        let k = 1u32 << b;
+        shift_right_inplace(prog, f, (k.min(f.width as u32)) as u16, &c);
+    }
+}
+
+/// Per-row variable left shift: f := f << amount.
+pub fn var_shift_left(prog: &mut Program, f: Field, amount: Field, cond: &Pat) {
+    assert!(!f.overlaps(&amount));
+    for b in 0..amount.width {
+        let mut c = cond.clone();
+        c.push((amount.col(b), true));
+        let k = 1u32 << b;
+        shift_left_inplace(prog, f, (k.min(f.width as u32)) as u16, &c);
+    }
+}
+
+/// Leading-zero count of `f` into `lzc` (binary value, per row).
+/// One compare+write per possible position: pattern "all bits above p are
+/// zero and bit p is one" → lzc = width-1-p. All-zero fields get
+/// lzc = width.
+pub fn leading_zero_count(prog: &mut Program, f: Field, lzc: Field) {
+    assert!((1u64 << lzc.width) > f.width as u64, "lzc field too narrow");
+    assert!(!f.overlaps(&lzc));
+    for p in (0..f.width).rev() {
+        let mut cpat: Pat = vec![(f.col(p), true)];
+        for j in (p + 1)..f.width {
+            cpat.push((f.col(j), false));
+        }
+        let count = (f.width - 1 - p) as u64;
+        prog.pass(cpat, lzc.pattern(count));
+    }
+    // all-zero case
+    let cpat: Pat = f.cols().map(|c| (c, false)).collect();
+    prog.pass(cpat, lzc.pattern(f.width as u64));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::controller::Controller;
+    use crate::rcam::PrinsArray;
+
+    fn ctl(rows: usize, width: usize) -> Controller {
+        Controller::new(PrinsArray::single(rows, width))
+    }
+
+    #[test]
+    fn copy_field_copies_everything() {
+        let (s, d) = (Field::new(0, 8), Field::new(8, 8));
+        let mut p = Program::new();
+        copy_field(&mut p, s, d);
+        let mut c = ctl(16, 16);
+        for r in 0..16 {
+            c.array.load_row_bits(r, 0, 8, (r * 17) as u64 & 0xFF);
+            c.array.load_row_bits(r, 8, 8, 0xAA); // stale garbage
+        }
+        c.execute(&p);
+        for r in 0..16 {
+            assert_eq!(c.array.fetch_row_bits(r, 8, 8), (r * 17) as u64 & 0xFF);
+        }
+    }
+
+    #[test]
+    fn constant_shifts_inplace() {
+        let f = Field::new(2, 8);
+        for (k, left) in [(1u16, true), (3, true), (8, true), (1, false), (5, false), (9, false)] {
+            let mut p = Program::new();
+            if left {
+                shift_left_inplace(&mut p, f, k, &vec![]);
+            } else {
+                shift_right_inplace(&mut p, f, k, &vec![]);
+            }
+            let mut c = ctl(8, 12);
+            let vals = [0u64, 1, 0x80, 0xC3, 0xFF, 0x55, 0x0F, 0xF0];
+            for (r, v) in vals.iter().enumerate() {
+                c.array.load_row_bits(r, 2, 8, *v);
+            }
+            c.execute(&p);
+            for (r, v) in vals.iter().enumerate() {
+                let e = if left {
+                    (v << k.min(63)) & 0xFF
+                } else {
+                    v >> k.min(63)
+                };
+                assert_eq!(c.array.fetch_row_bits(r, 2, 8), e, "k={k} left={left} v={v:#x}");
+            }
+        }
+    }
+
+    #[test]
+    fn var_shift_right_per_row() {
+        let (f, amt) = (Field::new(0, 8), Field::new(8, 4));
+        let mut p = Program::new();
+        var_shift_right(&mut p, f, amt, &vec![]);
+        let mut c = ctl(16, 12);
+        for r in 0..16 {
+            c.array.load_row_bits(r, 0, 8, 0xB7);
+            c.array.load_row_bits(r, 8, 4, r as u64);
+        }
+        c.execute(&p);
+        for r in 0..16u64 {
+            let e = if r >= 8 { 0 } else { 0xB7u64 >> r };
+            assert_eq!(c.array.fetch_row_bits(r as usize, 0, 8), e, "shift {r}");
+        }
+    }
+
+    #[test]
+    fn var_shift_left_per_row() {
+        let (f, amt) = (Field::new(0, 8), Field::new(8, 3));
+        let mut p = Program::new();
+        var_shift_left(&mut p, f, amt, &vec![]);
+        let mut c = ctl(8, 12);
+        for r in 0..8 {
+            c.array.load_row_bits(r, 0, 8, 0x93);
+            c.array.load_row_bits(r, 8, 3, r as u64);
+        }
+        c.execute(&p);
+        for r in 0..8u64 {
+            assert_eq!(
+                c.array.fetch_row_bits(r as usize, 0, 8),
+                (0x93u64 << r) & 0xFF
+            );
+        }
+    }
+
+    #[test]
+    fn lzc_all_positions() {
+        let (f, z) = (Field::new(0, 8), Field::new(8, 4));
+        let mut p = Program::new();
+        leading_zero_count(&mut p, f, z);
+        let mut c = ctl(10, 12);
+        let vals = [0u64, 1, 2, 0x80, 0x40, 0xFF, 0x10, 0x08, 0x03, 0x81];
+        for (r, v) in vals.iter().enumerate() {
+            c.array.load_row_bits(r, 0, 8, *v);
+        }
+        c.execute(&p);
+        for (r, v) in vals.iter().enumerate() {
+            let e = if *v == 0 { 8 } else { (v.leading_zeros() - 56) as u64 };
+            assert_eq!(c.array.fetch_row_bits(r, 8, 4), e, "v={v:#x}");
+        }
+    }
+
+    #[test]
+    fn conditional_copy_respects_condition() {
+        let (s, d) = (Field::new(0, 4), Field::new(4, 4));
+        let mut p = Program::new();
+        copy_field_cond(&mut p, s, d, &vec![(10, true)]);
+        let mut c = ctl(4, 12);
+        for r in 0..4 {
+            c.array.load_row_bits(r, 0, 4, 0x9);
+            c.array.load_row_bits(r, 10, 1, (r % 2) as u64);
+        }
+        c.execute(&p);
+        for r in 0..4 {
+            let e = if r % 2 == 1 { 0x9 } else { 0x0 };
+            assert_eq!(c.array.fetch_row_bits(r, 4, 4), e);
+        }
+    }
+}

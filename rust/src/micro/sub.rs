@@ -1,0 +1,238 @@
+//! Bit-serial subtraction and negation microcode.
+//!
+//! Same truth-table discipline as `add` (full subtractor with a borrow
+//! column); `sub_inplace` computes `acc -= b` modulo 2^width, which also
+//! yields the borrow-out in the borrow column before the final ripple —
+//! callers that need the comparison outcome should use `micro::cmp`
+//! instead.
+
+use super::add::BitSrc;
+use super::table::TruthTable;
+use crate::isa::{Field, Instr, Pat, Program};
+
+/// One in-place single-bit subtract: `acc_col -= src (+ borrow)`.
+fn sub_bit_inplace(
+    prog: &mut Program,
+    acc_col: u16,
+    src: BitSrc,
+    brw_col: u16,
+    cond: &Pat,
+    skip_stationary: bool,
+) {
+    let mut ccols: Vec<u16> = cond.iter().map(|&(c, _)| c).collect();
+    ccols.push(brw_col);
+    ccols.push(acc_col);
+    let condvals: Vec<bool> = cond.iter().map(|&(_, v)| v).collect();
+    let ncond = condvals.len();
+    let f = move |i: &[bool], bv: bool| {
+        if i[..ncond] != condvals[..] {
+            return vec![i[ncond], i[ncond + 1]];
+        }
+        let (brw, a) = (i[ncond] as i8, i[ncond + 1] as i8);
+        let d = a - bv as i8 - brw;
+        vec![d < 0, (d & 1) == 1]
+    };
+    match src {
+        BitSrc::Col(b_col) => {
+            debug_assert!(b_col != acc_col && b_col != brw_col);
+            ccols.push(b_col);
+            let t = TruthTable::from_fn(ccols, vec![brw_col, acc_col], move |i| {
+                f(i, i[i.len() - 1])
+            });
+            t.emit(prog, skip_stationary);
+        }
+        BitSrc::Const(bv) => {
+            let t = TruthTable::from_fn(ccols, vec![brw_col, acc_col], move |i| f(i, bv));
+            t.emit(prog, skip_stationary);
+        }
+    }
+}
+
+/// `acc -= b` in place, LSB first, borrow through `brw_col` (cleared
+/// first). Result is modulo 2^acc.width (two's-complement wraparound).
+pub fn sub_inplace(prog: &mut Program, acc: Field, b: Field, brw_col: u16) {
+    sub_inplace_cond(prog, acc, b, brw_col, &vec![]);
+}
+
+pub fn sub_inplace_cond(prog: &mut Program, acc: Field, b: Field, brw_col: u16, cond: &Pat) {
+    assert!(!acc.overlaps(&b), "in-place sub operands overlap");
+    prog.push(Instr::ClearColumns { base: brw_col, width: 1 });
+    for j in 0..acc.width {
+        let s = if j < b.width {
+            let col = b.col(j);
+            match cond.iter().find(|&&(c, _)| c == col) {
+                Some(&(_, v)) => BitSrc::Const(v),
+                None => BitSrc::Col(col),
+            }
+        } else {
+            BitSrc::Const(false)
+        };
+        sub_bit_inplace(prog, acc.col(j), s, brw_col, cond, true);
+    }
+}
+
+/// `f -= k` in place (constant subtrahend).
+pub fn sub_const(prog: &mut Program, f: Field, k: u64, brw_col: u16) {
+    prog.push(Instr::ClearColumns { base: brw_col, width: 1 });
+    for j in 0..f.width {
+        sub_bit_inplace(
+            prog,
+            f.col(j),
+            BitSrc::Const((k >> j) & 1 == 1),
+            brw_col,
+            &vec![],
+            true,
+        );
+    }
+}
+
+/// Two's-complement negate in place: `f = -f` (subtract-from-zero).
+///
+/// An in-place bit inversion is inherently a *cyclic* write hazard
+/// ((brw=1,f=0)→f=1 lands on (1,1) while (1,1)→f=0 lands on (1,0)), so no
+/// safe single-table order exists — `TruthTable::safe_order` rejects it.
+/// The classic fix is a staging column: pass set A computes the result
+/// bit into `tmp_col` (writes never touch compared columns except the
+/// borrow, which is acyclic), pass set B copies `tmp_col` back.
+pub fn neg_inplace(prog: &mut Program, f: Field, brw_col: u16, tmp_col: u16) {
+    neg_inplace_cond(prog, f, brw_col, tmp_col, &vec![]);
+}
+
+/// Conditional negate: rows where every `cond` bit matches get f := -f.
+pub fn neg_inplace_cond(prog: &mut Program, f: Field, brw_col: u16, tmp_col: u16, cond: &Pat) {
+    assert!(tmp_col < f.base || tmp_col >= f.end());
+    assert!(brw_col != tmp_col);
+    let condvals: Vec<bool> = cond.iter().map(|&(_, v)| v).collect();
+    let ncond = condvals.len();
+    prog.push(Instr::ClearColumns { base: brw_col, width: 1 });
+    for j in 0..f.width {
+        let mut ccols: Vec<u16> = cond.iter().map(|&(c, _)| c).collect();
+        ccols.push(brw_col);
+        ccols.push(f.col(j));
+        // A: (brw, f_j) -> (brw', tmp = 0 - f_j - brw); condition-unmet
+        // rows are simply not in the table.
+        let mut t = TruthTable::from_fn(ccols, vec![brw_col, tmp_col], move |i| {
+            let d = 0i8 - i[ncond + 1] as i8 - i[ncond] as i8;
+            vec![d < 0, (d & 1) == 1]
+        });
+        t.retain(|e| e.input[..ncond] == condvals[..]);
+        t.emit(prog, true);
+        // B: f_j := tmp (2 passes; tmp is not compared again this bit)
+        let mut bcols: Vec<u16> = cond.iter().map(|&(c, _)| c).collect();
+        bcols.push(tmp_col);
+        let mut t = TruthTable::from_fn(bcols, vec![f.col(j)], |i| vec![*i.last().unwrap()]);
+        t.retain(|e| e.input[..ncond] == condvals[..]);
+        t.emit(prog, false);
+    }
+}
+
+/// Absolute value of a two's-complement field: where the sign bit is set,
+/// negate. The sign bit itself is part of the negation, so the condition
+/// is staged into `flag_col` first (1 = was negative), then a conditional
+/// negate keyed on the flag runs over the whole field.
+pub fn abs_inplace(prog: &mut Program, f: Field, brw_col: u16, tmp_col: u16, flag_col: u16) {
+    let sign = f.col(f.width - 1);
+    assert!(flag_col != tmp_col && flag_col != brw_col);
+    assert!(flag_col < f.base || flag_col >= f.end());
+    // flag := sign (2 passes)
+    let t = TruthTable::from_fn(vec![sign], vec![flag_col], |i| vec![i[0]]);
+    t.emit(prog, false);
+    neg_inplace_cond(prog, f, brw_col, tmp_col, &vec![(flag_col, true)]);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::controller::Controller;
+    use crate::rcam::PrinsArray;
+
+    fn ctl(rows: usize, width: usize) -> Controller {
+        Controller::new(PrinsArray::single(rows, width))
+    }
+
+    #[test]
+    fn sub_inplace_wraps() {
+        let (acc, b) = (Field::new(0, 8), Field::new(8, 8));
+        let mut prog = Program::new();
+        sub_inplace(&mut prog, acc, b, 20);
+        let mut c = ctl(64, 24);
+        let cases: Vec<(u64, u64)> =
+            (0..64).map(|r| ((r * 37 + 5) % 256, (r * 91 + 13) % 256)).collect();
+        for (r, &(av, bv)) in cases.iter().enumerate() {
+            c.array.load_row_bits(r, 0, 8, av);
+            c.array.load_row_bits(r, 8, 8, bv);
+        }
+        c.execute(&prog);
+        for (r, &(av, bv)) in cases.iter().enumerate() {
+            assert_eq!(
+                c.array.fetch_row_bits(r, 0, 8),
+                av.wrapping_sub(bv) & 0xFF,
+                "row {r}: {av}-{bv}"
+            );
+        }
+    }
+
+    #[test]
+    fn sub_const_works() {
+        let f = Field::new(0, 10);
+        let mut prog = Program::new();
+        sub_const(&mut prog, f, 300, 16);
+        let mut c = ctl(4, 20);
+        for (r, v) in [0u64, 299, 300, 1023].iter().enumerate() {
+            c.array.load_row_bits(r, 0, 10, *v);
+        }
+        c.execute(&prog);
+        for (r, v) in [0u64, 299, 300, 1023].iter().enumerate() {
+            assert_eq!(c.array.fetch_row_bits(r, 0, 10), v.wrapping_sub(300) & 0x3FF);
+        }
+    }
+
+    #[test]
+    fn neg_is_twos_complement() {
+        let f = Field::new(2, 8);
+        let mut prog = Program::new();
+        neg_inplace(&mut prog, f, 12, 13);
+        let mut c = ctl(4, 16);
+        for (r, v) in [0u64, 1, 0x80, 0xFF].iter().enumerate() {
+            c.array.load_row_bits(r, 2, 8, *v);
+        }
+        c.execute(&prog);
+        for (r, v) in [0u64, 1, 0x80, 0xFF].iter().enumerate() {
+            assert_eq!(c.array.fetch_row_bits(r, 2, 8), (v.wrapping_neg()) & 0xFF);
+        }
+    }
+
+    #[test]
+    fn abs_fixes_negatives_only() {
+        let f = Field::new(0, 8);
+        let mut prog = Program::new();
+        abs_inplace(&mut prog, f, 10, 11, 12);
+        let mut c = ctl(6, 16);
+        let cases = [0i64, 5, 127, -1, -128, -77];
+        for (r, v) in cases.iter().enumerate() {
+            c.array.load_row_bits(r, 0, 8, (*v as u64) & 0xFF);
+        }
+        c.execute(&prog);
+        for (r, v) in cases.iter().enumerate() {
+            let e = (v.unsigned_abs() as u64) & 0xFF; // |-128| wraps to 0x80
+            assert_eq!(c.array.fetch_row_bits(r, 0, 8), e, "row {r}: |{v}|");
+        }
+    }
+
+    #[test]
+    fn add_then_sub_roundtrips() {
+        let (acc, b) = (Field::new(0, 12), Field::new(12, 12));
+        let mut prog = Program::new();
+        super::super::add::add_inplace(&mut prog, acc, b, 30);
+        sub_inplace(&mut prog, acc, b, 30);
+        let mut c = ctl(32, 32);
+        for r in 0..32 {
+            c.array.load_row_bits(r, 0, 12, (r * 123) as u64 & 0xFFF);
+            c.array.load_row_bits(r, 12, 12, (r * 777) as u64 & 0xFFF);
+        }
+        c.execute(&prog);
+        for r in 0..32 {
+            assert_eq!(c.array.fetch_row_bits(r, 0, 12), (r * 123) as u64 & 0xFFF);
+        }
+    }
+}

@@ -1,0 +1,292 @@
+//! Truth-table → microcode compilation with hazard-safe entry ordering.
+//!
+//! Associative arithmetic (paper §4) executes a Boolean function as a
+//! series of compare+write passes, one per truth-table entry. Because a
+//! pass's write may change bit-columns that later passes *compare*, a row
+//! can be transformed onto another entry's input pattern and be processed
+//! twice — the classic associative-processing ordering hazard (Foster,
+//! *Content Addressable Parallel Processors*, 1976). This module solves
+//! the ordering generically: build the "lands-on" graph (entry X writes →
+//! pattern of entry Y ⇒ Y must execute before X) and topologically sort.
+//!
+//! All arithmetic generators (add/sub/mul/float) are built on this, so a
+//! single correctness argument covers every operation.
+
+use crate::isa::{Pat, Program};
+use std::collections::HashMap;
+
+/// One truth-table entry: input bits over `compare_cols`, output bits over
+/// `write_cols`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Entry {
+    pub input: Vec<bool>,
+    pub output: Vec<bool>,
+}
+
+/// A truth table over explicit column lists.
+#[derive(Clone, Debug)]
+pub struct TruthTable {
+    pub compare_cols: Vec<u16>,
+    pub write_cols: Vec<u16>,
+    pub entries: Vec<Entry>,
+}
+
+impl TruthTable {
+    pub fn new(compare_cols: Vec<u16>, write_cols: Vec<u16>) -> Self {
+        // A column may appear in both lists (e.g. an in-place carry), but
+        // duplicates within a list are design errors.
+        let mut cc = compare_cols.clone();
+        cc.sort_unstable();
+        cc.dedup();
+        assert_eq!(cc.len(), compare_cols.len(), "duplicate compare column");
+        let mut wc = write_cols.clone();
+        wc.sort_unstable();
+        wc.dedup();
+        assert_eq!(wc.len(), write_cols.len(), "duplicate write column");
+        TruthTable {
+            compare_cols,
+            write_cols,
+            entries: Vec::new(),
+        }
+    }
+
+    pub fn entry(&mut self, input: Vec<bool>, output: Vec<bool>) -> &mut Self {
+        assert_eq!(input.len(), self.compare_cols.len());
+        assert_eq!(output.len(), self.write_cols.len());
+        self.entries.push(Entry { input, output });
+        self
+    }
+
+    /// Build a table from a boolean function over all 2^k input patterns.
+    pub fn from_fn(
+        compare_cols: Vec<u16>,
+        write_cols: Vec<u16>,
+        f: impl Fn(&[bool]) -> Vec<bool>,
+    ) -> Self {
+        let k = compare_cols.len();
+        assert!(k <= 16);
+        let mut t = TruthTable::new(compare_cols, write_cols);
+        for bits in 0..(1u32 << k) {
+            let input: Vec<bool> = (0..k).map(|i| (bits >> i) & 1 == 1).collect();
+            let output = f(&input);
+            t.entry(input.clone(), output);
+        }
+        t
+    }
+
+    /// Drop entries not matching a predicate (used to restrict a table to
+    /// condition-met rows; unmatched rows then never match any pass).
+    pub fn retain(&mut self, f: impl Fn(&Entry) -> bool) {
+        self.entries.retain(|e| f(e));
+    }
+
+    /// The input pattern a row matching `e` exhibits *after* e's write:
+    /// compared columns that are also written take the written value.
+    fn landing(&self, e: &Entry) -> Vec<bool> {
+        let mut out = e.input.clone();
+        for (wi, &wcol) in self.write_cols.iter().enumerate() {
+            if let Some(ci) = self.compare_cols.iter().position(|&c| c == wcol) {
+                out[ci] = e.output[wi];
+            }
+        }
+        out
+    }
+
+    /// True if `e`'s write leaves every compared column unchanged.
+    fn is_stationary(&self, e: &Entry) -> bool {
+        self.landing(e) == e.input
+    }
+
+    /// Hazard-safe execution order (indices into `entries`).
+    ///
+    /// Constraint: if X's write lands a row on Y's input pattern (X ≠ Y),
+    /// then Y must execute before X. Panics if the constraints are cyclic
+    /// (no safe serial order exists — a table design error).
+    pub fn safe_order(&self) -> Vec<usize> {
+        let n = self.entries.len();
+        let index: HashMap<&[bool], usize> = self
+            .entries
+            .iter()
+            .enumerate()
+            .map(|(i, e)| (e.input.as_slice(), i))
+            .collect();
+        // edges[y] -> list of x that must come after y
+        let mut after: Vec<Vec<usize>> = vec![Vec::new(); n];
+        let mut indeg = vec![0usize; n];
+        for (x, e) in self.entries.iter().enumerate() {
+            let land = self.landing(e);
+            if land != e.input {
+                if let Some(&y) = index.get(land.as_slice()) {
+                    after[y].push(x);
+                    indeg[x] += 1;
+                }
+            }
+        }
+        // Kahn, preferring original order for determinism.
+        let mut ready: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        ready.sort_unstable();
+        let mut order = Vec::with_capacity(n);
+        while let Some(y) = ready.pop() {
+            order.push(y);
+            for &x in &after[y] {
+                indeg[x] -= 1;
+                if indeg[x] == 0 {
+                    ready.push(x);
+                }
+            }
+            ready.sort_unstable();
+        }
+        assert_eq!(
+            order.len(),
+            n,
+            "truth table has cyclic write hazards; no safe pass order exists"
+        );
+        order
+    }
+
+    /// Emit the table as compare+write passes in hazard-safe order.
+    ///
+    /// `skip_stationary`: omit entries whose write cannot change any row
+    /// state (write values equal the matched input on every overlapping
+    /// column AND the non-compared written columns are... — note: a write
+    /// to a column that is NOT compared always counts as a state change,
+    /// because the row's current value there is unknown). When false, all
+    /// entries are emitted (the paper's "eight steps" fidelity mode).
+    pub fn emit(&self, prog: &mut Program, skip_stationary: bool) {
+        for &i in &self.safe_order().iter().collect::<Vec<_>>() {
+            let e = &self.entries[*i];
+            if skip_stationary && self.entry_is_noop(e) {
+                continue;
+            }
+            let cpat: Pat = self
+                .compare_cols
+                .iter()
+                .zip(&e.input)
+                .map(|(&c, &b)| (c, b))
+                .collect();
+            let wpat: Pat = self
+                .write_cols
+                .iter()
+                .zip(&e.output)
+                .map(|(&c, &b)| (c, b))
+                .collect();
+            prog.pass(cpat, wpat);
+        }
+    }
+
+    /// An entry is a provable no-op iff every written column is also
+    /// compared and the written value equals the compared value.
+    fn entry_is_noop(&self, e: &Entry) -> bool {
+        self.write_cols.iter().enumerate().all(|(wi, &wcol)| {
+            match self.compare_cols.iter().position(|&c| c == wcol) {
+                Some(ci) => e.input[ci] == e.output[wi],
+                None => false, // unknown prior state: the write matters
+            }
+        })
+    }
+
+    /// Emitted pass count (for cycle budgeting).
+    pub fn pass_count(&self, skip_stationary: bool) -> usize {
+        if skip_stationary {
+            self.entries
+                .iter()
+                .filter(|e| !self.entry_is_noop(e))
+                .count()
+        } else {
+            self.entries.len()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::controller::Controller;
+    use crate::rcam::PrinsArray;
+
+    /// The separate-output full adder of paper Fig. 6: inputs (c,a,b) over
+    /// cols (2,0,1), outputs (c,s) over cols (2,3).
+    fn full_adder() -> TruthTable {
+        TruthTable::from_fn(vec![2, 0, 1], vec![2, 3], |i| {
+            let (c, a, b) = (i[0] as u8, i[1] as u8, i[2] as u8);
+            let sum = c + a + b;
+            vec![sum >= 2, sum % 2 == 1]
+        })
+    }
+
+    #[test]
+    fn safe_order_respects_carry_hazards() {
+        let t = full_adder();
+        let order = t.safe_order();
+        let pos = |c: bool, a: bool, b: bool| {
+            order
+                .iter()
+                .position(|&i| t.entries[i].input == vec![c, a, b])
+                .unwrap()
+        };
+        // (0,1,1) writes c=1 -> lands on (1,1,1): (1,1,1) must be earlier
+        assert!(pos(true, true, true) < pos(false, true, true));
+        // (1,0,0) writes c=0 -> lands on (0,0,0)
+        assert!(pos(false, false, false) < pos(true, false, false));
+    }
+
+    #[test]
+    fn full_adder_emits_8_passes_and_adds_correctly() {
+        let t = full_adder();
+        let mut prog = Program::new();
+        // single-bit add over all rows: c,s initially 0
+        t.emit(&mut prog, false);
+        assert_eq!(prog.n_passes(), 8);
+
+        let mut ctl = Controller::new(PrinsArray::single(64, 4));
+        // rows encode (a, b) in cols 0,1; all four combos present
+        for (r, (a, b)) in [(0, (0, 0)), (1, (0, 1)), (2, (1, 0)), (3, (1, 1))] {
+            ctl.array.load_row_bits(r, 0, 1, a);
+            ctl.array.load_row_bits(r, 1, 1, b);
+        }
+        ctl.execute(&prog);
+        for (r, (a, b)) in [(0, (0u64, 0u64)), (1, (0, 1)), (2, (1, 0)), (3, (1, 1))] {
+            let s = ctl.array.fetch_row_bits(r, 3, 1);
+            let c = ctl.array.fetch_row_bits(r, 2, 1);
+            assert_eq!(s, (a + b) % 2, "row {r}");
+            assert_eq!(c, (a + b) / 2, "row {r}");
+        }
+    }
+
+    #[test]
+    fn skip_stationary_prunes_noops() {
+        // In-place half adder: (c,a) -> (c', a') with a' = a xor c, c' = a and c
+        let t = TruthTable::from_fn(vec![0, 1], vec![0, 1], |i| {
+            let (c, a) = (i[0], i[1]);
+            vec![c && a, c != a]
+        });
+        // (0,0)->(0,0) and (0,1)->(0,1) are stationary
+        assert_eq!(t.pass_count(false), 4);
+        assert_eq!(t.pass_count(true), 2);
+        let mut p = Program::new();
+        t.emit(&mut p, true);
+        assert_eq!(p.n_passes(), 2);
+    }
+
+    #[test]
+    fn write_to_uncompared_col_is_never_noop() {
+        let t = TruthTable::from_fn(vec![0], vec![5], |i| vec![i[0]]);
+        assert_eq!(t.pass_count(true), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "cyclic")]
+    fn cyclic_hazard_panics() {
+        // swap table: (0)->(1), (1)->(0) over the same column: cyclic
+        let mut t = TruthTable::new(vec![0], vec![0]);
+        t.entry(vec![false], vec![true]);
+        t.entry(vec![true], vec![false]);
+        t.safe_order();
+    }
+
+    #[test]
+    fn stationary_entries_unconstrained() {
+        let t = TruthTable::from_fn(vec![0, 1], vec![2], |i| vec![i[0] ^ i[1]]);
+        assert_eq!(t.safe_order().len(), 4);
+    }
+}

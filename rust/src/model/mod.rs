@@ -1,0 +1,15 @@
+//! Analytical models: the roofline baseline of Eq. 3, the power/efficiency
+//! model behind the paper's GFLOPS/W numbers, and the TPU feasibility
+//! estimate for the L1 kernel.
+
+pub mod figures;
+pub mod power;
+pub mod roofline;
+pub mod tpu;
+
+pub use power::{efficiency, extrapolate_rows, Efficiency};
+pub use roofline::{
+    attainable_gflops, attainable_gteps, prins_internal_bandwidth_gb_s,
+    prins_peak_gflops, roofline_point, ComputeRoof, StorageTier, KNL_ROOF,
+    NVDIMM, STORAGE_APPLIANCE,
+};

@@ -1,0 +1,133 @@
+//! Roofline baseline model (paper §6, Eq. 3):
+//!
+//!   Attainable Perf = min(Peak Perf, AI × Peak Storage BW)
+//!
+//! The paper evaluates PRINS against "a computer architecture with a
+//! bandwidth-limited external storage": a 10 GB/s storage appliance [35]
+//! and a 24 GB/s NVDIMM store [34], with a KNL-class compute roof
+//! (Fig. 15). The baselines here are *analytical by construction*, exactly
+//! as in the paper; `runtime::golden` additionally executes the same
+//! kernels for numeric cross-validation.
+
+/// A bandwidth-limited external storage tier.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StorageTier {
+    pub name: &'static str,
+    pub bandwidth_gb_s: f64,
+}
+
+/// Paper's 10 GB/s high-end storage appliance [35].
+pub const STORAGE_APPLIANCE: StorageTier = StorageTier {
+    name: "storage appliance (10 GB/s)",
+    bandwidth_gb_s: 10.0,
+};
+
+/// Paper's 24 GB/s NVDIMM storage [34].
+pub const NVDIMM: StorageTier = StorageTier {
+    name: "NVDIMM (24 GB/s)",
+    bandwidth_gb_s: 24.0,
+};
+
+/// Compute roof of the reference architecture. Paper Fig. 15 uses Knights
+/// Landing: ~3 TFLOP/s single-precision-ish DP roof; the exact roof never
+/// binds for the paper's low-AI workloads, but it caps the model.
+#[derive(Clone, Copy, Debug)]
+pub struct ComputeRoof {
+    pub name: &'static str,
+    pub peak_gflops: f64,
+}
+
+pub const KNL_ROOF: ComputeRoof = ComputeRoof {
+    name: "Xeon Phi KNL (≈3 TFLOP/s)",
+    peak_gflops: 3_000.0,
+};
+
+/// Workload arithmetic intensities used in §6 (FLOP or OP per byte).
+pub mod ai {
+    /// Euclidean distance: 3 FLOP per 4-byte attribute fetch.
+    pub const EUCLIDEAN: f64 = 3.0 / 4.0;
+    /// Dot product: 2 FLOP per 4-byte attribute fetch.
+    pub const DOT_PRODUCT: f64 = 2.0 / 4.0;
+    /// Histogram: 2 OP (shift + increment) per 4-byte sample.
+    pub const HISTOGRAM: f64 = 2.0 / 4.0;
+    /// SpMV: 1/6 FLOP per byte [65].
+    pub const SPMV: f64 = 1.0 / 6.0;
+    /// BFS: 1 OP per 4 bytes.
+    pub const BFS: f64 = 1.0 / 4.0;
+}
+
+/// Eq. 3: attainable GFLOPS (or GOPS) of the reference architecture.
+pub fn attainable_gflops(roof: &ComputeRoof, tier: &StorageTier, ai: f64) -> f64 {
+    (ai * tier.bandwidth_gb_s).min(roof.peak_gflops)
+}
+
+/// Attainable GTEPS for BFS: the paper states 2.5 GTEPS @ 10 GB/s and
+/// ~6 GTEPS @ 24 GB/s, i.e. bandwidth / 4 bytes per traversed edge.
+pub fn attainable_gteps(tier: &StorageTier) -> f64 {
+    tier.bandwidth_gb_s / 4.0
+}
+
+/// One point of the Fig. 15 roofline chart: attainable performance at a
+/// given arithmetic intensity.
+pub fn roofline_point(roof: &ComputeRoof, bandwidth_gb_s: f64, ai: f64) -> f64 {
+    (ai * bandwidth_gb_s).min(roof.peak_gflops)
+}
+
+/// PRINS "internal bandwidth" roof (Fig. 15): an entire bit column moves
+/// to the tag register in one cycle — `rows` bits per 2 ns.
+pub fn prins_internal_bandwidth_gb_s(rows: u64, freq_hz: f64) -> f64 {
+    (rows as f64 / 8.0) * freq_hz / 1e9
+}
+
+/// PRINS peak theoretical GFLOPS (Fig. 15): one fp32 MAC over the entire
+/// dataset in parallel, at the measured fp32 MAC microcode latency.
+pub fn prins_peak_gflops(rows: u64, mac_cycles: u64, freq_hz: f64) -> f64 {
+    let t = mac_cycles as f64 / freq_hz;
+    (2.0 * rows as f64 / t) / 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_attainable_numbers() {
+        // §6: "attainable performance of Euclidean distance calculation is
+        // 7.5 GFLOPS for a storage appliance and 18 GFLOPS for NVDIMM"
+        assert!((attainable_gflops(&KNL_ROOF, &STORAGE_APPLIANCE, ai::EUCLIDEAN) - 7.5).abs() < 1e-9);
+        assert!((attainable_gflops(&KNL_ROOF, &NVDIMM, ai::EUCLIDEAN) - 18.0).abs() < 1e-9);
+        // dot product: 5 GFLOPS / 12 GFLOPS
+        assert!((attainable_gflops(&KNL_ROOF, &STORAGE_APPLIANCE, ai::DOT_PRODUCT) - 5.0).abs() < 1e-9);
+        assert!((attainable_gflops(&KNL_ROOF, &NVDIMM, ai::DOT_PRODUCT) - 12.0).abs() < 1e-9);
+        // BFS: 2.5 GTEPS / 6 GTEPS
+        assert!((attainable_gteps(&STORAGE_APPLIANCE) - 2.5).abs() < 1e-9);
+        assert!((attainable_gteps(&NVDIMM) - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn roofline_is_monotone_and_capped() {
+        let mut last = 0.0;
+        for ai_exp in -6..10 {
+            let ai = 2f64.powi(ai_exp);
+            let p = roofline_point(&KNL_ROOF, 10.0, ai);
+            assert!(p >= last);
+            assert!(p <= KNL_ROOF.peak_gflops);
+            last = p;
+        }
+        assert_eq!(roofline_point(&KNL_ROOF, 10.0, 1e9), KNL_ROOF.peak_gflops);
+    }
+
+    #[test]
+    fn prins_internal_bw_dwarfs_external() {
+        // 4 TB PRINS (paper Fig. 15): 1T 32-bit elements = 1e12 rows
+        let bw = prins_internal_bandwidth_gb_s(1_000_000_000_000, 500e6);
+        assert!(bw > 1e7, "PRINS internal BW {bw} GB/s"); // vs 10 GB/s external
+    }
+
+    #[test]
+    fn prins_peak_scales_linearly_with_rows() {
+        let a = prins_peak_gflops(1_000_000, 10_000, 500e6);
+        let b = prins_peak_gflops(100_000_000, 10_000, 500e6);
+        assert!((b / a - 100.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,106 @@
+//! TPU feasibility model for the L1 Pallas kernel (DESIGN.md
+//! §Hardware-Adaptation).
+//!
+//! interpret=True gives CPU-numpy timings only, so real-TPU performance is
+//! *estimated structurally*: VMEM footprint of the bit-plane working set
+//! per BlockSpec step, and the VPU lane-op count per associative pass.
+//! These numbers justify the chosen BLOCK_WORDS and are reported by
+//! `prins report --tpu`.
+
+/// TPU v4-ish envelope used for the estimate.
+#[derive(Clone, Copy, Debug)]
+pub struct TpuEnvelope {
+    pub vmem_bytes: usize,
+    pub vpu_lanes: usize,          // 8x128 lanes × 4 sublanes
+    pub vpu_ops_per_cycle: usize,  // u32 ops across lanes
+    pub freq_hz: f64,
+    pub hbm_gb_s: f64,
+}
+
+pub const TPU_V4: TpuEnvelope = TpuEnvelope {
+    vmem_bytes: 16 << 20,
+    vpu_lanes: 1024,
+    vpu_ops_per_cycle: 4096,
+    freq_hz: 940e6,
+    hbm_gb_s: 1200.0,
+};
+
+#[derive(Clone, Debug)]
+pub struct KernelEstimate {
+    /// Bytes of bit-plane state resident per grid step.
+    pub vmem_per_block: usize,
+    /// Fits in VMEM with double buffering?
+    pub fits_vmem: bool,
+    /// u32 lane-ops per associative pass per block (compare + write).
+    pub ops_per_pass: usize,
+    /// Estimated passes/second for a whole array of `nw_words` u32 words.
+    pub passes_per_s: f64,
+    /// HBM-bound passes/second (each pass streams the planes once if the
+    /// program does not fit VMEM-resident).
+    pub hbm_passes_per_s: f64,
+}
+
+/// Estimate the rcam_step kernel on a TPU envelope.
+///
+/// `w` bit columns, `nw_words` u32 words (rows/32), `block_words` per grid
+/// step.
+pub fn estimate_rcam_step(
+    env: &TpuEnvelope,
+    w: usize,
+    nw_words: usize,
+    block_words: usize,
+) -> KernelEstimate {
+    let vmem_per_block = w * block_words * 4 * 2; // in + out planes
+    let fits_vmem = vmem_per_block * 2 <= env.vmem_bytes; // double-buffered
+    // compare: W select+mask+AND ops per word; write: W blend ops per word
+    let ops_per_word = 3 * w + 2 * w;
+    let ops_per_pass = ops_per_word * block_words;
+    let total_ops = ops_per_word * nw_words;
+    let compute_passes = env.freq_hz * env.vpu_ops_per_cycle as f64 / total_ops as f64;
+    let bytes_per_pass = (w * nw_words * 4 * 2) as f64;
+    let hbm_passes = env.hbm_gb_s * 1e9 / bytes_per_pass;
+    KernelEstimate {
+        vmem_per_block,
+        fits_vmem,
+        ops_per_pass,
+        passes_per_s: compute_passes.min(hbm_passes),
+        hbm_passes_per_s: hbm_passes,
+    }
+}
+
+/// The "keep data in VMEM across the whole microprogram" speedup factor:
+/// a P-pass scan-composed program reads HBM once instead of P times.
+pub fn vmem_residency_speedup(p_passes: usize) -> f64 {
+    p_passes as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_block_fits_vmem() {
+        // aot.py: W=256, BLOCK_WORDS=256 → 512 KB per block, double-buffered
+        let e = estimate_rcam_step(&TPU_V4, 256, 2048, 256);
+        assert!(e.fits_vmem, "vmem/block = {}", e.vmem_per_block);
+        assert!(e.passes_per_s > 1e3);
+    }
+
+    #[test]
+    fn oversized_block_flagged() {
+        let e = estimate_rcam_step(&TPU_V4, 256, 1 << 20, 1 << 20);
+        assert!(!e.fits_vmem);
+    }
+
+    #[test]
+    fn hbm_bound_at_scale() {
+        // at very large arrays the kernel is HBM-streaming-bound
+        let e = estimate_rcam_step(&TPU_V4, 256, 1 << 24, 256);
+        assert!((e.passes_per_s - e.hbm_passes_per_s).abs() / e.hbm_passes_per_s < 1e-9);
+    }
+
+    #[test]
+    fn scan_residency_wins_scale_with_p() {
+        assert_eq!(vmem_residency_speedup(128), 128.0);
+    }
+}

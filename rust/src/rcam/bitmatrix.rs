@@ -1,0 +1,114 @@
+//! Bit-sliced storage for one RCAM crossbar: W bit-column planes over N rows.
+//!
+//! This is the in-data storage array itself — each `BitVec` plane holds one
+//! bit-column of every row (paper Fig. 2(a): one virtual RCAM cell pair per
+//! bit). Row-oriented access (`set_row_bits`/`row_bits`) exists for the
+//! storage-management path (dataset load/readout); the associative compute
+//! path only ever touches whole planes.
+
+use super::bitvec::BitVec;
+
+#[derive(Clone, Debug)]
+pub struct BitMatrix {
+    planes: Vec<BitVec>,
+    rows: usize,
+}
+
+impl BitMatrix {
+    pub fn new(rows: usize, width: usize) -> Self {
+        BitMatrix {
+            planes: (0..width).map(|_| BitVec::zeros(rows)).collect(),
+            rows,
+        }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn width(&self) -> usize {
+        self.planes.len()
+    }
+
+    #[inline]
+    pub fn plane(&self, col: usize) -> &BitVec {
+        &self.planes[col]
+    }
+
+    #[inline]
+    pub fn plane_mut(&mut self, col: usize) -> &mut BitVec {
+        &mut self.planes[col]
+    }
+
+    #[inline]
+    pub fn get(&self, row: usize, col: usize) -> bool {
+        self.planes[col].get(row)
+    }
+
+    #[inline]
+    pub fn set(&mut self, row: usize, col: usize, v: bool) {
+        self.planes[col].set(row, v);
+    }
+
+    /// Write `width` bits of `value` (LSB first) into columns
+    /// `[base, base+width)` of one row. Storage-path helper.
+    pub fn set_row_bits(&mut self, row: usize, base: usize, width: usize, value: u64) {
+        debug_assert!(width <= 64 && base + width <= self.width());
+        for i in 0..width {
+            self.planes[base + i].set(row, (value >> i) & 1 == 1);
+        }
+    }
+
+    /// Read `width` bits (LSB first) from columns `[base, base+width)` of one row.
+    pub fn row_bits(&self, row: usize, base: usize, width: usize) -> u64 {
+        debug_assert!(width <= 64 && base + width <= self.width());
+        let mut v = 0u64;
+        for i in 0..width {
+            if self.planes[base + i].get(row) {
+                v |= 1 << i;
+            }
+        }
+        v
+    }
+
+    /// Zero every bit of a whole column range (controller macro used to
+    /// clear temporaries; in hardware this is one untagged parallel write).
+    pub fn clear_columns(&mut self, base: usize, width: usize) {
+        for c in base..base + width {
+            self.planes[c].fill(false);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_bits_roundtrip() {
+        let mut m = BitMatrix::new(100, 32);
+        m.set_row_bits(42, 4, 16, 0xBEEF);
+        assert_eq!(m.row_bits(42, 4, 16), 0xBEEF);
+        assert_eq!(m.row_bits(42, 0, 4), 0);
+        assert_eq!(m.row_bits(42, 20, 12), 0);
+        assert_eq!(m.row_bits(41, 4, 16), 0);
+    }
+
+    #[test]
+    fn planes_are_column_major() {
+        let mut m = BitMatrix::new(70, 8);
+        m.set(65, 3, true);
+        assert!(m.plane(3).get(65));
+        assert!(!m.plane(2).get(65));
+    }
+
+    #[test]
+    fn clear_columns_only_hits_range() {
+        let mut m = BitMatrix::new(10, 8);
+        m.set_row_bits(1, 0, 8, 0xFF);
+        m.clear_columns(2, 3);
+        assert_eq!(m.row_bits(1, 0, 8), 0b1110_0011);
+    }
+}

@@ -1,0 +1,330 @@
+//! Packed bit vectors — the tag register and the unit of bit-plane storage.
+//!
+//! The RCAM simulator is *bit-sliced*: an N-row × W-column crossbar is W
+//! planes of ⌈N/64⌉ u64 words (bit r of plane j = row r, column j). All
+//! associative operations then become word-wide boolean ops, which is the
+//! simulator's hot path (see DESIGN.md §Perf).
+
+/// A packed vector of `nbits` bits backed by u64 words.
+///
+/// Bits past `nbits` in the last word are kept zero ("canonical form") by
+/// every mutating method; `debug_assert_canonical` checks the invariant.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BitVec {
+    words: Vec<u64>,
+    nbits: usize,
+}
+
+pub const WORD_BITS: usize = 64;
+
+#[inline]
+pub fn words_for(nbits: usize) -> usize {
+    nbits.div_ceil(WORD_BITS)
+}
+
+impl BitVec {
+    pub fn zeros(nbits: usize) -> Self {
+        BitVec {
+            words: vec![0; words_for(nbits)],
+            nbits,
+        }
+    }
+
+    pub fn ones(nbits: usize) -> Self {
+        let mut v = BitVec {
+            words: vec![u64::MAX; words_for(nbits)],
+            nbits,
+        };
+        v.trim();
+        v
+    }
+
+    /// Construct from a little-endian word slice (word 0 holds rows 0..64).
+    pub fn from_words(words: Vec<u64>, nbits: usize) -> Self {
+        assert_eq!(words.len(), words_for(nbits));
+        let mut v = BitVec { words, nbits };
+        v.trim();
+        v
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.nbits
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.nbits == 0
+    }
+
+    #[inline]
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    #[inline]
+    pub fn words_mut(&mut self) -> &mut [u64] {
+        &mut self.words
+    }
+
+    /// Zero the dead bits past `nbits` in the last word.
+    #[inline]
+    pub fn trim(&mut self) {
+        let tail = self.nbits % WORD_BITS;
+        if tail != 0 {
+            if let Some(last) = self.words.last_mut() {
+                *last &= (1u64 << tail) - 1;
+            }
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.nbits);
+        (self.words[i / WORD_BITS] >> (i % WORD_BITS)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, v: bool) {
+        debug_assert!(i < self.nbits);
+        let w = &mut self.words[i / WORD_BITS];
+        let m = 1u64 << (i % WORD_BITS);
+        if v {
+            *w |= m;
+        } else {
+            *w &= !m;
+        }
+    }
+
+    pub fn fill(&mut self, v: bool) {
+        let word = if v { u64::MAX } else { 0 };
+        self.words.iter_mut().for_each(|w| *w = word);
+        self.trim();
+    }
+
+    /// Number of set bits.
+    pub fn count_ones(&self) -> u64 {
+        self.words.iter().map(|w| w.count_ones() as u64).sum()
+    }
+
+    /// True iff at least one bit is set (the `if_match` primitive).
+    pub fn any(&self) -> bool {
+        self.words.iter().any(|&w| w != 0)
+    }
+
+    /// Index of the first (lowest) set bit, if any.
+    pub fn first_one(&self) -> Option<usize> {
+        for (i, &w) in self.words.iter().enumerate() {
+            if w != 0 {
+                return Some(i * WORD_BITS + w.trailing_zeros() as usize);
+            }
+        }
+        None
+    }
+
+    /// Keep only the first set bit, clearing the rest (the `first_match`
+    /// tag-logic primitive, paper Fig. 3(b)). Returns its index, if any.
+    pub fn keep_first_one(&mut self) -> Option<usize> {
+        let idx = self.first_one()?;
+        self.words.iter_mut().for_each(|w| *w = 0);
+        self.words[idx / WORD_BITS] = 1u64 << (idx % WORD_BITS);
+        Some(idx)
+    }
+
+    /// self &= other
+    pub fn and_assign(&mut self, other: &BitVec) {
+        debug_assert_eq!(self.nbits, other.nbits);
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a &= b;
+        }
+    }
+
+    /// self &= !other
+    pub fn and_not_assign(&mut self, other: &BitVec) {
+        debug_assert_eq!(self.nbits, other.nbits);
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a &= !b;
+        }
+    }
+
+    /// self |= other
+    pub fn or_assign(&mut self, other: &BitVec) {
+        debug_assert_eq!(self.nbits, other.nbits);
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a |= b;
+        }
+    }
+
+    /// Shift the whole vector towards higher indices (row r -> row r+1) by
+    /// `by` positions, dropping bits at the top and inserting zeros at the
+    /// bottom. This models the daisy-chain inter-PU interconnect (paper
+    /// §3.1): each PU sees its predecessor's bit after one hop.
+    pub fn shift_up(&mut self, by: usize) {
+        if by == 0 {
+            return;
+        }
+        if by >= self.nbits {
+            self.fill(false);
+            return;
+        }
+        let word_shift = by / WORD_BITS;
+        let bit_shift = by % WORD_BITS;
+        let n = self.words.len();
+        for i in (0..n).rev() {
+            let lo = if i >= word_shift {
+                self.words[i - word_shift]
+            } else {
+                0
+            };
+            let hi = if bit_shift > 0 && i > word_shift {
+                self.words[i - word_shift - 1] >> (WORD_BITS - bit_shift)
+            } else {
+                0
+            };
+            self.words[i] = if bit_shift == 0 { lo } else { (lo << bit_shift) | hi };
+        }
+        self.trim();
+    }
+
+    /// Shift towards lower indices (row r -> row r-1).
+    pub fn shift_down(&mut self, by: usize) {
+        if by == 0 {
+            return;
+        }
+        if by >= self.nbits {
+            self.fill(false);
+            return;
+        }
+        let word_shift = by / WORD_BITS;
+        let bit_shift = by % WORD_BITS;
+        let n = self.words.len();
+        for i in 0..n {
+            let lo = if i + word_shift < n {
+                self.words[i + word_shift]
+            } else {
+                0
+            };
+            let hi = if bit_shift > 0 && i + word_shift + 1 < n {
+                self.words[i + word_shift + 1] << (WORD_BITS - bit_shift)
+            } else {
+                0
+            };
+            self.words[i] = if bit_shift == 0 { lo } else { (lo >> bit_shift) | hi };
+        }
+        self.trim();
+    }
+
+    /// Iterate over indices of set bits.
+    pub fn iter_ones(&self) -> impl Iterator<Item = usize> + '_ {
+        self.words.iter().enumerate().flat_map(|(i, &w)| {
+            let mut w = w;
+            std::iter::from_fn(move || {
+                if w == 0 {
+                    None
+                } else {
+                    let b = w.trailing_zeros() as usize;
+                    w &= w - 1;
+                    Some(i * WORD_BITS + b)
+                }
+            })
+        })
+    }
+
+    #[cfg(debug_assertions)]
+    pub fn debug_assert_canonical(&self) {
+        let tail = self.nbits % WORD_BITS;
+        if tail != 0 {
+            debug_assert_eq!(self.words.last().unwrap() & !((1u64 << tail) - 1), 0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut v = BitVec::zeros(130);
+        for i in [0, 1, 63, 64, 65, 127, 128, 129] {
+            assert!(!v.get(i));
+            v.set(i, true);
+            assert!(v.get(i));
+        }
+        assert_eq!(v.count_ones(), 8);
+        v.set(64, false);
+        assert_eq!(v.count_ones(), 7);
+    }
+
+    #[test]
+    fn ones_is_canonical() {
+        let v = BitVec::ones(70);
+        assert_eq!(v.count_ones(), 70);
+        assert_eq!(v.words()[1] >> 6, 0);
+    }
+
+    #[test]
+    fn first_and_keep_first() {
+        let mut v = BitVec::zeros(200);
+        v.set(77, true);
+        v.set(150, true);
+        assert_eq!(v.first_one(), Some(77));
+        assert_eq!(v.keep_first_one(), Some(77));
+        assert_eq!(v.count_ones(), 1);
+        assert!(v.get(77));
+        assert!(!v.get(150));
+        let mut empty = BitVec::zeros(10);
+        assert_eq!(empty.keep_first_one(), None);
+    }
+
+    #[test]
+    fn boolean_ops() {
+        let mut a = BitVec::zeros(100);
+        let mut b = BitVec::zeros(100);
+        a.set(3, true);
+        a.set(70, true);
+        b.set(70, true);
+        b.set(99, true);
+        let mut c = a.clone();
+        c.and_assign(&b);
+        assert_eq!(c.iter_ones().collect::<Vec<_>>(), vec![70]);
+        let mut d = a.clone();
+        d.or_assign(&b);
+        assert_eq!(d.iter_ones().collect::<Vec<_>>(), vec![3, 70, 99]);
+        let mut e = a.clone();
+        e.and_not_assign(&b);
+        assert_eq!(e.iter_ones().collect::<Vec<_>>(), vec![3]);
+    }
+
+    #[test]
+    fn shifts_move_rows() {
+        let mut v = BitVec::zeros(192);
+        v.set(0, true);
+        v.set(100, true);
+        v.shift_up(3);
+        assert_eq!(v.iter_ones().collect::<Vec<_>>(), vec![3, 103]);
+        v.shift_down(4);
+        assert_eq!(v.iter_ones().collect::<Vec<_>>(), vec![99]);
+        v.shift_up(1000);
+        assert!(!v.any());
+    }
+
+    #[test]
+    fn shift_up_drops_top_bits() {
+        let mut v = BitVec::zeros(64);
+        v.set(63, true);
+        v.set(1, true);
+        v.shift_up(1);
+        assert_eq!(v.iter_ones().collect::<Vec<_>>(), vec![2]);
+    }
+
+    #[test]
+    fn iter_ones_matches_gets() {
+        let mut v = BitVec::zeros(300);
+        let idxs = [0usize, 5, 64, 65, 128, 191, 192, 299];
+        for &i in &idxs {
+            v.set(i, true);
+        }
+        assert_eq!(v.iter_ones().collect::<Vec<_>>(), idxs.to_vec());
+    }
+}

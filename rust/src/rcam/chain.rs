@@ -1,0 +1,447 @@
+//! The PRINS array: multiple daisy-chained RCAM modules (paper Fig. 4),
+//! presented to the controller as a single associative address space.
+//!
+//! Every associative instruction is broadcast to all modules; they execute
+//! it simultaneously in hardware, so the array charges each instruction's
+//! cycle cost ONCE while energy events accrue in every module. The daisy
+//! chain links the last PU of module k to the first PU of module k+1, so
+//! tag shifts ripple across module boundaries; per-module reduction-tree
+//! outputs are cascaded/accumulated in the controller's data buffer.
+
+use super::bitvec::BitVec;
+use super::device::{
+    DeviceModel, EnergyLedger, CYCLES_COMPARE, CYCLES_READ, CYCLES_REDUCE_ISSUE,
+    CYCLES_TAG_OP, CYCLES_WRITE,
+};
+use super::module::{Pattern, RcamModule};
+
+#[derive(Clone, Debug)]
+pub struct PrinsArray {
+    modules: Vec<RcamModule>,
+    rows_per_module: usize,
+    width: usize,
+    pub device: DeviceModel,
+    /// Total elapsed cycles across all executed instructions.
+    pub cycles: u64,
+}
+
+impl PrinsArray {
+    pub fn new(n_modules: usize, rows_per_module: usize, width: usize) -> Self {
+        Self::with_device(n_modules, rows_per_module, width, DeviceModel::default())
+    }
+
+    pub fn with_device(
+        n_modules: usize,
+        rows_per_module: usize,
+        width: usize,
+        device: DeviceModel,
+    ) -> Self {
+        assert!(n_modules > 0 && rows_per_module > 0 && width > 0);
+        PrinsArray {
+            modules: (0..n_modules)
+                .map(|_| RcamModule::new(rows_per_module, width))
+                .collect(),
+            rows_per_module,
+            width,
+            device,
+            cycles: 0,
+        }
+    }
+
+    pub fn single(rows: usize, width: usize) -> Self {
+        Self::new(1, rows, width)
+    }
+
+    /// Enable per-row wear counters on every module (costs O(tagged rows)
+    /// per write in simulation; off by default).
+    pub fn enable_wear_tracking(&mut self) {
+        let (r, w) = (self.rows_per_module, self.width);
+        for m in &mut self.modules {
+            *m = RcamModule::with_wear_tracking(r, w);
+        }
+    }
+
+    #[inline]
+    pub fn total_rows(&self) -> usize {
+        self.rows_per_module * self.modules.len()
+    }
+
+    #[inline]
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    #[inline]
+    pub fn n_modules(&self) -> usize {
+        self.modules.len()
+    }
+
+    #[inline]
+    pub fn modules(&self) -> &[RcamModule] {
+        &self.modules
+    }
+
+    #[inline]
+    fn split(&self, row: usize) -> (usize, usize) {
+        (row / self.rows_per_module, row % self.rows_per_module)
+    }
+
+    /// Merged energy ledger over all modules.
+    pub fn ledger(&self) -> EnergyLedger {
+        let mut total = EnergyLedger::default();
+        for m in &self.modules {
+            total.add(&m.ledger);
+        }
+        total
+    }
+
+    // ----- broadcast associative instructions ---------------------------
+
+    pub fn compare(&mut self, pattern: &Pattern) {
+        for m in &mut self.modules {
+            m.compare(pattern);
+        }
+        self.cycles += CYCLES_COMPARE;
+    }
+
+    pub fn write(&mut self, pattern: &Pattern) {
+        for m in &mut self.modules {
+            m.write(pattern);
+        }
+        self.cycles += CYCLES_WRITE;
+    }
+
+    /// compare immediately followed by tagged write — the microcode pass.
+    pub fn pass(&mut self, cpat: &Pattern, wpat: &Pattern) {
+        self.compare(cpat);
+        self.write(wpat);
+    }
+
+    pub fn if_match(&mut self) -> bool {
+        let mut any = false;
+        for m in &mut self.modules {
+            any |= m.if_match();
+        }
+        self.cycles += CYCLES_TAG_OP;
+        any
+    }
+
+    /// Global first_match: the daisy-chained first-match circuits keep the
+    /// first tag of the first module that has one and clear all others.
+    /// Returns the global row index.
+    pub fn first_match(&mut self) -> Option<usize> {
+        let mut found: Option<usize> = None;
+        for (i, m) in self.modules.iter_mut().enumerate() {
+            if found.is_none() {
+                if let Some(r) = m.first_match() {
+                    found = Some(i * self.rows_per_module + r);
+                }
+            } else {
+                m.tags_mut().fill(false);
+            }
+        }
+        self.cycles += CYCLES_TAG_OP;
+        found
+    }
+
+    /// Read a field from the first tagged row anywhere in the chain.
+    pub fn read_first(&mut self, base: u16, width: u16) -> Option<u64> {
+        self.cycles += CYCLES_READ;
+        for m in &mut self.modules {
+            if let Some(v) = m.read_first(base, width) {
+                return Some(v);
+            }
+        }
+        None
+    }
+
+    /// Total tagged rows (per-module reduction trees + controller add).
+    pub fn count_tags(&mut self) -> u64 {
+        let mut n = 0;
+        for m in &mut self.modules {
+            n += m.count_tags();
+        }
+        self.cycles += CYCLES_REDUCE_ISSUE;
+        n
+    }
+
+    /// Weighted popcount: tagged rows whose bit-column `col` is set.
+    pub fn count_tags_and_col(&mut self, col: u16) -> u64 {
+        let mut n = 0;
+        for m in &mut self.modules {
+            n += m.count_tags_and_col(col);
+        }
+        self.cycles += CYCLES_REDUCE_ISSUE;
+        n
+    }
+
+    /// Reduction-tree drain latency (charged once per dependent readout).
+    pub fn reduction_latency_cycles(&self) -> u64 {
+        let per_module = (self.rows_per_module.max(2) as f64).log2().ceil() as u64;
+        // cascaded module outputs accumulate down the chain
+        per_module + self.modules.len() as u64 - 1
+    }
+
+    pub fn charge_reduction_latency(&mut self) {
+        self.cycles += self.reduction_latency_cycles();
+    }
+
+    pub fn set_tags_all(&mut self) {
+        for m in &mut self.modules {
+            m.set_tags_all();
+        }
+        self.cycles += CYCLES_TAG_OP;
+    }
+
+    /// Shift the global tag vector towards higher rows by `hops` (daisy
+    /// chain, 1 hop per cycle, carries ripple across module boundaries).
+    pub fn shift_tags_up(&mut self, hops: usize) {
+        for _ in 0..hops {
+            let mut carry = false;
+            for m in &mut self.modules {
+                let last = m.tags().get(m.rows() - 1);
+                let t = m.tags_mut();
+                t.shift_up(1);
+                t.set(0, carry);
+                carry = last;
+            }
+        }
+        self.cycles += (hops as u64) * CYCLES_TAG_OP;
+        let bits = (self.total_rows() as u128) * (hops as u128);
+        if let Some(m0) = self.modules.first_mut() {
+            m0.ledger.chain_bit_events += bits;
+        }
+    }
+
+    /// Shift the global tag vector towards lower rows by `hops`.
+    pub fn shift_tags_down(&mut self, hops: usize) {
+        for _ in 0..hops {
+            let mut carry = false;
+            for m in self.modules.iter_mut().rev() {
+                let first = m.tags().get(0);
+                let t = m.tags_mut();
+                t.shift_down(1);
+                let top = t.len() - 1;
+                t.set(top, carry);
+                carry = first;
+            }
+        }
+        self.cycles += (hops as u64) * CYCLES_TAG_OP;
+        let bits = (self.total_rows() as u128) * (hops as u128);
+        if let Some(m0) = self.modules.first_mut() {
+            m0.ledger.chain_bit_events += bits;
+        }
+    }
+
+    /// Daisy-chain field move (paper §3.1: "A daisy-chain like bitwise
+    /// interconnect allows PUs to intercommunicate, all PUs in parallel"):
+    /// copy planes [src..src+width) into [dst..dst+width), shifted `hops`
+    /// rows towards LOWER indices (row r receives row r+hops; the top
+    /// `hops` rows receive zeros). All bit-columns move in parallel
+    /// (bitwise chain), one hop per cycle → cost = `hops` cycles.
+    /// Source planes are preserved (dst must not overlap src).
+    pub fn shift_columns_to(&mut self, src: u16, dst: u16, width: u16, hops: usize) {
+        assert!(
+            dst + width <= src || src + width <= dst,
+            "shift_columns_to: src/dst overlap"
+        );
+        let total = self.total_rows();
+        let rpm = self.rows_per_module;
+        let word_aligned = rpm % 64 == 0;
+        for i in 0..width {
+            // gather the global source plane (word-level when modules are
+            // 64-row aligned — the §Perf fast path; bit-level fallback)
+            let mut global = if word_aligned {
+                let mut words = Vec::with_capacity(total.div_ceil(64));
+                for m in self.modules.iter() {
+                    words.extend_from_slice(m.storage().plane((src + i) as usize).words());
+                }
+                BitVec::from_words(words, total)
+            } else {
+                let mut g = BitVec::zeros(total);
+                for (mi, m) in self.modules.iter().enumerate() {
+                    let p = m.storage().plane((src + i) as usize);
+                    for r in p.iter_ones() {
+                        g.set(mi * rpm + r, true);
+                    }
+                }
+                g
+            };
+            global.shift_down(hops);
+            // scatter into the destination plane
+            if word_aligned {
+                let wpm = rpm / 64;
+                for (mi, m) in self.modules.iter_mut().enumerate() {
+                    let words = global.words()[mi * wpm..(mi + 1) * wpm].to_vec();
+                    m.replace_plane(dst + i, BitVec::from_words(words, rpm));
+                }
+            } else {
+                for (mi, m) in self.modules.iter_mut().enumerate() {
+                    let mut local = BitVec::zeros(rpm);
+                    for r in 0..rpm {
+                        if global.get(mi * rpm + r) {
+                            local.set(r, true);
+                        }
+                    }
+                    m.replace_plane(dst + i, local);
+                }
+            }
+        }
+        self.cycles += hops as u64;
+        let bits = (total as u128) * (width as u128) * (hops as u128);
+        if let Some(m0) = self.modules.first_mut() {
+            m0.ledger.chain_bit_events += bits;
+        }
+    }
+
+    /// Snapshot of the global tag vector (test/debug aid, not an ISA op).
+    pub fn tags_snapshot(&self) -> BitVec {
+        let mut out = BitVec::zeros(self.total_rows());
+        for (i, m) in self.modules.iter().enumerate() {
+            for r in m.tags().iter_ones() {
+                out.set(i * self.rows_per_module + r, true);
+            }
+        }
+        out
+    }
+
+    /// Clear a column range across the whole array.
+    pub fn clear_columns(&mut self, base: u16, width: u16) {
+        for m in &mut self.modules {
+            m.clear_columns(base, width);
+        }
+        self.cycles += CYCLES_WRITE;
+    }
+
+    // ----- storage-management access path --------------------------------
+
+    pub fn load_row_bits(&mut self, row: usize, base: usize, width: usize, value: u64) {
+        let (mi, r) = self.split(row);
+        self.modules[mi].load_row_bits(r, base, width, value);
+    }
+
+    pub fn fetch_row_bits(&self, row: usize, base: usize, width: usize) -> u64 {
+        let (mi, r) = self.split(row);
+        self.modules[mi].fetch_row_bits(r, base, width)
+    }
+
+    /// Elapsed wall-clock time of everything executed so far.
+    pub fn elapsed_seconds(&self) -> f64 {
+        self.device.cycles_to_seconds(self.cycles)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A 4-module chain must behave exactly like one flat module.
+    #[test]
+    fn chain_equivalent_to_single_module() {
+        let rows = 256;
+        let mut chain = PrinsArray::new(4, rows / 4, 16);
+        let mut flat = PrinsArray::single(rows, 16);
+        // identical contents
+        for r in 0..rows {
+            let v = ((r as u64).wrapping_mul(2654435761)) & 0xFFFF;
+            chain.load_row_bits(r, 0, 16, v);
+            flat.load_row_bits(r, 0, 16, v);
+        }
+        let pat: Vec<(u16, bool)> = vec![(3, true), (7, false)];
+        chain.compare(&pat);
+        flat.compare(&pat);
+        assert_eq!(
+            chain.tags_snapshot().iter_ones().collect::<Vec<_>>(),
+            flat.tags_snapshot().iter_ones().collect::<Vec<_>>()
+        );
+        assert_eq!(chain.count_tags(), flat.count_tags());
+        chain.write(&[(15, true)]);
+        flat.write(&[(15, true)]);
+        for r in 0..rows {
+            assert_eq!(chain.fetch_row_bits(r, 0, 16), flat.fetch_row_bits(r, 0, 16));
+        }
+        // cycle cost identical regardless of module count (SIMD broadcast)
+        assert_eq!(chain.cycles, flat.cycles);
+    }
+
+    #[test]
+    fn global_first_match_spans_modules() {
+        let mut a = PrinsArray::new(3, 10, 8);
+        a.load_row_bits(25, 0, 1, 1); // module 2
+        a.load_row_bits(13, 0, 1, 1); // module 1
+        a.compare(&[(0, true)]);
+        assert_eq!(a.first_match(), Some(13));
+        let snap = a.tags_snapshot();
+        assert_eq!(snap.iter_ones().collect::<Vec<_>>(), vec![13]);
+    }
+
+    #[test]
+    fn read_first_finds_any_module() {
+        let mut a = PrinsArray::new(2, 8, 16);
+        a.load_row_bits(11, 0, 1, 1);
+        a.load_row_bits(11, 4, 8, 0x5A);
+        a.compare(&[(0, true)]);
+        assert_eq!(a.read_first(4, 8), Some(0x5A));
+    }
+
+    #[test]
+    fn tag_shift_crosses_module_boundary() {
+        let mut a = PrinsArray::new(2, 4, 4);
+        a.load_row_bits(3, 0, 1, 1); // last row of module 0
+        a.compare(&[(0, true)]);
+        a.shift_tags_up(1);
+        assert_eq!(a.tags_snapshot().iter_ones().collect::<Vec<_>>(), vec![4]);
+        a.shift_tags_down(2);
+        assert_eq!(a.tags_snapshot().iter_ones().collect::<Vec<_>>(), vec![2]);
+    }
+
+    #[test]
+    fn cycles_follow_documented_costs() {
+        let mut a = PrinsArray::single(64, 8);
+        let c0 = a.cycles;
+        a.compare(&[(0, true)]);
+        assert_eq!(a.cycles - c0, 1);
+        a.write(&[(1, true)]);
+        assert_eq!(a.cycles - c0, 3); // write is two-phase
+        a.count_tags();
+        assert_eq!(a.cycles - c0, 4);
+        a.if_match();
+        assert_eq!(a.cycles - c0, 5);
+    }
+
+    #[test]
+    fn reduction_latency_scales_with_chain() {
+        let a1 = PrinsArray::single(1 << 20, 8);
+        assert_eq!(a1.reduction_latency_cycles(), 20);
+        let a4 = PrinsArray::new(4, 1 << 18, 8);
+        assert_eq!(a4.reduction_latency_cycles(), 18 + 3);
+    }
+}
+#[cfg(test)]
+mod shift_tests {
+    use super::*;
+
+    #[test]
+    fn shift_columns_to_moves_fields_down() {
+        let mut a = PrinsArray::new(2, 8, 16); // 16 rows across 2 modules
+        for r in 0..16 {
+            a.load_row_bits(r, 0, 4, (r % 16) as u64);
+        }
+        let c0 = a.cycles;
+        a.shift_columns_to(0, 8, 4, 3);
+        assert_eq!(a.cycles - c0, 3, "hops cycles");
+        for r in 0..16 {
+            let expect = if r + 3 < 16 { ((r + 3) % 16) as u64 } else { 0 };
+            assert_eq!(a.fetch_row_bits(r, 8, 4), expect, "row {r}");
+            // source preserved
+            assert_eq!(a.fetch_row_bits(r, 0, 4), (r % 16) as u64);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "overlap")]
+    fn shift_columns_overlap_rejected() {
+        let mut a = PrinsArray::single(8, 8);
+        a.shift_columns_to(0, 2, 4, 1);
+    }
+}

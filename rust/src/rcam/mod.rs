@@ -1,0 +1,23 @@
+//! RCAM substrate: the resistive content-addressable storage array that is
+//! simultaneously the PRINS processor (paper §3).
+//!
+//! Layering:
+//!   [`bitvec`]    — packed bit vectors (tag register, plane storage unit)
+//!   [`bitmatrix`] — bit-sliced crossbar storage (W planes × N rows)
+//!   [`device`]    — memristor/periphery constants; event → time/energy
+//!   [`module`]    — one RCAM module: compare / write / read / tag logic /
+//!                   reduction tree (paper Fig. 2 + Fig. 3)
+//!   [`chain`]     — daisy-chained modules as one associative address
+//!                   space (paper Fig. 4)
+
+pub mod bitmatrix;
+pub mod bitvec;
+pub mod chain;
+pub mod device;
+pub mod module;
+
+pub use bitmatrix::BitMatrix;
+pub use bitvec::BitVec;
+pub use chain::PrinsArray;
+pub use device::{DeviceModel, EnergyLedger};
+pub use module::{Pattern, RcamModule};

@@ -1,0 +1,299 @@
+//! One RCAM module (paper Fig. 2): resistive crossbar + peripheral
+//! circuitry — key/mask comparand, tag logic, reduction tree port.
+//!
+//! The key and mask registers of the hardware are represented here by the
+//! *pattern* argument of `compare`/`write`: a sparse list of
+//! `(column, bit)` pairs — exactly the unmasked columns and their key
+//! bits. Columns absent from the pattern are masked out (Bit/Bit-not lines
+//! floating). This is both the natural microcode form and the simulator's
+//! fast path: cost is proportional to the number of *unmasked* columns
+//! only, mirroring the energy behaviour of the real array (match-line
+//! current flows only through connected cells).
+
+use super::bitmatrix::BitMatrix;
+use super::bitvec::BitVec;
+use super::device::EnergyLedger;
+
+/// Sparse key/mask pattern: (bit-column, key bit). Columns not listed are
+/// masked out.
+pub type Pattern = [(u16, bool)];
+
+#[derive(Clone, Debug)]
+pub struct RcamModule {
+    storage: BitMatrix,
+    tags: BitVec,
+    /// Per-row write counters for endurance/wear-levelling analysis
+    /// (None = tracking disabled; it is O(tagged rows) per write).
+    wear: Option<Vec<u32>>,
+    pub ledger: EnergyLedger,
+}
+
+impl RcamModule {
+    pub fn new(rows: usize, width: usize) -> Self {
+        RcamModule {
+            storage: BitMatrix::new(rows, width),
+            tags: BitVec::zeros(rows),
+            wear: None,
+            ledger: EnergyLedger::default(),
+        }
+    }
+
+    pub fn with_wear_tracking(rows: usize, width: usize) -> Self {
+        let mut m = Self::new(rows, width);
+        m.wear = Some(vec![0; rows]);
+        m
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.storage.rows()
+    }
+
+    #[inline]
+    pub fn width(&self) -> usize {
+        self.storage.width()
+    }
+
+    #[inline]
+    pub fn tags(&self) -> &BitVec {
+        &self.tags
+    }
+
+    #[inline]
+    pub fn tags_mut(&mut self) -> &mut BitVec {
+        &mut self.tags
+    }
+
+    #[inline]
+    pub fn storage(&self) -> &BitMatrix {
+        &self.storage
+    }
+
+    pub fn wear_counters(&self) -> Option<&[u32]> {
+        self.wear.as_deref()
+    }
+
+    /// Compare: tag every row whose (unmasked) columns equal the key
+    /// (paper §3.1). An empty pattern tags every row (floating lines never
+    /// discharge the match line).
+    ///
+    /// Energy: the match line spans the ENTIRE row, so every compare
+    /// precharges W cells per row regardless of how many columns are
+    /// unmasked — compare energy is rows × width × E_cmp/bit (paper §3.1:
+    /// "less than 1 fJ per bit" is per match-line cell).
+    pub fn compare(&mut self, pattern: &Pattern) {
+        self.tags.fill(true);
+        for &(col, bit) in pattern {
+            let plane = self.storage.plane(col as usize);
+            if bit {
+                self.tags.and_assign(plane);
+            } else {
+                self.tags.and_not_assign(plane);
+            }
+        }
+        self.ledger.n_compare += 1;
+        self.ledger.compare_bit_events += (self.width() * self.rows()) as u128;
+    }
+
+    /// Parallel write of the key into the unmasked columns of every
+    /// *tagged* row (two-phase, paper §3.1).
+    pub fn write(&mut self, pattern: &Pattern) {
+        let tagged = self.tags.count_ones();
+        for &(col, bit) in pattern {
+            let plane = self.storage.plane_mut(col as usize);
+            if bit {
+                plane.or_assign(&self.tags);
+            } else {
+                plane.and_not_assign(&self.tags);
+            }
+        }
+        self.ledger.n_write += 1;
+        self.ledger.write_bit_events += (pattern.len() as u128) * (tagged as u128);
+        if let Some(wear) = &mut self.wear {
+            for r in self.tags.iter_ones() {
+                wear[r] += 1;
+            }
+        }
+    }
+
+    /// Read `width` bits at `base` from the first tagged row, if any
+    /// (paper §5.2: read moves a masked field of a tagged row to the key
+    /// register).
+    pub fn read_first(&mut self, base: u16, width: u16) -> Option<u64> {
+        let row = self.tags.first_one()?;
+        self.ledger.n_read += 1;
+        Some(self.storage.row_bits(row, base as usize, width as usize))
+    }
+
+    /// `first_match` tag-logic primitive: keep only the first tag.
+    pub fn first_match(&mut self) -> Option<usize> {
+        self.ledger.n_tag_op += 1;
+        self.tags.keep_first_one()
+    }
+
+    /// `if_match`: at least one tag set.
+    pub fn if_match(&mut self) -> bool {
+        self.ledger.n_tag_op += 1;
+        self.tags.any()
+    }
+
+    /// Reduction tree over tag bits (paper §3.1: logarithmic adder tree).
+    pub fn count_tags(&mut self) -> u64 {
+        let n = self.tags.count_ones();
+        self.ledger.n_reduce += 1;
+        self.ledger.reduce_bit_events +=
+            (self.rows() as u128) * (self.tree_levels() as u128);
+        n
+    }
+
+    /// Reduction over (tags AND bit-column) — the weighted popcount used by
+    /// bit-serial field reductions (histogram counts, SpMV row sums).
+    pub fn count_tags_and_col(&mut self, col: u16) -> u64 {
+        let plane = self.storage.plane(col as usize);
+        let n: u64 = self
+            .tags
+            .words()
+            .iter()
+            .zip(plane.words())
+            .map(|(t, p)| (t & p).count_ones() as u64)
+            .sum();
+        self.ledger.n_reduce += 1;
+        self.ledger.reduce_bit_events +=
+            (self.rows() as u128) * (self.tree_levels() as u128);
+        n
+    }
+
+    #[inline]
+    pub fn tree_levels(&self) -> u32 {
+        (self.rows().max(2) as f64).log2().ceil() as u32
+    }
+
+    /// Tag every row (controller macro; hardware: compare with empty mask).
+    pub fn set_tags_all(&mut self) {
+        self.tags.fill(true);
+        self.ledger.n_tag_op += 1;
+    }
+
+    // ----- storage-management (non-associative) access path -------------
+
+    /// Direct row write used by the storage manager for dataset load.
+    /// Charged as a (row-local) write of `width` bits.
+    pub fn load_row_bits(&mut self, row: usize, base: usize, width: usize, value: u64) {
+        self.storage.set_row_bits(row, base, width, value);
+        self.ledger.write_bit_events += width as u128;
+        if let Some(wear) = &mut self.wear {
+            wear[row] += 1;
+        }
+    }
+
+    /// Direct row read used by the storage manager for result readout.
+    pub fn fetch_row_bits(&self, row: usize, base: usize, width: usize) -> u64 {
+        self.storage.row_bits(row, base, width)
+    }
+
+    /// Replace a plane wholesale (used by the array-level daisy-chain
+    /// field move; not an ISA operation by itself).
+    pub fn replace_plane(&mut self, col: u16, plane: BitVec) {
+        *self.storage.plane_mut(col as usize) = plane;
+    }
+
+    /// Clear a column range in every row (controller macro: one untagged
+    /// parallel write per column pair).
+    pub fn clear_columns(&mut self, base: u16, width: u16) {
+        let rows = self.rows() as u128;
+        self.storage.clear_columns(base as usize, width as usize);
+        self.ledger.n_write += 1;
+        self.ledger.write_bit_events += width as u128 * rows;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn load(m: &mut RcamModule, rows: &[(usize, u64)], base: usize, width: usize) {
+        for &(r, v) in rows {
+            m.storage.set_row_bits(r, base, width, v);
+        }
+    }
+
+    #[test]
+    fn compare_tags_matching_rows() {
+        let mut m = RcamModule::new(100, 16);
+        load(&mut m, &[(3, 0b1010), (7, 0b1010), (9, 0b0110)], 0, 4);
+        // key = 1010 over columns 0..4
+        m.compare(&[(0, false), (1, true), (2, false), (3, true)]);
+        assert_eq!(m.tags().iter_ones().collect::<Vec<_>>(), vec![3, 7]);
+    }
+
+    #[test]
+    fn empty_pattern_tags_all() {
+        let mut m = RcamModule::new(70, 8);
+        m.compare(&[]);
+        assert_eq!(m.tags().count_ones(), 70);
+    }
+
+    #[test]
+    fn write_hits_only_tagged_rows() {
+        let mut m = RcamModule::new(10, 8);
+        load(&mut m, &[(2, 1), (5, 1)], 0, 1);
+        m.compare(&[(0, true)]);
+        m.write(&[(4, true), (5, false)]);
+        assert_eq!(m.storage().row_bits(2, 4, 2), 0b01);
+        assert_eq!(m.storage().row_bits(5, 4, 2), 0b01);
+        assert_eq!(m.storage().row_bits(3, 4, 2), 0);
+    }
+
+    #[test]
+    fn first_match_and_read() {
+        let mut m = RcamModule::new(50, 16);
+        load(&mut m, &[(11, 1), (30, 1)], 0, 1);
+        load(&mut m, &[(11, 0xAB), (30, 0xCD)], 8, 8);
+        m.compare(&[(0, true)]);
+        assert!(m.if_match());
+        assert_eq!(m.first_match(), Some(11));
+        assert_eq!(m.read_first(8, 8), Some(0xAB));
+        // untag everything -> read yields None
+        m.compare(&[(7, true)]);
+        assert!(!m.if_match());
+        assert_eq!(m.read_first(8, 8), None);
+    }
+
+    #[test]
+    fn reduction_counts() {
+        let mut m = RcamModule::new(64, 8);
+        for r in 0..10 {
+            m.storage.set_row_bits(r, 0, 1, 1);
+        }
+        for r in 0..5 {
+            m.storage.set_row_bits(r, 1, 1, 1);
+        }
+        m.compare(&[(0, true)]);
+        assert_eq!(m.count_tags(), 10);
+        assert_eq!(m.count_tags_and_col(1), 5);
+    }
+
+    #[test]
+    fn energy_events_accrue() {
+        let mut m = RcamModule::new(100, 8);
+        m.compare(&[(0, false), (1, false)]); // tags all 100 rows
+        // full match-line precharge: 8 cells x 100 rows
+        assert_eq!(m.ledger.compare_bit_events, 800);
+        m.write(&[(2, true)]);
+        assert_eq!(m.ledger.write_bit_events, 100);
+        assert_eq!(m.ledger.n_compare, 1);
+        assert_eq!(m.ledger.n_write, 1);
+    }
+
+    #[test]
+    fn wear_tracking_counts_tagged_writes() {
+        let mut m = RcamModule::with_wear_tracking(10, 8);
+        m.storage.set_row_bits(4, 0, 1, 1);
+        m.compare(&[(0, true)]);
+        m.write(&[(1, true)]);
+        m.write(&[(2, true)]);
+        let wear = m.wear_counters().unwrap();
+        assert_eq!(wear[4], 2);
+        assert_eq!(wear[3], 0);
+    }
+}

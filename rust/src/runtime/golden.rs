@@ -1,0 +1,133 @@
+//! Golden executors: the reference architecture's numeric kernels
+//! (ED / DP / histogram / SpMV), AOT-compiled from python/compile/kernels/
+//! golden.py and executed via PJRT. `prins validate` and the integration
+//! tests use these to cross-check the associative results end-to-end.
+//!
+//! Artifact shapes are fixed (manifest); inputs are padded/chunked here.
+
+use super::{lit, Runtime};
+use anyhow::{bail, Result};
+
+pub struct Golden {
+    rt: Runtime,
+}
+
+impl Golden {
+    pub fn new(rt: Runtime) -> Self {
+        Golden { rt }
+    }
+
+    pub fn open_default() -> Result<Self> {
+        Ok(Golden::new(Runtime::open_default()?))
+    }
+
+    /// Squared Euclidean distances of samples (row-major n×d) to a center.
+    pub fn euclidean(&mut self, x: &[f32], n: usize, d: usize, center: &[f32]) -> Result<Vec<f32>> {
+        self.dense2d("golden_ed", x, n, d, center)
+    }
+
+    /// Dot products of vectors (row-major n×d) with a hyperplane.
+    pub fn dot_product(&mut self, x: &[f32], n: usize, d: usize, h: &[f32]) -> Result<Vec<f32>> {
+        self.dense2d("golden_dp", x, n, d, h)
+    }
+
+    fn dense2d(
+        &mut self,
+        entry: &str,
+        x: &[f32],
+        n: usize,
+        d: usize,
+        vec: &[f32],
+    ) -> Result<Vec<f32>> {
+        if x.len() != n * d || vec.len() != d {
+            bail!("shape mismatch");
+        }
+        let (gn, gd) = (self.rt.manifest.golden_n, self.rt.manifest.golden_d);
+        if d > gd {
+            bail!("d={d} exceeds artifact dim {gd}");
+        }
+        // pad dims with zeros (neutral for both ED and DP), chunk rows
+        let mut out = Vec::with_capacity(n);
+        let mut vpad = vec.to_vec();
+        vpad.resize(gd, 0.0);
+        let vlit_src = vpad;
+        for chunk_start in (0..n).step_by(gn) {
+            let rows = (n - chunk_start).min(gn);
+            let mut xpad = vec![0f32; gn * gd];
+            for r in 0..rows {
+                let src = &x[(chunk_start + r) * d..(chunk_start + r) * d + d];
+                xpad[r * gd..r * gd + d].copy_from_slice(src);
+            }
+            let res = self.rt.execute(
+                entry,
+                &[lit::f32_2d(&xpad, gn, gd)?, lit::f32_1d(&vlit_src)],
+            )?;
+            let v = lit::to_f32(&res[0])?;
+            out.extend_from_slice(&v[..rows]);
+        }
+        Ok(out)
+    }
+
+    /// 256-bin histogram on the top byte (Algorithm 3 semantics).
+    pub fn histogram(&mut self, x: &[u32]) -> Result<Vec<i32>> {
+        let hn = self.rt.manifest.hist_n;
+        let mut total = vec![0i32; 256];
+        for chunk in x.chunks(hn) {
+            let mut xpad = chunk.to_vec();
+            // pad with a sentinel that lands in bin 0; subtract afterwards
+            let pad = hn - chunk.len();
+            xpad.resize(hn, 0);
+            let res = self.rt.execute("golden_hist", &[lit::u32_1d(&xpad)])?;
+            let h = lit::to_i32(&res[0])?;
+            for (b, v) in h.iter().enumerate() {
+                total[b] += v;
+            }
+            total[0] -= pad as i32;
+        }
+        Ok(total)
+    }
+
+    /// SpMV y = A·x from COO triplets (padded to the artifact nnz).
+    pub fn spmv(
+        &mut self,
+        rows: &[i32],
+        cols: &[i32],
+        vals: &[f32],
+        x: &[f32],
+    ) -> Result<Vec<f32>> {
+        let (gnnz, gnb) = (self.rt.manifest.spmv_nnz, self.rt.manifest.spmv_nb);
+        if x.len() > gnb {
+            bail!("vector length {} exceeds artifact {}", x.len(), gnb);
+        }
+        let mut xpad = x.to_vec();
+        xpad.resize(gnb, 0.0);
+        let mut y = vec![0f32; x.len()];
+        let nnz = vals.len();
+        for start in (0..nnz.max(1)).step_by(gnnz) {
+            let end = (start + gnnz).min(nnz);
+            let mut r = rows[start..end].to_vec();
+            let mut c = cols[start..end].to_vec();
+            let mut v = vals[start..end].to_vec();
+            r.resize(gnnz, 0);
+            c.resize(gnnz, 0);
+            v.resize(gnnz, 0.0); // zero values: padding is neutral
+            let res = self.rt.execute(
+                "golden_spmv",
+                &[
+                    lit::i32_1d(&r),
+                    lit::i32_1d(&c),
+                    lit::f32_1d(&v),
+                    lit::f32_1d(&xpad),
+                ],
+            )?;
+            let part = lit::to_f32(&res[0])?;
+            for i in 0..y.len() {
+                y[i] += part[i];
+            }
+            if nnz == 0 {
+                break;
+            }
+        }
+        Ok(y)
+    }
+}

@@ -1,0 +1,346 @@
+//! Artifact manifest: shapes and entry-point inventory written by
+//! python/compile/aot.py.
+//!
+//! The vendored crate set has no serde, so this module carries a minimal
+//! recursive-descent JSON parser (objects, arrays, strings, numbers,
+//! booleans, null — everything manifest.json uses).
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+// ---------------------------------------------------------------------------
+// mini JSON
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    pub fn parse(text: &str) -> Result<Json> {
+        let mut p = Parser {
+            b: text.as_bytes(),
+            i: 0,
+        };
+        p.ws();
+        let v = p.value()?;
+        p.ws();
+        if p.i != p.b.len() {
+            bail!("trailing characters at offset {}", p.i);
+        }
+        Ok(v)
+    }
+
+    pub fn get(&self, key: &str) -> Result<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key).ok_or_else(|| anyhow!("missing key {key:?}")),
+            _ => bail!("not an object"),
+        }
+    }
+
+    pub fn as_u64(&self) -> Result<u64> {
+        match self {
+            Json::Num(n) => Ok(*n as u64),
+            _ => bail!("not a number"),
+        }
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Json::Str(s) => Ok(s),
+            _ => bail!("not a string"),
+        }
+    }
+
+    pub fn as_arr(&self) -> Result<&[Json]> {
+        match self {
+            Json::Arr(a) => Ok(a),
+            _ => bail!("not an array"),
+        }
+    }
+
+    pub fn as_obj(&self) -> Result<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(m) => Ok(m),
+            _ => bail!("not an object"),
+        }
+    }
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Result<u8> {
+        self.b
+            .get(self.i)
+            .copied()
+            .ok_or_else(|| anyhow!("unexpected end of input"))
+    }
+
+    fn eat(&mut self, c: u8) -> Result<()> {
+        if self.peek()? != c {
+            bail!("expected {:?} at offset {}", c as char, self.i);
+        }
+        self.i += 1;
+        Ok(())
+    }
+
+    fn lit(&mut self, s: &str, v: Json) -> Result<Json> {
+        if self.b[self.i..].starts_with(s.as_bytes()) {
+            self.i += s.len();
+            Ok(v)
+        } else {
+            bail!("bad literal at offset {}", self.i);
+        }
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        self.ws();
+        match self.peek()? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => self.lit("true", Json::Bool(true)),
+            b'f' => self.lit("false", Json::Bool(false)),
+            b'n' => self.lit("null", Json::Null),
+            _ => self.number(),
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.eat(b'{')?;
+        let mut m = BTreeMap::new();
+        self.ws();
+        if self.peek()? == b'}' {
+            self.i += 1;
+            return Ok(Json::Obj(m));
+        }
+        loop {
+            self.ws();
+            let k = self.string()?;
+            self.ws();
+            self.eat(b':')?;
+            let v = self.value()?;
+            m.insert(k, v);
+            self.ws();
+            match self.peek()? {
+                b',' => {
+                    self.i += 1;
+                }
+                b'}' => {
+                    self.i += 1;
+                    return Ok(Json::Obj(m));
+                }
+                c => bail!("expected , or }} got {:?}", c as char),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.eat(b'[')?;
+        let mut a = Vec::new();
+        self.ws();
+        if self.peek()? == b']' {
+            self.i += 1;
+            return Ok(Json::Arr(a));
+        }
+        loop {
+            a.push(self.value()?);
+            self.ws();
+            match self.peek()? {
+                b',' => {
+                    self.i += 1;
+                }
+                b']' => {
+                    self.i += 1;
+                    return Ok(Json::Arr(a));
+                }
+                c => bail!("expected , or ] got {:?}", c as char),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.eat(b'"')?;
+        let mut s = String::new();
+        loop {
+            let c = self.peek()?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(s),
+                b'\\' => {
+                    let e = self.peek()?;
+                    self.i += 1;
+                    match e {
+                        b'"' => s.push('"'),
+                        b'\\' => s.push('\\'),
+                        b'/' => s.push('/'),
+                        b'n' => s.push('\n'),
+                        b't' => s.push('\t'),
+                        b'r' => s.push('\r'),
+                        b'b' => s.push('\u{8}'),
+                        b'f' => s.push('\u{c}'),
+                        b'u' => {
+                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])?;
+                            let code = u32::from_str_radix(hex, 16)?;
+                            self.i += 4;
+                            s.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
+                        }
+                        _ => bail!("bad escape"),
+                    }
+                }
+                _ => s.push(c as char),
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.i;
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        {
+            self.i += 1;
+        }
+        let s = std::str::from_utf8(&self.b[start..self.i])?;
+        Ok(Json::Num(s.parse()?))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// manifest
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+pub struct ArgSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct EntryPoint {
+    pub file: String,
+    pub outputs: usize,
+    pub args: Vec<ArgSpec>,
+}
+
+/// Parsed artifacts/manifest.json.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub w: usize,
+    pub nw: usize,
+    pub p: usize,
+    pub block_words: usize,
+    pub golden_n: usize,
+    pub golden_d: usize,
+    pub spmv_nnz: usize,
+    pub spmv_nb: usize,
+    pub hist_n: usize,
+    pub entry_points: BTreeMap<String, EntryPoint>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text)?;
+        let mut entry_points = BTreeMap::new();
+        for (name, e) in j.get("entry_points")?.as_obj()? {
+            let mut args = Vec::new();
+            for a in e.get("args")?.as_arr()? {
+                args.push(ArgSpec {
+                    shape: a
+                        .get("shape")?
+                        .as_arr()?
+                        .iter()
+                        .map(|d| d.as_u64().map(|v| v as usize))
+                        .collect::<Result<_>>()?,
+                    dtype: a.get("dtype")?.as_str()?.to_string(),
+                });
+            }
+            entry_points.insert(
+                name.clone(),
+                EntryPoint {
+                    file: e.get("file")?.as_str()?.to_string(),
+                    outputs: e.get("outputs")?.as_u64()? as usize,
+                    args,
+                },
+            );
+        }
+        Ok(Manifest {
+            w: j.get("W")?.as_u64()? as usize,
+            nw: j.get("NW")?.as_u64()? as usize,
+            p: j.get("P")?.as_u64()? as usize,
+            block_words: j.get("BLOCK_WORDS")?.as_u64()? as usize,
+            golden_n: j.get("GOLDEN_N")?.as_u64()? as usize,
+            golden_d: j.get("GOLDEN_D")?.as_u64()? as usize,
+            spmv_nnz: j.get("SPMV_NNZ")?.as_u64()? as usize,
+            spmv_nb: j.get("SPMV_NB")?.as_u64()? as usize,
+            hist_n: j.get("HIST_N")?.as_u64()? as usize,
+            entry_points,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_parser_basics() {
+        let j = Json::parse(r#"{"a": [1, 2.5, -3], "b": {"c": "x\n"}, "d": true, "e": null}"#)
+            .unwrap();
+        assert_eq!(j.get("a").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(j.get("b").unwrap().get("c").unwrap().as_str().unwrap(), "x\n");
+        assert_eq!(j.get("d").unwrap(), &Json::Bool(true));
+        assert!(Json::parse("{bogus}").is_err());
+        assert!(Json::parse("[1,]").is_err());
+    }
+
+    #[test]
+    fn manifest_parse() {
+        let text = r#"{
+            "W": 256, "NW": 2048, "P": 128, "BLOCK_WORDS": 256,
+            "GOLDEN_N": 4096, "GOLDEN_D": 16, "SPMV_NNZ": 16384,
+            "SPMV_NB": 1024, "HIST_N": 65536,
+            "entry_points": {
+                "rcam_step": {
+                    "file": "rcam_step.hlo.txt", "outputs": 2,
+                    "args": [{"shape": [256, 2048], "dtype": "uint32"}]
+                }
+            }
+        }"#;
+        let m = Manifest::parse(text).unwrap();
+        assert_eq!(m.w, 256);
+        assert_eq!(m.entry_points["rcam_step"].outputs, 2);
+        assert_eq!(m.entry_points["rcam_step"].args[0].shape, vec![256, 2048]);
+    }
+
+    #[test]
+    fn real_manifest_if_present() {
+        let p = Path::new("artifacts/manifest.json");
+        if p.exists() {
+            let m = Manifest::load(p).unwrap();
+            assert!(m.entry_points.contains_key("golden_ed"));
+            assert_eq!(m.nw % m.block_words, 0);
+        }
+    }
+}

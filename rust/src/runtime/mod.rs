@@ -1,0 +1,148 @@
+//! PJRT runtime: load the AOT artifacts (`artifacts/*.hlo.txt`, produced
+//! once by `make artifacts` from the JAX/Pallas compile path) and execute
+//! them from the rust hot path. Python is never invoked here.
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 emits HloModuleProtos with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md and python/compile/aot.py).
+//!
+//! Two consumers:
+//!  * [`XlaRcamBackend`] — runs the L1 Pallas associative-step kernel as an
+//!    alternative execution backend for the RCAM array (bit-exact vs the
+//!    native bit-sliced simulator; integration-tested).
+//!  * [`Golden`] — the reference-architecture numeric kernels
+//!    (ED/DP/histogram/SpMV) used by `prins validate`.
+
+pub mod golden;
+pub mod manifest;
+pub mod xla_backend;
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+pub use golden::Golden;
+pub use manifest::Manifest;
+pub use xla_backend::XlaRcamBackend;
+
+/// A PJRT CPU client plus the compiled executables of an artifact set.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Open an artifact directory (compiles nothing yet).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {dir:?} (run `make artifacts`)"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            dir,
+            manifest,
+            executables: HashMap::new(),
+        })
+    }
+
+    /// Default artifact directory: `$PRINS_ARTIFACTS` or `./artifacts`.
+    pub fn open_default() -> Result<Self> {
+        let dir = std::env::var("PRINS_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::open(dir)
+    }
+
+    /// Load + compile one entry point (cached across calls).
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if !self.executables.contains_key(name) {
+            let entry = self
+                .manifest
+                .entry_points
+                .get(name)
+                .ok_or_else(|| anyhow!("unknown entry point {name:?}"))?;
+            let path = self.dir.join(&entry.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+            self.executables.insert(name.to_string(), exe);
+        }
+        Ok(())
+    }
+
+    /// Execute an entry point on literals; returns the flattened tuple
+    /// elements (aot.py lowers with return_tuple=True).
+    pub fn execute(&mut self, name: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.load(name)?;
+        let exe = &self.executables[name];
+        let result = exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
+        result
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple {name}: {e:?}"))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+/// Helpers converting between rust slices and XLA literals.
+pub mod lit {
+    use anyhow::{anyhow, Result};
+
+    pub fn u32_1d(v: &[u32]) -> xla::Literal {
+        xla::Literal::vec1(v)
+    }
+
+    pub fn u32_2d(v: &[u32], rows: usize, cols: usize) -> Result<xla::Literal> {
+        assert_eq!(v.len(), rows * cols);
+        xla::Literal::vec1(v)
+            .reshape(&[rows as i64, cols as i64])
+            .map_err(|e| anyhow!("reshape: {e:?}"))
+    }
+
+    pub fn u32_3d(v: &[u32], a: usize, b: usize, c: usize) -> Result<xla::Literal> {
+        assert_eq!(v.len(), a * b * c);
+        xla::Literal::vec1(v)
+            .reshape(&[a as i64, b as i64, c as i64])
+            .map_err(|e| anyhow!("reshape: {e:?}"))
+    }
+
+    pub fn f32_1d(v: &[f32]) -> xla::Literal {
+        xla::Literal::vec1(v)
+    }
+
+    pub fn f32_2d(v: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+        assert_eq!(v.len(), rows * cols);
+        xla::Literal::vec1(v)
+            .reshape(&[rows as i64, cols as i64])
+            .map_err(|e| anyhow!("reshape: {e:?}"))
+    }
+
+    pub fn i32_1d(v: &[i32]) -> xla::Literal {
+        xla::Literal::vec1(v)
+    }
+
+    pub fn to_u32(l: &xla::Literal) -> Result<Vec<u32>> {
+        l.to_vec::<u32>().map_err(|e| anyhow!("to_vec u32: {e:?}"))
+    }
+
+    pub fn to_f32(l: &xla::Literal) -> Result<Vec<f32>> {
+        l.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))
+    }
+
+    pub fn to_i32(l: &xla::Literal) -> Result<Vec<i32>> {
+        l.to_vec::<i32>().map_err(|e| anyhow!("to_vec i32: {e:?}"))
+    }
+}

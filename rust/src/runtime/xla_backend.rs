@@ -1,0 +1,183 @@
+//! XLA-backed RCAM execution: run associative passes through the
+//! AOT-compiled L1 Pallas kernel instead of the native bit-sliced
+//! simulator.
+//!
+//! The backend owns a bit-plane state in the artifact's fixed shape
+//! (u32[W, NW]) and executes:
+//!   * `step`    — one compare+write pass (`rcam_step.hlo.txt`)
+//!   * `program` — a whole microprogram via the scan-composed executor
+//!     (`rcam_program.hlo.txt`), P passes per call, no host round-trips —
+//!     the VMEM-residency optimization of DESIGN.md §Hardware-Adaptation.
+//!
+//! Integration tests assert bit-exact equality against `PrinsArray` on
+//! random programs — the strongest cross-layer correctness signal in the
+//! repo (rust simulator vs JAX/Pallas semantics).
+
+use super::{lit, Runtime};
+use crate::isa::{Instr, Program};
+use anyhow::{anyhow, bail, Result};
+
+pub struct XlaRcamBackend {
+    rt: Runtime,
+    /// Bit planes, row-major [W][NW] u32.
+    planes: Vec<u32>,
+    w: usize,
+    nw: usize,
+    p: usize,
+}
+
+impl XlaRcamBackend {
+    pub fn new(rt: Runtime) -> Self {
+        let (w, nw, p) = (rt.manifest.w, rt.manifest.nw, rt.manifest.p);
+        XlaRcamBackend {
+            rt,
+            planes: vec![0; w * nw],
+            w,
+            nw,
+            p,
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.nw * 32
+    }
+
+    pub fn width(&self) -> usize {
+        self.w
+    }
+
+    pub fn set_bit(&mut self, row: usize, col: usize, v: bool) {
+        assert!(row < self.rows() && col < self.w);
+        let word = &mut self.planes[col * self.nw + row / 32];
+        let m = 1u32 << (row % 32);
+        if v {
+            *word |= m;
+        } else {
+            *word &= !m;
+        }
+    }
+
+    pub fn get_bit(&self, row: usize, col: usize) -> bool {
+        (self.planes[col * self.nw + row / 32] >> (row % 32)) & 1 == 1
+    }
+
+    pub fn load_row_bits(&mut self, row: usize, base: usize, width: usize, value: u64) {
+        for i in 0..width {
+            self.set_bit(row, base + i, (value >> i) & 1 == 1);
+        }
+    }
+
+    pub fn fetch_row_bits(&self, row: usize, base: usize, width: usize) -> u64 {
+        let mut v = 0u64;
+        for i in 0..width {
+            if self.get_bit(row, base + i) {
+                v |= 1 << i;
+            }
+        }
+        v
+    }
+
+    fn vecs(&self, pat: &[(u16, bool)], is_mask: bool) -> Vec<u32> {
+        let mut v = vec![0u32; self.w];
+        for &(c, b) in pat {
+            v[c as usize] = if is_mask { 1 } else { b as u32 };
+        }
+        v
+    }
+
+    /// One associative pass through the AOT kernel. Returns the tag words.
+    pub fn step(&mut self, cpat: &[(u16, bool)], wpat: &[(u16, bool)]) -> Result<Vec<u32>> {
+        let planes = lit::u32_2d(&self.planes, self.w, self.nw)?;
+        let key = lit::u32_1d(&self.vecs(cpat, false));
+        let cmask = lit::u32_1d(&self.cmask_vec(cpat));
+        let wkey = lit::u32_1d(&self.vecs(wpat, false));
+        let wmask = lit::u32_1d(&self.cmask_vec(wpat));
+        let out = self
+            .rt
+            .execute("rcam_step", &[planes, key, cmask, wkey, wmask])?;
+        if out.len() != 2 {
+            bail!("rcam_step returned {} outputs", out.len());
+        }
+        self.planes = lit::to_u32(&out[0])?;
+        lit::to_u32(&out[1])
+    }
+
+    fn cmask_vec(&self, pat: &[(u16, bool)]) -> Vec<u32> {
+        let mut v = vec![0u32; self.w];
+        for &(c, _) in pat {
+            v[c as usize] = 1;
+        }
+        v
+    }
+
+    /// Run a straight-line compare/write program through the scan-composed
+    /// executor, `P` passes per XLA call (no-op padding in between).
+    /// Only Compare/Write/ClearColumns instructions are supported — the
+    /// executor is the SIMD inner loop, not the full controller.
+    pub fn run_program(&mut self, prog: &Program) -> Result<()> {
+        // compile the program into (key, cmask, wkey, wmask) pass rows
+        let mut passes: Vec<[Vec<u32>; 4]> = Vec::new();
+        let mut i = 0;
+        let instrs = &prog.instrs;
+        while i < instrs.len() {
+            match &instrs[i] {
+                Instr::Compare(cpat) => {
+                    let wpat = match instrs.get(i + 1) {
+                        Some(Instr::Write(w)) => {
+                            i += 1;
+                            w.clone()
+                        }
+                        _ => vec![],
+                    };
+                    passes.push([
+                        self.vecs(&cpat, false),
+                        self.cmask_vec(&cpat),
+                        self.vecs(&wpat, false),
+                        self.cmask_vec(&wpat),
+                    ]);
+                }
+                Instr::ClearColumns { base, width } => {
+                    // untagged bulk clear = compare-all + write zeros
+                    let wpat: Vec<(u16, bool)> =
+                        (*base..base + width).map(|c| (c, false)).collect();
+                    passes.push([
+                        vec![0; self.w],
+                        vec![0; self.w],
+                        self.vecs(&wpat, false),
+                        self.cmask_vec(&wpat),
+                    ]);
+                }
+                other => bail!("unsupported instruction for XLA backend: {other:?}"),
+            }
+            i += 1;
+        }
+        // execute in chunks of P
+        for chunk in passes.chunks(self.p) {
+            let mut table = vec![0u32; self.p * 4 * self.w];
+            for (pi, pass) in chunk.iter().enumerate() {
+                for (fi, field) in pass.iter().enumerate() {
+                    let off = (pi * 4 + fi) * self.w;
+                    table[off..off + self.w].copy_from_slice(field);
+                }
+            }
+            // padding rows already zero: wmask == 0 → no-op
+            let planes = lit::u32_2d(&self.planes, self.w, self.nw)?;
+            let passes_lit = lit::u32_3d(&table, self.p, 4, self.w)?;
+            let out = self.rt.execute("rcam_program", &[planes, passes_lit])?;
+            self.planes =
+                lit::to_u32(out.first().ok_or_else(|| anyhow!("no output"))?)?;
+        }
+        Ok(())
+    }
+
+    /// Count of rows matching a pattern (compare + popcount via the
+    /// compare_count artifact).
+    pub fn compare_count(&mut self, cpat: &[(u16, bool)]) -> Result<u64> {
+        let planes = lit::u32_2d(&self.planes, self.w, self.nw)?;
+        let key = lit::u32_1d(&self.vecs(cpat, false));
+        let cmask = lit::u32_1d(&self.cmask_vec(cpat));
+        let out = self.rt.execute("compare_count", &[planes, key, cmask])?;
+        let v = lit::to_u32(&out[0])?;
+        Ok(v[0] as u64)
+    }
+}

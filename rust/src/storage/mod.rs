@@ -1,0 +1,240 @@
+//! Storage management unit (paper Fig. 4: "orchestrates the storage
+//! operations, controlling read, write, translation, logical block
+//! mapping, wear leveling, etc.").
+//!
+//! Datasets are allocated as row ranges with a named field layout;
+//! logical dataset ids map to physical row ranges (the translation
+//! layer), and wear statistics are derived from the modules' per-row
+//! write counters.
+
+pub mod wear;
+
+use crate::isa::RowLayout;
+use crate::rcam::PrinsArray;
+use std::collections::BTreeMap;
+
+/// A physical row range inside the PRINS array.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RowRange {
+    pub start: usize,
+    pub len: usize,
+}
+
+impl RowRange {
+    pub fn end(&self) -> usize {
+        self.start + self.len
+    }
+
+    pub fn overlaps(&self, other: &RowRange) -> bool {
+        self.start < other.end() && other.start < self.end()
+    }
+}
+
+/// Handle to an allocated dataset: rows + its row layout.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub id: u64,
+    pub rows: RowRange,
+    pub layout: RowLayout,
+}
+
+/// The storage management unit. Owns no array reference — it hands out
+/// allocations and performs load/readout *through* a borrowed array, so
+/// the controller remains the single owner of the hardware.
+#[derive(Debug, Default)]
+pub struct StorageManager {
+    allocations: BTreeMap<u64, RowRange>,
+    next_id: u64,
+    total_rows: usize,
+}
+
+impl StorageManager {
+    pub fn new(total_rows: usize) -> Self {
+        StorageManager {
+            allocations: BTreeMap::new(),
+            next_id: 1,
+            total_rows,
+        }
+    }
+
+    /// First-fit allocation of `n_rows` rows with the given layout.
+    pub fn alloc(&mut self, n_rows: usize, layout: RowLayout) -> Option<Dataset> {
+        let mut cursor = 0usize;
+        for r in self.allocations.values() {
+            // allocations BTreeMap is keyed by id, not ordered by row —
+            // gather and sort
+            let _ = r;
+        }
+        let mut ranges: Vec<RowRange> = self.allocations.values().copied().collect();
+        ranges.sort_by_key(|r| r.start);
+        for r in ranges {
+            if cursor + n_rows <= r.start {
+                break;
+            }
+            cursor = cursor.max(r.end());
+        }
+        if cursor + n_rows > self.total_rows {
+            return None;
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        let rows = RowRange {
+            start: cursor,
+            len: n_rows,
+        };
+        self.allocations.insert(id, rows);
+        Some(Dataset { id, rows, layout })
+    }
+
+    /// Release a dataset's rows.
+    pub fn free(&mut self, id: u64) -> bool {
+        self.allocations.remove(&id).is_some()
+    }
+
+    /// Translate a logical row of a dataset to a physical row.
+    pub fn translate(&self, ds: &Dataset, logical: usize) -> usize {
+        assert!(logical < ds.rows.len, "logical row out of range");
+        ds.rows.start + logical
+    }
+
+    pub fn allocated_rows(&self) -> usize {
+        self.allocations.values().map(|r| r.len).sum()
+    }
+
+    pub fn free_rows(&self) -> usize {
+        self.total_rows - self.allocated_rows()
+    }
+
+    /// Invariant check: no two allocations overlap (proptest target).
+    pub fn assert_disjoint(&self) {
+        let mut ranges: Vec<RowRange> = self.allocations.values().copied().collect();
+        ranges.sort_by_key(|r| r.start);
+        for w in ranges.windows(2) {
+            assert!(!w[0].overlaps(&w[1]), "overlapping allocations");
+        }
+    }
+
+    // ----- load / readout helpers ---------------------------------------
+
+    /// Load a u64 value into a field of a logical row.
+    pub fn load_value(
+        &self,
+        array: &mut PrinsArray,
+        ds: &Dataset,
+        logical: usize,
+        field: &str,
+        value: u64,
+    ) {
+        let f = ds.layout.get(field);
+        let row = self.translate(ds, logical);
+        array.load_row_bits(row, f.base as usize, f.width as usize, value);
+    }
+
+    /// Read a field of a logical row.
+    pub fn read_value(
+        &self,
+        array: &PrinsArray,
+        ds: &Dataset,
+        logical: usize,
+        field: &str,
+    ) -> u64 {
+        let f = ds.layout.get(field);
+        let row = self.translate(ds, logical);
+        array.fetch_row_bits(row, f.base as usize, f.width as usize)
+    }
+
+    /// Bulk column load: `values[i]` into `field` of logical row i.
+    pub fn load_column(
+        &self,
+        array: &mut PrinsArray,
+        ds: &Dataset,
+        field: &str,
+        values: &[u64],
+    ) {
+        assert!(values.len() <= ds.rows.len);
+        let f = ds.layout.get(field);
+        for (i, &v) in values.iter().enumerate() {
+            array.load_row_bits(ds.rows.start + i, f.base as usize, f.width as usize, v);
+        }
+    }
+
+    /// Bulk column readout.
+    pub fn read_column(
+        &self,
+        array: &PrinsArray,
+        ds: &Dataset,
+        field: &str,
+        n: usize,
+    ) -> Vec<u64> {
+        assert!(n <= ds.rows.len);
+        let f = ds.layout.get(field);
+        (0..n)
+            .map(|i| {
+                array.fetch_row_bits(ds.rows.start + i, f.base as usize, f.width as usize)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::RowLayout;
+
+    fn layout() -> RowLayout {
+        let mut l = RowLayout::new(64);
+        l.alloc("v", 32);
+        l
+    }
+
+    #[test]
+    fn alloc_free_realloc() {
+        let mut sm = StorageManager::new(1000);
+        let a = sm.alloc(400, layout()).unwrap();
+        let b = sm.alloc(400, layout()).unwrap();
+        assert_eq!(a.rows.start, 0);
+        assert_eq!(b.rows.start, 400);
+        assert!(sm.alloc(400, layout()).is_none(), "only 200 rows left");
+        sm.assert_disjoint();
+        assert!(sm.free(a.id));
+        let c = sm.alloc(300, layout()).unwrap();
+        assert_eq!(c.rows.start, 0, "first-fit reuses the gap");
+        sm.assert_disjoint();
+        assert_eq!(sm.free_rows(), 1000 - 400 - 300);
+    }
+
+    #[test]
+    fn load_read_roundtrip() {
+        let mut sm = StorageManager::new(100);
+        let mut array = PrinsArray::single(100, 64);
+        let ds = sm.alloc(50, layout()).unwrap();
+        for i in 0..50 {
+            sm.load_value(&mut array, &ds, i, "v", (i * 7) as u64);
+        }
+        for i in 0..50 {
+            assert_eq!(sm.read_value(&array, &ds, i, "v"), (i * 7) as u64);
+        }
+        let col = sm.read_column(&array, &ds, "v", 10);
+        assert_eq!(col[3], 21);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn translate_bounds_checked() {
+        let mut sm = StorageManager::new(100);
+        let ds = sm.alloc(10, layout()).unwrap();
+        sm.translate(&ds, 10);
+    }
+
+    #[test]
+    fn two_datasets_do_not_interfere() {
+        let mut sm = StorageManager::new(64);
+        let mut array = PrinsArray::single(64, 64);
+        let d1 = sm.alloc(20, layout()).unwrap();
+        let d2 = sm.alloc(20, layout()).unwrap();
+        sm.load_column(&mut array, &d1, "v", &vec![7; 20]);
+        sm.load_column(&mut array, &d2, "v", &vec![9; 20]);
+        assert!(sm.read_column(&array, &d1, "v", 20).iter().all(|&v| v == 7));
+        assert!(sm.read_column(&array, &d2, "v", 20).iter().all(|&v| v == 9));
+    }
+}

@@ -1,0 +1,141 @@
+//! Endurance / wear-levelling analysis (paper §3.1: endurance ≈ 1e12
+//! writes today, "may suffice for only about one month"; predicted
+//! 1e14–1e15 "extending PRINS endurance to a number of years").
+//!
+//! The modules' per-row write counters (enabled via
+//! `PrinsArray::enable_wear_tracking`) feed a lifetime projection under a
+//! measured write rate, reproducing the paper's month/years argument
+//! quantitatively.
+
+use crate::rcam::{DeviceModel, PrinsArray};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct WearReport {
+    pub max_writes: u32,
+    pub mean_writes: f64,
+    pub total_writes: u64,
+    pub rows: usize,
+    /// max/mean imbalance; 1.0 = perfectly level
+    pub imbalance: f64,
+}
+
+/// Summarize per-row wear across the whole chain. Returns None when wear
+/// tracking is disabled.
+pub fn wear_report(array: &PrinsArray) -> Option<WearReport> {
+    let mut max = 0u32;
+    let mut total = 0u64;
+    let mut rows = 0usize;
+    for m in array.modules() {
+        let counters = m.wear_counters()?;
+        rows += counters.len();
+        for &c in counters {
+            max = max.max(c);
+            total += c as u64;
+        }
+    }
+    let mean = if rows == 0 { 0.0 } else { total as f64 / rows as f64 };
+    Some(WearReport {
+        max_writes: max,
+        mean_writes: mean,
+        total_writes: total,
+        rows,
+        imbalance: if mean > 0.0 { max as f64 / mean } else { 1.0 },
+    })
+}
+
+/// Projected lifetime in seconds: the most-written cell reaches the
+/// endurance limit at the observed write rate (writes of the hottest row
+/// per simulated second).
+pub fn projected_lifetime_s(
+    report: &WearReport,
+    device: &DeviceModel,
+    elapsed_cycles: u64,
+) -> f64 {
+    if report.max_writes == 0 || elapsed_cycles == 0 {
+        return f64::INFINITY;
+    }
+    let elapsed_s = device.cycles_to_seconds(elapsed_cycles);
+    let hottest_rate = report.max_writes as f64 / elapsed_s; // writes/s
+    device.endurance / hottest_rate
+}
+
+pub fn lifetime_human(seconds: f64) -> String {
+    if !seconds.is_finite() {
+        return "unlimited".into();
+    }
+    const DAY: f64 = 86_400.0;
+    const YEAR: f64 = 365.25 * DAY;
+    if seconds >= YEAR {
+        format!("{:.1} years", seconds / YEAR)
+    } else if seconds >= DAY {
+        format!("{:.1} days", seconds / DAY)
+    } else {
+        format!("{:.1} hours", seconds / 3_600.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rcam::DeviceModel;
+
+    #[test]
+    fn report_aggregates_across_modules() {
+        let mut a = PrinsArray::new(2, 8, 4);
+        a.enable_wear_tracking();
+        // tag a single row in module 1 and write it 5 times
+        a.load_row_bits(9, 0, 1, 1);
+        a.compare(&[(0, true)]);
+        for _ in 0..5 {
+            a.write(&[(1, true)]);
+        }
+        let r = wear_report(&a).unwrap();
+        // 5 tagged writes + 1 direct load (loads wear cells too)
+        assert_eq!(r.max_writes, 6);
+        assert_eq!(r.rows, 16);
+        assert!(r.imbalance > 1.0);
+    }
+
+    #[test]
+    fn tracking_disabled_returns_none() {
+        let a = PrinsArray::new(1, 8, 4);
+        assert!(wear_report(&a).is_none());
+    }
+
+    #[test]
+    fn paper_endurance_scenario() {
+        // The paper: sub-ns switching, continuous writes, 1e12 endurance →
+        // about a month. A cell written every other cycle at 500 MHz:
+        // 2.5e8 writes/s → 1e12 / 2.5e8 = 4000 s... The paper's "month"
+        // assumes lower duty; here we verify the *relation*: future
+        // endurance (1e14) buys exactly 100x lifetime.
+        let today = DeviceModel::default();
+        let future = DeviceModel::future_endurance();
+        let rep = WearReport {
+            max_writes: 1_000,
+            mean_writes: 10.0,
+            total_writes: 10_000,
+            rows: 1000,
+            imbalance: 100.0,
+        };
+        let lt_today = projected_lifetime_s(&rep, &today, 500_000_000);
+        let lt_future = projected_lifetime_s(&rep, &future, 500_000_000);
+        assert!((lt_future / lt_today - 100.0).abs() < 1e-6);
+        assert!(lifetime_human(lt_today).contains("days") || lifetime_human(lt_today).contains("years"));
+    }
+
+    #[test]
+    fn zero_writes_is_unlimited() {
+        let rep = WearReport {
+            max_writes: 0,
+            mean_writes: 0.0,
+            total_writes: 0,
+            rows: 10,
+            imbalance: 1.0,
+        };
+        assert_eq!(
+            lifetime_human(projected_lifetime_s(&rep, &DeviceModel::default(), 100)),
+            "unlimited"
+        );
+    }
+}

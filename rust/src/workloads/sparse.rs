@@ -1,0 +1,235 @@
+//! Sparse matrix workloads for the SpMV evaluation (paper Fig. 13).
+//!
+//! The paper used 18 square matrices from the UFL (SuiteSparse) collection
+//! with 1.2M–29M nonzeros, reporting results "in the order of increasing
+//! matrix density nnz/n". The collection is not bundled here (substitution
+//! ledger, DESIGN.md): we synthesize CSR matrices matched to each paper
+//! matrix's (n, nnz) — the two parameters that fully determine PRINS SpMV
+//! cost (broadcast is O(n), multiply is O(1) in rows, reduction depends on
+//! the row-length distribution, which we synthesize as a banded+random mix
+//! typical of the originals).
+
+use super::rng::Rng;
+
+/// CSR square sparse matrix (f32 values).
+#[derive(Clone, Debug)]
+pub struct Csr {
+    pub n: usize,
+    pub indptr: Vec<usize>,
+    pub indices: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl Csr {
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / self.n as f64
+    }
+
+    pub fn max_row_nnz(&self) -> usize {
+        self.indptr.windows(2).map(|w| w[1] - w[0]).max().unwrap_or(0)
+    }
+
+    /// y = A·x (scalar reference implementation — the CPU baseline).
+    pub fn spmv(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.n);
+        let mut y = vec![0f32; self.n];
+        for r in 0..self.n {
+            let mut acc = 0f32;
+            for k in self.indptr[r]..self.indptr[r + 1] {
+                acc += self.values[k] * x[self.indices[k] as usize];
+            }
+            y[r] = acc;
+        }
+        y
+    }
+
+    /// COO triplets (row, col, value) in CSR order.
+    pub fn triplets(&self) -> impl Iterator<Item = (u32, u32, f32)> + '_ {
+        (0..self.n).flat_map(move |r| {
+            (self.indptr[r]..self.indptr[r + 1])
+                .map(move |k| (r as u32, self.indices[k], self.values[k]))
+        })
+    }
+
+    /// Structural invariants (proptest target).
+    pub fn validate(&self) {
+        assert_eq!(self.indptr.len(), self.n + 1);
+        assert_eq!(self.indptr[0], 0);
+        assert_eq!(*self.indptr.last().unwrap(), self.values.len());
+        assert_eq!(self.indices.len(), self.values.len());
+        for w in self.indptr.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+        for &c in &self.indices {
+            assert!((c as usize) < self.n);
+        }
+    }
+}
+
+/// Synthesize an n×n matrix with ~nnz nonzeros: a tri-diagonal band
+/// (locality, like FEM/circuit matrices) plus uniformly random fill, with
+/// a skewed row-length tail. Deterministic in `seed`.
+pub fn synth_csr(n: usize, nnz_target: usize, seed: u64) -> Csr {
+    let mut rng = Rng::seed_from(seed);
+    let avg = (nnz_target as f64 / n as f64).max(1.0);
+    let mut indptr = Vec::with_capacity(n + 1);
+    let mut indices = Vec::new();
+    let mut values = Vec::new();
+    indptr.push(0usize);
+    for r in 0..n {
+        // row length: avg +/- 50%, with a heavy row every 1024 rows
+        let mut len = ((avg * (0.5 + rng.f32() as f64)) as usize).max(1);
+        if r % 1024 == 0 {
+            len = (len * 4).min(n);
+        }
+        let mut cols: Vec<u32> = Vec::with_capacity(len);
+        // band part
+        for d in 0..len.min(3) {
+            let c = (r + d).min(n - 1) as u32;
+            cols.push(c);
+        }
+        // random fill
+        while cols.len() < len {
+            cols.push(rng.below(n as u64) as u32);
+        }
+        cols.sort_unstable();
+        cols.dedup();
+        for c in cols {
+            indices.push(c);
+            values.push(rng.f32_range(-1.0, 1.0));
+        }
+        indptr.push(indices.len());
+    }
+    Csr {
+        n,
+        indptr,
+        indices,
+        values,
+    }
+}
+
+/// One matrix of the paper's Fig. 13 set: name + original (n, nnz).
+#[derive(Clone, Copy, Debug)]
+pub struct PaperMatrix {
+    pub name: &'static str,
+    pub n: usize,
+    pub nnz: usize,
+}
+
+impl PaperMatrix {
+    pub fn density(&self) -> f64 {
+        self.nnz as f64 / self.n as f64
+    }
+
+    /// The synthetic stand-in, optionally scaled down by `scale` (both n
+    /// and nnz divided, preserving density) for tractable simulation.
+    pub fn synthesize(&self, scale: usize, seed: u64) -> Csr {
+        let n = (self.n / scale).max(16);
+        let nnz = (self.nnz / scale).max(n);
+        synth_csr(n, nnz, seed)
+    }
+}
+
+/// 18 SuiteSparse/UFL square matrices spanning the paper's range
+/// (1.2M–29M nonzeros), ordered by increasing density nnz/n like Fig. 13.
+/// (n, nnz) taken from the public SuiteSparse collection metadata.
+pub const PAPER_MATRICES: [PaperMatrix; 18] = [
+    PaperMatrix { name: "wiki-Talk", n: 2_394_385, nnz: 5_021_410 },      // d≈2.1
+    PaperMatrix { name: "roadNet-CA", n: 1_971_281, nnz: 5_533_214 },     // d≈2.8
+    PaperMatrix { name: "webbase-1M", n: 1_000_005, nnz: 3_105_536 },     // d≈3.1
+    PaperMatrix { name: "cit-Patents", n: 3_774_768, nnz: 16_518_948 },   // d≈4.4
+    PaperMatrix { name: "G3_circuit", n: 1_585_478, nnz: 7_660_826 },     // d≈4.8
+    PaperMatrix { name: "memchip", n: 2_707_524, nnz: 13_343_948 },       // d≈4.9
+    PaperMatrix { name: "ecology1", n: 1_000_000, nnz: 4_996_000 },       // d≈5.0
+    PaperMatrix { name: "kkt_power", n: 2_063_494, nnz: 12_771_361 },     // d≈6.2
+    PaperMatrix { name: "atmosmodd", n: 1_270_432, nnz: 8_814_880 },      // d≈6.9
+    PaperMatrix { name: "thermal2", n: 1_228_045, nnz: 8_580_313 },       // d≈7.0
+    PaperMatrix { name: "parabolic_fem", n: 525_825, nnz: 3_674_625 },    // d≈7.0
+    PaperMatrix { name: "offshore", n: 259_789, nnz: 4_242_673 },         // d≈16.3
+    PaperMatrix { name: "cage13", n: 445_315, nnz: 7_479_343 },           // d≈16.8
+    PaperMatrix { name: "af_shell9", n: 504_855, nnz: 17_588_875 },       // d≈34.8
+    PaperMatrix { name: "msdoor", n: 415_863, nnz: 19_173_163 },          // d≈46.1
+    PaperMatrix { name: "pwtk", n: 217_918, nnz: 11_524_432 },            // d≈52.9
+    PaperMatrix { name: "F1", n: 343_791, nnz: 26_837_113 },              // d≈78.1
+    PaperMatrix { name: "nd24k", n: 72_000, nnz: 28_715_634 },            // d≈398.8
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synth_hits_target_roughly() {
+        let m = synth_csr(1000, 10_000, 1);
+        m.validate();
+        assert_eq!(m.n, 1000);
+        let ratio = m.nnz() as f64 / 10_000.0;
+        assert!((0.5..1.5).contains(&ratio), "nnz {}", m.nnz());
+    }
+
+    #[test]
+    fn synth_is_deterministic() {
+        let a = synth_csr(500, 3000, 42);
+        let b = synth_csr(500, 3000, 42);
+        assert_eq!(a.indices, b.indices);
+        assert_eq!(a.values, b.values);
+    }
+
+    #[test]
+    fn spmv_reference_correct_on_identityish() {
+        // diag(2) matrix: y = 2x
+        let n = 64;
+        let csr = Csr {
+            n,
+            indptr: (0..=n).collect(),
+            indices: (0..n as u32).collect(),
+            values: vec![2.0; n],
+        };
+        csr.validate();
+        let x: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let y = csr.spmv(&x);
+        for i in 0..n {
+            assert_eq!(y[i], 2.0 * i as f32);
+        }
+    }
+
+    #[test]
+    fn paper_set_ordered_by_density_and_in_range() {
+        for w in PAPER_MATRICES.windows(2) {
+            assert!(
+                w[0].density() <= w[1].density() + 1e-9,
+                "{} vs {}",
+                w[0].name,
+                w[1].name
+            );
+        }
+        for m in PAPER_MATRICES {
+            assert!(
+                (1_200_000..=29_000_000).contains(&m.nnz),
+                "{}: nnz {}",
+                m.name,
+                m.nnz
+            );
+        }
+        // density span covers the >100x-speedup regime (dense end ~400)
+        assert!(PAPER_MATRICES.last().unwrap().density() > 300.0);
+        assert!(PAPER_MATRICES[0].density() < 5.0);
+    }
+
+    #[test]
+    fn scaled_synthesis_preserves_density() {
+        let m = PAPER_MATRICES[17]; // nd24k
+        let csr = m.synthesize(100, 7);
+        csr.validate();
+        let d = csr.density();
+        assert!(
+            (m.density() * 0.5..m.density() * 1.5).contains(&d),
+            "density {d} vs {}",
+            m.density()
+        );
+    }
+}

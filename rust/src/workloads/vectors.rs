@@ -1,0 +1,82 @@
+//! Dense vector/sample workloads for the Euclidean-distance, dot-product
+//! and histogram evaluations (paper Fig. 12: synthetic vectors of 1M, 10M
+//! and 100M elements; DP uses 16-dimensional vectors; histogram uses
+//! 32-bit integers binned on the top byte).
+
+use super::rng::Rng;
+
+/// N×D f32 samples, row-major, values in a clustered gaussian mix so the
+/// k-means example has actual structure.
+pub fn synth_samples(n: usize, d: usize, n_clusters: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::seed_from(seed);
+    let centers: Vec<f32> = (0..n_clusters * d)
+        .map(|_| rng.f32_range(-10.0, 10.0))
+        .collect();
+    let mut out = Vec::with_capacity(n * d);
+    for i in 0..n {
+        let c = i % n_clusters;
+        for j in 0..d {
+            out.push(centers[c * d + j] + rng.normal());
+        }
+    }
+    out
+}
+
+/// Uniform f32 vectors in [-1, 1).
+pub fn synth_uniform(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::seed_from(seed);
+    (0..n).map(|_| rng.f32_range(-1.0, 1.0)).collect()
+}
+
+/// 32-bit histogram samples: a gaussian-ish bump over the bin space plus a
+/// uniform floor, so the histogram has structure to check.
+pub fn synth_hist_samples(n: usize, seed: u64) -> Vec<u32> {
+    let mut rng = Rng::seed_from(seed);
+    (0..n)
+        .map(|_| {
+            if rng.f32() < 0.3 {
+                // bump around bin 128
+                let bin = (128.0 + 8.0 * rng.normal()).clamp(0.0, 255.0) as u32;
+                (bin << 24) | (rng.next_u32() & 0x00FF_FFFF)
+            } else {
+                rng.next_u32()
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn samples_have_cluster_structure() {
+        let d = 4;
+        let x = synth_samples(100, d, 2, 1);
+        assert_eq!(x.len(), 400);
+        // same-cluster rows are closer than cross-cluster rows on average
+        let dist = |a: usize, b: usize| -> f32 {
+            (0..d).map(|j| (x[a * d + j] - x[b * d + j]).powi(2)).sum()
+        };
+        let same = dist(0, 2) + dist(1, 3);
+        let cross = dist(0, 1) + dist(2, 3);
+        assert!(same < cross, "same {same} cross {cross}");
+    }
+
+    #[test]
+    fn hist_samples_have_bump() {
+        let xs = synth_hist_samples(100_000, 2);
+        let mut hist = [0u32; 256];
+        for x in xs {
+            hist[(x >> 24) as usize] += 1;
+        }
+        let bump: u32 = hist[118..138].iter().sum();
+        let floor: u32 = hist[0..20].iter().sum();
+        assert!(bump > 3 * floor, "bump {bump} floor {floor}");
+    }
+
+    #[test]
+    fn uniform_in_range() {
+        assert!(synth_uniform(1000, 3).iter().all(|v| (-1.0..1.0).contains(v)));
+    }
+}

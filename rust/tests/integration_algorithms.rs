@@ -1,0 +1,145 @@
+//! Cross-module integration: every paper algorithm against its scalar
+//! baseline on randomized workloads, through the full controller path.
+
+use prins::algorithms::spmv::{ReduceEngine, SpmvKernel};
+use prins::algorithms::{
+    dot_baseline, euclidean_baseline, histogram_baseline, spmv_baseline_quantized,
+    BfsKernel, DotKernel, EuclideanKernel, HistogramKernel,
+};
+use prins::controller::Controller;
+use prins::rcam::PrinsArray;
+use prins::storage::StorageManager;
+use prins::workloads::{
+    synth_csr, synth_hist_samples, synth_power_law, synth_rmat, synth_samples,
+    synth_uniform, Rng,
+};
+
+#[test]
+fn euclidean_multiple_centers() {
+    let (n, dims, k) = (96usize, 4usize, 3usize);
+    let x = synth_samples(n, dims, k, 51);
+    let centers = synth_uniform(k * dims, 52);
+    let layout = prins::algorithms::euclidean::EuclideanLayout::new(dims);
+    let mut array = PrinsArray::new(3, n / 3, layout.width as usize);
+    let mut sm = StorageManager::new(n);
+    let kern = EuclideanKernel::load(&mut sm, &mut array, &x, n, dims);
+    let mut ctl = Controller::new(array);
+    let res = kern.run(&mut ctl, &sm, &centers, k);
+    let expect = euclidean_baseline(&x, n, dims, &centers, k);
+    for c in 0..k {
+        for i in 0..n {
+            assert!(
+                (res.dists[c][i] - expect[c][i]).abs()
+                    <= 3e-5 * expect[c][i].abs().max(1.0),
+                "center {c} sample {i}"
+            );
+        }
+    }
+}
+
+#[test]
+fn dot_product_on_chain() {
+    let (n, dims) = (64usize, 3usize);
+    let x = synth_samples(n, dims, 2, 61);
+    let h = synth_uniform(dims, 62);
+    let layout = prins::algorithms::dot::DotLayout::new(dims);
+    let mut array = PrinsArray::new(4, n / 4, layout.width as usize);
+    let mut sm = StorageManager::new(n);
+    let kern = DotKernel::load(&mut sm, &mut array, &x, n, dims);
+    let mut ctl = Controller::new(array);
+    let res = kern.run(&mut ctl, &sm, &h);
+    let expect = dot_baseline(&x, n, dims, &h);
+    for i in 0..n {
+        assert!(
+            (res.dp[i] - expect[i]).abs() <= 3e-5 * expect[i].abs().max(1.0),
+            "dp[{i}]"
+        );
+    }
+}
+
+#[test]
+fn histogram_structured_and_adversarial() {
+    // structured bump
+    let xs = synth_hist_samples(3000, 71);
+    let mut array = PrinsArray::single(xs.len(), 40);
+    let mut sm = StorageManager::new(xs.len());
+    let kern = HistogramKernel::load(&mut sm, &mut array, &xs);
+    let mut ctl = Controller::new(array);
+    assert_eq!(kern.run(&mut ctl).hist, histogram_baseline(&xs));
+
+    // adversarial: all samples in one bin, and bin-boundary values
+    let xs: Vec<u32> = vec![0xAB00_0000; 100]
+        .into_iter()
+        .chain([0x0000_0000, 0x00FF_FFFF, 0xFF00_0000, 0xFFFF_FFFF])
+        .collect();
+    let mut array = PrinsArray::single(xs.len(), 40);
+    let mut sm = StorageManager::new(xs.len());
+    let kern = HistogramKernel::load(&mut sm, &mut array, &xs);
+    let mut ctl = Controller::new(array);
+    let h = kern.run(&mut ctl).hist;
+    assert_eq!(h[0xAB], 100);
+    assert_eq!(h[0x00], 2);
+    assert_eq!(h[0xFF], 2);
+}
+
+#[test]
+fn spmv_random_matrices_both_engines() {
+    let mut rng = Rng::seed_from(81);
+    for (n, nnz) in [(32usize, 150usize), (100, 600), (64, 1200)] {
+        let a = synth_csr(n, nnz, rng.next_u64());
+        let x: Vec<f32> = (0..n).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+        let expect = spmv_baseline_quantized(&a, &x);
+        for engine in [ReduceEngine::ChainTree, ReduceEngine::SerialTree] {
+            let mut array = PrinsArray::single(a.nnz(), 256);
+            let mut sm = StorageManager::new(a.nnz());
+            let kern = SpmvKernel::load(&mut sm, &mut array, &a);
+            let mut ctl = Controller::new(array);
+            let res = kern.run(&mut ctl, &x, engine);
+            for r in 0..n {
+                assert!(
+                    (res.y[r] - expect[r]).abs() < 1e-6,
+                    "{engine:?} n={n} row {r}: {} vs {}",
+                    res.y[r],
+                    expect[r]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn bfs_on_rmat_and_power_law() {
+    for g in [
+        synth_rmat(9, 6.0, 91),
+        synth_power_law(400, 8.0, 2.5, 92),
+    ] {
+        let (expect, _) = g.bfs(0);
+        let mut array = PrinsArray::single(g.edges(), 128);
+        let mut sm = StorageManager::new(g.edges());
+        let kern = BfsKernel::load(&mut sm, &mut array, &g);
+        let mut ctl = Controller::new(array);
+        let res = kern.run(&mut ctl, 0);
+        assert_eq!(res.dist, expect);
+    }
+}
+
+#[test]
+fn wear_accumulates_during_kernels() {
+    let xs = synth_hist_samples(500, 99);
+    let mut array = PrinsArray::single(xs.len(), 40);
+    array.enable_wear_tracking();
+    let mut sm = StorageManager::new(xs.len());
+    let kern = HistogramKernel::load(&mut sm, &mut array, &xs);
+    let mut ctl = Controller::new(array);
+    kern.run(&mut ctl);
+    let rep = prins::storage::wear::wear_report(&ctl.array).unwrap();
+    // histogram never writes the array beyond the load: max wear == 2
+    // (sample load + valid-flag load)
+    assert_eq!(rep.max_writes, 2);
+    let life = prins::storage::wear::projected_lifetime_s(
+        &rep,
+        ctl.device(),
+        ctl.array.cycles,
+    );
+    assert!(life > 0.0);
+}

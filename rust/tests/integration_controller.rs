@@ -1,0 +1,116 @@
+//! Controller-level integration: program execution semantics, the
+//! assembly path (text → program → execution), and stats windows.
+
+use prins::controller::{Controller, READ_NO_MATCH};
+use prins::isa::asm::parse_program;
+use prins::isa::{Field, Instr, Program};
+use prins::micro;
+use prins::rcam::PrinsArray;
+
+#[test]
+fn assembly_text_executes_like_built_program() {
+    // hand-written assembly for: tag rows with col0==1, write col3=1,
+    // count them
+    let text = "
+        # tag then mark then count
+        compare c0=1
+        write   c3=1
+        compare c3=1
+        reduce
+    ";
+    let prog = parse_program(text).unwrap();
+    let mut ctl = Controller::new(PrinsArray::single(64, 8));
+    for r in [3usize, 7, 40] {
+        ctl.array.load_row_bits(r, 0, 1, 1);
+    }
+    let out = ctl.execute_collect(&prog);
+    assert_eq!(out, vec![3]);
+}
+
+#[test]
+fn generated_microcode_survives_assembly_roundtrip_and_runs() {
+    let (a, b) = (Field::new(0, 8), Field::new(8, 8));
+    let mut prog = Program::new();
+    micro::add_inplace(&mut prog, a, b, 20);
+    let text = prins::isa::asm::format_program(&prog);
+    let prog2 = parse_program(&text).unwrap();
+    let mut ctl = Controller::new(PrinsArray::single(8, 24));
+    ctl.array.load_row_bits(0, 0, 8, 99);
+    ctl.array.load_row_bits(0, 8, 8, 28);
+    ctl.execute(&prog2);
+    assert_eq!(ctl.array.fetch_row_bits(0, 0, 8), 127);
+}
+
+#[test]
+fn buffer_ordering_with_interleaved_reads_and_reduces() {
+    let mut ctl = Controller::new(PrinsArray::single(32, 16));
+    for r in 0..5 {
+        ctl.array.load_row_bits(r, 0, 4, 0xA);
+        ctl.array.load_row_bits(r, 4, 8, 0x10 + r as u64);
+    }
+    let mut p = Program::new();
+    p.compare_field(Field::new(0, 4), 0xA);
+    p.push(Instr::ReduceCount); // 5
+    p.push(Instr::FirstMatch);
+    p.push(Instr::Read { base: 4, width: 8 }); // 0x10
+    p.push(Instr::ReduceCount); // 1 (only first tag remains)
+    p.compare_field(Field::new(0, 4), 0x3);
+    p.push(Instr::Read { base: 4, width: 8 }); // sentinel
+    let out = ctl.execute_collect(&p);
+    assert_eq!(out, vec![5, 0x10, 1, READ_NO_MATCH]);
+}
+
+#[test]
+fn stats_windows_are_additive() {
+    let mut ctl = Controller::new(PrinsArray::single(128, 16));
+    let f = Field::new(0, 8);
+    let mut p = Program::new();
+    micro::flag_lt_const(&mut p, f, 100, 10);
+
+    ctl.begin_stats();
+    ctl.execute(&p);
+    let s1 = ctl.stats();
+    ctl.begin_stats();
+    ctl.execute(&p);
+    ctl.execute(&p);
+    let s2 = ctl.stats();
+    assert_eq!(s2.cycles, 2 * s1.cycles);
+    assert_eq!(s2.passes, 2 * s1.passes);
+    assert_eq!(
+        s2.ledger.compare_bit_events,
+        2 * s1.ledger.compare_bit_events
+    );
+}
+
+#[test]
+fn energy_model_tracks_pattern_width_and_tag_population() {
+    let dev = prins::rcam::DeviceModel::default();
+    let mut ctl = Controller::new(PrinsArray::single(1000, 16));
+    // tag 10 rows, write 4 columns: write energy = 40 bit-events
+    for r in 0..10 {
+        ctl.array.load_row_bits(r, 0, 1, 1);
+    }
+    ctl.begin_stats();
+    ctl.array.compare(&[(0, true)]); // full match line: 16 cols x 1000 rows
+    ctl.array
+        .write(&[(4, true), (5, false), (6, true), (7, true)]);
+    let s = ctl.stats();
+    assert_eq!(s.ledger.compare_bit_events, 16_000);
+    assert_eq!(s.ledger.write_bit_events, 40);
+    let e = s.ledger.dynamic_energy_j(&dev);
+    // 16000 x 1fJ + 40 x 100fJ = 20 pJ
+    assert!((e - 20.0e-12).abs() < 1e-15, "{e}");
+}
+
+#[test]
+fn shift_instructions_through_program_path() {
+    let mut ctl = Controller::new(PrinsArray::new(2, 8, 8));
+    ctl.array.load_row_bits(7, 0, 1, 1); // last row of module 0
+    let mut p = Program::new();
+    p.push(Instr::Compare(vec![(0, true)]));
+    p.push(Instr::ShiftTagsUp(2)); // crosses into module 1
+    p.push(Instr::Write(vec![(5, true)]));
+    ctl.execute(&p);
+    assert_eq!(ctl.array.fetch_row_bits(9, 5, 1), 1);
+    assert_eq!(ctl.array.fetch_row_bits(7, 5, 1), 0);
+}

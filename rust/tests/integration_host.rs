@@ -1,0 +1,114 @@
+//! Host-interface integration: the register protocol end-to-end, repeated
+//! kernels, the TCP server under concurrent clients, and failure paths.
+
+use prins::algorithms::histogram_baseline;
+use prins::controller::kernels::KernelId;
+use prins::controller::registers::Status;
+use prins::host::{server::Server, PrinsDevice};
+use prins::workloads::{synth_hist_samples, synth_samples, synth_uniform};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+#[test]
+fn repeated_kernels_on_one_device() {
+    let xs = synth_hist_samples(1000, 1);
+    let dev = PrinsDevice::new(1000, 64);
+    dev.load_samples_for_histogram(&xs);
+    let expect = histogram_baseline(&xs);
+    for round in 0..3 {
+        let st = dev.run_kernel(KernelId::Histogram, &[], &[]);
+        assert_eq!(st, Status::Done, "round {round}");
+        assert_eq!(dev.take_outputs().u64s, expect, "round {round}");
+    }
+    // completion counter advanced once per run
+    assert_eq!(
+        dev.regs
+            .completions
+            .load(std::sync::atomic::Ordering::Acquire),
+        3
+    );
+}
+
+#[test]
+fn euclidean_through_device_with_params() {
+    let (n, dims, k) = (64usize, 3usize, 2usize);
+    let x = synth_samples(n, dims, k, 5);
+    let centers = synth_uniform(k * dims, 6);
+    let layout = prins::algorithms::euclidean::EuclideanLayout::new(dims);
+    let dev = PrinsDevice::new(n, layout.width as usize);
+    dev.load_samples_for_euclidean(&x, n, dims);
+    let cp: Vec<f64> = centers.iter().map(|&v| v as f64).collect();
+    let st = dev.run_kernel(KernelId::EuclideanDistance, &[k as u64], &cp);
+    assert_eq!(st, Status::Done);
+    let out = dev.take_outputs();
+    assert_eq!(out.f32s.len(), n * k);
+    let expect = prins::algorithms::euclidean_baseline(&x, n, dims, &centers, k);
+    for c in 0..k {
+        for i in 0..n {
+            assert!(
+                (out.f32s[c * n + i] - expect[c][i]).abs()
+                    <= 3e-5 * expect[c][i].abs().max(1.0),
+                "c={c} i={i}"
+            );
+        }
+    }
+    // perf counters surfaced via result registers
+    assert_eq!(dev.regs.read_result(0), out.cycles);
+}
+
+#[test]
+fn bad_parameter_count_is_an_error_not_a_hang() {
+    let (n, dims) = (16usize, 2usize);
+    let x = synth_samples(n, dims, 2, 7);
+    let layout = prins::algorithms::euclidean::EuclideanLayout::new(dims);
+    let dev = PrinsDevice::new(n, layout.width as usize);
+    dev.load_samples_for_euclidean(&x, n, dims);
+    // claim 2 centers but send coordinates for one
+    let st = dev.run_kernel(KernelId::EuclideanDistance, &[2], &[0.0, 0.0]);
+    assert_eq!(st, Status::Error);
+    // device remains usable afterwards
+    let st = dev.run_kernel(KernelId::EuclideanDistance, &[1], &[0.0, 0.0]);
+    assert_eq!(st, Status::Done);
+}
+
+#[test]
+fn tcp_server_concurrent_clients() {
+    let server = Server::spawn("127.0.0.1:0").unwrap();
+    let addr = server.addr;
+    let mut handles = Vec::new();
+    for t in 0..3 {
+        handles.push(std::thread::spawn(move || {
+            let mut conn = TcpStream::connect(addr).unwrap();
+            let mut reader = BufReader::new(conn.try_clone().unwrap());
+            let mut line = String::new();
+            writeln!(conn, "HIST {} {}", 400 + t * 100, t).unwrap();
+            reader.read_line(&mut line).unwrap();
+            assert!(line.starts_with("OK"), "client {t}: {line}");
+            assert!(line.contains(&format!("total={}", 400 + t * 100)));
+            line.clear();
+            writeln!(conn, "ED 128 2 2 {t}").unwrap();
+            reader.read_line(&mut line).unwrap();
+            assert!(line.starts_with("OK"), "client {t}: {line}");
+            writeln!(conn, "QUIT").unwrap();
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    server.shutdown();
+}
+
+#[test]
+fn tcp_server_rejects_oversized_and_malformed() {
+    let server = Server::spawn("127.0.0.1:0").unwrap();
+    let mut conn = TcpStream::connect(server.addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut line = String::new();
+    for bad in ["HIST 999999999 1", "HIST abc 1", "DP 10", "ED 0 1 1 1"] {
+        line.clear();
+        writeln!(conn, "{bad}").unwrap();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("ERR"), "{bad} -> {line}");
+    }
+    server.shutdown();
+}

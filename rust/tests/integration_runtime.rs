@@ -1,0 +1,171 @@
+//! Cross-layer integration: the rust native bit-sliced simulator vs the
+//! AOT-compiled JAX/Pallas kernels executed through PJRT.
+//!
+//! These tests require `make artifacts` to have been run; they are skipped
+//! (with a message) when artifacts/ is absent so `cargo test` stays green
+//! on a fresh checkout.
+
+use prins::controller::Controller;
+use prins::isa::{Field, Program};
+use prins::micro;
+use prins::rcam::PrinsArray;
+use prins::runtime::{Golden, Runtime, XlaRcamBackend};
+use prins::workloads::Rng;
+
+fn runtime() -> Option<Runtime> {
+    match Runtime::open("artifacts") {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("skipping runtime integration test: {e:#}");
+            None
+        }
+    }
+}
+
+#[test]
+fn xla_step_matches_native_simulator() {
+    let Some(rt) = runtime() else { return };
+    let mut xla = XlaRcamBackend::new(rt);
+    let rows = 512usize; // a slice of the artifact's 64Ki rows
+    let width = 32usize;
+    let mut native = PrinsArray::single(xla.rows(), width);
+    let mut rng = Rng::seed_from(11);
+    for r in 0..rows {
+        let v = rng.next_u32() as u64;
+        native.load_row_bits(r, 0, 32, v);
+        xla.load_row_bits(r, 0, 32, v);
+    }
+    for _ in 0..5 {
+        let ncols = 1 + rng.below(4) as usize;
+        let cpat: Vec<(u16, bool)> = (0..ncols)
+            .map(|_| (rng.below(width as u64) as u16, rng.below(2) == 1))
+            .collect();
+        let wpat: Vec<(u16, bool)> = (0..ncols)
+            .map(|_| (rng.below(width as u64) as u16, rng.below(2) == 1))
+            .collect();
+        // patterns may repeat a column; dedupe keeping first (both sides
+        // must see identical patterns either way)
+        let dedup = |p: &[(u16, bool)]| {
+            let mut seen = std::collections::HashSet::new();
+            p.iter()
+                .filter(|(c, _)| seen.insert(*c))
+                .copied()
+                .collect::<Vec<_>>()
+        };
+        let cpat = dedup(&cpat);
+        let wpat = dedup(&wpat);
+        native.compare(&cpat);
+        native.write(&wpat);
+        let tags = xla.step(&cpat, &wpat).expect("xla step");
+        let snap = native.tags_snapshot();
+        for r in 0..rows {
+            let xt = (tags[r / 32] >> (r % 32)) & 1 == 1;
+            assert_eq!(snap.get(r), xt, "tag mismatch at row {r}");
+        }
+        for r in 0..rows {
+            assert_eq!(
+                native.fetch_row_bits(r, 0, 32),
+                xla.fetch_row_bits(r, 0, 32),
+                "state mismatch at row {r}"
+            );
+        }
+    }
+}
+
+#[test]
+fn xla_program_executor_runs_vec_add() {
+    let Some(rt) = runtime() else { return };
+    let mut xla = XlaRcamBackend::new(rt);
+    let (a, b, s) = (Field::new(0, 16), Field::new(16, 16), Field::new(32, 17));
+    let mut prog = Program::new();
+    micro::vec_add(&mut prog, a, b, s, 60);
+    let mut ctl = Controller::new(PrinsArray::single(1024, 64));
+    let mut rng = Rng::seed_from(5);
+    let mut cases = Vec::new();
+    for r in 0..256 {
+        let (av, bv) = (rng.below(1 << 16), rng.below(1 << 16));
+        ctl.array.load_row_bits(r, 0, 16, av);
+        ctl.array.load_row_bits(r, 16, 16, bv);
+        xla.load_row_bits(r, 0, 16, av);
+        xla.load_row_bits(r, 16, 16, bv);
+        cases.push((av, bv));
+    }
+    ctl.execute(&prog);
+    xla.run_program(&prog).expect("xla program");
+    for (r, (av, bv)) in cases.iter().enumerate() {
+        assert_eq!(xla.fetch_row_bits(r, 32, 17), av + bv, "row {r}");
+        assert_eq!(
+            xla.fetch_row_bits(r, 32, 17),
+            ctl.array.fetch_row_bits(r, 32, 17)
+        );
+    }
+}
+
+#[test]
+fn xla_compare_count_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let mut xla = XlaRcamBackend::new(rt);
+    let mut native = PrinsArray::single(xla.rows(), 8);
+    let mut rng = Rng::seed_from(21);
+    for r in 0..2048 {
+        let v = rng.below(256);
+        native.load_row_bits(r, 0, 8, v);
+        xla.load_row_bits(r, 0, 8, v);
+    }
+    let f = Field::new(0, 8);
+    for key in [0u64, 17, 255] {
+        let pat = f.pattern(key);
+        native.compare(&pat);
+        let expect = native.count_tags();
+        let got = xla.compare_count(&pat).expect("compare_count");
+        assert_eq!(got, expect, "key {key}");
+    }
+}
+
+#[test]
+fn golden_kernels_match_scalar_reference() {
+    let Some(rt) = runtime() else { return };
+    let mut g = Golden::new(rt);
+    let mut rng = Rng::seed_from(31);
+    // ED + DP on a non-artifact-sized input (forces padding/chunking)
+    let (n, d) = (1000usize, 5usize);
+    let x: Vec<f32> = (0..n * d).map(|_| rng.f32_range(-2.0, 2.0)).collect();
+    let c: Vec<f32> = (0..d).map(|_| rng.f32_range(-2.0, 2.0)).collect();
+    let ed = g.euclidean(&x, n, d, &c).expect("ed");
+    let dp = g.dot_product(&x, n, d, &c).expect("dp");
+    for i in 0..n {
+        let mut e = 0f32;
+        let mut p = 0f32;
+        for j in 0..d {
+            let diff = x[i * d + j] - c[j];
+            e += diff * diff;
+            p += x[i * d + j] * c[j];
+        }
+        assert!((ed[i] - e).abs() <= 1e-4 * e.abs().max(1.0), "ed[{i}]");
+        assert!((dp[i] - p).abs() <= 1e-4 * p.abs().max(1.0), "dp[{i}]");
+    }
+    // histogram with padding correction
+    let xs: Vec<u32> = (0..100_000).map(|_| rng.next_u32()).collect();
+    let h = g.histogram(&xs).expect("hist");
+    let mut expect = vec![0i32; 256];
+    for &v in &xs {
+        expect[(v >> 24) as usize] += 1;
+    }
+    assert_eq!(h, expect);
+    assert_eq!(h.iter().map(|&v| v as i64).sum::<i64>(), xs.len() as i64);
+    // spmv on a small random matrix
+    let nb = 64usize;
+    let nnz = 400usize;
+    let rows: Vec<i32> = (0..nnz).map(|_| rng.below(nb as u64) as i32).collect();
+    let cols: Vec<i32> = (0..nnz).map(|_| rng.below(nb as u64) as i32).collect();
+    let vals: Vec<f32> = (0..nnz).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+    let xv: Vec<f32> = (0..nb).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+    let y = g.spmv(&rows, &cols, &vals, &xv).expect("spmv");
+    let mut ye = vec![0f32; nb];
+    for k in 0..nnz {
+        ye[rows[k] as usize] += vals[k] * xv[cols[k] as usize];
+    }
+    for i in 0..nb {
+        assert!((y[i] - ye[i]).abs() < 1e-4, "y[{i}]: {} vs {}", y[i], ye[i]);
+    }
+}

@@ -1,0 +1,272 @@
+//! Randomized property tests over the coordinator's invariants (an
+//! in-tree property harness — the vendored crate set has no proptest).
+//! Each property runs hundreds of random cases from a deterministic seed.
+
+use prins::controller::Controller;
+use prins::isa::{Field, Program, RowLayout};
+use prins::micro;
+use prins::rcam::PrinsArray;
+use prins::storage::StorageManager;
+use prins::workloads::Rng;
+
+/// Tag-logic invariants: first_match keeps exactly the first tag;
+/// if_match ⇔ any tag; counts consistent.
+#[test]
+fn prop_tag_logic() {
+    let mut rng = Rng::seed_from(0xA11CE);
+    for case in 0..300 {
+        let rows = 1 + rng.below(500) as usize;
+        let modules = 1 + rng.below(4) as usize;
+        let rpm = rows.div_ceil(modules);
+        let mut arr = PrinsArray::new(modules, rpm, 8);
+        let density = rng.below(100);
+        let mut expected: Vec<usize> = Vec::new();
+        for r in 0..arr.total_rows() {
+            if rng.below(100) < density {
+                arr.load_row_bits(r, 0, 1, 1);
+                expected.push(r);
+            }
+        }
+        arr.compare(&[(0, true)]);
+        assert_eq!(arr.count_tags() as usize, expected.len(), "case {case}");
+        let any = arr.if_match();
+        assert_eq!(any, !expected.is_empty(), "case {case}");
+        let fm = arr.first_match();
+        assert_eq!(fm, expected.first().copied(), "case {case}");
+        let snap = arr.tags_snapshot();
+        assert_eq!(
+            snap.iter_ones().collect::<Vec<_>>(),
+            expected.first().copied().into_iter().collect::<Vec<_>>(),
+            "case {case}: first_match keeps exactly the first tag"
+        );
+    }
+}
+
+/// Microcode arithmetic vs native integer semantics on random field
+/// geometries and values.
+#[test]
+fn prop_fixed_point_arithmetic() {
+    let mut rng = Rng::seed_from(0xBEEF);
+    for case in 0..60 {
+        let m = 2 + rng.below(12) as u16; // field width 2..13
+        let a = Field::new(0, m);
+        let b = Field::new(m, m);
+        let p = Field::new(2 * m, 2 * m);
+        let c_col = 4 * m + 1;
+        let rows = 32;
+        let op = rng.below(4);
+        let mut prog = Program::new();
+        match op {
+            0 => micro::add_inplace(&mut prog, a, b, c_col),
+            1 => micro::sub_inplace(&mut prog, a, b, c_col),
+            2 => micro::mul(&mut prog, a, b, p, c_col),
+            _ => micro::square(&mut prog, a, p, c_col),
+        }
+        let mut ctl = Controller::new(PrinsArray::single(rows, (4 * m + 2) as usize));
+        let mask = (1u64 << m) - 1;
+        let mut vals = Vec::new();
+        for r in 0..rows {
+            let av = rng.next_u64() & mask;
+            let bv = rng.next_u64() & mask;
+            ctl.array.load_row_bits(r, 0, m as usize, av);
+            ctl.array.load_row_bits(r, m as usize, m as usize, bv);
+            vals.push((av, bv));
+        }
+        ctl.execute(&prog);
+        for (r, &(av, bv)) in vals.iter().enumerate() {
+            match op {
+                0 => assert_eq!(
+                    ctl.array.fetch_row_bits(r, 0, m as usize),
+                    (av + bv) & mask,
+                    "case {case} add row {r}"
+                ),
+                1 => assert_eq!(
+                    ctl.array.fetch_row_bits(r, 0, m as usize),
+                    av.wrapping_sub(bv) & mask,
+                    "case {case} sub row {r}"
+                ),
+                2 => assert_eq!(
+                    ctl.array.fetch_row_bits(r, 2 * m as usize, 2 * m as usize),
+                    av * bv,
+                    "case {case} mul row {r}"
+                ),
+                _ => assert_eq!(
+                    ctl.array.fetch_row_bits(r, 2 * m as usize, 2 * m as usize),
+                    av * av,
+                    "case {case} square row {r}"
+                ),
+            }
+        }
+    }
+}
+
+/// fp32 microcode vs hardware float semantics (≤ 4 ulp; truncation mode).
+#[test]
+fn prop_fp32_ops() {
+    use prins::micro::float::{
+        bits_to_f32, unpacked_bits, FloatField, FpScratch, FP_SCRATCH_BITS,
+    };
+    let mut rng = Rng::seed_from(0xF10A7);
+    let x = FloatField::at(0);
+    let y = FloatField::at(33);
+    let z = FloatField::at(66);
+    let s = FpScratch::at(100);
+    let w = Field::new(100 + FP_SCRATCH_BITS, 8);
+    let mut padd = Program::new();
+    micro::float::fp_add(&mut padd, x, y, z, s, w);
+    let mut pmul = Program::new();
+    micro::float::fp_mul(&mut pmul, x, y, z, 172);
+    let ulp = |a: f32, b: f32| -> u64 {
+        if a == b {
+            return 0;
+        }
+        let key = |v: f32| {
+            let bits = v.to_bits();
+            if bits >> 31 == 1 {
+                -((bits & 0x7FFF_FFFF) as i64)
+            } else {
+                (bits & 0x7FFF_FFFF) as i64
+            }
+        };
+        (key(a) - key(b)).unsigned_abs()
+    };
+    for round in 0..6 {
+        let rows = 64;
+        let mut ctl = Controller::new(PrinsArray::single(rows, 240));
+        let mut cases = Vec::new();
+        for r in 0..rows {
+            // wide dynamic range, avoiding inf/denormal edges
+            let e1 = rng.below(40) as i32 - 20;
+            let e2 = rng.below(40) as i32 - 20;
+            let a = rng.f32_range(-1.0, 1.0) * 2f32.powi(e1);
+            let b = rng.f32_range(-1.0, 1.0) * 2f32.powi(e2);
+            let (a, b) = (
+                if a == 0.0 { 1.0 } else { a },
+                if b == 0.0 { 1.0 } else { b },
+            );
+            ctl.array.load_row_bits(r, 0, 33, unpacked_bits(a));
+            ctl.array.load_row_bits(r, 33, 33, unpacked_bits(b));
+            cases.push((a, b));
+        }
+        let mul = round % 2 == 1;
+        ctl.execute(if mul { &pmul } else { &padd });
+        for (r, (a, b)) in cases.iter().enumerate() {
+            let got = bits_to_f32(ctl.array.fetch_row_bits(r, 66, 33));
+            let exact = if mul { a * b } else { a + b };
+            assert!(
+                ulp(got, exact) <= 4,
+                "round {round} row {r}: {a} op {b} = {exact}, got {got}"
+            );
+        }
+    }
+}
+
+/// Storage-manager invariants: allocations never overlap, frees recycle,
+/// translation stays in-range.
+#[test]
+fn prop_storage_allocator() {
+    let mut rng = Rng::seed_from(0x5107A6E);
+    for _case in 0..200 {
+        let total = 100 + rng.below(2000) as usize;
+        let mut sm = StorageManager::new(total);
+        let mut live: Vec<prins::storage::Dataset> = Vec::new();
+        for _ in 0..30 {
+            if rng.below(3) == 0 && !live.is_empty() {
+                let i = rng.below(live.len() as u64) as usize;
+                let ds = live.swap_remove(i);
+                assert!(sm.free(ds.id));
+            } else {
+                let want = 1 + rng.below(300) as usize;
+                if let Some(ds) = sm.alloc(want, RowLayout::new(64)) {
+                    assert!(ds.rows.end() <= total);
+                    live.push(ds);
+                }
+            }
+            sm.assert_disjoint();
+        }
+        let allocated: usize = live.iter().map(|d| d.rows.len).sum();
+        assert_eq!(sm.allocated_rows(), allocated);
+    }
+}
+
+/// Chain equivalence: any random instruction stream gives identical
+/// storage state and cycle counts on a multi-module chain and a flat
+/// single-module array.
+#[test]
+fn prop_chain_flat_equivalence() {
+    let mut rng = Rng::seed_from(0xC4A1);
+    for case in 0..40 {
+        let rows = 128;
+        let width = 24;
+        let modules = 2 + rng.below(3) as usize;
+        let mut chain = PrinsArray::new(modules, rows / modules + 1, width);
+        let mut flat = PrinsArray::single(chain.total_rows(), width);
+        for r in 0..chain.total_rows() {
+            let v = rng.next_u64() & 0xFFFFFF;
+            chain.load_row_bits(r, 0, width, v);
+            flat.load_row_bits(r, 0, width, v);
+        }
+        for _ in 0..30 {
+            let mk_pat = |rng: &mut Rng| -> Vec<(u16, bool)> {
+                let k = 1 + rng.below(4) as usize;
+                let mut used = std::collections::HashSet::new();
+                (0..k)
+                    .filter_map(|_| {
+                        let c = rng.below(width as u64) as u16;
+                        used.insert(c).then_some((c, rng.below(2) == 1))
+                    })
+                    .collect()
+            };
+            match rng.below(4) {
+                0 => {
+                    let p = mk_pat(&mut rng);
+                    chain.compare(&p);
+                    flat.compare(&p);
+                }
+                1 => {
+                    let p = mk_pat(&mut rng);
+                    chain.write(&p);
+                    flat.write(&p);
+                }
+                2 => {
+                    assert_eq!(chain.count_tags(), flat.count_tags(), "case {case}");
+                }
+                _ => {
+                    chain.first_match();
+                    flat.first_match();
+                    assert_eq!(
+                        chain.tags_snapshot().iter_ones().collect::<Vec<_>>(),
+                        flat.tags_snapshot().iter_ones().collect::<Vec<_>>()
+                    );
+                }
+            }
+        }
+        for r in 0..chain.total_rows() {
+            assert_eq!(
+                chain.fetch_row_bits(r, 0, width),
+                flat.fetch_row_bits(r, 0, width),
+                "case {case} row {r}"
+            );
+        }
+        assert_eq!(chain.cycles, flat.cycles, "SIMD cycle equivalence");
+    }
+}
+
+/// The assembler round-trips every program the microcode generators emit.
+#[test]
+fn prop_assembler_roundtrip() {
+    use prins::isa::asm::{format_program, parse_program};
+    let mut rng = Rng::seed_from(0xA53);
+    for _ in 0..20 {
+        let m = 2 + rng.below(10) as u16;
+        let a = Field::new(0, m);
+        let b = Field::new(m, m);
+        let p = Field::new(2 * m, 2 * m);
+        let mut prog = Program::new();
+        micro::mul(&mut prog, a, b, p, 4 * m + 1);
+        micro::flag_lt_const(&mut prog, a, rng.below(1 << m), 4 * m + 2);
+        let text = format_program(&prog);
+        let parsed = parse_program(&text).expect("parse back");
+        assert_eq!(prog, parsed);
+    }
+}
