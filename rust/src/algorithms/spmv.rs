@@ -206,7 +206,7 @@ impl SpmvKernel {
     /// Phase 3a: segmented suffix scan over the daisy chain.
     fn reduce_chain(&self, ctl: &mut Controller) {
         let l = &self.layout;
-        let levels = (self.max_row_nnz.max(2) as f64).log2().ceil() as u32;
+        let levels = self.max_row_nnz.max(2).next_power_of_two().ilog2();
         for k in 0..levels {
             let hops = 1usize << k;
             // neighbor fields := (rowid, prod) shifted down by `hops`

@@ -13,7 +13,7 @@ use crate::model::figures;
 use crate::rcam::{DeviceModel, PrinsArray};
 use crate::storage::StorageManager;
 use crate::workloads::*;
-use anyhow::{bail, Result};
+use crate::error::{bail, Result};
 
 fn flag(args: &[String], name: &str, default: u64) -> u64 {
     args.iter()

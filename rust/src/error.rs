@@ -1,0 +1,183 @@
+//! In-tree error handling — the crate's `anyhow` stand-in, keeping the
+//! `[dependencies]` section of Cargo.toml honestly empty.
+//!
+//! Provides the same ergonomics the rest of the crate needs:
+//!   * [`Error`] — a message-carrying error; context is folded into the
+//!     message front-to-back, so `{e}` and `{e:#}` both print the full
+//!     chain (`"outer: inner"`).
+//!   * [`Result`] — alias with `Error` as the default error type.
+//!   * [`err!`] / [`bail!`] / [`ensure!`] — the `anyhow!`-family macros.
+//!   * [`Context`] — `.context(..)` / `.with_context(..)` on any
+//!     `Result` whose error displays, and on `Option`.
+//!
+//! `From` impls cover the std error types the crate propagates with `?`
+//! (io, integer/float parsing, UTF-8).
+
+use std::fmt;
+
+/// A human-readable error. Context wrapping prepends to the message, so
+/// the Display output is the whole chain, outermost context first.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(m: impl Into<String>) -> Self {
+        Error { msg: m.into() }
+    }
+
+    /// Prepend a context layer: `"{ctx}: {self}"`.
+    pub fn context(self, ctx: impl fmt::Display) -> Self {
+        Error {
+            msg: format!("{ctx}: {}", self.msg),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+macro_rules! from_display {
+    ($($ty:ty),* $(,)?) => {$(
+        impl From<$ty> for Error {
+            fn from(e: $ty) -> Self {
+                Error::msg(e.to_string())
+            }
+        }
+    )*};
+}
+
+from_display!(
+    std::io::Error,
+    std::num::ParseIntError,
+    std::num::ParseFloatError,
+    std::num::TryFromIntError,
+    std::str::Utf8Error,
+    std::string::FromUtf8Error,
+    std::fmt::Error,
+);
+
+/// Construct an [`Error`] from a format string (the `anyhow!` equivalent).
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::err!($($arg)*).into())
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+    ($cond:expr) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+}
+
+// Re-export the crate-root macros so call sites can import everything
+// from one place: `use crate::error::{bail, err, Context, Result};`
+pub use crate::{bail, ensure, err};
+
+/// Attach context to failures, mirroring `anyhow::Context`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_the_message() {
+        let e = err!("bad value {}", 42);
+        assert_eq!(e.to_string(), "bad value 42");
+        assert_eq!(format!("{e:#}"), "bad value 42");
+    }
+
+    #[test]
+    fn context_prepends_outermost_first() {
+        let e = err!("root cause").context("while parsing").context("loading config");
+        assert_eq!(e.to_string(), "loading config: while parsing: root cause");
+    }
+
+    #[test]
+    fn context_trait_on_results_and_options() {
+        let r: Result<u16, std::num::ParseIntError> = "x".parse::<u16>();
+        let e = r.context("port").unwrap_err();
+        assert!(e.to_string().starts_with("port:"), "{e}");
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing key {:?}", "k")).unwrap_err();
+        assert_eq!(e.to_string(), "missing key \"k\"");
+        assert_eq!(Some(7u32).context("unused").unwrap(), 7);
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(v: u32) -> Result<u32> {
+            ensure!(v < 10, "v too big: {v}");
+            if v == 3 {
+                bail!("three is right out");
+            }
+            Ok(v)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert_eq!(f(12).unwrap_err().to_string(), "v too big: 12");
+        assert_eq!(f(3).unwrap_err().to_string(), "three is right out");
+    }
+
+    #[test]
+    fn question_mark_conversions() {
+        fn parse(s: &str) -> Result<u64> {
+            Ok(s.parse::<u64>()?)
+        }
+        assert_eq!(parse("17").unwrap(), 17);
+        assert!(parse("nope").is_err());
+        fn read_missing() -> Result<String> {
+            Ok(std::fs::read_to_string("/definitely/not/a/file")?)
+        }
+        assert!(read_missing().is_err());
+    }
+}

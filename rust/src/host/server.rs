@@ -16,36 +16,67 @@ use super::PrinsDevice;
 use crate::controller::kernels::KernelId;
 use crate::controller::registers::Status;
 use crate::workloads::{synth_hist_samples, synth_samples, synth_uniform};
-use anyhow::{bail, Result};
+use crate::error::{bail, ensure, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Read poll interval: connection threads wake this often to observe the
+/// stop flag, so `shutdown()` can join every thread even while a client
+/// holds its connection open without sending.
+const READ_POLL: Duration = Duration::from_millis(50);
+
+/// Write timeout: a client that stops draining its receive buffer gets
+/// disconnected after this long instead of pinning its worker thread in
+/// `write` forever (which would make `shutdown()` hang on the join).
+const WRITE_TIMEOUT: Duration = Duration::from_secs(5);
 
 pub struct Server {
     pub addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
     handle: Option<std::thread::JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
 }
 
 impl Server {
-    /// Bind and serve on a background thread. `rows`/`width` size the
-    /// device built for each request batch.
+    /// Bind and serve on a background thread. Bind to port 0 for an
+    /// ephemeral port (`self.addr` carries the resolved address).
     pub fn spawn(bind: &str) -> Result<Server> {
         let listener = TcpListener::bind(bind)?;
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
-        let stop2 = stop.clone();
+        let conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>> =
+            Arc::new(Mutex::new(Vec::new()));
+        let (stop2, conns2) = (stop.clone(), conns.clone());
         let handle = std::thread::spawn(move || {
             while !stop2.load(Ordering::Acquire) {
                 match listener.accept() {
                     Ok((stream, _)) => {
+                        // accepted sockets can inherit the listener's
+                        // non-blocking mode on some platforms; reset it or
+                        // the timeouts below would be ineffective
                         stream.set_nonblocking(false).ok();
+                        stream.set_read_timeout(Some(READ_POLL)).ok();
+                        stream.set_write_timeout(Some(WRITE_TIMEOUT)).ok();
                         let st = stop2.clone();
-                        std::thread::spawn(move || {
+                        let h = std::thread::spawn(move || {
                             let _ = handle_conn(stream, st);
                         });
+                        let mut guard = conns2.lock().unwrap();
+                        // reap finished workers so a long-running server
+                        // does not accumulate one handle per connection
+                        let mut i = 0;
+                        while i < guard.len() {
+                            if guard[i].is_finished() {
+                                let _ = guard.swap_remove(i).join();
+                            } else {
+                                i += 1;
+                            }
+                        }
+                        guard.push(h);
                     }
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                         std::thread::sleep(std::time::Duration::from_millis(5));
@@ -58,12 +89,24 @@ impl Server {
             addr,
             stop,
             handle: Some(handle),
+            conns,
         })
     }
 
+    /// Stop accepting, then join the acceptor AND every connection worker
+    /// (workers poll the stop flag at `READ_POLL`, so this cannot hang on
+    /// an idle client).
     pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
         self.stop.store(true, Ordering::Release);
         if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+        let workers: Vec<_> = std::mem::take(&mut *self.conns.lock().unwrap());
+        for h in workers {
             let _ = h.join();
         }
     }
@@ -71,22 +114,40 @@ impl Server {
 
 impl Drop for Server {
     fn drop(&mut self) {
-        self.stop.store(true, Ordering::Release);
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
-        }
+        self.stop_and_join();
     }
 }
 
 fn handle_conn(stream: TcpStream, stop: Arc<AtomicBool>) -> Result<()> {
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut out = stream;
-    let mut line = String::new();
-    while !stop.load(Ordering::Acquire) {
-        line.clear();
-        if reader.read_line(&mut line)? == 0 {
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        buf.clear();
+        // Accumulate one raw line; the read timeout doubles as the
+        // stop-flag poll. Bytes are collected with read_until (not
+        // read_line) so a timeout landing mid-multi-byte character
+        // cannot drop already-consumed bytes — everything read stays
+        // appended to `buf` across timeouts.
+        let n = loop {
+            if stop.load(Ordering::Acquire) {
+                return Ok(()); // server shutting down
+            }
+            match reader.read_until(b'\n', &mut buf) {
+                Ok(n) => break n,
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    continue;
+                }
+                Err(e) => return Err(e.into()),
+            }
+        };
+        if n == 0 && buf.is_empty() {
             return Ok(()); // client closed
         }
+        let line = String::from_utf8_lossy(&buf);
         let reply = match dispatch(line.trim()) {
             Ok(Some(r)) => r,
             Ok(None) => {
@@ -96,8 +157,10 @@ fn handle_conn(stream: TcpStream, stop: Arc<AtomicBool>) -> Result<()> {
             Err(e) => format!("ERR {e}"),
         };
         writeln!(out, "{reply}")?;
+        if n == 0 {
+            return Ok(()); // EOF after a final unterminated line
+        }
     }
-    Ok(())
 }
 
 fn dispatch(line: &str) -> Result<Option<String>> {
@@ -107,9 +170,7 @@ fn dispatch(line: &str) -> Result<Option<String>> {
         ["QUIT"] => Ok(None),
         ["HIST", n, seed] => {
             let (n, seed): (usize, u64) = (n.parse()?, seed.parse()?);
-            if n == 0 || n > 1 << 20 {
-                bail!("n out of range");
-            }
+            ensure!(n > 0 && n <= 1 << 20, "n out of range");
             let xs = synth_hist_samples(n, seed);
             let dev = PrinsDevice::new(n, 64);
             dev.load_samples_for_histogram(&xs);
@@ -130,9 +191,10 @@ fn dispatch(line: &str) -> Result<Option<String>> {
         ["DP", n, dims, seed] => {
             let (n, dims, seed): (usize, usize, u64) =
                 (n.parse()?, dims.parse()?, seed.parse()?);
-            if n == 0 || n > 1 << 16 || dims == 0 || dims > 16 {
-                bail!("size out of range");
-            }
+            ensure!(
+                n > 0 && n <= 1 << 16 && dims > 0 && dims <= 16,
+                "size out of range"
+            );
             let x = synth_samples(n, dims, 4, seed);
             let h = synth_uniform(dims, seed + 1);
             let layout = crate::algorithms::dot::DotLayout::new(dims);
@@ -154,9 +216,10 @@ fn dispatch(line: &str) -> Result<Option<String>> {
         ["ED", n, dims, k, seed] => {
             let (n, dims, k, seed): (usize, usize, usize, u64) =
                 (n.parse()?, dims.parse()?, k.parse()?, seed.parse()?);
-            if n == 0 || n > 1 << 16 || dims == 0 || dims > 8 || k == 0 || k > 16 {
-                bail!("size out of range");
-            }
+            ensure!(
+                n > 0 && n <= 1 << 16 && dims > 0 && dims <= 8 && k > 0 && k <= 16,
+                "size out of range"
+            );
             let x = synth_samples(n, dims, k, seed);
             let centers = synth_uniform(k * dims, seed + 1);
             let layout = crate::algorithms::euclidean::EuclideanLayout::new(dims);

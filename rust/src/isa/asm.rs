@@ -20,7 +20,7 @@
 //! ```
 
 use super::program::{Instr, Pat, Program};
-use anyhow::{anyhow, bail, Context, Result};
+use crate::error::{bail, err, Context, Result};
 use std::fmt::Write as _;
 
 pub fn format_pattern(p: &Pat) -> String {
@@ -60,10 +60,10 @@ fn parse_pattern(terms: &[&str]) -> Result<Pat> {
     terms
         .iter()
         .map(|t| {
-            let t = t.strip_prefix('c').ok_or_else(|| anyhow!("bad term {t:?}"))?;
+            let t = t.strip_prefix('c').ok_or_else(|| err!("bad term {t:?}"))?;
             let (col, bit) = t
                 .split_once('=')
-                .ok_or_else(|| anyhow!("bad term c{t:?}"))?;
+                .ok_or_else(|| err!("bad term c{t:?}"))?;
             let col: u16 = col.parse().context("column")?;
             let bit = match bit {
                 "0" => false,
@@ -78,7 +78,7 @@ fn parse_pattern(terms: &[&str]) -> Result<Pat> {
 fn kv(term: &str, key: &str) -> Result<u16> {
     let (k, v) = term
         .split_once('=')
-        .ok_or_else(|| anyhow!("expected {key}=<n>, got {term:?}"))?;
+        .ok_or_else(|| err!("expected {key}=<n>, got {term:?}"))?;
     if k != key {
         bail!("expected key {key:?}, got {k:?}");
     }
@@ -87,7 +87,7 @@ fn kv(term: &str, key: &str) -> Result<u16> {
 
 pub fn parse_instr(line: &str) -> Result<Instr> {
     let mut parts = line.split_whitespace();
-    let op = parts.next().ok_or_else(|| anyhow!("empty instruction"))?;
+    let op = parts.next().ok_or_else(|| err!("empty instruction"))?;
     let rest: Vec<&str> = parts.collect();
     Ok(match op {
         "compare" => Instr::Compare(parse_pattern(&rest)?),
@@ -105,14 +105,14 @@ pub fn parse_instr(line: &str) -> Result<Instr> {
         "firstmatch" => Instr::FirstMatch,
         "reduce" => Instr::ReduceCount,
         "reducefield" => Instr::ReduceField {
-            col: kv(rest.first().ok_or_else(|| anyhow!("reducefield col="))?, "col")?,
+            col: kv(rest.first().ok_or_else(|| err!("reducefield col="))?, "col")?,
         },
         "settagsall" => Instr::SetTagsAll,
         "shiftup" => Instr::ShiftTagsUp(
-            rest.first().ok_or_else(|| anyhow!("shiftup <n>"))?.parse()?,
+            rest.first().ok_or_else(|| err!("shiftup <n>"))?.parse()?,
         ),
         "shiftdown" => Instr::ShiftTagsDown(
-            rest.first().ok_or_else(|| anyhow!("shiftdown <n>"))?.parse()?,
+            rest.first().ok_or_else(|| err!("shiftdown <n>"))?.parse()?,
         ),
         "clearcols" => {
             if rest.len() != 2 {

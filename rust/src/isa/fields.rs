@@ -2,6 +2,7 @@
 //! "data element normally occupies only a part of the row, while the rest
 //! of it is used for temporary storage").
 
+use crate::error::{err, Result};
 use std::collections::BTreeMap;
 
 /// A contiguous bit-field inside the row: columns [base, base+width).
@@ -135,11 +136,14 @@ impl RowLayout {
         self.fields.remove(name);
     }
 
-    pub fn get(&self, name: &str) -> Field {
-        *self
-            .fields
+    /// Look up a named field. Unknown names are a recoverable error (a
+    /// kernel asking for a field a dataset does not carry must not take
+    /// the whole device down).
+    pub fn get(&self, name: &str) -> Result<Field> {
+        self.fields
             .get(name)
-            .unwrap_or_else(|| panic!("unknown field {name:?}"))
+            .copied()
+            .ok_or_else(|| err!("unknown field {name:?}"))
     }
 
     pub fn names(&self) -> impl Iterator<Item = &str> {
@@ -204,6 +208,15 @@ mod tests {
         let mut l = RowLayout::new(64);
         l.alloc_at("a", 0, 10);
         l.alloc_at("b", 5, 10);
+    }
+
+    #[test]
+    fn get_unknown_field_is_error_not_panic() {
+        let mut l = RowLayout::new(64);
+        let a = l.alloc("a", 16);
+        assert_eq!(l.get("a").unwrap(), a);
+        let e = l.get("nope").unwrap_err();
+        assert!(e.to_string().contains("unknown field"), "{e}");
     }
 
     #[test]

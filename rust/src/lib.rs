@@ -12,6 +12,7 @@
 pub mod algorithms;
 pub mod cli;
 pub mod controller;
+pub mod error;
 pub mod host;
 pub mod isa;
 pub mod micro;

@@ -177,7 +177,7 @@ impl PrinsArray {
 
     /// Reduction-tree drain latency (charged once per dependent readout).
     pub fn reduction_latency_cycles(&self) -> u64 {
-        let per_module = (self.rows_per_module.max(2) as f64).log2().ceil() as u64;
+        let per_module = self.rows_per_module.max(2).next_power_of_two().ilog2() as u64;
         // cascaded module outputs accumulate down the chain
         per_module + self.modules.len() as u64 - 1
     }

@@ -163,9 +163,12 @@ impl RcamModule {
         n
     }
 
+    /// Depth of the reduction tree: ⌈log₂(rows)⌉, in exact integer math
+    /// (a lossy float log2 here would mis-charge reduce energy events for
+    /// large power-of-two row counts).
     #[inline]
     pub fn tree_levels(&self) -> u32 {
-        (self.rows().max(2) as f64).log2().ceil() as u32
+        self.rows().max(2).next_power_of_two().ilog2()
     }
 
     /// Tag every row (controller macro; hardware: compare with empty mask).
@@ -283,6 +286,22 @@ mod tests {
         assert_eq!(m.ledger.write_bit_events, 100);
         assert_eq!(m.ledger.n_compare, 1);
         assert_eq!(m.ledger.n_write, 1);
+    }
+
+    #[test]
+    fn tree_levels_is_exact_integer_ceil_log2() {
+        for (rows, want) in [
+            (1usize, 1u32),
+            (2, 1),
+            (3, 2),
+            (4, 2),
+            (64, 6),
+            (65, 7),
+            (1 << 20, 20),
+            ((1 << 20) + 1, 21),
+        ] {
+            assert_eq!(RcamModule::new(rows, 4).tree_levels(), want, "rows={rows}");
+        }
     }
 
     #[test]

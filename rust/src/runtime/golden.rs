@@ -6,7 +6,7 @@
 //! Artifact shapes are fixed (manifest); inputs are padded/chunked here.
 
 use super::{lit, Runtime};
-use anyhow::{bail, Result};
+use crate::error::{bail, Result};
 
 pub struct Golden {
     rt: Runtime,

@@ -5,7 +5,7 @@
 //! recursive-descent JSON parser (objects, arrays, strings, numbers,
 //! booleans, null — everything manifest.json uses).
 
-use anyhow::{anyhow, bail, Result};
+use crate::error::{bail, err, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
 
@@ -40,7 +40,7 @@ impl Json {
 
     pub fn get(&self, key: &str) -> Result<&Json> {
         match self {
-            Json::Obj(m) => m.get(key).ok_or_else(|| anyhow!("missing key {key:?}")),
+            Json::Obj(m) => m.get(key).ok_or_else(|| err!("missing key {key:?}")),
             _ => bail!("not an object"),
         }
     }
@@ -90,7 +90,7 @@ impl<'a> Parser<'a> {
         self.b
             .get(self.i)
             .copied()
-            .ok_or_else(|| anyhow!("unexpected end of input"))
+            .ok_or_else(|| err!("unexpected end of input"))
     }
 
     fn eat(&mut self, c: u8) -> Result<()> {

@@ -6,6 +6,10 @@
 //! instruction ids that xla_extension 0.5.1 rejects; the text parser
 //! reassigns ids (see /opt/xla-example/README.md and python/compile/aot.py).
 //!
+//! The PJRT bindings themselves live behind [`xla`], an in-tree offline
+//! stub in this zero-dependency build: [`Runtime::open`] fails cleanly
+//! with an "unavailable" error and every consumer takes its skip path.
+//!
 //! Two consumers:
 //!  * [`XlaRcamBackend`] — runs the L1 Pallas associative-step kernel as an
 //!    alternative execution backend for the RCAM array (bit-exact vs the
@@ -15,9 +19,10 @@
 
 pub mod golden;
 pub mod manifest;
+pub mod xla;
 pub mod xla_backend;
 
-use anyhow::{anyhow, Context, Result};
+use crate::error::{err, Context, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
@@ -39,7 +44,7 @@ impl Runtime {
         let dir = dir.as_ref().to_path_buf();
         let manifest = Manifest::load(&dir.join("manifest.json"))
             .with_context(|| format!("loading manifest from {dir:?} (run `make artifacts`)"))?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| err!("PJRT cpu client: {e:?}"))?;
         Ok(Runtime {
             client,
             dir,
@@ -61,17 +66,17 @@ impl Runtime {
                 .manifest
                 .entry_points
                 .get(name)
-                .ok_or_else(|| anyhow!("unknown entry point {name:?}"))?;
+                .ok_or_else(|| err!("unknown entry point {name:?}"))?;
             let path = self.dir.join(&entry.file);
             let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+                path.to_str().ok_or_else(|| err!("non-utf8 path"))?,
             )
-            .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+            .map_err(|e| err!("parse {path:?}: {e:?}"))?;
             let comp = xla::XlaComputation::from_proto(&proto);
             let exe = self
                 .client
                 .compile(&comp)
-                .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+                .map_err(|e| err!("compile {name}: {e:?}"))?;
             self.executables.insert(name.to_string(), exe);
         }
         Ok(())
@@ -84,12 +89,12 @@ impl Runtime {
         let exe = &self.executables[name];
         let result = exe
             .execute::<xla::Literal>(args)
-            .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
+            .map_err(|e| err!("execute {name}: {e:?}"))?[0][0]
             .to_literal_sync()
-            .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
+            .map_err(|e| err!("fetch {name}: {e:?}"))?;
         result
             .to_tuple()
-            .map_err(|e| anyhow!("untuple {name}: {e:?}"))
+            .map_err(|e| err!("untuple {name}: {e:?}"))
     }
 
     pub fn platform(&self) -> String {
@@ -99,7 +104,8 @@ impl Runtime {
 
 /// Helpers converting between rust slices and XLA literals.
 pub mod lit {
-    use anyhow::{anyhow, Result};
+    use super::xla;
+    use crate::error::{err, Result};
 
     pub fn u32_1d(v: &[u32]) -> xla::Literal {
         xla::Literal::vec1(v)
@@ -109,14 +115,14 @@ pub mod lit {
         assert_eq!(v.len(), rows * cols);
         xla::Literal::vec1(v)
             .reshape(&[rows as i64, cols as i64])
-            .map_err(|e| anyhow!("reshape: {e:?}"))
+            .map_err(|e| err!("reshape: {e:?}"))
     }
 
     pub fn u32_3d(v: &[u32], a: usize, b: usize, c: usize) -> Result<xla::Literal> {
         assert_eq!(v.len(), a * b * c);
         xla::Literal::vec1(v)
             .reshape(&[a as i64, b as i64, c as i64])
-            .map_err(|e| anyhow!("reshape: {e:?}"))
+            .map_err(|e| err!("reshape: {e:?}"))
     }
 
     pub fn f32_1d(v: &[f32]) -> xla::Literal {
@@ -127,7 +133,7 @@ pub mod lit {
         assert_eq!(v.len(), rows * cols);
         xla::Literal::vec1(v)
             .reshape(&[rows as i64, cols as i64])
-            .map_err(|e| anyhow!("reshape: {e:?}"))
+            .map_err(|e| err!("reshape: {e:?}"))
     }
 
     pub fn i32_1d(v: &[i32]) -> xla::Literal {
@@ -135,14 +141,14 @@ pub mod lit {
     }
 
     pub fn to_u32(l: &xla::Literal) -> Result<Vec<u32>> {
-        l.to_vec::<u32>().map_err(|e| anyhow!("to_vec u32: {e:?}"))
+        l.to_vec::<u32>().map_err(|e| err!("to_vec u32: {e:?}"))
     }
 
     pub fn to_f32(l: &xla::Literal) -> Result<Vec<f32>> {
-        l.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))
+        l.to_vec::<f32>().map_err(|e| err!("to_vec f32: {e:?}"))
     }
 
     pub fn to_i32(l: &xla::Literal) -> Result<Vec<i32>> {
-        l.to_vec::<i32>().map_err(|e| anyhow!("to_vec i32: {e:?}"))
+        l.to_vec::<i32>().map_err(|e| err!("to_vec i32: {e:?}"))
     }
 }

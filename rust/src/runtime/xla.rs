@@ -1,0 +1,100 @@
+//! Offline stand-in for the `xla_extension` PJRT bindings.
+//!
+//! The crate builds with an empty `[dependencies]` section, so the real
+//! PJRT client is not linkable here. This module mirrors the small API
+//! surface `runtime` uses (client, executable, HLO proto, literals) and
+//! fails cleanly at runtime: [`PjRtClient::cpu`] returns an error, so
+//! [`super::Runtime::open`] reports "unavailable" and every consumer
+//! (`prins validate`, `prins info`, the runtime integration tests, the
+//! end-to-end example) takes its documented skip path.
+//!
+//! To enable the real AOT artifact path, replace this module with actual
+//! bindings exposing the same names — no other file changes.
+
+const UNAVAILABLE: &str =
+    "XLA/PJRT backend unavailable: this is the offline zero-dependency build \
+     (src/runtime/xla.rs is a stub; link real xla_extension bindings to enable it)";
+
+/// Error type of every stub operation. Call sites format it with `{:?}`.
+#[derive(Clone, Debug)]
+pub struct XlaError(pub String);
+
+fn unavailable<T>() -> Result<T, XlaError> {
+    Err(XlaError(UNAVAILABLE.to_string()))
+}
+
+/// PJRT client handle (stub: construction always fails).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self, XlaError> {
+        unavailable()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
+        unavailable()
+    }
+
+    pub fn platform_name(&self) -> String {
+        "unavailable".to_string()
+    }
+}
+
+/// A compiled executable (stub: never constructed).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        unavailable()
+    }
+}
+
+/// A device buffer returned by execution (stub: never constructed).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        unavailable()
+    }
+}
+
+/// An HLO module parsed from text (stub: parsing always fails).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self, XlaError> {
+        unavailable()
+    }
+}
+
+/// An XLA computation wrapping an HLO proto.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation
+    }
+}
+
+/// A host literal. The stub variant carries no data: every conversion
+/// back out fails, and executions (the only way data would round-trip)
+/// are unreachable because no client can be constructed.
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T>(_v: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, XlaError> {
+        unavailable()
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, XlaError> {
+        unavailable()
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>, XlaError> {
+        unavailable()
+    }
+}

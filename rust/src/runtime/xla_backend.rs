@@ -15,7 +15,7 @@
 
 use super::{lit, Runtime};
 use crate::isa::{Instr, Program};
-use anyhow::{anyhow, bail, Result};
+use crate::error::{bail, err, Result};
 
 pub struct XlaRcamBackend {
     rt: Runtime,
@@ -165,7 +165,7 @@ impl XlaRcamBackend {
             let passes_lit = lit::u32_3d(&table, self.p, 4, self.w)?;
             let out = self.rt.execute("rcam_program", &[planes, passes_lit])?;
             self.planes =
-                lit::to_u32(out.first().ok_or_else(|| anyhow!("no output"))?)?;
+                lit::to_u32(out.first().ok_or_else(|| err!("no output"))?)?;
         }
         Ok(())
     }

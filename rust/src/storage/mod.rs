@@ -9,6 +9,7 @@
 
 pub mod wear;
 
+use crate::error::Result;
 use crate::isa::RowLayout;
 use crate::rcam::PrinsArray;
 use std::collections::BTreeMap;
@@ -60,11 +61,8 @@ impl StorageManager {
     /// First-fit allocation of `n_rows` rows with the given layout.
     pub fn alloc(&mut self, n_rows: usize, layout: RowLayout) -> Option<Dataset> {
         let mut cursor = 0usize;
-        for r in self.allocations.values() {
-            // allocations BTreeMap is keyed by id, not ordered by row —
-            // gather and sort
-            let _ = r;
-        }
+        // allocations BTreeMap is keyed by id, not ordered by row —
+        // gather and sort
         let mut ranges: Vec<RowRange> = self.allocations.values().copied().collect();
         ranges.sort_by_key(|r| r.start);
         for r in ranges {
@@ -115,6 +113,10 @@ impl StorageManager {
     }
 
     // ----- load / readout helpers ---------------------------------------
+    //
+    // All of these resolve a named field first, so an unknown field name
+    // surfaces as a recoverable `Err` (propagated from `RowLayout::get`)
+    // rather than a panic inside the storage path.
 
     /// Load a u64 value into a field of a logical row.
     pub fn load_value(
@@ -124,10 +126,11 @@ impl StorageManager {
         logical: usize,
         field: &str,
         value: u64,
-    ) {
-        let f = ds.layout.get(field);
+    ) -> Result<()> {
+        let f = ds.layout.get(field)?;
         let row = self.translate(ds, logical);
         array.load_row_bits(row, f.base as usize, f.width as usize, value);
+        Ok(())
     }
 
     /// Read a field of a logical row.
@@ -137,10 +140,10 @@ impl StorageManager {
         ds: &Dataset,
         logical: usize,
         field: &str,
-    ) -> u64 {
-        let f = ds.layout.get(field);
+    ) -> Result<u64> {
+        let f = ds.layout.get(field)?;
         let row = self.translate(ds, logical);
-        array.fetch_row_bits(row, f.base as usize, f.width as usize)
+        Ok(array.fetch_row_bits(row, f.base as usize, f.width as usize))
     }
 
     /// Bulk column load: `values[i]` into `field` of logical row i.
@@ -150,12 +153,13 @@ impl StorageManager {
         ds: &Dataset,
         field: &str,
         values: &[u64],
-    ) {
+    ) -> Result<()> {
         assert!(values.len() <= ds.rows.len);
-        let f = ds.layout.get(field);
+        let f = ds.layout.get(field)?;
         for (i, &v) in values.iter().enumerate() {
             array.load_row_bits(ds.rows.start + i, f.base as usize, f.width as usize, v);
         }
+        Ok(())
     }
 
     /// Bulk column readout.
@@ -165,14 +169,14 @@ impl StorageManager {
         ds: &Dataset,
         field: &str,
         n: usize,
-    ) -> Vec<u64> {
+    ) -> Result<Vec<u64>> {
         assert!(n <= ds.rows.len);
-        let f = ds.layout.get(field);
-        (0..n)
+        let f = ds.layout.get(field)?;
+        Ok((0..n)
             .map(|i| {
                 array.fetch_row_bits(ds.rows.start + i, f.base as usize, f.width as usize)
             })
-            .collect()
+            .collect())
     }
 }
 
@@ -209,13 +213,16 @@ mod tests {
         let mut array = PrinsArray::single(100, 64);
         let ds = sm.alloc(50, layout()).unwrap();
         for i in 0..50 {
-            sm.load_value(&mut array, &ds, i, "v", (i * 7) as u64);
+            sm.load_value(&mut array, &ds, i, "v", (i * 7) as u64).unwrap();
         }
         for i in 0..50 {
-            assert_eq!(sm.read_value(&array, &ds, i, "v"), (i * 7) as u64);
+            assert_eq!(sm.read_value(&array, &ds, i, "v").unwrap(), (i * 7) as u64);
         }
-        let col = sm.read_column(&array, &ds, "v", 10);
+        let col = sm.read_column(&array, &ds, "v", 10).unwrap();
         assert_eq!(col[3], 21);
+        // unknown field names surface as recoverable errors
+        assert!(sm.read_value(&array, &ds, 0, "missing").is_err());
+        assert!(sm.load_value(&mut array, &ds, 0, "missing", 1).is_err());
     }
 
     #[test]
@@ -232,9 +239,9 @@ mod tests {
         let mut array = PrinsArray::single(64, 64);
         let d1 = sm.alloc(20, layout()).unwrap();
         let d2 = sm.alloc(20, layout()).unwrap();
-        sm.load_column(&mut array, &d1, "v", &vec![7; 20]);
-        sm.load_column(&mut array, &d2, "v", &vec![9; 20]);
-        assert!(sm.read_column(&array, &d1, "v", 20).iter().all(|&v| v == 7));
-        assert!(sm.read_column(&array, &d2, "v", 20).iter().all(|&v| v == 9));
+        sm.load_column(&mut array, &d1, "v", &vec![7; 20]).unwrap();
+        sm.load_column(&mut array, &d2, "v", &vec![9; 20]).unwrap();
+        assert!(sm.read_column(&array, &d1, "v", 20).unwrap().iter().all(|&v| v == 7));
+        assert!(sm.read_column(&array, &d2, "v", 20).unwrap().iter().all(|&v| v == 9));
     }
 }

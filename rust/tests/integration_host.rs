@@ -1,5 +1,10 @@
 //! Host-interface integration: the register protocol end-to-end, repeated
 //! kernels, the TCP server under concurrent clients, and failure paths.
+//!
+//! Every server in this suite binds 127.0.0.1:0 (kernel-assigned
+//! ephemeral port) so parallel test runs can never collide on a fixed
+//! port, and `Server::shutdown()` joins the acceptor and all connection
+//! workers so no thread outlives its test.
 
 use prins::algorithms::histogram_baseline;
 use prins::controller::kernels::KernelId;
@@ -96,6 +101,27 @@ fn tcp_server_concurrent_clients() {
         h.join().unwrap();
     }
     server.shutdown();
+}
+
+#[test]
+fn ephemeral_ports_cannot_collide_and_shutdown_joins_workers() {
+    // Two servers up at once: the kernel hands each a distinct port.
+    let a = Server::spawn("127.0.0.1:0").unwrap();
+    let b = Server::spawn("127.0.0.1:0").unwrap();
+    assert_ne!(a.addr.port(), 0, "bind resolved to a concrete port");
+    assert_ne!(a.addr.port(), b.addr.port());
+    // Leave a client connected and silent: shutdown must still join the
+    // connection worker (it polls the stop flag) instead of hanging.
+    let conn = TcpStream::connect(a.addr).unwrap();
+    let mut check = TcpStream::connect(b.addr).unwrap();
+    let mut reader = BufReader::new(check.try_clone().unwrap());
+    writeln!(check, "PING").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert_eq!(line.trim(), "PONG");
+    a.shutdown();
+    b.shutdown();
+    drop(conn);
 }
 
 #[test]
