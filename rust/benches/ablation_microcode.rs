@@ -5,13 +5,17 @@
 //!     semantics — measures the simulator, not the device)
 use prins::controller::Controller;
 use prins::isa::{Field, Program};
-use prins::metrics::bench::time_it;
+use prins::metrics::bench::{backend_from_args, time_it};
 use prins::micro;
 use prins::rcam::PrinsArray;
 use prins::storage::StorageManager;
 use prins::workloads::{synth_csr, Rng};
 
 fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let backend = backend_from_args(&args);
+    println!("simulator backend: {backend:?} (--workers N; device results invariant)\n");
+
     // --- 1: adder microcode cost (device cycles) ---
     println!("== ablation 1: adder microcode (device cycles per 16-bit add) ==");
     let (a, b, s) = (Field::new(0, 16), Field::new(16, 16), Field::new(32, 17));
@@ -36,7 +40,7 @@ fn main() {
         ("chain-tree ([79])", ReduceEngine::ChainTree),
         ("serial sweep (Fig.10)", ReduceEngine::SerialTree),
     ] {
-        let mut array = PrinsArray::single(a.nnz(), 256);
+        let mut array = PrinsArray::single(a.nnz(), 256).with_backend(backend);
         let mut sm = StorageManager::new(a.nnz());
         let kern = SpmvKernel::load(&mut sm, &mut array, &a);
         let mut ctl = Controller::new(array);
@@ -52,8 +56,10 @@ fn main() {
     println!("== ablation 3: associative-step backend (simulator wall-clock) ==");
     let pat: Vec<(u16, bool)> = vec![(0, true), (5, false), (9, true)];
     let wpat: Vec<(u16, bool)> = vec![(12, true)];
+    // clone per iteration: fresh storage state, shared worker pool
+    let proto = PrinsArray::single(65536, 32).with_backend(backend);
     let t_native = time_it("native bit-sliced step (64Ki rows)", 2, 10, || {
-        let mut arr = PrinsArray::single(65536, 32);
+        let mut arr = proto.clone();
         for _ in 0..16 {
             arr.compare(&pat);
             arr.write(&wpat);

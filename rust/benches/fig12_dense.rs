@@ -1,14 +1,31 @@
 //! Regenerates paper Fig. 12: ED / DP / Histogram performance normalized
 //! to a bandwidth-limited external-storage architecture (10 GB/s appliance
 //! and 24 GB/s NVDIMM), for 1M / 10M / 100M elements, plus the §6
-//! GFLOPS/W numbers. Run: `cargo bench --bench fig12_dense`.
+//! GFLOPS/W numbers. Run: `cargo bench --bench fig12_dense`
+//! (`-- --workers N` selects the simulator backend; results are
+//! backend-invariant, only wall-clock changes).
+use prins::metrics::bench::{backend_from_args, write_bench_json, BenchRecord};
 use prins::model::figures;
 
 fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let backend = backend_from_args(&args);
+    let sim_rows = 1024usize;
     let t0 = std::time::Instant::now();
-    let t = figures::fig12(figures::DIMS, 1024);
+    let t = figures::fig12_on(figures::DIMS, sim_rows, backend);
+    let wall = t0.elapsed().as_secs_f64();
     println!("{}", t.render());
     println!("paper shape: ED/DP/Hist normalized speedup grows linearly in N,");
     println!("reaching 3-4 orders of magnitude at 100M; efficiency ~2-4 GFLOPS/W.");
-    println!("(simulated in {:?})", t0.elapsed());
+    println!("(simulated in {wall:.3}s, backend {backend:?})");
+    let rec = BenchRecord {
+        bench: "fig12".into(),
+        rows: sim_rows as u64,
+        workers: backend.workers() as u64,
+        ops_per_s: sim_rows as f64 / wall,
+        wall_s: wall,
+    };
+    if let Ok(p) = write_bench_json("fig12", &[rec]) {
+        println!("wrote {}", p.display());
+    }
 }

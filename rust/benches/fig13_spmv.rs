@@ -1,13 +1,30 @@
 //! Regenerates paper Fig. 13: SpMV normalized performance (a) and power
 //! efficiency (b) over the 18 UFL matrices (density-matched synthetics),
-//! ordered by increasing density. Run: `cargo bench --bench fig13_spmv`.
+//! ordered by increasing density. Run: `cargo bench --bench fig13_spmv`
+//! (`-- --workers N` selects the simulator backend; results are
+//! backend-invariant, only wall-clock changes).
+use prins::metrics::bench::{backend_from_args, write_bench_json, BenchRecord};
 use prins::model::figures;
 
 fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let backend = backend_from_args(&args);
+    let sim_n = 1500usize;
     let t0 = std::time::Instant::now();
-    let t = figures::fig13(1500);
+    let t = figures::fig13_on(sim_n, backend);
+    let wall = t0.elapsed().as_secs_f64();
     println!("{}", t.render());
     println!("paper shape: normalized performance grows with matrix density,");
     println!("exceeding two orders of magnitude at the dense end (nd24k).");
-    println!("(simulated in {:?})", t0.elapsed());
+    println!("(simulated in {wall:.3}s, backend {backend:?})");
+    let rec = BenchRecord {
+        bench: "fig13".into(),
+        rows: sim_n as u64,
+        workers: backend.workers() as u64,
+        ops_per_s: sim_n as f64 / wall,
+        wall_s: wall,
+    };
+    if let Ok(p) = write_bench_json("fig13", &[rec]) {
+        println!("wrote {}", p.display());
+    }
 }

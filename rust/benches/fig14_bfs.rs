@@ -2,14 +2,31 @@
 //! (10 GB/s) and 6 GTEPS (24 GB/s) references, over the Table 3 graphs
 //! ordered by average out-degree. Reports BOTH the literal Algorithm 5
 //! measurement and the paper's vertex-serial model (see EXPERIMENTS.md).
+//! Run: `cargo bench --bench fig14_bfs` (`-- --workers N` selects the
+//! simulator backend; results are backend-invariant).
+use prins::metrics::bench::{backend_from_args, write_bench_json, BenchRecord};
 use prins::model::figures;
 
 fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let backend = backend_from_args(&args);
+    let sim_v = 1usize << 11;
     let t0 = std::time::Instant::now();
-    let t = figures::fig14(1 << 11);
+    let t = figures::fig14_on(sim_v, backend);
+    let wall = t0.elapsed().as_secs_f64();
     println!("{}", t.render());
     println!("paper shape (model columns): speedup ordered by avg out-degree,");
     println!("up to ~7x for hollywood-09; the literal edge-serial Algorithm 5");
     println!("is far slower — see EXPERIMENTS.md for the discrepancy analysis.");
-    println!("(simulated in {:?})", t0.elapsed());
+    println!("(simulated in {wall:.3}s, backend {backend:?})");
+    let rec = BenchRecord {
+        bench: "fig14".into(),
+        rows: sim_v as u64,
+        workers: backend.workers() as u64,
+        ops_per_s: sim_v as f64 / wall,
+        wall_s: wall,
+    };
+    if let Ok(p) = write_bench_json("fig14", &[rec]) {
+        println!("wrote {}", p.display());
+    }
 }

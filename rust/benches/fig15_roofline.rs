@@ -1,15 +1,32 @@
 //! Regenerates paper Fig. 15: the roofline of KNL behind a 10 GB/s storage
 //! appliance vs a 4 TB PRINS whose compute never leaves the storage
-//! arrays. Run: `cargo bench --bench fig15_roofline`.
+//! arrays. Run: `cargo bench --bench fig15_roofline`. The figure is
+//! analytical (no array simulation), so `--workers` only tags the JSON
+//! record for trajectory uniformity.
+use prins::metrics::bench::{backend_from_args, write_bench_json, BenchRecord};
 use prins::model::figures;
 use prins::model::roofline;
 use prins::rcam::DeviceModel;
 
 fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let backend = backend_from_args(&args);
+    let t0 = std::time::Instant::now();
     let t = figures::fig15();
+    let wall = t0.elapsed().as_secs_f64();
     println!("{}", t.render());
     let dev = DeviceModel::default();
     let bw = roofline::prins_internal_bandwidth_gb_s(1_000_000_000_000, dev.freq_hz);
     println!("PRINS internal bandwidth (bit-column -> tags, 1T rows): {bw:.2e} GB/s");
     println!("vs external appliance 10 GB/s and NVDIMM 24 GB/s.");
+    let rec = BenchRecord {
+        bench: "fig15".into(),
+        rows: 0,
+        workers: backend.workers() as u64,
+        ops_per_s: 0.0,
+        wall_s: wall,
+    };
+    if let Ok(p) = write_bench_json("fig15", &[rec]) {
+        println!("wrote {}", p.display());
+    }
 }

@@ -1,60 +1,174 @@
 //! Simulator hot-path microbenchmarks (L3 perf target, DESIGN.md §6):
 //! word-ops/second of the bit-sliced compare/write inner loops, the
-//! microcode executor, and the chain field-shift. These are the numbers
-//! the §Perf optimization loop tracks.
+//! microcode executor, and the chain field-shift, swept over the
+//! parallel-backend worker count. These are the numbers the §Perf
+//! optimization loop tracks; every run writes `BENCH_hotpath.json` at
+//! the repository root so the perf trajectory is machine-readable.
+//!
+//! Flags (after `cargo bench --bench simulator_hotpath --`):
+//!   --rows N          array rows (default 1<<20)
+//!   --workers a,b,c   worker-count sweep (default 1,2,4,8; 1 = serial)
+//!   --verify          assert threaded results/stats identical to serial
 use prins::controller::Controller;
-use prins::isa::{Field, Program};
-use prins::metrics::bench::time_it;
+use prins::isa::{Field, Instr, Program};
+use prins::metrics::bench::{
+    arg_u64, time_it, workers_sweep_from_args, write_bench_json, BenchRecord,
+};
 use prins::micro;
-use prins::rcam::PrinsArray;
+use prins::rcam::{ExecBackend, PrinsArray};
 
 fn main() {
-    let rows = 1 << 20; // 1M rows
-    println!("rows = {rows}");
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let rows = arg_u64(&args, "--rows", 1 << 20) as usize;
+    let sweep = workers_sweep_from_args(&args, &[1, 2, 4, 8]);
+    let verify = args.iter().any(|a| a == "--verify");
+    println!("rows = {rows}, workers sweep = {sweep:?}");
 
     let pat3: Vec<(u16, bool)> = vec![(0, true), (5, false), (9, true)];
     let wpat: Vec<(u16, bool)> = vec![(12, true), (13, false)];
 
-    let mut arr = PrinsArray::single(rows, 64);
-    let t = time_it("compare (3 cols) x100", 3, 10, || {
-        for _ in 0..100 {
-            arr.compare(&pat3);
-        }
-    });
-    println!("{}", t.report());
-    let per = t.min().as_secs_f64() / 100.0;
-    println!(
-        "  -> {:.2e} row-col ops/s",
-        (rows as f64 * 3.0) / per
-    );
+    let mut records: Vec<BenchRecord> = Vec::new();
+    let mut push = |records: &mut Vec<BenchRecord>, bench: &str, w: usize, ops: f64, wall: f64| {
+        records.push(BenchRecord {
+            bench: bench.into(),
+            rows: rows as u64,
+            workers: w as u64,
+            ops_per_s: ops,
+            wall_s: wall,
+        });
+    };
 
-    let t = time_it("compare+write pass x100", 3, 10, || {
-        for _ in 0..100 {
-            arr.compare(&pat3);
-            arr.write(&wpat);
-        }
-    });
-    println!("{}", t.report());
+    for &w in &sweep {
+        let be = ExecBackend::from_workers(w);
+        println!("-- workers = {w} ({be:?}) --");
 
-    // full 16-bit add microprogram over 1M rows
+        let mut arr = PrinsArray::single(rows, 64).with_backend(be);
+        let t = time_it(&format!("compare (3 cols) x100 [w={w}]"), 3, 10, || {
+            for _ in 0..100 {
+                arr.compare(&pat3);
+            }
+        });
+        println!("{}", t.report());
+        let per = (t.min().as_secs_f64() / 100.0).max(1e-12);
+        let ops = rows as f64 * 3.0 / per;
+        println!("  -> {ops:.2e} row-col ops/s");
+        push(&mut records, "compare_3col", w, ops, t.min().as_secs_f64());
+
+        // fused compare+write pass (3 compare cols + 2 write cols per row)
+        let t = time_it(&format!("compare+write pass x100 [w={w}]"), 3, 10, || {
+            for _ in 0..100 {
+                arr.pass(&pat3, &wpat);
+            }
+        });
+        println!("{}", t.report());
+        let per = (t.min().as_secs_f64() / 100.0).max(1e-12);
+        let ops = rows as f64 * 5.0 / per;
+        println!("  -> {ops:.2e} row-col ops/s");
+        push(&mut records, "pass_3c2w", w, ops, t.min().as_secs_f64());
+
+        // full 16-bit add microprogram: one long data-parallel span, so
+        // the whole program is a single pool dispatch per execute
+        let (a, b) = (Field::new(0, 16), Field::new(16, 16));
+        let mut prog = Program::new();
+        micro::add_inplace(&mut prog, a, b, 60);
+        let mut ctl = Controller::new(PrinsArray::single(rows, 64).with_backend(be));
+        let t = time_it(&format!("16-bit vec add [w={w}]"), 1, 5, || {
+            ctl.execute(&prog);
+        });
+        println!("{}", t.report());
+        let passes = prog.n_passes() as f64;
+        let rps = rows as f64 * passes / t.min().as_secs_f64().max(1e-12);
+        println!("  -> {rps:.2e} row-passes/s");
+        push(&mut records, "vec_add16", w, rps, t.min().as_secs_f64());
+
+        // chain field shift (serializing op — backend-independent, kept
+        // in the trajectory as the barrier-path baseline)
+        let mut arr = PrinsArray::new(4, (rows / 4).max(1), 160).with_backend(be);
+        let t = time_it(&format!("chain shift 48 cols x16 hops [w={w}]"), 1, 5, || {
+            arr.shift_columns_to(0, 64, 48, 16);
+        });
+        println!("{}", t.report());
+        let ops = arr.total_rows() as f64 * 48.0 * 16.0 / t.min().as_secs_f64().max(1e-12);
+        push(&mut records, "chain_shift", w, ops, t.min().as_secs_f64());
+    }
+
+    // thread-scaling summary (speedup vs the first sweep entry)
+    println!("\n== thread scaling (row-col ops/s, speedup vs w={}) ==", sweep[0]);
+    for bench in ["compare_3col", "pass_3c2w", "vec_add16"] {
+        let base = records
+            .iter()
+            .find(|r| r.bench == bench)
+            .map(|r| r.ops_per_s)
+            .unwrap_or(0.0);
+        for r in records.iter().filter(|r| r.bench == bench) {
+            println!(
+                "{:<14} w={:<2} {:>10.3e} ops/s  ({:.2}x)",
+                r.bench,
+                r.workers,
+                r.ops_per_s,
+                if base > 0.0 { r.ops_per_s / base } else { 0.0 }
+            );
+        }
+    }
+
+    if verify {
+        verify_equivalence(rows);
+        println!("\nVERIFY OK: threaded backends bit-identical to serial");
+    }
+
+    match write_bench_json("hotpath", &records) {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => {
+            eprintln!("failed to write BENCH_hotpath.json: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+/// Equivalence gate for CI (`--verify`): a real microprogram plus
+/// serializing instructions, run on serial and threaded backends over an
+/// array whose rows do NOT divide evenly into stripes; storage, tags,
+/// data buffers, cycles, and energy ledgers must match exactly.
+fn verify_equivalence(rows: usize) {
+    let rows = rows.min(1 << 16);
+    let build = |be: ExecBackend| -> Controller {
+        // odd per-module row count => uneven word stripes
+        let mut c = Controller::new(PrinsArray::new(2, rows / 2 + 3, 64).with_backend(be));
+        for r in 0..c.array.total_rows() {
+            let v = (r as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) & 0xFFFF_FFFF;
+            c.array.load_row_bits(r, 0, 32, v);
+        }
+        c
+    };
     let (a, b) = (Field::new(0, 16), Field::new(16, 16));
     let mut prog = Program::new();
     micro::add_inplace(&mut prog, a, b, 60);
-    let mut ctl = Controller::new(PrinsArray::single(rows, 64));
-    let t = time_it("16-bit vec add (1M rows)", 1, 5, || {
-        ctl.execute(&prog);
-    });
-    println!("{}", t.report());
-    let passes = prog.n_passes() as f64;
-    println!(
-        "  -> {:.2e} row-passes/s",
-        rows as f64 * passes / t.min().as_secs_f64()
-    );
+    prog.push(Instr::ReduceCount);
+    prog.push(Instr::ShiftTagsUp(5));
+    prog.compare_field(Field::new(0, 4), 0xA);
+    prog.push(Instr::ReduceField { col: 1 });
+    prog.push(Instr::Read { base: 0, width: 16 });
 
-    // chain shift
-    let mut arr = PrinsArray::new(4, rows / 4, 160);
-    let t = time_it("chain shift 48 cols x16 hops", 1, 5, || {
-        arr.shift_columns_to(0, 64, 48, 16);
-    });
-    println!("{}", t.report());
+    let mut s = build(ExecBackend::Serial);
+    let out_s = s.execute_collect(&prog);
+    for n in [2usize, 4, 8] {
+        let mut t = build(ExecBackend::Threaded(n));
+        let out_t = t.execute_collect(&prog);
+        assert_eq!(out_s, out_t, "workers={n}: data buffer");
+        assert_eq!(s.array.cycles, t.array.cycles, "workers={n}: cycles");
+        assert_eq!(s.array.ledger(), t.array.ledger(), "workers={n}: ledger");
+        assert_eq!(
+            s.array.tags_snapshot().iter_ones().collect::<Vec<_>>(),
+            t.array.tags_snapshot().iter_ones().collect::<Vec<_>>(),
+            "workers={n}: tags"
+        );
+        for r in 0..s.array.total_rows() {
+            assert_eq!(
+                s.array.fetch_row_bits(r, 0, 64),
+                t.array.fetch_row_bits(r, 0, 64),
+                "workers={n}: row {r}"
+            );
+        }
+        println!("verified workers={n} against serial ({} rows)", s.array.total_rows());
+    }
 }

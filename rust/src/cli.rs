@@ -1,8 +1,8 @@
 //! `prins` command line: drive the PRINS system from a shell.
 //!
-//!   prins run <ed|dp|hist|spmv|bfs> [--n N] [--dims D] [--seed S]
+//!   prins run <ed|dp|hist|spmv|bfs> [--n N] [--dims D] [--seed S] [--workers W]
 //!   prins validate            # PRINS vs golden XLA kernels (needs artifacts/)
-//!   prins serve [--bind ADDR] # TCP storage-appliance front-end
+//!   prins serve [--bind ADDR] [--workers W] # TCP storage-appliance front-end
 //!   prins report <fig12|fig13|fig14|fig15|all> [--csv]
 //!   prins info                # device model + artifact inventory
 //!
@@ -10,7 +10,7 @@
 
 use crate::controller::Controller;
 use crate::model::figures;
-use crate::rcam::{DeviceModel, PrinsArray};
+use crate::rcam::{DeviceModel, ExecBackend, PrinsArray};
 use crate::storage::StorageManager;
 use crate::workloads::*;
 use crate::error::{bail, Result};
@@ -23,6 +23,13 @@ fn flag(args: &[String], name: &str, default: u64) -> u64 {
         .unwrap_or(default)
 }
 
+/// `--workers N` simulator backend knob: default = all cores,
+/// `--workers 1` = the serial reference path. Device-model results are
+/// identical either way; this only sets simulation speed.
+fn backend_flag(args: &[String]) -> ExecBackend {
+    crate::metrics::bench::backend_from_args(args)
+}
+
 pub fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     match args.first().map(|s| s.as_str()) {
@@ -33,10 +40,11 @@ pub fn main() -> Result<()> {
         Some("info") => info(),
         _ => {
             eprintln!("usage: prins <run|validate|serve|report|info> ...");
-            eprintln!("  run <ed|dp|hist|spmv|bfs> [--n N] [--dims D] [--seed S]");
+            eprintln!("  run <ed|dp|hist|spmv|bfs> [--n N] [--dims D] [--seed S] [--workers W]");
             eprintln!("  validate");
-            eprintln!("  serve [--bind ADDR]");
-            eprintln!("  report <fig12|fig13|fig14|fig15|all> [--csv]");
+            eprintln!("  serve [--bind ADDR] [--workers W]");
+            eprintln!("  report <fig12|fig13|fig14|fig15|all> [--csv] [--workers W]");
+            eprintln!("  (--workers: simulator threads; default = cores, 1 = serial)");
             Ok(())
         }
     }
@@ -46,13 +54,15 @@ fn run(args: &[String]) -> Result<()> {
     let n = flag(args, "--n", 1024) as usize;
     let dims = flag(args, "--dims", 8) as usize;
     let seed = flag(args, "--seed", 1);
+    let backend = backend_flag(args);
     let dev = DeviceModel::default();
     match args.first().map(|s| s.as_str()) {
         Some("ed") => {
             let x = synth_samples(n, dims, 4, seed);
             let c = synth_uniform(dims, seed + 1);
             let layout = crate::algorithms::euclidean::EuclideanLayout::new(dims);
-            let mut array = PrinsArray::single(n, layout.width as usize);
+            let mut array =
+                PrinsArray::single(n, layout.width as usize).with_backend(backend);
             let mut sm = StorageManager::new(n);
             let kern = crate::algorithms::EuclideanKernel::load(&mut sm, &mut array, &x, n, dims);
             let mut ctl = Controller::new(array);
@@ -63,7 +73,8 @@ fn run(args: &[String]) -> Result<()> {
             let x = synth_samples(n, dims, 4, seed);
             let h = synth_uniform(dims, seed + 1);
             let layout = crate::algorithms::dot::DotLayout::new(dims);
-            let mut array = PrinsArray::single(n, layout.width as usize);
+            let mut array =
+                PrinsArray::single(n, layout.width as usize).with_backend(backend);
             let mut sm = StorageManager::new(n);
             let kern = crate::algorithms::DotKernel::load(&mut sm, &mut array, &x, n, dims);
             let mut ctl = Controller::new(array);
@@ -72,7 +83,7 @@ fn run(args: &[String]) -> Result<()> {
         }
         Some("hist") => {
             let xs = synth_hist_samples(n, seed);
-            let mut array = PrinsArray::single(n, 40);
+            let mut array = PrinsArray::single(n, 40).with_backend(backend);
             let mut sm = StorageManager::new(n);
             let kern = crate::algorithms::HistogramKernel::load(&mut sm, &mut array, &xs);
             let mut ctl = Controller::new(array);
@@ -84,7 +95,7 @@ fn run(args: &[String]) -> Result<()> {
             let a = synth_csr(n, n * 8, seed);
             let mut rng = Rng::seed_from(seed + 1);
             let x: Vec<f32> = (0..n).map(|_| rng.f32_range(-1.0, 1.0)).collect();
-            let mut array = PrinsArray::single(a.nnz(), 256);
+            let mut array = PrinsArray::single(a.nnz(), 256).with_backend(backend);
             let mut sm = StorageManager::new(a.nnz());
             let kern = SpmvKernel::load(&mut sm, &mut array, &a);
             let mut ctl = Controller::new(array);
@@ -97,7 +108,7 @@ fn run(args: &[String]) -> Result<()> {
         }
         Some("bfs") => {
             let g = synth_power_law(n, (dims as f64).max(2.0), 2.5, seed);
-            let mut array = PrinsArray::single(g.edges(), 128);
+            let mut array = PrinsArray::single(g.edges(), 128).with_backend(backend);
             let mut sm = StorageManager::new(g.edges());
             let kern = crate::algorithms::BfsKernel::load(&mut sm, &mut array, &g);
             let mut ctl = Controller::new(array);
@@ -168,8 +179,10 @@ fn serve(args: &[String]) -> Result<()> {
         .position(|a| a == "--bind")
         .and_then(|i| args.get(i + 1).cloned())
         .unwrap_or_else(|| "127.0.0.1:7411".to_string());
-    let server = crate::host::server::Server::spawn(&bind)?;
+    let backend = backend_flag(args);
+    let server = crate::host::server::Server::spawn_with(&bind, backend)?;
     println!("prins storage appliance listening on {}", server.addr);
+    println!("simulator backend: {backend:?}");
     println!("protocol: PING | HIST n seed | DP n dims seed | ED n dims k seed | QUIT");
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
@@ -179,16 +192,17 @@ fn serve(args: &[String]) -> Result<()> {
 fn report(args: &[String]) -> Result<()> {
     let csv = args.iter().any(|a| a == "--csv");
     let which = args.first().map(|s| s.as_str()).unwrap_or("all");
+    let be = backend_flag(args);
     let mut tables = Vec::new();
     match which {
-        "fig12" => tables.push(figures::fig12(figures::DIMS, 512)),
-        "fig13" => tables.push(figures::fig13(1200)),
-        "fig14" => tables.push(figures::fig14(1 << 10)),
+        "fig12" => tables.push(figures::fig12_on(figures::DIMS, 512, be)),
+        "fig13" => tables.push(figures::fig13_on(1200, be)),
+        "fig14" => tables.push(figures::fig14_on(1 << 10, be)),
         "fig15" => tables.push(figures::fig15()),
         "all" => {
-            tables.push(figures::fig12(figures::DIMS, 512));
-            tables.push(figures::fig13(1200));
-            tables.push(figures::fig14(1 << 10));
+            tables.push(figures::fig12_on(figures::DIMS, 512, be));
+            tables.push(figures::fig13_on(1200, be));
+            tables.push(figures::fig14_on(1 << 10, be));
             tables.push(figures::fig15());
         }
         other => bail!("unknown report {other:?}"),

@@ -135,21 +135,43 @@ impl Controller {
 
     /// Execute a straight-line program; returns the data-buffer slice it
     /// produced.
+    ///
+    /// On a threaded array backend the program is split into maximal
+    /// data-parallel *spans* (`Program::spans`), each dispatched to the
+    /// worker pool as one unit — per-instruction barriers would drown
+    /// the parallelism win. Serializing instructions (reads, match
+    /// queries, reductions, shifts) step one at a time between spans, so
+    /// buffer contents, cycles, and ledgers are identical to the serial
+    /// path (DESIGN.md §5).
     pub fn execute(&mut self, prog: &Program) -> &[u64] {
         let start = self.buffer.len();
-        for instr in &prog.instrs {
-            self.step(instr);
-        }
+        self.run_program(prog);
         &self.buffer[start..]
     }
 
     /// Execute and drain the produced buffer values.
     pub fn execute_collect(&mut self, prog: &Program) -> Vec<u64> {
         let start = self.buffer.len();
-        for instr in &prog.instrs {
-            self.step(instr);
-        }
+        self.run_program(prog);
         self.buffer.split_off(start)
+    }
+
+    fn run_program(&mut self, prog: &Program) {
+        if self.array.is_threaded() {
+            for span in prog.spans() {
+                if span.data_parallel {
+                    self.array.execute_span(span.instrs);
+                } else {
+                    for instr in span.instrs {
+                        self.step(instr);
+                    }
+                }
+            }
+        } else {
+            for instr in &prog.instrs {
+                self.step(instr);
+            }
+        }
     }
 
     pub fn clear_buffer(&mut self) {
@@ -195,6 +217,35 @@ mod tests {
         p.push(Instr::Read { base: 0, width: 4 });
         let out = c.execute_collect(&p);
         assert_eq!(out, vec![READ_NO_MATCH]);
+    }
+
+    #[test]
+    fn threaded_program_execution_matches_serial() {
+        use crate::rcam::ExecBackend;
+        let build = |backend| {
+            let mut c = Controller::new(PrinsArray::new(2, 50, 16).with_backend(backend));
+            for r in 0..100 {
+                c.array.load_row_bits(r, 0, 8, (r % 19) as u64);
+            }
+            c
+        };
+        let f = Field::new(0, 8);
+        let mut p = Program::new();
+        p.compare_field(f, 5);
+        p.write_field(Field::new(8, 4), 0xA);
+        p.push(Instr::ReduceCount);
+        p.push(Instr::IfMatch);
+        p.push(Instr::Read { base: 8, width: 4 });
+        p.push(Instr::ShiftTagsUp(3));
+        p.push(Instr::ReduceCount);
+        p.push(Instr::ClearColumns { base: 12, width: 2 });
+        let mut s = build(ExecBackend::Serial);
+        let out_s = s.execute_collect(&p);
+        let mut t = build(ExecBackend::Threaded(4));
+        let out_t = t.execute_collect(&p);
+        assert_eq!(out_s, out_t, "data-buffer results");
+        assert_eq!(s.array.cycles, t.array.cycles, "cycles");
+        assert_eq!(s.array.ledger(), t.array.ledger(), "energy ledger");
     }
 
     #[test]

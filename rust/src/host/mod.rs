@@ -19,7 +19,7 @@ use crate::algorithms::{DotKernel, EuclideanKernel, HistogramKernel};
 use crate::controller::kernels::KernelId;
 use crate::controller::registers::{RegisterFile, Status};
 use crate::controller::Controller;
-use crate::rcam::{DeviceModel, PrinsArray};
+use crate::rcam::{DeviceModel, ExecBackend, PrinsArray};
 use crate::storage::StorageManager;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -68,7 +68,19 @@ impl PrinsDevice {
     }
 
     pub fn with_device_model(rows: usize, width: usize, dm: DeviceModel) -> Self {
-        let array = PrinsArray::with_device(1, rows, width, dm);
+        Self::with_config(rows, width, dm, ExecBackend::Serial)
+    }
+
+    /// Full configuration: device model + simulator execution backend
+    /// (the backend only sets how fast the simulation runs; register
+    /// results and output buffers are bit-identical either way).
+    pub fn with_config(
+        rows: usize,
+        width: usize,
+        dm: DeviceModel,
+        backend: ExecBackend,
+    ) -> Self {
+        let array = PrinsArray::with_device(1, rows, width, dm).with_backend(backend);
         let state = Arc::new(Mutex::new(DeviceState {
             ctl: Controller::new(array),
             sm: StorageManager::new(rows),
@@ -229,6 +241,23 @@ mod tests {
         assert_eq!(out.u64s, histogram_baseline(&xs));
         assert!(out.cycles > 0);
         assert_eq!(dev.regs.read_result(0), out.cycles);
+    }
+
+    #[test]
+    fn threaded_device_matches_serial_device() {
+        let xs = synth_hist_samples(3000, 9);
+        let run = |backend| {
+            let dev =
+                PrinsDevice::with_config(4096, 64, crate::rcam::DeviceModel::default(), backend);
+            dev.load_samples_for_histogram(&xs);
+            assert_eq!(dev.run_kernel(KernelId::Histogram, &[], &[]), Status::Done);
+            dev.take_outputs()
+        };
+        let s = run(ExecBackend::Serial);
+        let t = run(ExecBackend::Threaded(4));
+        assert_eq!(s.u64s, t.u64s);
+        assert_eq!(s.cycles, t.cycles);
+        assert_eq!(s.energy_j, t.energy_j);
     }
 
     #[test]

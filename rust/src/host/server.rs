@@ -15,6 +15,7 @@
 use super::PrinsDevice;
 use crate::controller::kernels::KernelId;
 use crate::controller::registers::Status;
+use crate::rcam::{DeviceModel, ExecBackend};
 use crate::workloads::{synth_hist_samples, synth_samples, synth_uniform};
 use crate::error::{bail, ensure, Result};
 use std::io::{BufRead, BufReader, Write};
@@ -41,9 +42,18 @@ pub struct Server {
 }
 
 impl Server {
-    /// Bind and serve on a background thread. Bind to port 0 for an
-    /// ephemeral port (`self.addr` carries the resolved address).
+    /// Bind and serve on a background thread with the serial simulator
+    /// backend. Bind to port 0 for an ephemeral port (`self.addr`
+    /// carries the resolved address).
     pub fn spawn(bind: &str) -> Result<Server> {
+        Self::spawn_with(bind, ExecBackend::Serial)
+    }
+
+    /// [`Server::spawn`] with an explicit simulator execution backend for
+    /// the per-request PRINS devices. Replies (cycles, energy, results)
+    /// are bit-identical across backends; the knob only sets simulation
+    /// speed per request.
+    pub fn spawn_with(bind: &str, backend: ExecBackend) -> Result<Server> {
         let listener = TcpListener::bind(bind)?;
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
@@ -63,7 +73,7 @@ impl Server {
                         stream.set_write_timeout(Some(WRITE_TIMEOUT)).ok();
                         let st = stop2.clone();
                         let h = std::thread::spawn(move || {
-                            let _ = handle_conn(stream, st);
+                            let _ = handle_conn(stream, st, backend);
                         });
                         let mut guard = conns2.lock().unwrap();
                         // reap finished workers so a long-running server
@@ -118,7 +128,7 @@ impl Drop for Server {
     }
 }
 
-fn handle_conn(stream: TcpStream, stop: Arc<AtomicBool>) -> Result<()> {
+fn handle_conn(stream: TcpStream, stop: Arc<AtomicBool>, backend: ExecBackend) -> Result<()> {
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut out = stream;
     let mut buf: Vec<u8> = Vec::new();
@@ -148,7 +158,7 @@ fn handle_conn(stream: TcpStream, stop: Arc<AtomicBool>) -> Result<()> {
             return Ok(()); // client closed
         }
         let line = String::from_utf8_lossy(&buf);
-        let reply = match dispatch(line.trim()) {
+        let reply = match dispatch(line.trim(), backend) {
             Ok(Some(r)) => r,
             Ok(None) => {
                 writeln!(out, "BYE")?;
@@ -163,7 +173,7 @@ fn handle_conn(stream: TcpStream, stop: Arc<AtomicBool>) -> Result<()> {
     }
 }
 
-fn dispatch(line: &str) -> Result<Option<String>> {
+fn dispatch(line: &str, backend: ExecBackend) -> Result<Option<String>> {
     let parts: Vec<&str> = line.split_whitespace().collect();
     match parts.as_slice() {
         ["PING"] => Ok(Some("PONG".into())),
@@ -172,7 +182,7 @@ fn dispatch(line: &str) -> Result<Option<String>> {
             let (n, seed): (usize, u64) = (n.parse()?, seed.parse()?);
             ensure!(n > 0 && n <= 1 << 20, "n out of range");
             let xs = synth_hist_samples(n, seed);
-            let dev = PrinsDevice::new(n, 64);
+            let dev = PrinsDevice::with_config(n, 64, DeviceModel::default(), backend);
             dev.load_samples_for_histogram(&xs);
             if dev.run_kernel(KernelId::Histogram, &[], &[]) != Status::Done {
                 bail!("kernel error");
@@ -198,7 +208,8 @@ fn dispatch(line: &str) -> Result<Option<String>> {
             let x = synth_samples(n, dims, 4, seed);
             let h = synth_uniform(dims, seed + 1);
             let layout = crate::algorithms::dot::DotLayout::new(dims);
-            let dev = PrinsDevice::new(n, layout.width as usize);
+            let dev =
+                PrinsDevice::with_config(n, layout.width as usize, DeviceModel::default(), backend);
             dev.load_vectors_for_dot(&x, n, dims);
             let hp: Vec<f64> = h.iter().map(|&v| v as f64).collect();
             if dev.run_kernel(KernelId::DotProduct, &[], &hp) != Status::Done {
@@ -223,7 +234,8 @@ fn dispatch(line: &str) -> Result<Option<String>> {
             let x = synth_samples(n, dims, k, seed);
             let centers = synth_uniform(k * dims, seed + 1);
             let layout = crate::algorithms::euclidean::EuclideanLayout::new(dims);
-            let dev = PrinsDevice::new(n, layout.width as usize);
+            let dev =
+                PrinsDevice::with_config(n, layout.width as usize, DeviceModel::default(), backend);
             dev.load_samples_for_euclidean(&x, n, dims);
             let cp: Vec<f64> = centers.iter().map(|&v| v as f64).collect();
             if dev.run_kernel(KernelId::EuclideanDistance, &[k as u64], &cp) != Status::Done {
@@ -274,5 +286,28 @@ mod tests {
         reader.read_line(&mut line).unwrap();
         assert_eq!(line.trim(), "BYE");
         server.shutdown();
+    }
+
+    #[test]
+    fn threaded_server_replies_match_serial() {
+        let ask = |server: &Server, req: &str| -> String {
+            let mut conn = TcpStream::connect(server.addr).unwrap();
+            let mut reader = BufReader::new(conn.try_clone().unwrap());
+            let mut line = String::new();
+            writeln!(conn, "{req}").unwrap();
+            reader.read_line(&mut line).unwrap();
+            line
+        };
+        let serial = Server::spawn("127.0.0.1:0").unwrap();
+        let threaded =
+            Server::spawn_with("127.0.0.1:0", ExecBackend::Threaded(3)).unwrap();
+        for req in ["HIST 700 11", "DP 64 4 2"] {
+            let a = ask(&serial, req);
+            let b = ask(&threaded, req);
+            assert!(a.starts_with("OK"), "{req}: {a}");
+            assert_eq!(a, b, "{req}: cycles/energy/results must be backend-invariant");
+        }
+        serial.shutdown();
+        threaded.shutdown();
     }
 }

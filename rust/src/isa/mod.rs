@@ -7,4 +7,4 @@ pub mod fields;
 pub mod program;
 
 pub use fields::{Field, RowLayout};
-pub use program::{Instr, Pat, Program};
+pub use program::{Instr, Pat, Program, Span, Spans};

@@ -59,6 +59,58 @@ impl Instr {
             Instr::ClearColumns { .. } => CYCLES_WRITE,
         }
     }
+
+    /// Data-parallel instructions execute independently on every row
+    /// stripe — no global result, no cross-row communication — so the
+    /// threaded backend runs them striped without a barrier. Everything
+    /// else (reads, match queries, reductions, tag-chain shifts)
+    /// serializes the array (DESIGN.md §5, barrier rules).
+    pub fn is_data_parallel(&self) -> bool {
+        matches!(
+            self,
+            Instr::Compare(_)
+                | Instr::Write(_)
+                | Instr::SetTagsAll
+                | Instr::ClearColumns { .. }
+        )
+    }
+}
+
+/// A maximal run of instructions with uniform parallelism class
+/// (see [`Program::spans`]).
+#[derive(Clone, Copy, Debug)]
+pub struct Span<'a> {
+    pub instrs: &'a [Instr],
+    pub data_parallel: bool,
+}
+
+/// Iterator over a program's execution spans: alternating maximal
+/// data-parallel and serializing runs, in program order. The threaded
+/// controller dispatches each data-parallel span to the worker pool as
+/// one unit — each worker runs the whole span over its stripe before the
+/// next barrier (DESIGN.md §5).
+pub struct Spans<'a> {
+    rest: &'a [Instr],
+}
+
+impl<'a> Iterator for Spans<'a> {
+    type Item = Span<'a>;
+
+    fn next(&mut self) -> Option<Span<'a>> {
+        let first = self.rest.first()?;
+        let dp = first.is_data_parallel();
+        let n = self
+            .rest
+            .iter()
+            .take_while(|i| i.is_data_parallel() == dp)
+            .count();
+        let (instrs, rest) = self.rest.split_at(n);
+        self.rest = rest;
+        Some(Span {
+            instrs,
+            data_parallel: dp,
+        })
+    }
 }
 
 /// A straight-line associative program (the paper's "associative
@@ -126,6 +178,14 @@ impl Program {
         self.instrs.extend(other.instrs);
     }
 
+    /// Split the program into maximal data-parallel / serializing spans
+    /// (program-span batching; DESIGN.md §5).
+    pub fn spans(&self) -> Spans<'_> {
+        Spans {
+            rest: &self.instrs,
+        }
+    }
+
     /// Highest bit-column referenced (for width validation).
     pub fn max_column(&self) -> Option<u16> {
         self.instrs
@@ -174,5 +234,44 @@ mod tests {
         p.pass(vec![(0, true)], vec![(1, false)]);
         assert!(matches!(p.instrs[0], Instr::Compare(_)));
         assert!(matches!(p.instrs[1], Instr::Write(_)));
+    }
+
+    #[test]
+    fn parallelism_classification() {
+        assert!(Instr::Compare(vec![]).is_data_parallel());
+        assert!(Instr::Write(vec![]).is_data_parallel());
+        assert!(Instr::SetTagsAll.is_data_parallel());
+        assert!(Instr::ClearColumns { base: 0, width: 4 }.is_data_parallel());
+        assert!(!Instr::Read { base: 0, width: 4 }.is_data_parallel());
+        assert!(!Instr::IfMatch.is_data_parallel());
+        assert!(!Instr::FirstMatch.is_data_parallel());
+        assert!(!Instr::ReduceCount.is_data_parallel());
+        assert!(!Instr::ReduceField { col: 0 }.is_data_parallel());
+        assert!(!Instr::ShiftTagsUp(1).is_data_parallel());
+        assert!(!Instr::ShiftTagsDown(1).is_data_parallel());
+    }
+
+    #[test]
+    fn spans_split_on_serializing_instrs() {
+        let mut p = Program::new();
+        p.push(Instr::Compare(vec![(0, true)]));
+        p.push(Instr::Write(vec![(1, true)]));
+        p.push(Instr::ReduceCount);
+        p.push(Instr::ShiftTagsUp(2));
+        p.push(Instr::SetTagsAll);
+        p.push(Instr::ClearColumns { base: 0, width: 2 });
+        p.push(Instr::Compare(vec![(2, false)]));
+        let spans: Vec<_> = p.spans().collect();
+        assert_eq!(spans.len(), 3);
+        assert!(spans[0].data_parallel);
+        assert_eq!(spans[0].instrs.len(), 2);
+        assert!(!spans[1].data_parallel);
+        assert_eq!(spans[1].instrs.len(), 2);
+        assert!(spans[2].data_parallel);
+        assert_eq!(spans[2].instrs.len(), 3);
+        // spans cover the whole program in order
+        let total: usize = spans.iter().map(|s| s.instrs.len()).sum();
+        assert_eq!(total, p.len());
+        assert!(Program::new().spans().next().is_none());
     }
 }

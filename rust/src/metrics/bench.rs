@@ -1,7 +1,11 @@
 //! Minimal self-timing harness for the `harness = false` benches
 //! (criterion is not in the vendored crate set): warmup + N timed
-//! iterations, reporting min/mean.
+//! iterations, reporting min/mean — plus the shared bench surface:
+//! `--workers`/`--rows` argument parsing and the machine-readable
+//! `BENCH_*.json` result files that seed the perf trajectory
+//! (DESIGN.md §6).
 
+use crate::rcam::ExecBackend;
 use std::time::{Duration, Instant};
 
 pub struct BenchTimer {
@@ -49,6 +53,101 @@ pub fn time_it<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -
     }
 }
 
+// ---------------------------------------------------------------------------
+// Shared bench CLI surface
+// ---------------------------------------------------------------------------
+
+/// Value of `--name <v>` among the given args (benches receive argv after
+/// `cargo bench --bench x -- ...`).
+pub fn arg_value(args: &[String], name: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1).cloned())
+}
+
+pub fn arg_u64(args: &[String], name: &str, default: u64) -> u64 {
+    arg_value(args, name)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Execution backend from `--workers N` (default: all cores; `1` selects
+/// the serial reference path). Every bench exposes this knob.
+pub fn backend_from_args(args: &[String]) -> ExecBackend {
+    match arg_value(args, "--workers").and_then(|v| v.parse::<usize>().ok()) {
+        Some(n) => ExecBackend::from_workers(n),
+        None => ExecBackend::threaded_default(),
+    }
+}
+
+/// Worker-count sweep from `--workers a,b,c` (for thread-scaling benches;
+/// a single value is a one-element sweep).
+pub fn workers_sweep_from_args(args: &[String], default: &[usize]) -> Vec<usize> {
+    match arg_value(args, "--workers") {
+        Some(list) => {
+            let v: Vec<usize> = list
+                .split(',')
+                .filter_map(|s| s.trim().parse().ok())
+                .collect();
+            if v.is_empty() {
+                default.to_vec()
+            } else {
+                v
+            }
+        }
+        None => default.to_vec(),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Machine-readable results (BENCH_*.json at the repository root)
+// ---------------------------------------------------------------------------
+
+/// One measured point of the perf trajectory.
+pub struct BenchRecord {
+    pub bench: String,
+    pub rows: u64,
+    pub workers: u64,
+    pub ops_per_s: f64,
+    pub wall_s: f64,
+}
+
+/// Hand-rolled JSON (the crate set has no serde): a flat array of
+/// `{bench, rows, workers, ops_per_s, wall_s}` objects.
+pub fn bench_records_json(records: &[BenchRecord]) -> String {
+    let mut s = String::from("[\n");
+    for (i, r) in records.iter().enumerate() {
+        s.push_str(&format!(
+            "  {{\"bench\": \"{}\", \"rows\": {}, \"workers\": {}, \
+             \"ops_per_s\": {:e}, \"wall_s\": {:e}}}{}\n",
+            r.bench,
+            r.rows,
+            r.workers,
+            r.ops_per_s,
+            r.wall_s,
+            if i + 1 < records.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("]\n");
+    s
+}
+
+/// Repository-root path for a bench artifact, independent of the cwd the
+/// bench binary was launched from (the crate lives in `rust/`, one level
+/// below the repo root).
+pub fn repo_root_path(file: &str) -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join(file)
+}
+
+/// Write `BENCH_<name>.json` at the repository root.
+pub fn write_bench_json(name: &str, records: &[BenchRecord]) -> std::io::Result<std::path::PathBuf> {
+    let path = repo_root_path(&format!("BENCH_{name}.json"));
+    std::fs::write(&path, bench_records_json(records))?;
+    Ok(path)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -59,5 +158,49 @@ mod tests {
         assert_eq!(t.samples.len(), 5);
         assert!(t.min() <= t.mean());
         assert!(t.report().contains("noop"));
+    }
+
+    #[test]
+    fn arg_parsing() {
+        let args: Vec<String> = ["--rows", "4096", "--workers", "4"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        assert_eq!(arg_u64(&args, "--rows", 1), 4096);
+        assert_eq!(arg_u64(&args, "--missing", 7), 7);
+        assert_eq!(backend_from_args(&args), ExecBackend::Threaded(4));
+        let one: Vec<String> = ["--workers", "1"].iter().map(|s| s.to_string()).collect();
+        assert_eq!(backend_from_args(&one), ExecBackend::Serial);
+        let sweep: Vec<String> = ["--workers", "1,2,8"].iter().map(|s| s.to_string()).collect();
+        assert_eq!(workers_sweep_from_args(&sweep, &[4]), vec![1, 2, 8]);
+        assert_eq!(workers_sweep_from_args(&[], &[1, 4]), vec![1, 4]);
+    }
+
+    #[test]
+    fn bench_json_shape() {
+        let recs = vec![
+            BenchRecord {
+                bench: "compare".into(),
+                rows: 1 << 20,
+                workers: 4,
+                ops_per_s: 3.2e9,
+                wall_s: 0.001,
+            },
+            BenchRecord {
+                bench: "pass".into(),
+                rows: 1 << 20,
+                workers: 1,
+                ops_per_s: 1.0e9,
+                wall_s: 0.004,
+            },
+        ];
+        let s = bench_records_json(&recs);
+        assert!(s.starts_with("[\n"));
+        assert!(s.trim_end().ends_with(']'));
+        assert_eq!(s.matches("\"bench\"").count(), 2);
+        // one separator between the two objects, none after the last
+        assert_eq!(s.matches("},\n").count(), 1);
+        assert!(s.contains("\"rows\": 1048576"));
+        assert!(s.contains("\"workers\": 4"));
     }
 }

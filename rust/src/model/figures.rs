@@ -19,7 +19,7 @@ use crate::model::power::{efficiency, extrapolate_rows, flops};
 use crate::model::roofline::{
     self, attainable_gflops, attainable_gteps, KNL_ROOF, NVDIMM, STORAGE_APPLIANCE,
 };
-use crate::rcam::PrinsArray;
+use crate::rcam::{ExecBackend, PrinsArray};
 use crate::storage::StorageManager;
 use crate::workloads::{
     synth_hist_samples, synth_samples, synth_uniform, Rng, PAPER_GRAPHS, PAPER_MATRICES,
@@ -46,6 +46,17 @@ pub struct DenseKernelRun {
 
 /// Run the three dense kernels (ED / DP / Hist) at simulation scale.
 pub fn run_dense_kernels(dims: usize, sim_rows: usize) -> Vec<DenseKernelRun> {
+    run_dense_kernels_on(dims, sim_rows, ExecBackend::Serial)
+}
+
+/// [`run_dense_kernels`] with an explicit simulator execution backend
+/// (device cycles/energy are backend-independent; the backend only sets
+/// how fast the simulation itself runs).
+pub fn run_dense_kernels_on(
+    dims: usize,
+    sim_rows: usize,
+    backend: ExecBackend,
+) -> Vec<DenseKernelRun> {
     let mut out = Vec::new();
     let freq = crate::rcam::DeviceModel::default().freq_hz;
     // --- Euclidean distance (1 center per paper AI accounting) ---
@@ -53,7 +64,8 @@ pub fn run_dense_kernels(dims: usize, sim_rows: usize) -> Vec<DenseKernelRun> {
         let x = synth_samples(sim_rows, dims, 4, 1);
         let centers = synth_uniform(dims, 2);
         let layout = crate::algorithms::euclidean::EuclideanLayout::new(dims);
-        let mut array = PrinsArray::single(sim_rows, layout.width as usize);
+        let mut array =
+            PrinsArray::single(sim_rows, layout.width as usize).with_backend(backend);
         let mut sm = StorageManager::new(sim_rows);
         let kern = EuclideanKernel::load(&mut sm, &mut array, &x, sim_rows, dims);
         let mut ctl = Controller::new(array);
@@ -72,7 +84,8 @@ pub fn run_dense_kernels(dims: usize, sim_rows: usize) -> Vec<DenseKernelRun> {
         let x = synth_samples(sim_rows, dims, 4, 3);
         let h = synth_uniform(dims, 4);
         let layout = crate::algorithms::dot::DotLayout::new(dims);
-        let mut array = PrinsArray::single(sim_rows, layout.width as usize);
+        let mut array =
+            PrinsArray::single(sim_rows, layout.width as usize).with_backend(backend);
         let mut sm = StorageManager::new(sim_rows);
         let kern = DotKernel::load(&mut sm, &mut array, &x, sim_rows, dims);
         let mut ctl = Controller::new(array);
@@ -90,7 +103,7 @@ pub fn run_dense_kernels(dims: usize, sim_rows: usize) -> Vec<DenseKernelRun> {
     {
         let xs = synth_hist_samples(sim_rows, 5);
         // deployment row width (paper §5.1): 256-bit rows — affects match-line energy
-        let mut array = PrinsArray::single(sim_rows, 256);
+        let mut array = PrinsArray::single(sim_rows, 256).with_backend(backend);
         let mut sm = StorageManager::new(sim_rows);
         let kern = HistogramKernel::load(&mut sm, &mut array, &xs);
         let mut ctl = Controller::new(array);
@@ -111,8 +124,13 @@ pub fn run_dense_kernels(dims: usize, sim_rows: usize) -> Vec<DenseKernelRun> {
 /// reference (10 GB/s appliance, 24 GB/s NVDIMM), for 1M/10M/100M
 /// elements, plus the §6 power-efficiency numbers.
 pub fn fig12(dims: usize, sim_rows: usize) -> Table {
+    fig12_on(dims, sim_rows, ExecBackend::Serial)
+}
+
+/// [`fig12`] with an explicit simulator execution backend.
+pub fn fig12_on(dims: usize, sim_rows: usize, backend: ExecBackend) -> Table {
     let dev = crate::rcam::DeviceModel::default();
-    let runs = run_dense_kernels(dims, sim_rows);
+    let runs = run_dense_kernels_on(dims, sim_rows, backend);
     let mut t = Table::new(
         "Fig. 12 — dense kernels, normalized to bandwidth-limited reference",
         &[
@@ -160,6 +178,11 @@ pub fn fig12(dims: usize, sim_rows: usize) -> Table {
 /// paper matrices (density-matched synthetics, simulated scaled-down and
 /// extrapolated; see module docs).
 pub fn fig13(sim_n_target: usize) -> Table {
+    fig13_on(sim_n_target, ExecBackend::Serial)
+}
+
+/// [`fig13`] with an explicit simulator execution backend.
+pub fn fig13_on(sim_n_target: usize, backend: ExecBackend) -> Table {
     let dev = crate::rcam::DeviceModel::default();
     let freq = dev.freq_hz;
     let mut t = Table::new(
@@ -176,7 +199,7 @@ pub fn fig13(sim_n_target: usize) -> Table {
         let a = m.synthesize(scale, 100 + mi as u64);
         let mut rng = Rng::seed_from(200 + mi as u64);
         let x: Vec<f32> = (0..a.n).map(|_| rng.f32_range(-1.0, 1.0)).collect();
-        let mut array = PrinsArray::single(a.nnz(), 256);
+        let mut array = PrinsArray::single(a.nnz(), 256).with_backend(backend);
         let mut sm = StorageManager::new(a.nnz());
         let kern = SpmvKernel::load(&mut sm, &mut array, &a);
         let mut ctl = Controller::new(array);
@@ -212,6 +235,11 @@ pub fn fig13(sim_n_target: usize) -> Table {
 /// vertex-serial analytical model (see EXPERIMENTS.md for the gap
 /// discussion).
 pub fn fig14(sim_vertices: usize) -> Table {
+    fig14_on(sim_vertices, ExecBackend::Serial)
+}
+
+/// [`fig14`] with an explicit simulator execution backend.
+pub fn fig14_on(sim_vertices: usize, backend: ExecBackend) -> Table {
     let dev = crate::rcam::DeviceModel::default();
     let freq = dev.freq_hz;
     let mut t = Table::new(
@@ -225,7 +253,7 @@ pub fn fig14(sim_vertices: usize) -> Table {
     const MODEL_CPV: f64 = 3.0;
     for (gi, pg) in PAPER_GRAPHS.iter().enumerate() {
         let g = pg.synthesize(sim_vertices, 300 + gi as u64);
-        let mut array = PrinsArray::single(g.edges(), 128);
+        let mut array = PrinsArray::single(g.edges(), 128).with_backend(backend);
         let mut sm = StorageManager::new(g.edges());
         let kern = BfsKernel::load(&mut sm, &mut array, &g);
         let mut ctl = Controller::new(array);
@@ -307,6 +335,15 @@ mod tests {
             assert!(v[1] / v[0] > 9.0 && v[1] / v[0] < 11.0, "linear in N: {v:?}");
             assert!(v[2] > 100.0, "orders of magnitude at 100M: {v:?}");
         }
+    }
+
+    #[test]
+    fn fig12_backend_invariant() {
+        // device cycles/energy are simulator-backend-independent, so the
+        // reported tables must match cell for cell
+        let s = fig12_on(4, 128, ExecBackend::Serial);
+        let t = fig12_on(4, 128, ExecBackend::Threaded(3));
+        assert_eq!(s.rows, t.rows);
     }
 
     #[test]

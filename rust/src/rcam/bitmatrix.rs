@@ -80,6 +80,17 @@ impl BitMatrix {
             self.planes[c].fill(false);
         }
     }
+
+    /// Base word pointer of every plane, harvested through disjoint
+    /// `iter_mut` borrows (one per plane, alive together) so the pointers
+    /// are valid simultaneously. Used by the striped execution engine
+    /// (`rcam::exec`) to build per-worker segment views.
+    pub(crate) fn plane_word_ptrs(&mut self) -> Vec<*mut u64> {
+        self.planes
+            .iter_mut()
+            .map(|p| p.words_mut().as_mut_ptr())
+            .collect()
+    }
 }
 
 #[cfg(test)]

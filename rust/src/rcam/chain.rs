@@ -8,12 +8,15 @@
 //! tag shifts ripple across module boundaries; per-module reduction-tree
 //! outputs are cascaded/accumulated in the controller's data buffer.
 
-use super::bitvec::BitVec;
+use super::bitvec::{BitVec, WORD_BITS};
 use super::device::{
     DeviceModel, EnergyLedger, CYCLES_COMPARE, CYCLES_READ, CYCLES_REDUCE_ISSUE,
     CYCLES_TAG_OP, CYCLES_WRITE,
 };
+use super::exec::{self, ExecBackend, StripeOp, WorkerPool};
 use super::module::{Pattern, RcamModule};
+use crate::isa::Instr;
+use std::sync::{Arc, Mutex};
 
 #[derive(Clone, Debug)]
 pub struct PrinsArray {
@@ -23,6 +26,11 @@ pub struct PrinsArray {
     pub device: DeviceModel,
     /// Total elapsed cycles across all executed instructions.
     pub cycles: u64,
+    /// How data-parallel instruction spans execute (DESIGN.md §5).
+    backend: ExecBackend,
+    /// Handle to the process-shared persistent worker pool for this
+    /// backend's worker count (None for serial).
+    pool: Option<Arc<WorkerPool>>,
 }
 
 impl PrinsArray {
@@ -45,11 +53,63 @@ impl PrinsArray {
             width,
             device,
             cycles: 0,
+            backend: ExecBackend::Serial,
+            pool: None,
         }
     }
 
     pub fn single(rows: usize, width: usize) -> Self {
         Self::new(1, rows, width)
+    }
+
+    // ----- execution backend ---------------------------------------------
+
+    /// Builder: select the execution backend (`Serial` keeps the exact
+    /// pre-refactor single-threaded path; `Threaded(n)` stripes the array
+    /// over `n` workers with bit-identical results and stats).
+    pub fn with_backend(mut self, backend: ExecBackend) -> Self {
+        self.set_backend(backend);
+        self
+    }
+
+    /// Builder: shorthand for `with_backend(ExecBackend::from_workers(n))`
+    /// — `n <= 1` is the serial path.
+    pub fn with_workers(self, n: usize) -> Self {
+        self.with_backend(ExecBackend::from_workers(n))
+    }
+
+    pub fn set_backend(&mut self, backend: ExecBackend) {
+        self.backend = backend;
+        // attach the process-shared pool for this worker count so arrays
+        // (and clones) never spawn threads per array or per dispatch
+        let want = backend.workers().saturating_sub(1);
+        match &self.pool {
+            Some(p) if p.threads() == want => {}
+            _ if want == 0 => self.pool = None,
+            _ => self.pool = Some(WorkerPool::shared(want)),
+        }
+    }
+
+    #[inline]
+    pub fn backend(&self) -> ExecBackend {
+        self.backend
+    }
+
+    #[inline]
+    pub fn is_threaded(&self) -> bool {
+        self.backend.is_threaded()
+    }
+
+    fn ensure_pool(&mut self) -> Arc<WorkerPool> {
+        let want = self.backend.workers().saturating_sub(1);
+        match &self.pool {
+            Some(p) if p.threads() == want => p.clone(),
+            _ => {
+                let p = WorkerPool::shared(want);
+                self.pool = Some(p.clone());
+                p
+            }
+        }
     }
 
     /// Enable per-row wear counters on every module (costs O(tagged rows)
@@ -98,23 +158,161 @@ impl PrinsArray {
     // ----- broadcast associative instructions ---------------------------
 
     pub fn compare(&mut self, pattern: &Pattern) {
-        for m in &mut self.modules {
-            m.compare(pattern);
+        if self.is_threaded() {
+            self.execute_ops(&[StripeOp::Compare(pattern)]);
+        } else {
+            for m in &mut self.modules {
+                m.compare(pattern);
+            }
+            self.cycles += CYCLES_COMPARE;
         }
-        self.cycles += CYCLES_COMPARE;
     }
 
     pub fn write(&mut self, pattern: &Pattern) {
-        for m in &mut self.modules {
-            m.write(pattern);
+        if self.is_threaded() {
+            self.execute_ops(&[StripeOp::Write(pattern)]);
+        } else {
+            for m in &mut self.modules {
+                m.write(pattern);
+            }
+            self.cycles += CYCLES_WRITE;
         }
-        self.cycles += CYCLES_WRITE;
     }
 
-    /// compare immediately followed by tagged write — the microcode pass.
+    /// compare immediately followed by tagged write — the microcode pass,
+    /// executed by the fused one-traversal kernel. Results and stats are
+    /// exactly `compare(cpat); write(wpat)`.
     pub fn pass(&mut self, cpat: &Pattern, wpat: &Pattern) {
-        self.compare(cpat);
-        self.write(wpat);
+        if self.is_threaded() {
+            self.execute_ops(&[StripeOp::Pass(cpat, wpat)]);
+        } else {
+            for m in &mut self.modules {
+                m.pass(cpat, wpat);
+            }
+            self.cycles += CYCLES_COMPARE + CYCLES_WRITE;
+        }
+    }
+
+    /// Execute one data-parallel span (consecutive Compare / Write /
+    /// SetTagsAll / ClearColumns instructions, DESIGN.md §5): each worker
+    /// runs the WHOLE span over its row stripe before the next barrier,
+    /// so a span costs one pool dispatch regardless of its length.
+    /// Adjacent Compare+Write pairs are fused into the one-traversal pass
+    /// kernel. Callers (the controller) must not put serializing
+    /// instructions in a span.
+    pub fn execute_span(&mut self, instrs: &[Instr]) {
+        let mut ops: Vec<StripeOp> = Vec::with_capacity(instrs.len());
+        let mut i = 0;
+        while i < instrs.len() {
+            match (&instrs[i], instrs.get(i + 1)) {
+                (Instr::Compare(c), Some(Instr::Write(w))) => {
+                    ops.push(StripeOp::Pass(c, w));
+                    i += 2;
+                }
+                (Instr::Compare(c), _) => {
+                    ops.push(StripeOp::Compare(c));
+                    i += 1;
+                }
+                (Instr::Write(p), _) => {
+                    ops.push(StripeOp::Write(p));
+                    i += 1;
+                }
+                (Instr::SetTagsAll, _) => {
+                    ops.push(StripeOp::SetTagsAll);
+                    i += 1;
+                }
+                (Instr::ClearColumns { base, width }, _) => {
+                    ops.push(StripeOp::ClearColumns {
+                        base: *base,
+                        width: *width,
+                    });
+                    i += 1;
+                }
+                (other, _) => panic!("execute_span: serializing instruction {other:?}"),
+            }
+        }
+        self.execute_ops(&ops);
+    }
+
+    /// Run a span of data-parallel ops on the configured backend; the
+    /// single entry point that charges cycles and merges ledgers for the
+    /// striped path.
+    fn execute_ops(&mut self, ops: &[StripeOp]) {
+        if ops.is_empty() {
+            return;
+        }
+        if !self.is_threaded() {
+            for op in ops {
+                match *op {
+                    StripeOp::Compare(p) => self.compare(p),
+                    StripeOp::Write(p) => self.write(p),
+                    StripeOp::Pass(c, w) => self.pass(c, w),
+                    StripeOp::SetTagsAll => self.set_tags_all(),
+                    StripeOp::ClearColumns { base, width } => self.clear_columns(base, width),
+                }
+            }
+            return;
+        }
+        let pool = self.ensure_pool();
+        // Harvest disjoint raw views (one `iter_mut` pass — see
+        // `RcamModule::raw_parts`), stripe them, and dispatch. The pool
+        // blocks until every worker finishes, so no safe reference to
+        // module state exists while the stripes run.
+        let parts: Vec<exec::ModuleParts> =
+            self.modules.iter_mut().map(|m| m.raw_parts()).collect();
+        let stripes = exec::plan_stripes(&parts, self.backend.workers());
+        // data-dependent (module, write_bit_events) pairs, merged below —
+        // u128 sums, so merge order cannot change the total
+        let collected: Mutex<Vec<(usize, u128)>> = Mutex::new(Vec::new());
+        {
+            let task = |sid: usize| {
+                let mut local: Vec<(usize, u128)> = Vec::new();
+                for seg in &stripes[sid] {
+                    let ev = exec::run_ops_on_segment(seg, ops);
+                    if ev != 0 {
+                        local.push((seg.module, ev));
+                    }
+                }
+                if !local.is_empty() {
+                    collected.lock().unwrap().extend(local);
+                }
+            };
+            pool.run(stripes.len(), &task);
+        }
+        drop(stripes);
+        drop(parts);
+        let mut write_events = vec![0u128; self.modules.len()];
+        for (m, ev) in collected.into_inner().unwrap() {
+            write_events[m] += ev;
+        }
+        // data-independent charges, per module, exactly as the serial
+        // per-module sweep would have accrued them
+        let width = self.width as u128;
+        for (mi, m) in self.modules.iter_mut().enumerate() {
+            let rows = m.rows() as u128;
+            let l = &mut m.ledger;
+            l.write_bit_events += write_events[mi];
+            for op in ops {
+                match op {
+                    StripeOp::Compare(_) => {
+                        l.n_compare += 1;
+                        l.compare_bit_events += width * rows;
+                    }
+                    StripeOp::Write(_) => l.n_write += 1,
+                    StripeOp::Pass(_, _) => {
+                        l.n_compare += 1;
+                        l.compare_bit_events += width * rows;
+                        l.n_write += 1;
+                    }
+                    StripeOp::SetTagsAll => l.n_tag_op += 1,
+                    StripeOp::ClearColumns { width: cw, .. } => {
+                        l.n_write += 1;
+                        l.write_bit_events += (*cw as u128) * rows;
+                    }
+                }
+            }
+        }
+        self.cycles += ops.iter().map(exec::op_cycles).sum::<u64>();
     }
 
     pub fn if_match(&mut self) -> bool {
@@ -187,23 +385,54 @@ impl PrinsArray {
     }
 
     pub fn set_tags_all(&mut self) {
-        for m in &mut self.modules {
-            m.set_tags_all();
+        if self.is_threaded() {
+            self.execute_ops(&[StripeOp::SetTagsAll]);
+        } else {
+            for m in &mut self.modules {
+                m.set_tags_all();
+            }
+            self.cycles += CYCLES_TAG_OP;
         }
-        self.cycles += CYCLES_TAG_OP;
     }
 
     /// Shift the global tag vector towards higher rows by `hops` (daisy
     /// chain, 1 hop per cycle, carries ripple across module boundaries).
+    ///
+    /// Simulated as ONE word-level shift per module with a `hops`-bit
+    /// carry window from its predecessor (not `hops` 1-bit sweeps): the
+    /// simulation cost is O(rows/64) words independent of `hops`, while
+    /// the modeled cost stays `hops` cycles and `rows × hops` chain-bit
+    /// events.
     pub fn shift_tags_up(&mut self, hops: usize) {
-        for _ in 0..hops {
-            let mut carry = false;
-            for m in &mut self.modules {
-                let last = m.tags().get(m.rows() - 1);
-                let t = m.tags_mut();
-                t.shift_up(1);
-                t.set(0, carry);
-                carry = last;
+        let rpm = self.rows_per_module;
+        if hops > 0 {
+            if self.modules.len() == 1 {
+                self.modules[0].tags_mut().shift_up(hops);
+            } else if hops <= rpm {
+                // carry window: the top `hops` rows of module k-1
+                // (pre-shift) land in rows [0, hops) of module k
+                let carries: Vec<BitVec> = self
+                    .modules
+                    .iter()
+                    .map(|m| {
+                        let mut c = m.tags().clone();
+                        c.shift_down(rpm - hops);
+                        c
+                    })
+                    .collect();
+                for (k, m) in self.modules.iter_mut().enumerate() {
+                    let t = m.tags_mut();
+                    t.shift_up(hops);
+                    if k > 0 {
+                        t.or_assign(&carries[k - 1]);
+                    }
+                }
+            } else {
+                // hops spans multiple modules: shift the gathered global
+                // vector once and scatter it back
+                let mut g = self.tags_snapshot();
+                g.shift_up(hops);
+                self.scatter_tags(&g);
             }
         }
         self.cycles += (hops as u64) * CYCLES_TAG_OP;
@@ -213,23 +442,66 @@ impl PrinsArray {
         }
     }
 
-    /// Shift the global tag vector towards lower rows by `hops`.
+    /// Shift the global tag vector towards lower rows by `hops` (same
+    /// word-level carry-window scheme as [`Self::shift_tags_up`]).
     pub fn shift_tags_down(&mut self, hops: usize) {
-        for _ in 0..hops {
-            let mut carry = false;
-            for m in self.modules.iter_mut().rev() {
-                let first = m.tags().get(0);
-                let t = m.tags_mut();
-                t.shift_down(1);
-                let top = t.len() - 1;
-                t.set(top, carry);
-                carry = first;
+        let rpm = self.rows_per_module;
+        if hops > 0 {
+            if self.modules.len() == 1 {
+                self.modules[0].tags_mut().shift_down(hops);
+            } else if hops <= rpm {
+                // carry window: rows [0, hops) of module k+1 (pre-shift)
+                // land in the top `hops` rows of module k
+                let carries: Vec<BitVec> = self
+                    .modules
+                    .iter()
+                    .map(|m| {
+                        let mut c = m.tags().clone();
+                        c.shift_up(rpm - hops);
+                        c
+                    })
+                    .collect();
+                let last = self.modules.len() - 1;
+                for (k, m) in self.modules.iter_mut().enumerate() {
+                    let t = m.tags_mut();
+                    t.shift_down(hops);
+                    if k < last {
+                        t.or_assign(&carries[k + 1]);
+                    }
+                }
+            } else {
+                let mut g = self.tags_snapshot();
+                g.shift_down(hops);
+                self.scatter_tags(&g);
             }
         }
         self.cycles += (hops as u64) * CYCLES_TAG_OP;
         let bits = (self.total_rows() as u128) * (hops as u128);
         if let Some(m0) = self.modules.first_mut() {
             m0.ledger.chain_bit_events += bits;
+        }
+    }
+
+    /// Overwrite every module's tag vector from a global snapshot
+    /// (word-sliced fast path when module rows are 64-aligned).
+    fn scatter_tags(&mut self, g: &BitVec) {
+        let rpm = self.rows_per_module;
+        if rpm % WORD_BITS == 0 {
+            let wpm = rpm / WORD_BITS;
+            for (mi, m) in self.modules.iter_mut().enumerate() {
+                let words = g.words()[mi * wpm..(mi + 1) * wpm].to_vec();
+                *m.tags_mut() = BitVec::from_words(words, rpm);
+            }
+        } else {
+            for (mi, m) in self.modules.iter_mut().enumerate() {
+                let t = m.tags_mut();
+                t.fill(false);
+                for r in 0..rpm {
+                    if g.get(mi * rpm + r) {
+                        t.set(r, true);
+                    }
+                }
+            }
         }
     }
 
@@ -307,10 +579,14 @@ impl PrinsArray {
 
     /// Clear a column range across the whole array.
     pub fn clear_columns(&mut self, base: u16, width: u16) {
-        for m in &mut self.modules {
-            m.clear_columns(base, width);
+        if self.is_threaded() {
+            self.execute_ops(&[StripeOp::ClearColumns { base, width }]);
+        } else {
+            for m in &mut self.modules {
+                m.clear_columns(base, width);
+            }
+            self.cycles += CYCLES_WRITE;
         }
-        self.cycles += CYCLES_WRITE;
     }
 
     // ----- storage-management access path --------------------------------
@@ -443,5 +719,128 @@ mod shift_tests {
     fn shift_columns_overlap_rejected() {
         let mut a = PrinsArray::single(8, 8);
         a.shift_columns_to(0, 2, 4, 1);
+    }
+
+    #[test]
+    fn multi_hop_shift_crosses_multiple_modules() {
+        // hops > rows_per_module exercises the gathered-global fallback
+        let mut a = PrinsArray::new(3, 4, 4);
+        a.load_row_bits(1, 0, 1, 1);
+        a.compare(&[(0, true)]);
+        let c0 = a.cycles;
+        a.shift_tags_up(9);
+        assert_eq!(a.tags_snapshot().iter_ones().collect::<Vec<_>>(), vec![10]);
+        a.shift_tags_down(7);
+        assert_eq!(a.tags_snapshot().iter_ones().collect::<Vec<_>>(), vec![3]);
+        assert_eq!(a.cycles - c0, 16, "hops keep their per-hop cycle charge");
+    }
+}
+
+#[cfg(test)]
+mod exec_tests {
+    use super::*;
+    use crate::rcam::ExecBackend;
+
+    fn filled(backend: ExecBackend, modules: usize, rpm: usize) -> PrinsArray {
+        let mut a = PrinsArray::new(modules, rpm, 16).with_backend(backend);
+        a.enable_wear_tracking();
+        for r in 0..a.total_rows() {
+            a.load_row_bits(r, 0, 16, (r as u64).wrapping_mul(0x9E37_79B9) & 0xFFFF);
+        }
+        a
+    }
+
+    fn drive(a: &mut PrinsArray) {
+        a.compare(&[(1, true), (4, false)]);
+        a.write(&[(9, true), (10, false)]);
+        a.pass(&[(2, false)], &[(11, true)]);
+        a.set_tags_all();
+        a.clear_columns(12, 2);
+        a.compare(&[(0, true)]);
+        a.shift_tags_up(3);
+        a.shift_tags_down(5);
+        a.write(&[(13, true)]);
+    }
+
+    /// The threaded backend must be bit-identical to the serial path:
+    /// storage, tags, wear, cycle counts, and the full energy ledger —
+    /// including stripe splits that do not divide module words evenly.
+    #[test]
+    fn threaded_matches_serial_bit_identical() {
+        for (modules, rpm) in [(1usize, 130usize), (3, 33), (2, 64), (4, 100)] {
+            let mut s = filled(ExecBackend::Serial, modules, rpm);
+            drive(&mut s);
+            for n in [2usize, 3, 8] {
+                let mut t = filled(ExecBackend::Threaded(n), modules, rpm);
+                drive(&mut t);
+                let label = format!("{modules}x{rpm} workers={n}");
+                assert_eq!(t.cycles, s.cycles, "{label}: cycles");
+                assert_eq!(t.ledger(), s.ledger(), "{label}: ledger");
+                assert_eq!(t.tags_snapshot(), s.tags_snapshot(), "{label}: tags");
+                for r in 0..s.total_rows() {
+                    assert_eq!(
+                        t.fetch_row_bits(r, 0, 16),
+                        s.fetch_row_bits(r, 0, 16),
+                        "{label}: row {r}"
+                    );
+                }
+                for (ms, mt) in s.modules().iter().zip(t.modules()) {
+                    assert_eq!(ms.wear_counters(), mt.wear_counters(), "{label}: wear");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_pass_equals_compare_then_write() {
+        let mut a = PrinsArray::single(100, 16);
+        let mut b = PrinsArray::single(100, 16);
+        for r in 0..100 {
+            let v = (r as u64 * 37) & 0xFFFF;
+            a.load_row_bits(r, 0, 16, v);
+            b.load_row_bits(r, 0, 16, v);
+        }
+        a.pass(&[(0, true), (3, false)], &[(8, true), (9, false)]);
+        b.compare(&[(0, true), (3, false)]);
+        b.write(&[(8, true), (9, false)]);
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.ledger(), b.ledger());
+        assert_eq!(a.tags_snapshot(), b.tags_snapshot());
+        for r in 0..100 {
+            assert_eq!(a.fetch_row_bits(r, 0, 16), b.fetch_row_bits(r, 0, 16));
+        }
+    }
+
+    #[test]
+    fn execute_span_fuses_and_matches_stepwise() {
+        use crate::isa::Instr;
+        let mk = |backend| {
+            let mut a = PrinsArray::new(2, 70, 8).with_backend(backend);
+            for r in 0..140 {
+                a.load_row_bits(r, 0, 8, (r as u64) & 0xFF);
+            }
+            a
+        };
+        let span = vec![
+            Instr::Compare(vec![(0, true)]),
+            Instr::Write(vec![(6, true)]),
+            Instr::SetTagsAll,
+            Instr::ClearColumns { base: 7, width: 1 },
+            Instr::Compare(vec![(1, false), (6, true)]),
+        ];
+        let mut t = mk(ExecBackend::Threaded(3));
+        t.execute_span(&span);
+        let mut s = mk(ExecBackend::Serial);
+        s.compare(&[(0, true)]);
+        s.write(&[(6, true)]);
+        s.set_tags_all();
+        s.clear_columns(7, 1);
+        s.compare(&[(1, false), (6, true)]);
+        assert_eq!(t.cycles, s.cycles);
+        assert_eq!(t.ledger(), s.ledger());
+        assert_eq!(t.tags_snapshot(), s.tags_snapshot());
+        for r in 0..140 {
+            assert_eq!(t.fetch_row_bits(r, 0, 8), s.fetch_row_bits(r, 0, 8));
+        }
     }
 }

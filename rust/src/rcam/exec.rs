@@ -1,0 +1,570 @@
+//! Parallel execution engine: row-striped multi-threaded backend for the
+//! PRINS array (DESIGN.md §5).
+//!
+//! The modeled hardware executes every associative instruction on all rows
+//! of all modules simultaneously; the simulator mirrors that data
+//! parallelism by sharding the array into per-worker *row stripes* —
+//! contiguous 64-row-word ranges spanning one or more modules — and
+//! running whole *spans* of data-parallel instructions on all stripes
+//! concurrently. Three rules keep the threaded backend bit-identical to
+//! the serial path (DESIGN.md §5, "barrier rules"):
+//!
+//!   1. Only data-parallel instructions (compare / write / set-tags /
+//!      column clears) run striped; anything with a global result or
+//!      cross-row communication (read, if/first-match, reductions, tag
+//!      shifts) is a barrier and executes serially between spans.
+//!   2. Every kernel is word-local: a stripe only ever reads and writes
+//!      its own tag/plane words, so stripes never race and instruction
+//!      order within a span only matters per word.
+//!   3. Energy accounting is split: data-independent events (instruction
+//!      counts, compare match-line precharge) are charged analytically
+//!      per module at the span barrier; data-dependent events (write
+//!      bits, wear) are accumulated per stripe and summed — integer
+//!      sums, so the merged ledger is exactly the serial ledger.
+//!
+//! Everything here is std-only (`[dependencies]` stays empty): the worker
+//! pool is persistent `std::thread` workers fed lifetime-erased jobs
+//! through channels, with a latch providing the scoped-join guarantee
+//! that `std::thread::scope` would (the dispatcher blocks until every
+//! worker finishes, so borrowed stripe state outlives all uses).
+
+use super::bitvec::WORD_BITS;
+use super::device::{CYCLES_COMPARE, CYCLES_TAG_OP, CYCLES_WRITE};
+use super::module::Pattern;
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+// ---------------------------------------------------------------------------
+// Backend selection
+// ---------------------------------------------------------------------------
+
+/// How `PrinsArray` executes data-parallel instruction spans.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecBackend {
+    /// Single-threaded per-module sweep (the reference path; stats from
+    /// the threaded backend are asserted bit-identical to this one).
+    Serial,
+    /// Row-striped execution on `n` workers (the dispatching thread is
+    /// worker 0, so `Threaded(n)` spawns `n - 1` pool threads).
+    Threaded(usize),
+}
+
+impl ExecBackend {
+    /// `Threaded(available_parallelism())` — the CLI/bench default.
+    pub fn threaded_default() -> Self {
+        let n = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        ExecBackend::from_workers(n)
+    }
+
+    /// `n <= 1` selects the serial reference path.
+    pub fn from_workers(n: usize) -> Self {
+        if n <= 1 {
+            ExecBackend::Serial
+        } else {
+            ExecBackend::Threaded(n)
+        }
+    }
+
+    #[inline]
+    pub fn workers(&self) -> usize {
+        match self {
+            ExecBackend::Serial => 1,
+            ExecBackend::Threaded(n) => (*n).max(1),
+        }
+    }
+
+    #[inline]
+    pub fn is_threaded(&self) -> bool {
+        matches!(self, ExecBackend::Threaded(_))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Data-parallel operations (one span = a slice of these)
+// ---------------------------------------------------------------------------
+
+/// A data-parallel instruction, borrowing its patterns from the caller.
+/// `Pass` is the fused compare + tagged-write kernel: one traversal,
+/// identical results and ledger to `Compare` followed by `Write`.
+#[derive(Clone, Copy)]
+pub enum StripeOp<'a> {
+    Compare(&'a Pattern),
+    Write(&'a Pattern),
+    Pass(&'a Pattern, &'a Pattern),
+    SetTagsAll,
+    ClearColumns { base: u16, width: u16 },
+}
+
+/// Cycle charge of one op — must agree with `Instr::cycles()` and with
+/// what the serial path charges (DESIGN.md §4).
+pub(crate) fn op_cycles(op: &StripeOp) -> u64 {
+    match op {
+        StripeOp::Compare(_) => CYCLES_COMPARE,
+        StripeOp::Write(_) => CYCLES_WRITE,
+        StripeOp::Pass(_, _) => CYCLES_COMPARE + CYCLES_WRITE,
+        StripeOp::SetTagsAll => CYCLES_TAG_OP,
+        StripeOp::ClearColumns { .. } => CYCLES_WRITE,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Stripe planning
+// ---------------------------------------------------------------------------
+
+/// Raw pointers into one module's state, harvested from disjoint `&mut`
+/// borrows immediately before a dispatch (see `RcamModule::raw_parts`).
+pub(crate) struct ModuleParts {
+    pub tags: *mut u64,
+    /// One base pointer per bit-column plane's word buffer.
+    pub planes: Vec<*mut u64>,
+    /// Per-row wear counters, if tracking is enabled.
+    pub wear: Option<*mut u32>,
+    pub rows: usize,
+    /// Tag/plane words per module (`words_for(rows)`).
+    pub words: usize,
+}
+
+/// One contiguous word range of one module, owned by exactly one stripe.
+///
+/// Safety: segments are constructed by [`plan_stripes`] as a disjoint
+/// partition of all (module, word) pairs, and each segment is executed by
+/// exactly one worker while the dispatcher blocks — so the `*mut`
+/// accesses never alias across threads. `Send`/`Sync` are asserted on
+/// that basis.
+pub(crate) struct Segment {
+    pub module: usize,
+    nwords: usize,
+    /// Canonical mask of this segment's LAST word (all-ones unless it is
+    /// the module's tail word and `rows % 64 != 0`).
+    tail_mask: u64,
+    tags: *mut u64,
+    planes: Vec<*mut u64>,
+    /// Null when wear tracking is disabled. Offset so index `w*64 + b`
+    /// is the wear slot of this segment's word `w`, bit `b`.
+    wear: *mut u32,
+}
+
+unsafe impl Send for Segment {}
+unsafe impl Sync for Segment {}
+
+impl Segment {
+    #[inline]
+    fn mask(&self, w: usize) -> u64 {
+        if w + 1 == self.nwords {
+            self.tail_mask
+        } else {
+            u64::MAX
+        }
+    }
+
+    /// Apply the write pattern to plane word `w` under tag mask `t`.
+    #[inline]
+    fn write_word(&self, w: usize, t: u64, pat: &Pattern) {
+        for &(col, bit) in pat {
+            let p = unsafe { &mut *self.planes[col as usize].add(w) };
+            if bit {
+                *p |= t;
+            } else {
+                *p &= !t;
+            }
+        }
+    }
+
+    /// Bump wear counters for the set bits of tag word `w` (word-skipped:
+    /// callers only invoke this for non-zero `t`).
+    #[inline]
+    fn wear_word(&self, w: usize, t: u64) {
+        if self.wear.is_null() {
+            return;
+        }
+        let mut m = t;
+        while m != 0 {
+            let b = m.trailing_zeros() as usize;
+            unsafe { *self.wear.add(w * WORD_BITS + b) += 1 };
+            m &= m - 1;
+        }
+    }
+}
+
+/// Partition the global word space (modules × words-per-module) into at
+/// most `max_stripes` contiguous, balanced stripes. A stripe that crosses
+/// a module boundary gets one segment per module touched. Stripe
+/// boundaries are word-aligned, so splits that do not divide module rows
+/// evenly are fine — the tail word keeps its canonical mask.
+pub(crate) fn plan_stripes(parts: &[ModuleParts], max_stripes: usize) -> Vec<Vec<Segment>> {
+    let wpm = parts[0].words;
+    let total = wpm * parts.len();
+    let n = max_stripes.clamp(1, total);
+    let mut stripes = Vec::with_capacity(n);
+    for s in 0..n {
+        let g0 = s * total / n;
+        let g1 = (s + 1) * total / n;
+        let mut segs = Vec::new();
+        let mut g = g0;
+        while g < g1 {
+            let m = g / wpm;
+            let w0 = g % wpm;
+            let take = (g1 - g).min(wpm - w0);
+            let part = &parts[m];
+            let tail = part.rows % WORD_BITS;
+            let tail_mask = if w0 + take == part.words && tail != 0 {
+                (1u64 << tail) - 1
+            } else {
+                u64::MAX
+            };
+            segs.push(Segment {
+                module: m,
+                nwords: take,
+                tail_mask,
+                tags: unsafe { part.tags.add(w0) },
+                planes: part
+                    .planes
+                    .iter()
+                    .map(|&p| unsafe { p.add(w0) })
+                    .collect(),
+                wear: part
+                    .wear
+                    .map(|p| unsafe { p.add(w0 * WORD_BITS) })
+                    .unwrap_or(std::ptr::null_mut()),
+            });
+            g += take;
+        }
+        stripes.push(segs);
+    }
+    stripes
+}
+
+// ---------------------------------------------------------------------------
+// Stripe kernels
+// ---------------------------------------------------------------------------
+
+/// Execute a whole span of ops over one segment. Returns the segment's
+/// data-dependent write-bit events (Σ pattern-columns × tagged rows at
+/// each write); everything data-independent is charged by the caller.
+///
+/// All kernels are word-blocked: the tag word stays in a register across
+/// every pattern column of an op (DESIGN.md §Perf), and tagged writes /
+/// wear updates skip all-zero tag words.
+pub(crate) fn run_ops_on_segment(seg: &Segment, ops: &[StripeOp]) -> u128 {
+    let tags = unsafe { std::slice::from_raw_parts_mut(seg.tags, seg.nwords) };
+    let mut write_events: u128 = 0;
+    for op in ops {
+        match *op {
+            StripeOp::Compare(pat) => {
+                for (w, tw) in tags.iter_mut().enumerate() {
+                    let mut t = seg.mask(w);
+                    for &(col, bit) in pat {
+                        let p = unsafe { *seg.planes[col as usize].add(w) };
+                        t &= if bit { p } else { !p };
+                    }
+                    *tw = t;
+                }
+            }
+            StripeOp::Write(pat) => {
+                let mut tagged: u64 = 0;
+                for (w, &t) in tags.iter().enumerate() {
+                    if t == 0 {
+                        continue;
+                    }
+                    tagged += t.count_ones() as u64;
+                    seg.write_word(w, t, pat);
+                    seg.wear_word(w, t);
+                }
+                write_events += pat.len() as u128 * tagged as u128;
+            }
+            StripeOp::Pass(cpat, wpat) => {
+                let mut tagged: u64 = 0;
+                for (w, tw) in tags.iter_mut().enumerate() {
+                    let mut t = seg.mask(w);
+                    for &(col, bit) in cpat {
+                        let p = unsafe { *seg.planes[col as usize].add(w) };
+                        t &= if bit { p } else { !p };
+                    }
+                    *tw = t;
+                    if t != 0 {
+                        tagged += t.count_ones() as u64;
+                        seg.write_word(w, t, wpat);
+                        seg.wear_word(w, t);
+                    }
+                }
+                write_events += wpat.len() as u128 * tagged as u128;
+            }
+            StripeOp::SetTagsAll => {
+                for (w, tw) in tags.iter_mut().enumerate() {
+                    *tw = seg.mask(w);
+                }
+            }
+            StripeOp::ClearColumns { base, width } => {
+                for col in base..base + width {
+                    let p = seg.planes[col as usize];
+                    for w in 0..seg.nwords {
+                        unsafe { *p.add(w) = 0 };
+                    }
+                }
+            }
+        }
+    }
+    write_events
+}
+
+// ---------------------------------------------------------------------------
+// Persistent worker pool
+// ---------------------------------------------------------------------------
+
+/// Completion latch: the dispatcher blocks until every sent job is done;
+/// a worker panic is recorded and re-raised on the dispatcher.
+struct Latch {
+    state: Mutex<(usize, bool)>, // (remaining, poisoned)
+    cv: Condvar,
+}
+
+impl Latch {
+    fn new(n: usize) -> Self {
+        Latch {
+            state: Mutex::new((n, false)),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn done(&self, poisoned: bool) {
+        let mut st = self.state.lock().unwrap();
+        st.0 -= 1;
+        st.1 |= poisoned;
+        if st.0 == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    /// Returns true if any job panicked.
+    fn wait(&self) -> bool {
+        let mut st = self.state.lock().unwrap();
+        while st.0 > 0 {
+            st = self.cv.wait(st).unwrap();
+        }
+        st.1
+    }
+}
+
+/// One unit of dispatched work: a lifetime-erased pointer to the
+/// dispatcher's stripe closure plus the stripe index to run.
+///
+/// Safety: the pointer targets a `dyn Fn(usize) + Sync` living on the
+/// dispatcher's stack; [`WorkerPool::run`] does not return until the
+/// latch releases, so the pointee strictly outlives every use. `Send` is
+/// asserted on that basis.
+struct Job {
+    task: *const (dyn Fn(usize) + Sync),
+    latch: Arc<Latch>,
+    stripe: usize,
+}
+
+unsafe impl Send for Job {}
+
+fn worker_loop(rx: Receiver<Job>) {
+    while let Ok(job) = rx.recv() {
+        let f = unsafe { &*job.task };
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(job.stripe)));
+        job.latch.done(r.is_err());
+    }
+}
+
+/// A persistent pool of `threads` workers fed through per-worker
+/// channels. The dispatching thread participates as worker 0, so an
+/// `ExecBackend::Threaded(n)` array owns a pool of `n - 1` threads and a
+/// dispatch costs one channel send + one latch wait — no thread spawns on
+/// the hot path.
+pub struct WorkerPool {
+    threads: usize,
+    txs: Mutex<Vec<Sender<Job>>>,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl WorkerPool {
+    pub fn new(threads: usize) -> Self {
+        let mut txs = Vec::with_capacity(threads);
+        let mut handles = Vec::with_capacity(threads);
+        for _ in 0..threads {
+            let (tx, rx) = channel::<Job>();
+            txs.push(tx);
+            handles.push(std::thread::spawn(move || worker_loop(rx)));
+        }
+        WorkerPool {
+            threads,
+            txs: Mutex::new(txs),
+            handles: Mutex::new(handles),
+        }
+    }
+
+    #[inline]
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Process-wide shared pool for a given thread count. Arrays with the
+    /// same worker setting reuse one pool instead of spawning threads per
+    /// array — the TCP server builds a device per request and the figure
+    /// harnesses build an array per matrix/graph, so per-array pools
+    /// would put thread spawn/join on the serving hot path. Shared pools
+    /// live for the process lifetime (workers idle on channel recv).
+    pub fn shared(threads: usize) -> Arc<WorkerPool> {
+        static POOLS: OnceLock<Mutex<HashMap<usize, Arc<WorkerPool>>>> = OnceLock::new();
+        let mut map = POOLS
+            .get_or_init(|| Mutex::new(HashMap::new()))
+            .lock()
+            .unwrap();
+        map.entry(threads)
+            .or_insert_with(|| Arc::new(WorkerPool::new(threads)))
+            .clone()
+    }
+
+    /// Run `f(stripe)` for every stripe in `0..stripes`, blocking until
+    /// all complete. Stripe 0 runs inline on the calling thread; stripes
+    /// 1.. are dispatched to pool workers (`stripes <= threads + 1`).
+    pub fn run(&self, stripes: usize, f: &(dyn Fn(usize) + Sync)) {
+        if stripes == 0 {
+            return;
+        }
+        let remote = stripes - 1;
+        assert!(
+            remote <= self.threads,
+            "stripe plan exceeds pool size ({stripes} stripes, {} threads)",
+            self.threads
+        );
+        let latch = Arc::new(Latch::new(remote));
+        // Safety: erase the borrow's lifetime for transport; the latch
+        // wait below guarantees the pointee outlives every worker use.
+        let task: *const (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(f) };
+        {
+            let txs = self.txs.lock().unwrap();
+            for i in 0..remote {
+                txs[i]
+                    .send(Job {
+                        task,
+                        latch: latch.clone(),
+                        stripe: i + 1,
+                    })
+                    .expect("worker pool thread died");
+            }
+        }
+        // Run the inline stripe with panics deferred: the dispatcher must
+        // not unwind past the borrowed task state while workers still
+        // reference it, so wait for the latch before re-raising.
+        let inline = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(0)));
+        let remote_poisoned = latch.wait();
+        if let Err(e) = inline {
+            std::panic::resume_unwind(e);
+        }
+        if remote_poisoned {
+            panic!("parallel execution worker panicked");
+        }
+    }
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerPool")
+            .field("threads", &self.threads)
+            .finish()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // dropping the senders ends every worker's recv loop
+        self.txs.lock().unwrap().clear();
+        for h in self.handles.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn backend_from_workers() {
+        assert_eq!(ExecBackend::from_workers(0), ExecBackend::Serial);
+        assert_eq!(ExecBackend::from_workers(1), ExecBackend::Serial);
+        assert_eq!(ExecBackend::from_workers(4), ExecBackend::Threaded(4));
+        assert_eq!(ExecBackend::Threaded(4).workers(), 4);
+        assert_eq!(ExecBackend::Serial.workers(), 1);
+        assert!(ExecBackend::threaded_default().workers() >= 1);
+    }
+
+    #[test]
+    fn pool_runs_every_stripe_exactly_once() {
+        let pool = WorkerPool::new(3);
+        for stripes in 1..=4 {
+            let hits: Vec<AtomicUsize> = (0..stripes).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(stripes, &|s| {
+                hits[s].fetch_add(1, Ordering::SeqCst);
+            });
+            for (s, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::SeqCst), 1, "stripe {s}/{stripes}");
+            }
+        }
+    }
+
+    #[test]
+    fn pool_reusable_across_dispatches() {
+        let pool = WorkerPool::new(2);
+        let total = AtomicUsize::new(0);
+        for _ in 0..100 {
+            pool.run(3, &|s| {
+                total.fetch_add(s + 1, Ordering::SeqCst);
+            });
+        }
+        assert_eq!(total.load(Ordering::SeqCst), 600);
+    }
+
+    #[test]
+    #[should_panic(expected = "worker panicked")]
+    fn pool_propagates_worker_panic() {
+        let pool = WorkerPool::new(1);
+        pool.run(2, &|s| {
+            if s == 1 {
+                panic!("boom");
+            }
+        });
+    }
+
+    #[test]
+    fn stripe_plan_partitions_all_words() {
+        use crate::rcam::module::RcamModule;
+        for (nmods, rows, stripes) in
+            [(1usize, 130usize, 3usize), (3, 100, 4), (2, 64, 8), (1, 1, 5), (4, 65, 2)]
+        {
+            let mut mods: Vec<RcamModule> =
+                (0..nmods).map(|_| RcamModule::new(rows, 4)).collect();
+            let parts: Vec<ModuleParts> =
+                mods.iter_mut().map(|m| m.raw_parts()).collect();
+            let wpm = parts[0].words;
+            let plan = plan_stripes(&parts, stripes);
+            assert!(plan.len() <= stripes.max(1));
+            // every (module, word) covered exactly once, in order
+            let mut covered = vec![0usize; nmods * wpm];
+            for stripe in &plan {
+                for seg in stripe {
+                    let base = unsafe { seg.tags.offset_from(parts[seg.module].tags) };
+                    let w0 = base as usize;
+                    for w in w0..w0 + seg.nwords {
+                        covered[seg.module * wpm + w] += 1;
+                    }
+                    // tail mask only on the module's final word
+                    let tail = rows % WORD_BITS;
+                    if tail != 0 && w0 + seg.nwords == wpm {
+                        assert_eq!(seg.tail_mask, (1u64 << tail) - 1);
+                    } else {
+                        assert_eq!(seg.tail_mask, u64::MAX);
+                    }
+                }
+            }
+            assert!(covered.iter().all(|&c| c == 1), "{nmods}x{rows}/{stripes}: {covered:?}");
+        }
+    }
+}

@@ -10,14 +10,20 @@
 //!   [`chain`]     — daisy-chained modules as one associative address
 //!                   space (paper Fig. 4)
 
+//!   [`exec`]      — row-striped parallel execution engine: worker pool,
+//!                   stripe planning, fused word-blocked kernels
+//!                   (DESIGN.md §5)
+
 pub mod bitmatrix;
 pub mod bitvec;
 pub mod chain;
 pub mod device;
+pub mod exec;
 pub mod module;
 
 pub use bitmatrix::BitMatrix;
 pub use bitvec::BitVec;
 pub use chain::PrinsArray;
 pub use device::{DeviceModel, EnergyLedger};
+pub use exec::ExecBackend;
 pub use module::{Pattern, RcamModule};

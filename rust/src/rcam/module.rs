@@ -11,8 +11,9 @@
 //! current flows only through connected cells).
 
 use super::bitmatrix::BitMatrix;
-use super::bitvec::BitVec;
+use super::bitvec::{BitVec, WORD_BITS};
 use super::device::EnergyLedger;
+use super::exec::ModuleParts;
 
 /// Sparse key/mask pattern: (bit-column, key bit). Columns not listed are
 /// masked out.
@@ -82,37 +83,119 @@ impl RcamModule {
     /// unmasked — compare energy is rows × width × E_cmp/bit (paper §3.1:
     /// "less than 1 fJ per bit" is per match-line cell).
     pub fn compare(&mut self, pattern: &Pattern) {
-        self.tags.fill(true);
-        for &(col, bit) in pattern {
-            let plane = self.storage.plane(col as usize);
-            if bit {
-                self.tags.and_assign(plane);
-            } else {
-                self.tags.and_not_assign(plane);
+        // Single word-blocked pass (DESIGN.md §Perf): each tag word stays
+        // in a register across every pattern column, instead of one full
+        // fill sweep plus one and/and-not sweep per column.
+        let nwords = self.tags.words().len();
+        let tail = self.storage.rows() % WORD_BITS;
+        let tail_mask = if tail == 0 { u64::MAX } else { (1u64 << tail) - 1 };
+        let planes: Vec<&[u64]> = pattern
+            .iter()
+            .map(|&(col, _)| self.storage.plane(col as usize).words())
+            .collect();
+        let tags = self.tags.words_mut();
+        for w in 0..nwords {
+            let mut t = if w + 1 == nwords { tail_mask } else { u64::MAX };
+            for (&(_, bit), plane) in pattern.iter().zip(&planes) {
+                let p = plane[w];
+                t &= if bit { p } else { !p };
             }
+            tags[w] = t;
         }
         self.ledger.n_compare += 1;
         self.ledger.compare_bit_events += (self.width() * self.rows()) as u128;
     }
 
     /// Parallel write of the key into the unmasked columns of every
-    /// *tagged* row (two-phase, paper §3.1).
+    /// *tagged* row (two-phase, paper §3.1). Word-blocked: all-zero tag
+    /// words are skipped entirely, and wear counters are updated in the
+    /// same traversal (word-at-a-time via `trailing_zeros`) so tracking
+    /// no longer dominates write cost at low tag density.
     pub fn write(&mut self, pattern: &Pattern) {
-        let tagged = self.tags.count_ones();
-        for &(col, bit) in pattern {
-            let plane = self.storage.plane_mut(col as usize);
-            if bit {
-                plane.or_assign(&self.tags);
-            } else {
-                plane.and_not_assign(&self.tags);
+        let nwords = self.tags.words().len();
+        let mut tagged: u64 = 0;
+        for w in 0..nwords {
+            let t = self.tags.words()[w];
+            if t == 0 {
+                continue;
+            }
+            tagged += t.count_ones() as u64;
+            for &(col, bit) in pattern {
+                let pw = &mut self.storage.plane_mut(col as usize).words_mut()[w];
+                if bit {
+                    *pw |= t;
+                } else {
+                    *pw &= !t;
+                }
+            }
+            if let Some(wear) = &mut self.wear {
+                let mut m = t;
+                while m != 0 {
+                    wear[w * WORD_BITS + m.trailing_zeros() as usize] += 1;
+                    m &= m - 1;
+                }
             }
         }
         self.ledger.n_write += 1;
         self.ledger.write_bit_events += (pattern.len() as u128) * (tagged as u128);
-        if let Some(wear) = &mut self.wear {
-            for r in self.tags.iter_ones() {
-                wear[r] += 1;
+    }
+
+    /// Fused compare + tagged write — the microcode pass — in one
+    /// traversal. Results and ledger are exactly `compare(cpat)` followed
+    /// by `write(wpat)`: per word, the match result is computed from the
+    /// pre-write plane values (compare only reads its own word), then the
+    /// write applies under that tag word.
+    pub fn pass(&mut self, cpat: &Pattern, wpat: &Pattern) {
+        let nwords = self.tags.words().len();
+        let tail = self.storage.rows() % WORD_BITS;
+        let tail_mask = if tail == 0 { u64::MAX } else { (1u64 << tail) - 1 };
+        let mut tagged: u64 = 0;
+        for w in 0..nwords {
+            let mut t = if w + 1 == nwords { tail_mask } else { u64::MAX };
+            for &(col, bit) in cpat {
+                let p = self.storage.plane(col as usize).words()[w];
+                t &= if bit { p } else { !p };
             }
+            self.tags.words_mut()[w] = t;
+            if t == 0 {
+                continue;
+            }
+            tagged += t.count_ones() as u64;
+            for &(col, bit) in wpat {
+                let pw = &mut self.storage.plane_mut(col as usize).words_mut()[w];
+                if bit {
+                    *pw |= t;
+                } else {
+                    *pw &= !t;
+                }
+            }
+            if let Some(wear) = &mut self.wear {
+                let mut m = t;
+                while m != 0 {
+                    wear[w * WORD_BITS + m.trailing_zeros() as usize] += 1;
+                    m &= m - 1;
+                }
+            }
+        }
+        self.ledger.n_compare += 1;
+        self.ledger.compare_bit_events += (self.width() * self.rows()) as u128;
+        self.ledger.n_write += 1;
+        self.ledger.write_bit_events += (wpat.len() as u128) * (tagged as u128);
+    }
+
+    /// Harvest raw pointers for the striped execution engine. All
+    /// pointers come from disjoint `&mut` borrows taken in this call;
+    /// the caller must not touch the module through safe references
+    /// until its dispatch completes (see `rcam::exec`).
+    pub(crate) fn raw_parts(&mut self) -> ModuleParts {
+        let rows = self.rows();
+        let words = self.tags.words().len();
+        ModuleParts {
+            tags: self.tags.words_mut().as_mut_ptr(),
+            planes: self.storage.plane_word_ptrs(),
+            wear: self.wear.as_mut().map(|v| v.as_mut_ptr()),
+            rows,
+            words,
         }
     }
 

@@ -3,9 +3,9 @@
 //! Each property runs hundreds of random cases from a deterministic seed.
 
 use prins::controller::Controller;
-use prins::isa::{Field, Program, RowLayout};
+use prins::isa::{Field, Instr, Program, RowLayout};
 use prins::micro;
-use prins::rcam::PrinsArray;
+use prins::rcam::{ExecBackend, PrinsArray};
 use prins::storage::StorageManager;
 use prins::workloads::Rng;
 
@@ -249,6 +249,115 @@ fn prop_chain_flat_equivalence() {
             );
         }
         assert_eq!(chain.cycles, flat.cycles, "SIMD cycle equivalence");
+    }
+}
+
+/// Serial/parallel equivalence: for random programs over random arrays,
+/// `ExecBackend::Serial` and `Threaded(n)` produce identical storage
+/// contents, tag vectors, data buffers, cycle counts, and energy ledgers
+/// — including worker counts whose word stripes do not divide module
+/// rows evenly, and wear tracking on the striped write path.
+#[test]
+fn prop_serial_threaded_equivalence() {
+    let mut rng = Rng::seed_from(0x57121BE5);
+    for case in 0..30 {
+        let modules = 1 + rng.below(4) as usize;
+        // odd row counts => partial tail words and uneven stripe splits
+        let rpm = 17 + rng.below(180) as usize;
+        let width = 16usize;
+        let wear = rng.below(2) == 1;
+        let density = 1 + rng.below(99);
+
+        // one random dataset, loaded identically into every array
+        let total = modules * rpm;
+        let mut data = Vec::with_capacity(total);
+        for _ in 0..total {
+            data.push(rng.next_u64() & 0xFFFF);
+        }
+
+        // one random program: data-parallel spans interleaved with
+        // serializing instructions (reads, reductions, shifts)
+        let mut prog = Program::new();
+        let mk_pat = |rng: &mut Rng| -> Vec<(u16, bool)> {
+            let k = 1 + rng.below(3) as usize;
+            let mut used = std::collections::HashSet::new();
+            (0..k)
+                .filter_map(|_| {
+                    let c = rng.below(width as u64) as u16;
+                    used.insert(c).then_some((c, rng.below(2) == 1))
+                })
+                .collect()
+        };
+        for _ in 0..24 {
+            match rng.below(10) {
+                0 | 1 => prog.push(Instr::Compare(mk_pat(&mut rng))),
+                2 | 3 => prog.push(Instr::Write(mk_pat(&mut rng))),
+                4 => prog.push(Instr::SetTagsAll),
+                5 => prog.push(Instr::ClearColumns {
+                    base: rng.below(width as u64 - 1) as u16,
+                    width: 1,
+                }),
+                6 => prog.push(Instr::ReduceCount),
+                7 => prog.push(Instr::ReduceField {
+                    col: rng.below(width as u64) as u16,
+                }),
+                8 => prog.push(match rng.below(3) {
+                    0 => Instr::Read { base: 0, width: 8 },
+                    1 => Instr::IfMatch,
+                    _ => Instr::FirstMatch,
+                }),
+                _ => {
+                    // hops occasionally exceed rows_per_module to hit the
+                    // gathered-global shift fallback
+                    let hops = 1 + rng.below(rpm as u64 + rpm as u64 / 2) as u32;
+                    if rng.below(2) == 0 {
+                        prog.push(Instr::ShiftTagsUp(hops));
+                    } else {
+                        prog.push(Instr::ShiftTagsDown(hops));
+                    }
+                }
+            }
+        }
+
+        let run = |backend: ExecBackend| {
+            let mut arr = PrinsArray::new(modules, rpm, width).with_backend(backend);
+            if wear {
+                arr.enable_wear_tracking();
+            }
+            let mut d = Rng::seed_from(case as u64);
+            for (r, &v) in data.iter().enumerate() {
+                if d.below(100) < density {
+                    arr.load_row_bits(r, 0, width, v);
+                }
+            }
+            let mut ctl = Controller::new(arr);
+            let out = ctl.execute_collect(&prog);
+            (ctl, out)
+        };
+
+        let (s, out_s) = run(ExecBackend::Serial);
+        for n in [2usize, 3, 8] {
+            let (t, out_t) = run(ExecBackend::Threaded(n));
+            let label = format!("case {case} ({modules}x{rpm}) workers={n}");
+            assert_eq!(out_s, out_t, "{label}: data buffer");
+            assert_eq!(s.array.cycles, t.array.cycles, "{label}: cycles");
+            assert_eq!(s.array.ledger(), t.array.ledger(), "{label}: ledger");
+            assert_eq!(
+                s.array.tags_snapshot().iter_ones().collect::<Vec<_>>(),
+                t.array.tags_snapshot().iter_ones().collect::<Vec<_>>(),
+                "{label}: tags"
+            );
+            for r in 0..total {
+                assert_eq!(
+                    s.array.fetch_row_bits(r, 0, width),
+                    t.array.fetch_row_bits(r, 0, width),
+                    "{label}: row {r}"
+                );
+            }
+            for (ms, mt) in s.array.modules().iter().zip(t.array.modules()) {
+                assert_eq!(ms.wear_counters(), mt.wear_counters(), "{label}: wear");
+            }
+        }
     }
 }
 
