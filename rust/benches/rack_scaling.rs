@@ -1,0 +1,154 @@
+//! Rack shard-count scaling bench (DESIGN.md §Sharding): run the four
+//! sharded workloads (hist / dp / ed / spmv) over a shard-count sweep and
+//! write the modeled rack figures to `BENCH_rack.json` at the repository
+//! root — the scaling curves the README's "Run a rack" table is fed from.
+//!
+//! Flags (after `cargo bench --bench rack_scaling --`):
+//!   --rows N          dataset rows (default 1<<14; dense/spmv workloads
+//!                     cap at 4096 rows — printed when the cap applies)
+//!   --shards a,b,c    shard-count sweep (default 1,2,4,8)
+//!   --workers W       per-shard simulator backend threads (default 1)
+//!   --verify          assert every sharded result bit-equal to the
+//!                     single-device (1-shard-values) reference
+
+use prins::algorithms::{
+    dot_sharded, euclidean_sharded, histogram_sharded, spmv_sharded,
+};
+use prins::host::rack::PrinsRack;
+use prins::metrics::bench::{
+    arg_u64, shards_sweep_from_args, write_rack_json, RackRecord,
+};
+use prins::rcam::{DeviceModel, ExecBackend, InterconnectModel};
+use prins::workloads::{synth_csr, synth_hist_samples, synth_samples, synth_uniform, Rng};
+use std::time::Instant;
+
+const DIMS: usize = 8;
+
+fn rack(shards: usize, backend: ExecBackend) -> PrinsRack {
+    PrinsRack::with_config(
+        shards,
+        DeviceModel::default(),
+        backend,
+        InterconnectModel::default(),
+    )
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let rows = arg_u64(&args, "--rows", 1 << 14) as usize;
+    let sweep = shards_sweep_from_args(&args, &[1, 2, 4, 8]);
+    let workers = arg_u64(&args, "--workers", 1) as usize;
+    let backend = ExecBackend::from_workers(workers);
+    let verify = args.iter().any(|a| a == "--verify");
+
+    // the microcoded dense kernels and spmv simulate every pass over every
+    // row; cap them so the sweep stays minutes-scale at large --rows
+    let dense_rows = rows.min(4096);
+    if dense_rows != rows {
+        println!("note: dp/ed/spmv capped at {dense_rows} rows (hist uses {rows})");
+    }
+    println!("rows = {rows}, shard sweep = {sweep:?}, backend = {backend:?}");
+
+    let xs = synth_hist_samples(rows, 7);
+    let xv = synth_samples(dense_rows, DIMS, 4, 11);
+    let h = synth_uniform(DIMS, 12);
+    let centers = synth_uniform(DIMS, 13);
+    let a = synth_csr(dense_rows, dense_rows * 8, 17);
+    let mut rng = Rng::seed_from(18);
+    let x: Vec<f32> = (0..dense_rows).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+
+    // single-device-value reference for --verify (a 1-shard rack computes
+    // exactly the single-device result values). When the sweep itself
+    // starts at shards=1 — the default, and what CI runs — the reference
+    // is captured from that iteration instead of being computed twice.
+    type Reference = (Vec<u64>, Vec<f32>, Vec<Vec<f32>>, Vec<f32>);
+    let mut reference: Option<Reference> = None;
+    if verify && sweep.first() != Some(&1) {
+        let r1 = rack(1, backend);
+        reference = Some((
+            histogram_sharded(&r1, &xs).hist,
+            dot_sharded(&r1, &xv, dense_rows, DIMS, &h).dp,
+            euclidean_sharded(&r1, &xv, dense_rows, DIMS, &centers, 1, 5).dists,
+            spmv_sharded(&r1, &a, &x).y,
+        ));
+    }
+
+    let mut records: Vec<RackRecord> = Vec::new();
+    let push = |records: &mut Vec<RackRecord>,
+                    bench: &str,
+                    nrows: usize,
+                    shards: usize,
+                    rs: &prins::host::rack::RackStats,
+                    wall: f64| {
+        println!(
+            "{bench:<5} shards={shards:<2} total_cycles={:>9} max_shard={:>9} \
+             link_bytes={:>9} energy={:.3e} J  wall={:.3}s",
+            rs.total_cycles, rs.max_shard_cycles, rs.link_bytes, rs.energy_j, wall
+        );
+        records.push(RackRecord {
+            bench: bench.into(),
+            rows: nrows as u64,
+            shards: shards as u64,
+            total_cycles: rs.total_cycles,
+            max_shard_cycles: rs.max_shard_cycles,
+            link_bytes: rs.link_bytes,
+            energy_j: rs.energy_j,
+            wall_s: wall,
+        });
+    };
+
+    for &s in &sweep {
+        let rk = rack(s, backend);
+
+        let t0 = Instant::now();
+        let hist = histogram_sharded(&rk, &xs);
+        push(&mut records, "hist", rows, s, &hist.rack, t0.elapsed().as_secs_f64());
+
+        let t0 = Instant::now();
+        let dp = dot_sharded(&rk, &xv, dense_rows, DIMS, &h);
+        push(&mut records, "dp", dense_rows, s, &dp.rack, t0.elapsed().as_secs_f64());
+
+        let t0 = Instant::now();
+        let ed = euclidean_sharded(&rk, &xv, dense_rows, DIMS, &centers, 1, 5);
+        push(&mut records, "ed", dense_rows, s, &ed.rack, t0.elapsed().as_secs_f64());
+
+        let t0 = Instant::now();
+        let sp = spmv_sharded(&rk, &a, &x);
+        push(&mut records, "spmv", dense_rows, s, &sp.rack, t0.elapsed().as_secs_f64());
+
+        if verify && s == 1 && reference.is_none() {
+            reference = Some((
+                hist.hist.clone(),
+                dp.dp.clone(),
+                ed.dists.clone(),
+                sp.y.clone(),
+            ));
+            println!("captured shards=1 values as the verification reference");
+        } else if let Some((rh, rd, re, ry)) = &reference {
+            assert_eq!(&hist.hist, rh, "shards={s}: histogram mismatch");
+            assert!(
+                dp.dp.iter().zip(rd).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "shards={s}: dp mismatch"
+            );
+            for (c, (ec, rc)) in ed.dists.iter().zip(re).enumerate() {
+                assert!(
+                    ec.iter().zip(rc).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "shards={s}: ed center {c} mismatch"
+                );
+            }
+            assert!(
+                sp.y.iter().zip(ry).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "shards={s}: spmv mismatch"
+            );
+            println!("verified shards={s} bit-equal to single-device values");
+        }
+    }
+
+    match write_rack_json("rack", &records) {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => {
+            eprintln!("failed to write BENCH_rack.json: {e}");
+            std::process::exit(1);
+        }
+    }
+}

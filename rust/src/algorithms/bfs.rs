@@ -26,19 +26,28 @@ use crate::workloads::Graph;
 /// "unvisited" distance sentinel (the all-ones 16-bit pattern).
 pub const DIST_INF: u64 = 0xFFFF;
 
+/// Row layout of one edge record (paper Table 2, 24-bit IDs).
 pub struct BfsLayout {
+    /// Source vertex ID of the edge.
     pub vertex: Field,
+    /// Successor (destination) vertex ID.
     pub succ: Field,
+    /// Vertex-visited flag (set on every edge row of the vertex).
     pub visited: u16,
+    /// Edge-expanded flag (this row already served as a frontier edge).
     pub visited_from: u16,
+    /// BFS-tree predecessor vertex ID.
     pub pred: Field,
+    /// BFS distance of the source vertex ([`DIST_INF`] = unvisited).
     pub dist: Field,
     /// dataset-membership flag (unloaded rows must never join a frontier)
     pub valid: u16,
+    /// Total columns the layout occupies.
     pub width: u16,
 }
 
 impl BfsLayout {
+    /// The Table 2 layout with 24-bit IDs and a 16-bit distance.
     pub fn new() -> Self {
         // Table 2, with 24-bit IDs and a 16-bit distance
         BfsLayout {
@@ -60,24 +69,32 @@ impl Default for BfsLayout {
     }
 }
 
+/// Result of one BFS run.
 pub struct BfsResult {
     /// distance per vertex (u32::MAX = unreachable / no out-edges)
     pub dist: Vec<u32>,
+    /// Execution statistics of the run.
     pub stats: ExecStats,
     /// serial loop iterations (edge expansions)
     pub iterations: u64,
+    /// Number of BFS levels traversed.
     pub levels: u32,
 }
 
+/// Loaded BFS edge list + the serial associative traversal loop.
 pub struct BfsKernel {
+    /// The row layout in use.
     pub layout: BfsLayout,
+    /// Vertex count of the loaded graph.
     pub n_vertices: usize,
+    /// Edge count of the loaded graph (rows in storage).
     pub n_edges: usize,
     head_row: Vec<Option<usize>>,
     ds: Dataset,
 }
 
 impl BfsKernel {
+    /// Allocate rows and load every edge as a Table 2 record.
     pub fn load(sm: &mut StorageManager, array: &mut PrinsArray, g: &Graph) -> Self {
         let layout = BfsLayout::new();
         assert!(array.width() >= layout.width as usize);

@@ -4,28 +4,42 @@
 //! independent of the number of vectors.
 
 use crate::controller::{Controller, ExecStats};
+use crate::host::rack::{PrinsRack, RackStats};
 use crate::isa::{Field, Instr, Program, RowLayout};
 use crate::micro::float::{
     bits_to_f32, unpacked_bits, FloatField, FpScratch, FP_MUL_SCRATCH_BITS, FP_SCRATCH_BITS,
 };
 use crate::micro::{self};
+use crate::rcam::shard::{merge_concat, ShardPlan, CMD_BYTES};
 use crate::rcam::PrinsArray;
 use crate::storage::{Dataset, StorageManager};
 
+/// Row layout of the DP kernel: D attribute slots + broadcast/work areas.
 pub struct DotLayout {
+    /// Attributes per vector.
     pub dims: usize,
+    /// The D stored attribute fields (unpacked fp32).
     pub x: Vec<FloatField>,
+    /// Broadcast slot for the H coefficient of the current iteration.
     pub h: FloatField,
+    /// Product work area (`x_j × H_j`).
     pub mult: FloatField,
+    /// Running dot-product accumulator.
     pub acc: FloatField,
+    /// fp-add output area (copied back into `acc`).
     pub out: FloatField,
+    /// fp-add scratch flags/fields.
     pub scratch: FpScratch,
+    /// Working exponent field of the fp-add alignment step.
     pub wexp: Field,
+    /// Base column of the fp-mul scratch area.
     pub mul_scratch: u16,
+    /// Total columns the layout occupies.
     pub width: u16,
 }
 
 impl DotLayout {
+    /// Lay the fields out contiguously for `dims` attributes.
     pub fn new(dims: usize) -> Self {
         let mut base = 0u16;
         let mut next = |w: u16| {
@@ -56,18 +70,25 @@ impl DotLayout {
     }
 }
 
+/// Result of one dot-product run.
 pub struct DotResult {
+    /// Per-vector dot products, row order.
     pub dp: Vec<f32>,
+    /// Execution statistics of the run.
     pub stats: ExecStats,
 }
 
+/// Loaded dot-product dataset + program generator.
 pub struct DotKernel {
+    /// The row layout in use.
     pub layout: DotLayout,
+    /// Number of loaded vectors.
     pub n: usize,
     ds: Dataset,
 }
 
 impl DotKernel {
+    /// Allocate rows and load `n` × `dims` vectors (row-major).
     pub fn load(
         sm: &mut StorageManager,
         array: &mut PrinsArray,
@@ -94,6 +115,8 @@ impl DotKernel {
         DotKernel { layout, n, ds }
     }
 
+    /// The full associative DP program for broadcast vector `h`
+    /// (Fig. 8 lines 1–4, per attribute).
     pub fn program(&self, h: &[f32]) -> Program {
         let l = &self.layout;
         assert_eq!(h.len(), l.dims);
@@ -123,6 +146,7 @@ impl DotKernel {
         prog
     }
 
+    /// Execute the DP program and read every vector's result back.
     pub fn run(&self, ctl: &mut Controller, sm: &StorageManager, h: &[f32]) -> DotResult {
         ctl.begin_stats();
         let prog = self.program(h);
@@ -141,6 +165,61 @@ impl DotKernel {
             dp,
             stats: ctl.stats(),
         }
+    }
+}
+
+/// Result of a rack-sharded dot-product run.
+pub struct ShardedDotResult {
+    /// Per-vector dot products in global row order, bit-identical to the
+    /// single-device run (order-preserving concatenation merge).
+    pub dp: Vec<f32>,
+    /// Row-order f32 sum of `dp` (the protocol's checksum reply field).
+    pub checksum: f32,
+    /// Rack-level cycle/energy statistics (slowest shard + host link).
+    pub rack: RackStats,
+}
+
+/// Rack-sharded dot product: vectors are row-range-partitioned over the
+/// rack's shards, every shard broadcasts the same H and runs the full
+/// Fig. 8 program on its slice concurrently (the per-shard cycle count is
+/// row-count-independent, so each shard replays the identical program),
+/// and the host concatenates the per-shard outputs in plan order
+/// ([`merge_concat`]). The host link is charged one command message with
+/// the H payload plus one per-shard result readback (DESIGN.md
+/// §Sharding).
+pub fn dot_sharded(
+    rack: &PrinsRack,
+    x: &[f32],
+    n: usize,
+    dims: usize,
+    h: &[f32],
+) -> ShardedDotResult {
+    assert_eq!(x.len(), n * dims);
+    assert_eq!(h.len(), dims);
+    let plan = ShardPlan::rows(n, rack.n_shards());
+    let width = DotLayout::new(dims).width as usize;
+    let runs = rack.run_shards(&plan, |_s, r| {
+        let rows = r.len();
+        let xs = &x[r.start * dims..r.end * dims];
+        let mut array = rack.shard_array(rows, width);
+        let mut sm = StorageManager::new(array.total_rows());
+        let kern = DotKernel::load(&mut sm, &mut array, xs, rows, dims);
+        let mut ctl = Controller::new(array);
+        let res = kern.run(&mut ctl, &sm, h);
+        (res.dp, res.stats)
+    });
+    let (dps, stats): (Vec<_>, Vec<_>) = runs.into_iter().unzip();
+    let dp = merge_concat(&dps);
+    let checksum = dp.iter().sum();
+    let mut msgs = Vec::with_capacity(2 * plan.shards());
+    for rng in &plan.ranges {
+        msgs.push(CMD_BYTES + 4 * dims as u64); // command + H payload
+        msgs.push(4 * rng.len() as u64); // per-shard DP readback
+    }
+    ShardedDotResult {
+        dp,
+        checksum,
+        rack: rack.finish(stats, &msgs),
     }
 }
 

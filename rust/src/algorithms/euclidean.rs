@@ -9,25 +9,38 @@
 //! paper's headline property.
 
 use crate::controller::{Controller, ExecStats};
+use crate::host::rack::{PrinsRack, RackStats};
 use crate::isa::{Field, Program, RowLayout};
 use crate::micro::float::{bits_to_f32, unpacked_bits, FloatField, FpScratch, FP_SCRATCH_BITS};
 use crate::micro::{self};
+use crate::rcam::shard::{local_topk, merge_concat, merge_topk, ShardPlan, CMD_BYTES};
 use crate::rcam::PrinsArray;
 use crate::storage::{Dataset, StorageManager};
 
 /// Row layout: D attribute slots + center copy + work area.
 /// 33 bits per unpacked fp32; W must fit x, c, diff, acc + scratch.
 pub struct EuclideanLayout {
+    /// Attributes per sample.
     pub dims: usize,
+    /// The D stored attribute fields (unpacked fp32).
     pub x: Vec<FloatField>,
+    /// Broadcast slot for the current center coordinate.
     pub c: FloatField,
+    /// Difference work area (`x_j − c`).
     pub diff: FloatField,
+    /// Squared-difference work area.
     pub sq: FloatField,
+    /// Running squared-distance accumulator.
     pub acc: FloatField,
+    /// Operand copy used by the fp-sub swap step.
     pub ycopy: FloatField,
+    /// fp-add/sub scratch flags/fields.
     pub scratch: FpScratch,
+    /// Working exponent field of the fp alignment step.
     pub wexp: Field,
+    /// Base column of the fp-mul scratch area.
     pub mul_scratch: u16,
+    /// Total columns the layout occupies.
     pub width: u16,
 }
 
@@ -64,6 +77,7 @@ impl EuclideanLayout {
         }
     }
 
+    /// The storage-manager row layout for this kernel (≥ 256-bit rows).
     pub fn row_layout(&self) -> RowLayout {
         RowLayout::new(self.width.max(256))
     }
@@ -72,13 +86,17 @@ impl EuclideanLayout {
 /// Result of one ED run: per-sample squared distance to each center +
 /// execution stats.
 pub struct EdResult {
-    /// dists[center][sample]
+    /// dists\[center\]\[sample\]
     pub dists: Vec<Vec<f32>>,
+    /// Execution statistics of the run.
     pub stats: ExecStats,
 }
 
+/// Loaded ED dataset + per-center program generator.
 pub struct EuclideanKernel {
+    /// The row layout in use.
     pub layout: EuclideanLayout,
+    /// Number of loaded samples.
     pub n: usize,
     ds: Dataset,
 }
@@ -183,6 +201,86 @@ impl EuclideanKernel {
             dists,
             stats: ctl.stats(),
         }
+    }
+}
+
+/// Result of a rack-sharded Euclidean-distance run.
+pub struct ShardedEdResult {
+    /// `dists[center][sample]` in global row order, bit-identical to the
+    /// single-device run (order-preserving concatenation merge).
+    pub dists: Vec<Vec<f32>>,
+    /// Per center: the global `topk` nearest `(sample_row, distance)`
+    /// pairs, ascending — the host's k-way merge of per-shard top-k lists
+    /// ([`merge_topk`]).
+    pub nearest: Vec<Vec<(usize, f32)>>,
+    /// Row-order f32 sum over all centers' distances (the protocol's
+    /// checksum reply field).
+    pub checksum: f32,
+    /// Rack-level cycle/energy statistics (slowest shard + host link).
+    pub rack: RackStats,
+}
+
+/// Rack-sharded Euclidean distance: samples are row-range-partitioned
+/// over the rack's shards, every shard broadcasts the same centers and
+/// runs the full Fig. 7 program on its slice concurrently (per-shard
+/// cycles are row-count-independent, so each shard replays the identical
+/// program). The host concatenates per-shard distance vectors in plan
+/// order and k-way-merges per-shard top-`topk` lists into the global
+/// nearest set per center. The host link is charged one command message
+/// with the centers payload plus one per-shard distance readback
+/// (DESIGN.md §Sharding).
+pub fn euclidean_sharded(
+    rack: &PrinsRack,
+    x: &[f32],
+    n: usize,
+    dims: usize,
+    centers: &[f32],
+    k: usize,
+    topk: usize,
+) -> ShardedEdResult {
+    assert_eq!(x.len(), n * dims);
+    assert_eq!(centers.len(), k * dims);
+    let plan = ShardPlan::rows(n, rack.n_shards());
+    let width = EuclideanLayout::new(dims).width as usize;
+    let runs = rack.run_shards(&plan, |_s, r| {
+        let rows = r.len();
+        let xs = &x[r.start * dims..r.end * dims];
+        let mut array = rack.shard_array(rows, width);
+        let mut sm = StorageManager::new(array.total_rows());
+        let kern = EuclideanKernel::load(&mut sm, &mut array, xs, rows, dims);
+        let mut ctl = Controller::new(array);
+        let res = kern.run(&mut ctl, &sm, centers, k);
+        (res.dists, res.stats)
+    });
+    let (shard_dists, stats): (Vec<_>, Vec<_>) = runs.into_iter().unzip();
+    let mut dists = Vec::with_capacity(k);
+    let mut nearest = Vec::with_capacity(k);
+    for c in 0..k {
+        // borrow each shard's center-c vector; the only copy is the one
+        // concatenation into the merged global vector
+        let per_center: Vec<&[f32]> = shard_dists
+            .iter()
+            .map(|d: &Vec<Vec<f32>>| d[c].as_slice())
+            .collect();
+        let local: Vec<Vec<(usize, f32)>> = per_center
+            .iter()
+            .zip(&plan.ranges)
+            .map(|(d, rng)| local_topk(d, rng.start, topk))
+            .collect();
+        nearest.push(merge_topk(&local, topk));
+        dists.push(merge_concat(&per_center));
+    }
+    let checksum = dists.iter().flat_map(|d| d.iter()).sum();
+    let mut msgs = Vec::with_capacity(2 * plan.shards());
+    for rng in &plan.ranges {
+        msgs.push(CMD_BYTES + 4 * (k * dims) as u64); // command + centers
+        msgs.push(4 * (k * rng.len()) as u64); // per-shard distance readback
+    }
+    ShardedEdResult {
+        dists,
+        nearest,
+        checksum,
+        rack: rack.finish(stats, &msgs),
     }
 }
 

@@ -6,13 +6,18 @@
 //! operations per bin, independent of the number of samples.
 
 use crate::controller::{Controller, ExecStats};
+use crate::host::rack::{PrinsRack, RackStats};
 use crate::isa::{Field, Instr, Program, RowLayout};
+use crate::rcam::shard::{merge_histograms, ShardPlan, CMD_BYTES};
 use crate::rcam::PrinsArray;
 use crate::storage::{Dataset, StorageManager};
 
+/// Number of histogram bins (the paper's fixed 256-bin kernel).
 pub const BINS: usize = 256;
 
+/// Loaded histogram dataset + the per-bin compare/reduce program.
 pub struct HistogramKernel {
+    /// Number of loaded samples.
     pub n: usize,
     sample: Field,
     /// dataset-membership flag: unloaded (all-zero) rows of the array must
@@ -22,12 +27,17 @@ pub struct HistogramKernel {
     ds: Dataset,
 }
 
+/// Result of one histogram run.
 pub struct HistResult {
+    /// The 256 bin counts.
     pub hist: Vec<u64>,
+    /// Execution statistics of the run.
     pub stats: ExecStats,
 }
 
 impl HistogramKernel {
+    /// Allocate rows and load the samples (one sample per row, plus the
+    /// dataset-membership valid bit).
     pub fn load(sm: &mut StorageManager, array: &mut PrinsArray, x: &[u32]) -> Self {
         let mut layout = RowLayout::new(array.width() as u16);
         let sample = layout.alloc("sample", 32);
@@ -58,6 +68,7 @@ impl HistogramKernel {
         prog
     }
 
+    /// Execute the full 256-bin program and read the counts back.
     pub fn run(&self, ctl: &mut Controller) -> HistResult {
         ctl.begin_stats();
         let prog = self.program();
@@ -69,8 +80,46 @@ impl HistogramKernel {
         HistResult { hist, stats }
     }
 
+    /// The storage allocation backing this kernel's samples.
     pub fn dataset(&self) -> &Dataset {
         &self.ds
+    }
+}
+
+/// Result of a rack-sharded histogram run.
+pub struct ShardedHistResult {
+    /// Bin-wise-merged histogram, bit-identical to the single-device run.
+    pub hist: Vec<u64>,
+    /// Rack-level cycle/energy statistics (slowest shard + host link).
+    pub rack: RackStats,
+}
+
+/// Rack-sharded histogram: samples are row-range-partitioned over the
+/// rack's shards, every shard runs the full Fig. 9 per-bin program on its
+/// slice concurrently, and the host merges the per-shard histograms
+/// bin-wise ([`merge_histograms`] — exact, since counting is
+/// associative). The host link is charged one command message plus one
+/// 256-bin result message per shard (DESIGN.md §Sharding).
+pub fn histogram_sharded(rack: &PrinsRack, x: &[u32]) -> ShardedHistResult {
+    let plan = ShardPlan::rows(x.len(), rack.n_shards());
+    let runs = rack.run_shards(&plan, |_s, r| {
+        let xs = &x[r];
+        let mut array = rack.shard_array(xs.len(), 40);
+        let mut sm = StorageManager::new(array.total_rows());
+        let kern = HistogramKernel::load(&mut sm, &mut array, xs);
+        let mut ctl = Controller::new(array);
+        let res = kern.run(&mut ctl);
+        (res.hist, res.stats)
+    });
+    let (hists, stats): (Vec<_>, Vec<_>) = runs.into_iter().unzip();
+    let mut msgs = Vec::with_capacity(2 * plan.shards());
+    for _ in 0..plan.shards() {
+        msgs.push(CMD_BYTES); // kernel-invocation command
+        msgs.push((BINS * 8) as u64); // per-shard histogram readback
+    }
+    ShardedHistResult {
+        hist: merge_histograms(&hists),
+        rack: rack.finish(stats, &msgs),
     }
 }
 
@@ -112,6 +161,17 @@ mod tests {
         let res = kern.run(&mut ctl);
         let drain = ctl.array.reduction_latency_cycles();
         assert_eq!(res.stats.cycles, 2 * BINS as u64 + drain);
+    }
+
+    #[test]
+    fn sharded_histogram_merges_binwise() {
+        let xs = synth_hist_samples(3000, 23);
+        let rack = PrinsRack::new(3);
+        let res = histogram_sharded(&rack, &xs);
+        assert_eq!(res.hist, histogram_baseline(&xs));
+        assert_eq!(res.rack.shards, 3);
+        assert_eq!(res.rack.link_messages, 6);
+        assert!(res.rack.total_cycles > res.rack.max_shard_cycles);
     }
 
     #[test]

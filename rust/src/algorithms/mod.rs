@@ -1,6 +1,12 @@
 //! The paper's workload suite (§5.4): fully associative implementations of
 //! Euclidean distance, dot product, histogram, SpMV and BFS, each with a
 //! scalar CPU-baseline twin for cross-validation.
+//!
+//! Histogram, dot product, ED and SpMV additionally have `*_sharded`
+//! entry points that run the same kernel partitioned over a
+//! [`crate::host::rack::PrinsRack`] of shard devices with host-side
+//! merging; `tests/prop_sharded_equals_single.rs` asserts their results
+//! bit-identical to the single-device paths.
 
 pub mod bfs;
 pub mod dot;
@@ -9,7 +15,12 @@ pub mod histogram;
 pub mod spmv;
 
 pub use bfs::{measured_teps, paper_model_teps, BfsKernel, BfsResult};
-pub use dot::{dot_baseline, DotKernel};
-pub use euclidean::{euclidean_baseline, EuclideanKernel};
-pub use histogram::{histogram_baseline, HistogramKernel};
-pub use spmv::{spmv_baseline_quantized, ReduceEngine, SpmvKernel};
+pub use dot::{dot_baseline, dot_sharded, DotKernel, ShardedDotResult};
+pub use euclidean::{
+    euclidean_baseline, euclidean_sharded, EuclideanKernel, ShardedEdResult,
+};
+pub use histogram::{histogram_baseline, histogram_sharded, HistogramKernel, ShardedHistResult};
+pub use spmv::{
+    spmv_baseline_quantized, spmv_sharded, spmv_single, ReduceEngine, ShardedSpmvResult,
+    SpmvKernel,
+};

@@ -25,15 +25,21 @@
 //! two's-complement accumulator.
 
 use crate::controller::{Controller, ExecStats};
+use crate::host::rack::{PrinsRack, RackStats};
 use crate::isa::{Field, Instr, Program, RowLayout};
 use crate::micro;
-use crate::rcam::PrinsArray;
+use crate::rcam::shard::{ShardPlan, CMD_BYTES};
+use crate::rcam::{ExecBackend, PrinsArray};
 use crate::storage::{Dataset, StorageManager};
 use crate::workloads::Csr;
 
-pub const QFRAC: u32 = 14; // Q1.14 operands
-pub const PFRAC: u32 = 2 * QFRAC; // Q2.28 products
+/// Fraction bits of the Q1.14 operands.
+pub const QFRAC: u32 = 14;
+/// Fraction bits of the Q2.28 products.
+pub const PFRAC: u32 = 2 * QFRAC;
 
+/// Which of the two interchangeable per-row reduction engines runs
+/// phase 3 (see the module doc).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ReduceEngine {
     /// Segmented chain scan ([79]-style, all rows parallel).
@@ -49,6 +55,7 @@ pub fn quantize(v: f32) -> (bool, u64) {
     (clamped < 0.0, mag.min((1 << 15) - 1))
 }
 
+/// Convert a Q2.28 product accumulator back to f32.
 pub fn dequantize_product(acc: i64) -> f32 {
     acc as f32 / (1u64 << PFRAC) as f32
 }
@@ -58,25 +65,42 @@ pub fn dequantize_product(acc: i64) -> f32 {
 ///   | pmag(30) | prod(48 two's complement) | nb_rowid(24) | nb_prod(48)
 ///   | flags/carry (6)
 pub struct SpmvLayout {
+    /// Matrix-row index of this nonzero.
     pub rowid: Field,
+    /// Column index of this nonzero.
     pub colid: Field,
+    /// Sign bit of the matrix value (sign-magnitude Q1.14).
     pub a_sign: u16,
+    /// Magnitude of the matrix value.
     pub a_mag: Field,
+    /// Sign bit of the broadcast x value.
     pub b_sign: u16,
+    /// Magnitude of the broadcast x value.
     pub b_mag: Field,
+    /// Unsigned product magnitude (Q2.28).
     pub pmag: Field,
+    /// Signed product / running row sum (48-bit two's complement).
     pub prod: Field,
+    /// Chain-shifted neighbour rowid (reduction scan operand).
     pub nb_rowid: Field,
+    /// Chain-shifted neighbour product (reduction scan operand).
     pub nb_prod: Field,
+    /// Carry flag column of the adder microcode.
     pub carry: u16,
+    /// Product sign flag (`a_sign ⊕ b_sign`).
     pub psign: u16,
+    /// Staging flag of the conditional negate.
     pub tmp: u16,
+    /// Equality flag of the segmented-scan rowid compare.
     pub eq: u16,
+    /// Less-than flag of the rowid compare (unused side output).
     pub lt: u16,
+    /// Total columns the layout occupies.
     pub width: u16,
 }
 
 impl SpmvLayout {
+    /// Lay the fields out contiguously (≤ 256 bits, asserted by `check`).
     pub fn new() -> Self {
         let mut base = 0u16;
         let mut next = |w: u16| {
@@ -118,17 +142,27 @@ impl Default for SpmvLayout {
     }
 }
 
+/// Result of one SpMV run, with per-phase cycle accounting.
 pub struct SpmvResult {
+    /// `y = A·x`, dequantized, one entry per matrix row.
     pub y: Vec<f32>,
+    /// Execution statistics of the whole run.
     pub stats: ExecStats,
+    /// Cycles of phase 1 (x broadcast, 3 per vector element).
     pub broadcast_cycles: u64,
+    /// Cycles of phase 2 (all-rows fixed-point multiply).
     pub multiply_cycles: u64,
+    /// Cycles of phase 3 (per-row reduction).
     pub reduce_cycles: u64,
 }
 
+/// Loaded SpMV dataset (one CSR nonzero per row) + phase programs.
 pub struct SpmvKernel {
+    /// The row layout in use.
     pub layout: SpmvLayout,
+    /// Loaded nonzero count.
     pub nnz: usize,
+    /// Matrix dimension (rows of A, length of x and y).
     pub n: usize,
     max_row_nnz: usize,
     /// physical row of the first nonzero of each matrix row (readout)
@@ -137,6 +171,8 @@ pub struct SpmvKernel {
 }
 
 impl SpmvKernel {
+    /// Allocate rows and load every CSR nonzero as (rowid, colid,
+    /// quantized value).
     pub fn load(sm: &mut StorageManager, array: &mut PrinsArray, a: &Csr) -> Self {
         let layout = SpmvLayout::new();
         layout.check();
@@ -298,6 +334,67 @@ impl SpmvKernel {
             multiply_cycles: c2 - c1,
             reduce_cycles: c3 - c2,
         }
+    }
+}
+
+/// Single-device convenience driver: size an array for `a`'s nonzeros,
+/// load it, and run with the chain-scan reduce engine. The CLI and the
+/// TCP server both drive single-device SpMV through this, so their
+/// results cannot diverge.
+pub fn spmv_single(a: &Csr, x: &[f32], backend: ExecBackend) -> SpmvResult {
+    let mut array = PrinsArray::single(a.nnz(), 256).with_backend(backend);
+    let mut sm = StorageManager::new(a.nnz());
+    let kern = SpmvKernel::load(&mut sm, &mut array, a);
+    let mut ctl = Controller::new(array);
+    kern.run(&mut ctl, x, ReduceEngine::ChainTree)
+}
+
+/// Result of a rack-sharded SpMV run.
+pub struct ShardedSpmvResult {
+    /// `y = A·x` in global row order, bit-identical to the single-device
+    /// run (each matrix row lives entirely in one shard, so the merge is
+    /// an order-preserving scatter of per-shard row slices).
+    pub y: Vec<f32>,
+    /// Row-order f32 sum of `y` (the protocol's checksum reply field).
+    pub checksum: f32,
+    /// Rack-level cycle/energy statistics (slowest shard + host link).
+    pub rack: RackStats,
+}
+
+/// Rack-sharded SpMV: matrix rows are partitioned contiguously with
+/// nonzero-balanced cuts ([`ShardPlan::weighted`] over per-row nnz), so
+/// every shard stores a comparable number of CSR nonzeros and no matrix
+/// row is split across shards. Every shard broadcasts the full x vector
+/// (columns are not partitioned), multiplies its nonzeros in parallel,
+/// and chain-reduces locally; the host scatters per-shard y slices back
+/// into global row order. The host link is charged one command message
+/// with the x payload plus one per-shard y-slice readback (DESIGN.md
+/// §Sharding).
+pub fn spmv_sharded(rack: &PrinsRack, a: &Csr, x: &[f32]) -> ShardedSpmvResult {
+    assert_eq!(x.len(), a.n);
+    let plan = ShardPlan::weighted(&a.row_nnz(), rack.n_shards());
+    let runs = rack.run_shards(&plan, |_s, r| {
+        let sub = a.mask_rows(r.clone());
+        let mut array = rack.shard_array(sub.nnz(), 256);
+        let mut sm = StorageManager::new(array.total_rows());
+        let kern = SpmvKernel::load(&mut sm, &mut array, &sub);
+        let mut ctl = Controller::new(array);
+        let res = kern.run(&mut ctl, x, ReduceEngine::ChainTree);
+        (res.y[r].to_vec(), res.stats)
+    });
+    let (slices, stats): (Vec<_>, Vec<_>) = runs.into_iter().unzip();
+    let y = crate::rcam::shard::merge_concat(&slices);
+    debug_assert_eq!(y.len(), a.n);
+    let checksum = y.iter().sum();
+    let mut msgs = Vec::with_capacity(2 * plan.shards());
+    for rng in &plan.ranges {
+        msgs.push(CMD_BYTES + 4 * a.n as u64); // command + x payload
+        msgs.push(4 * rng.len() as u64); // per-shard y-slice readback
+    }
+    ShardedSpmvResult {
+        y,
+        checksum,
+        rack: rack.finish(stats, &msgs),
     }
 }
 

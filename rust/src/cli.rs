@@ -1,16 +1,24 @@
 //! `prins` command line: drive the PRINS system from a shell.
 //!
-//!   prins run <ed|dp|hist|spmv|bfs> [--n N] [--dims D] [--seed S] [--workers W]
+//!   prins run <ed|dp|hist|spmv|bfs> [--n N] [--dims D] [--seed S]
+//!             [--workers W] [--shards S]
 //!   prins validate            # PRINS vs golden XLA kernels (needs artifacts/)
 //!   prins serve [--bind ADDR] [--workers W] # TCP storage-appliance front-end
+//!                                           # (protocol: docs/PROTOCOL.md)
 //!   prins report <fig12|fig13|fig14|fig15|all> [--csv]
 //!   prins info                # device model + artifact inventory
+//!
+//! `--shards S` (2 ≤ S ≤ 64, same bound as the server's `RACK` verb)
+//! runs ed/dp/hist/spmv on a [`PrinsRack`] of S shard devices with
+//! cost-modeled host-side merging (DESIGN.md §Sharding) instead of one
+//! device.
 //!
 //! (Hand-rolled argument parsing; the vendored crate set has no clap.)
 
 use crate::controller::Controller;
+use crate::host::rack::{PrinsRack, RackStats};
 use crate::model::figures;
-use crate::rcam::{DeviceModel, ExecBackend, PrinsArray};
+use crate::rcam::{DeviceModel, ExecBackend, InterconnectModel, PrinsArray};
 use crate::storage::StorageManager;
 use crate::workloads::*;
 use crate::error::{bail, Result};
@@ -30,6 +38,8 @@ fn backend_flag(args: &[String]) -> ExecBackend {
     crate::metrics::bench::backend_from_args(args)
 }
 
+/// CLI entry point: parse argv and dispatch to the subcommands listed in
+/// the module doc (called by `src/main.rs`).
 pub fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     match args.first().map(|s| s.as_str()) {
@@ -40,11 +50,15 @@ pub fn main() -> Result<()> {
         Some("info") => info(),
         _ => {
             eprintln!("usage: prins <run|validate|serve|report|info> ...");
-            eprintln!("  run <ed|dp|hist|spmv|bfs> [--n N] [--dims D] [--seed S] [--workers W]");
+            eprintln!(
+                "  run <ed|dp|hist|spmv|bfs> [--n N] [--dims D] [--seed S] \
+                 [--workers W] [--shards S]"
+            );
             eprintln!("  validate");
             eprintln!("  serve [--bind ADDR] [--workers W]");
             eprintln!("  report <fig12|fig13|fig14|fig15|all> [--csv] [--workers W]");
             eprintln!("  (--workers: simulator threads; default = cores, 1 = serial)");
+            eprintln!("  (--shards: run ed/dp/hist/spmv on an S-device rack; default 1)");
             Ok(())
         }
     }
@@ -54,12 +68,33 @@ fn run(args: &[String]) -> Result<()> {
     let n = flag(args, "--n", 1024) as usize;
     let dims = flag(args, "--dims", 8) as usize;
     let seed = flag(args, "--seed", 1);
+    let shards = flag(args, "--shards", 1) as usize;
+    if !(1..=crate::rcam::shard::MAX_SHARDS).contains(&shards) {
+        bail!(
+            "--shards out of range (1..={})",
+            crate::rcam::shard::MAX_SHARDS
+        );
+    }
     let backend = backend_flag(args);
     let dev = DeviceModel::default();
+    let rack = || {
+        PrinsRack::with_config(
+            shards,
+            DeviceModel::default(),
+            backend,
+            InterconnectModel::default(),
+        )
+    };
     match args.first().map(|s| s.as_str()) {
         Some("ed") => {
             let x = synth_samples(n, dims, 4, seed);
             let c = synth_uniform(dims, seed + 1);
+            if shards > 1 {
+                let res = crate::algorithms::euclidean_sharded(&rack(), &x, n, dims, &c, 1, 5);
+                print_rack_stats("euclidean distance", &res.rack, &dev);
+                println!("nearest      : {:?}", res.nearest[0]);
+                return Ok(());
+            }
             let layout = crate::algorithms::euclidean::EuclideanLayout::new(dims);
             let mut array =
                 PrinsArray::single(n, layout.width as usize).with_backend(backend);
@@ -72,6 +107,12 @@ fn run(args: &[String]) -> Result<()> {
         Some("dp") => {
             let x = synth_samples(n, dims, 4, seed);
             let h = synth_uniform(dims, seed + 1);
+            if shards > 1 {
+                let res = crate::algorithms::dot_sharded(&rack(), &x, n, dims, &h);
+                print_rack_stats("dot product", &res.rack, &dev);
+                println!("checksum     : {:.4}", res.checksum);
+                return Ok(());
+            }
             let layout = crate::algorithms::dot::DotLayout::new(dims);
             let mut array =
                 PrinsArray::single(n, layout.width as usize).with_backend(backend);
@@ -83,6 +124,13 @@ fn run(args: &[String]) -> Result<()> {
         }
         Some("hist") => {
             let xs = synth_hist_samples(n, seed);
+            if shards > 1 {
+                let res = crate::algorithms::histogram_sharded(&rack(), &xs);
+                print_rack_stats("histogram (256 bins)", &res.rack, &dev);
+                let top = res.hist.iter().enumerate().max_by_key(|(_, &v)| v).unwrap().0;
+                println!("top bin      : {top} ({} samples)", res.hist[top]);
+                return Ok(());
+            }
             let mut array = PrinsArray::single(n, 40).with_backend(backend);
             let mut sm = StorageManager::new(n);
             let kern = crate::algorithms::HistogramKernel::load(&mut sm, &mut array, &xs);
@@ -91,15 +139,16 @@ fn run(args: &[String]) -> Result<()> {
             print_stats("histogram (256 bins)", &res.stats, &dev, 2.0 * n as f64);
         }
         Some("spmv") => {
-            use crate::algorithms::spmv::{ReduceEngine, SpmvKernel};
             let a = synth_csr(n, n * 8, seed);
             let mut rng = Rng::seed_from(seed + 1);
             let x: Vec<f32> = (0..n).map(|_| rng.f32_range(-1.0, 1.0)).collect();
-            let mut array = PrinsArray::single(a.nnz(), 256).with_backend(backend);
-            let mut sm = StorageManager::new(a.nnz());
-            let kern = SpmvKernel::load(&mut sm, &mut array, &a);
-            let mut ctl = Controller::new(array);
-            let res = kern.run(&mut ctl, &x, ReduceEngine::ChainTree);
+            if shards > 1 {
+                let res = crate::algorithms::spmv_sharded(&rack(), &a, &x);
+                print_rack_stats("spmv", &res.rack, &dev);
+                println!("checksum     : {:.4}", res.checksum);
+                return Ok(());
+            }
+            let res = crate::algorithms::spmv_single(&a, &x, backend);
             println!(
                 "phases: broadcast {} + multiply {} + reduce {} cycles",
                 res.broadcast_cycles, res.multiply_cycles, res.reduce_cycles
@@ -107,6 +156,9 @@ fn run(args: &[String]) -> Result<()> {
             print_stats("spmv", &res.stats, &dev, 2.0 * a.nnz() as f64);
         }
         Some("bfs") => {
+            if shards > 1 {
+                bail!("bfs has no sharded variant yet (the frontier is global state)");
+            }
             let g = synth_power_law(n, (dims as f64).max(2.0), 2.5, seed);
             let mut array = PrinsArray::single(g.edges(), 128).with_backend(backend);
             let mut sm = StorageManager::new(g.edges());
@@ -124,6 +176,32 @@ fn run(args: &[String]) -> Result<()> {
         other => bail!("unknown kernel {other:?}"),
     }
     Ok(())
+}
+
+/// Print rack-level stats for a sharded `run` (`--shards S`): the
+/// slowest-shard critical path, the host-link charge, and the merged
+/// totals (DESIGN.md §Sharding accounting).
+fn print_rack_stats(name: &str, rs: &RackStats, dev: &DeviceModel) {
+    println!("kernel       : {name} [rack of {} shards]", rs.shards);
+    println!(
+        "shard cycles : max {} (per shard {:?})",
+        rs.max_shard_cycles,
+        rs.shard_cycles()
+    );
+    println!(
+        "host link    : {} msgs, {} bytes, {} cycles",
+        rs.link_messages, rs.link_bytes, rs.link_cycles
+    );
+    println!(
+        "total cycles : {} ({})",
+        rs.total_cycles,
+        crate::metrics::table::fmt_si(rs.runtime_s(dev), "s")
+    );
+    println!(
+        "energy       : {} (link {})",
+        crate::metrics::table::fmt_si(rs.energy_j, "J"),
+        crate::metrics::table::fmt_si(rs.link_energy_j, "J")
+    );
 }
 
 fn print_stats(name: &str, stats: &crate::controller::ExecStats, dev: &DeviceModel, flops: f64) {
@@ -183,7 +261,10 @@ fn serve(args: &[String]) -> Result<()> {
     let server = crate::host::server::Server::spawn_with(&bind, backend)?;
     println!("prins storage appliance listening on {}", server.addr);
     println!("simulator backend: {backend:?}");
-    println!("protocol: PING | HIST n seed | DP n dims seed | ED n dims k seed | QUIT");
+    println!(
+        "protocol: PING | RACK [n] | HIST n seed | DP n dims seed | \
+         ED n dims k seed | SPMV n nnz seed | QUIT  (spec: docs/PROTOCOL.md)"
+    );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }

@@ -1,17 +1,25 @@
 //! Kernel registry (paper §5.3: the host triggers a kernel by ID; the
 //! controller holds the kernel's associative primitive sequence).
 
+/// Kernel identifier the host writes into the kernel-ID register to
+/// trigger execution (paper §5.3).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 #[repr(u64)]
 pub enum KernelId {
+    /// Fully associative Euclidean distance (Algorithm 1, Fig. 7).
     EuclideanDistance = 1,
+    /// Fully associative dot product (Algorithm 2, Fig. 8).
     DotProduct = 2,
+    /// 256-bin associative histogram (Algorithm 3, Fig. 9).
     Histogram = 3,
+    /// Sparse matrix-vector multiply (Algorithm 4, Fig. 10).
     Spmv = 4,
+    /// Breadth-first search (Algorithm 5, Fig. 11).
     Bfs = 5,
 }
 
 impl KernelId {
+    /// Decode a kernel-ID register value; `None` for unknown ids.
     pub fn from_u64(v: u64) -> Option<KernelId> {
         Some(match v {
             1 => KernelId::EuclideanDistance,
@@ -23,6 +31,7 @@ impl KernelId {
         })
     }
 
+    /// Stable lower-case name (artifact manifest / reporting key).
     pub fn name(&self) -> &'static str {
         match self {
             KernelId::EuclideanDistance => "euclidean_distance",
@@ -33,6 +42,7 @@ impl KernelId {
         }
     }
 
+    /// Every kernel, in id order.
     pub fn all() -> [KernelId; 5] {
         [
             KernelId::EuclideanDistance,

@@ -12,21 +12,28 @@ use crate::rcam::{DeviceModel, EnergyLedger, PrinsArray};
 /// Execution statistics for one program/kernel invocation.
 #[derive(Clone, Debug, Default)]
 pub struct ExecStats {
+    /// Modeled device cycles elapsed in the stats window.
     pub cycles: u64,
+    /// Instructions executed (compare + write + read + reduce + tag ops).
     pub instructions: u64,
+    /// Compare+write microcode passes (equals the compare count).
     pub passes: u64,
+    /// Energy-event counters accumulated in the window.
     pub ledger: EnergyLedger,
 }
 
 impl ExecStats {
+    /// Wall-clock seconds under `dev`'s clock.
     pub fn runtime_s(&self, dev: &DeviceModel) -> f64 {
         dev.cycles_to_seconds(self.cycles)
     }
 
+    /// Total energy \[J\]: dynamic events + controller static power.
     pub fn energy_j(&self, dev: &DeviceModel) -> f64 {
         self.ledger.total_energy_j(dev, self.cycles)
     }
 
+    /// Average power \[W\] over the window.
     pub fn avg_power_w(&self, dev: &DeviceModel) -> f64 {
         self.ledger.avg_power_w(dev, self.cycles)
     }
@@ -40,16 +47,20 @@ impl ExecStats {
 /// pushes `u64::MAX` as a sentinel (hardware would raise an exception
 /// status; see `host::registers`).
 pub struct Controller {
+    /// The daisy-chained RCAM array this controller drives.
     pub array: PrinsArray,
+    /// Data buffer: reduction/read/if_match results in program order.
     pub buffer: Vec<u64>,
     /// Cycle/ledger snapshot at the last `begin_stats` call.
     stats_cycles0: u64,
     stats_ledger0: EnergyLedger,
 }
 
+/// Sentinel pushed by a `read` that found no tagged row.
 pub const READ_NO_MATCH: u64 = u64::MAX;
 
 impl Controller {
+    /// A controller owning `array`, with an empty data buffer.
     pub fn new(array: PrinsArray) -> Self {
         let l0 = array.ledger();
         let c0 = array.cycles;
@@ -61,6 +72,7 @@ impl Controller {
         }
     }
 
+    /// The array's device model (timing/energy constants).
     pub fn device(&self) -> &DeviceModel {
         &self.array.device
     }
@@ -174,6 +186,7 @@ impl Controller {
         }
     }
 
+    /// Drop all buffered results.
     pub fn clear_buffer(&mut self) {
         self.buffer.clear();
     }

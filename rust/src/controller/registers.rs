@@ -8,16 +8,23 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
+/// Device execution status as read from the status register.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 #[repr(u64)]
 pub enum Status {
+    /// No kernel triggered yet.
     Idle = 0,
+    /// A kernel is executing; storage is not host-accessible.
     Running = 1,
+    /// The last kernel completed successfully.
     Done = 2,
+    /// The last kernel failed (see the error-code register).
     Error = 3,
 }
 
 impl Status {
+    /// Decode a raw status-register value (unknown values read as
+    /// [`Status::Error`]).
     pub fn from_u64(v: u64) -> Status {
         match v {
             0 => Status::Idle,
@@ -28,7 +35,9 @@ impl Status {
     }
 }
 
+/// Number of host-writable parameter registers.
 pub const N_PARAMS: usize = 16;
+/// Number of device-writable result registers.
 pub const N_RESULTS: usize = 8;
 
 /// The register file. All fields are atomics: the host side polls while
@@ -36,10 +45,15 @@ pub const N_RESULTS: usize = 8;
 /// register read by the host does not intervene in PRINS operation").
 #[derive(Debug, Default)]
 pub struct RegisterFile {
+    /// Kernel to execute ([`crate::controller::kernels::KernelId`]).
     pub kernel_id: AtomicU64,
+    /// Kernel parameters, host-written before trigger.
     pub params: [AtomicU64; N_PARAMS],
+    /// Execution status ([`Status`]), device-written.
     pub status: AtomicU64,
+    /// Scalar results, device-written before completion.
     pub results: [AtomicU64; N_RESULTS],
+    /// Error code of the last failed kernel (0 on success).
     pub error_code: AtomicU64,
     /// monotonically increasing completion counter (lets the host detect
     /// back-to-back completions of the same kernel id)
@@ -47,25 +61,30 @@ pub struct RegisterFile {
 }
 
 impl RegisterFile {
+    /// A register file with everything zeroed ([`Status::Idle`]).
     pub fn new() -> Self {
         Self::default()
     }
 
     // --- host side ---
 
+    /// Host: write parameter register `i`.
     pub fn write_param(&self, i: usize, v: u64) {
         self.params[i].store(v, Ordering::Release);
     }
 
+    /// Host: set the kernel id and flip status to Running.
     pub fn trigger(&self, kernel_id: u64) {
         self.kernel_id.store(kernel_id, Ordering::Release);
         self.status.store(Status::Running as u64, Ordering::Release);
     }
 
+    /// Host: read the status register (non-intrusive).
     pub fn poll_status(&self) -> Status {
         Status::from_u64(self.status.load(Ordering::Acquire))
     }
 
+    /// Host: read result register `i` after completion.
     pub fn read_result(&self, i: usize) -> u64 {
         self.results[i].load(Ordering::Acquire)
     }
@@ -86,18 +105,23 @@ impl RegisterFile {
 
     // --- device side ---
 
+    /// Device: read parameter register `i`.
     pub fn read_param(&self, i: usize) -> u64 {
         self.params[i].load(Ordering::Acquire)
     }
 
+    /// Device: read the triggered kernel id.
     pub fn kernel(&self) -> u64 {
         self.kernel_id.load(Ordering::Acquire)
     }
 
+    /// Device: write result register `i`.
     pub fn write_result(&self, i: usize, v: u64) {
         self.results[i].store(v, Ordering::Release);
     }
 
+    /// Device: publish completion — error code, completion counter, then
+    /// the final status (Done/Error), in that order.
     pub fn complete(&self, ok: bool, error_code: u64) {
         self.error_code.store(error_code, Ordering::Release);
         self.completions.fetch_add(1, Ordering::AcqRel);

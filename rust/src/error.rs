@@ -23,6 +23,7 @@ pub struct Error {
 }
 
 impl Error {
+    /// An error from a plain message (the `anyhow::Error::msg` twin).
     pub fn msg(m: impl Into<String>) -> Self {
         Error { msg: m.into() }
     }
@@ -43,6 +44,7 @@ impl fmt::Display for Error {
 
 impl std::error::Error for Error {}
 
+/// Crate-wide result alias with [`Error`] as the default error type.
 pub type Result<T, E = Error> = std::result::Result<T, E>;
 
 macro_rules! from_display {
@@ -102,7 +104,9 @@ pub use crate::{bail, ensure, err};
 
 /// Attach context to failures, mirroring `anyhow::Context`.
 pub trait Context<T> {
+    /// Wrap the failure with a fixed context message.
     fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    /// Wrap the failure with a lazily-built context message.
     fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
 }
 

@@ -11,8 +11,12 @@
 //!
 //! `server` exposes the same protocol over a TCP socket (std::net +
 //! threads; the vendored crate set has no tokio) so external processes
-//! can drive PRINS like a storage appliance.
+//! can drive PRINS like a storage appliance; the wire protocol is
+//! specified in `docs/PROTOCOL.md`. `rack` scales the host view out to a
+//! multi-device shard rack with cost-modeled host-side merging
+//! (DESIGN.md §Sharding).
 
+pub mod rack;
 pub mod server;
 
 use crate::algorithms::{DotKernel, EuclideanKernel, HistogramKernel};
@@ -41,14 +45,22 @@ enum Request {
 /// paper's host reads outputs from PRINS storage — modeled as this buffer).
 #[derive(Default)]
 pub struct OutputBuffer {
+    /// Float results (distances, dot products), kernel-specific order.
     pub f32s: Vec<f32>,
+    /// Integer results (histogram bins, counts).
     pub u64s: Vec<u64>,
+    /// Modeled device cycles of the kernel execution.
     pub cycles: u64,
+    /// Modeled energy \[J\] of the kernel execution.
     pub energy_j: f64,
 }
 
+/// One PRINS device as the host sees it: register file, output buffer,
+/// and a worker thread playing the on-device controller.
 pub struct PrinsDevice {
+    /// The memory-mapped register file (host/device handshake).
     pub regs: Arc<RegisterFile>,
+    /// Results readable after a kernel reports Done.
     pub outputs: Arc<Mutex<OutputBuffer>>,
     tx: mpsc::Sender<Request>,
     worker: Option<std::thread::JoinHandle<()>>,
@@ -67,6 +79,8 @@ impl PrinsDevice {
         Self::with_device_model(rows, width, DeviceModel::default())
     }
 
+    /// [`PrinsDevice::new`] with an explicit device model (serial
+    /// simulator backend).
     pub fn with_device_model(rows: usize, width: usize, dm: DeviceModel) -> Self {
         Self::with_config(rows, width, dm, ExecBackend::Serial)
     }
@@ -169,6 +183,7 @@ impl PrinsDevice {
 
     // ----- host-side dataset loading (device must be idle) --------------
 
+    /// Load `n` × `dims` samples for the ED kernel (device must be idle).
     pub fn load_samples_for_euclidean(&self, x: &[f32], n: usize, dims: usize) {
         let mut st = self.state.lock().unwrap();
         let st = &mut *st;
@@ -179,6 +194,7 @@ impl PrinsDevice {
         };
     }
 
+    /// Load `n` × `dims` vectors for the DP kernel (device must be idle).
     pub fn load_vectors_for_dot(&self, x: &[f32], n: usize, dims: usize) {
         let mut st = self.state.lock().unwrap();
         let st = &mut *st;
@@ -186,6 +202,7 @@ impl PrinsDevice {
         st.resident = Resident::Dot { kern };
     }
 
+    /// Load u32 samples for the histogram kernel (device must be idle).
     pub fn load_samples_for_histogram(&self, x: &[u32]) {
         let mut st = self.state.lock().unwrap();
         let st = &mut *st;

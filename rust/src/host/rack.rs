@@ -1,0 +1,277 @@
+//! Multi-device PRINS rack (DESIGN.md §Sharding): N shard devices driven
+//! concurrently, with host-side result merging under an explicit
+//! interconnect cost model.
+//!
+//! The paper's scaling claim — compute capacity grows with storage size
+//! because every RCAM array is a processor — only materializes as a rack
+//! of SSD-resident devices. [`PrinsRack`] is the host's view of such a
+//! rack: it owns the shared shard configuration (device model, simulator
+//! backend, [`InterconnectModel`]), executes one closure per shard
+//! concurrently ([`PrinsRack::run_shards`], one OS thread per shard, each
+//! shard free to use the PR-2 threaded array backend underneath), and
+//! folds per-shard [`ExecStats`] plus host-link message sizes into a
+//! [`RackStats`] whose cycle/energy figures stay methodologically honest:
+//!
+//!   * rack kernel time = the **slowest shard** (shards run in parallel)
+//!     plus **serialized host-link transfers** (one shared link);
+//!   * rack energy = Σ per-shard device energy (each shard has its own
+//!     controller) plus per-byte link energy.
+//!
+//! The per-workload sharded entry points (`histogram_sharded`,
+//! `dot_sharded`, `euclidean_sharded`, `spmv_sharded`) live in
+//! [`crate::algorithms`] next to their single-device twins and are
+//! asserted bit-identical to them by `tests/prop_sharded_equals_single`.
+
+use crate::controller::ExecStats;
+use crate::rcam::shard::ShardPlan;
+use crate::rcam::{DeviceModel, ExecBackend, InterconnectModel, PrinsArray};
+use std::ops::Range;
+
+/// Host view of a rack of PRINS shard devices: shared configuration plus
+/// the concurrent shard executor and the stats-merging rules.
+#[derive(Clone, Debug)]
+pub struct PrinsRack {
+    shards: usize,
+    device: DeviceModel,
+    backend: ExecBackend,
+    /// Host-link cost model applied to every command/result message.
+    pub interconnect: InterconnectModel,
+}
+
+impl PrinsRack {
+    /// A rack of `shards` devices with the default device model, serial
+    /// simulator backend, and default interconnect.
+    pub fn new(shards: usize) -> Self {
+        Self::with_config(
+            shards,
+            DeviceModel::default(),
+            ExecBackend::Serial,
+            InterconnectModel::default(),
+        )
+    }
+
+    /// Full configuration. `shards` is clamped to ≥ 1; every shard shares
+    /// one device model and simulator backend (the backend only sets how
+    /// fast the simulation runs — results and modeled stats are
+    /// backend-invariant, as asserted by the PR-2 equivalence suites).
+    pub fn with_config(
+        shards: usize,
+        device: DeviceModel,
+        backend: ExecBackend,
+        interconnect: InterconnectModel,
+    ) -> Self {
+        PrinsRack {
+            shards: shards.max(1),
+            device,
+            backend,
+            interconnect,
+        }
+    }
+
+    /// Number of shard devices in the rack.
+    pub fn n_shards(&self) -> usize {
+        self.shards
+    }
+
+    /// The shared per-shard device model.
+    pub fn device(&self) -> &DeviceModel {
+        &self.device
+    }
+
+    /// The shared simulator execution backend.
+    pub fn backend(&self) -> ExecBackend {
+        self.backend
+    }
+
+    /// Build one shard's array: a single-module device with this rack's
+    /// device model and backend. `rows` is clamped to ≥ 1 so empty shards
+    /// (more shards than rows) still construct.
+    pub fn shard_array(&self, rows: usize, width: usize) -> PrinsArray {
+        PrinsArray::with_device(1, rows.max(1), width, self.device.clone())
+            .with_backend(self.backend)
+    }
+
+    /// Execute `f(shard_index, row_range)` for every shard of `plan`
+    /// concurrently (one scoped OS thread per shard) and return the
+    /// results in shard order. With one shard the closure runs inline.
+    ///
+    /// Each closure typically builds a shard-local array + storage
+    /// manager, loads its row slice, runs the kernel, and returns
+    /// `(result, ExecStats)`; shard-local arrays may themselves use the
+    /// threaded execution backend — concurrent dispatchers share the
+    /// process-wide worker pools safely.
+    pub fn run_shards<R, F>(&self, plan: &ShardPlan, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize, Range<usize>) -> R + Sync,
+    {
+        if plan.shards() <= 1 {
+            return plan
+                .ranges
+                .iter()
+                .cloned()
+                .enumerate()
+                .map(|(i, r)| f(i, r))
+                .collect();
+        }
+        std::thread::scope(|s| {
+            let f = &f;
+            let handles: Vec<_> = plan
+                .ranges
+                .iter()
+                .cloned()
+                .enumerate()
+                .map(|(i, r)| s.spawn(move || f(i, r)))
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("rack shard worker panicked"))
+                .collect()
+        })
+    }
+
+    /// Fold per-shard execution stats and the host-link message sizes
+    /// (bytes per message, commands and results alike) into rack-level
+    /// totals. See [`RackStats`] for the accounting rules.
+    pub fn finish(&self, shard_stats: Vec<ExecStats>, messages: &[u64]) -> RackStats {
+        let max_shard_cycles = shard_stats.iter().map(|s| s.cycles).max().unwrap_or(0);
+        let link_bytes: u64 = messages.iter().sum();
+        let link_cycles = self.interconnect.link_cycles(messages, &self.device);
+        let device_energy_j: f64 = shard_stats.iter().map(|s| s.energy_j(&self.device)).sum();
+        let link_energy_j = self.interconnect.energy_j(link_bytes);
+        RackStats {
+            shards: shard_stats.len(),
+            max_shard_cycles,
+            link_messages: messages.len() as u64,
+            link_bytes,
+            link_cycles,
+            total_cycles: max_shard_cycles + link_cycles,
+            device_energy_j,
+            link_energy_j,
+            energy_j: device_energy_j + link_energy_j,
+            shard_stats,
+        }
+    }
+}
+
+/// Rack-level execution statistics: per-shard stats plus the merged
+/// cycle/energy figures under the rack's [`InterconnectModel`].
+///
+/// Accounting rules (DESIGN.md §Sharding):
+/// `total_cycles = max(shard cycles) + Σ link transfer cycles` — shards
+/// execute in parallel, host-link messages serialize on the shared link;
+/// `energy_j = Σ shard energy + link bytes × E/byte` — every shard runs
+/// its own controller, so static controller energy scales with shard
+/// count (deliberately: that is the real cost of a rack).
+#[derive(Clone, Debug)]
+pub struct RackStats {
+    /// Number of shard devices that executed.
+    pub shards: usize,
+    /// Slowest shard's kernel cycles (the rack-parallel critical path).
+    pub max_shard_cycles: u64,
+    /// Host-link messages charged (commands + result readbacks).
+    pub link_messages: u64,
+    /// Total bytes moved over the host link.
+    pub link_bytes: u64,
+    /// Link transfer cycles (serialized on the shared host link).
+    pub link_cycles: u64,
+    /// `max_shard_cycles + link_cycles` — the rack-level kernel latency.
+    pub total_cycles: u64,
+    /// Σ per-shard device energy \[J\] (dynamic + per-shard controller
+    /// static power over each shard's own cycles).
+    pub device_energy_j: f64,
+    /// Host-link energy \[J\] (`link_bytes × e_per_byte`).
+    pub link_energy_j: f64,
+    /// `device_energy_j + link_energy_j`.
+    pub energy_j: f64,
+    /// The per-shard execution stats, in shard order.
+    pub shard_stats: Vec<ExecStats>,
+}
+
+impl RackStats {
+    /// Rack kernel latency in seconds under `dev`'s clock.
+    pub fn runtime_s(&self, dev: &DeviceModel) -> f64 {
+        dev.cycles_to_seconds(self.total_cycles)
+    }
+
+    /// Per-shard cycle counts, in shard order.
+    pub fn shard_cycles(&self) -> Vec<u64> {
+        self.shard_stats.iter().map(|s| s.cycles).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rcam::EnergyLedger;
+
+    fn stats(cycles: u64) -> ExecStats {
+        ExecStats {
+            cycles,
+            instructions: 0,
+            passes: 0,
+            ledger: EnergyLedger::default(),
+        }
+    }
+
+    #[test]
+    fn run_shards_preserves_shard_order() {
+        let rack = PrinsRack::new(4);
+        let plan = ShardPlan::rows(10, 4);
+        let out = rack.run_shards(&plan, |i, r| (i, r.start, r.len()));
+        assert_eq!(out.len(), 4);
+        for (i, (s, _start, _len)) in out.iter().enumerate() {
+            assert_eq!(i, *s);
+        }
+        // ranges arrive exactly as planned
+        for (o, r) in out.iter().zip(&plan.ranges) {
+            assert_eq!((o.1, o.2), (r.start, r.len()));
+        }
+    }
+
+    #[test]
+    fn run_shards_runs_concurrently() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        // every shard waits until all shards have started: only possible
+        // if they genuinely run in parallel
+        let rack = PrinsRack::new(3);
+        let started = AtomicUsize::new(0);
+        let plan = ShardPlan::rows(3, 3);
+        rack.run_shards(&plan, |_i, _r| {
+            started.fetch_add(1, Ordering::SeqCst);
+            while started.load(Ordering::SeqCst) < 3 {
+                std::thread::yield_now();
+            }
+        });
+        assert_eq!(started.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn finish_merges_cycles_and_link_costs() {
+        let rack = PrinsRack::new(2);
+        let rs = rack.finish(vec![stats(100), stats(250)], &[64, 2048]);
+        assert_eq!(rs.shards, 2);
+        assert_eq!(rs.max_shard_cycles, 250);
+        assert_eq!(rs.link_messages, 2);
+        assert_eq!(rs.link_bytes, 64 + 2048);
+        // default interconnect: ≥ 1000 cycles latency per message
+        assert!(rs.link_cycles >= 2000, "{}", rs.link_cycles);
+        assert_eq!(rs.total_cycles, rs.max_shard_cycles + rs.link_cycles);
+        assert!(rs.link_energy_j > 0.0);
+        assert!((rs.energy_j - rs.device_energy_j - rs.link_energy_j).abs() < 1e-18);
+        assert_eq!(rs.shard_cycles(), vec![100, 250]);
+    }
+
+    #[test]
+    fn free_interconnect_reduces_to_slowest_shard() {
+        let rack = PrinsRack::with_config(
+            2,
+            DeviceModel::default(),
+            ExecBackend::Serial,
+            InterconnectModel::free(),
+        );
+        let rs = rack.finish(vec![stats(70), stats(30)], &[4096, 4096]);
+        assert_eq!(rs.total_cycles, 70);
+        assert_eq!(rs.link_energy_j, 0.0);
+    }
+}

@@ -2,21 +2,30 @@
 //! external processes (or `prins serve` + netcat) can drive the device
 //! like a network-attached storage appliance.
 //!
-//! Protocol (one request per line, one reply line):
-//!   PING                      -> PONG
-//!   HIST <n> <seed>           -> OK cycles=<c> energy_pj=<e> top_bin=<b> total=<n>
-//!   DP <n> <dims> <seed>      -> OK cycles=<c> energy_pj=<e> checksum=<s>
-//!   ED <n> <dims> <k> <seed>  -> OK cycles=<c> energy_pj=<e> checksum=<s>
-//!   QUIT                      -> BYE (closes connection)
+//! The full wire protocol — every verb (including the `RACK` sharding
+//! forms), the reply grammar, error replies, and worked netcat sessions —
+//! is specified in `docs/PROTOCOL.md`; keep that file authoritative.
+//! Summary:
+//!
+//!   PING | RACK \[n\] | HIST | DP | ED | SPMV | QUIT
+//!
+//! Kernel verbs run on a single device by default; after `RACK <n>` the
+//! same verbs execute sharded over an `n`-device [`PrinsRack`] (a
+//! per-connection session setting) and replies gain `shards=`/`link_bytes=`
+//! fields.
 //!
 //! (std::net + a thread per connection; the vendored crate set has no
 //! tokio — documented in Cargo.toml.)
 
+use super::rack::{PrinsRack, RackStats};
 use super::PrinsDevice;
+use crate::algorithms::{
+    dot_sharded, euclidean_sharded, histogram_sharded, spmv_sharded, spmv_single,
+};
 use crate::controller::kernels::KernelId;
 use crate::controller::registers::Status;
-use crate::rcam::{DeviceModel, ExecBackend};
-use crate::workloads::{synth_hist_samples, synth_samples, synth_uniform};
+use crate::rcam::{DeviceModel, ExecBackend, InterconnectModel};
+use crate::workloads::{synth_csr, synth_hist_samples, synth_samples, synth_uniform, Rng};
 use crate::error::{bail, ensure, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -34,7 +43,9 @@ const READ_POLL: Duration = Duration::from_millis(50);
 /// `write` forever (which would make `shutdown()` hang on the join).
 const WRITE_TIMEOUT: Duration = Duration::from_secs(5);
 
+/// A running TCP front-end: acceptor thread + one worker per connection.
 pub struct Server {
+    /// The resolved listen address (useful with ephemeral-port binds).
     pub addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
     handle: Option<std::thread::JoinHandle<()>>,
@@ -128,10 +139,24 @@ impl Drop for Server {
     }
 }
 
+/// Per-connection protocol state: the shard count selected by `RACK <n>`
+/// (1 = single-device, the default; see `docs/PROTOCOL.md` §Sessions).
+#[derive(Clone, Copy, Debug)]
+struct Session {
+    shards: usize,
+}
+
+impl Default for Session {
+    fn default() -> Self {
+        Session { shards: 1 }
+    }
+}
+
 fn handle_conn(stream: TcpStream, stop: Arc<AtomicBool>, backend: ExecBackend) -> Result<()> {
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut out = stream;
     let mut buf: Vec<u8> = Vec::new();
+    let mut sess = Session::default();
     loop {
         buf.clear();
         // Accumulate one raw line; the read timeout doubles as the
@@ -158,7 +183,7 @@ fn handle_conn(stream: TcpStream, stop: Arc<AtomicBool>, backend: ExecBackend) -
             return Ok(()); // client closed
         }
         let line = String::from_utf8_lossy(&buf);
-        let reply = match dispatch(line.trim(), backend) {
+        let reply = match dispatch(line.trim(), backend, &mut sess) {
             Ok(Some(r)) => r,
             Ok(None) => {
                 writeln!(out, "BYE")?;
@@ -173,15 +198,59 @@ fn handle_conn(stream: TcpStream, stop: Arc<AtomicBool>, backend: ExecBackend) -
     }
 }
 
-fn dispatch(line: &str, backend: ExecBackend) -> Result<Option<String>> {
+/// The rack a session's sharded verbs execute on: session shard count,
+/// default device model + interconnect, the server's simulator backend.
+fn rack_for(sess: &Session, backend: ExecBackend) -> PrinsRack {
+    PrinsRack::with_config(
+        sess.shards,
+        DeviceModel::default(),
+        backend,
+        InterconnectModel::default(),
+    )
+}
+
+/// Shared grammar of every sharded kernel reply (docs/PROTOCOL.md): rack
+/// cycle/energy figures, then the verb-specific fields, then the rack
+/// session fields — one place to change if the reply format evolves.
+fn rack_ok(rs: &RackStats, fields: &str) -> String {
+    format!(
+        "OK cycles={} energy_pj={:.1} {fields} shards={} link_bytes={}",
+        rs.total_cycles,
+        rs.energy_j * 1e12,
+        rs.shards,
+        rs.link_bytes
+    )
+}
+
+fn dispatch(line: &str, backend: ExecBackend, sess: &mut Session) -> Result<Option<String>> {
     let parts: Vec<&str> = line.split_whitespace().collect();
     match parts.as_slice() {
         ["PING"] => Ok(Some("PONG".into())),
         ["QUIT"] => Ok(None),
+        ["RACK"] => Ok(Some(format!("OK shards={}", sess.shards))),
+        ["RACK", n] => {
+            let n: usize = n.parse()?;
+            ensure!(
+                (1..=crate::rcam::shard::MAX_SHARDS).contains(&n),
+                "shards out of range (1..={})",
+                crate::rcam::shard::MAX_SHARDS
+            );
+            sess.shards = n;
+            Ok(Some(format!("OK shards={n}")))
+        }
         ["HIST", n, seed] => {
             let (n, seed): (usize, u64) = (n.parse()?, seed.parse()?);
             ensure!(n > 0 && n <= 1 << 20, "n out of range");
             let xs = synth_hist_samples(n, seed);
+            if sess.shards > 1 {
+                let res = histogram_sharded(&rack_for(sess, backend), &xs);
+                let top = res.hist.iter().enumerate().max_by_key(|(_, &v)| v).unwrap().0;
+                let total: u64 = res.hist.iter().sum();
+                return Ok(Some(rack_ok(
+                    &res.rack,
+                    &format!("top_bin={top} total={total}"),
+                )));
+            }
             let dev = PrinsDevice::with_config(n, 64, DeviceModel::default(), backend);
             dev.load_samples_for_histogram(&xs);
             if dev.run_kernel(KernelId::Histogram, &[], &[]) != Status::Done {
@@ -207,6 +276,13 @@ fn dispatch(line: &str, backend: ExecBackend) -> Result<Option<String>> {
             );
             let x = synth_samples(n, dims, 4, seed);
             let h = synth_uniform(dims, seed + 1);
+            if sess.shards > 1 {
+                let res = dot_sharded(&rack_for(sess, backend), &x, n, dims, &h);
+                return Ok(Some(rack_ok(
+                    &res.rack,
+                    &format!("checksum={:.4}", res.checksum),
+                )));
+            }
             let layout = crate::algorithms::dot::DotLayout::new(dims);
             let dev =
                 PrinsDevice::with_config(n, layout.width as usize, DeviceModel::default(), backend);
@@ -233,6 +309,14 @@ fn dispatch(line: &str, backend: ExecBackend) -> Result<Option<String>> {
             );
             let x = synth_samples(n, dims, k, seed);
             let centers = synth_uniform(k * dims, seed + 1);
+            if sess.shards > 1 {
+                let res =
+                    euclidean_sharded(&rack_for(sess, backend), &x, n, dims, &centers, k, 1);
+                return Ok(Some(rack_ok(
+                    &res.rack,
+                    &format!("checksum={:.4}", res.checksum),
+                )));
+            }
             let layout = crate::algorithms::euclidean::EuclideanLayout::new(dims);
             let dev =
                 PrinsDevice::with_config(n, layout.width as usize, DeviceModel::default(), backend);
@@ -247,6 +331,32 @@ fn dispatch(line: &str, backend: ExecBackend) -> Result<Option<String>> {
                 "OK cycles={} energy_pj={:.1} checksum={:.4}",
                 o.cycles,
                 o.energy_j * 1e12,
+                checksum
+            )))
+        }
+        ["SPMV", n, nnz, seed] => {
+            let (n, nnz, seed): (usize, usize, u64) =
+                (n.parse()?, nnz.parse()?, seed.parse()?);
+            ensure!(
+                n > 0 && n <= 1 << 14 && nnz > 0 && nnz <= 1 << 18,
+                "size out of range"
+            );
+            let a = synth_csr(n, nnz, seed);
+            let mut rng = Rng::seed_from(seed + 1);
+            let x: Vec<f32> = (0..n).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+            if sess.shards > 1 {
+                let res = spmv_sharded(&rack_for(sess, backend), &a, &x);
+                return Ok(Some(rack_ok(
+                    &res.rack,
+                    &format!("checksum={:.4}", res.checksum),
+                )));
+            }
+            let res = spmv_single(&a, &x, backend);
+            let checksum: f32 = res.y.iter().sum();
+            Ok(Some(format!(
+                "OK cycles={} energy_pj={:.1} checksum={:.4}",
+                res.stats.cycles,
+                res.stats.energy_j(&DeviceModel::default()) * 1e12,
                 checksum
             )))
         }
@@ -285,6 +395,73 @@ mod tests {
         writeln!(conn, "QUIT").unwrap();
         reader.read_line(&mut line).unwrap();
         assert_eq!(line.trim(), "BYE");
+        server.shutdown();
+    }
+
+    #[test]
+    fn rack_session_shards_verbs_and_is_per_connection() {
+        let server = Server::spawn("127.0.0.1:0").unwrap();
+        let mut conn = TcpStream::connect(server.addr).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+        let mut ask = |conn: &mut TcpStream, reader: &mut BufReader<TcpStream>, req: &str| {
+            line.clear();
+            writeln!(conn, "{req}").unwrap();
+            reader.read_line(&mut line).unwrap();
+            line.trim().to_string()
+        };
+
+        assert_eq!(ask(&mut conn, &mut reader, "RACK"), "OK shards=1");
+        assert_eq!(ask(&mut conn, &mut reader, "RACK 2"), "OK shards=2");
+        let sharded = ask(&mut conn, &mut reader, "HIST 600 7");
+        assert!(sharded.contains("shards=2"), "{sharded}");
+        assert!(sharded.contains("link_bytes="), "{sharded}");
+        assert!(sharded.contains("total=600"), "{sharded}");
+        let spmv = ask(&mut conn, &mut reader, "SPMV 48 300 3");
+        assert!(spmv.contains("shards=2") && spmv.contains("checksum="), "{spmv}");
+        assert!(ask(&mut conn, &mut reader, "RACK 0").starts_with("ERR"));
+        assert!(ask(&mut conn, &mut reader, "RACK 65").starts_with("ERR"));
+
+        // sharded histogram agrees with single-device results and a fresh
+        // connection starts unsharded
+        let mut conn2 = TcpStream::connect(server.addr).unwrap();
+        let mut reader2 = BufReader::new(conn2.try_clone().unwrap());
+        let single = ask(&mut conn2, &mut reader2, "HIST 600 7");
+        assert!(!single.contains("shards="), "{single}");
+        let field = |r: &str, key: &str| {
+            r.split_whitespace()
+                .find_map(|kv| kv.strip_prefix(key).map(str::to_string))
+                .unwrap_or_default()
+        };
+        assert_eq!(field(&sharded, "top_bin="), field(&single, "top_bin="));
+        assert_eq!(field(&sharded, "total="), field(&single, "total="));
+        // rack cycles include the host-link charge, so they exceed the
+        // single device's
+        let cyc = |r: &str| field(r, "cycles=").parse::<u64>().unwrap();
+        assert!(cyc(&sharded) > cyc(&single), "{sharded} vs {single}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn spmv_verb_matches_quantized_baseline_checksum() {
+        let server = Server::spawn("127.0.0.1:0").unwrap();
+        let mut conn = TcpStream::connect(server.addr).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+        writeln!(conn, "SPMV 64 400 5").unwrap();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("OK cycles="), "{line}");
+        let got: f32 = line
+            .split_whitespace()
+            .find_map(|kv| kv.strip_prefix("checksum="))
+            .unwrap()
+            .parse()
+            .unwrap();
+        let a = crate::workloads::synth_csr(64, 400, 5);
+        let mut rng = crate::workloads::Rng::seed_from(6);
+        let x: Vec<f32> = (0..64).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+        let expect: f32 = crate::algorithms::spmv_baseline_quantized(&a, &x).iter().sum();
+        assert!((got - expect).abs() < 2e-3, "{got} vs {expect}");
         server.shutdown();
     }
 

@@ -23,6 +23,7 @@ use super::program::{Instr, Pat, Program};
 use crate::error::{bail, err, Context, Result};
 use std::fmt::Write as _;
 
+/// Render a key/mask pattern as space-separated `c<col>=<0|1>` terms.
 pub fn format_pattern(p: &Pat) -> String {
     p.iter()
         .map(|&(c, b)| format!("c{}={}", c, if b { 1 } else { 0 }))
@@ -30,6 +31,7 @@ pub fn format_pattern(p: &Pat) -> String {
         .join(" ")
 }
 
+/// Render one instruction as its assembly line.
 pub fn format_instr(i: &Instr) -> String {
     match i {
         Instr::Compare(p) => format!("compare {}", format_pattern(p)).trim_end().into(),
@@ -48,6 +50,7 @@ pub fn format_instr(i: &Instr) -> String {
     }
 }
 
+/// Render a whole program, one instruction per line.
 pub fn format_program(p: &Program) -> String {
     let mut s = String::new();
     for i in &p.instrs {
@@ -85,6 +88,8 @@ fn kv(term: &str, key: &str) -> Result<u16> {
     Ok(v.parse()?)
 }
 
+/// Parse one assembly line (no comments/blank handling — see
+/// [`parse_program`] for whole-file parsing).
 pub fn parse_instr(line: &str) -> Result<Instr> {
     let mut parts = line.split_whitespace();
     let op = parts.next().ok_or_else(|| err!("empty instruction"))?;
@@ -127,6 +132,8 @@ pub fn parse_instr(line: &str) -> Result<Instr> {
     })
 }
 
+/// Parse an assembly listing (`#` comments and blank lines ignored);
+/// parse errors carry 1-based line numbers in their context.
 pub fn parse_program(text: &str) -> Result<Program> {
     let mut prog = Program::new();
     for (ln, raw) in text.lines().enumerate() {

@@ -8,11 +8,14 @@ use std::collections::BTreeMap;
 /// A contiguous bit-field inside the row: columns [base, base+width).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct Field {
+    /// First (lowest) bit-column of the field.
     pub base: u16,
+    /// Field width in bit-columns.
     pub width: u16,
 }
 
 impl Field {
+    /// Field covering columns `[base, base + width)`.
     pub fn new(base: u16, width: u16) -> Self {
         Field { base, width }
     }
@@ -51,10 +54,12 @@ impl Field {
         }
     }
 
+    /// Whether the two fields share any bit-column.
     pub fn overlaps(&self, other: &Field) -> bool {
         self.base < other.base + other.width && other.base < self.base + self.width
     }
 
+    /// One past the last column: `base + width`.
     pub fn end(&self) -> u16 {
         self.base + self.width
     }
@@ -77,6 +82,7 @@ pub struct RowLayout {
 }
 
 impl RowLayout {
+    /// An empty layout over a `width`-bit row.
     pub fn new(width: u16) -> Self {
         RowLayout {
             width,
@@ -84,6 +90,7 @@ impl RowLayout {
         }
     }
 
+    /// The row width this layout allocates within.
     pub fn width(&self) -> u16 {
         self.width
     }
@@ -132,6 +139,7 @@ impl RowLayout {
         f
     }
 
+    /// Release a named field's columns for reuse (no-op if absent).
     pub fn free(&mut self, name: &str) {
         self.fields.remove(name);
     }
@@ -146,6 +154,7 @@ impl RowLayout {
             .ok_or_else(|| err!("unknown field {name:?}"))
     }
 
+    /// Iterate the allocated field names (sorted).
     pub fn names(&self) -> impl Iterator<Item = &str> {
         self.fields.keys().map(|s| s.as_str())
     }

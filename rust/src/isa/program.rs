@@ -16,6 +16,8 @@ use crate::rcam::device::{
 /// masked out.
 pub type Pat = Vec<(u16, bool)>;
 
+/// One associative instruction: the paper's five architectural
+/// operations plus controller macros (see the module doc).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Instr {
     /// compare (y1==x1, ...): tag rows matching the pattern.
@@ -80,7 +82,9 @@ impl Instr {
 /// (see [`Program::spans`]).
 #[derive(Clone, Copy, Debug)]
 pub struct Span<'a> {
+    /// The instructions of this span, in program order.
     pub instrs: &'a [Instr],
+    /// Whether every instruction in the span is data-parallel.
     pub data_parallel: bool,
 }
 
@@ -118,14 +122,17 @@ impl<'a> Iterator for Spans<'a> {
 /// controller", §5.3).
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct Program {
+    /// The instruction sequence, executed front to back.
     pub instrs: Vec<Instr>,
 }
 
 impl Program {
+    /// An empty program.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Append one instruction.
     pub fn push(&mut self, i: Instr) {
         self.instrs.push(i);
     }
@@ -146,6 +153,7 @@ impl Program {
         self.instrs.push(Instr::Write(f.pattern(value)));
     }
 
+    /// Append an untagged parallel clear of a whole field.
     pub fn clear_field(&mut self, f: Field) {
         self.instrs.push(Instr::ClearColumns {
             base: f.base,
@@ -153,10 +161,12 @@ impl Program {
         });
     }
 
+    /// Number of instructions.
     pub fn len(&self) -> usize {
         self.instrs.len()
     }
 
+    /// Whether the program has no instructions.
     pub fn is_empty(&self) -> bool {
         self.instrs.is_empty()
     }
@@ -174,6 +184,7 @@ impl Program {
             .count()
     }
 
+    /// Append every instruction of `other`.
     pub fn extend(&mut self, other: Program) {
         self.instrs.extend(other.instrs);
     }

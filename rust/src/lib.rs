@@ -9,6 +9,8 @@
 //! See `DESIGN.md` for the architecture and `EXPERIMENTS.md` for the
 //! paper-vs-measured results.
 
+#![warn(missing_docs)]
+
 pub mod algorithms;
 pub mod cli;
 pub mod controller;

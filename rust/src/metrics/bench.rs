@@ -8,12 +8,16 @@
 use crate::rcam::ExecBackend;
 use std::time::{Duration, Instant};
 
+/// Collected timing samples of one benchmarked closure.
 pub struct BenchTimer {
+    /// Label printed in reports.
     pub name: String,
+    /// One wall-clock duration per measured iteration.
     pub samples: Vec<Duration>,
 }
 
 impl BenchTimer {
+    /// Mean of the measured samples.
     pub fn mean(&self) -> Duration {
         if self.samples.is_empty() {
             return Duration::ZERO;
@@ -21,10 +25,12 @@ impl BenchTimer {
         self.samples.iter().sum::<Duration>() / self.samples.len() as u32
     }
 
+    /// Fastest measured sample (the number perf work tracks).
     pub fn min(&self) -> Duration {
         self.samples.iter().min().copied().unwrap_or(Duration::ZERO)
     }
 
+    /// One-line min/mean report.
     pub fn report(&self) -> String {
         format!(
             "{:<40} min {:>12?}  mean {:>12?}  ({} samples)",
@@ -65,6 +71,7 @@ pub fn arg_value(args: &[String], name: &str) -> Option<String> {
         .and_then(|i| args.get(i + 1).cloned())
 }
 
+/// `--name <v>` parsed as u64, with a default.
 pub fn arg_u64(args: &[String], name: &str, default: u64) -> u64 {
     arg_value(args, name)
         .and_then(|v| v.parse().ok())
@@ -83,7 +90,18 @@ pub fn backend_from_args(args: &[String]) -> ExecBackend {
 /// Worker-count sweep from `--workers a,b,c` (for thread-scaling benches;
 /// a single value is a one-element sweep).
 pub fn workers_sweep_from_args(args: &[String], default: &[usize]) -> Vec<usize> {
-    match arg_value(args, "--workers") {
+    sweep_from_args(args, "--workers", default)
+}
+
+/// Shard-count sweep from `--shards a,b,c` (for rack-scaling benches;
+/// a single value is a one-element sweep).
+pub fn shards_sweep_from_args(args: &[String], default: &[usize]) -> Vec<usize> {
+    sweep_from_args(args, "--shards", default)
+}
+
+/// Comma-separated `usize` sweep behind a flag, with a default.
+fn sweep_from_args(args: &[String], flag: &str, default: &[usize]) -> Vec<usize> {
+    match arg_value(args, flag) {
         Some(list) => {
             let v: Vec<usize> = list
                 .split(',')
@@ -105,10 +123,15 @@ pub fn workers_sweep_from_args(args: &[String], default: &[usize]) -> Vec<usize>
 
 /// One measured point of the perf trajectory.
 pub struct BenchRecord {
+    /// Microbenchmark name.
     pub bench: String,
+    /// Array rows of the measured configuration.
     pub rows: u64,
+    /// Simulator worker count (1 = serial).
     pub workers: u64,
+    /// Measured throughput (bench-specific op definition).
     pub ops_per_s: f64,
+    /// Wall-clock seconds of the fastest sample.
     pub wall_s: f64,
 }
 
@@ -148,6 +171,63 @@ pub fn write_bench_json(name: &str, records: &[BenchRecord]) -> std::io::Result<
     Ok(path)
 }
 
+// ---------------------------------------------------------------------------
+// Rack-scaling results (BENCH_rack.json)
+// ---------------------------------------------------------------------------
+
+/// One measured point of the rack shard-count sweep (`benches/
+/// rack_scaling.rs`): modeled rack cycles/energy under the interconnect
+/// cost model plus host wall-clock of the simulation itself.
+pub struct RackRecord {
+    /// Workload name (`hist`, `dp`, `ed`, `spmv`).
+    pub bench: String,
+    /// Dataset rows (samples / vectors / matrix dimension).
+    pub rows: u64,
+    /// Shard-device count of the rack.
+    pub shards: u64,
+    /// Modeled rack latency: slowest shard + serialized host link.
+    pub total_cycles: u64,
+    /// Modeled slowest-shard kernel cycles.
+    pub max_shard_cycles: u64,
+    /// Modeled host-link traffic in bytes.
+    pub link_bytes: u64,
+    /// Modeled rack energy \[J\] (device + link).
+    pub energy_j: f64,
+    /// Host wall-clock seconds of the simulated run.
+    pub wall_s: f64,
+}
+
+/// Hand-rolled JSON for [`RackRecord`]s (the crate set has no serde): a
+/// flat array of objects, one per (bench, shards) point.
+pub fn rack_records_json(records: &[RackRecord]) -> String {
+    let mut s = String::from("[\n");
+    for (i, r) in records.iter().enumerate() {
+        s.push_str(&format!(
+            "  {{\"bench\": \"{}\", \"rows\": {}, \"shards\": {}, \
+             \"total_cycles\": {}, \"max_shard_cycles\": {}, \
+             \"link_bytes\": {}, \"energy_j\": {:e}, \"wall_s\": {:e}}}{}\n",
+            r.bench,
+            r.rows,
+            r.shards,
+            r.total_cycles,
+            r.max_shard_cycles,
+            r.link_bytes,
+            r.energy_j,
+            r.wall_s,
+            if i + 1 < records.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("]\n");
+    s
+}
+
+/// Write `BENCH_<name>.json` of rack records at the repository root.
+pub fn write_rack_json(name: &str, records: &[RackRecord]) -> std::io::Result<std::path::PathBuf> {
+    let path = repo_root_path(&format!("BENCH_{name}.json"));
+    std::fs::write(&path, rack_records_json(records))?;
+    Ok(path)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -174,6 +254,41 @@ mod tests {
         let sweep: Vec<String> = ["--workers", "1,2,8"].iter().map(|s| s.to_string()).collect();
         assert_eq!(workers_sweep_from_args(&sweep, &[4]), vec![1, 2, 8]);
         assert_eq!(workers_sweep_from_args(&[], &[1, 4]), vec![1, 4]);
+        let sweep: Vec<String> = ["--shards", "1,2,4,8"].iter().map(|s| s.to_string()).collect();
+        assert_eq!(shards_sweep_from_args(&sweep, &[1]), vec![1, 2, 4, 8]);
+        assert_eq!(shards_sweep_from_args(&[], &[1, 2]), vec![1, 2]);
+    }
+
+    #[test]
+    fn rack_json_shape() {
+        let recs = vec![
+            RackRecord {
+                bench: "hist".into(),
+                rows: 1 << 14,
+                shards: 2,
+                total_cycles: 4600,
+                max_shard_cycles: 525,
+                link_bytes: 4224,
+                energy_j: 1.1e-6,
+                wall_s: 0.02,
+            },
+            RackRecord {
+                bench: "spmv".into(),
+                rows: 256,
+                shards: 8,
+                total_cycles: 20_000,
+                max_shard_cycles: 2_000,
+                link_bytes: 1 << 16,
+                energy_j: 2.0e-6,
+                wall_s: 0.5,
+            },
+        ];
+        let s = rack_records_json(&recs);
+        assert!(s.starts_with("[\n") && s.trim_end().ends_with(']'));
+        assert_eq!(s.matches("\"shards\"").count(), 2);
+        assert_eq!(s.matches("},\n").count(), 1);
+        assert!(s.contains("\"total_cycles\": 4600"));
+        assert!(s.contains("\"link_bytes\": 4224"));
     }
 
     #[test]

@@ -1,14 +1,19 @@
 //! Fixed-width text tables — every figure harness prints the paper's
 //! rows/series through this, so EXPERIMENTS.md and bench output agree.
 
+/// A titled, fixed-width text table.
 #[derive(Clone, Debug, Default)]
 pub struct Table {
+    /// Table title, printed as a `== title ==` banner.
     pub title: String,
+    /// Column headers.
     pub headers: Vec<String>,
+    /// Data rows; every row has exactly one cell per header.
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// An empty table with the given title and column headers.
     pub fn new(title: &str, headers: &[&str]) -> Self {
         Table {
             title: title.to_string(),
@@ -17,11 +22,13 @@ impl Table {
         }
     }
 
+    /// Append one row (cell count must match the headers).
     pub fn row(&mut self, cells: Vec<String>) {
         assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
         self.rows.push(cells);
     }
 
+    /// Render as right-aligned fixed-width text.
     pub fn render(&self) -> String {
         let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
         for r in &self.rows {

@@ -21,7 +21,9 @@ use crate::isa::{Field, Instr, Pat, Program};
 /// folded into the truth table.
 #[derive(Clone, Copy, Debug)]
 pub enum BitSrc {
+    /// The bit lives in this bit-column of the row.
     Col(u16),
+    /// A constant bit folded into the truth table.
     Const(bool),
 }
 

@@ -28,11 +28,15 @@ use crate::isa::{Field, Instr, Pat, Program};
 /// 24-bit mantissa field (hidden bit explicit at bit 23).
 #[derive(Clone, Copy, Debug)]
 pub struct FloatField {
+    /// Sign bit-column.
     pub sign: u16,
+    /// 8-bit biased exponent field.
     pub exp: Field,
+    /// 24-bit mantissa field (hidden bit explicit at bit 23).
     pub man: Field,
 }
 
+/// Bits of one unpacked fp32 value: sign + exponent + mantissa.
 pub const UNPACKED_BITS: u16 = 1 + 8 + 24;
 
 impl FloatField {
@@ -84,6 +88,7 @@ pub fn unpacked_bits(v: f32) -> u64 {
     (s as u64) | ((e as u64) << 1) | ((m as u64) << 9)
 }
 
+/// Decode a 33-bit row integer (see [`unpacked_bits`]) back to f32.
 pub fn bits_to_f32(bits: u64) -> f32 {
     pack_f32(
         bits & 1 == 1,
@@ -95,12 +100,15 @@ pub fn bits_to_f32(bits: u64) -> f32 {
 /// Scratch area required by `fp_add`: flags + working fields, 63 bits.
 #[derive(Clone, Copy, Debug)]
 pub struct FpScratch {
+    /// First column of the scratch area.
     pub base: u16,
 }
 
+/// Width of the [`FpScratch`] area in bit-columns.
 pub const FP_SCRATCH_BITS: u16 = 63;
 
 impl FpScratch {
+    /// Scratch area starting at column `base`.
     pub fn at(base: u16) -> Self {
         FpScratch { base }
     }

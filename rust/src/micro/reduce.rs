@@ -20,7 +20,7 @@ pub fn emit_field_sum(prog: &mut Program, f: Field) {
 }
 
 /// Combine the per-plane counts produced by [`emit_field_sum`] into the
-/// field sum (counts[i] = number of tagged rows with bit i set).
+/// field sum (counts\[i\] = number of tagged rows with bit i set).
 pub fn combine_field_sum(counts: &[u64]) -> u128 {
     counts
         .iter()

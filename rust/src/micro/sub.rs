@@ -54,6 +54,8 @@ pub fn sub_inplace(prog: &mut Program, acc: Field, b: Field, brw_col: u16) {
     sub_inplace_cond(prog, acc, b, brw_col, &vec![]);
 }
 
+/// [`sub_inplace`] gated on a conjunction of condition bits; condition
+/// columns that alias `b`'s bits are folded in as constants.
 pub fn sub_inplace_cond(prog: &mut Program, acc: Field, b: Field, brw_col: u16, cond: &Pat) {
     assert!(!acc.overlaps(&b), "in-place sub operands overlap");
     prog.push(Instr::ClearColumns { base: brw_col, width: 1 });

@@ -19,19 +19,26 @@ use std::collections::HashMap;
 /// `write_cols`.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Entry {
+    /// Input bit per compare column.
     pub input: Vec<bool>,
+    /// Output bit per write column.
     pub output: Vec<bool>,
 }
 
 /// A truth table over explicit column lists.
 #[derive(Clone, Debug)]
 pub struct TruthTable {
+    /// Columns the compare pattern covers, in `Entry::input` order.
     pub compare_cols: Vec<u16>,
+    /// Columns the write pattern covers, in `Entry::output` order.
     pub write_cols: Vec<u16>,
+    /// The table rows (one compare+write pass each when emitted).
     pub entries: Vec<Entry>,
 }
 
 impl TruthTable {
+    /// An empty table over the given column lists (duplicates within a
+    /// list are design errors and panic).
     pub fn new(compare_cols: Vec<u16>, write_cols: Vec<u16>) -> Self {
         // A column may appear in both lists (e.g. an in-place carry), but
         // duplicates within a list are design errors.
@@ -50,6 +57,7 @@ impl TruthTable {
         }
     }
 
+    /// Append one entry (input/output lengths must match the columns).
     pub fn entry(&mut self, input: Vec<bool>, output: Vec<bool>) -> &mut Self {
         assert_eq!(input.len(), self.compare_cols.len());
         assert_eq!(output.len(), self.write_cols.len());

@@ -33,14 +33,19 @@ pub const PAPER_SIZES: [u64; 3] = [1_000_000, 10_000_000, 100_000_000];
 /// DP uses 16-dimensional vectors (paper §6); we use the same for ED.
 pub const DIMS: usize = 16;
 
+/// One dense kernel's measured simulation point (extrapolation input).
 pub struct DenseKernelRun {
+    /// Kernel label (ED / DP / Hist).
     pub name: &'static str,
+    /// Measured device cycles at simulation scale.
     pub sim_cycles: u64,
+    /// Measured runtime \[s\] at simulation scale.
     pub runtime_s: f64,
     /// FLOP (or OP) per data element (row) at paper scale.
     pub flops_per_row: f64,
     /// energy at SIM_ROWS (J), extrapolated linearly per row.
     pub sim_stats: crate::controller::ExecStats,
+    /// Rows of the simulated run.
     pub sim_rows: u64,
 }
 

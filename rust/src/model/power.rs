@@ -10,13 +10,20 @@
 use crate::controller::ExecStats;
 use crate::rcam::DeviceModel;
 
+/// Throughput + power efficiency of one kernel execution.
 #[derive(Clone, Debug)]
 pub struct Efficiency {
+    /// FLOP-equivalents of the workload (paper §6 conventions).
     pub flops: f64,
+    /// Kernel runtime \[s\].
     pub runtime_s: f64,
+    /// Total energy \[J\].
     pub energy_j: f64,
+    /// Throughput [GFLOP/s].
     pub gflops: f64,
+    /// Energy efficiency [GFLOPS/W].
     pub gflops_per_w: f64,
+    /// Average power \[W\].
     pub avg_power_w: f64,
 }
 

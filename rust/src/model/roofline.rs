@@ -12,7 +12,9 @@
 /// A bandwidth-limited external storage tier.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct StorageTier {
+    /// Tier name, as printed in figures.
     pub name: &'static str,
+    /// Peak storage bandwidth [GB/s].
     pub bandwidth_gb_s: f64,
 }
 
@@ -33,10 +35,13 @@ pub const NVDIMM: StorageTier = StorageTier {
 /// binds for the paper's low-AI workloads, but it caps the model.
 #[derive(Clone, Copy, Debug)]
 pub struct ComputeRoof {
+    /// Roof name, as printed in figures.
     pub name: &'static str,
+    /// Peak compute [GFLOP/s].
     pub peak_gflops: f64,
 }
 
+/// The paper's Knights-Landing-class compute roof (Fig. 15).
 pub const KNL_ROOF: ComputeRoof = ComputeRoof {
     name: "Xeon Phi KNL (≈3 TFLOP/s)",
     peak_gflops: 3_000.0,

@@ -10,13 +10,19 @@
 /// TPU v4-ish envelope used for the estimate.
 #[derive(Clone, Copy, Debug)]
 pub struct TpuEnvelope {
+    /// VMEM capacity per core \[bytes\].
     pub vmem_bytes: usize,
-    pub vpu_lanes: usize,          // 8x128 lanes × 4 sublanes
-    pub vpu_ops_per_cycle: usize,  // u32 ops across lanes
+    /// VPU lanes (8×128 lanes × 4 sublanes).
+    pub vpu_lanes: usize,
+    /// u32 ops per cycle across all lanes.
+    pub vpu_ops_per_cycle: usize,
+    /// Core clock \[Hz\].
     pub freq_hz: f64,
+    /// HBM bandwidth [GB/s].
     pub hbm_gb_s: f64,
 }
 
+/// TPU v4-class envelope constants.
 pub const TPU_V4: TpuEnvelope = TpuEnvelope {
     vmem_bytes: 16 << 20,
     vpu_lanes: 1024,
@@ -25,6 +31,7 @@ pub const TPU_V4: TpuEnvelope = TpuEnvelope {
     hbm_gb_s: 1200.0,
 };
 
+/// Structural performance estimate of the rcam_step Pallas kernel.
 #[derive(Clone, Debug)]
 pub struct KernelEstimate {
     /// Bytes of bit-plane state resident per grid step.

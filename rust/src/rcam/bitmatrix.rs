@@ -8,6 +8,7 @@
 
 use super::bitvec::BitVec;
 
+/// W bit-column planes over N rows — one RCAM crossbar's storage.
 #[derive(Clone, Debug)]
 pub struct BitMatrix {
     planes: Vec<BitVec>,
@@ -15,6 +16,7 @@ pub struct BitMatrix {
 }
 
 impl BitMatrix {
+    /// An all-zero `rows` × `width` crossbar.
     pub fn new(rows: usize, width: usize) -> Self {
         BitMatrix {
             planes: (0..width).map(|_| BitVec::zeros(rows)).collect(),
@@ -22,31 +24,37 @@ impl BitMatrix {
         }
     }
 
+    /// Row count.
     #[inline]
     pub fn rows(&self) -> usize {
         self.rows
     }
 
+    /// Width in bit-columns (planes).
     #[inline]
     pub fn width(&self) -> usize {
         self.planes.len()
     }
 
+    /// The plane of bit-column `col`.
     #[inline]
     pub fn plane(&self, col: usize) -> &BitVec {
         &self.planes[col]
     }
 
+    /// Mutable plane of bit-column `col`.
     #[inline]
     pub fn plane_mut(&mut self, col: usize) -> &mut BitVec {
         &mut self.planes[col]
     }
 
+    /// Read one cell.
     #[inline]
     pub fn get(&self, row: usize, col: usize) -> bool {
         self.planes[col].get(row)
     }
 
+    /// Write one cell.
     #[inline]
     pub fn set(&mut self, row: usize, col: usize, v: bool) {
         self.planes[col].set(row, v);

@@ -15,14 +15,17 @@ pub struct BitVec {
     nbits: usize,
 }
 
+/// Bits per storage word.
 pub const WORD_BITS: usize = 64;
 
+/// Words needed to hold `nbits` bits.
 #[inline]
 pub fn words_for(nbits: usize) -> usize {
     nbits.div_ceil(WORD_BITS)
 }
 
 impl BitVec {
+    /// An all-zero vector of `nbits` bits.
     pub fn zeros(nbits: usize) -> Self {
         BitVec {
             words: vec![0; words_for(nbits)],
@@ -30,6 +33,7 @@ impl BitVec {
         }
     }
 
+    /// An all-one vector of `nbits` bits (canonical tail).
     pub fn ones(nbits: usize) -> Self {
         let mut v = BitVec {
             words: vec![u64::MAX; words_for(nbits)],
@@ -47,21 +51,25 @@ impl BitVec {
         v
     }
 
+    /// Bit length.
     #[inline]
     pub fn len(&self) -> usize {
         self.nbits
     }
 
+    /// Whether the vector has zero bits.
     #[inline]
     pub fn is_empty(&self) -> bool {
         self.nbits == 0
     }
 
+    /// Backing words (little-endian: word 0 holds bits 0..64).
     #[inline]
     pub fn words(&self) -> &[u64] {
         &self.words
     }
 
+    /// Mutable backing words; callers must keep the tail canonical.
     #[inline]
     pub fn words_mut(&mut self) -> &mut [u64] {
         &mut self.words
@@ -78,12 +86,14 @@ impl BitVec {
         }
     }
 
+    /// Read bit `i`.
     #[inline]
     pub fn get(&self, i: usize) -> bool {
         debug_assert!(i < self.nbits);
         (self.words[i / WORD_BITS] >> (i % WORD_BITS)) & 1 == 1
     }
 
+    /// Set bit `i` to `v`.
     #[inline]
     pub fn set(&mut self, i: usize, v: bool) {
         debug_assert!(i < self.nbits);
@@ -96,6 +106,7 @@ impl BitVec {
         }
     }
 
+    /// Set every bit to `v` (canonical tail preserved).
     pub fn fill(&mut self, v: bool) {
         let word = if v { u64::MAX } else { 0 };
         self.words.iter_mut().for_each(|w| *w = word);
@@ -230,6 +241,7 @@ impl BitVec {
         })
     }
 
+    /// Debug check of the canonical-tail invariant (dead bits zero).
     #[cfg(debug_assertions)]
     pub fn debug_assert_canonical(&self) {
         let tail = self.nbits % WORD_BITS;

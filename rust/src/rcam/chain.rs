@@ -18,11 +18,14 @@ use super::module::{Pattern, RcamModule};
 use crate::isa::Instr;
 use std::sync::{Arc, Mutex};
 
+/// The full PRINS array: daisy-chained RCAM modules presented to the
+/// controller as one associative address space (paper Fig. 4).
 #[derive(Clone, Debug)]
 pub struct PrinsArray {
     modules: Vec<RcamModule>,
     rows_per_module: usize,
     width: usize,
+    /// Timing/energy constants for this array.
     pub device: DeviceModel,
     /// Total elapsed cycles across all executed instructions.
     pub cycles: u64,
@@ -34,10 +37,13 @@ pub struct PrinsArray {
 }
 
 impl PrinsArray {
+    /// A chain of `n_modules` modules of `rows_per_module` × `width`
+    /// cells with the default device model.
     pub fn new(n_modules: usize, rows_per_module: usize, width: usize) -> Self {
         Self::with_device(n_modules, rows_per_module, width, DeviceModel::default())
     }
 
+    /// [`PrinsArray::new`] with an explicit device model.
     pub fn with_device(
         n_modules: usize,
         rows_per_module: usize,
@@ -58,6 +64,7 @@ impl PrinsArray {
         }
     }
 
+    /// A one-module array (the common kernel-test geometry).
     pub fn single(rows: usize, width: usize) -> Self {
         Self::new(1, rows, width)
     }
@@ -78,6 +85,8 @@ impl PrinsArray {
         self.with_backend(ExecBackend::from_workers(n))
     }
 
+    /// In-place variant of [`PrinsArray::with_backend`]; attaches the
+    /// process-shared worker pool for the backend's worker count.
     pub fn set_backend(&mut self, backend: ExecBackend) {
         self.backend = backend;
         // attach the process-shared pool for this worker count so arrays
@@ -90,11 +99,13 @@ impl PrinsArray {
         }
     }
 
+    /// The configured execution backend.
     #[inline]
     pub fn backend(&self) -> ExecBackend {
         self.backend
     }
 
+    /// Whether data-parallel spans run on the worker pool.
     #[inline]
     pub fn is_threaded(&self) -> bool {
         self.backend.is_threaded()
@@ -121,21 +132,25 @@ impl PrinsArray {
         }
     }
 
+    /// Rows across the whole chain.
     #[inline]
     pub fn total_rows(&self) -> usize {
         self.rows_per_module * self.modules.len()
     }
 
+    /// Row width in bit-columns.
     #[inline]
     pub fn width(&self) -> usize {
         self.width
     }
 
+    /// Module count in the chain.
     #[inline]
     pub fn n_modules(&self) -> usize {
         self.modules.len()
     }
 
+    /// The chained modules, in daisy-chain order.
     #[inline]
     pub fn modules(&self) -> &[RcamModule] {
         &self.modules
@@ -157,6 +172,7 @@ impl PrinsArray {
 
     // ----- broadcast associative instructions ---------------------------
 
+    /// Broadcast compare: tag matching rows in every module (1 cycle).
     pub fn compare(&mut self, pattern: &Pattern) {
         if self.is_threaded() {
             self.execute_ops(&[StripeOp::Compare(pattern)]);
@@ -168,6 +184,7 @@ impl PrinsArray {
         }
     }
 
+    /// Broadcast write: pattern into every tagged row (2 cycles).
     pub fn write(&mut self, pattern: &Pattern) {
         if self.is_threaded() {
             self.execute_ops(&[StripeOp::Write(pattern)]);
@@ -315,6 +332,7 @@ impl PrinsArray {
         self.cycles += ops.iter().map(exec::op_cycles).sum::<u64>();
     }
 
+    /// Whether any row in the chain is tagged (1 cycle).
     pub fn if_match(&mut self) -> bool {
         let mut any = false;
         for m in &mut self.modules {
@@ -380,10 +398,12 @@ impl PrinsArray {
         per_module + self.modules.len() as u64 - 1
     }
 
+    /// Charge one pipelined reduction-tree drain to the cycle counter.
     pub fn charge_reduction_latency(&mut self) {
         self.cycles += self.reduction_latency_cycles();
     }
 
+    /// Tag every row in the chain (1 cycle).
     pub fn set_tags_all(&mut self) {
         if self.is_threaded() {
             self.execute_ops(&[StripeOp::SetTagsAll]);
@@ -591,11 +611,14 @@ impl PrinsArray {
 
     // ----- storage-management access path --------------------------------
 
+    /// Storage-manager load: write `width` bits of `value` into a global
+    /// row (routed to the owning module; not an associative operation).
     pub fn load_row_bits(&mut self, row: usize, base: usize, width: usize, value: u64) {
         let (mi, r) = self.split(row);
         self.modules[mi].load_row_bits(r, base, width, value);
     }
 
+    /// Storage-manager readout: fetch `width` bits of a global row.
     pub fn fetch_row_bits(&self, row: usize, base: usize, width: usize) -> u64 {
         let (mi, r) = self.split(row);
         self.modules[mi].fetch_row_bits(r, base, width)

@@ -9,25 +9,30 @@
 
 /// Per-operation cycle costs (paper §3.1: write is two-phase).
 pub const CYCLES_COMPARE: u64 = 1;
+/// Write cycle cost (two-phase: set then reset, paper §3.1).
 pub const CYCLES_WRITE: u64 = 2;
+/// Read cycle cost (first tagged row → key register).
 pub const CYCLES_READ: u64 = 1;
-pub const CYCLES_TAG_OP: u64 = 1; // first_match / if_match / tag moves
+/// Tag-logic cycle cost: first_match / if_match / tag moves.
+pub const CYCLES_TAG_OP: u64 = 1;
 /// Reduction-tree issue cost. The tree itself is pipelined; its log-depth
 /// drain latency is charged once per dependent use (see `Controller`).
 pub const CYCLES_REDUCE_ISSUE: u64 = 1;
 
+/// Memristor/periphery constants that convert event counts into time and
+/// energy (paper §3.1, §6.1).
 #[derive(Clone, Debug)]
 pub struct DeviceModel {
-    /// Operating frequency [Hz]. Paper: 500 MHz in 28 nm.
+    /// Operating frequency \[Hz\]. Paper: 500 MHz in 28 nm.
     pub freq_hz: f64,
-    /// Compare energy per bit per row [J]. Paper: "less than 1 fJ per bit".
+    /// Compare energy per bit per row \[J\]. Paper: "less than 1 fJ per bit".
     pub e_compare_bit: f64,
-    /// Write energy per bit per (tagged) row [J]. Paper: "100 fJ per bit range".
+    /// Write energy per bit per (tagged) row \[J\]. Paper: "100 fJ per bit range".
     pub e_write_bit: f64,
-    /// Reduction-tree energy per tag bit per tree level [J] (our estimate;
+    /// Reduction-tree energy per tag bit per tree level \[J\] (our estimate;
     /// the paper folds this into its in-house power simulator).
     pub e_reduce_bit: f64,
-    /// Static/controller power [W] charged for the whole runtime.
+    /// Static/controller power \[W\] charged for the whole runtime.
     pub p_controller: f64,
     /// Program/erase endurance per cell. Paper: ~1e12 today, 1e14–1e15 predicted.
     pub endurance: f64,
@@ -58,11 +63,13 @@ impl DeviceModel {
         }
     }
 
+    /// One clock period \[s\].
     #[inline]
     pub fn cycle_time_s(&self) -> f64 {
         1.0 / self.freq_hz
     }
 
+    /// Convert a cycle count to wall-clock seconds.
     pub fn cycles_to_seconds(&self, cycles: u64) -> f64 {
         cycles as f64 * self.cycle_time_s()
     }
@@ -80,15 +87,20 @@ pub struct EnergyLedger {
     pub reduce_bit_events: u128,
     /// Σ bits moved over the daisy-chain interconnect.
     pub chain_bit_events: u128,
-    /// Operation counts, for reporting and ablation.
+    /// Compare-operation count (reporting and ablation).
     pub n_compare: u64,
+    /// Write-operation count.
     pub n_write: u64,
+    /// Read-operation count.
     pub n_read: u64,
+    /// Reduction-issue count.
     pub n_reduce: u64,
+    /// Tag-logic operation count.
     pub n_tag_op: u64,
 }
 
 impl EnergyLedger {
+    /// Accumulate another ledger's events into this one.
     pub fn add(&mut self, other: &EnergyLedger) {
         self.compare_bit_events += other.compare_bit_events;
         self.write_bit_events += other.write_bit_events;
@@ -101,7 +113,7 @@ impl EnergyLedger {
         self.n_tag_op += other.n_tag_op;
     }
 
-    /// Dynamic energy [J] under a device model.
+    /// Dynamic energy \[J\] under a device model.
     pub fn dynamic_energy_j(&self, dev: &DeviceModel) -> f64 {
         self.compare_bit_events as f64 * dev.e_compare_bit
             + self.write_bit_events as f64 * dev.e_write_bit
@@ -109,12 +121,12 @@ impl EnergyLedger {
             + self.chain_bit_events as f64 * dev.e_reduce_bit
     }
 
-    /// Total energy [J] including controller/static power over `cycles`.
+    /// Total energy \[J\] including controller/static power over `cycles`.
     pub fn total_energy_j(&self, dev: &DeviceModel, cycles: u64) -> f64 {
         self.dynamic_energy_j(dev) + dev.p_controller * dev.cycles_to_seconds(cycles)
     }
 
-    /// Average power [W] over `cycles`.
+    /// Average power \[W\] over `cycles`.
     pub fn avg_power_w(&self, dev: &DeviceModel, cycles: u64) -> f64 {
         let t = dev.cycles_to_seconds(cycles);
         if t == 0.0 {

@@ -68,6 +68,7 @@ impl ExecBackend {
         }
     }
 
+    /// Total worker count (the dispatcher included; 1 for serial).
     #[inline]
     pub fn workers(&self) -> usize {
         match self {
@@ -76,6 +77,7 @@ impl ExecBackend {
         }
     }
 
+    /// Whether data-parallel spans run striped over a worker pool.
     #[inline]
     pub fn is_threaded(&self) -> bool {
         matches!(self, ExecBackend::Threaded(_))
@@ -91,11 +93,21 @@ impl ExecBackend {
 /// identical results and ledger to `Compare` followed by `Write`.
 #[derive(Clone, Copy)]
 pub enum StripeOp<'a> {
+    /// Tag rows matching the pattern.
     Compare(&'a Pattern),
+    /// Write the pattern into all tagged rows.
     Write(&'a Pattern),
+    /// Fused compare + tagged write (one traversal).
     Pass(&'a Pattern, &'a Pattern),
+    /// Tag every row.
     SetTagsAll,
-    ClearColumns { base: u16, width: u16 },
+    /// Untagged parallel clear of a column range.
+    ClearColumns {
+        /// First column to clear.
+        base: u16,
+        /// Number of columns to clear.
+        width: u16,
+    },
 }
 
 /// Cycle charge of one op — must agree with `Instr::cycles()` and with
@@ -383,6 +395,8 @@ pub struct WorkerPool {
 }
 
 impl WorkerPool {
+    /// Spawn a dedicated pool of `threads` workers (prefer
+    /// [`WorkerPool::shared`] — pools are process-lifetime objects).
     pub fn new(threads: usize) -> Self {
         let mut txs = Vec::with_capacity(threads);
         let mut handles = Vec::with_capacity(threads);
@@ -398,6 +412,7 @@ impl WorkerPool {
         }
     }
 
+    /// Number of pool threads (the dispatching thread is extra).
     #[inline]
     pub fn threads(&self) -> usize {
         self.threads

@@ -13,6 +13,10 @@
 //!   [`exec`]      — row-striped parallel execution engine: worker pool,
 //!                   stripe planning, fused word-blocked kernels
 //!                   (DESIGN.md §5)
+//!   [`shard`]     — multi-device sharding substrate: dataset
+//!                   partitioning, host-side merge operators, and the
+//!                   host-link interconnect cost model
+//!                   (DESIGN.md §Sharding)
 
 pub mod bitmatrix;
 pub mod bitvec;
@@ -20,6 +24,7 @@ pub mod chain;
 pub mod device;
 pub mod exec;
 pub mod module;
+pub mod shard;
 
 pub use bitmatrix::BitMatrix;
 pub use bitvec::BitVec;
@@ -27,3 +32,4 @@ pub use chain::PrinsArray;
 pub use device::{DeviceModel, EnergyLedger};
 pub use exec::ExecBackend;
 pub use module::{Pattern, RcamModule};
+pub use shard::{InterconnectModel, ShardPlan};

@@ -19,6 +19,8 @@ use super::exec::ModuleParts;
 /// masked out.
 pub type Pattern = [(u16, bool)];
 
+/// One RCAM module: bit-sliced crossbar storage, tag register, and the
+/// per-module energy-event ledger.
 #[derive(Clone, Debug)]
 pub struct RcamModule {
     storage: BitMatrix,
@@ -26,10 +28,12 @@ pub struct RcamModule {
     /// Per-row write counters for endurance/wear-levelling analysis
     /// (None = tracking disabled; it is O(tagged rows) per write).
     wear: Option<Vec<u32>>,
+    /// Energy events accrued by this module's operations.
     pub ledger: EnergyLedger,
 }
 
 impl RcamModule {
+    /// A module of `rows` × `width` cells, tags cleared, no wear tracking.
     pub fn new(rows: usize, width: usize) -> Self {
         RcamModule {
             storage: BitMatrix::new(rows, width),
@@ -39,37 +43,44 @@ impl RcamModule {
         }
     }
 
+    /// [`RcamModule::new`] with per-row wear counters enabled.
     pub fn with_wear_tracking(rows: usize, width: usize) -> Self {
         let mut m = Self::new(rows, width);
         m.wear = Some(vec![0; rows]);
         m
     }
 
+    /// Row count.
     #[inline]
     pub fn rows(&self) -> usize {
         self.storage.rows()
     }
 
+    /// Row width in bit-columns.
     #[inline]
     pub fn width(&self) -> usize {
         self.storage.width()
     }
 
+    /// The tag register (one bit per row).
     #[inline]
     pub fn tags(&self) -> &BitVec {
         &self.tags
     }
 
+    /// Mutable tag register (array-level tag-chain operations).
     #[inline]
     pub fn tags_mut(&mut self) -> &mut BitVec {
         &mut self.tags
     }
 
+    /// The bit-sliced crossbar storage.
     #[inline]
     pub fn storage(&self) -> &BitMatrix {
         &self.storage
     }
 
+    /// Per-row write counters, if wear tracking is enabled.
     pub fn wear_counters(&self) -> Option<&[u32]> {
         self.wear.as_deref()
     }

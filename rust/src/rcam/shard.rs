@@ -1,0 +1,357 @@
+//! Sharding substrate for a multi-device PRINS rack: dataset
+//! partitioning, host-side merge operators, and the interconnect cost
+//! model (DESIGN.md §Sharding).
+//!
+//! A real PRINS deployment is a *rack* of SSD-resident RCAM devices, not
+//! one chip: the paper's scaling argument (compute grows with storage
+//! size) only holds if a dataset can be striped over many devices and the
+//! per-device results merged by the host. This module holds everything
+//! that is independent of any particular workload:
+//!
+//!   * [`ShardPlan`] — contiguous row-range partitioning, either
+//!     equal-rows ([`ShardPlan::rows`]) or weight-balanced
+//!     ([`ShardPlan::weighted`], used for nnz-balanced CSR splits);
+//!   * merge operators — [`merge_histograms`] (bin-wise add),
+//!     [`merge_concat`] (order-preserving row-range concatenation),
+//!     [`reduce_partial_sums`] (low-bandwidth one-scalar-per-shard
+//!     aggregate merge), [`merge_topk`] (k-way nearest-result merge);
+//!   * [`InterconnectModel`] — the host-link bytes/latency cost model
+//!     that keeps rack-level cycle/energy figures honest.
+//!
+//! The rack itself ([`crate::host::rack::PrinsRack`]) composes these with
+//! per-workload kernels; the sharded algorithm entry points live next to
+//! their single-device twins in [`crate::algorithms`].
+
+use super::device::DeviceModel;
+use std::ops::Range;
+
+// ---------------------------------------------------------------------------
+// Partitioning
+// ---------------------------------------------------------------------------
+
+/// A contiguous, order-preserving partition of `0..n` rows into shard
+/// ranges. Ranges never overlap, cover every row exactly once, and are in
+/// ascending order — so a shard-merged result that concatenates per-shard
+/// outputs in plan order is bit-identical to the single-device row order.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardPlan {
+    /// One row range per shard, ascending, disjoint, covering `0..n`.
+    /// Ranges may be empty when there are more shards than rows.
+    pub ranges: Vec<Range<usize>>,
+}
+
+impl ShardPlan {
+    /// Equal-rows partition: `n` rows over `shards` shards; the first
+    /// `n % shards` shards get one extra row.
+    pub fn rows(n: usize, shards: usize) -> ShardPlan {
+        let shards = shards.max(1);
+        let base = n / shards;
+        let rem = n % shards;
+        let mut ranges = Vec::with_capacity(shards);
+        let mut start = 0usize;
+        for s in 0..shards {
+            let len = base + usize::from(s < rem);
+            ranges.push(start..start + len);
+            start += len;
+        }
+        debug_assert_eq!(start, n);
+        ShardPlan { ranges }
+    }
+
+    /// Weight-balanced contiguous partition: split `0..weights.len()` so
+    /// every shard's weight sum tracks `total / shards` as closely as a
+    /// contiguous split allows (prefix-target cuts). Used for row-balanced
+    /// CSR partitioning where `weights[r]` is row r's nonzero count.
+    pub fn weighted(weights: &[usize], shards: usize) -> ShardPlan {
+        let shards = shards.max(1);
+        let n = weights.len();
+        let total: u128 = weights.iter().map(|&w| w as u128).sum();
+        let mut ranges = Vec::with_capacity(shards);
+        let mut row = 0usize;
+        let mut acc: u128 = 0;
+        for s in 0..shards {
+            let start = row;
+            let end = if s + 1 == shards {
+                n
+            } else {
+                let target = total * (s as u128 + 1) / shards as u128;
+                while row < n && acc < target {
+                    acc += weights[row] as u128;
+                    row += 1;
+                }
+                row
+            };
+            row = end;
+            ranges.push(start..end);
+        }
+        ShardPlan { ranges }
+    }
+
+    /// Number of shards in the plan (empty shards included).
+    pub fn shards(&self) -> usize {
+        self.ranges.len()
+    }
+
+    /// Total rows covered by the plan.
+    pub fn total_rows(&self) -> usize {
+        self.ranges.iter().map(|r| r.len()).sum()
+    }
+
+    /// Check the partition invariants: ascending, disjoint, gap-free
+    /// coverage of `0..total_rows()` (property-test target).
+    pub fn assert_partition(&self) {
+        let mut next = 0usize;
+        for r in &self.ranges {
+            assert_eq!(r.start, next, "shard ranges must be gap-free");
+            assert!(r.end >= r.start);
+            next = r.end;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Merge operators
+// ---------------------------------------------------------------------------
+
+/// Bin-wise histogram merge: element-wise sum of equally-sized per-shard
+/// histograms. Exact — counting is associative, so the merged histogram
+/// is bit-identical to the single-device one.
+pub fn merge_histograms(parts: &[Vec<u64>]) -> Vec<u64> {
+    let bins = parts.first().map(|p| p.len()).unwrap_or(0);
+    let mut out = vec![0u64; bins];
+    for p in parts {
+        assert_eq!(p.len(), bins, "histogram shards must have equal bin counts");
+        for (o, &v) in out.iter_mut().zip(p) {
+            *o += v;
+        }
+    }
+    out
+}
+
+/// Order-preserving concatenation merge for row-partitioned outputs
+/// (ED distances, DP values, SpMV row slices): shard outputs arrive in
+/// [`ShardPlan`] order, so plain concatenation reconstructs the global
+/// row order bit-exactly. Accepts owned vectors or borrowed slices, so
+/// callers merging sub-views need not clone per shard first.
+pub fn merge_concat<T: Clone, S: AsRef<[T]>>(parts: &[S]) -> Vec<T> {
+    let mut out = Vec::with_capacity(parts.iter().map(|p| p.as_ref().len()).sum());
+    for p in parts {
+        out.extend_from_slice(p.as_ref());
+    }
+    out
+}
+
+/// Partial-sum reduction: the host reduces one scalar per shard instead
+/// of shipping whole result vectors — the low-bandwidth merge for
+/// aggregate-only queries (8 bytes/shard on the link instead of the full
+/// readback). Summed in shard order, in f64, so the reduced value is
+/// deterministic for a given plan. Note the protocol's `checksum=` reply
+/// fields deliberately do NOT use this: they are row-order f32 sums over
+/// the merged vector, so they stay bit-identical to the single-device
+/// path (`prop_sharded_equals_single` asserts that equality).
+pub fn reduce_partial_sums(partials: &[f64]) -> f64 {
+    partials.iter().sum()
+}
+
+/// K-way top-k merge for nearest-result queries (ED): each shard ships
+/// its local `k` best `(row, score)` pairs sorted ascending by score; the
+/// host merges them into the global `k` best. Scores order by
+/// `f32::total_cmp` (a total order, so NaN inputs cannot panic the sort
+/// or make the merge shard-count-dependent) with ties breaking toward
+/// the lower row index, so the merge is deterministic.
+pub fn merge_topk(parts: &[Vec<(usize, f32)>], k: usize) -> Vec<(usize, f32)> {
+    let mut all: Vec<(usize, f32)> = Vec::with_capacity(parts.iter().map(|p| p.len()).sum());
+    for p in parts {
+        all.extend_from_slice(p);
+    }
+    all.sort_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)));
+    all.truncate(k);
+    all
+}
+
+/// Local top-k helper: the `k` smallest `(global_row, score)` pairs of one
+/// shard's scores, ascending, with `row0` the shard's first global row.
+/// Same `f32::total_cmp` + row-index ordering as [`merge_topk`].
+pub fn local_topk(scores: &[f32], row0: usize, k: usize) -> Vec<(usize, f32)> {
+    let mut idx: Vec<(usize, f32)> = scores
+        .iter()
+        .enumerate()
+        .map(|(i, &s)| (row0 + i, s))
+        .collect();
+    idx.sort_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)));
+    idx.truncate(k);
+    idx
+}
+
+// ---------------------------------------------------------------------------
+// Interconnect cost model
+// ---------------------------------------------------------------------------
+
+/// Modeled bytes of one kernel-invocation command message (verb + register
+/// parameters), before any data payload (broadcast vectors, centers).
+pub const CMD_BYTES: u64 = 64;
+
+/// Maximum shard devices a rack request may ask for — shared by the CLI
+/// `--shards` flag and the server's `RACK <n>` verb so the two surfaces
+/// cannot drift. Each shard is one OS thread plus a fully simulated
+/// device, so unbounded values would exhaust threads instead of failing
+/// cleanly.
+pub const MAX_SHARDS: usize = 64;
+
+/// Host-link cost model for a sharded rack (DESIGN.md §Sharding).
+///
+/// Charges every host↔shard message a fixed latency plus a
+/// bandwidth-proportional transfer time over ONE shared host link
+/// (messages serialize on it — the conservative choice), and a per-byte
+/// link energy. What it deliberately ignores is documented in DESIGN.md:
+/// dataset load traffic (datasets reside in PRINS by the paper's §5.3
+/// model), host-CPU merge time, and compute/transfer overlap.
+#[derive(Clone, Debug)]
+pub struct InterconnectModel {
+    /// Host-link bandwidth [bytes/s]. Default 8 GB/s (PCIe-gen3-x8-class
+    /// storage fabric).
+    pub bytes_per_s: f64,
+    /// Per-message latency \[s\]: submission + completion + protocol
+    /// overhead. Default 2 µs (NVMe-class round trip).
+    pub latency_s: f64,
+    /// Link energy per byte moved [J/byte]. Default 50 pJ/byte
+    /// (≈ 6 pJ/bit, SerDes + controller estimate).
+    pub e_per_byte: f64,
+}
+
+impl Default for InterconnectModel {
+    fn default() -> Self {
+        InterconnectModel {
+            bytes_per_s: 8e9,
+            latency_s: 2e-6,
+            e_per_byte: 50e-12,
+        }
+    }
+}
+
+impl InterconnectModel {
+    /// An idealized free interconnect (zero latency/energy) — the ablation
+    /// baseline that isolates pure device-level scaling.
+    pub fn free() -> Self {
+        InterconnectModel {
+            bytes_per_s: f64::INFINITY,
+            latency_s: 0.0,
+            e_per_byte: 0.0,
+        }
+    }
+
+    /// Wall-clock seconds to move one `bytes`-sized message.
+    pub fn transfer_s(&self, bytes: u64) -> f64 {
+        self.latency_s + bytes as f64 / self.bytes_per_s
+    }
+
+    /// One message's transfer time expressed in device cycles (rounded
+    /// up) so link costs land in the same ledger as kernel cycles.
+    pub fn transfer_cycles(&self, bytes: u64, dev: &DeviceModel) -> u64 {
+        (self.transfer_s(bytes) * dev.freq_hz).ceil() as u64
+    }
+
+    /// Total link cycles for a message sequence on the shared host link
+    /// (serialized: the sum of per-message transfer cycles).
+    pub fn link_cycles(&self, messages: &[u64], dev: &DeviceModel) -> u64 {
+        messages.iter().map(|&b| self.transfer_cycles(b, dev)).sum()
+    }
+
+    /// Link energy \[J\] for `bytes` moved (latency phases charge no
+    /// energy in this model).
+    pub fn energy_j(&self, bytes: u64) -> f64 {
+        bytes as f64 * self.e_per_byte
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_plan_is_balanced_partition() {
+        for (n, s) in [(10usize, 3usize), (0, 4), (7, 7), (5, 8), (1 << 16, 6)] {
+            let p = ShardPlan::rows(n, s);
+            assert_eq!(p.shards(), s);
+            assert_eq!(p.total_rows(), n);
+            p.assert_partition();
+            let lens: Vec<usize> = p.ranges.iter().map(|r| r.len()).collect();
+            let (mn, mx) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+            assert!(mx - mn <= 1, "{n}/{s}: {lens:?}");
+        }
+    }
+
+    #[test]
+    fn weighted_plan_balances_weight_not_rows() {
+        // one heavy row at the front: the first shard should hold few rows
+        let mut w = vec![1usize; 100];
+        w[0] = 100;
+        let p = ShardPlan::weighted(&w, 2);
+        p.assert_partition();
+        assert_eq!(p.total_rows(), 100);
+        let w0: usize = w[p.ranges[0].clone()].iter().sum();
+        let w1: usize = w[p.ranges[1].clone()].iter().sum();
+        let total: usize = w.iter().sum();
+        assert!(w0.abs_diff(w1) <= total / 2, "{w0} vs {w1}");
+        assert!(p.ranges[0].len() < p.ranges[1].len());
+    }
+
+    #[test]
+    fn weighted_plan_handles_zero_and_tail_weights() {
+        // trailing zero-weight rows must still be assigned (to the tail)
+        let w = [5usize, 0, 0, 0];
+        let p = ShardPlan::weighted(&w, 2);
+        p.assert_partition();
+        assert_eq!(p.total_rows(), 4);
+        let p = ShardPlan::weighted(&[], 3);
+        p.assert_partition();
+        assert_eq!(p.shards(), 3);
+        assert_eq!(p.total_rows(), 0);
+    }
+
+    #[test]
+    fn histogram_merge_is_binwise_sum() {
+        let a = vec![1u64, 2, 3];
+        let b = vec![10u64, 0, 5];
+        assert_eq!(merge_histograms(&[a, b]), vec![11, 2, 8]);
+        assert_eq!(merge_histograms(&[]), Vec::<u64>::new());
+    }
+
+    #[test]
+    fn concat_preserves_plan_order() {
+        let merged = merge_concat(&[vec![1, 2], vec![], vec![3]]);
+        assert_eq!(merged, vec![1, 2, 3]);
+        // borrowed-slice form: no per-shard clone required
+        let (a, b) = ([4i32, 5], [6i32]);
+        let merged = merge_concat(&[&a[..], &b[..]]);
+        assert_eq!(merged, vec![4, 5, 6]);
+    }
+
+    #[test]
+    fn partial_sum_reduce_is_shard_ordered_f64() {
+        assert_eq!(reduce_partial_sums(&[1.5, 2.25, -0.75]), 3.0);
+        assert_eq!(reduce_partial_sums(&[]), 0.0);
+    }
+
+    #[test]
+    fn topk_merge_matches_global_sort() {
+        let a = local_topk(&[5.0, 1.0, 9.0], 0, 2); // rows 0..3
+        let b = local_topk(&[0.5, 7.0], 3, 2); // rows 3..5
+        assert_eq!(a, vec![(1, 1.0), (0, 5.0)]);
+        let m = merge_topk(&[a, b], 3);
+        assert_eq!(m, vec![(3, 0.5), (1, 1.0), (0, 5.0)]);
+    }
+
+    #[test]
+    fn interconnect_costs_are_monotone() {
+        let ic = InterconnectModel::default();
+        let dev = DeviceModel::default();
+        // latency floor: 2 µs at 500 MHz = 1000 cycles
+        assert_eq!(ic.transfer_cycles(0, &dev), 1000);
+        assert!(ic.transfer_cycles(1 << 20, &dev) > ic.transfer_cycles(1 << 10, &dev));
+        assert!(ic.energy_j(1000) > 0.0);
+        let free = InterconnectModel::free();
+        assert_eq!(free.transfer_cycles(1 << 30, &dev), 0);
+        assert_eq!(free.energy_j(1 << 30), 0.0);
+    }
+}

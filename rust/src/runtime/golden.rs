@@ -8,15 +8,18 @@
 use super::{lit, Runtime};
 use crate::error::{bail, Result};
 
+/// The golden-kernel executor over an opened [`Runtime`].
 pub struct Golden {
     rt: Runtime,
 }
 
 impl Golden {
+    /// Wrap an already-opened runtime.
     pub fn new(rt: Runtime) -> Self {
         Golden { rt }
     }
 
+    /// Open the default artifact directory (see [`Runtime::open_default`]).
     pub fn open_default() -> Result<Self> {
         Ok(Golden::new(Runtime::open_default()?))
     }

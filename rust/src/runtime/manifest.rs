@@ -13,17 +13,25 @@ use std::path::Path;
 // mini JSON
 // ---------------------------------------------------------------------------
 
+/// A parsed JSON value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`
     Null,
+    /// `true` / `false`
     Bool(bool),
+    /// Any JSON number (f64 storage).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Parse a complete JSON document (trailing characters rejected).
     pub fn parse(text: &str) -> Result<Json> {
         let mut p = Parser {
             b: text.as_bytes(),
@@ -38,6 +46,7 @@ impl Json {
         Ok(v)
     }
 
+    /// Object member lookup (error on missing key / non-object).
     pub fn get(&self, key: &str) -> Result<&Json> {
         match self {
             Json::Obj(m) => m.get(key).ok_or_else(|| err!("missing key {key:?}")),
@@ -45,6 +54,7 @@ impl Json {
         }
     }
 
+    /// The value as u64 (error on non-number).
     pub fn as_u64(&self) -> Result<u64> {
         match self {
             Json::Num(n) => Ok(*n as u64),
@@ -52,6 +62,7 @@ impl Json {
         }
     }
 
+    /// The value as a string slice (error on non-string).
     pub fn as_str(&self) -> Result<&str> {
         match self {
             Json::Str(s) => Ok(s),
@@ -59,6 +70,7 @@ impl Json {
         }
     }
 
+    /// The value as an array slice (error on non-array).
     pub fn as_arr(&self) -> Result<&[Json]> {
         match self {
             Json::Arr(a) => Ok(a),
@@ -66,6 +78,7 @@ impl Json {
         }
     }
 
+    /// The value as an object map (error on non-object).
     pub fn as_obj(&self) -> Result<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Ok(m),
@@ -226,40 +239,59 @@ impl<'a> Parser<'a> {
 // manifest
 // ---------------------------------------------------------------------------
 
+/// Shape + dtype of one entry-point argument.
 #[derive(Clone, Debug)]
 pub struct ArgSpec {
+    /// Tensor dimensions.
     pub shape: Vec<usize>,
+    /// Dtype name as aot.py wrote it (e.g. "uint32").
     pub dtype: String,
 }
 
+/// One AOT-compiled entry point of the artifact set.
 #[derive(Clone, Debug)]
 pub struct EntryPoint {
+    /// HLO text file name, relative to the artifact directory.
     pub file: String,
+    /// Number of tuple outputs.
     pub outputs: usize,
+    /// Argument specs, in call order.
     pub args: Vec<ArgSpec>,
 }
 
 /// Parsed artifacts/manifest.json.
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// Bit columns of the rcam kernel's fixed shape.
     pub w: usize,
+    /// u32 words per plane (rows / 32).
     pub nw: usize,
+    /// Passes per scan-composed program call.
     pub p: usize,
+    /// BlockSpec words per grid step.
     pub block_words: usize,
+    /// Golden dense-kernel sample count.
     pub golden_n: usize,
+    /// Golden dense-kernel dimensionality.
     pub golden_d: usize,
+    /// Golden SpMV nonzero count.
     pub spmv_nnz: usize,
+    /// Golden SpMV block count.
     pub spmv_nb: usize,
+    /// Golden histogram sample count.
     pub hist_n: usize,
+    /// Entry points by name.
     pub entry_points: BTreeMap<String, EntryPoint>,
 }
 
 impl Manifest {
+    /// Load and parse a manifest.json file.
     pub fn load(path: &Path) -> Result<Self> {
         let text = std::fs::read_to_string(path)?;
         Self::parse(&text)
     }
 
+    /// Parse manifest.json text.
     pub fn parse(text: &str) -> Result<Self> {
         let j = Json::parse(text)?;
         let mut entry_points = BTreeMap::new();

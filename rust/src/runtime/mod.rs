@@ -34,6 +34,7 @@ pub use xla_backend::XlaRcamBackend;
 pub struct Runtime {
     client: xla::PjRtClient,
     dir: PathBuf,
+    /// The artifact set's parsed manifest (shapes, entry points).
     pub manifest: Manifest,
     executables: HashMap<String, xla::PjRtLoadedExecutable>,
 }
@@ -97,6 +98,7 @@ impl Runtime {
             .map_err(|e| err!("untuple {name}: {e:?}"))
     }
 
+    /// The PJRT platform name ("cpu" on the real bindings).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
@@ -107,10 +109,12 @@ pub mod lit {
     use super::xla;
     use crate::error::{err, Result};
 
+    /// 1-D u32 literal.
     pub fn u32_1d(v: &[u32]) -> xla::Literal {
         xla::Literal::vec1(v)
     }
 
+    /// rows × cols u32 literal (row-major input).
     pub fn u32_2d(v: &[u32], rows: usize, cols: usize) -> Result<xla::Literal> {
         assert_eq!(v.len(), rows * cols);
         xla::Literal::vec1(v)
@@ -118,6 +122,7 @@ pub mod lit {
             .map_err(|e| err!("reshape: {e:?}"))
     }
 
+    /// a × b × c u32 literal (row-major input).
     pub fn u32_3d(v: &[u32], a: usize, b: usize, c: usize) -> Result<xla::Literal> {
         assert_eq!(v.len(), a * b * c);
         xla::Literal::vec1(v)
@@ -125,10 +130,12 @@ pub mod lit {
             .map_err(|e| err!("reshape: {e:?}"))
     }
 
+    /// 1-D f32 literal.
     pub fn f32_1d(v: &[f32]) -> xla::Literal {
         xla::Literal::vec1(v)
     }
 
+    /// rows × cols f32 literal (row-major input).
     pub fn f32_2d(v: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
         assert_eq!(v.len(), rows * cols);
         xla::Literal::vec1(v)
@@ -136,18 +143,22 @@ pub mod lit {
             .map_err(|e| err!("reshape: {e:?}"))
     }
 
+    /// 1-D i32 literal.
     pub fn i32_1d(v: &[i32]) -> xla::Literal {
         xla::Literal::vec1(v)
     }
 
+    /// Read a literal back as u32s.
     pub fn to_u32(l: &xla::Literal) -> Result<Vec<u32>> {
         l.to_vec::<u32>().map_err(|e| err!("to_vec u32: {e:?}"))
     }
 
+    /// Read a literal back as f32s.
     pub fn to_f32(l: &xla::Literal) -> Result<Vec<f32>> {
         l.to_vec::<f32>().map_err(|e| err!("to_vec f32: {e:?}"))
     }
 
+    /// Read a literal back as i32s.
     pub fn to_i32(l: &xla::Literal) -> Result<Vec<i32>> {
         l.to_vec::<i32>().map_err(|e| err!("to_vec i32: {e:?}"))
     }

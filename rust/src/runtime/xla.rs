@@ -27,14 +27,17 @@ fn unavailable<T>() -> Result<T, XlaError> {
 pub struct PjRtClient;
 
 impl PjRtClient {
+    /// Construct the CPU client (stub: always fails with unavailable).
     pub fn cpu() -> Result<Self, XlaError> {
         unavailable()
     }
 
+    /// Compile a computation (stub: always fails).
     pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
         unavailable()
     }
 
+    /// Platform name (stub: "unavailable").
     pub fn platform_name(&self) -> String {
         "unavailable".to_string()
     }
@@ -44,6 +47,7 @@ impl PjRtClient {
 pub struct PjRtLoadedExecutable;
 
 impl PjRtLoadedExecutable {
+    /// Execute on arguments (stub: always fails).
     pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
         unavailable()
     }
@@ -53,6 +57,7 @@ impl PjRtLoadedExecutable {
 pub struct PjRtBuffer;
 
 impl PjRtBuffer {
+    /// Fetch the buffer to a host literal (stub: always fails).
     pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
         unavailable()
     }
@@ -62,6 +67,7 @@ impl PjRtBuffer {
 pub struct HloModuleProto;
 
 impl HloModuleProto {
+    /// Parse HLO text (stub: always fails).
     pub fn from_text_file(_path: &str) -> Result<Self, XlaError> {
         unavailable()
     }
@@ -71,6 +77,7 @@ impl HloModuleProto {
 pub struct XlaComputation;
 
 impl XlaComputation {
+    /// Wrap a parsed proto (constructible, but never executable).
     pub fn from_proto(_proto: &HloModuleProto) -> Self {
         XlaComputation
     }
@@ -82,18 +89,22 @@ impl XlaComputation {
 pub struct Literal;
 
 impl Literal {
+    /// Build a 1-D literal (stub: carries no data).
     pub fn vec1<T>(_v: &[T]) -> Literal {
         Literal
     }
 
+    /// Reshape (stub: always fails).
     pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, XlaError> {
         unavailable()
     }
 
+    /// Read back as a host vector (stub: always fails).
     pub fn to_vec<T>(&self) -> Result<Vec<T>, XlaError> {
         unavailable()
     }
 
+    /// Flatten a tuple literal (stub: always fails).
     pub fn to_tuple(self) -> Result<Vec<Literal>, XlaError> {
         unavailable()
     }

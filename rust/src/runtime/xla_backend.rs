@@ -17,9 +17,10 @@ use super::{lit, Runtime};
 use crate::isa::{Instr, Program};
 use crate::error::{bail, err, Result};
 
+/// RCAM array state executed through the AOT-compiled Pallas kernels.
 pub struct XlaRcamBackend {
     rt: Runtime,
-    /// Bit planes, row-major [W][NW] u32.
+    /// Bit planes, row-major \[W\]\[NW\] u32.
     planes: Vec<u32>,
     w: usize,
     nw: usize,
@@ -27,6 +28,7 @@ pub struct XlaRcamBackend {
 }
 
 impl XlaRcamBackend {
+    /// Wrap an opened runtime; plane shape comes from its manifest.
     pub fn new(rt: Runtime) -> Self {
         let (w, nw, p) = (rt.manifest.w, rt.manifest.nw, rt.manifest.p);
         XlaRcamBackend {
@@ -38,14 +40,17 @@ impl XlaRcamBackend {
         }
     }
 
+    /// Row count of the artifact's fixed shape.
     pub fn rows(&self) -> usize {
         self.nw * 32
     }
 
+    /// Bit-column count of the artifact's fixed shape.
     pub fn width(&self) -> usize {
         self.w
     }
 
+    /// Write one cell of the bit-plane state.
     pub fn set_bit(&mut self, row: usize, col: usize, v: bool) {
         assert!(row < self.rows() && col < self.w);
         let word = &mut self.planes[col * self.nw + row / 32];
@@ -57,16 +62,19 @@ impl XlaRcamBackend {
         }
     }
 
+    /// Read one cell of the bit-plane state.
     pub fn get_bit(&self, row: usize, col: usize) -> bool {
         (self.planes[col * self.nw + row / 32] >> (row % 32)) & 1 == 1
     }
 
+    /// Write `width` bits of `value` into one row (storage path).
     pub fn load_row_bits(&mut self, row: usize, base: usize, width: usize, value: u64) {
         for i in 0..width {
             self.set_bit(row, base + i, (value >> i) & 1 == 1);
         }
     }
 
+    /// Read `width` bits of one row (storage path).
     pub fn fetch_row_bits(&self, row: usize, base: usize, width: usize) -> u64 {
         let mut v = 0u64;
         for i in 0..width {

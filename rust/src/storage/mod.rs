@@ -17,15 +17,19 @@ use std::collections::BTreeMap;
 /// A physical row range inside the PRINS array.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct RowRange {
+    /// First physical row.
     pub start: usize,
+    /// Number of rows.
     pub len: usize,
 }
 
 impl RowRange {
+    /// One past the last row: `start + len`.
     pub fn end(&self) -> usize {
         self.start + self.len
     }
 
+    /// Whether the two ranges share any row.
     pub fn overlaps(&self, other: &RowRange) -> bool {
         self.start < other.end() && other.start < self.end()
     }
@@ -34,8 +38,11 @@ impl RowRange {
 /// Handle to an allocated dataset: rows + its row layout.
 #[derive(Clone, Debug)]
 pub struct Dataset {
+    /// Allocation id (the translation-table key).
     pub id: u64,
+    /// Physical rows backing the dataset.
     pub rows: RowRange,
+    /// Named bit-field layout of each row.
     pub layout: RowLayout,
 }
 
@@ -50,6 +57,8 @@ pub struct StorageManager {
 }
 
 impl StorageManager {
+    /// A storage manager over an array of `total_rows` rows, nothing
+    /// allocated.
     pub fn new(total_rows: usize) -> Self {
         StorageManager {
             allocations: BTreeMap::new(),
@@ -95,10 +104,12 @@ impl StorageManager {
         ds.rows.start + logical
     }
 
+    /// Rows currently allocated to datasets.
     pub fn allocated_rows(&self) -> usize {
         self.allocations.values().map(|r| r.len).sum()
     }
 
+    /// Rows still available for allocation.
     pub fn free_rows(&self) -> usize {
         self.total_rows - self.allocated_rows()
     }

@@ -9,11 +9,16 @@
 
 use crate::rcam::{DeviceModel, PrinsArray};
 
+/// Aggregate wear statistics over the whole chain's per-row counters.
 #[derive(Clone, Debug, PartialEq)]
 pub struct WearReport {
+    /// Writes seen by the most-written row.
     pub max_writes: u32,
+    /// Mean writes per row.
     pub mean_writes: f64,
+    /// Total writes across all rows.
     pub total_writes: u64,
+    /// Rows covered by the report.
     pub rows: usize,
     /// max/mean imbalance; 1.0 = perfectly level
     pub imbalance: f64,
@@ -59,6 +64,7 @@ pub fn projected_lifetime_s(
     device.endurance / hottest_rate
 }
 
+/// Render a lifetime in hours/days/years ("unlimited" for ∞).
 pub fn lifetime_human(seconds: f64) -> String {
     if !seconds.is_finite() {
         return "unlimited".into();

@@ -11,19 +11,24 @@ use super::rng::Rng;
 /// Adjacency-list digraph.
 #[derive(Clone, Debug)]
 pub struct Graph {
+    /// Vertex count.
     pub n: usize,
+    /// Out-neighbour lists, one per vertex.
     pub adj: Vec<Vec<u32>>,
 }
 
 impl Graph {
+    /// Directed edge count.
     pub fn edges(&self) -> usize {
         self.adj.iter().map(|a| a.len()).sum()
     }
 
+    /// Average out-degree.
     pub fn avg_degree(&self) -> f64 {
         self.edges() as f64 / self.n as f64
     }
 
+    /// Maximum out-degree.
     pub fn max_degree(&self) -> usize {
         self.adj.iter().map(|a| a.len()).max().unwrap_or(0)
     }
@@ -59,6 +64,7 @@ impl Graph {
         out
     }
 
+    /// Structural invariants (proptest target).
     pub fn validate(&self) {
         assert_eq!(self.adj.len(), self.n);
         for nbrs in &self.adj {
@@ -126,11 +132,17 @@ pub fn synth_rmat(scale: u32, avg_degree: f64, seed: u64) -> Graph {
 /// One graph of the paper's Table 3: name + original stats.
 #[derive(Clone, Copy, Debug)]
 pub struct PaperGraph {
+    /// Graph name as the paper lists it.
     pub name: &'static str,
+    /// Vertices, in millions.
     pub v_millions: f64,
+    /// Edges, in millions.
     pub e_millions: f64,
+    /// Average out-degree.
     pub avg_d: f64,
+    /// Maximum out-degree.
     pub max_d: u64,
+    /// Whether the original is a Kronecker (RMAT) graph.
     pub kron: bool,
 }
 

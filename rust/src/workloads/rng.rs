@@ -2,12 +2,14 @@
 //! xoshiro256**) — the vendored crate set has no `rand`, and determinism
 //! across runs matters for the benches anyway.
 
+/// xoshiro256** PRNG state.
 #[derive(Clone, Debug)]
 pub struct Rng {
     s: [u64; 4],
 }
 
 impl Rng {
+    /// Seed the generator deterministically (SplitMix64 expansion).
     pub fn seed_from(seed: u64) -> Self {
         let mut sm = seed;
         let mut next = || {
@@ -22,6 +24,7 @@ impl Rng {
         }
     }
 
+    /// Next uniform u64.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let r = self.s[1]
@@ -38,6 +41,7 @@ impl Rng {
         r
     }
 
+    /// Next uniform u32 (high bits of [`Rng::next_u64`]).
     #[inline]
     pub fn next_u32(&mut self) -> u32 {
         (self.next_u64() >> 32) as u32
@@ -75,6 +79,7 @@ impl Rng {
         s * (12.0f32 / 4.0).sqrt()
     }
 
+    /// Fisher–Yates in-place shuffle.
     pub fn shuffle<T>(&mut self, v: &mut [T]) {
         for i in (1..v.len()).rev() {
             let j = self.below(i as u64 + 1) as usize;

@@ -14,23 +14,61 @@ use super::rng::Rng;
 /// CSR square sparse matrix (f32 values).
 #[derive(Clone, Debug)]
 pub struct Csr {
+    /// Matrix dimension (square: n × n).
     pub n: usize,
+    /// Row pointers: row r's nonzeros are `indptr[r]..indptr[r+1]`.
     pub indptr: Vec<usize>,
+    /// Column index of each nonzero.
     pub indices: Vec<u32>,
+    /// Value of each nonzero.
     pub values: Vec<f32>,
 }
 
 impl Csr {
+    /// Nonzero count.
     pub fn nnz(&self) -> usize {
         self.values.len()
     }
 
+    /// Density nnz/n (the paper's Fig. 13 ordering key).
     pub fn density(&self) -> f64 {
         self.nnz() as f64 / self.n as f64
     }
 
+    /// Longest row's nonzero count (the chain-scan depth driver).
     pub fn max_row_nnz(&self) -> usize {
         self.indptr.windows(2).map(|w| w[1] - w[0]).max().unwrap_or(0)
+    }
+
+    /// Per-row nonzero counts — the partition weights for row-balanced
+    /// sharding (`ShardPlan::weighted`).
+    pub fn row_nnz(&self) -> Vec<usize> {
+        self.indptr.windows(2).map(|w| w[1] - w[0]).collect()
+    }
+
+    /// The same matrix with every row outside `rows` emptied — shard s's
+    /// sub-matrix under row-range partitioning. Dimensions, row ids and
+    /// column ids are unchanged, so the sub-matrix's SpMV output rows
+    /// inside `rows` are bit-identical to the full matrix's.
+    pub fn mask_rows(&self, rows: std::ops::Range<usize>) -> Csr {
+        let mut indptr = Vec::with_capacity(self.n + 1);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        indptr.push(0usize);
+        for r in 0..self.n {
+            if rows.contains(&r) {
+                let (a, b) = (self.indptr[r], self.indptr[r + 1]);
+                indices.extend_from_slice(&self.indices[a..b]);
+                values.extend_from_slice(&self.values[a..b]);
+            }
+            indptr.push(indices.len());
+        }
+        Csr {
+            n: self.n,
+            indptr,
+            indices,
+            values,
+        }
     }
 
     /// y = A·x (scalar reference implementation — the CPU baseline).
@@ -115,12 +153,16 @@ pub fn synth_csr(n: usize, nnz_target: usize, seed: u64) -> Csr {
 /// One matrix of the paper's Fig. 13 set: name + original (n, nnz).
 #[derive(Clone, Copy, Debug)]
 pub struct PaperMatrix {
+    /// Matrix name as the SuiteSparse collection lists it.
     pub name: &'static str,
+    /// Dimension of the original matrix.
     pub n: usize,
+    /// Nonzero count of the original matrix.
     pub nnz: usize,
 }
 
 impl PaperMatrix {
+    /// Density nnz/n of the original matrix.
     pub fn density(&self) -> f64 {
         self.nnz as f64 / self.n as f64
     }
@@ -218,6 +260,26 @@ mod tests {
         // density span covers the >100x-speedup regime (dense end ~400)
         assert!(PAPER_MATRICES.last().unwrap().density() > 300.0);
         assert!(PAPER_MATRICES[0].density() < 5.0);
+    }
+
+    #[test]
+    fn mask_rows_keeps_shape_and_slices_rows() {
+        let a = synth_csr(64, 300, 3);
+        let sub = a.mask_rows(16..40);
+        sub.validate();
+        assert_eq!(sub.n, a.n);
+        let weights = a.row_nnz();
+        assert_eq!(weights.len(), a.n);
+        assert_eq!(sub.nnz(), weights[16..40].iter().sum::<usize>());
+        let x: Vec<f32> = (0..a.n).map(|i| (i as f32 * 0.37).sin()).collect();
+        let (yf, ys) = (a.spmv(&x), sub.spmv(&x));
+        for r in 0..a.n {
+            if (16..40).contains(&r) {
+                assert_eq!(yf[r].to_bits(), ys[r].to_bits(), "row {r}");
+            } else {
+                assert_eq!(ys[r], 0.0, "row {r} must be empty");
+            }
+        }
     }
 
     #[test]

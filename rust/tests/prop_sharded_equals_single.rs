@@ -1,0 +1,218 @@
+//! Property suite for the sharded rack (ISSUE 3 acceptance gate): for
+//! random workloads and shard counts {1, 2, 3, 8}, the rack-sharded
+//! histogram / dot-product / Euclidean-distance / SpMV paths must produce
+//! results, checksums, and merged histograms **bit-equal** to the
+//! single-device kernels. Cycles and energy may legitimately differ (the
+//! rack charges the host link and one controller per shard) and are
+//! asserted ≥ the single-device analytic floors:
+//!
+//!   * ED / DP: per-shard cycles are row-count-independent, so the
+//!     slowest shard equals the single device exactly and the rack total
+//!     (plus link) strictly exceeds it;
+//!   * histogram: every shard replays the identical 2-op-per-bin
+//!     program; the link latency (≥ 1000 cycles/message) strictly
+//!     dominates the per-shard reduction-drain savings (≤ ~20 cycles);
+//!   * SpMV: the O(n) broadcast and multiply phases are shard-invariant
+//!     floors; link latency dominates the chain-reduce level savings;
+//!   * energy: row-partitioning preserves the dominant write/compare
+//!     event counts, and per-shard controller static power plus link
+//!     energy only add — so rack energy exceeds the single device's
+//!     dynamic energy.
+
+use prins::algorithms::{
+    dot_sharded, euclidean_sharded, histogram_sharded, spmv_sharded, DotKernel, EuclideanKernel,
+    HistogramKernel, ReduceEngine, SpmvKernel,
+};
+use prins::controller::Controller;
+use prins::host::rack::PrinsRack;
+use prins::rcam::shard::local_topk;
+use prins::rcam::{DeviceModel, ExecBackend, InterconnectModel, PrinsArray};
+use prins::storage::StorageManager;
+use prins::workloads::{synth_csr, synth_hist_samples, Rng};
+
+const SHARD_COUNTS: [usize; 4] = [1, 2, 3, 8];
+
+fn rack(shards: usize) -> PrinsRack {
+    PrinsRack::with_config(
+        shards,
+        DeviceModel::default(),
+        ExecBackend::Serial,
+        InterconnectModel::default(),
+    )
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: element {i} ({x} vs {y})");
+    }
+}
+
+#[test]
+fn prop_sharded_equals_single_histogram() {
+    let mut rng = Rng::seed_from(0x5EED_0001);
+    let dev = DeviceModel::default();
+    for case in 0..4u64 {
+        let n = 200 + rng.below(2500) as usize;
+        let xs = synth_hist_samples(n, 90 + case);
+        let mut array = PrinsArray::single(n, 40);
+        let mut sm = StorageManager::new(n);
+        let kern = HistogramKernel::load(&mut sm, &mut array, &xs);
+        let mut ctl = Controller::new(array);
+        let single = kern.run(&mut ctl);
+        for s in SHARD_COUNTS {
+            let res = histogram_sharded(&rack(s), &xs);
+            let label = format!("hist case {case} shards {s}");
+            assert_eq!(res.hist, single.hist, "{label}: merged histogram");
+            assert_eq!(res.rack.shards, s, "{label}");
+            assert_eq!(res.rack.link_messages, 2 * s as u64, "{label}");
+            assert!(
+                res.rack.max_shard_cycles >= 2 * 256,
+                "{label}: per-shard issue-cycle floor"
+            );
+            assert!(
+                res.rack.total_cycles >= single.stats.cycles,
+                "{label}: rack {} < single {}",
+                res.rack.total_cycles,
+                single.stats.cycles
+            );
+            assert!(
+                res.rack.energy_j > single.stats.ledger.dynamic_energy_j(&dev),
+                "{label}: energy floor"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_sharded_equals_single_dot() {
+    let mut rng = Rng::seed_from(0x5EED_0002);
+    let dev = DeviceModel::default();
+    for case in 0..3 {
+        let n = 16 + rng.below(60) as usize;
+        let dims = 1 + rng.below(4) as usize;
+        let x: Vec<f32> = (0..n * dims).map(|_| rng.f32_range(-4.0, 4.0)).collect();
+        let h: Vec<f32> = (0..dims).map(|_| rng.f32_range(-4.0, 4.0)).collect();
+        let layout = prins::algorithms::dot::DotLayout::new(dims);
+        let mut array = PrinsArray::single(n, layout.width as usize);
+        let mut sm = StorageManager::new(n);
+        let kern = DotKernel::load(&mut sm, &mut array, &x, n, dims);
+        let mut ctl = Controller::new(array);
+        let single = kern.run(&mut ctl, &sm, &h);
+        let single_checksum: f32 = single.dp.iter().sum();
+        for s in SHARD_COUNTS {
+            let res = dot_sharded(&rack(s), &x, n, dims, &h);
+            let label = format!("dp case {case} shards {s}");
+            assert_bits_eq(&res.dp, &single.dp, &label);
+            assert_eq!(
+                res.checksum.to_bits(),
+                single_checksum.to_bits(),
+                "{label}: checksum"
+            );
+            // the DP program is row-count independent: every shard replays
+            // it exactly, so the slowest shard IS the single device
+            assert_eq!(
+                res.rack.max_shard_cycles, single.stats.cycles,
+                "{label}: shard cycles"
+            );
+            assert!(
+                res.rack.total_cycles > single.stats.cycles,
+                "{label}: link charge must be visible"
+            );
+            assert!(
+                res.rack.energy_j > single.stats.ledger.dynamic_energy_j(&dev),
+                "{label}: energy floor"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_sharded_equals_single_euclidean() {
+    let mut rng = Rng::seed_from(0x5EED_0003);
+    let dev = DeviceModel::default();
+    for case in 0..2 {
+        let n = 16 + rng.below(48) as usize;
+        let dims = 1 + rng.below(3) as usize;
+        let k = 1 + rng.below(3) as usize;
+        let x: Vec<f32> = (0..n * dims).map(|_| rng.f32_range(-8.0, 8.0)).collect();
+        let centers: Vec<f32> = (0..k * dims).map(|_| rng.f32_range(-8.0, 8.0)).collect();
+        let layout = prins::algorithms::euclidean::EuclideanLayout::new(dims);
+        let mut array = PrinsArray::single(n, layout.width as usize);
+        let mut sm = StorageManager::new(n);
+        let kern = EuclideanKernel::load(&mut sm, &mut array, &x, n, dims);
+        let mut ctl = Controller::new(array);
+        let single = kern.run(&mut ctl, &sm, &centers, k);
+        let single_checksum: f32 = single.dists.iter().flat_map(|d| d.iter()).sum();
+        for s in SHARD_COUNTS {
+            let res = euclidean_sharded(&rack(s), &x, n, dims, &centers, k, 3);
+            let label = format!("ed case {case} shards {s}");
+            for c in 0..k {
+                assert_bits_eq(&res.dists[c], &single.dists[c], &format!("{label} center {c}"));
+                // the k-way top-k merge must agree with a global sort of
+                // the single-device distances
+                let expect = local_topk(&single.dists[c], 0, 3);
+                assert_eq!(res.nearest[c], expect, "{label} center {c}: top-k merge");
+            }
+            assert_eq!(
+                res.checksum.to_bits(),
+                single_checksum.to_bits(),
+                "{label}: checksum"
+            );
+            assert_eq!(
+                res.rack.max_shard_cycles, single.stats.cycles,
+                "{label}: shard cycles"
+            );
+            assert!(res.rack.total_cycles > single.stats.cycles, "{label}");
+            assert!(
+                res.rack.energy_j > single.stats.ledger.dynamic_energy_j(&dev),
+                "{label}: energy floor"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_sharded_equals_single_spmv() {
+    let mut rng = Rng::seed_from(0x5EED_0004);
+    let dev = DeviceModel::default();
+    for case in 0..2u64 {
+        let n = 48 + rng.below(200) as usize;
+        let nnz = n * (2 + rng.below(6) as usize);
+        let a = synth_csr(n, nnz, 40 + case);
+        let x: Vec<f32> = (0..n).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+        let mut array = PrinsArray::single(a.nnz(), 256);
+        let mut sm = StorageManager::new(a.nnz());
+        let kern = SpmvKernel::load(&mut sm, &mut array, &a);
+        let mut ctl = Controller::new(array);
+        let single = kern.run(&mut ctl, &x, ReduceEngine::ChainTree);
+        let single_checksum: f32 = single.y.iter().sum();
+        for s in SHARD_COUNTS {
+            let res = spmv_sharded(&rack(s), &a, &x);
+            let label = format!("spmv case {case} shards {s}");
+            assert_bits_eq(&res.y, &single.y, &label);
+            assert_eq!(
+                res.checksum.to_bits(),
+                single_checksum.to_bits(),
+                "{label}: checksum"
+            );
+            // broadcast (O(n), serialized over x) and multiply (row-count
+            // independent) are shard-invariant analytic floors
+            assert!(
+                res.rack.max_shard_cycles
+                    >= single.broadcast_cycles + single.multiply_cycles,
+                "{label}: broadcast+multiply floor"
+            );
+            assert!(
+                res.rack.total_cycles >= single.stats.cycles,
+                "{label}: rack {} < single {} (link must dominate reduce savings)",
+                res.rack.total_cycles,
+                single.stats.cycles
+            );
+            assert!(
+                res.rack.energy_j > single.stats.ledger.dynamic_energy_j(&dev),
+                "{label}: energy floor"
+            );
+        }
+    }
+}
