@@ -79,16 +79,23 @@ pub struct DotResult {
 }
 
 /// Loaded dot-product dataset + program generator.
+///
+/// Load-once / query-many: [`DotKernel::load`] writes the vectors into
+/// RCAM rows once (charged, [`DotKernel::load_stats`]); each
+/// [`DotKernel::query`] broadcasts a fresh H against the resident rows
+/// and charges only query cycles/energy.
 pub struct DotKernel {
     /// The row layout in use.
     pub layout: DotLayout,
     /// Number of loaded vectors.
     pub n: usize,
     ds: Dataset,
+    load_stats: ExecStats,
 }
 
 impl DotKernel {
-    /// Allocate rows and load `n` × `dims` vectors (row-major).
+    /// Allocate rows and load `n` × `dims` vectors (row-major). One
+    /// charged row write per stored attribute: `n × dims` × 33 bits.
     pub fn load(
         sm: &mut StorageManager,
         array: &mut PrinsArray,
@@ -102,9 +109,10 @@ impl DotKernel {
         let ds = sm
             .alloc(n, RowLayout::new(layout.width))
             .expect("storage full");
+        let (c0, l0) = (array.cycles, array.ledger());
         for i in 0..n {
             for j in 0..dims {
-                array.load_row_bits(
+                array.load_row_bits_charged(
                     ds.rows.start + i,
                     layout.x[j].sign as usize,
                     33,
@@ -112,7 +120,25 @@ impl DotKernel {
                 );
             }
         }
-        DotKernel { layout, n, ds }
+        let load_stats = ExecStats::since(array, c0, &l0);
+        DotKernel {
+            layout,
+            n,
+            ds,
+            load_stats,
+        }
+    }
+
+    /// Device-model cost of the load phase (paid once per dataset).
+    pub fn load_stats(&self) -> &ExecStats {
+        &self.load_stats
+    }
+
+    /// Analytic cycle cost of one query — the per-repetition floor of a
+    /// resident dataset. Exact: the microcode's shape depends only on the
+    /// layout, never on H values.
+    pub fn query_floor_cycles(&self) -> u64 {
+        self.program(&vec![0.0f32; self.layout.dims]).cycle_estimate()
     }
 
     /// The full associative DP program for broadcast vector `h`
@@ -146,8 +172,17 @@ impl DotKernel {
         prog
     }
 
-    /// Execute the DP program and read every vector's result back.
+    /// One-shot alias for [`DotKernel::query`], kept for the
+    /// load-and-run-once callers (CLI, figures, examples).
     pub fn run(&self, ctl: &mut Controller, sm: &StorageManager, h: &[f32]) -> DotResult {
+        self.query(ctl, sm, h)
+    }
+
+    /// Query phase: execute the DP program for broadcast vector `h`
+    /// against the resident vectors and read every result back. Charges
+    /// only query cycles/energy; stored attribute fields are read-only to
+    /// the program, so repeat queries are bit-identical.
+    pub fn query(&self, ctl: &mut Controller, sm: &StorageManager, h: &[f32]) -> DotResult {
         ctl.begin_stats();
         let prog = self.program(h);
         ctl.execute(&prog);
@@ -179,14 +214,100 @@ pub struct ShardedDotResult {
     pub rack: RackStats,
 }
 
-/// Rack-sharded dot product: vectors are row-range-partitioned over the
-/// rack's shards, every shard broadcasts the same H and runs the full
-/// Fig. 8 program on its slice concurrently (the per-shard cycle count is
-/// row-count-independent, so each shard replays the identical program),
-/// and the host concatenates the per-shard outputs in plan order
-/// ([`merge_concat`]). The host link is charged one command message with
-/// the H payload plus one per-shard result readback (DESIGN.md
-/// §Sharding).
+/// One shard's resident DP state: controller, storage manager, kernel.
+struct DotShard {
+    ctl: Controller,
+    sm: StorageManager,
+    kern: DotKernel,
+}
+
+/// A rack-resident DP dataset: vectors row-range-partitioned over the
+/// rack's shards, loaded **once**, then queried many times with fresh
+/// broadcast vectors. Query results are bit-identical to [`dot_sharded`]
+/// while charging only query cycles plus per-query link messages.
+pub struct ResidentDot {
+    rack: PrinsRack,
+    plan: ShardPlan,
+    dims: usize,
+    /// Loaded vector count (global, across all shards).
+    pub n: usize,
+    shards: Vec<DotShard>,
+    load: RackStats,
+}
+
+impl ResidentDot {
+    /// Load phase: partition `x` (row-major n×dims) over the rack and
+    /// write every shard's slice into its array once (one command +
+    /// sample payload per shard on the host link).
+    pub fn load(rack: &PrinsRack, x: &[f32], n: usize, dims: usize) -> Self {
+        assert_eq!(x.len(), n * dims);
+        let plan = ShardPlan::rows(n, rack.n_shards());
+        let width = DotLayout::new(dims).width as usize;
+        let shards = rack.run_shards(&plan, |_s, r| {
+            let rows = r.len();
+            let xs = &x[r.start * dims..r.end * dims];
+            let mut array = rack.shard_array(rows, width);
+            let mut sm = StorageManager::new(array.total_rows());
+            let kern = DotKernel::load(&mut sm, &mut array, xs, rows, dims);
+            DotShard {
+                ctl: Controller::new(array),
+                sm,
+                kern,
+            }
+        });
+        let load_stats: Vec<ExecStats> =
+            shards.iter().map(|s| s.kern.load_stats().clone()).collect();
+        let payload: Vec<u64> = plan
+            .ranges
+            .iter()
+            .map(|r| 4 * (r.len() * dims) as u64)
+            .collect();
+        let load = rack.finish_load(load_stats, &payload);
+        ResidentDot {
+            rack: rack.clone(),
+            plan,
+            dims,
+            n,
+            shards,
+            load,
+        }
+    }
+
+    /// Device + link cost of the load phase (paid once per dataset).
+    pub fn load_report(&self) -> &RackStats {
+        &self.load
+    }
+
+    /// Query phase: broadcast `h` to every shard concurrently and
+    /// concatenate per-shard outputs in plan order — zero load-phase
+    /// writes.
+    pub fn query(&mut self, h: &[f32]) -> ShardedDotResult {
+        assert_eq!(h.len(), self.dims);
+        let plan = &self.plan;
+        let runs = self.rack.query_shards(&mut self.shards, |_i, sh| {
+            let res = sh.kern.query(&mut sh.ctl, &sh.sm, h);
+            (res.dp, res.stats)
+        });
+        let (dps, stats): (Vec<_>, Vec<_>) = runs.into_iter().unzip();
+        let dp = merge_concat(&dps);
+        let checksum = dp.iter().sum();
+        let mut msgs = Vec::with_capacity(2 * plan.shards());
+        for rng in &plan.ranges {
+            msgs.push(CMD_BYTES + 4 * self.dims as u64); // command + H payload
+            msgs.push(4 * rng.len() as u64); // per-shard DP readback
+        }
+        ShardedDotResult {
+            dp,
+            checksum,
+            rack: self.rack.finish(stats, &msgs),
+        }
+    }
+}
+
+/// Rack-sharded dot product, one-shot: [`ResidentDot::load`] followed by
+/// a single [`ResidentDot::query`], whose per-shard stats windows and
+/// merge path it shares. The reported [`RackStats`] cover the query phase
+/// only (the load cost is on [`ResidentDot::load_report`]).
 pub fn dot_sharded(
     rack: &PrinsRack,
     x: &[f32],
@@ -194,33 +315,7 @@ pub fn dot_sharded(
     dims: usize,
     h: &[f32],
 ) -> ShardedDotResult {
-    assert_eq!(x.len(), n * dims);
-    assert_eq!(h.len(), dims);
-    let plan = ShardPlan::rows(n, rack.n_shards());
-    let width = DotLayout::new(dims).width as usize;
-    let runs = rack.run_shards(&plan, |_s, r| {
-        let rows = r.len();
-        let xs = &x[r.start * dims..r.end * dims];
-        let mut array = rack.shard_array(rows, width);
-        let mut sm = StorageManager::new(array.total_rows());
-        let kern = DotKernel::load(&mut sm, &mut array, xs, rows, dims);
-        let mut ctl = Controller::new(array);
-        let res = kern.run(&mut ctl, &sm, h);
-        (res.dp, res.stats)
-    });
-    let (dps, stats): (Vec<_>, Vec<_>) = runs.into_iter().unzip();
-    let dp = merge_concat(&dps);
-    let checksum = dp.iter().sum();
-    let mut msgs = Vec::with_capacity(2 * plan.shards());
-    for rng in &plan.ranges {
-        msgs.push(CMD_BYTES + 4 * dims as u64); // command + H payload
-        msgs.push(4 * rng.len() as u64); // per-shard DP readback
-    }
-    ShardedDotResult {
-        dp,
-        checksum,
-        rack: rack.finish(stats, &msgs),
-    }
+    ResidentDot::load(rack, x, n, dims).query(h)
 }
 
 /// Scalar CPU baseline.
@@ -256,6 +351,34 @@ mod tests {
                 expect[i]
             );
         }
+    }
+
+    #[test]
+    fn resident_dp_queries_repeat_and_hit_floor() {
+        let (n, dims) = (20usize, 3usize);
+        let mut rng = Rng::seed_from(13);
+        let x: Vec<f32> = (0..n * dims).map(|_| rng.f32_range(-2.0, 2.0)).collect();
+        let h1: Vec<f32> = (0..dims).map(|_| rng.f32_range(-2.0, 2.0)).collect();
+        let h2: Vec<f32> = (0..dims).map(|_| rng.f32_range(-2.0, 2.0)).collect();
+        let rack = PrinsRack::new(2);
+        let mut res = ResidentDot::load(&rack, &x, n, dims);
+        assert!(res.load_report().total_cycles > 0);
+        let one_shot = dot_sharded(&rack, &x, n, dims, &h1);
+        let qa = res.query(&h1);
+        let qb = res.query(&h2); // different hyperplane on the same data
+        let qc = res.query(&h1); // back to h1: bit-identical to the first
+        assert!(one_shot.dp.iter().zip(&qa.dp).all(|(a, b)| a.to_bits() == b.to_bits()));
+        assert!(qa.dp.iter().zip(&qc.dp).all(|(a, b)| a.to_bits() == b.to_bits()));
+        assert_eq!(qa.rack.total_cycles, qb.rack.total_cycles, "query cost is value-independent");
+        // single-device floor check
+        let layout = DotLayout::new(dims);
+        let mut array = PrinsArray::single(n, layout.width as usize);
+        let mut sm = StorageManager::new(n);
+        let kern = DotKernel::load(&mut sm, &mut array, &x, n, dims);
+        assert_eq!(kern.load_stats().cycles, 2 * (n * dims) as u64);
+        let mut ctl = Controller::new(array);
+        let r = kern.query(&mut ctl, &sm, &h1);
+        assert_eq!(r.stats.cycles, kern.query_floor_cycles());
     }
 
     #[test]

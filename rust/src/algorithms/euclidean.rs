@@ -93,16 +93,25 @@ pub struct EdResult {
 }
 
 /// Loaded ED dataset + per-center program generator.
+///
+/// The **load phase** ([`EuclideanKernel::load`]) writes the samples into
+/// RCAM rows once and is charged to the device model
+/// ([`EuclideanKernel::load_stats`]); every **query phase** call
+/// ([`EuclideanKernel::query`]) broadcasts a fresh center set against the
+/// already-resident rows and charges only query cycles/energy — stored
+/// attribute fields are never rewritten, so queries repeat bit-identically.
 pub struct EuclideanKernel {
     /// The row layout in use.
     pub layout: EuclideanLayout,
     /// Number of loaded samples.
     pub n: usize,
     ds: Dataset,
+    load_stats: ExecStats,
 }
 
 impl EuclideanKernel {
-    /// Allocate + load samples (row-major n×dims).
+    /// Allocate + load samples (row-major n×dims). One charged row write
+    /// per stored attribute: `n × dims` writes of 33 bits each.
     pub fn load(
         sm: &mut StorageManager,
         array: &mut PrinsArray,
@@ -119,10 +128,11 @@ impl EuclideanKernel {
             array.width()
         );
         let ds = sm.alloc(n, layout.row_layout()).expect("storage full");
+        let (c0, l0) = (array.cycles, array.ledger());
         for i in 0..n {
             for j in 0..dims {
                 let f = layout.x[j];
-                array.load_row_bits(
+                array.load_row_bits_charged(
                     ds.rows.start + i,
                     f.sign as usize,
                     33,
@@ -130,7 +140,28 @@ impl EuclideanKernel {
                 );
             }
         }
-        EuclideanKernel { layout, n, ds }
+        let load_stats = ExecStats::since(array, c0, &l0);
+        EuclideanKernel {
+            layout,
+            n,
+            ds,
+            load_stats,
+        }
+    }
+
+    /// Device-model cost of the load phase (paid once per dataset).
+    pub fn load_stats(&self) -> &ExecStats {
+        &self.load_stats
+    }
+
+    /// Analytic cycle cost of one query over `n_centers` centers — the
+    /// query floor a resident dataset pays per repetition. The emitted
+    /// microcode's shape depends only on the layout (never on center
+    /// values), so the floor is exact: the wear/ledger regression suite
+    /// asserts measured query cycles equal it.
+    pub fn query_floor_cycles(&self, n_centers: usize) -> u64 {
+        let zeros = vec![0.0f32; self.layout.dims];
+        self.center_program(&zeros).cycle_estimate() * n_centers as u64
     }
 
     /// The per-center associative program (Fig. 7 lines 2–7).
@@ -170,8 +201,24 @@ impl EuclideanKernel {
         prog
     }
 
-    /// Run for all centers (Fig. 7 line 1 loop), reading distances back.
+    /// One-shot alias for [`EuclideanKernel::query`], kept for the
+    /// load-and-run-once callers (CLI, figures, examples).
     pub fn run(
+        &self,
+        ctl: &mut Controller,
+        sm: &StorageManager,
+        centers: &[f32],
+        n_centers: usize,
+    ) -> EdResult {
+        self.query(ctl, sm, centers, n_centers)
+    }
+
+    /// Query phase: run the per-center program for all centers (Fig. 7
+    /// line 1 loop) against the resident samples and read distances back.
+    /// Charges only query cycles/energy (the stats window opens here);
+    /// repeat queries are bit-identical because stored attribute fields
+    /// are read-only to the program.
+    pub fn query(
         &self,
         ctl: &mut Controller,
         sm: &StorageManager,
@@ -220,15 +267,125 @@ pub struct ShardedEdResult {
     pub rack: RackStats,
 }
 
-/// Rack-sharded Euclidean distance: samples are row-range-partitioned
-/// over the rack's shards, every shard broadcasts the same centers and
-/// runs the full Fig. 7 program on its slice concurrently (per-shard
-/// cycles are row-count-independent, so each shard replays the identical
-/// program). The host concatenates per-shard distance vectors in plan
-/// order and k-way-merges per-shard top-`topk` lists into the global
-/// nearest set per center. The host link is charged one command message
-/// with the centers payload plus one per-shard distance readback
-/// (DESIGN.md §Sharding).
+/// One shard's resident ED state: the controller owning the shard array,
+/// the shard's storage manager, and the loaded kernel.
+struct EdShard {
+    ctl: Controller,
+    sm: StorageManager,
+    kern: EuclideanKernel,
+}
+
+/// A rack-resident ED dataset: samples row-range-partitioned over the
+/// rack's shards, loaded **once**, then queried many times with fresh
+/// center sets. Each query replays the Fig. 7 program on every shard
+/// concurrently against the already-resident rows and merges host-side
+/// exactly like the one-shot path (order-preserving concat + k-way top-k
+/// merge), so query results are bit-identical to [`euclidean_sharded`]
+/// while charging only query cycles plus the per-query link messages.
+pub struct ResidentEuclidean {
+    rack: PrinsRack,
+    plan: ShardPlan,
+    dims: usize,
+    /// Loaded sample count (global, across all shards).
+    pub n: usize,
+    shards: Vec<EdShard>,
+    load: RackStats,
+}
+
+impl ResidentEuclidean {
+    /// Load phase: partition `x` (row-major n×dims) over the rack and
+    /// write every shard's slice into its array once. The host link is
+    /// charged one command + sample payload per shard; per-shard load
+    /// cycles/energy come from the charged storage writes.
+    pub fn load(rack: &PrinsRack, x: &[f32], n: usize, dims: usize) -> Self {
+        assert_eq!(x.len(), n * dims);
+        let plan = ShardPlan::rows(n, rack.n_shards());
+        let width = EuclideanLayout::new(dims).width as usize;
+        let shards = rack.run_shards(&plan, |_s, r| {
+            let rows = r.len();
+            let xs = &x[r.start * dims..r.end * dims];
+            let mut array = rack.shard_array(rows, width);
+            let mut sm = StorageManager::new(array.total_rows());
+            let kern = EuclideanKernel::load(&mut sm, &mut array, xs, rows, dims);
+            EdShard {
+                ctl: Controller::new(array),
+                sm,
+                kern,
+            }
+        });
+        let load_stats: Vec<ExecStats> =
+            shards.iter().map(|s| s.kern.load_stats().clone()).collect();
+        let payload: Vec<u64> = plan
+            .ranges
+            .iter()
+            .map(|r| 4 * (r.len() * dims) as u64)
+            .collect();
+        let load = rack.finish_load(load_stats, &payload);
+        ResidentEuclidean {
+            rack: rack.clone(),
+            plan,
+            dims,
+            n,
+            shards,
+            load,
+        }
+    }
+
+    /// Device + link cost of the load phase (paid once per dataset).
+    pub fn load_report(&self) -> &RackStats {
+        &self.load
+    }
+
+    /// Query phase: broadcast `k` centers to every shard concurrently and
+    /// merge distances / global top-`topk` nearest host-side. Chargeable
+    /// work is the per-shard query program plus the per-query command and
+    /// readback link messages — zero load-phase writes.
+    pub fn query(&mut self, centers: &[f32], k: usize, topk: usize) -> ShardedEdResult {
+        assert_eq!(centers.len(), k * self.dims);
+        let plan = &self.plan;
+        let runs = self.rack.query_shards(&mut self.shards, |_i, sh| {
+            let res = sh.kern.query(&mut sh.ctl, &sh.sm, centers, k);
+            (res.dists, res.stats)
+        });
+        let (shard_dists, stats): (Vec<_>, Vec<_>) = runs.into_iter().unzip();
+        let mut dists = Vec::with_capacity(k);
+        let mut nearest = Vec::with_capacity(k);
+        for c in 0..k {
+            // borrow each shard's center-c vector; the only copy is the
+            // one concatenation into the merged global vector
+            let per_center: Vec<&[f32]> = shard_dists
+                .iter()
+                .map(|d: &Vec<Vec<f32>>| d[c].as_slice())
+                .collect();
+            let local: Vec<Vec<(usize, f32)>> = per_center
+                .iter()
+                .zip(&plan.ranges)
+                .map(|(d, rng)| local_topk(d, rng.start, topk))
+                .collect();
+            nearest.push(merge_topk(&local, topk));
+            dists.push(merge_concat(&per_center));
+        }
+        let checksum = dists.iter().flat_map(|d| d.iter()).sum();
+        let mut msgs = Vec::with_capacity(2 * plan.shards());
+        for rng in &plan.ranges {
+            msgs.push(CMD_BYTES + 4 * (k * self.dims) as u64); // command + centers
+            msgs.push(4 * (k * rng.len()) as u64); // per-shard distance readback
+        }
+        ShardedEdResult {
+            dists,
+            nearest,
+            checksum,
+            rack: self.rack.finish(stats, &msgs),
+        }
+    }
+}
+
+/// Rack-sharded Euclidean distance, one-shot: load the samples onto the
+/// rack and run a single query — exactly
+/// [`ResidentEuclidean::load`] followed by one
+/// [`ResidentEuclidean::query`], whose per-shard stats windows and merge
+/// path it shares. The reported [`RackStats`] cover the query phase only
+/// (the load phase's cost is on [`ResidentEuclidean::load_report`]).
 pub fn euclidean_sharded(
     rack: &PrinsRack,
     x: &[f32],
@@ -238,50 +395,7 @@ pub fn euclidean_sharded(
     k: usize,
     topk: usize,
 ) -> ShardedEdResult {
-    assert_eq!(x.len(), n * dims);
-    assert_eq!(centers.len(), k * dims);
-    let plan = ShardPlan::rows(n, rack.n_shards());
-    let width = EuclideanLayout::new(dims).width as usize;
-    let runs = rack.run_shards(&plan, |_s, r| {
-        let rows = r.len();
-        let xs = &x[r.start * dims..r.end * dims];
-        let mut array = rack.shard_array(rows, width);
-        let mut sm = StorageManager::new(array.total_rows());
-        let kern = EuclideanKernel::load(&mut sm, &mut array, xs, rows, dims);
-        let mut ctl = Controller::new(array);
-        let res = kern.run(&mut ctl, &sm, centers, k);
-        (res.dists, res.stats)
-    });
-    let (shard_dists, stats): (Vec<_>, Vec<_>) = runs.into_iter().unzip();
-    let mut dists = Vec::with_capacity(k);
-    let mut nearest = Vec::with_capacity(k);
-    for c in 0..k {
-        // borrow each shard's center-c vector; the only copy is the one
-        // concatenation into the merged global vector
-        let per_center: Vec<&[f32]> = shard_dists
-            .iter()
-            .map(|d: &Vec<Vec<f32>>| d[c].as_slice())
-            .collect();
-        let local: Vec<Vec<(usize, f32)>> = per_center
-            .iter()
-            .zip(&plan.ranges)
-            .map(|(d, rng)| local_topk(d, rng.start, topk))
-            .collect();
-        nearest.push(merge_topk(&local, topk));
-        dists.push(merge_concat(&per_center));
-    }
-    let checksum = dists.iter().flat_map(|d| d.iter()).sum();
-    let mut msgs = Vec::with_capacity(2 * plan.shards());
-    for rng in &plan.ranges {
-        msgs.push(CMD_BYTES + 4 * (k * dims) as u64); // command + centers
-        msgs.push(4 * (k * rng.len()) as u64); // per-shard distance readback
-    }
-    ShardedEdResult {
-        dists,
-        nearest,
-        checksum,
-        rack: rack.finish(stats, &msgs),
-    }
+    ResidentEuclidean::load(rack, x, n, dims).query(centers, k, topk)
 }
 
 /// Scalar CPU baseline (the reference architecture's computation).
@@ -330,6 +444,52 @@ mod tests {
             }
         }
         assert!(res.stats.cycles > 0);
+    }
+
+    #[test]
+    fn resident_queries_repeat_bit_identically() {
+        let (n, dims, k) = (24usize, 2usize, 3usize);
+        let mut rng = Rng::seed_from(11);
+        let x: Vec<f32> = (0..n * dims).map(|_| rng.f32_range(-4.0, 4.0)).collect();
+        let centers: Vec<f32> = (0..k * dims).map(|_| rng.f32_range(-4.0, 4.0)).collect();
+        let rack = PrinsRack::new(2);
+        let mut res = ResidentEuclidean::load(&rack, &x, n, dims);
+        assert!(res.load_report().total_cycles > 0, "load phase is charged");
+        let one_shot = euclidean_sharded(&rack, &x, n, dims, &centers, k, 2);
+        let q1 = res.query(&centers, k, 2);
+        let q2 = res.query(&centers, k, 2);
+        for (a, b) in [(&one_shot, &q1), (&q1, &q2)] {
+            for c in 0..k {
+                assert!(
+                    a.dists[c]
+                        .iter()
+                        .zip(&b.dists[c])
+                        .all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "center {c} distances diverge across queries"
+                );
+            }
+            assert_eq!(a.nearest, b.nearest);
+            assert_eq!(a.rack.total_cycles, b.rack.total_cycles);
+            assert_eq!(a.rack.link_bytes, b.rack.link_bytes);
+        }
+    }
+
+    #[test]
+    fn query_floor_matches_measured_cycles() {
+        let (n, dims, k) = (16usize, 2usize, 2usize);
+        let mut rng = Rng::seed_from(21);
+        let x: Vec<f32> = (0..n * dims).map(|_| rng.f32_range(-2.0, 2.0)).collect();
+        let centers: Vec<f32> = (0..k * dims).map(|_| rng.f32_range(-2.0, 2.0)).collect();
+        let layout = EuclideanLayout::new(dims);
+        let mut array = PrinsArray::single(n, layout.width as usize);
+        let mut sm = StorageManager::new(n);
+        let kern = EuclideanKernel::load(&mut sm, &mut array, &x, n, dims);
+        // load floor: n × dims charged 33-bit row writes, 2 cycles each
+        assert_eq!(kern.load_stats().cycles, 2 * (n * dims) as u64);
+        assert_eq!(kern.load_stats().ledger.n_write, (n * dims) as u64);
+        let mut ctl = Controller::new(array);
+        let res = kern.query(&mut ctl, &sm, &centers, k);
+        assert_eq!(res.stats.cycles, kern.query_floor_cycles(k));
     }
 
     #[test]

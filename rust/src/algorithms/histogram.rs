@@ -16,6 +16,12 @@ use crate::storage::{Dataset, StorageManager};
 pub const BINS: usize = 256;
 
 /// Loaded histogram dataset + the per-bin compare/reduce program.
+///
+/// Load-once / query-many: [`HistogramKernel::load`] writes the samples
+/// once (charged, [`HistogramKernel::load_stats`]); queries are
+/// compare-only — [`HistogramKernel::query_at`] re-bins the resident
+/// samples on any 8-bit window (new bin edges) without a single write,
+/// so repeat queries leave storage and wear untouched.
 pub struct HistogramKernel {
     /// Number of loaded samples.
     pub n: usize,
@@ -25,6 +31,7 @@ pub struct HistogramKernel {
     /// associatively, so membership is part of the compare pattern)
     valid: Field,
     ds: Dataset,
+    load_stats: ExecStats,
 }
 
 /// Result of one histogram run.
@@ -37,30 +44,51 @@ pub struct HistResult {
 
 impl HistogramKernel {
     /// Allocate rows and load the samples (one sample per row, plus the
-    /// dataset-membership valid bit).
+    /// dataset-membership valid bit). Two charged row writes per sample
+    /// (32-bit value + valid bit).
     pub fn load(sm: &mut StorageManager, array: &mut PrinsArray, x: &[u32]) -> Self {
         let mut layout = RowLayout::new(array.width() as u16);
         let sample = layout.alloc("sample", 32);
         let valid = layout.alloc("valid", 1);
         let ds = sm.alloc(x.len(), layout).expect("storage full");
+        let (c0, l0) = (array.cycles, array.ledger());
         for (i, &v) in x.iter().enumerate() {
-            array.load_row_bits(ds.rows.start + i, sample.base as usize, 32, v as u64);
-            array.load_row_bits(ds.rows.start + i, valid.base as usize, 1, 1);
+            array.load_row_bits_charged(ds.rows.start + i, sample.base as usize, 32, v as u64);
+            array.load_row_bits_charged(ds.rows.start + i, valid.base as usize, 1, 1);
         }
+        let load_stats = ExecStats::since(array, c0, &l0);
         HistogramKernel {
             n: x.len(),
             sample,
             valid,
             ds,
+            load_stats,
         }
     }
 
-    /// The full histogram program: per bin, compare + reduce (Fig. 9).
+    /// Device-model cost of the load phase (paid once per dataset).
+    pub fn load_stats(&self) -> &ExecStats {
+        &self.load_stats
+    }
+
+    /// The full histogram program over the paper's fixed bin edges
+    /// (bits \[31..24\]): [`HistogramKernel::program_at`] with `lo_bit`
+    /// = 24.
     pub fn program(&self) -> Program {
+        self.program_at(24)
+    }
+
+    /// The per-bin compare/reduce program (Fig. 9) binning on sample bits
+    /// `[lo_bit + 7 .. lo_bit]` — re-binnable edges for resident
+    /// datasets: a different `lo_bit` is a brand-new 256-bin histogram of
+    /// the same stored samples, still two operations per bin and zero
+    /// writes.
+    pub fn program_at(&self, lo_bit: u16) -> Program {
+        assert!(lo_bit + 8 <= 32, "bin window [lo_bit+7..lo_bit] exceeds the 32-bit sample");
         let mut prog = Program::new();
-        let top_byte = self.sample.slice(24, 8); // bits [31..24]
+        let byte = self.sample.slice(lo_bit, 8);
         for bin in 0..BINS as u64 {
-            let mut pat = top_byte.pattern(bin); // line 3
+            let mut pat = byte.pattern(bin); // line 3
             pat.push((self.valid.base, true));
             prog.push(Instr::Compare(pat));
             prog.push(Instr::ReduceCount); // line 4: H_bin ← Reduction(tags)
@@ -68,16 +96,37 @@ impl HistogramKernel {
         prog
     }
 
-    /// Execute the full 256-bin program and read the counts back.
+    /// One-shot alias for [`HistogramKernel::query`], kept for the
+    /// load-and-run-once callers (CLI, figures, examples).
     pub fn run(&self, ctl: &mut Controller) -> HistResult {
+        self.query(ctl)
+    }
+
+    /// Query phase over the default bin edges (bits \[31..24\]).
+    pub fn query(&self, ctl: &mut Controller) -> HistResult {
+        self.query_at(ctl, 24)
+    }
+
+    /// Query phase: execute the 256-bin program binning on bits
+    /// `[lo_bit + 7 .. lo_bit]` of the resident samples and read the
+    /// counts back. Compare-only — charges zero writes, so wear is
+    /// untouched no matter how many queries run.
+    pub fn query_at(&self, ctl: &mut Controller, lo_bit: u16) -> HistResult {
         ctl.begin_stats();
-        let prog = self.program();
+        let prog = self.program_at(lo_bit);
         let hist = ctl.execute_collect(&prog);
         // one pipelined tree-drain latency at the end of the bin sweep
         ctl.array.charge_reduction_latency();
         let mut stats = ctl.stats();
         stats.passes = 0; // no writes in this kernel
         HistResult { hist, stats }
+    }
+
+    /// Analytic cycle cost of one query — the per-repetition floor of a
+    /// resident dataset: 2 issue cycles per bin plus `array`'s pipelined
+    /// reduction-tree drain. Exact for every `lo_bit`.
+    pub fn query_floor_cycles(&self, array: &PrinsArray) -> u64 {
+        self.program().cycle_estimate() + array.reduction_latency_cycles()
     }
 
     /// The storage allocation backing this kernel's samples.
@@ -94,40 +143,106 @@ pub struct ShardedHistResult {
     pub rack: RackStats,
 }
 
-/// Rack-sharded histogram: samples are row-range-partitioned over the
-/// rack's shards, every shard runs the full Fig. 9 per-bin program on its
-/// slice concurrently, and the host merges the per-shard histograms
-/// bin-wise ([`merge_histograms`] — exact, since counting is
-/// associative). The host link is charged one command message plus one
-/// 256-bin result message per shard (DESIGN.md §Sharding).
-pub fn histogram_sharded(rack: &PrinsRack, x: &[u32]) -> ShardedHistResult {
-    let plan = ShardPlan::rows(x.len(), rack.n_shards());
-    let runs = rack.run_shards(&plan, |_s, r| {
-        let xs = &x[r];
-        let mut array = rack.shard_array(xs.len(), 40);
-        let mut sm = StorageManager::new(array.total_rows());
-        let kern = HistogramKernel::load(&mut sm, &mut array, xs);
-        let mut ctl = Controller::new(array);
-        let res = kern.run(&mut ctl);
-        (res.hist, res.stats)
-    });
-    let (hists, stats): (Vec<_>, Vec<_>) = runs.into_iter().unzip();
-    let mut msgs = Vec::with_capacity(2 * plan.shards());
-    for _ in 0..plan.shards() {
-        msgs.push(CMD_BYTES); // kernel-invocation command
-        msgs.push((BINS * 8) as u64); // per-shard histogram readback
+/// One shard's resident histogram state: controller + loaded kernel (the
+/// shard's storage manager is not needed after load — readout goes
+/// through the reduction tree, not the storage path).
+struct HistShard {
+    ctl: Controller,
+    kern: HistogramKernel,
+}
+
+/// A rack-resident histogram dataset: samples row-range-partitioned over
+/// the rack's shards, loaded **once**, then re-binned many times
+/// ([`ResidentHistogram::query_at`] — any 8-bit window is a fresh 256-bin
+/// histogram of the same resident samples). Queries are compare-only:
+/// zero writes, wear untouched, bit-identical to [`histogram_sharded`].
+pub struct ResidentHistogram {
+    rack: PrinsRack,
+    /// Loaded sample count (global, across all shards).
+    pub n: usize,
+    shards: Vec<HistShard>,
+    load: RackStats,
+}
+
+impl ResidentHistogram {
+    /// Load phase: partition `x` over the rack and write every shard's
+    /// slice into its array once (one command + sample payload per shard
+    /// on the host link).
+    pub fn load(rack: &PrinsRack, x: &[u32]) -> Self {
+        let plan = ShardPlan::rows(x.len(), rack.n_shards());
+        let shards = rack.run_shards(&plan, |_s, r| {
+            let xs = &x[r];
+            let mut array = rack.shard_array(xs.len(), 40);
+            let mut sm = StorageManager::new(array.total_rows());
+            let kern = HistogramKernel::load(&mut sm, &mut array, xs);
+            HistShard {
+                ctl: Controller::new(array),
+                kern,
+            }
+        });
+        let load_stats: Vec<ExecStats> =
+            shards.iter().map(|s| s.kern.load_stats().clone()).collect();
+        let payload: Vec<u64> = plan.ranges.iter().map(|r| 4 * r.len() as u64).collect();
+        let load = rack.finish_load(load_stats, &payload);
+        ResidentHistogram {
+            rack: rack.clone(),
+            n: x.len(),
+            shards,
+            load,
+        }
     }
-    ShardedHistResult {
-        hist: merge_histograms(&hists),
-        rack: rack.finish(stats, &msgs),
+
+    /// Device + link cost of the load phase (paid once per dataset).
+    pub fn load_report(&self) -> &RackStats {
+        &self.load
+    }
+
+    /// Query phase over the default bin edges (bits \[31..24\]).
+    pub fn query(&mut self) -> ShardedHistResult {
+        self.query_at(24)
+    }
+
+    /// Query phase: every shard re-bins its resident slice on bits
+    /// `[lo_bit + 7 .. lo_bit]` concurrently; the host merges bin-wise.
+    pub fn query_at(&mut self, lo_bit: u16) -> ShardedHistResult {
+        let runs = self.rack.query_shards(&mut self.shards, |_i, sh| {
+            let res = sh.kern.query_at(&mut sh.ctl, lo_bit);
+            (res.hist, res.stats)
+        });
+        let (hists, stats): (Vec<_>, Vec<_>) = runs.into_iter().unzip();
+        let n_shards = hists.len();
+        let mut msgs = Vec::with_capacity(2 * n_shards);
+        for _ in 0..n_shards {
+            msgs.push(CMD_BYTES); // kernel-invocation command
+            msgs.push((BINS * 8) as u64); // per-shard histogram readback
+        }
+        ShardedHistResult {
+            hist: merge_histograms(&hists),
+            rack: self.rack.finish(stats, &msgs),
+        }
     }
 }
 
-/// Scalar CPU baseline.
+/// Rack-sharded histogram, one-shot: [`ResidentHistogram::load`]
+/// followed by a single [`ResidentHistogram::query`], whose per-shard
+/// stats windows and bin-wise merge ([`merge_histograms`]) it shares.
+/// The reported [`RackStats`] cover the query phase only (the load cost
+/// is on [`ResidentHistogram::load_report`]).
+pub fn histogram_sharded(rack: &PrinsRack, x: &[u32]) -> ShardedHistResult {
+    ResidentHistogram::load(rack, x).query()
+}
+
+/// Scalar CPU baseline over the default bin edges (bits \[31..24\]).
 pub fn histogram_baseline(x: &[u32]) -> Vec<u64> {
+    histogram_baseline_at(x, 24)
+}
+
+/// Scalar CPU baseline binning on bits `[lo_bit + 7 .. lo_bit]` (the
+/// re-binnable-edges twin of [`HistogramKernel::query_at`]).
+pub fn histogram_baseline_at(x: &[u32], lo_bit: u16) -> Vec<u64> {
     let mut h = vec![0u64; BINS];
     for &v in x {
-        h[(v >> 24) as usize] += 1;
+        h[((v >> lo_bit) & 0xFF) as usize] += 1;
     }
     h
 }
@@ -172,6 +287,28 @@ mod tests {
         assert_eq!(res.rack.shards, 3);
         assert_eq!(res.rack.link_messages, 6);
         assert!(res.rack.total_cycles > res.rack.max_shard_cycles);
+    }
+
+    #[test]
+    fn rebinned_queries_match_shifted_baselines() {
+        let xs = synth_hist_samples(2000, 31);
+        let mut array = PrinsArray::single(xs.len(), 40);
+        let mut sm = StorageManager::new(xs.len());
+        let kern = HistogramKernel::load(&mut sm, &mut array, &xs);
+        assert_eq!(kern.load_stats().ledger.n_write, 2 * xs.len() as u64);
+        let mut ctl = Controller::new(array);
+        for lo in [24u16, 16, 8, 0] {
+            let res = kern.query_at(&mut ctl, lo);
+            assert_eq!(res.hist, histogram_baseline_at(&xs, lo), "lo_bit={lo}");
+            assert_eq!(res.stats.cycles, kern.query_floor_cycles(&ctl.array));
+            assert_eq!(res.stats.ledger.n_write, 0, "queries never write");
+        }
+        // resident rack path agrees bin-for-bin
+        let rack = PrinsRack::new(3);
+        let mut res = ResidentHistogram::load(&rack, &xs);
+        for lo in [24u16, 8] {
+            assert_eq!(res.query_at(lo).hist, histogram_baseline_at(&xs, lo));
+        }
     }
 
     #[test]

@@ -2,11 +2,20 @@
 //! Euclidean distance, dot product, histogram, SpMV and BFS, each with a
 //! scalar CPU-baseline twin for cross-validation.
 //!
+//! Every kernel is split into an explicit **load phase** (write the
+//! dataset into RCAM rows once, charged to the device model) and a
+//! **query phase** (compare/tag cycles against the already-resident
+//! rows): `XKernel::load` → `XKernel::query(params)`. Repeated queries —
+//! a new center set, a new hyperplane, new bin edges, a new x vector —
+//! reuse the loaded array and charge only query cycles/energy
+//! (DESIGN.md §Resident datasets).
+//!
 //! Histogram, dot product, ED and SpMV additionally have `*_sharded`
-//! entry points that run the same kernel partitioned over a
-//! [`crate::host::rack::PrinsRack`] of shard devices with host-side
-//! merging; `tests/prop_sharded_equals_single.rs` asserts their results
-//! bit-identical to the single-device paths.
+//! one-shot entry points and `Resident*` load-once / query-many forms
+//! that keep per-shard loaded kernels alive on a
+//! [`crate::host::rack::PrinsRack`] across calls with host-side merging;
+//! `tests/prop_sharded_equals_single.rs` and `tests/resident_datasets.rs`
+//! assert their results bit-identical to the single-device paths.
 
 pub mod bfs;
 pub mod dot;
@@ -15,12 +24,15 @@ pub mod histogram;
 pub mod spmv;
 
 pub use bfs::{measured_teps, paper_model_teps, BfsKernel, BfsResult};
-pub use dot::{dot_baseline, dot_sharded, DotKernel, ShardedDotResult};
+pub use dot::{dot_baseline, dot_sharded, DotKernel, ResidentDot, ShardedDotResult};
 pub use euclidean::{
-    euclidean_baseline, euclidean_sharded, EuclideanKernel, ShardedEdResult,
+    euclidean_baseline, euclidean_sharded, EuclideanKernel, ResidentEuclidean, ShardedEdResult,
 };
-pub use histogram::{histogram_baseline, histogram_sharded, HistogramKernel, ShardedHistResult};
+pub use histogram::{
+    histogram_baseline, histogram_baseline_at, histogram_sharded, HistogramKernel,
+    ResidentHistogram, ShardedHistResult,
+};
 pub use spmv::{
-    spmv_baseline_quantized, spmv_sharded, spmv_single, ReduceEngine, ShardedSpmvResult,
-    SpmvKernel,
+    spmv_baseline_quantized, spmv_sharded, spmv_single, ReduceEngine, ResidentSpmv,
+    ShardedSpmvResult, SpmvKernel,
 };

@@ -1,7 +1,7 @@
 //! `prins` command line: drive the PRINS system from a shell.
 //!
 //!   prins run <ed|dp|hist|spmv|bfs> [--n N] [--dims D] [--seed S]
-//!             [--workers W] [--shards S]
+//!             [--workers W] [--shards S] [--queries Q]
 //!   prins validate            # PRINS vs golden XLA kernels (needs artifacts/)
 //!   prins serve [--bind ADDR] [--workers W] # TCP storage-appliance front-end
 //!                                           # (protocol: docs/PROTOCOL.md)
@@ -12,6 +12,13 @@
 //! runs ed/dp/hist/spmv on a [`PrinsRack`] of S shard devices with
 //! cost-modeled host-side merging (DESIGN.md §Sharding) instead of one
 //! device.
+//!
+//! `--queries Q` (Q ≥ 2) switches ed/dp/hist/spmv to the load-once /
+//! query-many resident path (DESIGN.md §Resident datasets): the dataset
+//! is loaded once and Q queries with fresh parameters (new centers, new
+//! hyperplane, new bin edges, new x vector) run against the resident
+//! rows, printing the amortization table — load cost paid once, query
+//! floor per repetition.
 //!
 //! (Hand-rolled argument parsing; the vendored crate set has no clap.)
 
@@ -52,13 +59,17 @@ pub fn main() -> Result<()> {
             eprintln!("usage: prins <run|validate|serve|report|info> ...");
             eprintln!(
                 "  run <ed|dp|hist|spmv|bfs> [--n N] [--dims D] [--seed S] \
-                 [--workers W] [--shards S]"
+                 [--workers W] [--shards S] [--queries Q]"
             );
             eprintln!("  validate");
             eprintln!("  serve [--bind ADDR] [--workers W]");
             eprintln!("  report <fig12|fig13|fig14|fig15|all> [--csv] [--workers W]");
             eprintln!("  (--workers: simulator threads; default = cores, 1 = serial)");
             eprintln!("  (--shards: run ed/dp/hist/spmv on an S-device rack; default 1)");
+            eprintln!(
+                "  (--queries: load once, run Q queries against the resident \
+                 dataset; default 1)"
+            );
             Ok(())
         }
     }
@@ -75,6 +86,10 @@ fn run(args: &[String]) -> Result<()> {
             crate::rcam::shard::MAX_SHARDS
         );
     }
+    let queries = flag(args, "--queries", 1) as usize;
+    if queries == 0 {
+        bail!("--queries must be at least 1");
+    }
     let backend = backend_flag(args);
     let dev = DeviceModel::default();
     let rack = || {
@@ -85,6 +100,9 @@ fn run(args: &[String]) -> Result<()> {
             InterconnectModel::default(),
         )
     };
+    if queries > 1 {
+        return run_resident(args, n, dims, seed, queries, &rack(), &dev);
+    }
     match args.first().map(|s| s.as_str()) {
         Some("ed") => {
             let x = synth_samples(n, dims, 4, seed);
@@ -178,6 +196,114 @@ fn run(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// `run --queries Q` (Q ≥ 2): the load-once / query-many resident path.
+/// Loads the dataset onto the rack once, runs Q queries with fresh
+/// parameters per query (new centers / hyperplane / bin edges / x
+/// vector), and prints the amortization table.
+fn run_resident(
+    args: &[String],
+    n: usize,
+    dims: usize,
+    seed: u64,
+    queries: usize,
+    rack: &PrinsRack,
+    dev: &DeviceModel,
+) -> Result<()> {
+    use crate::algorithms::{ResidentDot, ResidentEuclidean, ResidentHistogram, ResidentSpmv};
+    let mut qcycles = Vec::with_capacity(queries);
+    let (name, load, energy_j, summary): (&str, RackStats, f64, String) =
+        match args.first().map(|s| s.as_str()) {
+            Some("ed") => {
+                let x = synth_samples(n, dims, 4, seed);
+                let mut res = ResidentEuclidean::load(rack, &x, n, dims);
+                let mut energy = res.load_report().energy_j;
+                let mut checksum = 0.0f32;
+                for q in 0..queries {
+                    let c = synth_uniform(dims, seed + 1 + q as u64);
+                    let r = res.query(&c, 1, 5);
+                    qcycles.push(r.rack.total_cycles);
+                    energy += r.rack.energy_j;
+                    checksum = r.checksum;
+                }
+                let load = res.load_report().clone();
+                ("euclidean distance", load, energy, format!("checksum(last): {checksum:.4}"))
+            }
+            Some("dp") => {
+                let x = synth_samples(n, dims, 4, seed);
+                let mut res = ResidentDot::load(rack, &x, n, dims);
+                let mut energy = res.load_report().energy_j;
+                let mut checksum = 0.0f32;
+                for q in 0..queries {
+                    let h = synth_uniform(dims, seed + 1 + q as u64);
+                    let r = res.query(&h);
+                    qcycles.push(r.rack.total_cycles);
+                    energy += r.rack.energy_j;
+                    checksum = r.checksum;
+                }
+                let load = res.load_report().clone();
+                ("dot product", load, energy, format!("checksum(last): {checksum:.4}"))
+            }
+            Some("hist") => {
+                let xs = synth_hist_samples(n, seed);
+                let mut res = ResidentHistogram::load(rack, &xs);
+                let mut energy = res.load_report().energy_j;
+                let mut top = 0usize;
+                for q in 0..queries {
+                    // rotate the bin window: fresh bin edges per query
+                    let lo = [24u16, 16, 8, 0][q % 4];
+                    let r = res.query_at(lo);
+                    qcycles.push(r.rack.total_cycles);
+                    energy += r.rack.energy_j;
+                    top = r.hist.iter().enumerate().max_by_key(|(_, &v)| v).unwrap().0;
+                }
+                let load = res.load_report().clone();
+                ("histogram (256 bins)", load, energy, format!("top bin (last): {top}"))
+            }
+            Some("spmv") => {
+                let a = synth_csr(n, n * 8, seed);
+                let mut res = ResidentSpmv::load(rack, &a);
+                let mut energy = res.load_report().energy_j;
+                let mut checksum = 0.0f32;
+                for q in 0..queries {
+                    let mut rng = Rng::seed_from(seed + 1 + q as u64);
+                    let x: Vec<f32> = (0..n).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+                    let r = res.query(&x);
+                    qcycles.push(r.rack.total_cycles);
+                    energy += r.rack.energy_j;
+                    checksum = r.checksum;
+                }
+                let load = res.load_report().clone();
+                ("spmv", load, energy, format!("checksum(last): {checksum:.4}"))
+            }
+            Some("bfs") => bail!("bfs has no resident query path yet (the frontier mutates storage)"),
+            other => bail!("unknown kernel {other:?}"),
+        };
+    let qsum: u64 = qcycles.iter().sum();
+    let per_query = qsum as f64 / queries as f64;
+    let amortized = (load.total_cycles + qsum) as f64 / queries as f64;
+    println!(
+        "kernel       : {name} [resident, {} queries, {} shard(s)]",
+        queries, load.shards
+    );
+    println!(
+        "load phase   : {} cycles, {} link bytes (paid once)",
+        load.total_cycles, load.link_bytes
+    );
+    println!("query phase  : {per_query:.1} cycles/query");
+    println!(
+        "amortized    : {amortized:.1} cycles/query ({} at Q=1, {})",
+        load.total_cycles + qcycles[0],
+        crate::metrics::table::fmt_si(dev.cycles_to_seconds(amortized as u64), "s")
+    );
+    println!(
+        "energy       : {} total (load + {} queries)",
+        crate::metrics::table::fmt_si(energy_j, "J"),
+        queries
+    );
+    println!("{summary}");
+    Ok(())
+}
+
 /// Print rack-level stats for a sharded `run` (`--shards S`): the
 /// slowest-shard critical path, the host-link charge, and the merged
 /// totals (DESIGN.md §Sharding accounting).
@@ -262,8 +388,10 @@ fn serve(args: &[String]) -> Result<()> {
     println!("prins storage appliance listening on {}", server.addr);
     println!("simulator backend: {backend:?}");
     println!(
-        "protocol: PING | RACK [n] | HIST n seed | DP n dims seed | \
-         ED n dims k seed | SPMV n nnz seed | QUIT  (spec: docs/PROTOCOL.md)"
+        "protocol: PING | RACK [n] | LOAD kind ... | DATASETS | DROP id | \
+         HIST n seed | DP n dims seed | ED n dims k seed | SPMV n nnz seed \
+         | HIST id | DP id seed | ED id k seed | SPMV id seed | QUIT  \
+         (spec: docs/PROTOCOL.md)"
     );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));

@@ -23,6 +23,24 @@ pub struct ExecStats {
 }
 
 impl ExecStats {
+    /// Stats of everything `array` executed since the `(cycles, ledger)`
+    /// snapshot — the shared window arithmetic behind the controller's
+    /// kernel windows ([`Controller::begin_stats`]/[`Controller::stats`])
+    /// and the kernels' load-phase accounting (`XKernel::load_stats`).
+    pub fn since(array: &PrinsArray, cycles0: u64, ledger0: &EnergyLedger) -> ExecStats {
+        let ledger = array.ledger().minus(ledger0);
+        ExecStats {
+            cycles: array.cycles - cycles0,
+            instructions: ledger.n_compare
+                + ledger.n_write
+                + ledger.n_read
+                + ledger.n_reduce
+                + ledger.n_tag_op,
+            passes: ledger.n_compare,
+            ledger,
+        }
+    }
+
     /// Wall-clock seconds under `dev`'s clock.
     pub fn runtime_s(&self, dev: &DeviceModel) -> f64 {
         dev.cycles_to_seconds(self.cycles)
@@ -85,27 +103,7 @@ impl Controller {
 
     /// Stats accumulated since the last `begin_stats`.
     pub fn stats(&self) -> ExecStats {
-        let mut ledger = self.array.ledger();
-        let base = &self.stats_ledger0;
-        ledger.compare_bit_events -= base.compare_bit_events;
-        ledger.write_bit_events -= base.write_bit_events;
-        ledger.reduce_bit_events -= base.reduce_bit_events;
-        ledger.chain_bit_events -= base.chain_bit_events;
-        ledger.n_compare -= base.n_compare;
-        ledger.n_write -= base.n_write;
-        ledger.n_read -= base.n_read;
-        ledger.n_reduce -= base.n_reduce;
-        ledger.n_tag_op -= base.n_tag_op;
-        ExecStats {
-            cycles: self.array.cycles - self.stats_cycles0,
-            instructions: ledger.n_compare
-                + ledger.n_write
-                + ledger.n_read
-                + ledger.n_reduce
-                + ledger.n_tag_op,
-            passes: ledger.n_compare,
-            ledger,
-        }
+        ExecStats::since(&self.array, self.stats_cycles0, &self.stats_ledger0)
     }
 
     /// Execute one instruction; results (read/reduce/if_match) append to

@@ -22,7 +22,7 @@ pub mod server;
 use crate::algorithms::{DotKernel, EuclideanKernel, HistogramKernel};
 use crate::controller::kernels::KernelId;
 use crate::controller::registers::{RegisterFile, Status};
-use crate::controller::Controller;
+use crate::controller::{Controller, ExecStats};
 use crate::rcam::{DeviceModel, ExecBackend, PrinsArray};
 use crate::storage::StorageManager;
 use std::sync::mpsc;
@@ -210,6 +210,21 @@ impl PrinsDevice {
         st.resident = Resident::Histogram { kern };
     }
 
+    /// Device-model cost of loading the currently resident dataset
+    /// (`None` when nothing is resident). The load phase is paid once per
+    /// dataset; every subsequent `run_kernel` charges only query
+    /// cycles/energy ([`OutputBuffer::cycles`]) — the load-once /
+    /// query-many split of DESIGN.md §Resident datasets.
+    pub fn load_report(&self) -> Option<ExecStats> {
+        let st = self.state.lock().unwrap();
+        match &st.resident {
+            Resident::None => None,
+            Resident::Euclidean { kern, .. } => Some(kern.load_stats().clone()),
+            Resident::Dot { kern } => Some(kern.load_stats().clone()),
+            Resident::Histogram { kern } => Some(kern.load_stats().clone()),
+        }
+    }
+
     // ----- host-side kernel invocation (register protocol) --------------
 
     /// Trigger a kernel and block until completion (poll loop).
@@ -275,6 +290,28 @@ mod tests {
         assert_eq!(s.u64s, t.u64s);
         assert_eq!(s.cycles, t.cycles);
         assert_eq!(s.energy_j, t.energy_j);
+    }
+
+    #[test]
+    fn resident_dataset_amortizes_load_across_runs() {
+        let xs = synth_hist_samples(1000, 3);
+        let dev = PrinsDevice::new(1024, 64);
+        assert!(dev.load_report().is_none());
+        dev.load_samples_for_histogram(&xs);
+        let load = dev.load_report().expect("dataset resident");
+        assert_eq!(load.ledger.n_write, 2 * xs.len() as u64);
+        // query-many: repeated kernel runs charge only query cycles and
+        // return bit-identical outputs — the dataset is never reloaded
+        let mut outs = Vec::new();
+        for _ in 0..3 {
+            assert_eq!(dev.run_kernel(KernelId::Histogram, &[], &[]), Status::Done);
+            outs.push(dev.take_outputs());
+        }
+        for o in &outs[1..] {
+            assert_eq!(o.u64s, outs[0].u64s);
+            assert_eq!(o.cycles, outs[0].cycles);
+            assert!(o.cycles < load.cycles, "query floor beats the load cost");
+        }
     }
 
     #[test]

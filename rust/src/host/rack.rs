@@ -21,9 +21,16 @@
 //! `dot_sharded`, `euclidean_sharded`, `spmv_sharded`) live in
 //! [`crate::algorithms`] next to their single-device twins and are
 //! asserted bit-identical to them by `tests/prop_sharded_equals_single`.
+//!
+//! Racks are also the substrate of **resident datasets** (DESIGN.md
+//! §Resident datasets): the `Resident*` wrappers in [`crate::algorithms`]
+//! load a dataset onto the rack once via [`PrinsRack::run_shards`] and
+//! then serve arbitrarily many queries via [`PrinsRack::query_shards`],
+//! which revisits the per-shard controllers/kernels kept alive across
+//! calls — the merge path and stats accounting are unchanged.
 
 use crate::controller::ExecStats;
-use crate::rcam::shard::ShardPlan;
+use crate::rcam::shard::{ShardPlan, CMD_BYTES};
 use crate::rcam::{DeviceModel, ExecBackend, InterconnectModel, PrinsArray};
 use std::ops::Range;
 
@@ -128,6 +135,54 @@ impl PrinsRack {
                 .map(|h| h.join().expect("rack shard worker panicked"))
                 .collect()
         })
+    }
+
+    /// Execute `f(shard_index, &mut slot)` over every resident shard slot
+    /// concurrently (one scoped OS thread per slot; inline when there is
+    /// a single slot) and return the results in shard order. This is the
+    /// query-phase twin of [`PrinsRack::run_shards`]: where `run_shards`
+    /// builds shard state from a row-range plan (the load phase),
+    /// `query_shards` revisits state that is already resident — each slot
+    /// typically holds a shard's controller + loaded kernel, kept alive
+    /// across queries by a `Resident*` wrapper (e.g.
+    /// [`crate::algorithms::ResidentHistogram`]).
+    pub fn query_shards<S, R, F>(&self, slots: &mut [S], f: F) -> Vec<R>
+    where
+        S: Send,
+        R: Send,
+        F: Fn(usize, &mut S) -> R + Sync,
+    {
+        if slots.len() <= 1 {
+            return slots
+                .iter_mut()
+                .enumerate()
+                .map(|(i, s)| f(i, s))
+                .collect();
+        }
+        std::thread::scope(|sc| {
+            let f = &f;
+            let handles: Vec<_> = slots
+                .iter_mut()
+                .enumerate()
+                .map(|(i, s)| sc.spawn(move || f(i, s)))
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("rack shard worker panicked"))
+                .collect()
+        })
+    }
+
+    /// Fold the **load phase** of a resident dataset: per-shard load
+    /// stats plus one command + dataset-payload message per shard on the
+    /// host link (`payload_bytes[i]` = shard i's raw dataset bytes; the
+    /// fixed command header is added here). Shared by every
+    /// `Resident*::load` so the load-phase cost model cannot diverge
+    /// between workloads.
+    pub fn finish_load(&self, shard_stats: Vec<ExecStats>, payload_bytes: &[u64]) -> RackStats {
+        assert_eq!(shard_stats.len(), payload_bytes.len());
+        let msgs: Vec<u64> = payload_bytes.iter().map(|&b| CMD_BYTES + b).collect();
+        self.finish(shard_stats, &msgs)
     }
 
     /// Fold per-shard execution stats and the host-link message sizes
@@ -244,6 +299,27 @@ mod tests {
             }
         });
         assert_eq!(started.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn query_shards_runs_concurrently_over_resident_slots() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let rack = PrinsRack::new(3);
+        let mut slots = vec![10usize, 20, 30];
+        let started = AtomicUsize::new(0);
+        let out = rack.query_shards(&mut slots, |i, s| {
+            started.fetch_add(1, Ordering::SeqCst);
+            // all slots must be in flight at once (mutable, disjoint)
+            while started.load(Ordering::SeqCst) < 3 {
+                std::thread::yield_now();
+            }
+            *s += 1;
+            (i, *s)
+        });
+        assert_eq!(out, vec![(0, 11), (1, 21), (2, 31)]);
+        // state mutations persist across calls — the resident property
+        let again = rack.query_shards(&mut slots, |i, s| (i, *s));
+        assert_eq!(again, vec![(0, 11), (1, 21), (2, 31)]);
     }
 
     #[test]

@@ -3,16 +3,26 @@
 //! like a network-attached storage appliance.
 //!
 //! The full wire protocol — every verb (including the `RACK` sharding
-//! forms), the reply grammar, error replies, and worked netcat sessions —
-//! is specified in `docs/PROTOCOL.md`; keep that file authoritative.
-//! Summary:
+//! forms and the resident-dataset verbs), the reply grammar, error
+//! replies, and worked netcat sessions — is specified in
+//! `docs/PROTOCOL.md`; keep that file authoritative. Summary:
 //!
-//!   PING | RACK \[n\] | HIST | DP | ED | SPMV | QUIT
+//!   PING | RACK \[n\] | LOAD | DATASETS | DROP | HIST | DP | ED | SPMV
+//!   | QUIT
 //!
-//! Kernel verbs run on a single device by default; after `RACK <n>` the
-//! same verbs execute sharded over an `n`-device [`PrinsRack`] (a
-//! per-connection session setting) and replies gain `shards=`/`link_bytes=`
-//! fields.
+//! Kernel verbs run one-shot on a single device by default; after
+//! `RACK <n>` the same verbs execute sharded over an `n`-device
+//! [`PrinsRack`] (a per-connection session setting) and replies gain
+//! `shards=`/`link_bytes=` fields.
+//!
+//! **Resident datasets** (load-once / query-many, DESIGN.md §Resident
+//! datasets): `LOAD <kind> ...` synthesizes a dataset server-side, loads
+//! it onto a rack resident in the session, and returns a dataset id; the
+//! kernel verbs' short (dataset-id) forms then query the resident data
+//! without reloading — repeated queries charge only query cycles.
+//! `DATASETS` lists the session's registry, `DROP <id>` frees one entry.
+//! Sessions are isolated: ids, shard counts, and resident data are
+//! per-connection and die with it.
 //!
 //! (std::net + a thread per connection; the vendored crate set has no
 //! tokio — documented in Cargo.toml.)
@@ -21,12 +31,14 @@ use super::rack::{PrinsRack, RackStats};
 use super::PrinsDevice;
 use crate::algorithms::{
     dot_sharded, euclidean_sharded, histogram_sharded, spmv_sharded, spmv_single,
+    ResidentDot, ResidentEuclidean, ResidentHistogram, ResidentSpmv,
 };
 use crate::controller::kernels::KernelId;
 use crate::controller::registers::Status;
 use crate::rcam::{DeviceModel, ExecBackend, InterconnectModel};
 use crate::workloads::{synth_csr, synth_hist_samples, synth_samples, synth_uniform, Rng};
 use crate::error::{bail, ensure, Result};
+use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -139,16 +151,69 @@ impl Drop for Server {
     }
 }
 
+/// Most resident datasets one session may hold at once (each holds live
+/// simulated shard arrays; `DROP` frees slots).
+const MAX_DATASETS: usize = 16;
+
+/// One resident dataset of a session: the rack-resident loaded kernel
+/// plus the synthesis metadata `DATASETS` reports.
+enum ResidentDataset {
+    /// `LOAD HIST` — re-binnable histogram samples.
+    Hist(ResidentHistogram),
+    /// `LOAD DP` — vectors queried against fresh hyperplanes.
+    Dot { res: ResidentDot, dims: usize },
+    /// `LOAD ED` — samples queried against fresh center sets.
+    Ed { res: ResidentEuclidean, dims: usize },
+    /// `LOAD SPMV` — a CSR matrix queried against fresh x vectors.
+    Spmv(ResidentSpmv),
+}
+
+impl ResidentDataset {
+    fn kind(&self) -> &'static str {
+        match self {
+            ResidentDataset::Hist(_) => "hist",
+            ResidentDataset::Dot { .. } => "dp",
+            ResidentDataset::Ed { .. } => "ed",
+            ResidentDataset::Spmv(_) => "spmv",
+        }
+    }
+
+    fn load_report(&self) -> &RackStats {
+        match self {
+            ResidentDataset::Hist(r) => r.load_report(),
+            ResidentDataset::Dot { res, .. } => res.load_report(),
+            ResidentDataset::Ed { res, .. } => res.load_report(),
+            ResidentDataset::Spmv(r) => r.load_report(),
+        }
+    }
+}
+
+/// Registry entry: the resident data plus the figures `DATASETS` lists.
+struct DatasetEntry {
+    data: ResidentDataset,
+    /// Dataset rows (samples / vectors / matrix dimension).
+    n: usize,
+    /// Shard count the dataset was loaded with (fixed at `LOAD` time;
+    /// later `RACK` changes affect only future loads).
+    shards: usize,
+}
+
 /// Per-connection protocol state: the shard count selected by `RACK <n>`
-/// (1 = single-device, the default; see `docs/PROTOCOL.md` §Sessions).
-#[derive(Clone, Copy, Debug)]
+/// (1 = single-device, the default) and the resident-dataset registry
+/// (`LOAD`/`DATASETS`/`DROP`); see `docs/PROTOCOL.md` §Sessions.
 struct Session {
     shards: usize,
+    datasets: BTreeMap<u64, DatasetEntry>,
+    next_id: u64,
 }
 
 impl Default for Session {
     fn default() -> Self {
-        Session { shards: 1 }
+        Session {
+            shards: 1,
+            datasets: BTreeMap::new(),
+            next_id: 1,
+        }
     }
 }
 
@@ -222,6 +287,198 @@ fn rack_ok(rs: &RackStats, fields: &str) -> String {
     )
 }
 
+/// Reply line of a resident-dataset query (docs/PROTOCOL.md §Resident
+/// datasets): single-device grammar when the dataset was loaded
+/// unsharded (per-shard device stats, no link charge), rack grammar
+/// otherwise — both with the trailing `dataset=` marker.
+fn query_ok(rs: &RackStats, fields: &str, id: u64) -> String {
+    if rs.shards >= 2 {
+        format!("{} dataset={id}", rack_ok(rs, fields))
+    } else {
+        let st = &rs.shard_stats[0];
+        format!(
+            "OK cycles={} energy_pj={:.1} {fields} dataset={id}",
+            st.cycles,
+            st.energy_j(&DeviceModel::default()) * 1e12
+        )
+    }
+}
+
+/// `load_cycles=` (and, when sharded, `load_link_bytes=`) fields of a
+/// `LOAD` reply — the one-time load-phase price the dataset id amortizes.
+fn load_fields(rs: &RackStats) -> String {
+    if rs.shards >= 2 {
+        format!(
+            "load_cycles={} load_link_bytes={}",
+            rs.total_cycles, rs.link_bytes
+        )
+    } else {
+        format!("load_cycles={}", rs.shard_stats[0].cycles)
+    }
+}
+
+/// `LOAD <kind> ...`: synthesize a dataset server-side from `(sizes,
+/// seed)`, load it once onto a rack with the session's current shard
+/// count, and register it under a fresh id. Every subsequent dataset-id
+/// kernel verb reuses the resident rows and charges only query cycles.
+fn load_dataset(
+    args: &[&str],
+    backend: ExecBackend,
+    sess: &mut Session,
+) -> Result<Option<String>> {
+    ensure!(
+        sess.datasets.len() < MAX_DATASETS,
+        "dataset limit reached (max {})",
+        MAX_DATASETS
+    );
+    let rack = rack_for(sess, backend);
+    let entry = match args {
+        ["HIST", n, seed] => {
+            let (n, seed): (usize, u64) = (n.parse()?, seed.parse()?);
+            ensure!(n > 0 && n <= 1 << 20, "n out of range");
+            let xs = synth_hist_samples(n, seed);
+            DatasetEntry {
+                data: ResidentDataset::Hist(ResidentHistogram::load(&rack, &xs)),
+                n,
+                shards: sess.shards,
+            }
+        }
+        ["DP", n, dims, seed] => {
+            let (n, dims, seed): (usize, usize, u64) =
+                (n.parse()?, dims.parse()?, seed.parse()?);
+            ensure!(
+                n > 0 && n <= 1 << 16 && dims > 0 && dims <= 16,
+                "size out of range"
+            );
+            let x = synth_samples(n, dims, 4, seed);
+            DatasetEntry {
+                data: ResidentDataset::Dot {
+                    res: ResidentDot::load(&rack, &x, n, dims),
+                    dims,
+                },
+                n,
+                shards: sess.shards,
+            }
+        }
+        ["ED", n, dims, seed] => {
+            let (n, dims, seed): (usize, usize, u64) =
+                (n.parse()?, dims.parse()?, seed.parse()?);
+            ensure!(
+                n > 0 && n <= 1 << 16 && dims > 0 && dims <= 8,
+                "size out of range"
+            );
+            // 4 latent clusters, like the DP synthesis (the one-shot ED
+            // verb couples cluster count to its k query argument instead)
+            let x = synth_samples(n, dims, 4, seed);
+            DatasetEntry {
+                data: ResidentDataset::Ed {
+                    res: ResidentEuclidean::load(&rack, &x, n, dims),
+                    dims,
+                },
+                n,
+                shards: sess.shards,
+            }
+        }
+        ["SPMV", n, nnz, seed] => {
+            let (n, nnz, seed): (usize, usize, u64) =
+                (n.parse()?, nnz.parse()?, seed.parse()?);
+            ensure!(
+                n > 0 && n <= 1 << 14 && nnz > 0 && nnz <= 1 << 18,
+                "size out of range"
+            );
+            let a = synth_csr(n, nnz, seed);
+            DatasetEntry {
+                data: ResidentDataset::Spmv(ResidentSpmv::load(&rack, &a)),
+                n,
+                shards: sess.shards,
+            }
+        }
+        _ => bail!(
+            "usage: LOAD HIST n seed | LOAD DP n dims seed | \
+             LOAD ED n dims seed | LOAD SPMV n nnz seed"
+        ),
+    };
+    let id = sess.next_id;
+    sess.next_id += 1;
+    let reply = format!(
+        "OK id={id} kind={} n={} shards={} {}",
+        entry.data.kind(),
+        entry.n,
+        entry.shards,
+        load_fields(entry.data.load_report())
+    );
+    sess.datasets.insert(id, entry);
+    Ok(Some(reply))
+}
+
+/// Dataset-id kernel query (`HIST <id>` / `DP <id> seed` / `ED <id> k
+/// seed` / `SPMV <id> seed`): run one query phase against the session's
+/// resident dataset — no reload, query cycles only.
+fn query_dataset(
+    sess: &mut Session,
+    expect: &'static str,
+    id: &str,
+    params: &[&str],
+) -> Result<Option<String>> {
+    let id: u64 = id.parse()?;
+    let Some(e) = sess.datasets.get_mut(&id) else {
+        bail!("unknown dataset {id}");
+    };
+    ensure!(
+        e.data.kind() == expect,
+        "dataset {id} is kind {}, not {}",
+        e.data.kind(),
+        expect
+    );
+    match (&mut e.data, params) {
+        (ResidentDataset::Hist(res), []) => {
+            let r = res.query();
+            let top = r.hist.iter().enumerate().max_by_key(|(_, &v)| v).unwrap().0;
+            let total: u64 = r.hist.iter().sum();
+            Ok(Some(query_ok(
+                &r.rack,
+                &format!("top_bin={top} total={total}"),
+                id,
+            )))
+        }
+        (ResidentDataset::Dot { res, dims }, [seed]) => {
+            let seed: u64 = seed.parse()?;
+            let h = synth_uniform(*dims, seed);
+            let r = res.query(&h);
+            Ok(Some(query_ok(
+                &r.rack,
+                &format!("checksum={:.4}", r.checksum),
+                id,
+            )))
+        }
+        (ResidentDataset::Ed { res, dims }, [k, seed]) => {
+            let (k, seed): (usize, u64) = (k.parse()?, seed.parse()?);
+            ensure!(k > 0 && k <= 16, "k out of range");
+            let centers = synth_uniform(k * *dims, seed);
+            let r = res.query(&centers, k, 1);
+            Ok(Some(query_ok(
+                &r.rack,
+                &format!("checksum={:.4}", r.checksum),
+                id,
+            )))
+        }
+        (ResidentDataset::Spmv(res), [seed]) => {
+            let seed: u64 = seed.parse()?;
+            let mut rng = Rng::seed_from(seed);
+            let x: Vec<f32> = (0..res.n).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+            let r = res.query(&x);
+            Ok(Some(query_ok(
+                &r.rack,
+                &format!("checksum={:.4}", r.checksum),
+                id,
+            )))
+        }
+        // unreachable: the kind guard above pins the variant and the
+        // dispatch arm pins the param arity
+        (d, _) => bail!("dataset {id} ({}) given a malformed query", d.kind()),
+    }
+}
+
 fn dispatch(line: &str, backend: ExecBackend, sess: &mut Session) -> Result<Option<String>> {
     let parts: Vec<&str> = line.split_whitespace().collect();
     match parts.as_slice() {
@@ -238,6 +495,31 @@ fn dispatch(line: &str, backend: ExecBackend, sess: &mut Session) -> Result<Opti
             sess.shards = n;
             Ok(Some(format!("OK shards={n}")))
         }
+        // ----- resident-dataset registry (docs/PROTOCOL.md) -------------
+        ["LOAD", rest @ ..] => load_dataset(rest, backend, sess),
+        ["DATASETS"] => {
+            let mut reply = format!("OK count={}", sess.datasets.len());
+            for (id, e) in &sess.datasets {
+                reply.push_str(&format!(
+                    " ds={id}:{}:{}:{}",
+                    e.data.kind(),
+                    e.n,
+                    e.shards
+                ));
+            }
+            Ok(Some(reply))
+        }
+        ["DROP", id] => {
+            let id: u64 = id.parse()?;
+            ensure!(sess.datasets.remove(&id).is_some(), "unknown dataset {id}");
+            Ok(Some(format!("OK dropped={id}")))
+        }
+        // ----- dataset-id query forms (arity-distinguished from the
+        // one-shot forms below) ------------------------------------------
+        ["HIST", id] => query_dataset(sess, "hist", id, &[]),
+        ["DP", id, seed] => query_dataset(sess, "dp", id, &[seed]),
+        ["ED", id, k, seed] => query_dataset(sess, "ed", id, &[k, seed]),
+        ["SPMV", id, seed] => query_dataset(sess, "spmv", id, &[seed]),
         ["HIST", n, seed] => {
             let (n, seed): (usize, u64) = (n.parse()?, seed.parse()?);
             ensure!(n > 0 && n <= 1 << 20, "n out of range");
@@ -439,6 +721,96 @@ mod tests {
         // single device's
         let cyc = |r: &str| field(r, "cycles=").parse::<u64>().unwrap();
         assert!(cyc(&sharded) > cyc(&single), "{sharded} vs {single}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn resident_dataset_lifecycle_over_tcp() {
+        let server = Server::spawn("127.0.0.1:0").unwrap();
+        let mut conn = TcpStream::connect(server.addr).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+        let mut ask = |conn: &mut TcpStream, reader: &mut BufReader<TcpStream>, req: &str| {
+            line.clear();
+            writeln!(conn, "{req}").unwrap();
+            reader.read_line(&mut line).unwrap();
+            line.trim().to_string()
+        };
+        let field = |r: &str, key: &str| {
+            r.split_whitespace()
+                .find_map(|kv| kv.strip_prefix(key).map(str::to_string))
+                .unwrap_or_default()
+        };
+
+        // load once, query many: replies repeat bit-for-bit
+        let loaded = ask(&mut conn, &mut reader, "LOAD HIST 500 7");
+        assert!(loaded.starts_with("OK id=1 kind=hist n=500 shards=1"), "{loaded}");
+        assert!(loaded.contains("load_cycles="), "{loaded}");
+        let q1 = ask(&mut conn, &mut reader, "HIST 1");
+        let q2 = ask(&mut conn, &mut reader, "HIST 1");
+        assert!(q1.contains("dataset=1") && q1.contains("total=500"), "{q1}");
+        assert_eq!(q1, q2, "resident queries must repeat bit-identically");
+        // the resident query matches the one-shot verb's result values
+        let one_shot = ask(&mut conn, &mut reader, "HIST 500 7");
+        assert_eq!(field(&q1, "top_bin="), field(&one_shot, "top_bin="));
+        assert_eq!(field(&q1, "total="), field(&one_shot, "total="));
+        // query cost sits below the one-time load cost
+        let load_cycles: u64 = field(&loaded, "load_cycles=").parse().unwrap();
+        let query_cycles: u64 = field(&q1, "cycles=").parse().unwrap();
+        assert!(query_cycles < load_cycles, "{q1} vs {loaded}");
+
+        // second dataset of a different kind; registry lists both
+        let dp = ask(&mut conn, &mut reader, "LOAD DP 32 4 3");
+        assert!(dp.starts_with("OK id=2 kind=dp n=32"), "{dp}");
+        let dpq = ask(&mut conn, &mut reader, "DP 2 9");
+        assert!(dpq.contains("checksum=") && dpq.contains("dataset=2"), "{dpq}");
+        // new hyperplane (new seed) on the same resident vectors
+        let dpq2 = ask(&mut conn, &mut reader, "DP 2 10");
+        assert_ne!(field(&dpq, "checksum="), field(&dpq2, "checksum="));
+        assert_eq!(field(&dpq, "cycles="), field(&dpq2, "cycles="));
+        assert_eq!(
+            ask(&mut conn, &mut reader, "DATASETS"),
+            "OK count=2 ds=1:hist:500:1 ds=2:dp:32:1"
+        );
+
+        // kind/verb mismatch and unknown ids are errors, not panics
+        assert!(ask(&mut conn, &mut reader, "DP 1 5").starts_with("ERR"));
+        assert!(ask(&mut conn, &mut reader, "HIST 9").starts_with("ERR"));
+
+        // drop frees the id
+        assert_eq!(ask(&mut conn, &mut reader, "DROP 1"), "OK dropped=1");
+        assert!(ask(&mut conn, &mut reader, "HIST 1").starts_with("ERR"));
+        assert_eq!(
+            ask(&mut conn, &mut reader, "DATASETS"),
+            "OK count=1 ds=2:dp:32:1"
+        );
+        server.shutdown();
+    }
+
+    #[test]
+    fn sharded_resident_dataset_replies_carry_rack_fields() {
+        let server = Server::spawn("127.0.0.1:0").unwrap();
+        let mut conn = TcpStream::connect(server.addr).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+        let mut ask = |conn: &mut TcpStream, reader: &mut BufReader<TcpStream>, req: &str| {
+            line.clear();
+            writeln!(conn, "{req}").unwrap();
+            reader.read_line(&mut line).unwrap();
+            line.trim().to_string()
+        };
+        assert_eq!(ask(&mut conn, &mut reader, "RACK 2"), "OK shards=2");
+        let loaded = ask(&mut conn, &mut reader, "LOAD SPMV 48 300 3");
+        assert!(loaded.contains("shards=2") && loaded.contains("load_link_bytes="), "{loaded}");
+        let q = ask(&mut conn, &mut reader, "SPMV 1 4");
+        assert!(
+            q.contains("shards=2") && q.contains("link_bytes=") && q.contains("dataset=1"),
+            "{q}"
+        );
+        // datasets keep their load-time shard count even after RACK changes
+        assert_eq!(ask(&mut conn, &mut reader, "RACK 1"), "OK shards=1");
+        let q2 = ask(&mut conn, &mut reader, "SPMV 1 4");
+        assert_eq!(q, q2, "resident layout is fixed at LOAD time");
         server.shutdown();
     }
 

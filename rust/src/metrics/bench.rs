@@ -99,6 +99,12 @@ pub fn shards_sweep_from_args(args: &[String], default: &[usize]) -> Vec<usize> 
     sweep_from_args(args, "--shards", default)
 }
 
+/// Query-count sweep from `--queries a,b,c` (for the resident
+/// load-once / query-many bench; a single value is a one-element sweep).
+pub fn queries_sweep_from_args(args: &[String], default: &[usize]) -> Vec<usize> {
+    sweep_from_args(args, "--queries", default)
+}
+
 /// Comma-separated `usize` sweep behind a flag, with a default.
 fn sweep_from_args(args: &[String], flag: &str, default: &[usize]) -> Vec<usize> {
     match arg_value(args, flag) {
@@ -228,6 +234,71 @@ pub fn write_rack_json(name: &str, records: &[RackRecord]) -> std::io::Result<st
     Ok(path)
 }
 
+// ---------------------------------------------------------------------------
+// Resident-query amortization results (BENCH_resident.json)
+// ---------------------------------------------------------------------------
+
+/// One measured point of the load-once / query-many sweep
+/// (`benches/resident_queries.rs`): the one-time load cost, the
+/// per-query cost, and the amortized per-query figure that collapses
+/// toward the query floor as the query count grows (DESIGN.md §Resident
+/// datasets).
+pub struct ResidentRecord {
+    /// Workload name (`hist`, `dp`, `ed`, `spmv`).
+    pub bench: String,
+    /// Dataset rows (samples / vectors / matrix dimension).
+    pub rows: u64,
+    /// Shard-device count of the resident rack.
+    pub shards: u64,
+    /// Queries run against the resident dataset.
+    pub queries: u64,
+    /// Modeled one-time load-phase cycles (device + link).
+    pub load_cycles: u64,
+    /// Modeled mean cycles per query (constant for a fixed workload).
+    pub query_cycles: f64,
+    /// `(load_cycles + Σ query cycles) / queries` — the amortized figure.
+    pub amortized_cycles: f64,
+    /// Modeled total energy \[J\] (load + all queries).
+    pub energy_j: f64,
+    /// Host wall-clock seconds of the simulated load + queries.
+    pub wall_s: f64,
+}
+
+/// Hand-rolled JSON for [`ResidentRecord`]s (the crate set has no
+/// serde): a flat array of objects, one per (bench, queries) point.
+pub fn resident_records_json(records: &[ResidentRecord]) -> String {
+    let mut s = String::from("[\n");
+    for (i, r) in records.iter().enumerate() {
+        s.push_str(&format!(
+            "  {{\"bench\": \"{}\", \"rows\": {}, \"shards\": {}, \
+             \"queries\": {}, \"load_cycles\": {}, \"query_cycles\": {:e}, \
+             \"amortized_cycles\": {:e}, \"energy_j\": {:e}, \"wall_s\": {:e}}}{}\n",
+            r.bench,
+            r.rows,
+            r.shards,
+            r.queries,
+            r.load_cycles,
+            r.query_cycles,
+            r.amortized_cycles,
+            r.energy_j,
+            r.wall_s,
+            if i + 1 < records.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("]\n");
+    s
+}
+
+/// Write `BENCH_<name>.json` of resident records at the repository root.
+pub fn write_resident_json(
+    name: &str,
+    records: &[ResidentRecord],
+) -> std::io::Result<std::path::PathBuf> {
+    let path = repo_root_path(&format!("BENCH_{name}.json"));
+    std::fs::write(&path, resident_records_json(records))?;
+    Ok(path)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -257,6 +328,43 @@ mod tests {
         let sweep: Vec<String> = ["--shards", "1,2,4,8"].iter().map(|s| s.to_string()).collect();
         assert_eq!(shards_sweep_from_args(&sweep, &[1]), vec![1, 2, 4, 8]);
         assert_eq!(shards_sweep_from_args(&[], &[1, 2]), vec![1, 2]);
+        let sweep: Vec<String> = ["--queries", "1,8"].iter().map(|s| s.to_string()).collect();
+        assert_eq!(queries_sweep_from_args(&sweep, &[1, 4]), vec![1, 8]);
+        assert_eq!(queries_sweep_from_args(&[], &[1, 4, 16, 64]), vec![1, 4, 16, 64]);
+    }
+
+    #[test]
+    fn resident_json_shape() {
+        let recs = vec![
+            ResidentRecord {
+                bench: "hist".into(),
+                rows: 4096,
+                shards: 1,
+                queries: 1,
+                load_cycles: 16384,
+                query_cycles: 524.0,
+                amortized_cycles: 16908.0,
+                energy_j: 1.0e-6,
+                wall_s: 0.01,
+            },
+            ResidentRecord {
+                bench: "hist".into(),
+                rows: 4096,
+                shards: 1,
+                queries: 64,
+                load_cycles: 16384,
+                query_cycles: 524.0,
+                amortized_cycles: 780.0,
+                energy_j: 3.0e-6,
+                wall_s: 0.4,
+            },
+        ];
+        let s = resident_records_json(&recs);
+        assert!(s.starts_with("[\n") && s.trim_end().ends_with(']'));
+        assert_eq!(s.matches("\"queries\"").count(), 2);
+        assert_eq!(s.matches("},\n").count(), 1);
+        assert!(s.contains("\"load_cycles\": 16384"));
+        assert!(s.contains("\"amortized_cycles\""));
     }
 
     #[test]

@@ -618,6 +618,27 @@ impl PrinsArray {
         self.modules[mi].load_row_bits(r, base, width, value);
     }
 
+    /// Storage-path load with device-model charging: the same data
+    /// movement as [`Self::load_row_bits`], but billed like the two-phase
+    /// RRAM row write it models — `CYCLES_WRITE` cycles on the array
+    /// clock and one write op on the owning module's ledger (the `width`
+    /// write-bit events are billed by the module's direct-write path
+    /// itself, shared with the uncharged form). This is the explicit
+    /// **load phase** of a load-once / query-many kernel (DESIGN.md
+    /// §Resident datasets): `XKernel::load` pays it once per stored
+    /// field, and queries never do. Charges are identical on every
+    /// execution backend (the storage path is not striped). The
+    /// cycle-free [`Self::load_row_bits`] stays for test scaffolding and
+    /// readout-side setup.
+    pub fn load_row_bits_charged(&mut self, row: usize, base: usize, width: usize, value: u64) {
+        let (mi, r) = self.split(row);
+        let m = &mut self.modules[mi];
+        // bills `width` write-bit events + wear on the module
+        m.load_row_bits(r, base, width, value);
+        m.ledger.n_write += 1;
+        self.cycles += CYCLES_WRITE;
+    }
+
     /// Storage-manager readout: fetch `width` bits of a global row.
     pub fn fetch_row_bits(&self, row: usize, base: usize, width: usize) -> u64 {
         let (mi, r) = self.split(row);
@@ -706,6 +727,26 @@ mod tests {
         assert_eq!(a.cycles - c0, 4);
         a.if_match();
         assert_eq!(a.cycles - c0, 5);
+    }
+
+    #[test]
+    fn charged_load_bills_cycles_and_ledger() {
+        let mut a = PrinsArray::new(2, 8, 16);
+        let c0 = a.cycles;
+        let l0 = a.ledger();
+        a.load_row_bits_charged(11, 0, 12, 0xABC); // module 1
+        assert_eq!(a.cycles - c0, 2, "one two-phase row write");
+        let d = a.ledger().minus(&l0);
+        assert_eq!(d.n_write, 1);
+        assert_eq!(d.write_bit_events, 12);
+        assert_eq!(a.fetch_row_bits(11, 0, 12), 0xABC);
+        // the uncharged path stays cycle-free (it has always billed the
+        // raw write-bit events, but no cycles and no write op)
+        let c1 = a.cycles;
+        let w1 = a.ledger().n_write;
+        a.load_row_bits(3, 0, 12, 0x123);
+        assert_eq!(a.cycles, c1);
+        assert_eq!(a.ledger().n_write, w1);
     }
 
     #[test]

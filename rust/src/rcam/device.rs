@@ -113,6 +113,24 @@ impl EnergyLedger {
         self.n_tag_op += other.n_tag_op;
     }
 
+    /// Events accumulated since `base` (`self − base`, counter-wise).
+    /// `base` must be an earlier snapshot of the same monotonically
+    /// growing ledger — the stats-window subtraction used by the
+    /// controller's kernel windows and the kernels' load-phase windows.
+    pub fn minus(&self, base: &EnergyLedger) -> EnergyLedger {
+        EnergyLedger {
+            compare_bit_events: self.compare_bit_events - base.compare_bit_events,
+            write_bit_events: self.write_bit_events - base.write_bit_events,
+            reduce_bit_events: self.reduce_bit_events - base.reduce_bit_events,
+            chain_bit_events: self.chain_bit_events - base.chain_bit_events,
+            n_compare: self.n_compare - base.n_compare,
+            n_write: self.n_write - base.n_write,
+            n_read: self.n_read - base.n_read,
+            n_reduce: self.n_reduce - base.n_reduce,
+            n_tag_op: self.n_tag_op - base.n_tag_op,
+        }
+    }
+
     /// Dynamic energy \[J\] under a device model.
     pub fn dynamic_energy_j(&self, dev: &DeviceModel) -> f64 {
         self.compare_bit_events as f64 * dev.e_compare_bit
@@ -148,6 +166,23 @@ mod tests {
         assert!(d.e_compare_bit <= 1e-15);
         assert!((d.e_write_bit - 100e-15).abs() < 1e-18);
         assert_eq!(d.endurance, 1e12);
+    }
+
+    #[test]
+    fn minus_inverts_add() {
+        let mut a = EnergyLedger::default();
+        a.compare_bit_events = 10;
+        a.n_compare = 2;
+        a.n_write = 1;
+        let mut b = a.clone();
+        b.add(&a);
+        b.write_bit_events += 7;
+        b.n_tag_op += 3;
+        let d = b.minus(&a);
+        assert_eq!(d.compare_bit_events, 10);
+        assert_eq!(d.n_compare, 2);
+        assert_eq!(d.write_bit_events, 7);
+        assert_eq!(d.n_tag_op, 3);
     }
 
     #[test]

@@ -1,0 +1,219 @@
+//! Differential test suite for `micro/float.rs`: run the associative
+//! `fp_add` / `fp_sub` / `fp_mul` microprograms against host `f32`
+//! arithmetic over adversarial operand grids — subnormals, exponent
+//! boundaries, ±0, NaN/Inf bit patterns, rounding ties — on both the
+//! serial and the threaded simulator backends.
+//!
+//! Reference semantics (DESIGN.md substitution ledger): the microcode
+//! deviates from IEEE-754 by flush-to-zero subnormals, round-toward-zero
+//! truncation (≤ 4 ulp per operation), and exponent saturation instead
+//! of Inf/NaN. The differential oracle therefore is:
+//!   * both backends agree **bit-for-bit** on every pair (always);
+//!   * for pairs whose FTZ'd operands are finite and whose exact result
+//!     lies in the comfortably-normal range, the microcode result is
+//!     within 4 ulp of host f32 arithmetic on the FTZ'd operands;
+//!   * exact zeros (cancellation, ±0 inputs, zero products) come back as
+//!     canonical zeros;
+//!   * NaN/Inf bit patterns never panic the simulator and produce
+//!     deterministic, backend-identical outputs (their unpacked form is
+//!     a saturated finite value — documented, not IEEE).
+
+use prins::controller::Controller;
+use prins::micro::float::{
+    bits_to_f32, fp_add, fp_mul, fp_sub, unpacked_bits, FloatField, FpScratch, FP_SCRATCH_BITS,
+};
+use prins::isa::{Field, Program};
+use prins::rcam::{ExecBackend, PrinsArray};
+
+/// Adversarial operand grid: zeros, subnormal extremes, normal extremes,
+/// exponent boundaries, rounding ties, and non-finite bit patterns.
+fn grid() -> Vec<f32> {
+    vec![
+        0.0,
+        -0.0,
+        1.0,
+        -1.0,
+        2.0,
+        0.5,
+        1.5,
+        -1.5,
+        // rounding ties / mantissa boundaries
+        1.0 + f32::EPSILON,            // smallest > 1
+        1.0 - f32::EPSILON / 2.0,      // largest < 1
+        16_777_216.0,                  // 2^24: mantissa lsb = 1.0
+        16_777_215.0,                  // 2^24 - 1: all-ones mantissa
+        0.1,                           // repeating fraction
+        -0.333_333_34,
+        // exponent boundaries
+        f32::MIN_POSITIVE,             // 2^-126, smallest normal
+        -f32::MIN_POSITIVE,
+        f32::from_bits(0x0080_0001),   // just above the subnormal border
+        8.5e-20,
+        1.0e20,
+        f32::MAX,
+        -f32::MAX,
+        // subnormals (FTZ: behave as ±0)
+        f32::from_bits(0x0000_0001),   // smallest positive subnormal
+        f32::from_bits(0x007F_FFFF),   // largest subnormal
+        -f32::from_bits(0x0040_0000),
+        // non-finite bit patterns (saturation semantics, no panics)
+        f32::INFINITY,
+        f32::NEG_INFINITY,
+        f32::NAN,
+    ]
+}
+
+/// Flush subnormals to (sign-preserving) zero — the microcode's storage
+/// format does this on load.
+fn ftz(v: f32) -> f32 {
+    if v != 0.0 && v.is_finite() && v.abs() < f32::MIN_POSITIVE {
+        if v.is_sign_negative() {
+            -0.0
+        } else {
+            0.0
+        }
+    } else {
+        v
+    }
+}
+
+fn ulp_diff(a: f32, b: f32) -> u64 {
+    if a == b || (a == 0.0 && b == 0.0) {
+        return 0;
+    }
+    let key = |v: f32| {
+        let b = v.to_bits();
+        if b >> 31 == 1 {
+            -((b & 0x7FFF_FFFF) as i64)
+        } else {
+            (b & 0x7FFF_FFFF) as i64
+        }
+    };
+    (key(a) - key(b)).unsigned_abs()
+}
+
+/// Magnitude of one ulp at |v| (v normal): distance to the next float up.
+fn ulp_of(v: f32) -> f32 {
+    let a = v.abs();
+    f32::from_bits(a.to_bits() + 1) - a
+}
+
+/// Whether the exact result is in the range where the 4-ulp contract
+/// applies (clear of the saturation and flush-to-zero regions).
+fn value_checkable(exact: f32) -> bool {
+    exact == 0.0 || (exact.is_finite() && exact.abs() >= 1.0e-36 && exact.abs() <= 1.0e36)
+}
+
+/// Run `build(prog, x, y, z)` over all operand pairs on the given
+/// backend; returns the per-pair raw 33-bit results.
+fn run_microprogram(
+    pairs: &[(f32, f32)],
+    backend: ExecBackend,
+    build: impl Fn(&mut Program, FloatField, FloatField, FloatField),
+) -> Vec<u64> {
+    let x = FloatField::at(0);
+    let y = FloatField::at(33);
+    let z = FloatField::at(66);
+    let mut prog = Program::new();
+    build(&mut prog, x, y, z);
+    let mut c = Controller::new(PrinsArray::single(pairs.len(), 240).with_backend(backend));
+    for (r, (a, b)) in pairs.iter().enumerate() {
+        c.array.load_row_bits(r, 0, 33, unpacked_bits(*a));
+        c.array.load_row_bits(r, 33, 33, unpacked_bits(*b));
+    }
+    c.execute(&prog);
+    (0..pairs.len())
+        .map(|r| c.array.fetch_row_bits(r, 66, 33))
+        .collect()
+}
+
+/// The differential driver. `relative` selects the error contract:
+/// multiplication carries the ≤ 4 ulp **relative** truncation bound (no
+/// cancellation is possible); addition/subtraction without guard bits
+/// carries the honest **absolute** bound of ≤ 4 ulp of the largest
+/// participating magnitude — catastrophic cancellation across an
+/// exponent boundary legitimately amplifies relative error, and a
+/// relative oracle there would test IEEE semantics the hardware never
+/// promised.
+fn differential(
+    op_name: &str,
+    host: impl Fn(f32, f32) -> f32,
+    relative: bool,
+    build: impl Fn(&mut Program, FloatField, FloatField, FloatField) + Copy,
+) {
+    let g = grid();
+    let pairs: Vec<(f32, f32)> = g
+        .iter()
+        .flat_map(|&a| g.iter().map(move |&b| (a, b)))
+        .collect();
+    let serial = run_microprogram(&pairs, ExecBackend::Serial, build);
+    let threaded = run_microprogram(&pairs, ExecBackend::Threaded(3), build);
+    for (r, (a, b)) in pairs.iter().enumerate() {
+        // 1. backends agree bit-for-bit on every pair, special or not
+        assert_eq!(
+            serial[r], threaded[r],
+            "{op_name} row {r} ({a:e}, {b:e}): serial/threaded diverge"
+        );
+        let (fa, fb) = (ftz(*a), ftz(*b));
+        if !fa.is_finite() || !fb.is_finite() {
+            continue; // saturation semantics: determinism asserted above
+        }
+        let got = bits_to_f32(serial[r]);
+        let exact = host(fa, fb);
+        if !value_checkable(exact) {
+            continue; // saturation / underflow region
+        }
+        if exact == 0.0 {
+            // 2. exact zeros come back canonical (±0)
+            assert_eq!(
+                got.abs().to_bits(),
+                0,
+                "{op_name} row {r} ({a:e}, {b:e}): expected canonical zero, got {got:e}"
+            );
+        } else if relative {
+            // 3a. multiplication: ≤ 4 ulp relative
+            assert!(
+                ulp_diff(got, exact) <= 4,
+                "{op_name} row {r}: {a:e} {op_name} {b:e} = {exact:e}, got {got:e} \
+                 ({} ulp)",
+                ulp_diff(got, exact)
+            );
+        } else {
+            // 3b. add/sub: ≤ 4 ulp of the largest participating magnitude
+            let maxmag = fa.abs().max(fb.abs()).max(exact.abs());
+            let bound = 4.0 * ulp_of(maxmag);
+            assert!(
+                (got - exact).abs() <= bound,
+                "{op_name} row {r}: {a:e} {op_name} {b:e} = {exact:e}, got {got:e} \
+                 (err {:e} > bound {bound:e})",
+                (got - exact).abs()
+            );
+        }
+    }
+}
+
+#[test]
+fn fp_add_differential_grid() {
+    differential("add", |a, b| a + b, false, |p, x, y, z| {
+        let s = FpScratch::at(100);
+        let wexp = Field::new(100 + FP_SCRATCH_BITS, 8);
+        fp_add(p, x, y, z, s, wexp);
+    });
+}
+
+#[test]
+fn fp_sub_differential_grid() {
+    differential("sub", |a, b| a - b, false, |p, x, y, z| {
+        let ycopy = FloatField::at(171);
+        let s = FpScratch::at(100);
+        let wexp = Field::new(100 + FP_SCRATCH_BITS, 8);
+        fp_sub(p, x, y, z, ycopy, s, wexp);
+    });
+}
+
+#[test]
+fn fp_mul_differential_grid() {
+    differential("mul", |a, b| a * b, true, |p, x, y, z| {
+        fp_mul(p, x, y, z, 100);
+    });
+}

@@ -1,0 +1,143 @@
+//! Protocol conformance suite driven by `docs/PROTOCOL.md`: every
+//! malformed or out-of-range request line must yield a single `ERR`
+//! reply on a live connection — never a panic, never a silent
+//! disconnect — and the connection (including its session state) must
+//! remain fully usable afterwards.
+
+use prins::host::server::Server;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+/// Every line here is specified (or implied) invalid by docs/PROTOCOL.md.
+const MALFORMED: &[&str] = &[
+    // unknown verbs / framing
+    "BOGUS",
+    "BOGUS 1 2",
+    "",               // empty line
+    "rack 2",         // verbs are case-sensitive upper-case
+    "ping",
+    "PING extra",     // wrong arity for PING
+    // RACK bounds
+    "RACK 0",
+    "RACK 65",
+    "RACK -1",
+    "RACK two",
+    "RACK 999999999999999999999999", // u64 overflow -> parse error
+    // one-shot kernel bounds
+    "HIST 0 1",
+    "HIST 1048577 1",          // n > 2^20
+    "HIST 99999999999999999999 1",
+    "DP 0 4 1",
+    "DP 10 0 1",
+    "DP 10 17 1",              // dims > 16
+    "DP 65537 4 1",            // n > 2^16
+    "ED 0 2 1 1",
+    "ED 10 9 1 1",             // dims > 8
+    "ED 10 2 0 1",
+    "ED 10 2 17 1",            // k > 16
+    "SPMV 0 10 1",
+    "SPMV 16385 10 1",         // n > 2^14
+    "SPMV 64 262145 1",        // nnz > 2^18
+    "SPMV 64 0 1",
+    // LOAD grammar and bounds
+    "LOAD",
+    "LOAD FOO 10 1",
+    "LOAD hist 10 1",          // kinds are upper-case
+    "LOAD HIST",
+    "LOAD HIST 10",
+    "LOAD HIST 0 1",
+    "LOAD HIST 1048577 1",
+    "LOAD DP 10 1",            // missing dims
+    "LOAD DP 10 0 1",
+    "LOAD DP 10 17 1",
+    "LOAD ED 10 9 1",
+    "LOAD SPMV 0 10 1",
+    "LOAD SPMV 64 262145 1",
+    // registry misuse: ids that don't exist, malformed ids
+    "DROP",
+    "DROP 7",
+    "DROP x",
+    "HIST 99",                 // dataset-id form, unknown id
+    "DP 99 1",
+    "ED 99 1 1",
+    "SPMV 99 1",
+    "DATASETS 1",              // wrong arity
+];
+
+#[test]
+fn every_malformed_line_errs_and_leaves_the_connection_alive() {
+    let server = Server::spawn("127.0.0.1:0").unwrap();
+    let mut conn = TcpStream::connect(server.addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut line = String::new();
+    for req in MALFORMED {
+        line.clear();
+        writeln!(conn, "{req}").unwrap();
+        let n = reader.read_line(&mut line).unwrap();
+        assert!(n > 0, "{req:?}: server disconnected instead of replying");
+        assert!(
+            line.starts_with("ERR"),
+            "{req:?}: expected ERR, got {line:?}"
+        );
+        // the connection and its session must remain usable
+        line.clear();
+        writeln!(conn, "PING").unwrap();
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(line.trim(), "PONG", "{req:?}: connection unusable afterwards");
+    }
+    server.shutdown();
+}
+
+#[test]
+fn errors_do_not_corrupt_session_state() {
+    let server = Server::spawn("127.0.0.1:0").unwrap();
+    let mut conn = TcpStream::connect(server.addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut line = String::new();
+    let mut ask = |conn: &mut TcpStream, reader: &mut BufReader<TcpStream>, req: &str| {
+        line.clear();
+        writeln!(conn, "{req}").unwrap();
+        reader.read_line(&mut line).unwrap();
+        line.trim().to_string()
+    };
+    // establish state, then fire errors through it
+    assert_eq!(ask(&mut conn, &mut reader, "RACK 2"), "OK shards=2");
+    assert!(ask(&mut conn, &mut reader, "LOAD HIST 400 7").starts_with("OK id=1"));
+    assert!(ask(&mut conn, &mut reader, "RACK 0").starts_with("ERR"));
+    assert!(ask(&mut conn, &mut reader, "LOAD FOO 1 2").starts_with("ERR"));
+    assert!(ask(&mut conn, &mut reader, "DROP 9").starts_with("ERR"));
+    // shard count and the resident dataset survived every error
+    assert_eq!(ask(&mut conn, &mut reader, "RACK"), "OK shards=2");
+    assert_eq!(
+        ask(&mut conn, &mut reader, "DATASETS"),
+        "OK count=1 ds=1:hist:400:2"
+    );
+    let q = ask(&mut conn, &mut reader, "HIST 1");
+    assert!(q.contains("total=400") && q.contains("dataset=1"), "{q}");
+    server.shutdown();
+}
+
+#[test]
+fn dataset_limit_is_enforced_and_recoverable() {
+    let server = Server::spawn("127.0.0.1:0").unwrap();
+    let mut conn = TcpStream::connect(server.addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut line = String::new();
+    let mut ask = |conn: &mut TcpStream, reader: &mut BufReader<TcpStream>, req: &str| {
+        line.clear();
+        writeln!(conn, "{req}").unwrap();
+        reader.read_line(&mut line).unwrap();
+        line.trim().to_string()
+    };
+    // fill the registry to its documented cap of 16
+    for i in 0..16 {
+        let r = ask(&mut conn, &mut reader, "LOAD HIST 16 1");
+        assert!(r.starts_with(&format!("OK id={}", i + 1)), "{r}");
+    }
+    let full = ask(&mut conn, &mut reader, "LOAD HIST 16 1");
+    assert!(full.starts_with("ERR") && full.contains("limit"), "{full}");
+    // dropping one frees a slot; ids keep monotonically increasing
+    assert_eq!(ask(&mut conn, &mut reader, "DROP 3"), "OK dropped=3");
+    assert!(ask(&mut conn, &mut reader, "LOAD HIST 16 1").starts_with("OK id=17"));
+    server.shutdown();
+}

@@ -1,0 +1,155 @@
+//! Tentpole acceptance suite for resident datasets (load-once /
+//! query-many, DESIGN.md §Resident datasets): for each of ED / DP /
+//! HIST / SpMV, query #2..Q on a resident dataset must produce
+//! bit-identical results to the one-shot path while charging zero
+//! load-phase writes — each query's stats window contains exactly the
+//! query program, never a reload.
+
+use prins::algorithms::{
+    dot_sharded, euclidean_sharded, histogram_baseline_at, histogram_sharded, spmv_sharded,
+    ResidentDot, ResidentEuclidean, ResidentHistogram, ResidentSpmv,
+};
+use prins::controller::ExecStats;
+use prins::host::rack::PrinsRack;
+use prins::workloads::{synth_csr, synth_hist_samples, synth_samples, synth_uniform, Rng};
+
+const Q: usize = 5;
+
+/// Two stats windows are the same work: cycles and the full event ledger.
+fn assert_same_stats(a: &ExecStats, b: &ExecStats, what: &str) {
+    assert_eq!(a.cycles, b.cycles, "{what}: cycles");
+    assert_eq!(a.ledger, b.ledger, "{what}: ledger");
+}
+
+#[test]
+fn ed_queries_bit_identical_and_reload_free() {
+    let (n, dims, k) = (40usize, 3usize, 2usize);
+    let x = synth_samples(n, dims, 4, 5);
+    let centers = synth_uniform(k * dims, 6);
+    for shards in [1usize, 3] {
+        let rack = PrinsRack::new(shards);
+        let one_shot = euclidean_sharded(&rack, &x, n, dims, &centers, k, 2);
+        let mut res = ResidentEuclidean::load(&rack, &x, n, dims);
+        let load_writes: u64 = res
+            .load_report()
+            .shard_stats
+            .iter()
+            .map(|s| s.ledger.n_write)
+            .sum();
+        assert_eq!(load_writes, (n * dims) as u64, "one write per stored attribute");
+        let mut prev = None;
+        for q in 0..Q {
+            let r = res.query(&centers, k, 2);
+            for c in 0..k {
+                assert!(
+                    r.dists[c]
+                        .iter()
+                        .zip(&one_shot.dists[c])
+                        .all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "shards={shards} query={q} center={c}: diverged from one-shot"
+                );
+            }
+            assert_eq!(r.nearest, one_shot.nearest, "shards={shards} query={q}");
+            for (i, st) in r.rack.shard_stats.iter().enumerate() {
+                assert_same_stats(st, &one_shot.rack.shard_stats[i], "vs one-shot");
+                if let Some(p) = &prev {
+                    let p: &Vec<ExecStats> = p;
+                    assert_same_stats(st, &p[i], "vs previous query");
+                }
+            }
+            prev = Some(r.rack.shard_stats.clone());
+        }
+    }
+}
+
+#[test]
+fn dp_queries_bit_identical_and_reload_free() {
+    let (n, dims) = (48usize, 4usize);
+    let x = synth_samples(n, dims, 4, 9);
+    let h = synth_uniform(dims, 10);
+    for shards in [1usize, 2] {
+        let rack = PrinsRack::new(shards);
+        let one_shot = dot_sharded(&rack, &x, n, dims, &h);
+        let mut res = ResidentDot::load(&rack, &x, n, dims);
+        for q in 0..Q {
+            let r = res.query(&h);
+            assert!(
+                r.dp.iter().zip(&one_shot.dp).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "shards={shards} query={q}: diverged from one-shot"
+            );
+            for (st, os) in r.rack.shard_stats.iter().zip(&one_shot.rack.shard_stats) {
+                assert_same_stats(st, os, "dp query window");
+            }
+        }
+    }
+}
+
+#[test]
+fn hist_queries_bit_identical_write_free_and_rebinnable() {
+    let xs = synth_hist_samples(3000, 11);
+    for shards in [1usize, 3] {
+        let rack = PrinsRack::new(shards);
+        let one_shot = histogram_sharded(&rack, &xs);
+        let mut res = ResidentHistogram::load(&rack, &xs);
+        for q in 0..Q {
+            let r = res.query();
+            assert_eq!(r.hist, one_shot.hist, "shards={shards} query={q}");
+            for st in &r.rack.shard_stats {
+                assert_eq!(st.ledger.n_write, 0, "histogram queries never write");
+                assert_eq!(st.ledger.write_bit_events, 0);
+            }
+        }
+        // new bin edges on the same resident samples
+        for lo in [16u16, 8, 0] {
+            assert_eq!(res.query_at(lo).hist, histogram_baseline_at(&xs, lo));
+        }
+    }
+}
+
+#[test]
+fn spmv_queries_bit_identical_and_reload_free() {
+    let a = synth_csr(56, 400, 13);
+    let mut rng = Rng::seed_from(14);
+    let x: Vec<f32> = (0..a.n).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+    for shards in [1usize, 2] {
+        let rack = PrinsRack::new(shards);
+        let one_shot = spmv_sharded(&rack, &a, &x);
+        let mut res = ResidentSpmv::load(&rack, &a);
+        let load_writes: u64 = res
+            .load_report()
+            .shard_stats
+            .iter()
+            .map(|s| s.ledger.n_write)
+            .sum();
+        assert_eq!(load_writes, 4 * a.nnz() as u64, "four writes per CSR nonzero");
+        for q in 0..Q {
+            let r = res.query(&x);
+            assert!(
+                r.y.iter().zip(&one_shot.y).all(|(p, s)| p.to_bits() == s.to_bits()),
+                "shards={shards} query={q}: diverged from one-shot"
+            );
+            for (st, os) in r.rack.shard_stats.iter().zip(&one_shot.rack.shard_stats) {
+                assert_same_stats(st, os, "spmv query window");
+            }
+        }
+    }
+}
+
+#[test]
+fn amortized_per_query_cycles_strictly_decrease() {
+    // The acceptance curve of BENCH_resident.json in miniature: with the
+    // load phase charged once, (load + Σ query) / Q strictly decreases.
+    let xs = synth_hist_samples(2048, 17);
+    let rack = PrinsRack::new(1);
+    let mut res = ResidentHistogram::load(&rack, &xs);
+    let load = res.load_report().total_cycles;
+    assert!(load > 0, "load phase must be charged");
+    let mut amortized = Vec::new();
+    for q_count in [1usize, 4, 16, 64] {
+        let total: u64 = (0..q_count).map(|_| res.query().rack.total_cycles).sum();
+        amortized.push((load + total) as f64 / q_count as f64);
+    }
+    for w in amortized.windows(2) {
+        assert!(w[1] < w[0], "amortized cycles must strictly decrease: {amortized:?}");
+    }
+}

@@ -1,0 +1,122 @@
+//! Multi-client server concurrency suite: N client threads drive one
+//! `Server` with interleaved `RACK` / `LOAD` / query / `DROP` verbs.
+//! Sessions must be fully isolated — per-connection dataset ids, shard
+//! counts, and resident data — and every reply must be bit-equal to the
+//! same script executed alone on a single connection.
+
+use prins::host::server::Server;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+/// Run a request script on one fresh connection, collecting the replies.
+fn run_script(addr: std::net::SocketAddr, script: &[String]) -> Vec<String> {
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut replies = Vec::with_capacity(script.len());
+    for req in script {
+        writeln!(conn, "{req}").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        replies.push(line.trim().to_string());
+    }
+    replies
+}
+
+/// Per-client script: client i gets its own shard count, workload sizes
+/// and seeds, so concurrent sessions that leak state into each other
+/// cannot produce the reference replies.
+fn script_for(i: usize) -> Vec<String> {
+    let shards = 1 + (i % 3); // 1, 2, 3, 1, ...
+    let n = 300 + 40 * i;
+    let seed = 7 + i as u64;
+    vec![
+        "PING".to_string(),
+        format!("RACK {shards}"),
+        format!("LOAD HIST {n} {seed}"),
+        format!("LOAD DP 24 4 {seed}"),
+        "DATASETS".to_string(),
+        "HIST 1".to_string(),
+        "HIST 1".to_string(), // repeat: resident query must be stable
+        format!("DP 2 {}", seed + 1),
+        format!("HIST {n} {seed}"), // one-shot interleaved with resident
+        "DROP 1".to_string(),
+        "DATASETS".to_string(),
+        "HIST 1".to_string(), // dropped: ERR, but session stays usable
+        format!("DP 2 {}", seed + 1),
+        "QUIT".to_string(),
+    ]
+}
+
+#[test]
+fn concurrent_sessions_are_isolated_and_bit_equal_to_single_client() {
+    const CLIENTS: usize = 4;
+    let server = Server::spawn("127.0.0.1:0").unwrap();
+    let addr = server.addr;
+
+    // reference pass: each script alone, sequentially
+    let expected: Vec<Vec<String>> = (0..CLIENTS)
+        .map(|i| run_script(addr, &script_for(i)))
+        .collect();
+    // sanity on the reference itself
+    for (i, replies) in expected.iter().enumerate() {
+        assert_eq!(replies[0], "PONG");
+        assert!(replies[2].starts_with("OK id=1 kind=hist"), "client {i}: {}", replies[2]);
+        assert!(replies[3].starts_with("OK id=2 kind=dp"), "client {i}: {}", replies[3]);
+        assert!(replies[4].starts_with("OK count=2"), "client {i}: {}", replies[4]);
+        assert_eq!(replies[5], replies[6], "client {i}: resident repeat drifted");
+        assert!(replies[11].starts_with("ERR"), "client {i}: {}", replies[11]);
+        assert_eq!(replies[7], replies[12], "client {i}: DP after DROP drifted");
+        assert_eq!(*replies.last().unwrap(), "BYE");
+    }
+
+    // concurrent pass: all clients at once against the same server
+    let got: Vec<Vec<String>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..CLIENTS)
+            .map(|i| s.spawn(move || run_script(addr, &script_for(i))))
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    for (i, (g, e)) in got.iter().zip(&expected).enumerate() {
+        assert_eq!(g, e, "client {i}: concurrent replies diverge from single-client run");
+    }
+    server.shutdown();
+}
+
+#[test]
+fn interleaved_queries_on_one_shared_server_stay_deterministic() {
+    // Two rounds of the same mixed workload from many threads: every
+    // reply for a given request line must be identical across rounds and
+    // across threads (the server holds no cross-connection state).
+    let server = Server::spawn("127.0.0.1:0").unwrap();
+    let addr = server.addr;
+    let script: Vec<String> = vec![
+        "LOAD SPMV 40 280 5".into(),
+        "SPMV 1 9".into(),
+        "SPMV 1 9".into(),
+        "LOAD ED 32 2 6".into(),
+        "ED 2 3 11".into(),
+        "SPMV 1 9".into(),
+        "QUIT".into(),
+    ];
+    let rounds: Vec<Vec<Vec<String>>> = (0..2)
+        .map(|_| {
+            std::thread::scope(|s| {
+                let handles: Vec<_> = (0..3)
+                    .map(|_| s.spawn(|| run_script(addr, &script)))
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            })
+        })
+        .collect();
+    let reference = &rounds[0][0];
+    assert!(reference[1].contains("checksum=") && reference[1].contains("dataset=1"));
+    assert_eq!(reference[1], reference[2], "resident SPMV repeat drifted");
+    assert_eq!(reference[1], reference[5], "resident SPMV drifted after another LOAD");
+    for (r, round) in rounds.iter().enumerate() {
+        for (t, replies) in round.iter().enumerate() {
+            assert_eq!(replies, reference, "round {r} thread {t} diverged");
+        }
+    }
+    server.shutdown();
+}
