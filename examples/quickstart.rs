@@ -1,40 +1,54 @@
-//! Quickstart: stand up a PRINS device, store a dataset *in* it, and run
-//! an associative kernel through the host register protocol — the
-//! fifty-line tour of the public API.
+//! Quickstart: stand up a PRINS rack, load a dataset *into* the storage
+//! once, and query it many times through the generic kernel framework —
+//! the fifty-line tour of the public API (DESIGN.md §Kernel framework).
+//!
+//! `Resident::<K>::load` + `query` is the canonical way to drive any
+//! registered kernel (hist, dp, ed, spmv, search); swap the kernel type
+//! and the dataset and everything else stays the same.
 //!
 //!   cargo run --release --example quickstart
-use prins::controller::kernels::KernelId;
-use prins::controller::registers::Status;
-use prins::host::PrinsDevice;
+use prins::algorithms::{HistogramKernel, Resident, SearchKernel, SearchRange};
+use prins::host::rack::PrinsRack;
 use prins::workloads::synth_hist_samples;
 
 fn main() {
-    // 1. a PRINS device: 64Ki rows of 64-bit RCAM storage
-    let device = PrinsDevice::new(1 << 16, 64);
+    // 1. a PRINS rack (one shard device here; try PrinsRack::new(4))
+    let rack = PrinsRack::new(1);
 
     // 2. the dataset lives in the storage (paper §5.3: "the datasets on
-    //    which PRINS operates must reside in PRINS")
+    //    which PRINS operates must reside in PRINS") — loaded ONCE, with
+    //    the load cost charged to the device model
     let samples = synth_hist_samples(50_000, 42);
-    device.load_samples_for_histogram(&samples);
+    let mut hist = Resident::<HistogramKernel>::load(&rack, &samples);
+    let load = hist.load_report();
+    println!("histogram dataset: {} samples resident", hist.n);
+    println!("  load (paid once)  : {} cycles", load.total_cycles);
 
-    // 3. trigger the histogram kernel by ID and poll the status register
-    let status = device.run_kernel(KernelId::Histogram, &[], &[]);
-    assert_eq!(status, Status::Done);
+    // 3. query many: each query re-bins the SAME resident samples on a
+    //    fresh 8-bit window — compare-only, zero writes, cycle count
+    //    independent of the sample count
+    for lo_bit in [24u16, 16, 8] {
+        let out = hist.query(&lo_bit);
+        let top = out.merged.iter().enumerate().max_by_key(|(_, &c)| c).unwrap();
+        println!(
+            "  bins [{:2}..{:2}]     : hottest bin {} ({} samples), {} cycles, {:.2} µs @500MHz",
+            lo_bit + 7,
+            lo_bit,
+            top.0,
+            top.1,
+            out.rack.total_cycles,
+            out.rack.total_cycles as f64 / 500e6 * 1e6
+        );
+    }
 
-    // 4. read results + the performance counters
-    let out = device.take_outputs();
-    let top = out
-        .u64s
-        .iter()
-        .enumerate()
-        .max_by_key(|(_, &c)| c)
-        .unwrap();
-    println!("histogram over {} samples:", samples.len());
-    println!("  hottest bin       : {} ({} samples)", top.0, top.1);
-    println!("  device cycles     : {} (independent of sample count!)", out.cycles);
+    // 4. a different kernel, the same three lines: associative SEARCH
+    //    range-counts the same keys through the CAM's native match
+    let mut search = Resident::<SearchKernel>::load(&rack, &samples);
+    let out = search.query(&SearchRange::new(0, u32::MAX / 2));
     println!(
-        "  device time@500MHz: {:.2} µs",
-        out.cycles as f64 / 500e6 * 1e6
+        "search [0, 2^31)    : {} of {} keys matched in {} cycles",
+        out.merged,
+        search.n,
+        out.rack.total_cycles
     );
-    println!("  energy            : {:.2} nJ", out.energy_j * 1e9);
 }

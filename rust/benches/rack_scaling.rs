@@ -1,28 +1,28 @@
-//! Rack shard-count scaling bench (DESIGN.md §Sharding): run the four
-//! sharded workloads (hist / dp / ed / spmv) over a shard-count sweep and
-//! write the modeled rack figures to `BENCH_rack.json` at the repository
-//! root — the scaling curves the README's "Run a rack" table is fed from.
+//! Rack shard-count scaling bench (DESIGN.md §Sharding): run **every
+//! registered kernel** (the registry currently carries hist / dp / ed /
+//! spmv / search — a newly registered workload joins automatically) over
+//! a shard-count sweep and write the modeled rack figures to
+//! `BENCH_rack.json` at the repository root — the scaling curves the
+//! README's "Run a rack" table is fed from.
 //!
-//! Flags (after `cargo bench --bench rack_scaling --`):
-//!   --rows N          dataset rows (default 1<<14; dense/spmv workloads
-//!                     cap at 4096 rows — printed when the cap applies)
+//! Flags (after `cargo bench --bench rack_scaling -- ...`):
+//!   --rows N          dataset rows (default 1<<14; dense workloads cap
+//!                     at 4096 rows — printed when the cap applies)
 //!   --shards a,b,c    shard-count sweep (default 1,2,4,8)
 //!   --workers W       per-shard simulator backend threads (default 1)
 //!   --verify          assert every sharded result bit-equal to the
-//!                     single-device (1-shard-values) reference
+//!                     single-device (1-shard) reference
 
-use prins::algorithms::{
-    dot_sharded, euclidean_sharded, histogram_sharded, spmv_sharded,
-};
 use prins::host::rack::PrinsRack;
 use prins::metrics::bench::{
-    arg_u64, shards_sweep_from_args, write_rack_json, RackRecord,
+    arg_u64, rack_registry_points, shards_sweep_from_args, write_rack_json, RackRecord,
 };
 use prins::rcam::{DeviceModel, ExecBackend, InterconnectModel};
-use prins::workloads::{synth_csr, synth_hist_samples, synth_samples, synth_uniform, Rng};
-use std::time::Instant;
+use std::collections::HashMap;
 
 const DIMS: usize = 8;
+const SEED: u64 = 17;
+const DENSE_CAP: usize = 4096;
 
 fn rack(shards: usize, backend: ExecBackend) -> PrinsRack {
     PrinsRack::with_config(
@@ -41,105 +41,44 @@ fn main() {
     let backend = ExecBackend::from_workers(workers);
     let verify = args.iter().any(|a| a == "--verify");
 
-    // the microcoded dense kernels and spmv simulate every pass over every
-    // row; cap them so the sweep stays minutes-scale at large --rows
-    let dense_rows = rows.min(4096);
-    if dense_rows != rows {
-        println!("note: dp/ed/spmv capped at {dense_rows} rows (hist uses {rows})");
+    if rows > DENSE_CAP {
+        println!("note: dense kernels capped at {DENSE_CAP} rows (compare-only kernels use {rows})");
     }
     println!("rows = {rows}, shard sweep = {sweep:?}, backend = {backend:?}");
-
-    let xs = synth_hist_samples(rows, 7);
-    let xv = synth_samples(dense_rows, DIMS, 4, 11);
-    let h = synth_uniform(DIMS, 12);
-    let centers = synth_uniform(DIMS, 13);
-    let a = synth_csr(dense_rows, dense_rows * 8, 17);
-    let mut rng = Rng::seed_from(18);
-    let x: Vec<f32> = (0..dense_rows).map(|_| rng.f32_range(-1.0, 1.0)).collect();
 
     // single-device-value reference for --verify (a 1-shard rack computes
     // exactly the single-device result values). When the sweep itself
     // starts at shards=1 — the default, and what CI runs — the reference
     // is captured from that iteration instead of being computed twice.
-    type Reference = (Vec<u64>, Vec<f32>, Vec<Vec<f32>>, Vec<f32>);
-    let mut reference: Option<Reference> = None;
+    let mut reference: HashMap<&'static str, Vec<u64>> = HashMap::new();
     if verify && sweep.first() != Some(&1) {
-        let r1 = rack(1, backend);
-        reference = Some((
-            histogram_sharded(&r1, &xs).hist,
-            dot_sharded(&r1, &xv, dense_rows, DIMS, &h).dp,
-            euclidean_sharded(&r1, &xv, dense_rows, DIMS, &centers, 1, 5).dists,
-            spmv_sharded(&r1, &a, &x).y,
-        ));
+        for p in rack_registry_points(&rack(1, backend), rows, DENSE_CAP, DIMS, SEED) {
+            reference.insert(p.name, p.bits);
+        }
     }
 
     let mut records: Vec<RackRecord> = Vec::new();
-    let push = |records: &mut Vec<RackRecord>,
-                    bench: &str,
-                    nrows: usize,
-                    shards: usize,
-                    rs: &prins::host::rack::RackStats,
-                    wall: f64| {
-        println!(
-            "{bench:<5} shards={shards:<2} total_cycles={:>9} max_shard={:>9} \
-             link_bytes={:>9} energy={:.3e} J  wall={:.3}s",
-            rs.total_cycles, rs.max_shard_cycles, rs.link_bytes, rs.energy_j, wall
-        );
-        records.push(RackRecord {
-            bench: bench.into(),
-            rows: nrows as u64,
-            shards: shards as u64,
-            total_cycles: rs.total_cycles,
-            max_shard_cycles: rs.max_shard_cycles,
-            link_bytes: rs.link_bytes,
-            energy_j: rs.energy_j,
-            wall_s: wall,
-        });
-    };
-
     for &s in &sweep {
-        let rk = rack(s, backend);
-
-        let t0 = Instant::now();
-        let hist = histogram_sharded(&rk, &xs);
-        push(&mut records, "hist", rows, s, &hist.rack, t0.elapsed().as_secs_f64());
-
-        let t0 = Instant::now();
-        let dp = dot_sharded(&rk, &xv, dense_rows, DIMS, &h);
-        push(&mut records, "dp", dense_rows, s, &dp.rack, t0.elapsed().as_secs_f64());
-
-        let t0 = Instant::now();
-        let ed = euclidean_sharded(&rk, &xv, dense_rows, DIMS, &centers, 1, 5);
-        push(&mut records, "ed", dense_rows, s, &ed.rack, t0.elapsed().as_secs_f64());
-
-        let t0 = Instant::now();
-        let sp = spmv_sharded(&rk, &a, &x);
-        push(&mut records, "spmv", dense_rows, s, &sp.rack, t0.elapsed().as_secs_f64());
-
-        if verify && s == 1 && reference.is_none() {
-            reference = Some((
-                hist.hist.clone(),
-                dp.dp.clone(),
-                ed.dists.clone(),
-                sp.y.clone(),
-            ));
-            println!("captured shards=1 values as the verification reference");
-        } else if let Some((rh, rd, re, ry)) = &reference {
-            assert_eq!(&hist.hist, rh, "shards={s}: histogram mismatch");
-            assert!(
-                dp.dp.iter().zip(rd).all(|(a, b)| a.to_bits() == b.to_bits()),
-                "shards={s}: dp mismatch"
-            );
-            for (c, (ec, rc)) in ed.dists.iter().zip(re).enumerate() {
-                assert!(
-                    ec.iter().zip(rc).all(|(a, b)| a.to_bits() == b.to_bits()),
-                    "shards={s}: ed center {c} mismatch"
-                );
+        let points = rack_registry_points(&rack(s, backend), rows, DENSE_CAP, DIMS, SEED);
+        let mut captured = false;
+        for p in points {
+            if verify {
+                if let Some(r) = reference.get(p.name) {
+                    assert_eq!(
+                        &p.bits, r,
+                        "shards={s}: {} diverged from the single-device values",
+                        p.name
+                    );
+                } else if s == 1 {
+                    reference.insert(p.name, p.bits);
+                    captured = true;
+                }
             }
-            assert!(
-                sp.y.iter().zip(ry).all(|(a, b)| a.to_bits() == b.to_bits()),
-                "shards={s}: spmv mismatch"
-            );
+            records.push(p.record);
+        }
+        if verify && captured {
+            println!("captured shards=1 values as the verification reference");
+        } else if verify {
             println!("verified shards={s} bit-equal to single-device values");
         }
     }

@@ -1,14 +1,17 @@
 //! Resident-dataset amortization bench (DESIGN.md §Resident datasets):
-//! load each workload onto a rack **once**, run Q queries with fresh
-//! parameters per query (new bin edges / hyperplane / centers / x
-//! vector), and write the amortization curve to `BENCH_resident.json` at
-//! the repository root. Per-query modeled cycles collapse from
-//! `load + query` at Q=1 toward the query floor as Q grows — the
-//! storage-appliance claim (load once, serve many) in one JSON file.
+//! load **every registered kernel**'s workload onto a rack once (the
+//! registry currently carries hist / dp / ed / spmv / search — a newly
+//! registered workload joins automatically), run Q queries with fresh
+//! parameters per query (the kernel's seeded parameter stream: new bin
+//! edges / hyperplane / centers / x vector / search range), and write
+//! the amortization curve to `BENCH_resident.json` at the repository
+//! root. Per-query modeled cycles collapse from `load + query` at Q=1
+//! toward the query floor as Q grows — the storage-appliance claim
+//! (load once, serve many) in one JSON file.
 //!
-//! Flags (after `cargo bench --bench resident_queries --`):
-//!   --rows N          histogram sample count (default 1<<14; the dense
-//!                     microcoded workloads and spmv cap at 512 rows)
+//! Flags (after `cargo bench --bench resident_queries -- ...`):
+//!   --rows N          dataset rows (default 1<<14; dense workloads cap
+//!                     at 512 rows — printed when the cap applies)
 //!   --queries a,b,c   query-count sweep (default 1,4,16,64)
 //!   --shards S        shard-device count of the resident rack (default 1)
 //!   --workers W       per-shard simulator backend threads (default 1)
@@ -18,47 +21,16 @@
 //!                     tier-1 suite `tests/resident_datasets.rs`, which
 //!                     checks every query)
 
-use prins::algorithms::{
-    dot_sharded, euclidean_sharded, histogram_baseline_at, spmv_sharded, ResidentDot,
-    ResidentEuclidean, ResidentHistogram, ResidentSpmv,
-};
 use prins::host::rack::PrinsRack;
 use prins::metrics::bench::{
-    arg_u64, queries_sweep_from_args, write_resident_json, ResidentRecord,
+    arg_u64, queries_sweep_from_args, resident_registry_points, write_resident_json,
+    ResidentRecord,
 };
 use prins::rcam::{DeviceModel, ExecBackend, InterconnectModel};
-use prins::workloads::{synth_csr, synth_hist_samples, synth_samples, synth_uniform, Rng};
-use std::time::Instant;
 
 const DIMS: usize = 8;
 const SEED: u64 = 7;
-
-fn rack(shards: usize, backend: ExecBackend) -> PrinsRack {
-    PrinsRack::with_config(
-        shards,
-        DeviceModel::default(),
-        backend,
-        InterconnectModel::default(),
-    )
-}
-
-/// Per-query parameter streams, deterministic in the query index.
-fn hist_lo(q: usize) -> u16 {
-    [24u16, 16, 8, 0][q % 4]
-}
-
-fn dp_h(q: usize) -> Vec<f32> {
-    synth_uniform(DIMS, SEED + 100 + q as u64)
-}
-
-fn ed_centers(q: usize) -> Vec<f32> {
-    synth_uniform(DIMS, SEED + 200 + q as u64)
-}
-
-fn spmv_x(n: usize, q: usize) -> Vec<f32> {
-    let mut rng = Rng::seed_from(SEED + 300 + q as u64);
-    (0..n).map(|_| rng.f32_range(-1.0, 1.0)).collect()
-}
+const DENSE_CAP: usize = 512;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -69,141 +41,24 @@ fn main() {
     let backend = ExecBackend::from_workers(workers);
     let verify = args.iter().any(|a| a == "--verify");
 
-    // the dense microcoded kernels and spmv simulate every pass over
-    // every row per query; cap them so a 64-query sweep stays fast
-    let dense_rows = rows.min(512);
-    if dense_rows != rows {
-        println!("note: dp/ed/spmv capped at {dense_rows} rows (hist uses {rows})");
+    // the dense microcoded kernels simulate every pass over every row
+    // per query; cap them so a 64-query sweep stays fast
+    if rows > DENSE_CAP {
+        println!("note: dense kernels capped at {DENSE_CAP} rows (compare-only kernels use {rows})");
     }
     println!("rows = {rows}, query sweep = {sweep:?}, shards = {shards}, backend = {backend:?}");
 
-    let xs = synth_hist_samples(rows, SEED);
-    let xv = synth_samples(dense_rows, DIMS, 4, SEED + 1);
-    let a = synth_csr(dense_rows, dense_rows * 8, SEED + 2);
-
+    let rack = PrinsRack::with_config(
+        shards,
+        DeviceModel::default(),
+        backend,
+        InterconnectModel::default(),
+    );
     let mut records: Vec<ResidentRecord> = Vec::new();
-    let mut push = |bench: &str,
-                    nrows: usize,
-                    queries: usize,
-                    load_cycles: u64,
-                    qcycles: &[u64],
-                    energy_j: f64,
-                    wall: f64| {
-        let qsum: u64 = qcycles.iter().sum();
-        let query_cycles = qsum as f64 / queries as f64;
-        let amortized = (load_cycles + qsum) as f64 / queries as f64;
-        println!(
-            "{bench:<5} Q={queries:<3} load={load_cycles:>9} query/Q={query_cycles:>12.1} \
-             amortized/Q={amortized:>12.1} energy={energy_j:.3e} J  wall={wall:.3}s"
-        );
-        records.push(ResidentRecord {
-            bench: bench.into(),
-            rows: nrows as u64,
-            shards: shards as u64,
-            queries: queries as u64,
-            load_cycles,
-            query_cycles,
-            amortized_cycles: amortized,
-            energy_j,
-            wall_s: wall,
-        });
-    };
-
     for &q_count in &sweep {
-        assert!(q_count > 0, "--queries entries must be positive");
-        let rk = rack(shards, backend);
-
-        // ---- histogram: fresh bin edges per query -----------------------
-        let t0 = Instant::now();
-        let mut res = ResidentHistogram::load(&rk, &xs);
-        let load_cycles = res.load_report().total_cycles;
-        let mut energy = res.load_report().energy_j;
-        let mut qcycles = Vec::with_capacity(q_count);
-        for q in 0..q_count {
-            let r = res.query_at(hist_lo(q));
-            qcycles.push(r.rack.total_cycles);
-            energy += r.rack.energy_j;
-            if verify && (q == 0 || q == q_count - 1) {
-                // fresh load + same bin window = the one-shot reference
-                let fresh = ResidentHistogram::load(&rk, &xs).query_at(hist_lo(q));
-                assert_eq!(
-                    r.hist, fresh.hist,
-                    "hist Q={q_count} q={q}: resident query diverged from fresh load"
-                );
-                assert_eq!(
-                    r.hist,
-                    histogram_baseline_at(&xs, hist_lo(q)),
-                    "hist Q={q_count} q={q}: resident query diverged from baseline"
-                );
-            }
-        }
-        push("hist", rows, q_count, load_cycles, &qcycles, energy, t0.elapsed().as_secs_f64());
-
-        // ---- dot product: fresh hyperplane per query --------------------
-        let t0 = Instant::now();
-        let mut res = ResidentDot::load(&rk, &xv, dense_rows, DIMS);
-        let load_cycles = res.load_report().total_cycles;
-        let mut energy = res.load_report().energy_j;
-        let mut qcycles = Vec::with_capacity(q_count);
-        for q in 0..q_count {
-            let h = dp_h(q);
-            let r = res.query(&h);
-            qcycles.push(r.rack.total_cycles);
-            energy += r.rack.energy_j;
-            if verify && (q == 0 || q == q_count - 1) {
-                let fresh = dot_sharded(&rk, &xv, dense_rows, DIMS, &h);
-                assert!(
-                    r.dp.iter().zip(&fresh.dp).all(|(a, b)| a.to_bits() == b.to_bits()),
-                    "dp Q={q_count} q={q}: resident query diverged from one-shot"
-                );
-            }
-        }
-        push("dp", dense_rows, q_count, load_cycles, &qcycles, energy, t0.elapsed().as_secs_f64());
-
-        // ---- euclidean distance: fresh center per query -----------------
-        let t0 = Instant::now();
-        let mut res = ResidentEuclidean::load(&rk, &xv, dense_rows, DIMS);
-        let load_cycles = res.load_report().total_cycles;
-        let mut energy = res.load_report().energy_j;
-        let mut qcycles = Vec::with_capacity(q_count);
-        for q in 0..q_count {
-            let c = ed_centers(q);
-            let r = res.query(&c, 1, 5);
-            qcycles.push(r.rack.total_cycles);
-            energy += r.rack.energy_j;
-            if verify && (q == 0 || q == q_count - 1) {
-                let fresh = euclidean_sharded(&rk, &xv, dense_rows, DIMS, &c, 1, 5);
-                assert!(
-                    r.dists[0]
-                        .iter()
-                        .zip(&fresh.dists[0])
-                        .all(|(a, b)| a.to_bits() == b.to_bits()),
-                    "ed Q={q_count} q={q}: resident query diverged from one-shot"
-                );
-            }
-        }
-        push("ed", dense_rows, q_count, load_cycles, &qcycles, energy, t0.elapsed().as_secs_f64());
-
-        // ---- spmv: fresh x vector per query -----------------------------
-        let t0 = Instant::now();
-        let mut res = ResidentSpmv::load(&rk, &a);
-        let load_cycles = res.load_report().total_cycles;
-        let mut energy = res.load_report().energy_j;
-        let mut qcycles = Vec::with_capacity(q_count);
-        for q in 0..q_count {
-            let x = spmv_x(dense_rows, q);
-            let r = res.query(&x);
-            qcycles.push(r.rack.total_cycles);
-            energy += r.rack.energy_j;
-            if verify && (q == 0 || q == q_count - 1) {
-                let fresh = spmv_sharded(&rk, &a, &x);
-                assert!(
-                    r.y.iter().zip(&fresh.y).all(|(a, b)| a.to_bits() == b.to_bits()),
-                    "spmv Q={q_count} q={q}: resident query diverged from one-shot"
-                );
-            }
-        }
-        push("spmv", dense_rows, q_count, load_cycles, &qcycles, energy, t0.elapsed().as_secs_f64());
+        records.extend(resident_registry_points(
+            &rack, rows, DENSE_CAP, DIMS, q_count, SEED, verify,
+        ));
     }
 
     if verify {

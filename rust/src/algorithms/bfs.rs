@@ -82,6 +82,15 @@ pub struct BfsResult {
 }
 
 /// Loaded BFS edge list + the serial associative traversal loop.
+///
+/// BFS has the standard `load`/`load_stats`/`query` split of the other
+/// kernels, but it is **not** in the kernel registry
+/// ([`crate::algorithms::kernel::registry`]): its query mutates the
+/// resident rows (the frontier is written back into the `visited`/
+/// `visited_from`/`dist` fields), so the framework's load-once /
+/// query-many and shard-merge contracts — which require queries to leave
+/// stored fields untouched — do not hold. A second [`BfsKernel::query`]
+/// sees the first query's frontier state; callers must reload first.
 pub struct BfsKernel {
     /// The row layout in use.
     pub layout: BfsLayout,
@@ -90,11 +99,16 @@ pub struct BfsKernel {
     /// Edge count of the loaded graph (rows in storage).
     pub n_edges: usize,
     head_row: Vec<Option<usize>>,
+    /// allocation handle pinning the rows (readout goes via head_row)
+    #[allow(dead_code)]
     ds: Dataset,
+    load_stats: ExecStats,
 }
 
 impl BfsKernel {
-    /// Allocate rows and load every edge as a Table 2 record.
+    /// Allocate rows and load every edge as a Table 2 record — four
+    /// charged row writes per edge (vertex, successor, distance
+    /// sentinel, valid bit).
     pub fn load(sm: &mut StorageManager, array: &mut PrinsArray, g: &Graph) -> Self {
         let layout = BfsLayout::new();
         assert!(array.width() >= layout.width as usize);
@@ -104,27 +118,44 @@ impl BfsKernel {
             .alloc(edges.len(), RowLayout::new(layout.width))
             .expect("storage full");
         let mut head_row = vec![None; g.n];
+        let (c0, l0) = (array.cycles, array.ledger());
         for (k, &(u, v)) in edges.iter().enumerate() {
             let phys = ds.rows.start + k;
             if head_row[u as usize].is_none() {
                 head_row[u as usize] = Some(phys);
             }
-            array.load_row_bits(phys, layout.vertex.base as usize, 24, u as u64);
-            array.load_row_bits(phys, layout.succ.base as usize, 24, v as u64);
-            array.load_row_bits(phys, layout.dist.base as usize, 16, DIST_INF);
-            array.load_row_bits(phys, layout.valid as usize, 1, 1);
+            array.load_row_bits_charged(phys, layout.vertex.base as usize, 24, u as u64);
+            array.load_row_bits_charged(phys, layout.succ.base as usize, 24, v as u64);
+            array.load_row_bits_charged(phys, layout.dist.base as usize, 16, DIST_INF);
+            array.load_row_bits_charged(phys, layout.valid as usize, 1, 1);
         }
+        let load_stats = ExecStats::since(array, c0, &l0);
         BfsKernel {
             layout,
             n_vertices: g.n,
             n_edges: edges.len(),
             head_row,
             ds,
+            load_stats,
         }
     }
 
-    /// Run BFS from `src` (paper Fig. 11).
+    /// Device-model cost of the load phase (paid once per graph).
+    pub fn load_stats(&self) -> &ExecStats {
+        &self.load_stats
+    }
+
+    /// Alias for [`BfsKernel::query`], kept for the load-and-run-once
+    /// callers (CLI, figures, examples).
     pub fn run(&self, ctl: &mut Controller, src: usize) -> BfsResult {
+        self.query(ctl, src)
+    }
+
+    /// Query phase: BFS from `src` (paper Fig. 11). Unlike the registry
+    /// kernels' queries this **writes back into the resident rows** (the
+    /// frontier fields), so it is valid once per load — reload before
+    /// traversing again.
+    pub fn query(&self, ctl: &mut Controller, src: usize) -> BfsResult {
         let l = &self.layout;
         ctl.begin_stats();
         // init: source vertex rows get distance 0, visited = 1

@@ -3,16 +3,23 @@
 //! Mult = x_i × H_i and DP += Mult at all rows in parallel; the runtime is
 //! independent of the number of vectors.
 
+use crate::algorithms::kernel::{
+    one_shot_out, sharded, FloatMatrix, Kernel, KernelEntry, QueryOut, Resident, ResidentDyn,
+    ShardMerge, Sharded,
+};
 use crate::controller::{Controller, ExecStats};
-use crate::host::rack::{PrinsRack, RackStats};
+use crate::error::{ensure, Result};
+use crate::host::rack::PrinsRack;
 use crate::isa::{Field, Instr, Program, RowLayout};
 use crate::micro::float::{
     bits_to_f32, unpacked_bits, FloatField, FpScratch, FP_MUL_SCRATCH_BITS, FP_SCRATCH_BITS,
 };
 use crate::micro::{self};
-use crate::rcam::shard::{merge_concat, ShardPlan, CMD_BYTES};
+use crate::rcam::shard::{merge_concat, ShardPlan};
 use crate::rcam::PrinsArray;
 use crate::storage::{Dataset, StorageManager};
+use crate::workloads::{synth_samples, synth_uniform};
+use std::ops::Range;
 
 /// Row layout of the DP kernel: D attribute slots + broadcast/work areas.
 pub struct DotLayout {
@@ -203,119 +210,170 @@ impl DotKernel {
     }
 }
 
-/// Result of a rack-sharded dot-product run.
-pub struct ShardedDotResult {
+/// Merged result of a DP query: global-row-order dot products plus the
+/// protocol's checksum reply value.
+pub struct DotOutput {
     /// Per-vector dot products in global row order, bit-identical to the
     /// single-device run (order-preserving concatenation merge).
     pub dp: Vec<f32>,
     /// Row-order f32 sum of `dp` (the protocol's checksum reply field).
     pub checksum: f32,
-    /// Rack-level cycle/energy statistics (slowest shard + host link).
-    pub rack: RackStats,
 }
 
-/// One shard's resident DP state: controller, storage manager, kernel.
-struct DotShard {
-    ctl: Controller,
-    sm: StorageManager,
-    kern: DotKernel,
-}
+impl Kernel for DotKernel {
+    type Data = FloatMatrix;
+    type Params = Vec<f32>; // the broadcast hyperplane H
+    type Output = Vec<f32>;
 
-/// A rack-resident DP dataset: vectors row-range-partitioned over the
-/// rack's shards, loaded **once**, then queried many times with fresh
-/// broadcast vectors. Query results are bit-identical to [`dot_sharded`]
-/// while charging only query cycles plus per-query link messages.
-pub struct ResidentDot {
-    rack: PrinsRack,
-    plan: ShardPlan,
-    dims: usize,
-    /// Loaded vector count (global, across all shards).
-    pub n: usize,
-    shards: Vec<DotShard>,
-    load: RackStats,
-}
+    const NAME: &'static str = "dp";
+    const VERB: &'static str = "DP";
+    const QUERY_ARITY: usize = 1;
 
-impl ResidentDot {
-    /// Load phase: partition `x` (row-major n×dims) over the rack and
-    /// write every shard's slice into its array once (one command +
-    /// sample payload per shard on the host link).
-    pub fn load(rack: &PrinsRack, x: &[f32], n: usize, dims: usize) -> Self {
-        assert_eq!(x.len(), n * dims);
-        let plan = ShardPlan::rows(n, rack.n_shards());
-        let width = DotLayout::new(dims).width as usize;
-        let shards = rack.run_shards(&plan, |_s, r| {
-            let rows = r.len();
-            let xs = &x[r.start * dims..r.end * dims];
-            let mut array = rack.shard_array(rows, width);
-            let mut sm = StorageManager::new(array.total_rows());
-            let kern = DotKernel::load(&mut sm, &mut array, xs, rows, dims);
-            DotShard {
-                ctl: Controller::new(array),
-                sm,
-                kern,
-            }
-        });
-        let load_stats: Vec<ExecStats> =
-            shards.iter().map(|s| s.kern.load_stats().clone()).collect();
-        let payload: Vec<u64> = plan
-            .ranges
-            .iter()
-            .map(|r| 4 * (r.len() * dims) as u64)
-            .collect();
-        let load = rack.finish_load(load_stats, &payload);
-        ResidentDot {
-            rack: rack.clone(),
-            plan,
-            dims,
-            n,
-            shards,
-            load,
-        }
+    fn data_rows(data: &FloatMatrix) -> usize {
+        data.n
     }
 
-    /// Device + link cost of the load phase (paid once per dataset).
-    pub fn load_report(&self) -> &RackStats {
-        &self.load
+    fn width(data: &FloatMatrix) -> usize {
+        DotLayout::new(data.dims).width as usize
     }
 
-    /// Query phase: broadcast `h` to every shard concurrently and
-    /// concatenate per-shard outputs in plan order — zero load-phase
-    /// writes.
-    pub fn query(&mut self, h: &[f32]) -> ShardedDotResult {
-        assert_eq!(h.len(), self.dims);
-        let plan = &self.plan;
-        let runs = self.rack.query_shards(&mut self.shards, |_i, sh| {
-            let res = sh.kern.query(&mut sh.ctl, &sh.sm, h);
-            (res.dp, res.stats)
-        });
-        let (dps, stats): (Vec<_>, Vec<_>) = runs.into_iter().unzip();
-        let dp = merge_concat(&dps);
+    fn load_range(
+        sm: &mut StorageManager,
+        array: &mut PrinsArray,
+        data: &FloatMatrix,
+        range: Range<usize>,
+    ) -> Self {
+        DotKernel::load(sm, array, data.rows(&range), range.len(), data.dims)
+    }
+
+    fn load_stats(&self) -> &ExecStats {
+        &self.load_stats
+    }
+
+    fn load_payload_bytes(&self) -> u64 {
+        4 * (self.n * self.layout.dims) as u64
+    }
+
+    fn load_writes(&self) -> u64 {
+        (self.n * self.layout.dims) as u64 // one write per stored attribute
+    }
+
+    fn query_shard(
+        &self,
+        ctl: &mut Controller,
+        sm: &StorageManager,
+        _range: &Range<usize>,
+        params: &Vec<f32>,
+    ) -> (Vec<f32>, ExecStats) {
+        let res = self.query(ctl, sm, params);
+        (res.dp, res.stats)
+    }
+
+    fn query_msg_bytes(&self, range: &Range<usize>, _params: &Vec<f32>) -> (u64, u64) {
+        (4 * self.layout.dims as u64, 4 * range.len() as u64)
+    }
+
+    fn query_floor_cycles(&self, _array: &PrinsArray, _params: &Vec<f32>) -> u64 {
+        self.query_floor_cycles() // the inherent floor (value-independent)
+    }
+
+    fn parse_params(&self, args: &[&str]) -> Result<Vec<f32>> {
+        let seed: u64 = args[0].parse()?;
+        Ok(synth_uniform(self.layout.dims, seed))
+    }
+
+    fn seeded_params(&self, q: usize, seed: u64) -> Vec<f32> {
+        synth_uniform(self.layout.dims, seed + 1 + q as u64)
+    }
+}
+
+impl ShardMerge for DotKernel {
+    type Merged = DotOutput;
+
+    fn merge(outputs: Vec<Vec<f32>>, _plan: &ShardPlan, _params: &Vec<f32>) -> DotOutput {
+        let dp = merge_concat(&outputs);
         let checksum = dp.iter().sum();
-        let mut msgs = Vec::with_capacity(2 * plan.shards());
-        for rng in &plan.ranges {
-            msgs.push(CMD_BYTES + 4 * self.dims as u64); // command + H payload
-            msgs.push(4 * rng.len() as u64); // per-shard DP readback
-        }
-        ShardedDotResult {
-            dp,
-            checksum,
-            rack: self.rack.finish(stats, &msgs),
-        }
+        DotOutput { dp, checksum }
+    }
+
+    fn fields(merged: &DotOutput) -> String {
+        format!("checksum={:.4}", merged.checksum)
+    }
+
+    fn bits(merged: &DotOutput) -> Vec<u64> {
+        merged.dp.iter().map(|v| v.to_bits() as u64).collect()
     }
 }
 
-/// Rack-sharded dot product, one-shot: [`ResidentDot::load`] followed by
-/// a single [`ResidentDot::query`], whose per-shard stats windows and
-/// merge path it shares. The reported [`RackStats`] cover the query phase
-/// only (the load cost is on [`ResidentDot::load_report`]).
+fn load_args(rack: &PrinsRack, args: &[&str]) -> Result<Box<dyn ResidentDyn>> {
+    let [n, dims, seed] = args else {
+        crate::error::bail!("usage: LOAD DP n dims seed");
+    };
+    let (n, dims, seed): (usize, usize, u64) = (n.parse()?, dims.parse()?, seed.parse()?);
+    ensure!(
+        n > 0 && n <= 1 << 16 && dims > 0 && dims <= 16,
+        "size out of range"
+    );
+    let x = synth_samples(n, dims, 4, seed);
+    let data = FloatMatrix::new(x, n, dims);
+    Ok(Box::new(Resident::<DotKernel>::load(rack, &data)))
+}
+
+fn synth_load(rack: &PrinsRack, n: usize, dims: usize, seed: u64) -> Box<dyn ResidentDyn> {
+    let dims = dims.clamp(1, 16);
+    let data = FloatMatrix::new(synth_samples(n, dims, 4, seed), n, dims);
+    Box::new(Resident::<DotKernel>::load(rack, &data))
+}
+
+fn one_shot(rack: &PrinsRack, args: &[&str]) -> Result<QueryOut> {
+    let [n, dims, seed] = args else {
+        crate::error::bail!("usage: DP n dims seed");
+    };
+    let (n, dims, seed): (usize, usize, u64) = (n.parse()?, dims.parse()?, seed.parse()?);
+    ensure!(
+        n > 0 && n <= 1 << 16 && dims > 0 && dims <= 16,
+        "size out of range"
+    );
+    let data = FloatMatrix::new(synth_samples(n, dims, 4, seed), n, dims);
+    let h = synth_uniform(dims, seed + 1);
+    Ok(one_shot_out::<DotKernel>(rack, &data, &h))
+}
+
+/// The dot-product kernel's registry entry.
+pub const ENTRY: KernelEntry = KernelEntry {
+    name: DotKernel::NAME,
+    verb: DotKernel::VERB,
+    query_arity: DotKernel::QUERY_ARITY,
+    one_shot_arity: 3,
+    load_usage: "LOAD DP n dims seed",
+    query_usage: "DP id seed",
+    one_shot_usage: "DP n dims seed",
+    dense: true,
+    write_free_queries: false,
+    flops: |n, dims| 2.0 * (n * dims) as f64,
+    load: load_args,
+    synth_load,
+    one_shot,
+};
+
+/// Deprecated pre-framework name for [`Resident<DotKernel>`].
+#[deprecated(note = "use Resident<DotKernel> (algorithms::kernel)")]
+pub type ResidentDot = Resident<DotKernel>;
+
+/// Rack-sharded dot product, one-shot — a thin wrapper over the generic
+/// framework ([`sharded`]); the merged result is on `.merged`. Copies
+/// `x` once into an owned [`FloatMatrix`] (negligible next to the
+/// simulated load); hot callers should build the matrix themselves and
+/// use [`sharded`]/[`Resident`] directly.
 pub fn dot_sharded(
     rack: &PrinsRack,
     x: &[f32],
     n: usize,
     dims: usize,
     h: &[f32],
-) -> ShardedDotResult {
-    ResidentDot::load(rack, x, n, dims).query(h)
+) -> Sharded<DotKernel> {
+    let data = FloatMatrix::new(x.to_vec(), n, dims);
+    sharded::<DotKernel>(rack, &data, &h.to_vec())
 }
 
 /// Scalar CPU baseline.
@@ -361,14 +419,25 @@ mod tests {
         let h1: Vec<f32> = (0..dims).map(|_| rng.f32_range(-2.0, 2.0)).collect();
         let h2: Vec<f32> = (0..dims).map(|_| rng.f32_range(-2.0, 2.0)).collect();
         let rack = PrinsRack::new(2);
-        let mut res = ResidentDot::load(&rack, &x, n, dims);
+        let data = FloatMatrix::new(x.clone(), n, dims);
+        let mut res = Resident::<DotKernel>::load(&rack, &data);
         assert!(res.load_report().total_cycles > 0);
         let one_shot = dot_sharded(&rack, &x, n, dims, &h1);
         let qa = res.query(&h1);
         let qb = res.query(&h2); // different hyperplane on the same data
         let qc = res.query(&h1); // back to h1: bit-identical to the first
-        assert!(one_shot.dp.iter().zip(&qa.dp).all(|(a, b)| a.to_bits() == b.to_bits()));
-        assert!(qa.dp.iter().zip(&qc.dp).all(|(a, b)| a.to_bits() == b.to_bits()));
+        assert!(one_shot
+            .merged
+            .dp
+            .iter()
+            .zip(&qa.merged.dp)
+            .all(|(a, b)| a.to_bits() == b.to_bits()));
+        assert!(qa
+            .merged
+            .dp
+            .iter()
+            .zip(&qc.merged.dp)
+            .all(|(a, b)| a.to_bits() == b.to_bits()));
         assert_eq!(qa.rack.total_cycles, qb.rack.total_cycles, "query cost is value-independent");
         // single-device floor check
         let layout = DotLayout::new(dims);

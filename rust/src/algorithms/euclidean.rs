@@ -8,14 +8,21 @@
 //! cycle count is independent of the number of samples, which is the
 //! paper's headline property.
 
+use crate::algorithms::kernel::{
+    one_shot_out, sharded, FloatMatrix, Kernel, KernelEntry, QueryOut, Resident, ResidentDyn,
+    ShardMerge, Sharded,
+};
 use crate::controller::{Controller, ExecStats};
-use crate::host::rack::{PrinsRack, RackStats};
+use crate::error::{ensure, Result};
+use crate::host::rack::PrinsRack;
 use crate::isa::{Field, Program, RowLayout};
 use crate::micro::float::{bits_to_f32, unpacked_bits, FloatField, FpScratch, FP_SCRATCH_BITS};
 use crate::micro::{self};
-use crate::rcam::shard::{local_topk, merge_concat, merge_topk, ShardPlan, CMD_BYTES};
+use crate::rcam::shard::{local_topk, merge_concat, merge_topk, ShardPlan};
 use crate::rcam::PrinsArray;
 use crate::storage::{Dataset, StorageManager};
+use crate::workloads::{synth_samples, synth_uniform};
+use std::ops::Range;
 
 /// Row layout: D attribute slots + center copy + work area.
 /// 33 bits per unpacked fp32; W must fit x, c, diff, acc + scratch.
@@ -251,8 +258,21 @@ impl EuclideanKernel {
     }
 }
 
-/// Result of a rack-sharded Euclidean-distance run.
-pub struct ShardedEdResult {
+/// Per-query parameters of the ED kernel: the broadcast center set plus
+/// the global top-k cut the host merge keeps per center.
+#[derive(Clone, Debug)]
+pub struct EdParams {
+    /// `k × dims` center coordinates, row-major.
+    pub centers: Vec<f32>,
+    /// Number of centers.
+    pub k: usize,
+    /// Nearest results kept per center by the host merge.
+    pub topk: usize,
+}
+
+/// Merged result of an ED query: global-row-order distances, the global
+/// top-k nearest per center, and the protocol's checksum reply value.
+pub struct EdOutput {
     /// `dists[center][sample]` in global row order, bit-identical to the
     /// single-device run (order-preserving concatenation merge).
     pub dists: Vec<Vec<f32>>,
@@ -263,129 +283,199 @@ pub struct ShardedEdResult {
     /// Row-order f32 sum over all centers' distances (the protocol's
     /// checksum reply field).
     pub checksum: f32,
-    /// Rack-level cycle/energy statistics (slowest shard + host link).
-    pub rack: RackStats,
 }
 
-/// One shard's resident ED state: the controller owning the shard array,
-/// the shard's storage manager, and the loaded kernel.
-struct EdShard {
-    ctl: Controller,
-    sm: StorageManager,
-    kern: EuclideanKernel,
-}
+impl Kernel for EuclideanKernel {
+    type Data = FloatMatrix;
+    type Params = EdParams;
+    type Output = Vec<Vec<f32>>;
 
-/// A rack-resident ED dataset: samples row-range-partitioned over the
-/// rack's shards, loaded **once**, then queried many times with fresh
-/// center sets. Each query replays the Fig. 7 program on every shard
-/// concurrently against the already-resident rows and merges host-side
-/// exactly like the one-shot path (order-preserving concat + k-way top-k
-/// merge), so query results are bit-identical to [`euclidean_sharded`]
-/// while charging only query cycles plus the per-query link messages.
-pub struct ResidentEuclidean {
-    rack: PrinsRack,
-    plan: ShardPlan,
-    dims: usize,
-    /// Loaded sample count (global, across all shards).
-    pub n: usize,
-    shards: Vec<EdShard>,
-    load: RackStats,
-}
+    const NAME: &'static str = "ed";
+    const VERB: &'static str = "ED";
+    const QUERY_ARITY: usize = 2;
 
-impl ResidentEuclidean {
-    /// Load phase: partition `x` (row-major n×dims) over the rack and
-    /// write every shard's slice into its array once. The host link is
-    /// charged one command + sample payload per shard; per-shard load
-    /// cycles/energy come from the charged storage writes.
-    pub fn load(rack: &PrinsRack, x: &[f32], n: usize, dims: usize) -> Self {
-        assert_eq!(x.len(), n * dims);
-        let plan = ShardPlan::rows(n, rack.n_shards());
-        let width = EuclideanLayout::new(dims).width as usize;
-        let shards = rack.run_shards(&plan, |_s, r| {
-            let rows = r.len();
-            let xs = &x[r.start * dims..r.end * dims];
-            let mut array = rack.shard_array(rows, width);
-            let mut sm = StorageManager::new(array.total_rows());
-            let kern = EuclideanKernel::load(&mut sm, &mut array, xs, rows, dims);
-            EdShard {
-                ctl: Controller::new(array),
-                sm,
-                kern,
-            }
-        });
-        let load_stats: Vec<ExecStats> =
-            shards.iter().map(|s| s.kern.load_stats().clone()).collect();
-        let payload: Vec<u64> = plan
-            .ranges
-            .iter()
-            .map(|r| 4 * (r.len() * dims) as u64)
-            .collect();
-        let load = rack.finish_load(load_stats, &payload);
-        ResidentEuclidean {
-            rack: rack.clone(),
-            plan,
-            dims,
-            n,
-            shards,
-            load,
+    fn data_rows(data: &FloatMatrix) -> usize {
+        data.n
+    }
+
+    fn width(data: &FloatMatrix) -> usize {
+        EuclideanLayout::new(data.dims).width as usize
+    }
+
+    fn load_range(
+        sm: &mut StorageManager,
+        array: &mut PrinsArray,
+        data: &FloatMatrix,
+        range: Range<usize>,
+    ) -> Self {
+        EuclideanKernel::load(sm, array, data.rows(&range), range.len(), data.dims)
+    }
+
+    fn load_stats(&self) -> &ExecStats {
+        &self.load_stats
+    }
+
+    fn load_payload_bytes(&self) -> u64 {
+        4 * (self.n * self.layout.dims) as u64
+    }
+
+    fn load_writes(&self) -> u64 {
+        (self.n * self.layout.dims) as u64 // one write per stored attribute
+    }
+
+    fn query_shard(
+        &self,
+        ctl: &mut Controller,
+        sm: &StorageManager,
+        _range: &Range<usize>,
+        params: &EdParams,
+    ) -> (Vec<Vec<f32>>, ExecStats) {
+        let res = self.query(ctl, sm, &params.centers, params.k);
+        (res.dists, res.stats)
+    }
+
+    fn query_msg_bytes(&self, range: &Range<usize>, params: &EdParams) -> (u64, u64) {
+        (
+            4 * (params.k * self.layout.dims) as u64,
+            4 * (params.k * range.len()) as u64,
+        )
+    }
+
+    fn query_floor_cycles(&self, _array: &PrinsArray, params: &EdParams) -> u64 {
+        self.query_floor_cycles(params.k) // the inherent per-center floor
+    }
+
+    fn parse_params(&self, args: &[&str]) -> Result<EdParams> {
+        let (k, seed): (usize, u64) = (args[0].parse()?, args[1].parse()?);
+        ensure!(k > 0 && k <= 16, "k out of range");
+        Ok(EdParams {
+            centers: synth_uniform(k * self.layout.dims, seed),
+            k,
+            topk: 1,
+        })
+    }
+
+    fn seeded_params(&self, q: usize, seed: u64) -> EdParams {
+        EdParams {
+            centers: synth_uniform(self.layout.dims, seed + 1 + q as u64),
+            k: 1,
+            topk: 5,
         }
     }
+}
 
-    /// Device + link cost of the load phase (paid once per dataset).
-    pub fn load_report(&self) -> &RackStats {
-        &self.load
-    }
+impl ShardMerge for EuclideanKernel {
+    type Merged = EdOutput;
 
-    /// Query phase: broadcast `k` centers to every shard concurrently and
-    /// merge distances / global top-`topk` nearest host-side. Chargeable
-    /// work is the per-shard query program plus the per-query command and
-    /// readback link messages — zero load-phase writes.
-    pub fn query(&mut self, centers: &[f32], k: usize, topk: usize) -> ShardedEdResult {
-        assert_eq!(centers.len(), k * self.dims);
-        let plan = &self.plan;
-        let runs = self.rack.query_shards(&mut self.shards, |_i, sh| {
-            let res = sh.kern.query(&mut sh.ctl, &sh.sm, centers, k);
-            (res.dists, res.stats)
-        });
-        let (shard_dists, stats): (Vec<_>, Vec<_>) = runs.into_iter().unzip();
-        let mut dists = Vec::with_capacity(k);
-        let mut nearest = Vec::with_capacity(k);
-        for c in 0..k {
+    fn merge(outputs: Vec<Vec<Vec<f32>>>, plan: &ShardPlan, params: &EdParams) -> EdOutput {
+        let mut dists = Vec::with_capacity(params.k);
+        let mut nearest = Vec::with_capacity(params.k);
+        for c in 0..params.k {
             // borrow each shard's center-c vector; the only copy is the
             // one concatenation into the merged global vector
-            let per_center: Vec<&[f32]> = shard_dists
-                .iter()
-                .map(|d: &Vec<Vec<f32>>| d[c].as_slice())
-                .collect();
+            let per_center: Vec<&[f32]> = outputs.iter().map(|d| d[c].as_slice()).collect();
             let local: Vec<Vec<(usize, f32)>> = per_center
                 .iter()
                 .zip(&plan.ranges)
-                .map(|(d, rng)| local_topk(d, rng.start, topk))
+                .map(|(d, rng)| local_topk(d, rng.start, params.topk))
                 .collect();
-            nearest.push(merge_topk(&local, topk));
+            nearest.push(merge_topk(&local, params.topk));
             dists.push(merge_concat(&per_center));
         }
         let checksum = dists.iter().flat_map(|d| d.iter()).sum();
-        let mut msgs = Vec::with_capacity(2 * plan.shards());
-        for rng in &plan.ranges {
-            msgs.push(CMD_BYTES + 4 * (k * self.dims) as u64); // command + centers
-            msgs.push(4 * (k * rng.len()) as u64); // per-shard distance readback
-        }
-        ShardedEdResult {
+        EdOutput {
             dists,
             nearest,
             checksum,
-            rack: self.rack.finish(stats, &msgs),
         }
+    }
+
+    fn fields(merged: &EdOutput) -> String {
+        format!("checksum={:.4}", merged.checksum)
+    }
+
+    fn bits(merged: &EdOutput) -> Vec<u64> {
+        let mut bits: Vec<u64> = merged
+            .dists
+            .iter()
+            .flat_map(|d| d.iter().map(|v| v.to_bits() as u64))
+            .collect();
+        for per_center in &merged.nearest {
+            for &(row, dist) in per_center {
+                bits.push(row as u64);
+                bits.push(dist.to_bits() as u64);
+            }
+        }
+        bits
     }
 }
 
-/// Rack-sharded Euclidean distance, one-shot: load the samples onto the
-/// rack and run a single query — exactly
-/// [`ResidentEuclidean::load`] followed by one
-/// [`ResidentEuclidean::query`], whose per-shard stats windows and merge
-/// path it shares. The reported [`RackStats`] cover the query phase only
-/// (the load phase's cost is on [`ResidentEuclidean::load_report`]).
+fn load_args(rack: &PrinsRack, args: &[&str]) -> Result<Box<dyn ResidentDyn>> {
+    let [n, dims, seed] = args else {
+        crate::error::bail!("usage: LOAD ED n dims seed");
+    };
+    let (n, dims, seed): (usize, usize, u64) = (n.parse()?, dims.parse()?, seed.parse()?);
+    ensure!(
+        n > 0 && n <= 1 << 16 && dims > 0 && dims <= 8,
+        "size out of range"
+    );
+    // 4 latent clusters, like the DP synthesis (the one-shot ED verb
+    // couples cluster count to its k query argument instead)
+    let data = FloatMatrix::new(synth_samples(n, dims, 4, seed), n, dims);
+    Ok(Box::new(Resident::<EuclideanKernel>::load(rack, &data)))
+}
+
+fn synth_load(rack: &PrinsRack, n: usize, dims: usize, seed: u64) -> Box<dyn ResidentDyn> {
+    let dims = dims.clamp(1, 8);
+    let data = FloatMatrix::new(synth_samples(n, dims, 4, seed), n, dims);
+    Box::new(Resident::<EuclideanKernel>::load(rack, &data))
+}
+
+fn one_shot(rack: &PrinsRack, args: &[&str]) -> Result<QueryOut> {
+    let [n, dims, k, seed] = args else {
+        crate::error::bail!("usage: ED n dims k seed");
+    };
+    let (n, dims, k, seed): (usize, usize, usize, u64) =
+        (n.parse()?, dims.parse()?, k.parse()?, seed.parse()?);
+    ensure!(
+        n > 0 && n <= 1 << 16 && dims > 0 && dims <= 8 && k > 0 && k <= 16,
+        "size out of range"
+    );
+    let data = FloatMatrix::new(synth_samples(n, dims, k, seed), n, dims);
+    let params = EdParams {
+        centers: synth_uniform(k * dims, seed + 1),
+        k,
+        topk: 1,
+    };
+    Ok(one_shot_out::<EuclideanKernel>(rack, &data, &params))
+}
+
+/// The Euclidean-distance kernel's registry entry.
+pub const ENTRY: KernelEntry = KernelEntry {
+    name: EuclideanKernel::NAME,
+    verb: EuclideanKernel::VERB,
+    query_arity: EuclideanKernel::QUERY_ARITY,
+    one_shot_arity: 4,
+    load_usage: "LOAD ED n dims seed",
+    query_usage: "ED id k seed",
+    one_shot_usage: "ED n dims k seed",
+    dense: true,
+    write_free_queries: false,
+    flops: |n, dims| 3.0 * (n * dims) as f64,
+    load: load_args,
+    synth_load,
+    one_shot,
+};
+
+/// Deprecated pre-framework name for [`Resident<EuclideanKernel>`].
+#[deprecated(note = "use Resident<EuclideanKernel> (algorithms::kernel)")]
+pub type ResidentEuclidean = Resident<EuclideanKernel>;
+
+/// Rack-sharded Euclidean distance, one-shot — a thin wrapper over the
+/// generic framework ([`sharded`]); the merged result is on `.merged`.
+/// Copies `x`/`centers` once into owned params (negligible next to the
+/// simulated load); hot callers should build them and use
+/// [`sharded`]/[`Resident`] directly.
 pub fn euclidean_sharded(
     rack: &PrinsRack,
     x: &[f32],
@@ -394,8 +484,14 @@ pub fn euclidean_sharded(
     centers: &[f32],
     k: usize,
     topk: usize,
-) -> ShardedEdResult {
-    ResidentEuclidean::load(rack, x, n, dims).query(centers, k, topk)
+) -> Sharded<EuclideanKernel> {
+    let data = FloatMatrix::new(x.to_vec(), n, dims);
+    let params = EdParams {
+        centers: centers.to_vec(),
+        k,
+        topk,
+    };
+    sharded::<EuclideanKernel>(rack, &data, &params)
 }
 
 /// Scalar CPU baseline (the reference architecture's computation).
@@ -453,22 +549,28 @@ mod tests {
         let x: Vec<f32> = (0..n * dims).map(|_| rng.f32_range(-4.0, 4.0)).collect();
         let centers: Vec<f32> = (0..k * dims).map(|_| rng.f32_range(-4.0, 4.0)).collect();
         let rack = PrinsRack::new(2);
-        let mut res = ResidentEuclidean::load(&rack, &x, n, dims);
+        let data = FloatMatrix::new(x.clone(), n, dims);
+        let mut res = Resident::<EuclideanKernel>::load(&rack, &data);
         assert!(res.load_report().total_cycles > 0, "load phase is charged");
+        let params = EdParams {
+            centers: centers.clone(),
+            k,
+            topk: 2,
+        };
         let one_shot = euclidean_sharded(&rack, &x, n, dims, &centers, k, 2);
-        let q1 = res.query(&centers, k, 2);
-        let q2 = res.query(&centers, k, 2);
+        let q1 = res.query(&params);
+        let q2 = res.query(&params);
         for (a, b) in [(&one_shot, &q1), (&q1, &q2)] {
             for c in 0..k {
                 assert!(
-                    a.dists[c]
+                    a.merged.dists[c]
                         .iter()
-                        .zip(&b.dists[c])
+                        .zip(&b.merged.dists[c])
                         .all(|(x, y)| x.to_bits() == y.to_bits()),
                     "center {c} distances diverge across queries"
                 );
             }
-            assert_eq!(a.nearest, b.nearest);
+            assert_eq!(a.merged.nearest, b.merged.nearest);
             assert_eq!(a.rack.total_cycles, b.rack.total_cycles);
             assert_eq!(a.rack.link_bytes, b.rack.link_bytes);
         }

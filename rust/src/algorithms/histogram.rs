@@ -5,12 +5,19 @@
 //! content match), then the reduction tree counts the tagged rows. Two
 //! operations per bin, independent of the number of samples.
 
+use crate::algorithms::kernel::{
+    one_shot_out, sharded, Kernel, KernelEntry, QueryOut, Resident, ResidentDyn, ShardMerge,
+    Sharded,
+};
 use crate::controller::{Controller, ExecStats};
-use crate::host::rack::{PrinsRack, RackStats};
+use crate::error::{ensure, Result};
+use crate::host::rack::PrinsRack;
 use crate::isa::{Field, Instr, Program, RowLayout};
-use crate::rcam::shard::{merge_histograms, ShardPlan, CMD_BYTES};
+use crate::rcam::shard::{merge_histograms, ShardPlan};
 use crate::rcam::PrinsArray;
 use crate::storage::{Dataset, StorageManager};
+use crate::workloads::synth_hist_samples;
+use std::ops::Range;
 
 /// Number of histogram bins (the paper's fixed 256-bin kernel).
 pub const BINS: usize = 256;
@@ -135,101 +142,145 @@ impl HistogramKernel {
     }
 }
 
-/// Result of a rack-sharded histogram run.
-pub struct ShardedHistResult {
-    /// Bin-wise-merged histogram, bit-identical to the single-device run.
-    pub hist: Vec<u64>,
-    /// Rack-level cycle/energy statistics (slowest shard + host link).
-    pub rack: RackStats,
-}
+impl Kernel for HistogramKernel {
+    type Data = [u32];
+    type Params = u16; // lo_bit of the 8-bit bin window
+    type Output = Vec<u64>;
 
-/// One shard's resident histogram state: controller + loaded kernel (the
-/// shard's storage manager is not needed after load — readout goes
-/// through the reduction tree, not the storage path).
-struct HistShard {
-    ctl: Controller,
-    kern: HistogramKernel,
-}
+    const NAME: &'static str = "hist";
+    const VERB: &'static str = "HIST";
+    const QUERY_ARITY: usize = 0;
 
-/// A rack-resident histogram dataset: samples row-range-partitioned over
-/// the rack's shards, loaded **once**, then re-binned many times
-/// ([`ResidentHistogram::query_at`] — any 8-bit window is a fresh 256-bin
-/// histogram of the same resident samples). Queries are compare-only:
-/// zero writes, wear untouched, bit-identical to [`histogram_sharded`].
-pub struct ResidentHistogram {
-    rack: PrinsRack,
-    /// Loaded sample count (global, across all shards).
-    pub n: usize,
-    shards: Vec<HistShard>,
-    load: RackStats,
-}
-
-impl ResidentHistogram {
-    /// Load phase: partition `x` over the rack and write every shard's
-    /// slice into its array once (one command + sample payload per shard
-    /// on the host link).
-    pub fn load(rack: &PrinsRack, x: &[u32]) -> Self {
-        let plan = ShardPlan::rows(x.len(), rack.n_shards());
-        let shards = rack.run_shards(&plan, |_s, r| {
-            let xs = &x[r];
-            let mut array = rack.shard_array(xs.len(), 40);
-            let mut sm = StorageManager::new(array.total_rows());
-            let kern = HistogramKernel::load(&mut sm, &mut array, xs);
-            HistShard {
-                ctl: Controller::new(array),
-                kern,
-            }
-        });
-        let load_stats: Vec<ExecStats> =
-            shards.iter().map(|s| s.kern.load_stats().clone()).collect();
-        let payload: Vec<u64> = plan.ranges.iter().map(|r| 4 * r.len() as u64).collect();
-        let load = rack.finish_load(load_stats, &payload);
-        ResidentHistogram {
-            rack: rack.clone(),
-            n: x.len(),
-            shards,
-            load,
-        }
+    fn data_rows(data: &[u32]) -> usize {
+        data.len()
     }
 
-    /// Device + link cost of the load phase (paid once per dataset).
-    pub fn load_report(&self) -> &RackStats {
-        &self.load
+    fn width(_data: &[u32]) -> usize {
+        40
     }
 
-    /// Query phase over the default bin edges (bits \[31..24\]).
-    pub fn query(&mut self) -> ShardedHistResult {
-        self.query_at(24)
+    fn load_range(
+        sm: &mut StorageManager,
+        array: &mut PrinsArray,
+        data: &[u32],
+        range: Range<usize>,
+    ) -> Self {
+        HistogramKernel::load(sm, array, &data[range])
     }
 
-    /// Query phase: every shard re-bins its resident slice on bits
-    /// `[lo_bit + 7 .. lo_bit]` concurrently; the host merges bin-wise.
-    pub fn query_at(&mut self, lo_bit: u16) -> ShardedHistResult {
-        let runs = self.rack.query_shards(&mut self.shards, |_i, sh| {
-            let res = sh.kern.query_at(&mut sh.ctl, lo_bit);
-            (res.hist, res.stats)
-        });
-        let (hists, stats): (Vec<_>, Vec<_>) = runs.into_iter().unzip();
-        let n_shards = hists.len();
-        let mut msgs = Vec::with_capacity(2 * n_shards);
-        for _ in 0..n_shards {
-            msgs.push(CMD_BYTES); // kernel-invocation command
-            msgs.push((BINS * 8) as u64); // per-shard histogram readback
-        }
-        ShardedHistResult {
-            hist: merge_histograms(&hists),
-            rack: self.rack.finish(stats, &msgs),
-        }
+    fn load_stats(&self) -> &ExecStats {
+        &self.load_stats
+    }
+
+    fn load_payload_bytes(&self) -> u64 {
+        4 * self.n as u64
+    }
+
+    fn load_writes(&self) -> u64 {
+        2 * self.n as u64 // sample value + valid bit per row
+    }
+
+    fn query_shard(
+        &self,
+        ctl: &mut Controller,
+        _sm: &StorageManager,
+        _range: &Range<usize>,
+        params: &u16,
+    ) -> (Vec<u64>, ExecStats) {
+        let res = self.query_at(ctl, *params);
+        (res.hist, res.stats)
+    }
+
+    fn query_msg_bytes(&self, _range: &Range<usize>, _params: &u16) -> (u64, u64) {
+        (0, (BINS * 8) as u64) // bare command down, 256 bins back
+    }
+
+    fn query_floor_cycles(&self, array: &PrinsArray, _params: &u16) -> u64 {
+        // the inherent floor; exact for every lo_bit (the program's
+        // shape is window-independent)
+        self.query_floor_cycles(array)
+    }
+
+    fn parse_params(&self, _args: &[&str]) -> Result<u16> {
+        Ok(24) // the wire form queries the paper's fixed bin edges
+    }
+
+    fn seeded_params(&self, q: usize, _seed: u64) -> u16 {
+        [24u16, 16, 8, 0][q % 4] // rotate the bin window per query
     }
 }
 
-/// Rack-sharded histogram, one-shot: [`ResidentHistogram::load`]
-/// followed by a single [`ResidentHistogram::query`], whose per-shard
-/// stats windows and bin-wise merge ([`merge_histograms`]) it shares.
-/// The reported [`RackStats`] cover the query phase only (the load cost
-/// is on [`ResidentHistogram::load_report`]).
-pub fn histogram_sharded(rack: &PrinsRack, x: &[u32]) -> ShardedHistResult {
-    ResidentHistogram::load(rack, x).query()
+impl ShardMerge for HistogramKernel {
+    type Merged = Vec<u64>;
+
+    fn merge(outputs: Vec<Vec<u64>>, _plan: &ShardPlan, _params: &u16) -> Vec<u64> {
+        merge_histograms(&outputs)
+    }
+
+    fn fields(merged: &Vec<u64>) -> String {
+        let top = merged.iter().enumerate().max_by_key(|(_, &v)| v).unwrap().0;
+        let total: u64 = merged.iter().sum();
+        format!("top_bin={top} total={total}")
+    }
+
+    fn bits(merged: &Vec<u64>) -> Vec<u64> {
+        merged.clone()
+    }
+}
+
+fn load_args(rack: &PrinsRack, args: &[&str]) -> Result<Box<dyn ResidentDyn>> {
+    let [n, seed] = args else {
+        crate::error::bail!("usage: LOAD HIST n seed");
+    };
+    let (n, seed): (usize, u64) = (n.parse()?, seed.parse()?);
+    ensure!(n > 0 && n <= 1 << 20, "n out of range");
+    let xs = synth_hist_samples(n, seed);
+    Ok(Box::new(Resident::<HistogramKernel>::load(rack, &xs)))
+}
+
+fn synth_load(rack: &PrinsRack, n: usize, _dims: usize, seed: u64) -> Box<dyn ResidentDyn> {
+    Box::new(Resident::<HistogramKernel>::load(
+        rack,
+        &synth_hist_samples(n, seed),
+    ))
+}
+
+fn one_shot(rack: &PrinsRack, args: &[&str]) -> Result<QueryOut> {
+    let [n, seed] = args else {
+        crate::error::bail!("usage: HIST n seed");
+    };
+    let (n, seed): (usize, u64) = (n.parse()?, seed.parse()?);
+    ensure!(n > 0 && n <= 1 << 20, "n out of range");
+    let xs = synth_hist_samples(n, seed);
+    Ok(one_shot_out::<HistogramKernel>(rack, &xs, &24))
+}
+
+/// The histogram kernel's registry entry.
+pub const ENTRY: KernelEntry = KernelEntry {
+    name: HistogramKernel::NAME,
+    verb: HistogramKernel::VERB,
+    query_arity: HistogramKernel::QUERY_ARITY,
+    one_shot_arity: 2,
+    load_usage: "LOAD HIST n seed",
+    query_usage: "HIST id",
+    one_shot_usage: "HIST n seed",
+    dense: false,
+    write_free_queries: true,
+    flops: |n, _dims| 2.0 * n as f64,
+    load: load_args,
+    synth_load,
+    one_shot,
+};
+
+/// Deprecated pre-framework name for [`Resident<HistogramKernel>`].
+#[deprecated(note = "use Resident<HistogramKernel> (algorithms::kernel)")]
+pub type ResidentHistogram = Resident<HistogramKernel>;
+
+/// Rack-sharded histogram over the default bin edges, one-shot — a thin
+/// wrapper over the generic framework ([`sharded`]); the merged bins are
+/// on `.merged`.
+pub fn histogram_sharded(rack: &PrinsRack, x: &[u32]) -> Sharded<HistogramKernel> {
+    sharded::<HistogramKernel>(rack, x, &24)
 }
 
 /// Scalar CPU baseline over the default bin edges (bits \[31..24\]).
@@ -283,7 +334,7 @@ mod tests {
         let xs = synth_hist_samples(3000, 23);
         let rack = PrinsRack::new(3);
         let res = histogram_sharded(&rack, &xs);
-        assert_eq!(res.hist, histogram_baseline(&xs));
+        assert_eq!(res.merged, histogram_baseline(&xs));
         assert_eq!(res.rack.shards, 3);
         assert_eq!(res.rack.link_messages, 6);
         assert!(res.rack.total_cycles > res.rack.max_shard_cycles);
@@ -305,9 +356,9 @@ mod tests {
         }
         // resident rack path agrees bin-for-bin
         let rack = PrinsRack::new(3);
-        let mut res = ResidentHistogram::load(&rack, &xs);
+        let mut res = Resident::<HistogramKernel>::load(&rack, &xs);
         for lo in [24u16, 8] {
-            assert_eq!(res.query_at(lo).hist, histogram_baseline_at(&xs, lo));
+            assert_eq!(res.query(&lo).merged, histogram_baseline_at(&xs, lo));
         }
     }
 

@@ -1,0 +1,538 @@
+//! The unified kernel framework (DESIGN.md §Kernel framework): one
+//! trait-based load/query/merge pipeline shared by every associative
+//! workload, plus the registry that lets the rack, the TCP server, the
+//! CLI and the benches drive *all* kernels without naming any of them.
+//!
+//! Before this module, every workload hand-rolled five near-identical
+//! layers (layout / `load`+`query` kernel / `Sharded*Result` /
+//! `Resident*` wrapper / `*_sharded` one-shot), and the server, CLI and
+//! benches each repeated a per-kernel dispatch — adding a workload meant
+//! re-plumbing the whole stack, which is exactly the programmability
+//! wall "A Modern Primer on Processing-in-Memory" (arXiv:2012.03112)
+//! warns kills PIM adoption. Now a workload implements two traits in its
+//! own file and registers one [`KernelEntry`]; everything above the
+//! array — sharding, resident datasets, wire verbs, CLI subcommands,
+//! bench sweeps, bit-equality gates — comes for free:
+//!
+//!   * [`Kernel`] — the load/query contract: how to partition a dataset
+//!     over shards, load one shard's slice into RCAM rows (charged), run
+//!     one query against the resident rows, and price the host-link
+//!     messages both phases cost;
+//!   * [`ShardMerge`] — the host-side merge operator (bin-wise add,
+//!     ordered concat, top-k, …) plus the wire-reply formatter and a
+//!     canonical bit encoding used by the bit-equality test gates;
+//!   * [`Resident<K>`] — the one generic load-once / query-many rack
+//!     wrapper that replaced the four copy-pasted `Resident*` structs;
+//!   * [`sharded`] — the one generic one-shot (load + single query);
+//!   * [`KernelRegistry`](registry) — name → loader/parser/formatter;
+//!     the server's verb dispatch, the CLI `run` subcommand and the
+//!     bench sweeps iterate it instead of matching hard-coded arms.
+//!
+//! The SEARCH kernel ([`crate::algorithms::search`]) is the proof: it
+//! ships resident, sharded, server-verb, CLI and bench support from one
+//! file plus its registry entry, with zero kernel-specific code added to
+//! the rack, server or CLI.
+
+use crate::controller::{Controller, ExecStats};
+use crate::error::{ensure, Result};
+use crate::host::rack::{PrinsRack, RackStats};
+use crate::rcam::shard::{ShardPlan, CMD_BYTES};
+use crate::rcam::PrinsArray;
+use crate::storage::StorageManager;
+use std::ops::Range;
+
+/// A row-major `n × dims` f32 dataset — the load input of the dense
+/// vector kernels (Euclidean distance, dot product).
+pub struct FloatMatrix {
+    /// The values, row-major (`x[i * dims + j]` = attribute j of row i).
+    pub x: Vec<f32>,
+    /// Number of rows (samples / vectors).
+    pub n: usize,
+    /// Attributes per row.
+    pub dims: usize,
+}
+
+impl FloatMatrix {
+    /// Wrap `x` as an `n × dims` matrix (length-checked).
+    pub fn new(x: Vec<f32>, n: usize, dims: usize) -> Self {
+        assert_eq!(x.len(), n * dims, "FloatMatrix: x.len() != n * dims");
+        FloatMatrix { x, n, dims }
+    }
+
+    /// The row-major slice of rows `range`.
+    pub fn rows(&self, range: &Range<usize>) -> &[f32] {
+        &self.x[range.start * self.dims..range.end * self.dims]
+    }
+}
+
+/// The load/query contract every associative workload implements once,
+/// in its own file. All framework machinery — [`Resident`],
+/// [`sharded`], the registry-driven server/CLI/bench surfaces — is
+/// generic over this trait plus [`ShardMerge`].
+///
+/// One implementor instance is **one shard's loaded kernel**: `load_range`
+/// writes that shard's slice of the dataset into RCAM rows (charged to
+/// the device model), `query_shard` replays the query program against the
+/// resident rows. Stored fields must be read-only to the query program so
+/// repeat queries are bit-identical — the registry-driven test gates
+/// (`tests/resident_datasets.rs`) assert exactly that for every
+/// registered kernel.
+pub trait Kernel: Sized + Send {
+    /// Host-side dataset type the kernel loads (`[u32]` samples, a
+    /// [`FloatMatrix`], a [`crate::workloads::Csr`], …).
+    type Data: ?Sized + Sync;
+    /// Per-query parameters (a hyperplane, bin edges, a search range, …).
+    type Params: Sync + Send;
+    /// One shard's raw query output, before the host-side merge.
+    type Output: Send;
+
+    /// Registry/CLI name (`"hist"`, `"dp"`, …) — lower-case.
+    const NAME: &'static str;
+    /// Wire verb (`"HIST"`, `"DP"`, …) — upper-case.
+    const VERB: &'static str;
+    /// Wire query parameters after the dataset id (`DP id seed` → 1).
+    const QUERY_ARITY: usize;
+
+    /// Global logical rows of `data` (samples / vectors / matrix dim).
+    fn data_rows(data: &Self::Data) -> usize;
+
+    /// Shard partition of `data`. Default: equal contiguous row ranges;
+    /// override for weighted cuts (SpMV balances nonzeros, not rows).
+    fn plan(data: &Self::Data, shards: usize) -> ShardPlan {
+        ShardPlan::rows(Self::data_rows(data), shards)
+    }
+
+    /// Bit-columns one shard row needs for `data`.
+    fn width(data: &Self::Data) -> usize;
+
+    /// Physical RCAM rows shard `range` needs. Default `range.len()`;
+    /// override when physical rows ≠ logical rows (SpMV stores nonzeros).
+    fn shard_rows(data: &Self::Data, range: &Range<usize>) -> usize {
+        range.len()
+    }
+
+    /// Load shard `range` of `data` into `array` (charged row writes).
+    fn load_range(
+        sm: &mut StorageManager,
+        array: &mut PrinsArray,
+        data: &Self::Data,
+        range: Range<usize>,
+    ) -> Self;
+
+    /// Device-model cost of this shard's load phase (paid once).
+    fn load_stats(&self) -> &ExecStats;
+
+    /// Raw dataset bytes this shard's load moved over the host link
+    /// (the fixed command header is added by the rack).
+    fn load_payload_bytes(&self) -> u64;
+
+    /// Exact charged row writes this shard's load performed (one per
+    /// stored field: 2·n for hist/search, n·dims for ed/dp, 4·nnz for
+    /// spmv). The registry-driven test gates pin the measured load
+    /// ledger to this, so a double-load regression in the generic
+    /// [`Resident::load`] cannot ship silently.
+    fn load_writes(&self) -> u64;
+
+    /// One query against the resident shard rows. `range` is this
+    /// shard's slice of the global plan (readout slicing, global row
+    /// offsets). Must not rewrite stored dataset fields.
+    fn query_shard(
+        &self,
+        ctl: &mut Controller,
+        sm: &StorageManager,
+        range: &Range<usize>,
+        params: &Self::Params,
+    ) -> (Self::Output, ExecStats);
+
+    /// Host-link bytes of one query on this shard:
+    /// `(command payload beyond the fixed header, result readback)`.
+    fn query_msg_bytes(&self, range: &Range<usize>, params: &Self::Params) -> (u64, u64);
+
+    /// Analytic cycle floor of one query on this shard (exact: program
+    /// shape depends only on layout + params, never on data values).
+    fn query_floor_cycles(&self, array: &PrinsArray, params: &Self::Params) -> u64;
+
+    /// Parse wire query parameters (the args after the dataset id).
+    fn parse_params(&self, args: &[&str]) -> Result<Self::Params>;
+
+    /// Deterministic parameter stream for CLI sweeps, benches and the
+    /// registry-driven test gates: query index `q` under `seed`.
+    fn seeded_params(&self, q: usize, seed: u64) -> Self::Params;
+}
+
+/// The host-side merge half of the pipeline: fold per-shard outputs
+/// (arriving in [`ShardPlan`] order) into the global result, and present
+/// it — as wire-reply fields and as a canonical bit string the
+/// bit-equality gates compare across shard counts and repeat queries.
+pub trait ShardMerge: Kernel {
+    /// The merged global result.
+    type Merged: Send;
+
+    /// Fold per-shard outputs (plan order) into the global result.
+    fn merge(outputs: Vec<Self::Output>, plan: &ShardPlan, params: &Self::Params) -> Self::Merged;
+
+    /// Verb-specific wire reply fields (`"checksum=…"`, `"top_bin=…"`).
+    fn fields(merged: &Self::Merged) -> String;
+
+    /// Canonical bit encoding of the merged result (f32 via `to_bits`),
+    /// compared verbatim by the sharded==single and repeat-query gates.
+    fn bits(merged: &Self::Merged) -> Vec<u64>;
+}
+
+/// One shard's resident state: the controller owning the shard array,
+/// the shard's storage manager, and the loaded kernel.
+pub struct ShardSlot<K> {
+    /// Controller owning this shard's array.
+    pub ctl: Controller,
+    /// This shard's storage manager (row translation for readout).
+    pub sm: StorageManager,
+    /// The shard's loaded kernel.
+    pub kern: K,
+}
+
+/// Result of one query on a [`Resident`] dataset (or of the [`sharded`]
+/// one-shot): the merged global result plus rack-level stats.
+pub struct Sharded<K: ShardMerge> {
+    /// The host-merged global result.
+    pub merged: K::Merged,
+    /// Rack-level cycle/energy statistics (slowest shard + host link).
+    pub rack: RackStats,
+}
+
+/// A rack-resident dataset of any registered kernel: partitioned over
+/// the rack by `K::plan`, loaded **once** (charged,
+/// [`Resident::load_report`]), then queried arbitrarily many times —
+/// each query replays `K`'s program on every shard concurrently against
+/// the already-resident rows and merges host-side, charging only query
+/// cycles plus per-query link messages. This single generic replaced the
+/// four copy-pasted `Resident{Euclidean,Dot,Histogram,Spmv}` structs.
+pub struct Resident<K: ShardMerge> {
+    rack: PrinsRack,
+    plan: ShardPlan,
+    /// Global logical rows loaded (across all shards).
+    pub n: usize,
+    shards: Vec<ShardSlot<K>>,
+    load: RackStats,
+}
+
+impl<K: ShardMerge> Resident<K> {
+    /// Load phase: partition `data` over the rack and write every
+    /// shard's slice into its array once (one command + payload message
+    /// per shard on the host link).
+    pub fn load(rack: &PrinsRack, data: &K::Data) -> Self {
+        let n = K::data_rows(data);
+        let plan = K::plan(data, rack.n_shards());
+        let width = K::width(data);
+        let shards = rack.run_shards(&plan, |_s, r| {
+            let rows = K::shard_rows(data, &r);
+            let mut array = rack.shard_array(rows, width);
+            let mut sm = StorageManager::new(array.total_rows());
+            let kern = K::load_range(&mut sm, &mut array, data, r);
+            ShardSlot {
+                ctl: Controller::new(array),
+                sm,
+                kern,
+            }
+        });
+        let stats: Vec<ExecStats> = shards.iter().map(|s| s.kern.load_stats().clone()).collect();
+        let payload: Vec<u64> = shards.iter().map(|s| s.kern.load_payload_bytes()).collect();
+        let load = rack.finish_load(stats, &payload);
+        Resident {
+            rack: rack.clone(),
+            plan,
+            n,
+            shards,
+            load,
+        }
+    }
+
+    /// Device + link cost of the load phase (paid once per dataset).
+    pub fn load_report(&self) -> &RackStats {
+        &self.load
+    }
+
+    /// The shard partition the dataset was loaded with.
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+
+    /// Shard 0's loaded kernel (parameter parsing/synthesis: layout
+    /// facts like `dims` are identical on every shard).
+    pub fn kernel(&self) -> &K {
+        &self.shards[0].kern
+    }
+
+    /// Query phase: run `params` on every shard concurrently against the
+    /// resident rows and merge host-side — zero load-phase writes, so
+    /// repeat queries are bit-identical.
+    pub fn query(&mut self, params: &K::Params) -> Sharded<K> {
+        let plan = &self.plan;
+        let rack = &self.rack;
+        let shards = &mut self.shards;
+        let runs = rack.query_shards(shards, |i, sh| {
+            sh.kern
+                .query_shard(&mut sh.ctl, &sh.sm, &plan.ranges[i], params)
+        });
+        let (outs, stats): (Vec<_>, Vec<_>) = runs.into_iter().unzip();
+        let merged = K::merge(outs, plan, params);
+        let mut msgs = Vec::with_capacity(2 * plan.shards());
+        for (sh, rng) in self.shards.iter().zip(&self.plan.ranges) {
+            let (cmd, back) = sh.kern.query_msg_bytes(rng, params);
+            msgs.push(CMD_BYTES + cmd);
+            msgs.push(back);
+        }
+        Sharded {
+            merged,
+            rack: self.rack.finish(stats, &msgs),
+        }
+    }
+
+    /// Analytic per-query cycle floor of the slowest shard for `params`.
+    pub fn query_floor_cycles(&self, params: &K::Params) -> u64 {
+        self.shards
+            .iter()
+            .map(|s| s.kern.query_floor_cycles(&s.ctl.array, params))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Exact charged row writes of the whole load phase (Σ shards).
+    pub fn expected_load_writes(&self) -> u64 {
+        self.shards.iter().map(|s| s.kern.load_writes()).sum()
+    }
+
+    fn query_out(&mut self, params: &K::Params, want_bits: bool) -> QueryOut {
+        let r = self.query(params);
+        QueryOut {
+            fields: K::fields(&r.merged),
+            bits: if want_bits {
+                K::bits(&r.merged)
+            } else {
+                Vec::new()
+            },
+            rack: r.rack,
+        }
+    }
+}
+
+/// The one generic one-shot: [`Resident::load`] followed by a single
+/// [`Resident::query`], whose per-shard stats windows and merge path it
+/// shares — one-shot and resident results cannot diverge by
+/// construction. The reported [`RackStats`] cover the query phase only
+/// (the load cost is on [`Resident::load_report`]).
+pub fn sharded<K: ShardMerge>(rack: &PrinsRack, data: &K::Data, params: &K::Params) -> Sharded<K> {
+    Resident::<K>::load(rack, data).query(params)
+}
+
+// ---------------------------------------------------------------------------
+// Type-erased resident datasets + the kernel registry
+// ---------------------------------------------------------------------------
+
+/// One query's presentation bundle: the wire-reply fields, the canonical
+/// bit encoding (bit-equality gates), and the rack stats.
+pub struct QueryOut {
+    /// Verb-specific reply fields (`"checksum=…"`, `"count=…"`).
+    pub fields: String,
+    /// Canonical bit encoding of the merged result
+    /// ([`ShardMerge::bits`]). Populated by [`ResidentDyn::query_seeded`]
+    /// (the test/bench/CLI surface); **empty** on
+    /// [`ResidentDyn::query_args`] — the wire hot path only reads
+    /// `fields`, so the O(result) encoding is skipped there.
+    pub bits: Vec<u64>,
+    /// Rack-level stats of this query.
+    pub rack: RackStats,
+}
+
+/// A type-erased [`Resident`] dataset — what the server's per-session
+/// dataset registry, the CLI and the bench sweeps hold, so none of them
+/// name concrete kernels.
+pub trait ResidentDyn: Send {
+    /// The kernel's registry name (`"hist"`, `"search"`, …).
+    fn name(&self) -> &'static str;
+    /// Global logical rows loaded.
+    fn rows(&self) -> usize;
+    /// Device + link cost of the load phase.
+    fn load_report(&self) -> &RackStats;
+    /// Exact charged row writes of the load phase (Σ shards, per
+    /// [`Kernel::load_writes`]) — the test gates' load-wear anchor.
+    fn expected_load_writes(&self) -> u64;
+    /// One query with wire parameters (the args after the dataset id).
+    /// The returned [`QueryOut::bits`] is left empty (wire hot path).
+    fn query_args(&mut self, args: &[&str]) -> Result<QueryOut>;
+    /// One query with the deterministic `(q, seed)` parameter stream,
+    /// including the canonical bit encoding ([`QueryOut::bits`]).
+    fn query_seeded(&mut self, q: usize, seed: u64) -> QueryOut;
+    /// Analytic slowest-shard cycle floor for the `(q, seed)` parameter
+    /// stream ([`Resident::query_floor_cycles`]) — the exact value the
+    /// matching [`ResidentDyn::query_seeded`]'s `max_shard_cycles` must
+    /// measure; the registry test gates pin the two together.
+    fn query_floor_seeded(&self, q: usize, seed: u64) -> u64;
+}
+
+impl<K: ShardMerge + 'static> ResidentDyn for Resident<K> {
+    fn name(&self) -> &'static str {
+        K::NAME
+    }
+
+    fn rows(&self) -> usize {
+        self.n
+    }
+
+    fn load_report(&self) -> &RackStats {
+        &self.load
+    }
+
+    fn expected_load_writes(&self) -> u64 {
+        Resident::expected_load_writes(self)
+    }
+
+    fn query_args(&mut self, args: &[&str]) -> Result<QueryOut> {
+        ensure!(
+            args.len() == K::QUERY_ARITY,
+            "{} takes {} query parameter(s) after the dataset id",
+            K::VERB,
+            K::QUERY_ARITY
+        );
+        let params = self.kernel().parse_params(args)?;
+        Ok(self.query_out(&params, false))
+    }
+
+    fn query_seeded(&mut self, q: usize, seed: u64) -> QueryOut {
+        let params = self.kernel().seeded_params(q, seed);
+        self.query_out(&params, true)
+    }
+
+    fn query_floor_seeded(&self, q: usize, seed: u64) -> u64 {
+        let params = self.kernel().seeded_params(q, seed);
+        Resident::query_floor_cycles(self, &params)
+    }
+}
+
+/// One registered kernel: everything the rack, server, CLI and benches
+/// need to drive it without naming it. Adding a workload = implementing
+/// [`Kernel`] + [`ShardMerge`] in one file and appending one entry to
+/// [`REGISTRY`].
+pub struct KernelEntry {
+    /// Registry/CLI name (lower-case, e.g. `"search"`).
+    pub name: &'static str,
+    /// Wire verb (upper-case, e.g. `"SEARCH"`).
+    pub verb: &'static str,
+    /// Wire query parameters after the dataset id.
+    pub query_arity: usize,
+    /// Wire args after the verb in the one-shot form.
+    pub one_shot_arity: usize,
+    /// `LOAD` grammar line (docs/PROTOCOL.md), e.g. `"LOAD HIST n seed"`.
+    pub load_usage: &'static str,
+    /// Dataset-id query grammar line, e.g. `"HIST id"`.
+    pub query_usage: &'static str,
+    /// One-shot grammar line, e.g. `"HIST n seed"`.
+    pub one_shot_usage: &'static str,
+    /// Whether the workload simulates every microcode pass over every
+    /// row per query (the CLI/bench row caps apply to dense kernels).
+    pub dense: bool,
+    /// Whether queries are compare-only (zero writes — asserted by the
+    /// registry-driven wear gates for kernels that claim it).
+    pub write_free_queries: bool,
+    /// Host-FLOP estimate of one query (CLI efficiency print).
+    pub flops: fn(n: usize, dims: usize) -> f64,
+    /// Server `LOAD <VERB> args…` handler: parse, synthesize, load.
+    pub load: fn(&PrinsRack, &[&str]) -> Result<Box<dyn ResidentDyn>>,
+    /// Canonical synthesis for the CLI, benches and test gates: a
+    /// dataset of `n` rows (`dims` where meaningful) under `seed`.
+    pub synth_load: fn(&PrinsRack, n: usize, dims: usize, seed: u64) -> Box<dyn ResidentDyn>,
+    /// Wire one-shot handler: parse args, synthesize, load + one query.
+    pub one_shot: fn(&PrinsRack, &[&str]) -> Result<QueryOut>,
+}
+
+/// The kernel registry: every workload the stack serves, in protocol
+/// listing order. The server's verb dispatch, the CLI `run` subcommand,
+/// the bench sweeps and the property-test gates iterate this slice —
+/// none of them contain per-kernel code.
+pub static REGISTRY: [KernelEntry; 5] = [
+    super::histogram::ENTRY,
+    super::dot::ENTRY,
+    super::euclidean::ENTRY,
+    super::spmv::ENTRY,
+    super::search::ENTRY,
+];
+
+/// All registered kernels (see [`REGISTRY`]).
+pub fn registry() -> &'static [KernelEntry] {
+    &REGISTRY
+}
+
+/// Look a kernel up by registry name (`"dp"` — the CLI surface).
+pub fn find_name(name: &str) -> Option<&'static KernelEntry> {
+    registry().iter().find(|e| e.name == name)
+}
+
+/// Look a kernel up by wire verb (`"DP"` — the server surface; verbs are
+/// case-sensitive per docs/PROTOCOL.md, so this must not match names).
+pub fn find_verb(verb: &str) -> Option<&'static KernelEntry> {
+    registry().iter().find(|e| e.verb == verb)
+}
+
+/// Look a kernel up by either registry name or wire verb.
+pub fn find(name_or_verb: &str) -> Option<&'static KernelEntry> {
+    find_name(name_or_verb).or_else(|| find_verb(name_or_verb))
+}
+
+/// Shared body of every registry `one_shot` handler: load + one query,
+/// presented as a [`QueryOut`]. Wire path — [`QueryOut::bits`] is left
+/// empty (only `fields` goes on the reply line).
+pub fn one_shot_out<K: ShardMerge + 'static>(
+    rack: &PrinsRack,
+    data: &K::Data,
+    params: &K::Params,
+) -> QueryOut {
+    let mut res = Resident::<K>::load(rack, data);
+    res.query_out(params, false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_verbs_and_arities_are_distinct_and_consistent() {
+        let reg = registry();
+        assert_eq!(reg.len(), 5, "five registered kernels");
+        for (i, e) in reg.iter().enumerate() {
+            assert_eq!(e.name.to_uppercase(), e.verb, "{}: verb is the upper-case name", e.name);
+            assert!(
+                e.one_shot_arity != e.query_arity + 1,
+                "{}: one-shot and dataset-id forms must differ in arity",
+                e.name
+            );
+            for other in &reg[i + 1..] {
+                assert_ne!(e.name, other.name);
+                assert_ne!(e.verb, other.verb);
+            }
+            assert!(find(e.name).is_some() && find(e.verb).is_some());
+        }
+        assert!(find("bogus").is_none());
+    }
+
+    #[test]
+    fn every_registered_kernel_loads_and_queries_through_the_dyn_surface() {
+        let rack = PrinsRack::new(2);
+        for e in registry() {
+            let mut res = (e.synth_load)(&rack, 24, 2, 7);
+            assert_eq!(res.name(), e.name);
+            assert_eq!(res.rows(), 24, "{}", e.name);
+            assert!(res.load_report().total_cycles > 0, "{}: load charged", e.name);
+            let a = res.query_seeded(0, 9);
+            let b = res.query_seeded(0, 9);
+            assert_eq!(a.bits, b.bits, "{}: repeat query diverged", e.name);
+            assert_eq!(a.fields, b.fields, "{}", e.name);
+            assert!(!a.bits.is_empty(), "{}: bits encoding empty", e.name);
+            assert_eq!(a.rack.shards, 2, "{}", e.name);
+        }
+    }
+
+    #[test]
+    fn float_matrix_slices_rows() {
+        let m = FloatMatrix::new(vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0], 3, 2);
+        assert_eq!(m.rows(&(1..3)), &[2.0, 3.0, 4.0, 5.0]);
+    }
+}

@@ -10,29 +10,49 @@
 //! reuse the loaded array and charge only query cycles/energy
 //! (DESIGN.md §Resident datasets).
 //!
-//! Histogram, dot product, ED and SpMV additionally have `*_sharded`
-//! one-shot entry points and `Resident*` load-once / query-many forms
-//! that keep per-shard loaded kernels alive on a
-//! [`crate::host::rack::PrinsRack`] across calls with host-side merging;
-//! `tests/prop_sharded_equals_single.rs` and `tests/resident_datasets.rs`
-//! assert their results bit-identical to the single-device paths.
+//! Every registered workload goes through the **kernel framework**
+//! ([`kernel`], DESIGN.md §Kernel framework): it implements the
+//! [`kernel::Kernel`] + [`kernel::ShardMerge`] traits in its own file
+//! and appends one [`kernel::KernelEntry`] to the registry, which buys
+//! it the generic [`kernel::Resident`] load-once / query-many rack
+//! wrapper, the [`kernel::sharded`] one-shot, the server's wire verbs,
+//! the CLI `run` subcommand, the bench sweeps and the registry-driven
+//! bit-equality test gates (`tests/prop_sharded_equals_single.rs`,
+//! `tests/resident_datasets.rs`) — with zero per-kernel code above the
+//! array. The associative SEARCH kernel ([`search`]) is the reference
+//! example of adding a workload in one file.
+//!
+//! BFS is the deliberate exception: its query writes the frontier back
+//! into the resident rows, so the framework's write-free-query contract
+//! does not hold and it stays a single-device, load-per-traversal
+//! kernel (see [`bfs::BfsKernel`]).
 
 pub mod bfs;
 pub mod dot;
 pub mod euclidean;
 pub mod histogram;
+pub mod kernel;
+pub mod search;
 pub mod spmv;
 
 pub use bfs::{measured_teps, paper_model_teps, BfsKernel, BfsResult};
-pub use dot::{dot_baseline, dot_sharded, DotKernel, ResidentDot, ShardedDotResult};
-pub use euclidean::{
-    euclidean_baseline, euclidean_sharded, EuclideanKernel, ResidentEuclidean, ShardedEdResult,
-};
+pub use dot::{dot_baseline, dot_sharded, DotKernel, DotOutput};
+pub use euclidean::{euclidean_baseline, euclidean_sharded, EdOutput, EdParams, EuclideanKernel};
 pub use histogram::{
     histogram_baseline, histogram_baseline_at, histogram_sharded, HistogramKernel,
-    ResidentHistogram, ShardedHistResult,
+};
+pub use kernel::{
+    find, find_name, find_verb, one_shot_out, registry, sharded, FloatMatrix, Kernel, KernelEntry,
+    QueryOut, Resident, ResidentDyn, ShardMerge, ShardSlot, Sharded,
+};
+pub use search::{range_prefixes, search_baseline, SearchKernel, SearchRange};
+// deprecated pre-framework aliases, re-exported so PR-4-era callers get
+// the deprecation nudge instead of an unresolved-import hard break
+#[allow(deprecated)]
+pub use {
+    dot::ResidentDot, euclidean::ResidentEuclidean, histogram::ResidentHistogram,
+    spmv::ResidentSpmv,
 };
 pub use spmv::{
-    spmv_baseline_quantized, spmv_sharded, spmv_single, ReduceEngine, ResidentSpmv,
-    ShardedSpmvResult, SpmvKernel,
+    spmv_baseline_quantized, spmv_sharded, spmv_single, ReduceEngine, SpmvKernel, SpmvOutput,
 };

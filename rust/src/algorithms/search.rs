@@ -1,0 +1,406 @@
+//! Associative SEARCH — exact-match / range-count over resident keys,
+//! the native CAM primitive (paper §3.1: a compare tags every matching
+//! row in one cycle; the reduction tree counts the tags in one issue).
+//!
+//! This kernel exists to prove the kernel framework pays for itself
+//! (DESIGN.md §Kernel framework): it was added **through the framework
+//! alone** — this file plus one [`ENTRY`] in the registry — and acquired
+//! resident datasets, rack sharding, the `SEARCH` wire verb, `LOAD
+//! SEARCH`, the CLI `run search` subcommand and the bench sweeps with
+//! zero kernel-specific code in the rack, server, CLI or benches.
+//!
+//! One u32 key per RCAM row (plus the dataset-membership valid bit, as
+//! in the histogram kernel). A query is a closed range `[lo, hi]`
+//! (`lo == hi` = exact match), answered associatively by the classic
+//! TCAM range expansion: the range decomposes into ≤ 62 power-of-two
+//! aligned prefixes ([`range_prefixes`]); each prefix is one masked
+//! compare (fixed high bits only — unlisted columns are don't-care) plus
+//! one reduction count. Prefixes are disjoint, so the host sums the
+//! per-prefix counts. Cycles depend only on the range shape, never on
+//! the key count — and counts are integers, so shard merging is a plain
+//! sum (bin-add with one bin) that is bit-exact by construction.
+
+use crate::algorithms::kernel::{
+    one_shot_out, Kernel, KernelEntry, QueryOut, Resident, ResidentDyn, ShardMerge,
+};
+use crate::controller::{Controller, ExecStats};
+use crate::error::{ensure, Result};
+use crate::host::rack::PrinsRack;
+use crate::isa::{Field, Instr, Program, RowLayout};
+use crate::rcam::shard::ShardPlan;
+use crate::rcam::PrinsArray;
+use crate::storage::{Dataset, StorageManager};
+use crate::workloads::{synth_hist_samples, Rng};
+use std::ops::Range;
+
+/// A closed key range `[lo, hi]` (`lo == hi` = exact match) — the SEARCH
+/// kernel's per-query parameter.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SearchRange {
+    /// Inclusive lower bound.
+    pub lo: u32,
+    /// Inclusive upper bound (`>= lo`).
+    pub hi: u32,
+}
+
+impl SearchRange {
+    /// The range `[lo, hi]` (asserts `lo <= hi`).
+    pub fn new(lo: u32, hi: u32) -> Self {
+        assert!(lo <= hi, "SearchRange: lo > hi");
+        SearchRange { lo, hi }
+    }
+
+    /// An exact-match query for one key.
+    pub fn exact(key: u32) -> Self {
+        SearchRange { lo: key, hi: key }
+    }
+}
+
+/// Decompose the closed range `[lo, hi]` into the minimal list of
+/// power-of-two aligned prefixes `(value, fixed_bits)`: each prefix
+/// covers `[value, value + 2^(32-fixed_bits) - 1]`, the prefixes are
+/// disjoint, ascending, and their union is exactly `[lo, hi]`. At most
+/// 62 prefixes for any u32 range — the classic TCAM range expansion.
+pub fn range_prefixes(lo: u32, hi: u32) -> Vec<(u32, u32)> {
+    assert!(lo <= hi);
+    let mut out = Vec::new();
+    let mut lo = lo as u64;
+    let hi = hi as u64;
+    while lo <= hi {
+        // widest aligned block starting at lo that stays inside [lo, hi]
+        let align = if lo == 0 { 32 } else { lo.trailing_zeros().min(32) };
+        let mut k = align;
+        while k > 0 && lo + (1u64 << k) - 1 > hi {
+            k -= 1;
+        }
+        out.push((lo as u32, 32 - k));
+        lo += 1u64 << k;
+    }
+    out
+}
+
+/// Scalar CPU baseline: keys of `xs` falling in `[lo, hi]`.
+pub fn search_baseline(xs: &[u32], lo: u32, hi: u32) -> u64 {
+    xs.iter().filter(|&&v| lo <= v && v <= hi).count() as u64
+}
+
+/// Loaded SEARCH dataset: one u32 key per row plus the valid bit.
+///
+/// Load-once / query-many: [`SearchKernel::load`] writes the keys once
+/// (charged, two row writes per key like the histogram kernel); queries
+/// are compare-only — zero writes, wear untouched, any number of
+/// repeats bit-identical.
+pub struct SearchKernel {
+    /// Number of loaded keys.
+    pub n: usize,
+    key: Field,
+    /// dataset-membership flag: unloaded (all-zero) rows must not match
+    /// a range containing 0
+    valid: Field,
+    #[allow(dead_code)]
+    ds: Dataset,
+    load_stats: ExecStats,
+}
+
+impl SearchKernel {
+    /// Allocate rows and load the keys (one key per row, plus the valid
+    /// bit). Two charged row writes per key.
+    pub fn load(sm: &mut StorageManager, array: &mut PrinsArray, xs: &[u32]) -> Self {
+        let mut layout = RowLayout::new(array.width() as u16);
+        let key = layout.alloc("key", 32);
+        let valid = layout.alloc("valid", 1);
+        let ds = sm.alloc(xs.len(), layout).expect("storage full");
+        let (c0, l0) = (array.cycles, array.ledger());
+        for (i, &v) in xs.iter().enumerate() {
+            array.load_row_bits_charged(ds.rows.start + i, key.base as usize, 32, v as u64);
+            array.load_row_bits_charged(ds.rows.start + i, valid.base as usize, 1, 1);
+        }
+        let load_stats = ExecStats::since(array, c0, &l0);
+        SearchKernel {
+            n: xs.len(),
+            key,
+            valid,
+            ds,
+            load_stats,
+        }
+    }
+
+    /// The per-range program: one masked compare + one reduction count
+    /// per prefix of the TCAM range expansion.
+    pub fn program(&self, r: &SearchRange) -> Program {
+        let mut prog = Program::new();
+        for (value, fixed) in range_prefixes(r.lo, r.hi) {
+            let mut pat: Vec<(u16, bool)> = (32 - fixed..32)
+                .map(|b| (self.key.base + b as u16, (value >> b) & 1 == 1))
+                .collect();
+            pat.push((self.valid.base, true));
+            prog.push(Instr::Compare(pat));
+            prog.push(Instr::ReduceCount);
+        }
+        prog
+    }
+
+    /// Query phase: count resident keys in `[r.lo, r.hi]`. Compare-only
+    /// (zero writes); cycles depend on the range shape, not on the key
+    /// count (bar the pipelined tree drain).
+    pub fn query(&self, ctl: &mut Controller, r: &SearchRange) -> (u64, ExecStats) {
+        ctl.begin_stats();
+        let prog = self.program(r);
+        let counts = ctl.execute_collect(&prog);
+        // one pipelined tree-drain latency at the end of the prefix sweep
+        ctl.array.charge_reduction_latency();
+        let mut stats = ctl.stats();
+        stats.passes = 0; // no writes in this kernel
+        (counts.iter().sum(), stats)
+    }
+}
+
+impl Kernel for SearchKernel {
+    type Data = [u32];
+    type Params = SearchRange;
+    type Output = u64;
+
+    const NAME: &'static str = "search";
+    const VERB: &'static str = "SEARCH";
+    const QUERY_ARITY: usize = 2;
+
+    fn data_rows(data: &[u32]) -> usize {
+        data.len()
+    }
+
+    fn width(_data: &[u32]) -> usize {
+        40
+    }
+
+    fn load_range(
+        sm: &mut StorageManager,
+        array: &mut PrinsArray,
+        data: &[u32],
+        range: Range<usize>,
+    ) -> Self {
+        SearchKernel::load(sm, array, &data[range])
+    }
+
+    fn load_stats(&self) -> &ExecStats {
+        &self.load_stats
+    }
+
+    fn load_payload_bytes(&self) -> u64 {
+        4 * self.n as u64
+    }
+
+    fn load_writes(&self) -> u64 {
+        2 * self.n as u64 // key value + valid bit per row
+    }
+
+    fn query_shard(
+        &self,
+        ctl: &mut Controller,
+        _sm: &StorageManager,
+        _range: &Range<usize>,
+        params: &SearchRange,
+    ) -> (u64, ExecStats) {
+        self.query(ctl, params)
+    }
+
+    fn query_msg_bytes(&self, _range: &Range<usize>, _params: &SearchRange) -> (u64, u64) {
+        (8, 8) // lo+hi down, one u64 count back
+    }
+
+    fn query_floor_cycles(&self, array: &PrinsArray, params: &SearchRange) -> u64 {
+        self.program(params).cycle_estimate() + array.reduction_latency_cycles()
+    }
+
+    fn parse_params(&self, args: &[&str]) -> Result<SearchRange> {
+        let (lo, hi): (u32, u32) = (args[0].parse()?, args[1].parse()?);
+        ensure!(lo <= hi, "search range: lo > hi");
+        Ok(SearchRange { lo, hi })
+    }
+
+    fn seeded_params(&self, q: usize, seed: u64) -> SearchRange {
+        let mut rng = Rng::seed_from(seed.wrapping_add(1 + q as u64));
+        let (a, b) = (rng.next_u32(), rng.next_u32());
+        if q % 4 == 3 {
+            SearchRange::exact(a) // every fourth query: the exact-match form
+        } else {
+            SearchRange::new(a.min(b), a.max(b))
+        }
+    }
+}
+
+impl ShardMerge for SearchKernel {
+    type Merged = u64;
+
+    fn merge(outputs: Vec<u64>, _plan: &ShardPlan, _params: &SearchRange) -> u64 {
+        outputs.iter().sum() // disjoint row partition: counts just add
+    }
+
+    fn fields(merged: &u64) -> String {
+        format!("count={merged}")
+    }
+
+    fn bits(merged: &u64) -> Vec<u64> {
+        vec![*merged]
+    }
+}
+
+fn load_args(rack: &PrinsRack, args: &[&str]) -> Result<Box<dyn ResidentDyn>> {
+    let [n, seed] = args else {
+        crate::error::bail!("usage: LOAD SEARCH n seed");
+    };
+    let (n, seed): (usize, u64) = (n.parse()?, seed.parse()?);
+    ensure!(n > 0 && n <= 1 << 20, "n out of range");
+    let xs = synth_hist_samples(n, seed);
+    Ok(Box::new(Resident::<SearchKernel>::load(rack, &xs)))
+}
+
+fn synth_load(rack: &PrinsRack, n: usize, _dims: usize, seed: u64) -> Box<dyn ResidentDyn> {
+    Box::new(Resident::<SearchKernel>::load(
+        rack,
+        &synth_hist_samples(n, seed),
+    ))
+}
+
+fn one_shot(rack: &PrinsRack, args: &[&str]) -> Result<QueryOut> {
+    let [n, seed, lo, hi] = args else {
+        crate::error::bail!("usage: SEARCH n seed lo hi");
+    };
+    let (n, seed): (usize, u64) = (n.parse()?, seed.parse()?);
+    ensure!(n > 0 && n <= 1 << 20, "n out of range");
+    let (lo, hi): (u32, u32) = (lo.parse()?, hi.parse()?);
+    ensure!(lo <= hi, "search range: lo > hi");
+    let xs = synth_hist_samples(n, seed);
+    Ok(one_shot_out::<SearchKernel>(
+        rack,
+        &xs,
+        &SearchRange { lo, hi },
+    ))
+}
+
+/// The SEARCH kernel's registry entry — the only line of kernel-specific
+/// code outside this file.
+pub const ENTRY: KernelEntry = KernelEntry {
+    name: SearchKernel::NAME,
+    verb: SearchKernel::VERB,
+    query_arity: SearchKernel::QUERY_ARITY,
+    one_shot_arity: 4,
+    load_usage: "LOAD SEARCH n seed",
+    query_usage: "SEARCH id lo hi",
+    one_shot_usage: "SEARCH n seed lo hi",
+    dense: false,
+    write_free_queries: true,
+    flops: |n, _dims| n as f64, // one key comparison per resident row
+    load: load_args,
+    synth_load,
+    one_shot,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::kernel::sharded;
+
+    #[test]
+    fn range_prefixes_partition_the_range_exactly() {
+        let cases = [
+            (0u32, 0u32),
+            (5, 5),
+            (0, u32::MAX),
+            (1, 14),
+            (100, 1000),
+            (0x7FFF_FFFF, 0x8000_0001),
+            (u32::MAX - 3, u32::MAX),
+            (0, 1 << 20),
+        ];
+        for (lo, hi) in cases {
+            let ps = range_prefixes(lo, hi);
+            assert!(ps.len() <= 62, "[{lo},{hi}]: {} prefixes", ps.len());
+            // ascending, disjoint, gap-free cover of [lo, hi]
+            let mut next = lo as u64;
+            for &(v, fixed) in &ps {
+                assert_eq!(v as u64, next, "[{lo},{hi}]: gap at {v:#x}");
+                let span = 1u64 << (32 - fixed);
+                assert_eq!(v as u64 % span, 0, "[{lo},{hi}]: unaligned prefix");
+                next = v as u64 + span;
+            }
+            assert_eq!(next, hi as u64 + 1, "[{lo},{hi}]: cover ends early/late");
+        }
+    }
+
+    #[test]
+    fn counts_match_baseline_and_exact_match_works() {
+        let xs = synth_hist_samples(3000, 5);
+        let mut array = PrinsArray::single(xs.len(), 40);
+        let mut sm = StorageManager::new(xs.len());
+        let kern = SearchKernel::load(&mut sm, &mut array, &xs);
+        assert_eq!(kern.load_stats().ledger.n_write, 2 * xs.len() as u64);
+        let mut ctl = Controller::new(array);
+        for r in [
+            SearchRange::new(0, u32::MAX),
+            SearchRange::new(1 << 30, 3 << 30),
+            SearchRange::new(12345, 12345678),
+            SearchRange::exact(xs[17]),
+            SearchRange::exact(xs[0] ^ 1), // likely absent key
+        ] {
+            let (count, stats) = kern.query(&mut ctl, &r);
+            assert_eq!(count, search_baseline(&xs, r.lo, r.hi), "{r:?}");
+            assert_eq!(stats.ledger.n_write, 0, "queries never write");
+            assert_eq!(
+                stats.cycles,
+                kern.query_floor_cycles(&ctl.array, &r),
+                "{r:?} off the analytic floor"
+            );
+        }
+        // full range counts exactly the loaded keys (valid bit gates
+        // unloaded all-zero rows out)
+        let (all, _) = kern.query(&mut ctl, &SearchRange::new(0, u32::MAX));
+        assert_eq!(all, xs.len() as u64);
+    }
+
+    #[test]
+    fn cycles_independent_of_key_count() {
+        let r = SearchRange::new(1000, 90_000);
+        let run_n = |n: usize| {
+            let xs = synth_hist_samples(n, 9);
+            let mut array = PrinsArray::single(n, 40);
+            let mut sm = StorageManager::new(n);
+            let kern = SearchKernel::load(&mut sm, &mut array, &xs);
+            let mut ctl = Controller::new(array);
+            // subtract the N-dependent tree drain to compare issue cycles
+            kern.query(&mut ctl, &r).1.cycles - ctl.array.reduction_latency_cycles()
+        };
+        assert_eq!(run_n(64), run_n(4096));
+    }
+
+    #[test]
+    fn sharded_counts_bit_equal_single_device() {
+        let xs = synth_hist_samples(2500, 23);
+        let r = SearchRange::new(1 << 28, 7 << 28);
+        let expect = search_baseline(&xs, r.lo, r.hi);
+        for shards in [1usize, 2, 3, 8] {
+            let rack = PrinsRack::new(shards);
+            let res = sharded::<SearchKernel>(&rack, &xs, &r);
+            assert_eq!(res.merged, expect, "shards={shards}");
+            assert_eq!(res.rack.shards, shards);
+            assert_eq!(res.rack.link_messages, 2 * shards as u64);
+        }
+    }
+
+    #[test]
+    fn resident_queries_repeat_bit_identically_and_rebind() {
+        let xs = synth_hist_samples(1200, 31);
+        let rack = PrinsRack::new(2);
+        let mut res = Resident::<SearchKernel>::load(&rack, &xs);
+        assert!(res.load_report().total_cycles > 0);
+        let r1 = SearchRange::new(0, 1 << 31);
+        let a = res.query(&r1);
+        let b = res.query(&SearchRange::new(55, 99)); // new range, same keys
+        let c = res.query(&r1);
+        assert_eq!(a.merged, c.merged);
+        assert_eq!(a.rack.total_cycles, c.rack.total_cycles);
+        assert_eq!(b.merged, search_baseline(&xs, 55, 99));
+        for st in &a.rack.shard_stats {
+            assert_eq!(st.ledger.n_write, 0, "search queries never write");
+        }
+    }
+}

@@ -24,14 +24,20 @@
 //! substitution ledger in DESIGN.md). Products are Q2.28 in a 48-bit
 //! two's-complement accumulator.
 
+use crate::algorithms::kernel::{
+    one_shot_out, sharded, Kernel, KernelEntry, QueryOut, Resident, ResidentDyn, ShardMerge,
+    Sharded,
+};
 use crate::controller::{Controller, ExecStats};
-use crate::host::rack::{PrinsRack, RackStats};
+use crate::error::{ensure, Result};
+use crate::host::rack::PrinsRack;
 use crate::isa::{Field, Instr, Program, RowLayout};
 use crate::micro;
-use crate::rcam::shard::{ShardPlan, CMD_BYTES};
+use crate::rcam::shard::{merge_concat, ShardPlan};
 use crate::rcam::{ExecBackend, PrinsArray};
 use crate::storage::{Dataset, StorageManager};
-use crate::workloads::Csr;
+use crate::workloads::{synth_csr, Csr, Rng};
+use std::ops::Range;
 
 /// Fraction bits of the Q1.14 operands.
 pub const QFRAC: u32 = 14;
@@ -175,6 +181,8 @@ pub struct SpmvKernel {
     max_row_nnz: usize,
     /// physical row of the first nonzero of each matrix row (readout)
     row_heads: Vec<Option<usize>>,
+    /// allocation handle pinning the rows (readout goes via row_heads)
+    #[allow(dead_code)]
     ds: Dataset,
     load_stats: ExecStats,
 }
@@ -400,108 +408,176 @@ pub fn spmv_single(a: &Csr, x: &[f32], backend: ExecBackend) -> SpmvResult {
     kern.run(&mut ctl, x, ReduceEngine::ChainTree)
 }
 
-/// Result of a rack-sharded SpMV run.
-pub struct ShardedSpmvResult {
+/// Merged result of an SpMV query: `y = A·x` in global row order plus
+/// the protocol's checksum reply value.
+pub struct SpmvOutput {
     /// `y = A·x` in global row order, bit-identical to the single-device
     /// run (each matrix row lives entirely in one shard, so the merge is
     /// an order-preserving scatter of per-shard row slices).
     pub y: Vec<f32>,
     /// Row-order f32 sum of `y` (the protocol's checksum reply field).
     pub checksum: f32,
-    /// Rack-level cycle/energy statistics (slowest shard + host link).
-    pub rack: RackStats,
 }
 
-/// One shard's resident SpMV state: controller + the kernel loaded with
-/// the shard's row-masked CSR slice.
-struct SpmvShard {
-    ctl: Controller,
-    kern: SpmvKernel,
-}
+impl Kernel for SpmvKernel {
+    type Data = Csr;
+    type Params = Vec<f32>; // the broadcast x vector
+    type Output = Vec<f32>; // this shard's y slice
 
-/// A rack-resident SpMV dataset: matrix rows partitioned contiguously
-/// with nonzero-balanced cuts ([`ShardPlan::weighted`] over per-row nnz)
-/// so no matrix row is split across shards, loaded **once**, then
-/// queried many times with fresh x vectors. Query results are
-/// bit-identical to [`spmv_sharded`] while charging only query cycles
-/// plus per-query link messages.
-pub struct ResidentSpmv {
-    rack: PrinsRack,
-    plan: ShardPlan,
-    /// Matrix dimension (rows of A, length of x and y).
-    pub n: usize,
-    shards: Vec<SpmvShard>,
-    load: RackStats,
-}
+    const NAME: &'static str = "spmv";
+    const VERB: &'static str = "SPMV";
+    const QUERY_ARITY: usize = 1;
 
-impl ResidentSpmv {
-    /// Load phase: cut `a` into nonzero-balanced contiguous row slices
-    /// and write each shard's nonzeros into its array once. The host link
-    /// is charged one command + a 12-byte-per-nonzero CSR payload
-    /// (rowid, colid, value) per shard.
-    pub fn load(rack: &PrinsRack, a: &Csr) -> Self {
-        let plan = ShardPlan::weighted(&a.row_nnz(), rack.n_shards());
-        let shards = rack.run_shards(&plan, |_s, r| {
-            let sub = a.mask_rows(r.clone());
-            let mut array = rack.shard_array(sub.nnz(), 256);
-            let mut sm = StorageManager::new(array.total_rows());
-            let kern = SpmvKernel::load(&mut sm, &mut array, &sub);
-            SpmvShard {
-                ctl: Controller::new(array),
-                kern,
-            }
-        });
-        let load_stats: Vec<ExecStats> =
-            shards.iter().map(|s| s.kern.load_stats().clone()).collect();
-        let payload: Vec<u64> = shards.iter().map(|s| 12 * s.kern.nnz as u64).collect();
-        let load = rack.finish_load(load_stats, &payload);
-        ResidentSpmv {
-            rack: rack.clone(),
-            plan,
-            n: a.n,
-            shards,
-            load,
-        }
+    fn data_rows(data: &Csr) -> usize {
+        data.n
     }
 
-    /// Device + link cost of the load phase (paid once per dataset).
-    pub fn load_report(&self) -> &RackStats {
-        &self.load
+    /// Nonzero-balanced contiguous row cuts ([`ShardPlan::weighted`])
+    /// so no matrix row splits across shards and the chain reduce stays
+    /// shard-local.
+    fn plan(data: &Csr, shards: usize) -> ShardPlan {
+        ShardPlan::weighted(&data.row_nnz(), shards)
     }
 
-    /// Query phase: broadcast a fresh `x` to every shard concurrently
-    /// (chain-tree reduce), scatter per-shard y slices back into global
-    /// row order — zero load-phase writes.
-    pub fn query(&mut self, x: &[f32]) -> ShardedSpmvResult {
-        assert_eq!(x.len(), self.n);
-        let plan = &self.plan;
-        let runs = self.rack.query_shards(&mut self.shards, |i, sh| {
-            let res = sh.kern.query(&mut sh.ctl, x, ReduceEngine::ChainTree);
-            (res.y[plan.ranges[i].clone()].to_vec(), res.stats)
-        });
-        let (slices, stats): (Vec<_>, Vec<_>) = runs.into_iter().unzip();
-        let y = crate::rcam::shard::merge_concat(&slices);
-        debug_assert_eq!(y.len(), self.n);
+    fn width(_data: &Csr) -> usize {
+        256
+    }
+
+    fn shard_rows(data: &Csr, range: &Range<usize>) -> usize {
+        data.row_nnz()[range.clone()].iter().sum()
+    }
+
+    fn load_range(
+        sm: &mut StorageManager,
+        array: &mut PrinsArray,
+        data: &Csr,
+        range: Range<usize>,
+    ) -> Self {
+        SpmvKernel::load(sm, array, &data.mask_rows(range))
+    }
+
+    fn load_stats(&self) -> &ExecStats {
+        &self.load_stats
+    }
+
+    fn load_payload_bytes(&self) -> u64 {
+        12 * self.nnz as u64 // (rowid, colid, value) per CSR nonzero
+    }
+
+    fn load_writes(&self) -> u64 {
+        4 * self.nnz as u64 // rowid, colid, sign, magnitude per nonzero
+    }
+
+    fn query_shard(
+        &self,
+        ctl: &mut Controller,
+        _sm: &StorageManager,
+        range: &Range<usize>,
+        params: &Vec<f32>,
+    ) -> (Vec<f32>, ExecStats) {
+        let res = self.query(ctl, params, ReduceEngine::ChainTree);
+        (res.y[range.clone()].to_vec(), res.stats)
+    }
+
+    fn query_msg_bytes(&self, range: &Range<usize>, _params: &Vec<f32>) -> (u64, u64) {
+        (4 * self.n as u64, 4 * range.len() as u64)
+    }
+
+    fn query_floor_cycles(&self, _array: &PrinsArray, _params: &Vec<f32>) -> u64 {
+        self.query_floor_cycles() // the inherent ChainTree floor
+    }
+
+    fn parse_params(&self, args: &[&str]) -> Result<Vec<f32>> {
+        let seed: u64 = args[0].parse()?;
+        let mut rng = Rng::seed_from(seed);
+        Ok((0..self.n).map(|_| rng.f32_range(-1.0, 1.0)).collect())
+    }
+
+    fn seeded_params(&self, q: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::seed_from(seed + 1 + q as u64);
+        (0..self.n).map(|_| rng.f32_range(-1.0, 1.0)).collect()
+    }
+}
+
+impl ShardMerge for SpmvKernel {
+    type Merged = SpmvOutput;
+
+    fn merge(outputs: Vec<Vec<f32>>, plan: &ShardPlan, _params: &Vec<f32>) -> SpmvOutput {
+        let y = merge_concat(&outputs);
+        debug_assert_eq!(y.len(), plan.total_rows());
         let checksum = y.iter().sum();
-        let mut msgs = Vec::with_capacity(2 * plan.shards());
-        for rng in &plan.ranges {
-            msgs.push(CMD_BYTES + 4 * self.n as u64); // command + x payload
-            msgs.push(4 * rng.len() as u64); // per-shard y-slice readback
-        }
-        ShardedSpmvResult {
-            y,
-            checksum,
-            rack: self.rack.finish(stats, &msgs),
-        }
+        SpmvOutput { y, checksum }
+    }
+
+    fn fields(merged: &SpmvOutput) -> String {
+        format!("checksum={:.4}", merged.checksum)
+    }
+
+    fn bits(merged: &SpmvOutput) -> Vec<u64> {
+        merged.y.iter().map(|v| v.to_bits() as u64).collect()
     }
 }
 
-/// Rack-sharded SpMV, one-shot: [`ResidentSpmv::load`] followed by a
-/// single [`ResidentSpmv::query`], whose per-shard stats windows and
-/// scatter merge it shares. The reported [`RackStats`] cover the query
-/// phase only (the load cost is on [`ResidentSpmv::load_report`]).
-pub fn spmv_sharded(rack: &PrinsRack, a: &Csr, x: &[f32]) -> ShardedSpmvResult {
-    ResidentSpmv::load(rack, a).query(x)
+fn load_args(rack: &PrinsRack, args: &[&str]) -> Result<Box<dyn ResidentDyn>> {
+    let [n, nnz, seed] = args else {
+        crate::error::bail!("usage: LOAD SPMV n nnz seed");
+    };
+    let (n, nnz, seed): (usize, usize, u64) = (n.parse()?, nnz.parse()?, seed.parse()?);
+    ensure!(
+        n > 0 && n <= 1 << 14 && nnz > 0 && nnz <= 1 << 18,
+        "size out of range"
+    );
+    let a = synth_csr(n, nnz, seed);
+    Ok(Box::new(Resident::<SpmvKernel>::load(rack, &a)))
+}
+
+fn synth_load(rack: &PrinsRack, n: usize, _dims: usize, seed: u64) -> Box<dyn ResidentDyn> {
+    let a = synth_csr(n, n * 8, seed);
+    Box::new(Resident::<SpmvKernel>::load(rack, &a))
+}
+
+fn one_shot(rack: &PrinsRack, args: &[&str]) -> Result<QueryOut> {
+    let [n, nnz, seed] = args else {
+        crate::error::bail!("usage: SPMV n nnz seed");
+    };
+    let (n, nnz, seed): (usize, usize, u64) = (n.parse()?, nnz.parse()?, seed.parse()?);
+    ensure!(
+        n > 0 && n <= 1 << 14 && nnz > 0 && nnz <= 1 << 18,
+        "size out of range"
+    );
+    let a = synth_csr(n, nnz, seed);
+    let mut rng = Rng::seed_from(seed + 1);
+    let x: Vec<f32> = (0..n).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+    Ok(one_shot_out::<SpmvKernel>(rack, &a, &x))
+}
+
+/// The SpMV kernel's registry entry.
+pub const ENTRY: KernelEntry = KernelEntry {
+    name: SpmvKernel::NAME,
+    verb: SpmvKernel::VERB,
+    query_arity: SpmvKernel::QUERY_ARITY,
+    one_shot_arity: 3,
+    load_usage: "LOAD SPMV n nnz seed",
+    query_usage: "SPMV id seed",
+    one_shot_usage: "SPMV n nnz seed",
+    dense: true,
+    write_free_queries: false,
+    flops: |n, _dims| 2.0 * (n * 8) as f64, // synth density: 8 nnz per row
+    load: load_args,
+    synth_load,
+    one_shot,
+};
+
+/// Deprecated pre-framework name for [`Resident<SpmvKernel>`].
+#[deprecated(note = "use Resident<SpmvKernel> (algorithms::kernel)")]
+pub type ResidentSpmv = Resident<SpmvKernel>;
+
+/// Rack-sharded SpMV, one-shot — a thin wrapper over the generic
+/// framework ([`sharded`]); the merged result is on `.merged`. Copies
+/// `x` once into the owned params vector (negligible next to the
+/// simulated load).
+pub fn spmv_sharded(rack: &PrinsRack, a: &Csr, x: &[f32]) -> Sharded<SpmvKernel> {
+    sharded::<SpmvKernel>(rack, a, &x.to_vec())
 }
 
 /// Quantized scalar baseline (bit-exact vs the associative fixed-point
@@ -586,14 +662,24 @@ mod tests {
         let mut rng = Rng::seed_from(16);
         let x2: Vec<f32> = (0..a.n).map(|_| rng.f32_range(-1.0, 1.0)).collect();
         let rack = PrinsRack::new(2);
-        let mut res = ResidentSpmv::load(&rack, &a);
+        let mut res = Resident::<SpmvKernel>::load(&rack, &a);
         assert!(res.load_report().total_cycles > 0, "load phase is charged");
         let one_shot = spmv_sharded(&rack, &a, &x);
         let qa = res.query(&x);
         let qb = res.query(&x2); // new x-vector on the same matrix
         let qc = res.query(&x); // back to x: bit-identical to the first
-        assert!(one_shot.y.iter().zip(&qa.y).all(|(p, q)| p.to_bits() == q.to_bits()));
-        assert!(qa.y.iter().zip(&qc.y).all(|(p, q)| p.to_bits() == q.to_bits()));
+        assert!(one_shot
+            .merged
+            .y
+            .iter()
+            .zip(&qa.merged.y)
+            .all(|(p, q)| p.to_bits() == q.to_bits()));
+        assert!(qa
+            .merged
+            .y
+            .iter()
+            .zip(&qc.merged.y)
+            .all(|(p, q)| p.to_bits() == q.to_bits()));
         assert_eq!(qa.rack.total_cycles, qb.rack.total_cycles, "query cost is value-independent");
         // single-device floor check
         let mut array = PrinsArray::single(a.nnz(), 256);

@@ -1,6 +1,6 @@
 //! `prins` command line: drive the PRINS system from a shell.
 //!
-//!   prins run <ed|dp|hist|spmv|bfs> [--n N] [--dims D] [--seed S]
+//!   prins run <kernel|bfs> [--n N] [--dims D] [--seed S]
 //!             [--workers W] [--shards S] [--queries Q]
 //!   prins validate            # PRINS vs golden XLA kernels (needs artifacts/)
 //!   prins serve [--bind ADDR] [--workers W] # TCP storage-appliance front-end
@@ -8,27 +8,35 @@
 //!   prins report <fig12|fig13|fig14|fig15|all> [--csv]
 //!   prins info                # device model + artifact inventory
 //!
+//! `run` is **registry-driven** (DESIGN.md §Kernel framework): every
+//! kernel in [`crate::algorithms::kernel::registry`] — ed, dp, hist,
+//! spmv, search, and whatever is registered next — is runnable by name
+//! with zero per-kernel code here. BFS is the one special case: it is
+//! not in the registry because its query writes the frontier back into
+//! the resident rows (see the bail messages below).
+//!
 //! `--shards S` (2 ≤ S ≤ 64, same bound as the server's `RACK` verb)
-//! runs ed/dp/hist/spmv on a [`PrinsRack`] of S shard devices with
+//! runs the kernel on a [`PrinsRack`] of S shard devices with
 //! cost-modeled host-side merging (DESIGN.md §Sharding) instead of one
 //! device.
 //!
-//! `--queries Q` (Q ≥ 2) switches ed/dp/hist/spmv to the load-once /
-//! query-many resident path (DESIGN.md §Resident datasets): the dataset
-//! is loaded once and Q queries with fresh parameters (new centers, new
-//! hyperplane, new bin edges, new x vector) run against the resident
-//! rows, printing the amortization table — load cost paid once, query
-//! floor per repetition.
+//! `--queries Q` (Q ≥ 2) switches to the load-once / query-many
+//! resident path (DESIGN.md §Resident datasets): the dataset is loaded
+//! once and Q queries with fresh parameters (new centers, new
+//! hyperplane, new bin edges, new x vector, new search range) run
+//! against the resident rows, printing the amortization table — load
+//! cost paid once, query floor per repetition.
 //!
 //! (Hand-rolled argument parsing; the vendored crate set has no clap.)
 
+use crate::algorithms::kernel::{self, KernelEntry, ResidentDyn};
 use crate::controller::Controller;
+use crate::error::{bail, Result};
 use crate::host::rack::{PrinsRack, RackStats};
 use crate::model::figures;
 use crate::rcam::{DeviceModel, ExecBackend, InterconnectModel, PrinsArray};
 use crate::storage::StorageManager;
 use crate::workloads::*;
-use crate::error::{bail, Result};
 
 fn flag(args: &[String], name: &str, default: u64) -> u64 {
     args.iter()
@@ -56,16 +64,18 @@ pub fn main() -> Result<()> {
         Some("report") => report(&args[1..]),
         Some("info") => info(),
         _ => {
+            let names: Vec<&str> = kernel::registry().iter().map(|e| e.name).collect();
             eprintln!("usage: prins <run|validate|serve|report|info> ...");
             eprintln!(
-                "  run <ed|dp|hist|spmv|bfs> [--n N] [--dims D] [--seed S] \
-                 [--workers W] [--shards S] [--queries Q]"
+                "  run <{}|bfs> [--n N] [--dims D] [--seed S] \
+                 [--workers W] [--shards S] [--queries Q]",
+                names.join("|")
             );
             eprintln!("  validate");
             eprintln!("  serve [--bind ADDR] [--workers W]");
             eprintln!("  report <fig12|fig13|fig14|fig15|all> [--csv] [--workers W]");
             eprintln!("  (--workers: simulator threads; default = cores, 1 = serial)");
-            eprintln!("  (--shards: run ed/dp/hist/spmv on an S-device rack; default 1)");
+            eprintln!("  (--shards: run any registered kernel on an S-device rack; default 1)");
             eprintln!(
                 "  (--queries: load once, run Q queries against the resident \
                  dataset; default 1)"
@@ -92,192 +102,101 @@ fn run(args: &[String]) -> Result<()> {
     }
     let backend = backend_flag(args);
     let dev = DeviceModel::default();
-    let rack = || {
-        PrinsRack::with_config(
-            shards,
-            DeviceModel::default(),
-            backend,
-            InterconnectModel::default(),
-        )
+    let name = args.first().map(|s| s.as_str()).unwrap_or("");
+
+    // BFS is deliberately outside the kernel registry: its query writes
+    // the frontier back into the resident rows, which breaks both
+    // framework contracts the flags below rely on.
+    if name == "bfs" {
+        if shards > 1 {
+            bail!(
+                "bfs cannot run sharded: it lacks the framework's read-only-query \
+                 contract — its query performs frontier write-back (each expansion \
+                 rewrites visited/visited_from/dist fields of the successor's rows), \
+                 and a shard-local frontier cannot see successors resident on other \
+                 shards, so no registry merge operator applies; run bfs with --shards 1"
+            );
+        }
+        if queries > 1 {
+            bail!(
+                "bfs cannot run resident (load-once/query-many): it lacks the \
+                 framework's write-free-query capability — frontier write-back \
+                 mutates the resident rows, so query #2 would start from query #1's \
+                 visited/dist state instead of a fresh graph; run bfs with --queries 1"
+            );
+        }
+        let g = synth_power_law(n, (dims as f64).max(2.0), 2.5, seed);
+        let mut array = PrinsArray::single(g.edges(), 128).with_backend(backend);
+        let mut sm = StorageManager::new(g.edges());
+        let kern = crate::algorithms::BfsKernel::load(&mut sm, &mut array, &g);
+        let mut ctl = Controller::new(array);
+        let res = kern.run(&mut ctl, 0);
+        println!(
+            "levels {} iterations {} reached {}",
+            res.levels,
+            res.iterations,
+            res.dist.iter().filter(|&&d| d != u32::MAX).count()
+        );
+        print_stats("bfs", &res.stats, &dev, res.iterations as f64);
+        return Ok(());
+    }
+
+    // every other kernel comes from the registry — zero per-kernel code
+    let Some(entry) = kernel::find_name(name) else {
+        let names: Vec<&str> = kernel::registry().iter().map(|e| e.name).collect();
+        bail!(
+            "unknown kernel {name:?} (registered: {}, plus bfs)",
+            names.join(", ")
+        );
     };
+    let rack = PrinsRack::with_config(
+        shards,
+        DeviceModel::default(),
+        backend,
+        InterconnectModel::default(),
+    );
+    let mut res = (entry.synth_load)(&rack, n, dims, seed);
     if queries > 1 {
-        return run_resident(args, n, dims, seed, queries, &rack(), &dev);
+        return run_resident(entry, res.as_mut(), queries, seed, &dev);
     }
-    match args.first().map(|s| s.as_str()) {
-        Some("ed") => {
-            let x = synth_samples(n, dims, 4, seed);
-            let c = synth_uniform(dims, seed + 1);
-            if shards > 1 {
-                let res = crate::algorithms::euclidean_sharded(&rack(), &x, n, dims, &c, 1, 5);
-                print_rack_stats("euclidean distance", &res.rack, &dev);
-                println!("nearest      : {:?}", res.nearest[0]);
-                return Ok(());
-            }
-            let layout = crate::algorithms::euclidean::EuclideanLayout::new(dims);
-            let mut array =
-                PrinsArray::single(n, layout.width as usize).with_backend(backend);
-            let mut sm = StorageManager::new(n);
-            let kern = crate::algorithms::EuclideanKernel::load(&mut sm, &mut array, &x, n, dims);
-            let mut ctl = Controller::new(array);
-            let res = kern.run(&mut ctl, &sm, &c, 1);
-            print_stats("euclidean distance", &res.stats, &dev, 3.0 * (n * dims) as f64);
-        }
-        Some("dp") => {
-            let x = synth_samples(n, dims, 4, seed);
-            let h = synth_uniform(dims, seed + 1);
-            if shards > 1 {
-                let res = crate::algorithms::dot_sharded(&rack(), &x, n, dims, &h);
-                print_rack_stats("dot product", &res.rack, &dev);
-                println!("checksum     : {:.4}", res.checksum);
-                return Ok(());
-            }
-            let layout = crate::algorithms::dot::DotLayout::new(dims);
-            let mut array =
-                PrinsArray::single(n, layout.width as usize).with_backend(backend);
-            let mut sm = StorageManager::new(n);
-            let kern = crate::algorithms::DotKernel::load(&mut sm, &mut array, &x, n, dims);
-            let mut ctl = Controller::new(array);
-            let res = kern.run(&mut ctl, &sm, &h);
-            print_stats("dot product", &res.stats, &dev, 2.0 * (n * dims) as f64);
-        }
-        Some("hist") => {
-            let xs = synth_hist_samples(n, seed);
-            if shards > 1 {
-                let res = crate::algorithms::histogram_sharded(&rack(), &xs);
-                print_rack_stats("histogram (256 bins)", &res.rack, &dev);
-                let top = res.hist.iter().enumerate().max_by_key(|(_, &v)| v).unwrap().0;
-                println!("top bin      : {top} ({} samples)", res.hist[top]);
-                return Ok(());
-            }
-            let mut array = PrinsArray::single(n, 40).with_backend(backend);
-            let mut sm = StorageManager::new(n);
-            let kern = crate::algorithms::HistogramKernel::load(&mut sm, &mut array, &xs);
-            let mut ctl = Controller::new(array);
-            let res = kern.run(&mut ctl);
-            print_stats("histogram (256 bins)", &res.stats, &dev, 2.0 * n as f64);
-        }
-        Some("spmv") => {
-            let a = synth_csr(n, n * 8, seed);
-            let mut rng = Rng::seed_from(seed + 1);
-            let x: Vec<f32> = (0..n).map(|_| rng.f32_range(-1.0, 1.0)).collect();
-            if shards > 1 {
-                let res = crate::algorithms::spmv_sharded(&rack(), &a, &x);
-                print_rack_stats("spmv", &res.rack, &dev);
-                println!("checksum     : {:.4}", res.checksum);
-                return Ok(());
-            }
-            let res = crate::algorithms::spmv_single(&a, &x, backend);
-            println!(
-                "phases: broadcast {} + multiply {} + reduce {} cycles",
-                res.broadcast_cycles, res.multiply_cycles, res.reduce_cycles
-            );
-            print_stats("spmv", &res.stats, &dev, 2.0 * a.nnz() as f64);
-        }
-        Some("bfs") => {
-            if shards > 1 {
-                bail!("bfs has no sharded variant yet (the frontier is global state)");
-            }
-            let g = synth_power_law(n, (dims as f64).max(2.0), 2.5, seed);
-            let mut array = PrinsArray::single(g.edges(), 128).with_backend(backend);
-            let mut sm = StorageManager::new(g.edges());
-            let kern = crate::algorithms::BfsKernel::load(&mut sm, &mut array, &g);
-            let mut ctl = Controller::new(array);
-            let res = kern.run(&mut ctl, 0);
-            println!(
-                "levels {} iterations {} reached {}",
-                res.levels,
-                res.iterations,
-                res.dist.iter().filter(|&&d| d != u32::MAX).count()
-            );
-            print_stats("bfs", &res.stats, &dev, res.iterations as f64);
-        }
-        other => bail!("unknown kernel {other:?}"),
+    let out = res.query_seeded(0, seed);
+    if shards > 1 {
+        print_rack_stats(entry.name, &out.rack, &dev);
+    } else {
+        print_stats(
+            entry.name,
+            &out.rack.shard_stats[0],
+            &dev,
+            (entry.flops)(n, dims),
+        );
     }
+    println!("result       : {}", out.fields);
     Ok(())
 }
 
-/// `run --queries Q` (Q ≥ 2): the load-once / query-many resident path.
-/// Loads the dataset onto the rack once, runs Q queries with fresh
-/// parameters per query (new centers / hyperplane / bin edges / x
-/// vector), and prints the amortization table.
+/// `run --queries Q` (Q ≥ 2): the load-once / query-many resident path,
+/// generic over the registry. The dataset is already loaded; run Q
+/// queries with fresh parameters per query (the kernel's seeded
+/// parameter stream) and print the amortization table.
 fn run_resident(
-    args: &[String],
-    n: usize,
-    dims: usize,
-    seed: u64,
+    entry: &KernelEntry,
+    res: &mut dyn ResidentDyn,
     queries: usize,
-    rack: &PrinsRack,
+    seed: u64,
     dev: &DeviceModel,
 ) -> Result<()> {
-    use crate::algorithms::{ResidentDot, ResidentEuclidean, ResidentHistogram, ResidentSpmv};
+    let load: RackStats = res.load_report().clone();
+    let mut energy_j = load.energy_j;
     let mut qcycles = Vec::with_capacity(queries);
-    let (name, load, energy_j, summary): (&str, RackStats, f64, String) =
-        match args.first().map(|s| s.as_str()) {
-            Some("ed") => {
-                let x = synth_samples(n, dims, 4, seed);
-                let mut res = ResidentEuclidean::load(rack, &x, n, dims);
-                let mut energy = res.load_report().energy_j;
-                let mut checksum = 0.0f32;
-                for q in 0..queries {
-                    let c = synth_uniform(dims, seed + 1 + q as u64);
-                    let r = res.query(&c, 1, 5);
-                    qcycles.push(r.rack.total_cycles);
-                    energy += r.rack.energy_j;
-                    checksum = r.checksum;
-                }
-                let load = res.load_report().clone();
-                ("euclidean distance", load, energy, format!("checksum(last): {checksum:.4}"))
-            }
-            Some("dp") => {
-                let x = synth_samples(n, dims, 4, seed);
-                let mut res = ResidentDot::load(rack, &x, n, dims);
-                let mut energy = res.load_report().energy_j;
-                let mut checksum = 0.0f32;
-                for q in 0..queries {
-                    let h = synth_uniform(dims, seed + 1 + q as u64);
-                    let r = res.query(&h);
-                    qcycles.push(r.rack.total_cycles);
-                    energy += r.rack.energy_j;
-                    checksum = r.checksum;
-                }
-                let load = res.load_report().clone();
-                ("dot product", load, energy, format!("checksum(last): {checksum:.4}"))
-            }
-            Some("hist") => {
-                let xs = synth_hist_samples(n, seed);
-                let mut res = ResidentHistogram::load(rack, &xs);
-                let mut energy = res.load_report().energy_j;
-                let mut top = 0usize;
-                for q in 0..queries {
-                    // rotate the bin window: fresh bin edges per query
-                    let lo = [24u16, 16, 8, 0][q % 4];
-                    let r = res.query_at(lo);
-                    qcycles.push(r.rack.total_cycles);
-                    energy += r.rack.energy_j;
-                    top = r.hist.iter().enumerate().max_by_key(|(_, &v)| v).unwrap().0;
-                }
-                let load = res.load_report().clone();
-                ("histogram (256 bins)", load, energy, format!("top bin (last): {top}"))
-            }
-            Some("spmv") => {
-                let a = synth_csr(n, n * 8, seed);
-                let mut res = ResidentSpmv::load(rack, &a);
-                let mut energy = res.load_report().energy_j;
-                let mut checksum = 0.0f32;
-                for q in 0..queries {
-                    let mut rng = Rng::seed_from(seed + 1 + q as u64);
-                    let x: Vec<f32> = (0..n).map(|_| rng.f32_range(-1.0, 1.0)).collect();
-                    let r = res.query(&x);
-                    qcycles.push(r.rack.total_cycles);
-                    energy += r.rack.energy_j;
-                    checksum = r.checksum;
-                }
-                let load = res.load_report().clone();
-                ("spmv", load, energy, format!("checksum(last): {checksum:.4}"))
-            }
-            Some("bfs") => bail!("bfs has no resident query path yet (the frontier mutates storage)"),
-            other => bail!("unknown kernel {other:?}"),
-        };
+    let mut last_fields = String::new();
+    for q in 0..queries {
+        let r = res.query_seeded(q, seed);
+        qcycles.push(r.rack.total_cycles);
+        energy_j += r.rack.energy_j;
+        last_fields = r.fields;
+    }
+    let name = entry.name;
+    let summary = format!("result (last): {last_fields}");
     let qsum: u64 = qcycles.iter().sum();
     let per_query = qsum as f64 / queries as f64;
     let amortized = (load.total_cycles + qsum) as f64 / queries as f64;
@@ -387,11 +306,13 @@ fn serve(args: &[String]) -> Result<()> {
     let server = crate::host::server::Server::spawn_with(&bind, backend)?;
     println!("prins storage appliance listening on {}", server.addr);
     println!("simulator backend: {backend:?}");
+    let one_shots: Vec<&str> = kernel::registry().iter().map(|e| e.one_shot_usage).collect();
+    let queries: Vec<&str> = kernel::registry().iter().map(|e| e.query_usage).collect();
     println!(
-        "protocol: PING | RACK [n] | LOAD kind ... | DATASETS | DROP id | \
-         HIST n seed | DP n dims seed | ED n dims k seed | SPMV n nnz seed \
-         | HIST id | DP id seed | ED id k seed | SPMV id seed | QUIT  \
-         (spec: docs/PROTOCOL.md)"
+        "protocol: PING | RACK [n] | LOAD kind ... | DATASETS | DROP id | {} | {} | QUIT  \
+         (spec: docs/PROTOCOL.md)",
+        one_shots.join(" | "),
+        queries.join(" | ")
     );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));

@@ -144,8 +144,8 @@ impl PrinsRack {
     /// builds shard state from a row-range plan (the load phase),
     /// `query_shards` revisits state that is already resident — each slot
     /// typically holds a shard's controller + loaded kernel, kept alive
-    /// across queries by a `Resident*` wrapper (e.g.
-    /// [`crate::algorithms::ResidentHistogram`]).
+    /// across queries by the generic [`crate::algorithms::Resident`]
+    /// wrapper of the kernel framework.
     pub fn query_shards<S, R, F>(&self, slots: &mut [S], f: F) -> Vec<R>
     where
         S: Send,

@@ -8,12 +8,15 @@
 //! `docs/PROTOCOL.md`; keep that file authoritative. Summary:
 //!
 //!   PING | RACK \[n\] | LOAD | DATASETS | DROP | HIST | DP | ED | SPMV
-//!   | QUIT
+//!   | SEARCH | QUIT
 //!
-//! Kernel verbs run one-shot on a single device by default; after
-//! `RACK <n>` the same verbs execute sharded over an `n`-device
-//! [`PrinsRack`] (a per-connection session setting) and replies gain
-//! `shards=`/`link_bytes=` fields.
+//! Every kernel verb is dispatched through the **kernel registry**
+//! ([`crate::algorithms::kernel::registry`]): this module contains zero
+//! per-kernel code — a new registered workload (e.g. SEARCH) gets its
+//! `LOAD` form, its dataset-id query form and its one-shot form without
+//! touching the server. One-shot verbs load + query on a rack sized by
+//! the session (`RACK <n>`, default 1 device) and report query-phase
+//! stats; with ≥ 2 shards replies gain `shards=`/`link_bytes=` fields.
 //!
 //! **Resident datasets** (load-once / query-many, DESIGN.md §Resident
 //! datasets): `LOAD <kind> ...` synthesizes a dataset server-side, loads
@@ -28,16 +31,9 @@
 //! tokio — documented in Cargo.toml.)
 
 use super::rack::{PrinsRack, RackStats};
-use super::PrinsDevice;
-use crate::algorithms::{
-    dot_sharded, euclidean_sharded, histogram_sharded, spmv_sharded, spmv_single,
-    ResidentDot, ResidentEuclidean, ResidentHistogram, ResidentSpmv,
-};
-use crate::controller::kernels::KernelId;
-use crate::controller::registers::Status;
-use crate::rcam::{DeviceModel, ExecBackend, InterconnectModel};
-use crate::workloads::{synth_csr, synth_hist_samples, synth_samples, synth_uniform, Rng};
+use crate::algorithms::kernel::{find_verb, registry, ResidentDyn};
 use crate::error::{bail, ensure, Result};
+use crate::rcam::{DeviceModel, ExecBackend, InterconnectModel};
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -155,55 +151,12 @@ impl Drop for Server {
 /// simulated shard arrays; `DROP` frees slots).
 const MAX_DATASETS: usize = 16;
 
-/// One resident dataset of a session: the rack-resident loaded kernel
-/// plus the synthesis metadata `DATASETS` reports.
-enum ResidentDataset {
-    /// `LOAD HIST` — re-binnable histogram samples.
-    Hist(ResidentHistogram),
-    /// `LOAD DP` — vectors queried against fresh hyperplanes.
-    Dot { res: ResidentDot, dims: usize },
-    /// `LOAD ED` — samples queried against fresh center sets.
-    Ed { res: ResidentEuclidean, dims: usize },
-    /// `LOAD SPMV` — a CSR matrix queried against fresh x vectors.
-    Spmv(ResidentSpmv),
-}
-
-impl ResidentDataset {
-    fn kind(&self) -> &'static str {
-        match self {
-            ResidentDataset::Hist(_) => "hist",
-            ResidentDataset::Dot { .. } => "dp",
-            ResidentDataset::Ed { .. } => "ed",
-            ResidentDataset::Spmv(_) => "spmv",
-        }
-    }
-
-    fn load_report(&self) -> &RackStats {
-        match self {
-            ResidentDataset::Hist(r) => r.load_report(),
-            ResidentDataset::Dot { res, .. } => res.load_report(),
-            ResidentDataset::Ed { res, .. } => res.load_report(),
-            ResidentDataset::Spmv(r) => r.load_report(),
-        }
-    }
-}
-
-/// Registry entry: the resident data plus the figures `DATASETS` lists.
-struct DatasetEntry {
-    data: ResidentDataset,
-    /// Dataset rows (samples / vectors / matrix dimension).
-    n: usize,
-    /// Shard count the dataset was loaded with (fixed at `LOAD` time;
-    /// later `RACK` changes affect only future loads).
-    shards: usize,
-}
-
 /// Per-connection protocol state: the shard count selected by `RACK <n>`
 /// (1 = single-device, the default) and the resident-dataset registry
 /// (`LOAD`/`DATASETS`/`DROP`); see `docs/PROTOCOL.md` §Sessions.
 struct Session {
     shards: usize,
-    datasets: BTreeMap<u64, DatasetEntry>,
+    datasets: BTreeMap<u64, Box<dyn ResidentDyn>>,
     next_id: u64,
 }
 
@@ -274,34 +227,77 @@ fn rack_for(sess: &Session, backend: ExecBackend) -> PrinsRack {
     )
 }
 
-/// Shared grammar of every sharded kernel reply (docs/PROTOCOL.md): rack
-/// cycle/energy figures, then the verb-specific fields, then the rack
-/// session fields — one place to change if the reply format evolves.
-fn rack_ok(rs: &RackStats, fields: &str) -> String {
-    format!(
-        "OK cycles={} energy_pj={:.1} {fields} shards={} link_bytes={}",
-        rs.total_cycles,
-        rs.energy_j * 1e12,
-        rs.shards,
-        rs.link_bytes
-    )
+/// Key=value reply-line builder: the single place the `OK …` grammar is
+/// emitted (docs/PROTOCOL.md §Reply grammar). Every verb — including
+/// every registry-driven kernel verb — assembles its reply through this
+/// builder, so the `query_ok`/`load_fields` grammar cannot drift between
+/// verbs or kernels.
+struct Reply {
+    line: String,
+}
+
+impl Reply {
+    /// Start an `OK` reply.
+    fn ok() -> Reply {
+        Reply { line: "OK".into() }
+    }
+
+    /// Append one `key=value` field.
+    fn kv(mut self, key: &str, value: impl std::fmt::Display) -> Reply {
+        self.line.push(' ');
+        self.line.push_str(key);
+        self.line.push('=');
+        self.line.push_str(&value.to_string());
+        self
+    }
+
+    /// Append pre-formatted fields (a kernel's verb-specific
+    /// `fields` string from the registry formatter). Empty = no-op.
+    fn fields(mut self, fields: &str) -> Reply {
+        if !fields.is_empty() {
+            self.line.push(' ');
+            self.line.push_str(fields);
+        }
+        self
+    }
+
+    /// The finished reply line.
+    fn finish(self) -> String {
+        self.line
+    }
+}
+
+/// Picojoule formatting of the `energy_pj=` field (one decimal, like
+/// every reply since PR 3).
+fn pj(energy_j: f64) -> String {
+    format!("{:.1}", energy_j * 1e12)
+}
+
+/// Stats prefix + kernel fields of every kernel reply: single-device
+/// grammar (per-shard device stats, no link charge) when the run used
+/// one shard, rack grammar (`shards=`/`link_bytes=`) otherwise.
+fn stats_reply(rs: &RackStats, fields: &str) -> Reply {
+    if rs.shards >= 2 {
+        Reply::ok()
+            .kv("cycles", rs.total_cycles)
+            .kv("energy_pj", pj(rs.energy_j))
+            .fields(fields)
+            .kv("shards", rs.shards)
+            .kv("link_bytes", rs.link_bytes)
+    } else {
+        let st = &rs.shard_stats[0];
+        Reply::ok()
+            .kv("cycles", st.cycles)
+            .kv("energy_pj", pj(st.energy_j(&DeviceModel::default())))
+            .fields(fields)
+    }
 }
 
 /// Reply line of a resident-dataset query (docs/PROTOCOL.md §Resident
-/// datasets): single-device grammar when the dataset was loaded
-/// unsharded (per-shard device stats, no link charge), rack grammar
-/// otherwise — both with the trailing `dataset=` marker.
+/// datasets): the shared stats grammar with the trailing `dataset=`
+/// marker.
 fn query_ok(rs: &RackStats, fields: &str, id: u64) -> String {
-    if rs.shards >= 2 {
-        format!("{} dataset={id}", rack_ok(rs, fields))
-    } else {
-        let st = &rs.shard_stats[0];
-        format!(
-            "OK cycles={} energy_pj={:.1} {fields} dataset={id}",
-            st.cycles,
-            st.energy_j(&DeviceModel::default()) * 1e12
-        )
-    }
+    stats_reply(rs, fields).kv("dataset", id).finish()
 }
 
 /// `load_cycles=` (and, when sharded, `load_link_bytes=`) fields of a
@@ -317,10 +313,19 @@ fn load_fields(rs: &RackStats) -> String {
     }
 }
 
-/// `LOAD <kind> ...`: synthesize a dataset server-side from `(sizes,
-/// seed)`, load it once onto a rack with the session's current shard
-/// count, and register it under a fresh id. Every subsequent dataset-id
-/// kernel verb reuses the resident rows and charges only query cycles.
+/// The `LOAD` usage string, assembled from the registry (a new kernel's
+/// `LOAD` form appears here without touching the server).
+fn load_usage() -> String {
+    let forms: Vec<&str> = registry().iter().map(|e| e.load_usage).collect();
+    format!("usage: {}", forms.join(" | "))
+}
+
+/// `LOAD <KIND> ...`: synthesize a dataset server-side via the kind's
+/// registry entry, load it once onto a rack with the session's current
+/// shard count, and register it under a fresh id. Every subsequent
+/// dataset-id kernel verb reuses the resident rows and charges only
+/// query cycles. The shard layout is fixed at `LOAD` time; later `RACK`
+/// changes affect only future loads.
 fn load_dataset(
     args: &[&str],
     backend: ExecBackend,
@@ -331,151 +336,59 @@ fn load_dataset(
         "dataset limit reached (max {})",
         MAX_DATASETS
     );
-    let rack = rack_for(sess, backend);
-    let entry = match args {
-        ["HIST", n, seed] => {
-            let (n, seed): (usize, u64) = (n.parse()?, seed.parse()?);
-            ensure!(n > 0 && n <= 1 << 20, "n out of range");
-            let xs = synth_hist_samples(n, seed);
-            DatasetEntry {
-                data: ResidentDataset::Hist(ResidentHistogram::load(&rack, &xs)),
-                n,
-                shards: sess.shards,
-            }
-        }
-        ["DP", n, dims, seed] => {
-            let (n, dims, seed): (usize, usize, u64) =
-                (n.parse()?, dims.parse()?, seed.parse()?);
-            ensure!(
-                n > 0 && n <= 1 << 16 && dims > 0 && dims <= 16,
-                "size out of range"
-            );
-            let x = synth_samples(n, dims, 4, seed);
-            DatasetEntry {
-                data: ResidentDataset::Dot {
-                    res: ResidentDot::load(&rack, &x, n, dims),
-                    dims,
-                },
-                n,
-                shards: sess.shards,
-            }
-        }
-        ["ED", n, dims, seed] => {
-            let (n, dims, seed): (usize, usize, u64) =
-                (n.parse()?, dims.parse()?, seed.parse()?);
-            ensure!(
-                n > 0 && n <= 1 << 16 && dims > 0 && dims <= 8,
-                "size out of range"
-            );
-            // 4 latent clusters, like the DP synthesis (the one-shot ED
-            // verb couples cluster count to its k query argument instead)
-            let x = synth_samples(n, dims, 4, seed);
-            DatasetEntry {
-                data: ResidentDataset::Ed {
-                    res: ResidentEuclidean::load(&rack, &x, n, dims),
-                    dims,
-                },
-                n,
-                shards: sess.shards,
-            }
-        }
-        ["SPMV", n, nnz, seed] => {
-            let (n, nnz, seed): (usize, usize, u64) =
-                (n.parse()?, nnz.parse()?, seed.parse()?);
-            ensure!(
-                n > 0 && n <= 1 << 14 && nnz > 0 && nnz <= 1 << 18,
-                "size out of range"
-            );
-            let a = synth_csr(n, nnz, seed);
-            DatasetEntry {
-                data: ResidentDataset::Spmv(ResidentSpmv::load(&rack, &a)),
-                n,
-                shards: sess.shards,
-            }
-        }
-        _ => bail!(
-            "usage: LOAD HIST n seed | LOAD DP n dims seed | \
-             LOAD ED n dims seed | LOAD SPMV n nnz seed"
-        ),
+    // kinds are case-sensitive wire verbs, exactly like the kernel verbs
+    let Some(entry) = args.first().and_then(|kind| find_verb(kind)) else {
+        bail!("{}", load_usage());
     };
+    let rack = rack_for(sess, backend);
+    let data = (entry.load)(&rack, &args[1..])?;
     let id = sess.next_id;
     sess.next_id += 1;
-    let reply = format!(
-        "OK id={id} kind={} n={} shards={} {}",
-        entry.data.kind(),
-        entry.n,
-        entry.shards,
-        load_fields(entry.data.load_report())
-    );
-    sess.datasets.insert(id, entry);
+    let reply = Reply::ok()
+        .kv("id", id)
+        .kv("kind", data.name())
+        .kv("n", data.rows())
+        .kv("shards", data.load_report().shards)
+        .fields(&load_fields(data.load_report()))
+        .finish();
+    sess.datasets.insert(id, data);
     Ok(Some(reply))
 }
 
-/// Dataset-id kernel query (`HIST <id>` / `DP <id> seed` / `ED <id> k
-/// seed` / `SPMV <id> seed`): run one query phase against the session's
-/// resident dataset — no reload, query cycles only.
-fn query_dataset(
+/// A registered kernel verb, dispatched by arity (docs/PROTOCOL.md):
+/// `<VERB> id params…` (the dataset-id query form) when the arg count
+/// matches the kernel's query arity + 1, `<VERB> …` (the one-shot form)
+/// when it matches the one-shot arity. No per-kernel code: parsing,
+/// synthesis and reply fields all come from the registry entry.
+fn kernel_verb(
+    verb: &str,
+    args: &[&str],
+    backend: ExecBackend,
     sess: &mut Session,
-    expect: &'static str,
-    id: &str,
-    params: &[&str],
 ) -> Result<Option<String>> {
-    let id: u64 = id.parse()?;
-    let Some(e) = sess.datasets.get_mut(&id) else {
-        bail!("unknown dataset {id}");
+    let Some(entry) = find_verb(verb) else {
+        bail!("unknown command");
     };
-    ensure!(
-        e.data.kind() == expect,
-        "dataset {id} is kind {}, not {}",
-        e.data.kind(),
-        expect
-    );
-    match (&mut e.data, params) {
-        (ResidentDataset::Hist(res), []) => {
-            let r = res.query();
-            let top = r.hist.iter().enumerate().max_by_key(|(_, &v)| v).unwrap().0;
-            let total: u64 = r.hist.iter().sum();
-            Ok(Some(query_ok(
-                &r.rack,
-                &format!("top_bin={top} total={total}"),
-                id,
-            )))
-        }
-        (ResidentDataset::Dot { res, dims }, [seed]) => {
-            let seed: u64 = seed.parse()?;
-            let h = synth_uniform(*dims, seed);
-            let r = res.query(&h);
-            Ok(Some(query_ok(
-                &r.rack,
-                &format!("checksum={:.4}", r.checksum),
-                id,
-            )))
-        }
-        (ResidentDataset::Ed { res, dims }, [k, seed]) => {
-            let (k, seed): (usize, u64) = (k.parse()?, seed.parse()?);
-            ensure!(k > 0 && k <= 16, "k out of range");
-            let centers = synth_uniform(k * *dims, seed);
-            let r = res.query(&centers, k, 1);
-            Ok(Some(query_ok(
-                &r.rack,
-                &format!("checksum={:.4}", r.checksum),
-                id,
-            )))
-        }
-        (ResidentDataset::Spmv(res), [seed]) => {
-            let seed: u64 = seed.parse()?;
-            let mut rng = Rng::seed_from(seed);
-            let x: Vec<f32> = (0..res.n).map(|_| rng.f32_range(-1.0, 1.0)).collect();
-            let r = res.query(&x);
-            Ok(Some(query_ok(
-                &r.rack,
-                &format!("checksum={:.4}", r.checksum),
-                id,
-            )))
-        }
-        // unreachable: the kind guard above pins the variant and the
-        // dispatch arm pins the param arity
-        (d, _) => bail!("dataset {id} ({}) given a malformed query", d.kind()),
+    if args.len() == entry.query_arity + 1 {
+        // dataset-id query: no reload, query cycles only
+        let id: u64 = args[0].parse()?;
+        let Some(data) = sess.datasets.get_mut(&id) else {
+            bail!("unknown dataset {id}");
+        };
+        ensure!(
+            data.name() == entry.name,
+            "dataset {id} is kind {}, not {}",
+            data.name(),
+            entry.name
+        );
+        let out = data.query_args(&args[1..])?;
+        Ok(Some(query_ok(&out.rack, &out.fields, id)))
+    } else if args.len() == entry.one_shot_arity {
+        let rack = rack_for(sess, backend);
+        let out = (entry.one_shot)(&rack, args)?;
+        Ok(Some(stats_reply(&out.rack, &out.fields).finish()))
+    } else {
+        bail!("usage: {} | {}", entry.one_shot_usage, entry.query_usage);
     }
 }
 
@@ -484,7 +397,7 @@ fn dispatch(line: &str, backend: ExecBackend, sess: &mut Session) -> Result<Opti
     match parts.as_slice() {
         ["PING"] => Ok(Some("PONG".into())),
         ["QUIT"] => Ok(None),
-        ["RACK"] => Ok(Some(format!("OK shards={}", sess.shards))),
+        ["RACK"] => Ok(Some(Reply::ok().kv("shards", sess.shards).finish())),
         ["RACK", n] => {
             let n: usize = n.parse()?;
             ensure!(
@@ -493,155 +406,27 @@ fn dispatch(line: &str, backend: ExecBackend, sess: &mut Session) -> Result<Opti
                 crate::rcam::shard::MAX_SHARDS
             );
             sess.shards = n;
-            Ok(Some(format!("OK shards={n}")))
+            Ok(Some(Reply::ok().kv("shards", n).finish()))
         }
         // ----- resident-dataset registry (docs/PROTOCOL.md) -------------
         ["LOAD", rest @ ..] => load_dataset(rest, backend, sess),
         ["DATASETS"] => {
-            let mut reply = format!("OK count={}", sess.datasets.len());
+            let mut reply = Reply::ok().kv("count", sess.datasets.len());
             for (id, e) in &sess.datasets {
-                reply.push_str(&format!(
-                    " ds={id}:{}:{}:{}",
-                    e.data.kind(),
-                    e.n,
-                    e.shards
-                ));
+                reply = reply.kv(
+                    "ds",
+                    format!("{id}:{}:{}:{}", e.name(), e.rows(), e.load_report().shards),
+                );
             }
-            Ok(Some(reply))
+            Ok(Some(reply.finish()))
         }
         ["DROP", id] => {
             let id: u64 = id.parse()?;
             ensure!(sess.datasets.remove(&id).is_some(), "unknown dataset {id}");
-            Ok(Some(format!("OK dropped={id}")))
+            Ok(Some(Reply::ok().kv("dropped", id).finish()))
         }
-        // ----- dataset-id query forms (arity-distinguished from the
-        // one-shot forms below) ------------------------------------------
-        ["HIST", id] => query_dataset(sess, "hist", id, &[]),
-        ["DP", id, seed] => query_dataset(sess, "dp", id, &[seed]),
-        ["ED", id, k, seed] => query_dataset(sess, "ed", id, &[k, seed]),
-        ["SPMV", id, seed] => query_dataset(sess, "spmv", id, &[seed]),
-        ["HIST", n, seed] => {
-            let (n, seed): (usize, u64) = (n.parse()?, seed.parse()?);
-            ensure!(n > 0 && n <= 1 << 20, "n out of range");
-            let xs = synth_hist_samples(n, seed);
-            if sess.shards > 1 {
-                let res = histogram_sharded(&rack_for(sess, backend), &xs);
-                let top = res.hist.iter().enumerate().max_by_key(|(_, &v)| v).unwrap().0;
-                let total: u64 = res.hist.iter().sum();
-                return Ok(Some(rack_ok(
-                    &res.rack,
-                    &format!("top_bin={top} total={total}"),
-                )));
-            }
-            let dev = PrinsDevice::with_config(n, 64, DeviceModel::default(), backend);
-            dev.load_samples_for_histogram(&xs);
-            if dev.run_kernel(KernelId::Histogram, &[], &[]) != Status::Done {
-                bail!("kernel error");
-            }
-            let o = dev.take_outputs();
-            let top = o.u64s.iter().enumerate().max_by_key(|(_, &v)| v).unwrap().0;
-            let total: u64 = o.u64s.iter().sum();
-            Ok(Some(format!(
-                "OK cycles={} energy_pj={:.1} top_bin={} total={}",
-                o.cycles,
-                o.energy_j * 1e12,
-                top,
-                total
-            )))
-        }
-        ["DP", n, dims, seed] => {
-            let (n, dims, seed): (usize, usize, u64) =
-                (n.parse()?, dims.parse()?, seed.parse()?);
-            ensure!(
-                n > 0 && n <= 1 << 16 && dims > 0 && dims <= 16,
-                "size out of range"
-            );
-            let x = synth_samples(n, dims, 4, seed);
-            let h = synth_uniform(dims, seed + 1);
-            if sess.shards > 1 {
-                let res = dot_sharded(&rack_for(sess, backend), &x, n, dims, &h);
-                return Ok(Some(rack_ok(
-                    &res.rack,
-                    &format!("checksum={:.4}", res.checksum),
-                )));
-            }
-            let layout = crate::algorithms::dot::DotLayout::new(dims);
-            let dev =
-                PrinsDevice::with_config(n, layout.width as usize, DeviceModel::default(), backend);
-            dev.load_vectors_for_dot(&x, n, dims);
-            let hp: Vec<f64> = h.iter().map(|&v| v as f64).collect();
-            if dev.run_kernel(KernelId::DotProduct, &[], &hp) != Status::Done {
-                bail!("kernel error");
-            }
-            let o = dev.take_outputs();
-            let checksum: f32 = o.f32s.iter().sum();
-            Ok(Some(format!(
-                "OK cycles={} energy_pj={:.1} checksum={:.4}",
-                o.cycles,
-                o.energy_j * 1e12,
-                checksum
-            )))
-        }
-        ["ED", n, dims, k, seed] => {
-            let (n, dims, k, seed): (usize, usize, usize, u64) =
-                (n.parse()?, dims.parse()?, k.parse()?, seed.parse()?);
-            ensure!(
-                n > 0 && n <= 1 << 16 && dims > 0 && dims <= 8 && k > 0 && k <= 16,
-                "size out of range"
-            );
-            let x = synth_samples(n, dims, k, seed);
-            let centers = synth_uniform(k * dims, seed + 1);
-            if sess.shards > 1 {
-                let res =
-                    euclidean_sharded(&rack_for(sess, backend), &x, n, dims, &centers, k, 1);
-                return Ok(Some(rack_ok(
-                    &res.rack,
-                    &format!("checksum={:.4}", res.checksum),
-                )));
-            }
-            let layout = crate::algorithms::euclidean::EuclideanLayout::new(dims);
-            let dev =
-                PrinsDevice::with_config(n, layout.width as usize, DeviceModel::default(), backend);
-            dev.load_samples_for_euclidean(&x, n, dims);
-            let cp: Vec<f64> = centers.iter().map(|&v| v as f64).collect();
-            if dev.run_kernel(KernelId::EuclideanDistance, &[k as u64], &cp) != Status::Done {
-                bail!("kernel error");
-            }
-            let o = dev.take_outputs();
-            let checksum: f32 = o.f32s.iter().sum();
-            Ok(Some(format!(
-                "OK cycles={} energy_pj={:.1} checksum={:.4}",
-                o.cycles,
-                o.energy_j * 1e12,
-                checksum
-            )))
-        }
-        ["SPMV", n, nnz, seed] => {
-            let (n, nnz, seed): (usize, usize, u64) =
-                (n.parse()?, nnz.parse()?, seed.parse()?);
-            ensure!(
-                n > 0 && n <= 1 << 14 && nnz > 0 && nnz <= 1 << 18,
-                "size out of range"
-            );
-            let a = synth_csr(n, nnz, seed);
-            let mut rng = Rng::seed_from(seed + 1);
-            let x: Vec<f32> = (0..n).map(|_| rng.f32_range(-1.0, 1.0)).collect();
-            if sess.shards > 1 {
-                let res = spmv_sharded(&rack_for(sess, backend), &a, &x);
-                return Ok(Some(rack_ok(
-                    &res.rack,
-                    &format!("checksum={:.4}", res.checksum),
-                )));
-            }
-            let res = spmv_single(&a, &x, backend);
-            let checksum: f32 = res.y.iter().sum();
-            Ok(Some(format!(
-                "OK cycles={} energy_pj={:.1} checksum={:.4}",
-                res.stats.cycles,
-                res.stats.energy_j(&DeviceModel::default()) * 1e12,
-                checksum
-            )))
-        }
+        // ----- kernel verbs: registry-driven, arity-dispatched ----------
+        [verb, args @ ..] => kernel_verb(verb, args, backend, sess),
         _ => bail!("unknown command"),
     }
 }

@@ -1,10 +1,16 @@
 //! Minimal self-timing harness for the `harness = false` benches
 //! (criterion is not in the vendored crate set): warmup + N timed
 //! iterations, reporting min/mean — plus the shared bench surface:
-//! `--workers`/`--rows` argument parsing and the machine-readable
+//! `--workers`/`--rows` argument parsing, the machine-readable
 //! `BENCH_*.json` result files that seed the perf trajectory
-//! (DESIGN.md §6).
+//! (DESIGN.md §6), and the **registry-driven sweep drivers**
+//! ([`rack_registry_points`], [`resident_registry_points`]) that run
+//! every kernel in [`crate::algorithms::kernel::registry`] — a newly
+//! registered kernel joins the rack-scaling and resident-amortization
+//! benches without touching any bench code.
 
+use crate::algorithms::kernel::registry;
+use crate::host::rack::PrinsRack;
 use crate::rcam::ExecBackend;
 use std::time::{Duration, Instant};
 
@@ -299,9 +305,164 @@ pub fn write_resident_json(
     Ok(path)
 }
 
+// ---------------------------------------------------------------------------
+// Registry-driven sweep drivers (rack_scaling / resident_queries benches)
+// ---------------------------------------------------------------------------
+
+/// One kernel's measured point of a registry-driven rack sweep: the
+/// record for `BENCH_rack.json` plus the canonical bit encoding of the
+/// merged result (the bench's `--verify` bit-equality gate compares it
+/// across shard counts).
+pub struct RackPoint {
+    /// Kernel registry name.
+    pub name: &'static str,
+    /// The JSON record.
+    pub record: RackRecord,
+    /// Canonical bits of the merged result ([`crate::algorithms::ShardMerge::bits`]).
+    pub bits: Vec<u64>,
+}
+
+/// Dataset rows a sweep gives `entry`: dense (microcoded) workloads
+/// simulate every pass over every row per query, so they cap at
+/// `dense_cap`; compare-only workloads (hist, search) take `rows` whole.
+fn sweep_rows(dense: bool, rows: usize, dense_cap: usize) -> usize {
+    if dense {
+        rows.min(dense_cap)
+    } else {
+        rows
+    }
+}
+
+/// Run every registered kernel once (load + a single query — the
+/// framework one-shot) on `rack` and return one [`RackPoint`] per
+/// kernel, printing the per-point summary line. `seed` fixes both the
+/// synthesized dataset and the query parameters, so points are
+/// comparable across shard counts.
+pub fn rack_registry_points(
+    rack: &PrinsRack,
+    rows: usize,
+    dense_cap: usize,
+    dims: usize,
+    seed: u64,
+) -> Vec<RackPoint> {
+    let shards = rack.n_shards();
+    let mut points = Vec::new();
+    for entry in registry() {
+        let nrows = sweep_rows(entry.dense, rows, dense_cap);
+        let t0 = Instant::now();
+        let mut res = (entry.synth_load)(rack, nrows, dims, seed);
+        let out = res.query_seeded(0, seed);
+        let wall = t0.elapsed().as_secs_f64();
+        let rs = &out.rack;
+        println!(
+            "{:<6} shards={shards:<2} total_cycles={:>9} max_shard={:>9} \
+             link_bytes={:>9} energy={:.3e} J  wall={wall:.3}s",
+            entry.name, rs.total_cycles, rs.max_shard_cycles, rs.link_bytes, rs.energy_j
+        );
+        points.push(RackPoint {
+            name: entry.name,
+            record: RackRecord {
+                bench: entry.name.into(),
+                rows: nrows as u64,
+                shards: shards as u64,
+                total_cycles: rs.total_cycles,
+                max_shard_cycles: rs.max_shard_cycles,
+                link_bytes: rs.link_bytes,
+                energy_j: rs.energy_j,
+                wall_s: wall,
+            },
+            bits: out.bits,
+        });
+    }
+    points
+}
+
+/// Run the load-once / query-many amortization sweep for every
+/// registered kernel at one query count: load once, run `q_count`
+/// queries with the kernel's seeded fresh-parameters stream, return one
+/// [`ResidentRecord`] per kernel (printing the per-point summary line).
+/// With `verify`, the first and last query of each kernel's sweep is
+/// asserted bit-equal to a freshly loaded run with the same parameters
+/// (every intermediate query is covered by `tests/resident_datasets.rs`).
+pub fn resident_registry_points(
+    rack: &PrinsRack,
+    rows: usize,
+    dense_cap: usize,
+    dims: usize,
+    q_count: usize,
+    seed: u64,
+    verify: bool,
+) -> Vec<ResidentRecord> {
+    assert!(q_count > 0, "--queries entries must be positive");
+    let shards = rack.n_shards() as u64;
+    let mut records = Vec::new();
+    for entry in registry() {
+        let nrows = sweep_rows(entry.dense, rows, dense_cap);
+        let t0 = Instant::now();
+        let mut res = (entry.synth_load)(rack, nrows, dims, seed);
+        let load_cycles = res.load_report().total_cycles;
+        let mut energy = res.load_report().energy_j;
+        let mut qcycles = Vec::with_capacity(q_count);
+        for q in 0..q_count {
+            let r = res.query_seeded(q, seed);
+            qcycles.push(r.rack.total_cycles);
+            energy += r.rack.energy_j;
+            if verify && (q == 0 || q == q_count - 1) {
+                // fresh load + the same parameter index = the one-shot
+                // reference; results must be bit-equal
+                let mut fresh = (entry.synth_load)(rack, nrows, dims, seed);
+                let f = fresh.query_seeded(q, seed);
+                assert_eq!(
+                    r.bits, f.bits,
+                    "{} Q={q_count} q={q}: resident query diverged from fresh load",
+                    entry.name
+                );
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let qsum: u64 = qcycles.iter().sum();
+        let query_cycles = qsum as f64 / q_count as f64;
+        let amortized = (load_cycles + qsum) as f64 / q_count as f64;
+        println!(
+            "{:<6} Q={q_count:<3} load={load_cycles:>9} query/Q={query_cycles:>12.1} \
+             amortized/Q={amortized:>12.1} energy={energy:.3e} J  wall={wall:.3}s",
+            entry.name
+        );
+        records.push(ResidentRecord {
+            bench: entry.name.into(),
+            rows: nrows as u64,
+            shards,
+            queries: q_count as u64,
+            load_cycles,
+            query_cycles,
+            amortized_cycles: amortized,
+            energy_j: energy,
+            wall_s: wall,
+        });
+    }
+    records
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn registry_sweep_covers_every_kernel_and_amortizes() {
+        let rack = PrinsRack::new(1);
+        let recs = resident_registry_points(&rack, 64, 32, 2, 2, 5, true);
+        assert_eq!(recs.len(), registry().len());
+        for r in &recs {
+            assert!(r.load_cycles > 0, "{}: uncharged load", r.bench);
+            assert!(r.amortized_cycles > r.query_cycles, "{}", r.bench);
+        }
+        let pts = rack_registry_points(&rack, 64, 32, 2, 5);
+        assert_eq!(pts.len(), registry().len());
+        for p in &pts {
+            assert!(!p.bits.is_empty(), "{}: empty bit encoding", p.name);
+            assert!(p.record.total_cycles >= p.record.max_shard_cycles);
+        }
+    }
 
     #[test]
     fn timer_collects_samples() {
