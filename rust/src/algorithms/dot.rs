@@ -277,6 +277,13 @@ impl Kernel for DotKernel {
         self.query_floor_cycles() // the inherent floor (value-independent)
     }
 
+    fn query_plan(&self, _array: &PrinsArray, params: &Vec<f32>) -> crate::analysis::QueryPlan {
+        crate::analysis::QueryPlan {
+            programs: vec![self.program(params)],
+            extra_cycles: 0, // readout is storage-path, not kernel time
+        }
+    }
+
     fn parse_params(&self, args: &[&str]) -> Result<Vec<f32>> {
         let seed: u64 = args[0].parse()?;
         Ok(synth_uniform(self.layout.dims, seed))

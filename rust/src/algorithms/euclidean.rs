@@ -345,6 +345,18 @@ impl Kernel for EuclideanKernel {
         self.query_floor_cycles(params.k) // the inherent per-center floor
     }
 
+    fn query_plan(&self, _array: &PrinsArray, params: &EdParams) -> crate::analysis::QueryPlan {
+        crate::analysis::QueryPlan {
+            // one per-center program per center, exactly as query dispatches
+            programs: params
+                .centers
+                .chunks(self.layout.dims)
+                .map(|c| self.center_program(c))
+                .collect(),
+            extra_cycles: 0, // readout is storage-path, not kernel time
+        }
+    }
+
     fn parse_params(&self, args: &[&str]) -> Result<EdParams> {
         let (k, seed): (usize, u64) = (args[0].parse()?, args[1].parse()?);
         ensure!(k > 0 && k <= 16, "k out of range");

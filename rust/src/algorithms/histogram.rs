@@ -201,6 +201,14 @@ impl Kernel for HistogramKernel {
         self.query_floor_cycles(array)
     }
 
+    fn query_plan(&self, array: &PrinsArray, params: &u16) -> crate::analysis::QueryPlan {
+        crate::analysis::QueryPlan {
+            programs: vec![self.program_at(*params)],
+            // the final pipelined tree drain charged by query_at
+            extra_cycles: array.reduction_latency_cycles(),
+        }
+    }
+
     fn parse_params(&self, _args: &[&str]) -> Result<u16> {
         Ok(24) // the wire form queries the paper's fixed bin edges
     }

@@ -33,6 +33,7 @@
 //! file plus its registry entry, with zero kernel-specific code added to
 //! the rack, server or CLI.
 
+use crate::analysis::{ArrayShape, PlannedQuery, QueryPlan};
 use crate::controller::{Controller, ExecStats};
 use crate::error::{ensure, Result};
 use crate::host::rack::{PrinsRack, RackStats};
@@ -151,6 +152,15 @@ pub trait Kernel: Sized + Send {
     /// Analytic cycle floor of one query on this shard (exact: program
     /// shape depends only on layout + params, never on data values).
     fn query_floor_cycles(&self, array: &PrinsArray, params: &Self::Params) -> u64;
+
+    /// Synthesize — without executing — every microprogram one query
+    /// with `params` would dispatch on this shard, plus the cycles the
+    /// query charges outside any program (reduction-tree drains,
+    /// chain-hop field moves). This is the static analyzer's view of the
+    /// query (`crate::analysis`): rule C01 proves write-freedom over it
+    /// and rule C02 pins its [`QueryPlan::cycle_estimate`] to
+    /// [`Kernel::query_floor_cycles`] for the same shard and params.
+    fn query_plan(&self, array: &PrinsArray, params: &Self::Params) -> QueryPlan;
 
     /// Parse wire query parameters (the args after the dataset id).
     fn parse_params(&self, args: &[&str]) -> Result<Self::Params>;
@@ -367,6 +377,13 @@ pub trait ResidentDyn: Send {
     /// matching [`ResidentDyn::query_seeded`]'s `max_shard_cycles` must
     /// measure; the registry test gates pin the two together.
     fn query_floor_seeded(&self, q: usize, seed: u64) -> u64;
+    /// Synthesize every shard's query plan for the `(q, seed)` parameter
+    /// stream, without executing anything — one [`PlannedQuery`] per
+    /// shard, each carrying the plan, the kernel's analytic floor for
+    /// that same shard, and the shard array's geometry. This is the
+    /// static analyzer's registry-wide entry point
+    /// ([`crate::analysis::verify_kernel`]).
+    fn query_plans_seeded(&self, q: usize, seed: u64) -> Vec<PlannedQuery>;
 }
 
 impl<K: ShardMerge + 'static> ResidentDyn for Resident<K> {
@@ -405,6 +422,18 @@ impl<K: ShardMerge + 'static> ResidentDyn for Resident<K> {
     fn query_floor_seeded(&self, q: usize, seed: u64) -> u64 {
         let params = self.kernel().seeded_params(q, seed);
         Resident::query_floor_cycles(self, &params)
+    }
+
+    fn query_plans_seeded(&self, q: usize, seed: u64) -> Vec<PlannedQuery> {
+        let params = self.kernel().seeded_params(q, seed);
+        self.shards
+            .iter()
+            .map(|sh| PlannedQuery {
+                plan: sh.kern.query_plan(&sh.ctl.array, &params),
+                floor_cycles: sh.kern.query_floor_cycles(&sh.ctl.array, &params),
+                shape: ArrayShape::of(&sh.ctl.array),
+            })
+            .collect()
     }
 }
 

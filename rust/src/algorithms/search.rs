@@ -211,6 +211,14 @@ impl Kernel for SearchKernel {
         self.program(params).cycle_estimate() + array.reduction_latency_cycles()
     }
 
+    fn query_plan(&self, array: &PrinsArray, params: &SearchRange) -> crate::analysis::QueryPlan {
+        crate::analysis::QueryPlan {
+            programs: vec![self.program(params)],
+            // the final pipelined tree drain charged by query
+            extra_cycles: array.reduction_latency_cycles(),
+        }
+    }
+
     fn parse_params(&self, args: &[&str]) -> Result<SearchRange> {
         let (lo, hi): (u32, u32) = (args[0].parse()?, args[1].parse()?);
         ensure!(lo <= hi, "search range: lo > hi");

@@ -246,18 +246,28 @@ impl SpmvKernel {
         broadcast + multiply + levels * level_prog + hops
     }
 
-    /// Phase 1 (Fig. 10 lines 1–3): broadcast x into the b fields.
-    fn broadcast(&self, ctl: &mut Controller, x: &[f32]) {
+    /// Phase 1 (Fig. 10 lines 1–3) as a program: per vector element one
+    /// compare of j against all column indices, one write of e_B into
+    /// the matching rows. Shared by [`SpmvKernel::query`] and the static
+    /// analyzer's [`Kernel::query_plan`] view.
+    fn broadcast_program(&self, x: &[f32]) -> Program {
         let l = &self.layout;
+        let mut prog = Program::new();
         for (j, &xv) in x.iter().enumerate() {
             let (s, m) = quantize(xv);
             // line 2: compare i_B with all column indices
-            ctl.step(&Instr::Compare(l.colid.pattern(j as u64)));
+            prog.push(Instr::Compare(l.colid.pattern(j as u64)));
             // line 3: write e_B into all matching rows
             let mut w = l.b_mag.pattern(m);
             w.push((l.b_sign, s));
-            ctl.step(&Instr::Write(w));
+            prog.push(Instr::Write(w));
         }
+        prog
+    }
+
+    /// Phase 1 (Fig. 10 lines 1–3): broadcast x into the b fields.
+    fn broadcast(&self, ctl: &mut Controller, x: &[f32]) {
+        ctl.execute(&self.broadcast_program(x));
     }
 
     /// Phase 2 (Fig. 10 line 4): PR ← e_B · e_A for all nonzeros at once.
@@ -485,6 +495,18 @@ impl Kernel for SpmvKernel {
 
     fn query_floor_cycles(&self, _array: &PrinsArray, _params: &Vec<f32>) -> u64 {
         self.query_floor_cycles() // the inherent ChainTree floor
+    }
+
+    fn query_plan(&self, _array: &PrinsArray, params: &Vec<f32>) -> crate::analysis::QueryPlan {
+        let levels = self.max_row_nnz.max(2).next_power_of_two().ilog2() as u64;
+        let mut programs = vec![self.broadcast_program(params), self.multiply_program()];
+        programs.extend((0..levels).map(|_| self.reduce_level_program()));
+        crate::analysis::QueryPlan {
+            programs,
+            // the per-level (rowid, prod) chain moves are array moves,
+            // not program instructions: Σ_{k<levels} 2·2^k hop cycles
+            extra_cycles: 2 * ((1u64 << levels) - 1),
+        }
     }
 
     fn parse_params(&self, args: &[&str]) -> Result<Vec<f32>> {

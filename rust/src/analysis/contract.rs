@@ -1,0 +1,111 @@
+//! Kernel-contract rules: C01 write-freedom and C02 floor-consistency.
+//!
+//! These rules operate on a whole [`QueryPlan`] — the synthesized set of
+//! microprograms one query would dispatch — rather than on a single
+//! program, because the contracts they prove are properties of the
+//! query, not of any one instruction stream: a query is write-free only
+//! if *none* of its programs mutate the array, and its cycle floor is
+//! the sum over all of them plus the non-program cycles.
+
+use super::{Diagnostic, QueryPlan, RuleId, Severity};
+use crate::isa::Instr;
+
+/// C01: prove a query plan never mutates the array. Any `Write` or
+/// `ClearColumns` in any program of the plan is an error. The driver
+/// applies this only to kernels whose registry entry declares
+/// `write_free_queries = true`, promoting the runtime `n_write == 0`
+/// ledger assertion to a static guarantee.
+pub fn write_freedom(plan: &QueryPlan) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for (pi, prog) in plan.programs.iter().enumerate() {
+        for (idx, instr) in prog.instrs.iter().enumerate() {
+            match instr {
+                Instr::Write(_) => out.push(Diagnostic::at(
+                    RuleId::C01,
+                    Severity::Error,
+                    idx,
+                    format!("program {pi} of a write-free query contains a write"),
+                )),
+                Instr::ClearColumns { .. } => out.push(Diagnostic::at(
+                    RuleId::C01,
+                    Severity::Error,
+                    idx,
+                    format!(
+                        "program {pi} of a write-free query contains a column clear"
+                    ),
+                )),
+                _ => {}
+            }
+        }
+    }
+    out
+}
+
+/// C02: pin the plan's static cycle estimate to the kernel's analytic
+/// floor for the identical shard and parameters. A mismatch means the
+/// floor formula has drifted from the microcode the kernel actually
+/// emits — the exact bug class the runtime floor assertions catch today,
+/// proved here without running the array.
+pub fn floor_consistency(plan: &QueryPlan, floor_cycles: u64) -> Vec<Diagnostic> {
+    let est = plan.cycle_estimate();
+    if est != floor_cycles {
+        vec![Diagnostic::global(
+            RuleId::C02,
+            Severity::Error,
+            format!(
+                "plan cycle estimate {est} != analytic query floor {floor_cycles}"
+            ),
+        )]
+    } else {
+        Vec::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Program;
+
+    fn read_only_plan() -> QueryPlan {
+        let mut p = Program::new();
+        p.push(Instr::Compare(vec![(0, true)])); // 1 cycle
+        p.push(Instr::ReduceCount); // 1 cycle
+        QueryPlan {
+            programs: vec![p],
+            extra_cycles: 3,
+        }
+    }
+
+    #[test]
+    fn c01_accepts_read_only_plans() {
+        assert!(write_freedom(&read_only_plan()).is_empty());
+    }
+
+    #[test]
+    fn c01_flags_writes_and_clears_with_program_index() {
+        let mut w = Program::new();
+        w.push(Instr::Write(vec![(0, true)]));
+        w.push(Instr::ClearColumns { base: 0, width: 4 });
+        let plan = QueryPlan {
+            programs: vec![Program::new(), w],
+            extra_cycles: 0,
+        };
+        let d = write_freedom(&plan);
+        assert_eq!(d.len(), 2);
+        assert!(d.iter().all(|x| x.rule == RuleId::C01));
+        assert!(d[0].message.contains("program 1"));
+        assert_eq!(d[0].index, Some(0));
+        assert_eq!(d[1].index, Some(1));
+    }
+
+    #[test]
+    fn c02_pins_the_estimate_to_the_floor() {
+        let plan = read_only_plan(); // estimate = 1 + 1 + 3 = 5
+        assert!(floor_consistency(&plan, 5).is_empty());
+        let d = floor_consistency(&plan, 6);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].rule, RuleId::C02);
+        assert_eq!(d[0].index, None);
+        assert!(d[0].message.contains('5') && d[0].message.contains('6'));
+    }
+}

@@ -1,0 +1,192 @@
+//! The registry-wide verification driver behind `prins verify`:
+//! synthesize every registered kernel's query plans over a seeded shape
+//! grid and run every rule — program-shape rules per microprogram,
+//! contract rules per plan — without executing a single instruction on
+//! the array. (Loading the shard datasets does run — plans are
+//! synthesized *against* resident geometry — but no query ever
+//! executes.)
+
+use super::contract;
+use super::{check_program, Diagnostic};
+use crate::algorithms::kernel::{registry, KernelEntry};
+use crate::host::rack::PrinsRack;
+
+/// The seeded `(n, dims, shards, seed)` shape grid every kernel is
+/// verified over: small/medium/large datasets, single- and multi-shard
+/// racks, distinct seeds. Kept deliberately small — the grid multiplies
+/// into `shapes × QUERIES_PER_SHAPE × shards × programs` checks per
+/// kernel.
+pub const SHAPE_GRID: &[(usize, usize, usize, u64)] =
+    &[(24, 2, 1, 7), (48, 3, 2, 11), (96, 4, 1, 13)];
+
+/// Seeded queries checked per grid shape — enough to rotate every
+/// kernel's `seeded_params` stream through its distinct parameter forms
+/// (hist's four bin windows, search's exact-match every fourth query).
+pub const QUERIES_PER_SHAPE: usize = 4;
+
+/// One kernel's verification report: how much was checked and every
+/// diagnostic found, each paired with a context string locating the
+/// shape/query/program it fired in.
+pub struct KernelReport {
+    /// The kernel's registry name.
+    pub kernel: &'static str,
+    /// Grid shapes verified.
+    pub shapes: usize,
+    /// Microprograms synthesized and checked.
+    pub checked_programs: usize,
+    /// Total instructions across those programs.
+    pub checked_instructions: usize,
+    /// Every finding, as `(context, diagnostic)` pairs.
+    pub diagnostics: Vec<(String, Diagnostic)>,
+}
+
+impl KernelReport {
+    /// Whether the kernel passed (zero diagnostics of any severity).
+    pub fn is_clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+}
+
+/// Verify one registered kernel over the full [`SHAPE_GRID`]: load the
+/// seeded dataset on a rack of the grid's shard count, synthesize every
+/// shard's query plan for [`QUERIES_PER_SHAPE`] seeded queries, and run
+/// W01/W02/T01/S01 on every program plus C01 (when the entry claims
+/// `write_free_queries`) and C02 on every plan.
+pub fn verify_kernel(entry: &KernelEntry) -> KernelReport {
+    let mut report = KernelReport {
+        kernel: entry.name,
+        shapes: 0,
+        checked_programs: 0,
+        checked_instructions: 0,
+        diagnostics: Vec::new(),
+    };
+    for &(n, dims, shards, seed) in SHAPE_GRID {
+        report.shapes += 1;
+        let rack = PrinsRack::new(shards);
+        let res = (entry.synth_load)(&rack, n, dims, seed);
+        for q in 0..QUERIES_PER_SHAPE {
+            for (s, pq) in res.query_plans_seeded(q, seed).iter().enumerate() {
+                let ctx = |prog: &str| {
+                    format!(
+                        "n={n} dims={dims} shards={shards} seed={seed} q={q} \
+                         shard={s} prog={prog}"
+                    )
+                };
+                for (pi, prog) in pq.plan.programs.iter().enumerate() {
+                    report.checked_programs += 1;
+                    report.checked_instructions += prog.len();
+                    for d in check_program(prog, &pq.shape) {
+                        report.diagnostics.push((ctx(&pi.to_string()), d));
+                    }
+                }
+                if entry.write_free_queries {
+                    for d in contract::write_freedom(&pq.plan) {
+                        report.diagnostics.push((ctx("plan"), d));
+                    }
+                }
+                for d in contract::floor_consistency(&pq.plan, pq.floor_cycles) {
+                    report.diagnostics.push((ctx("plan"), d));
+                }
+            }
+        }
+    }
+    report
+}
+
+/// Verify every registered kernel ([`verify_kernel`] over the registry).
+pub fn verify_registry() -> Vec<KernelReport> {
+    registry().iter().map(verify_kernel).collect()
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render reports as the `verify --json` machine-readable document the
+/// CI gate parses: an array of per-kernel objects, each with its check
+/// counts and a `diagnostics` array of
+/// `{context, rule, severity, index, message}` objects.
+pub fn reports_json(reports: &[KernelReport]) -> String {
+    let mut out = String::from("[\n");
+    for (i, r) in reports.iter().enumerate() {
+        out.push_str(&format!(
+            "  {{\"kernel\": \"{}\", \"shapes\": {}, \"checked_programs\": {}, \
+             \"checked_instructions\": {}, \"diagnostics\": [",
+            json_escape(r.kernel),
+            r.shapes,
+            r.checked_programs,
+            r.checked_instructions
+        ));
+        for (j, (ctx, d)) in r.diagnostics.iter().enumerate() {
+            out.push_str(&format!(
+                "\n    {{\"context\": \"{}\", \"rule\": \"{}\", \"severity\": \"{}\", \
+                 \"index\": {}, \"message\": \"{}\"}}{}",
+                json_escape(ctx),
+                d.rule,
+                d.severity,
+                d.index.map_or("null".into(), |x| x.to_string()),
+                json_escape(&d.message),
+                if j + 1 < r.diagnostics.len() { "," } else { "\n  " }
+            ));
+        }
+        out.push_str(if i + 1 < reports.len() { "]},\n" } else { "]}\n" });
+    }
+    out.push(']');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::{RuleId, Severity};
+
+    #[test]
+    fn one_kernel_verifies_clean_over_the_grid() {
+        // the full-registry sweep lives in tests/static_verify.rs; here
+        // one kernel proves the driver plumbing end to end
+        let entry = crate::algorithms::kernel::find_name("search").unwrap();
+        let r = verify_kernel(entry);
+        assert_eq!(r.kernel, "search");
+        assert_eq!(r.shapes, SHAPE_GRID.len());
+        assert!(r.checked_programs > 0 && r.checked_instructions > 0);
+        assert!(
+            r.is_clean(),
+            "search diagnostics: {:?}",
+            r.diagnostics
+                .iter()
+                .map(|(c, d)| format!("[{c}] {d}"))
+                .collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn json_report_escapes_and_structures() {
+        let reports = vec![KernelReport {
+            kernel: "hist",
+            shapes: 3,
+            checked_programs: 12,
+            checked_instructions: 6144,
+            diagnostics: vec![(
+                "n=24 \"quoted\"".into(),
+                Diagnostic::global(RuleId::C02, Severity::Error, "a\\b".into()),
+            )],
+        }];
+        let j = reports_json(&reports);
+        assert!(j.starts_with('[') && j.ends_with(']'));
+        assert!(j.contains("\"kernel\": \"hist\""));
+        assert!(j.contains("\"checked_programs\": 12"));
+        assert!(j.contains("\\\"quoted\\\""));
+        assert!(j.contains("a\\\\b"));
+        assert!(j.contains("\"index\": null"));
+    }
+}

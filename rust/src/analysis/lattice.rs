@@ -1,0 +1,156 @@
+//! The tag-state abstract domain of the T01 liveness rule.
+//!
+//! The analyzer interprets a program over an abstraction of the array's
+//! tag register file: instead of one bit per row it tracks one of four
+//! summary states. The transfer function is deliberately conservative —
+//! anything it cannot prove collapses to [`TagState::Unknown`], so a
+//! T01 finding is always a real property of the program, never a guess.
+//!
+//! ```text
+//!            Unknown          (any tag configuration)
+//!           /   |    \
+//!     AllSet FirstOnly Empty  (provable configurations)
+//! ```
+//!
+//! Transfer rules (DESIGN.md §Static verification):
+//! * `SetTagsAll` → `AllSet`; an empty-pattern `Compare` matches every
+//!   row, so it is `AllSet` too; any other `Compare` → `Unknown`.
+//! * `FirstMatch` keeps `Empty` empty (no tag to keep) and narrows
+//!   `AllSet`/`FirstOnly` to `FirstOnly`.
+//! * A tag shift of `h ≥ rows` hops pushes every tag off the end of the
+//!   daisy chain → `Empty`; smaller shifts of anything non-empty →
+//!   `Unknown` (edge tags are lost, interior tags move).
+//! * Everything else (`Write`, `Read`, reductions, `IfMatch`,
+//!   `ClearColumns`) observes or uses tags but never changes them.
+
+use super::ArrayShape;
+use crate::isa::Instr;
+
+/// Abstract state of the array's tag registers at one program point.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TagState {
+    /// Every row is provably tagged.
+    AllSet,
+    /// Provably no row is tagged.
+    Empty,
+    /// At most one row is tagged (the `FirstMatch` post-state).
+    FirstOnly,
+    /// Nothing is known (the lattice top; also the entry state).
+    Unknown,
+}
+
+impl TagState {
+    /// The abstract post-state of executing `instr` in state `self` on
+    /// an array of shape `shape`.
+    pub fn transfer(self, instr: &Instr, shape: &ArrayShape) -> TagState {
+        match instr {
+            Instr::SetTagsAll => TagState::AllSet,
+            Instr::Compare(p) => {
+                if p.is_empty() {
+                    // an empty key/mask pattern matches every row
+                    TagState::AllSet
+                } else {
+                    TagState::Unknown
+                }
+            }
+            Instr::FirstMatch => match self {
+                TagState::Empty => TagState::Empty,
+                TagState::AllSet | TagState::FirstOnly => TagState::FirstOnly,
+                TagState::Unknown => TagState::Unknown,
+            },
+            Instr::ShiftTagsUp(h) | Instr::ShiftTagsDown(h) => {
+                if self == TagState::Empty || *h as usize >= shape.rows {
+                    TagState::Empty
+                } else {
+                    TagState::Unknown
+                }
+            }
+            Instr::Write(_)
+            | Instr::Read { .. }
+            | Instr::IfMatch
+            | Instr::ReduceCount
+            | Instr::ReduceField { .. }
+            | Instr::ClearColumns { .. } => self,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SHAPE: ArrayShape = ArrayShape {
+        rows: 32,
+        rows_per_module: 16,
+        width: 40,
+    };
+
+    #[test]
+    fn set_tags_all_and_empty_compare_prove_all_set() {
+        let s = TagState::Unknown;
+        assert_eq!(s.transfer(&Instr::SetTagsAll, &SHAPE), TagState::AllSet);
+        assert_eq!(s.transfer(&Instr::Compare(vec![]), &SHAPE), TagState::AllSet);
+        assert_eq!(
+            s.transfer(&Instr::Compare(vec![(0, true)]), &SHAPE),
+            TagState::Unknown
+        );
+    }
+
+    #[test]
+    fn first_match_narrows_but_keeps_empty() {
+        assert_eq!(
+            TagState::AllSet.transfer(&Instr::FirstMatch, &SHAPE),
+            TagState::FirstOnly
+        );
+        assert_eq!(
+            TagState::FirstOnly.transfer(&Instr::FirstMatch, &SHAPE),
+            TagState::FirstOnly
+        );
+        assert_eq!(
+            TagState::Empty.transfer(&Instr::FirstMatch, &SHAPE),
+            TagState::Empty
+        );
+        assert_eq!(
+            TagState::Unknown.transfer(&Instr::FirstMatch, &SHAPE),
+            TagState::Unknown
+        );
+    }
+
+    #[test]
+    fn chain_length_shift_flushes_all_tags() {
+        assert_eq!(
+            TagState::AllSet.transfer(&Instr::ShiftTagsUp(32), &SHAPE),
+            TagState::Empty
+        );
+        assert_eq!(
+            TagState::AllSet.transfer(&Instr::ShiftTagsDown(3), &SHAPE),
+            TagState::Unknown
+        );
+        // empty stays empty under any shift
+        assert_eq!(
+            TagState::Empty.transfer(&Instr::ShiftTagsUp(1), &SHAPE),
+            TagState::Empty
+        );
+    }
+
+    #[test]
+    fn tag_preserving_instructions_keep_the_state() {
+        for s in [
+            TagState::AllSet,
+            TagState::Empty,
+            TagState::FirstOnly,
+            TagState::Unknown,
+        ] {
+            for i in [
+                Instr::Write(vec![(0, true)]),
+                Instr::Read { base: 0, width: 8 },
+                Instr::IfMatch,
+                Instr::ReduceCount,
+                Instr::ReduceField { col: 1 },
+                Instr::ClearColumns { base: 0, width: 4 },
+            ] {
+                assert_eq!(s.transfer(&i, &SHAPE), s, "{i:?}");
+            }
+        }
+    }
+}

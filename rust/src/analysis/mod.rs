@@ -1,0 +1,273 @@
+//! Static verification of PRINS microprograms (`prins verify`).
+//!
+//! PRINS compiles every kernel into straight-line associative
+//! microprograms (paper §5.2–5.3) whose correctness contracts —
+//! in-bounds columns, conflict-free patterns, tag-register discipline,
+//! write-free queries, analytic cycle floors — were previously checked
+//! only by *executing* them and inspecting ledgers. "A Modern Primer on
+//! Processing-in-Memory" (arXiv:2012.03112) names exactly this gap —
+//! correctness-validation tooling for in-memory ISAs — as a PIM adoption
+//! barrier. This module closes it with a dataflow analyzer and lint
+//! engine over [`Program`]/[`crate::isa::Instr`] that proves the
+//! contracts **without running the array**.
+//!
+//! Rules (DESIGN.md §Static verification has the full table):
+//!
+//! | rule | kind      | proves |
+//! |------|-----------|--------|
+//! | W01  | lint      | every referenced bit-column `<` array width |
+//! | W02  | lint      | no duplicate/contradictory `(col, bit)` pairs in one pattern |
+//! | T01  | dataflow  | no `Write`/`Read`/`FirstMatch` under statically-empty tags; tag shifts stay inside the chain |
+//! | S01  | lint      | span classification agrees with an independent threaded-path whitelist |
+//! | C01  | contract  | `write_free_queries` kernels synthesize zero `Write`/`ClearColumns` |
+//! | C02  | contract  | the synthesized plan's static cycle estimate equals `query_floor_cycles` |
+//!
+//! Program-shape rules (W01/W02/T01/S01) run per [`Program`] via
+//! [`check_program`]; kernel contracts (C01/C02) run over a
+//! [`QueryPlan`] — the full set of microprograms one query executes plus
+//! the cycles charged outside any program — via [`contract`]. The
+//! [`driver`] walks the whole kernel registry over a seeded shape grid
+//! and is surfaced as the `prins verify [kernel|all] [--json]` CLI verb,
+//! the `tests/static_verify.rs` gate, and a CI job.
+
+pub mod contract;
+pub mod driver;
+pub mod lattice;
+pub mod rules;
+
+pub use driver::{reports_json, verify_kernel, verify_registry, KernelReport};
+pub use lattice::TagState;
+
+use crate::isa::Program;
+use crate::rcam::PrinsArray;
+use std::fmt;
+
+/// Identifier of one analyzer rule (see the module-level table).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum RuleId {
+    /// Column bounds: every referenced bit-column `<` array width.
+    W01,
+    /// Pattern conflict: duplicate or contradictory `(col, bit)` entries
+    /// inside one `Compare`/`Write` pattern.
+    W02,
+    /// Tag liveness: operations under statically-empty tags; tag shifts
+    /// that flush the chain or fall off the fast per-module path.
+    T01,
+    /// Span safety: span classification must agree with an independent
+    /// whitelist of threaded-path instructions.
+    S01,
+    /// Write freedom: `write_free_queries` kernels must synthesize query
+    /// programs with zero `Write`/`ClearColumns`.
+    C01,
+    /// Floor consistency: the plan's static cycle estimate must equal
+    /// the kernel's `query_floor_cycles` for the same shape.
+    C02,
+}
+
+impl RuleId {
+    /// The stable rule identifier string (`"W01"`, …) used in reports.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RuleId::W01 => "W01",
+            RuleId::W02 => "W02",
+            RuleId::T01 => "T01",
+            RuleId::S01 => "S01",
+            RuleId::C01 => "C01",
+            RuleId::C02 => "C02",
+        }
+    }
+}
+
+impl fmt::Display for RuleId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// How severe a diagnostic is. The registry gate fails on *any*
+/// diagnostic; severity tells a human which to read first.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    /// Suspicious but possibly intentional (duplicate pattern entry with
+    /// the same bit, a tag shift on the slow global-gather path).
+    Warning,
+    /// A definite contract violation (out-of-bounds column,
+    /// contradictory pattern, write under provably-empty tags, floor
+    /// drift).
+    Error,
+}
+
+impl fmt::Display for Severity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        })
+    }
+}
+
+/// One analyzer finding: which rule fired, how severe, where (the
+/// instruction index inside the analyzed program, when the finding is
+/// instruction-anchored), and a human-readable message.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    /// The rule that fired.
+    pub rule: RuleId,
+    /// Severity of the finding.
+    pub severity: Severity,
+    /// Instruction index inside the analyzed program (`None` for
+    /// program-level findings such as C02 floor drift).
+    pub index: Option<usize>,
+    /// Human-readable description of the finding.
+    pub message: String,
+}
+
+impl Diagnostic {
+    /// An instruction-anchored diagnostic.
+    pub fn at(rule: RuleId, severity: Severity, index: usize, message: String) -> Self {
+        Diagnostic {
+            rule,
+            severity,
+            index: Some(index),
+            message,
+        }
+    }
+
+    /// A program-level diagnostic (no single offending instruction).
+    pub fn global(rule: RuleId, severity: Severity, message: String) -> Self {
+        Diagnostic {
+            rule,
+            severity,
+            index: None,
+            message,
+        }
+    }
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.index {
+            Some(i) => write!(f, "{} {} @{}: {}", self.severity, self.rule, i, self.message),
+            None => write!(f, "{} {}: {}", self.severity, self.rule, self.message),
+        }
+    }
+}
+
+/// The geometry facts the analyzer needs about the target array —
+/// everything the rules consume, decoupled from [`PrinsArray`] so
+/// fixture tests can fabricate shapes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ArrayShape {
+    /// Total rows across the daisy chain.
+    pub rows: usize,
+    /// Rows per RCAM module (the fast tag-shift segment length).
+    pub rows_per_module: usize,
+    /// Row width in bit-columns.
+    pub width: usize,
+}
+
+impl ArrayShape {
+    /// The shape of a live array.
+    pub fn of(array: &PrinsArray) -> Self {
+        ArrayShape {
+            rows: array.total_rows(),
+            rows_per_module: array.total_rows() / array.n_modules(),
+            width: array.width(),
+        }
+    }
+}
+
+/// Everything one query executes, synthesized without running: the
+/// microprograms in dispatch order plus the cycles the query charges
+/// outside any program (pipelined reduction-tree drains, chain-hop
+/// field moves). Produced by [`crate::algorithms::kernel::Kernel::query_plan`];
+/// consumed by the C01/C02 contract rules.
+#[derive(Clone, Debug, Default)]
+pub struct QueryPlan {
+    /// The query's microprograms, in dispatch order.
+    pub programs: Vec<Program>,
+    /// Cycles charged outside any program (drains, chain hops).
+    pub extra_cycles: u64,
+}
+
+impl QueryPlan {
+    /// Static cycle cost of the whole plan: Σ program estimates plus the
+    /// non-program cycles. C02 pins this to `query_floor_cycles`.
+    pub fn cycle_estimate(&self) -> u64 {
+        self.programs
+            .iter()
+            .map(|p| p.cycle_estimate())
+            .sum::<u64>()
+            + self.extra_cycles
+    }
+
+    /// Total instructions across every program of the plan.
+    pub fn n_instructions(&self) -> usize {
+        self.programs.iter().map(|p| p.len()).sum()
+    }
+}
+
+/// One shard's synthesized query plan together with the two facts the
+/// contract rules compare it against: the kernel's own analytic floor
+/// for the identical shard, and the shard array's geometry.
+#[derive(Clone, Debug)]
+pub struct PlannedQuery {
+    /// The synthesized plan.
+    pub plan: QueryPlan,
+    /// `Kernel::query_floor_cycles` for the same shard and parameters.
+    pub floor_cycles: u64,
+    /// The shard array's geometry.
+    pub shape: ArrayShape,
+}
+
+/// Run every program-shape rule (W01, W02, T01, S01) over one program.
+/// Returns all findings in rule order; an empty vector is a proof that
+/// the program is clean under the analyzer's rule set.
+pub fn check_program(prog: &Program, shape: &ArrayShape) -> Vec<Diagnostic> {
+    let mut out = rules::column_bounds(prog, shape);
+    out.extend(rules::pattern_conflicts(prog));
+    out.extend(rules::tag_liveness(prog, shape));
+    out.extend(rules::span_safety(prog));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Instr;
+
+    #[test]
+    fn shape_of_live_array_matches_geometry() {
+        let a = PrinsArray::new(3, 16, 40);
+        let s = ArrayShape::of(&a);
+        assert_eq!(
+            s,
+            ArrayShape {
+                rows: 48,
+                rows_per_module: 16,
+                width: 40
+            }
+        );
+    }
+
+    #[test]
+    fn plan_estimate_sums_programs_and_extra() {
+        let mut p = Program::new();
+        p.push(Instr::Compare(vec![(0, true)])); // 1
+        p.push(Instr::Write(vec![(1, true)])); // 2
+        let plan = QueryPlan {
+            programs: vec![p.clone(), p],
+            extra_cycles: 5,
+        };
+        assert_eq!(plan.cycle_estimate(), 2 * 3 + 5);
+        assert_eq!(plan.n_instructions(), 4);
+    }
+
+    #[test]
+    fn diagnostics_render_rule_and_index() {
+        let d = Diagnostic::at(RuleId::W01, Severity::Error, 7, "col 99".into());
+        assert_eq!(format!("{d}"), "error W01 @7: col 99");
+        let g = Diagnostic::global(RuleId::C02, Severity::Error, "drift".into());
+        assert_eq!(format!("{g}"), "error C02: drift");
+    }
+}

@@ -1,0 +1,332 @@
+//! The program-shape rules of the static analyzer: W01 column bounds,
+//! W02 pattern conflicts, T01 tag liveness, S01 span safety. Each rule
+//! is a pure function `(&Program[, &ArrayShape]) -> Vec<Diagnostic>`;
+//! [`super::check_program`] runs them all.
+
+use super::lattice::TagState;
+use super::{ArrayShape, Diagnostic, RuleId, Severity};
+use crate::isa::{Instr, Pat, Program};
+
+/// W01: every referenced bit-column must lie below the array width.
+/// Covers pattern columns (`Compare`/`Write`), column ranges
+/// (`Read`/`ClearColumns` — checked end-inclusive with overflow-safe
+/// arithmetic, the static twin of the fixed `Program::max_column`), and
+/// the `ReduceField` column.
+pub fn column_bounds(prog: &Program, shape: &ArrayShape) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let w = shape.width;
+    for (idx, instr) in prog.instrs.iter().enumerate() {
+        match instr {
+            Instr::Compare(p) | Instr::Write(p) => {
+                for &(c, _) in p {
+                    if c as usize >= w {
+                        out.push(Diagnostic::at(
+                            RuleId::W01,
+                            Severity::Error,
+                            idx,
+                            format!("pattern column {c} out of bounds (width {w})"),
+                        ));
+                    }
+                }
+            }
+            Instr::Read { base, width } | Instr::ClearColumns { base, width } => {
+                // width == 0 references no columns (see Program::max_column)
+                if *width > 0 {
+                    let end = *base as usize + *width as usize - 1;
+                    if end >= w {
+                        out.push(Diagnostic::at(
+                            RuleId::W01,
+                            Severity::Error,
+                            idx,
+                            format!(
+                                "column range [{base}, {end}] out of bounds (width {w})"
+                            ),
+                        ));
+                    }
+                }
+            }
+            Instr::ReduceField { col } => {
+                if *col as usize >= w {
+                    out.push(Diagnostic::at(
+                        RuleId::W01,
+                        Severity::Error,
+                        idx,
+                        format!("reduce column {col} out of bounds (width {w})"),
+                    ));
+                }
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+/// W02: a key/mask pattern must bind each bit-column at most once.
+/// Binding the same column twice with opposing bits is a contradiction
+/// (a `Compare` can never match; a `Write` is order-dependent) and is an
+/// error; a repeated identical binding is redundant and a warning.
+pub fn pattern_conflicts(prog: &Program) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for (idx, instr) in prog.instrs.iter().enumerate() {
+        let (p, kind): (&Pat, &str) = match instr {
+            Instr::Compare(p) => (p, "compare"),
+            Instr::Write(p) => (p, "write"),
+            _ => continue,
+        };
+        for (i, &(c, b)) in p.iter().enumerate() {
+            if let Some(&(_, prev)) = p[..i].iter().find(|&&(c2, _)| c2 == c) {
+                if prev != b {
+                    out.push(Diagnostic::at(
+                        RuleId::W02,
+                        Severity::Error,
+                        idx,
+                        format!(
+                            "{kind} pattern binds column {c} to both {} and {}",
+                            prev as u8, b as u8
+                        ),
+                    ));
+                } else {
+                    out.push(Diagnostic::at(
+                        RuleId::W02,
+                        Severity::Warning,
+                        idx,
+                        format!("{kind} pattern binds column {c} twice"),
+                    ));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// T01: abstract interpretation of the tag registers over the
+/// [`TagState`] lattice. Flags `Write`/`Read`/`FirstMatch` executed
+/// under statically-empty tags (provable no-ops / sentinel reads), tag
+/// shifts of `≥ rows` hops (which flush every tag off the chain), and
+/// shifts of more hops than one module holds (these fall off the fast
+/// word-shift path onto the global-gather fallback).
+pub fn tag_liveness(prog: &Program, shape: &ArrayShape) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let mut state = TagState::Unknown;
+    for (idx, instr) in prog.instrs.iter().enumerate() {
+        if state == TagState::Empty {
+            match instr {
+                Instr::Write(_) => out.push(Diagnostic::at(
+                    RuleId::T01,
+                    Severity::Error,
+                    idx,
+                    "write under statically-empty tags is a no-op".into(),
+                )),
+                Instr::Read { .. } => out.push(Diagnostic::at(
+                    RuleId::T01,
+                    Severity::Error,
+                    idx,
+                    "read under statically-empty tags always yields the \
+                     no-match sentinel"
+                        .into(),
+                )),
+                Instr::FirstMatch => out.push(Diagnostic::at(
+                    RuleId::T01,
+                    Severity::Error,
+                    idx,
+                    "first_match under statically-empty tags has no tag to keep".into(),
+                )),
+                _ => {}
+            }
+        }
+        if let Instr::ShiftTagsUp(h) | Instr::ShiftTagsDown(h) = instr {
+            let h = *h as usize;
+            if h >= shape.rows {
+                out.push(Diagnostic::at(
+                    RuleId::T01,
+                    Severity::Error,
+                    idx,
+                    format!(
+                        "tag shift of {h} hops flushes every tag off the \
+                         {}-row chain",
+                        shape.rows
+                    ),
+                ));
+            } else if h > shape.rows_per_module {
+                out.push(Diagnostic::at(
+                    RuleId::T01,
+                    Severity::Warning,
+                    idx,
+                    format!(
+                        "tag shift of {h} hops exceeds the {}-row module \
+                         segment (global-gather slow path)",
+                        shape.rows_per_module
+                    ),
+                ));
+            }
+        }
+        state = state.transfer(instr, shape);
+    }
+    out
+}
+
+/// The threaded fast path's instruction whitelist, re-derived
+/// independently of [`Instr::is_data_parallel`]: exactly the variants
+/// `PrinsArray::execute_span` accepts (everything else panics there).
+/// The match is exhaustive on purpose — adding an `Instr` variant forces
+/// a decision here instead of silently joining either path.
+fn threaded_whitelist(instr: &Instr) -> bool {
+    match instr {
+        Instr::Compare(_) | Instr::Write(_) | Instr::SetTagsAll | Instr::ClearColumns { .. } => {
+            true
+        }
+        Instr::Read { .. }
+        | Instr::IfMatch
+        | Instr::FirstMatch
+        | Instr::ReduceCount
+        | Instr::ReduceField { .. }
+        | Instr::ShiftTagsUp(_)
+        | Instr::ShiftTagsDown(_) => false,
+    }
+}
+
+/// S01: re-derive threaded-dispatch legality per span. Every
+/// instruction inside a data-parallel span must be on the independent
+/// whitelist (or it would panic inside `execute_span`), every
+/// instruction in a serializing span must be off it (or the threaded
+/// backend is leaving parallelism unused), and the spans must cover the
+/// program exactly.
+pub fn span_safety(prog: &Program) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let mut covered = 0usize;
+    for span in prog.spans() {
+        for (off, instr) in span.instrs.iter().enumerate() {
+            let idx = covered + off;
+            let legal = threaded_whitelist(instr);
+            if span.data_parallel && !legal {
+                out.push(Diagnostic::at(
+                    RuleId::S01,
+                    Severity::Error,
+                    idx,
+                    format!(
+                        "{instr:?} classified data-parallel but is not on the \
+                         threaded execute_span whitelist"
+                    ),
+                ));
+            } else if !span.data_parallel && legal {
+                out.push(Diagnostic::at(
+                    RuleId::S01,
+                    Severity::Error,
+                    idx,
+                    format!(
+                        "{instr:?} is threaded-safe but classified serializing"
+                    ),
+                ));
+            }
+        }
+        covered += span.instrs.len();
+    }
+    if covered != prog.len() {
+        out.push(Diagnostic::global(
+            RuleId::S01,
+            Severity::Error,
+            format!(
+                "spans cover {covered} of {} instructions — not a partition",
+                prog.len()
+            ),
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SHAPE: ArrayShape = ArrayShape {
+        rows: 32,
+        rows_per_module: 16,
+        width: 16,
+    };
+
+    #[test]
+    fn w01_flags_every_out_of_bounds_reference() {
+        let mut p = Program::new();
+        p.push(Instr::Compare(vec![(15, true)])); // in bounds
+        p.push(Instr::Write(vec![(16, true)])); // out
+        p.push(Instr::Read { base: 10, width: 8 }); // [10,17] out
+        p.push(Instr::ReduceField { col: 40 }); // out
+        p.push(Instr::ClearColumns { base: 0, width: 16 }); // in bounds
+        p.push(Instr::Read { base: 5, width: 0 }); // empty range: fine
+        let d = column_bounds(&p, &SHAPE);
+        assert_eq!(d.len(), 3);
+        assert_eq!(
+            d.iter().map(|x| x.index.unwrap()).collect::<Vec<_>>(),
+            vec![1, 2, 3]
+        );
+        assert!(d.iter().all(|x| x.rule == RuleId::W01));
+    }
+
+    #[test]
+    fn w01_survives_u16_range_overflow() {
+        let mut p = Program::new();
+        p.push(Instr::ClearColumns {
+            base: u16::MAX,
+            width: u16::MAX,
+        });
+        let d = column_bounds(&p, &SHAPE);
+        assert_eq!(d.len(), 1, "overflowing range is out of bounds, not a panic");
+    }
+
+    #[test]
+    fn w02_separates_contradiction_from_duplicate() {
+        let mut p = Program::new();
+        p.push(Instr::Compare(vec![(3, true), (3, false)])); // contradiction
+        p.push(Instr::Write(vec![(4, true), (4, true)])); // duplicate
+        p.push(Instr::Compare(vec![(1, true), (2, false)])); // clean
+        let d = pattern_conflicts(&p);
+        assert_eq!(d.len(), 2);
+        assert_eq!(d[0].severity, Severity::Error);
+        assert_eq!(d[1].severity, Severity::Warning);
+        assert!(d.iter().all(|x| x.rule == RuleId::W02));
+    }
+
+    #[test]
+    fn t01_flags_ops_under_empty_tags_and_chain_flushes() {
+        let mut p = Program::new();
+        p.push(Instr::SetTagsAll);
+        p.push(Instr::ShiftTagsUp(32)); // >= rows: flush (error), state Empty
+        p.push(Instr::Write(vec![(0, true)])); // write under empty
+        p.push(Instr::Read { base: 0, width: 4 }); // read under empty
+        p.push(Instr::FirstMatch); // first_match under empty
+        p.push(Instr::SetTagsAll); // recovers
+        p.push(Instr::Write(vec![(1, true)])); // clean again
+        let d = tag_liveness(&p, &SHAPE);
+        assert_eq!(d.len(), 4);
+        assert_eq!(
+            d.iter().map(|x| x.index.unwrap()).collect::<Vec<_>>(),
+            vec![1, 2, 3, 4]
+        );
+    }
+
+    #[test]
+    fn t01_warns_on_cross_module_shift_only() {
+        let mut p = Program::new();
+        p.push(Instr::SetTagsAll);
+        p.push(Instr::ShiftTagsDown(16)); // == rows_per_module: fast path
+        p.push(Instr::ShiftTagsDown(17)); // > rows_per_module, < rows
+        let d = tag_liveness(&p, &SHAPE);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].index, Some(2));
+        assert_eq!(d[0].severity, Severity::Warning);
+    }
+
+    #[test]
+    fn s01_accepts_every_current_instruction_mix() {
+        let mut p = Program::new();
+        p.push(Instr::Compare(vec![(0, true)]));
+        p.push(Instr::Write(vec![(1, true)]));
+        p.push(Instr::ReduceCount);
+        p.push(Instr::ShiftTagsUp(2));
+        p.push(Instr::SetTagsAll);
+        p.push(Instr::ClearColumns { base: 0, width: 2 });
+        p.push(Instr::Read { base: 0, width: 2 });
+        assert!(span_safety(&p).is_empty());
+        assert!(span_safety(&Program::new()).is_empty());
+    }
+}

@@ -6,6 +6,8 @@
 //!   prins serve [--bind ADDR] [--workers W] # TCP storage-appliance front-end
 //!                                           # (protocol: docs/PROTOCOL.md)
 //!   prins report <fig12|fig13|fig14|fig15|all> [--csv]
+//!   prins verify [kernel|all] [--json]  # static microprogram analyzer
+//!                                       # (DESIGN.md §Static verification)
 //!   prins info                # device model + artifact inventory
 //!
 //! `run` is **registry-driven** (DESIGN.md §Kernel framework): every
@@ -62,10 +64,11 @@ pub fn main() -> Result<()> {
         Some("validate") => validate(),
         Some("serve") => serve(&args[1..]),
         Some("report") => report(&args[1..]),
+        Some("verify") => verify(&args[1..]),
         Some("info") => info(),
         _ => {
             let names: Vec<&str> = kernel::registry().iter().map(|e| e.name).collect();
-            eprintln!("usage: prins <run|validate|serve|report|info> ...");
+            eprintln!("usage: prins <run|validate|serve|report|verify|info> ...");
             eprintln!(
                 "  run <{}|bfs> [--n N] [--dims D] [--seed S] \
                  [--workers W] [--shards S] [--queries Q]",
@@ -74,6 +77,11 @@ pub fn main() -> Result<()> {
             eprintln!("  validate");
             eprintln!("  serve [--bind ADDR] [--workers W]");
             eprintln!("  report <fig12|fig13|fig14|fig15|all> [--csv] [--workers W]");
+            eprintln!(
+                "  verify [<{}>|all] [--json]  (static analyzer over synthesized \
+                 query programs)",
+                names.join("|")
+            );
             eprintln!("  (--workers: simulator threads; default = cores, 1 = serial)");
             eprintln!("  (--shards: run any registered kernel on an S-device rack; default 1)");
             eprintln!(
@@ -343,6 +351,56 @@ fn report(args: &[String]) -> Result<()> {
         } else {
             println!("{}", t.render());
         }
+    }
+    Ok(())
+}
+
+/// `prins verify [kernel|all] [--json]`: run the static microprogram
+/// analyzer (`crate::analysis`) over every registered kernel's
+/// synthesized query plans — or one kernel's — across the seeded shape
+/// grid, without executing a single query. `--json` prints the
+/// machine-readable report the CI gate parses; either way the process
+/// exits nonzero if any diagnostic fired.
+fn verify(args: &[String]) -> Result<()> {
+    let json = args.iter().any(|a| a == "--json");
+    let target = args
+        .iter()
+        .map(|s| s.as_str())
+        .find(|a| !a.starts_with("--"))
+        .unwrap_or("all");
+    let reports = if target == "all" {
+        crate::analysis::verify_registry()
+    } else {
+        let Some(entry) = kernel::find(target) else {
+            let names: Vec<&str> = kernel::registry().iter().map(|e| e.name).collect();
+            bail!("unknown kernel {target:?} (registered: {})", names.join(", "));
+        };
+        vec![crate::analysis::verify_kernel(entry)]
+    };
+    let total: usize = reports.iter().map(|r| r.diagnostics.len()).sum();
+    if json {
+        println!("{}", crate::analysis::reports_json(&reports));
+    } else {
+        for r in &reports {
+            println!(
+                "{:<8} {} shapes, {} programs, {} instructions: {}",
+                r.kernel,
+                r.shapes,
+                r.checked_programs,
+                r.checked_instructions,
+                if r.is_clean() {
+                    "clean".to_string()
+                } else {
+                    format!("{} diagnostic(s)", r.diagnostics.len())
+                }
+            );
+            for (ctx, d) in &r.diagnostics {
+                println!("  [{ctx}] {d}");
+            }
+        }
+    }
+    if total > 0 {
+        bail!("verify failed: {total} diagnostic(s) across {} kernel(s)", reports.len());
     }
     Ok(())
 }

@@ -166,6 +166,23 @@ impl Controller {
         self.buffer.split_off(start)
     }
 
+    /// Debug path of [`Controller::execute`]: run the static analyzer
+    /// (`crate::analysis::check_program`) over `prog` against this
+    /// array's geometry first and refuse to dispatch a program with any
+    /// diagnostic. Costs one analysis pass per call — use it in tests
+    /// and debugging sessions, not on the measured hot path.
+    pub fn execute_checked(&mut self, prog: &Program) -> crate::error::Result<&[u64]> {
+        let shape = crate::analysis::ArrayShape::of(&self.array);
+        let diags = crate::analysis::check_program(prog, &shape);
+        if let Some(first) = diags.first() {
+            crate::error::bail!(
+                "program rejected by static analysis ({} diagnostic(s)); first: {first}",
+                diags.len()
+            );
+        }
+        Ok(self.execute(prog))
+    }
+
     fn run_program(&mut self, prog: &Program) {
         if self.array.is_threaded() {
             for span in prog.spans() {

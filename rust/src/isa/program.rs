@@ -198,6 +198,14 @@ impl Program {
     }
 
     /// Highest bit-column referenced (for width validation).
+    ///
+    /// Zero-width `Read`/`ClearColumns` ranges reference no columns and
+    /// contribute nothing; a range whose end `base + width - 1` exceeds
+    /// `u16::MAX` saturates there (the range is out of bounds for every
+    /// real array width, and saturation keeps it reported as such
+    /// instead of wrapping around to a small column). The per-column
+    /// diagnosis lives in `crate::analysis` (rule W01); this is the
+    /// summary the quick width checks use.
     pub fn max_column(&self) -> Option<u16> {
         self.instrs
             .iter()
@@ -205,9 +213,10 @@ impl Program {
                 Instr::Compare(p) | Instr::Write(p) => {
                     p.iter().map(|&(c, _)| c).max()
                 }
-                Instr::Read { base, width } => Some(base + width - 1),
+                Instr::Read { base, width } | Instr::ClearColumns { base, width } => width
+                    .checked_sub(1)
+                    .map(|w| base.saturating_add(w)),
                 Instr::ReduceField { col } => Some(*col),
-                Instr::ClearColumns { base, width } => Some(base + width - 1),
                 _ => None,
             })
             .max()
@@ -237,6 +246,37 @@ mod tests {
         assert_eq!(p.n_passes(), 1);
         assert_eq!(p.cycle_estimate(), 1 + 2 + 1);
         assert_eq!(p.max_column(), Some(7));
+    }
+
+    #[test]
+    fn max_column_ignores_zero_width_ranges() {
+        // width == 0 used to evaluate `base + width - 1`, panicking in
+        // debug builds and wrapping to u16::MAX in release
+        let mut p = Program::new();
+        p.push(Instr::Read { base: 5, width: 0 });
+        p.push(Instr::ClearColumns { base: 9, width: 0 });
+        assert_eq!(p.max_column(), None);
+        // a real reference alongside the empty ranges still wins
+        p.push(Instr::ReduceField { col: 3 });
+        assert_eq!(p.max_column(), Some(3));
+    }
+
+    #[test]
+    fn max_column_saturates_instead_of_overflowing_u16() {
+        // base + width - 1 > u16::MAX used to wrap around to a small
+        // column; it must stay pinned at the top instead
+        let mut p = Program::new();
+        p.push(Instr::Read {
+            base: u16::MAX,
+            width: 4,
+        });
+        assert_eq!(p.max_column(), Some(u16::MAX));
+        let mut q = Program::new();
+        q.push(Instr::ClearColumns {
+            base: u16::MAX - 1,
+            width: u16::MAX,
+        });
+        assert_eq!(q.max_column(), Some(u16::MAX));
     }
 
     #[test]

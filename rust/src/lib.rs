@@ -27,6 +27,7 @@
 )]
 
 pub mod algorithms;
+pub mod analysis;
 pub mod cli;
 pub mod controller;
 pub mod error;

@@ -172,8 +172,31 @@ impl PrinsArray {
 
     // ----- broadcast associative instructions ---------------------------
 
+    /// Debug-build twin of the static analyzer's W01/W02 rules
+    /// (`crate::analysis`): assert every pattern column is in bounds and
+    /// no column is bound twice. The `cfg!` guard keeps release builds
+    /// zero-cost (no loop, no branch); debug CI catches violations in
+    /// programs the analyzer never saw (hand-stepped instructions,
+    /// generated microcode).
+    fn debug_check_pattern(&self, pattern: &Pattern) {
+        if cfg!(debug_assertions) {
+            for (i, &(c, _)) in pattern.iter().enumerate() {
+                debug_assert!(
+                    (c as usize) < self.width,
+                    "pattern column {c} out of bounds (width {}) — analyzer rule W01",
+                    self.width
+                );
+                debug_assert!(
+                    !pattern[..i].iter().any(|&(c2, _)| c2 == c),
+                    "pattern binds column {c} more than once — analyzer rule W02"
+                );
+            }
+        }
+    }
+
     /// Broadcast compare: tag matching rows in every module (1 cycle).
     pub fn compare(&mut self, pattern: &Pattern) {
+        self.debug_check_pattern(pattern);
         if self.is_threaded() {
             self.execute_ops(&[StripeOp::Compare(pattern)]);
         } else {
@@ -186,6 +209,7 @@ impl PrinsArray {
 
     /// Broadcast write: pattern into every tagged row (2 cycles).
     pub fn write(&mut self, pattern: &Pattern) {
+        self.debug_check_pattern(pattern);
         if self.is_threaded() {
             self.execute_ops(&[StripeOp::Write(pattern)]);
         } else {
@@ -200,6 +224,8 @@ impl PrinsArray {
     /// executed by the fused one-traversal kernel. Results and stats are
     /// exactly `compare(cpat); write(wpat)`.
     pub fn pass(&mut self, cpat: &Pattern, wpat: &Pattern) {
+        self.debug_check_pattern(cpat);
+        self.debug_check_pattern(wpat);
         if self.is_threaded() {
             self.execute_ops(&[StripeOp::Pass(cpat, wpat)]);
         } else {
@@ -218,6 +244,15 @@ impl PrinsArray {
     /// kernel. Callers (the controller) must not put serializing
     /// instructions in a span.
     pub fn execute_span(&mut self, instrs: &[Instr]) {
+        // threaded spans bypass compare()/write(), so the debug W01/W02
+        // twin re-checks here
+        if cfg!(debug_assertions) {
+            for instr in instrs {
+                if let Instr::Compare(p) | Instr::Write(p) = instr {
+                    self.debug_check_pattern(p);
+                }
+            }
+        }
         let mut ops: Vec<StripeOp> = Vec::with_capacity(instrs.len());
         let mut i = 0;
         while i < instrs.len() {

@@ -2,11 +2,13 @@
 //! (substitution ledger in DESIGN.md §1).
 
 pub mod graph;
+pub mod programs;
 pub mod rng;
 pub mod sparse;
 pub mod vectors;
 
 pub use graph::{synth_power_law, synth_rmat, Graph, PaperGraph, PAPER_GRAPHS};
+pub use programs::random_program;
 pub use rng::Rng;
 pub use sparse::{synth_csr, Csr, PaperMatrix, PAPER_MATRICES};
 pub use vectors::{synth_hist_samples, synth_samples, synth_uniform};

@@ -1,0 +1,252 @@
+//! Registry-wide static verification gate (`prins verify` as a test).
+//!
+//! Proves, without executing a single query instruction, that every
+//! registered kernel's synthesized microprograms satisfy the analyzer's
+//! rule set over the seeded shape grid — and that the analyzer itself
+//! catches deliberately-broken fixtures. Also hosts the satellite
+//! gates: the registry usage/arity round-trip and the random-program
+//! structural property tests.
+
+use prins::algorithms::kernel::{registry, ResidentDyn};
+use prins::analysis::{
+    check_program, verify_registry, ArrayShape, RuleId, Severity,
+};
+use prins::controller::Controller;
+use prins::host::rack::PrinsRack;
+use prins::isa::{Instr, Program};
+use prins::rcam::PrinsArray;
+use prins::workloads::{random_program, Rng};
+use std::collections::HashSet;
+
+/// Load `entry` on a 1-shard rack with a small seeded dataset.
+fn small_resident(entry: &prins::algorithms::kernel::KernelEntry) -> Box<dyn ResidentDyn> {
+    let rack = PrinsRack::new(1);
+    (entry.synth_load)(&rack, 24, 2, 7)
+}
+
+// ---------------------------------------------------------------- tentpole
+
+#[test]
+fn every_registered_kernel_verifies_clean_over_the_shape_grid() {
+    let reports = verify_registry();
+    let names: HashSet<&str> = reports.iter().map(|r| r.kernel).collect();
+    assert_eq!(
+        names,
+        ["hist", "dp", "ed", "spmv", "search"].into_iter().collect(),
+        "registry drifted: update this gate alongside REGISTRY"
+    );
+    for r in &reports {
+        assert!(r.shapes > 0 && r.checked_programs > 0 && r.checked_instructions > 0);
+        assert!(
+            r.is_clean(),
+            "{}: {} diagnostic(s): {:?}",
+            r.kernel,
+            r.diagnostics.len(),
+            r.diagnostics
+                .iter()
+                .map(|(c, d)| format!("[{c}] {d}"))
+                .collect::<Vec<_>>()
+        );
+    }
+}
+
+#[test]
+fn c01_write_freedom_is_a_structural_proof_for_claiming_kernels() {
+    // beyond the driver's C01 pass: inspect the synthesized instruction
+    // stream directly — a write-free query plan contains literally zero
+    // Write/ClearColumns instructions
+    let claiming: Vec<_> = registry().iter().filter(|e| e.write_free_queries).collect();
+    assert!(
+        claiming.iter().map(|e| e.name).collect::<HashSet<_>>()
+            == ["hist", "search"].into_iter().collect(),
+        "write_free_queries set drifted: update this gate"
+    );
+    for entry in claiming {
+        let res = small_resident(entry);
+        for q in 0..4 {
+            for pq in res.query_plans_seeded(q, 7) {
+                for prog in &pq.plan.programs {
+                    for instr in &prog.instrs {
+                        assert!(
+                            !matches!(instr, Instr::Write(_) | Instr::ClearColumns { .. }),
+                            "{}: {instr:?} in a write-free query",
+                            entry.name
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn c02_every_plan_estimate_equals_the_kernel_floor() {
+    for entry in registry() {
+        for &shards in &[1usize, 2] {
+            let rack = PrinsRack::new(shards);
+            let res = (entry.synth_load)(&rack, 48, 3, 11);
+            for q in 0..4 {
+                let plans = res.query_plans_seeded(q, 11);
+                assert_eq!(plans.len(), shards);
+                for (s, pq) in plans.iter().enumerate() {
+                    assert_eq!(
+                        pq.plan.cycle_estimate(),
+                        pq.floor_cycles,
+                        "{} shard {s}/{shards} q={q}: plan estimate != analytic floor",
+                        entry.name
+                    );
+                }
+                // the dyn-level floor is the slowest shard's floor — the
+                // plans must reproduce it exactly
+                let max_floor = plans.iter().map(|p| p.floor_cycles).max().unwrap();
+                assert_eq!(max_floor, res.query_floor_seeded(q, 11), "{}", entry.name);
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------- broken fixtures
+
+/// A fixture that violates W01 (column 99 on a 16-wide array), W02
+/// (contradictory bits on column 3), and T01 twice (a shift that
+/// flushes the whole 32-row chain, then a write under the resulting
+/// statically-empty tags).
+fn broken_fixture() -> Program {
+    let mut p = Program::new();
+    p.push(Instr::Compare(vec![(99, true)]));
+    p.push(Instr::Compare(vec![(3, true), (3, false)]));
+    p.push(Instr::SetTagsAll);
+    p.push(Instr::ShiftTagsUp(32));
+    p.push(Instr::Write(vec![(0, true)]));
+    p
+}
+
+#[test]
+fn broken_fixture_trips_w01_w02_and_t01() {
+    let shape = ArrayShape {
+        rows: 32,
+        rows_per_module: 16,
+        width: 16,
+    };
+    let diags = check_program(&broken_fixture(), &shape);
+    let fired: HashSet<RuleId> = diags.iter().map(|d| d.rule).collect();
+    assert!(
+        fired.is_superset(&[RuleId::W01, RuleId::W02, RuleId::T01].into_iter().collect()),
+        "fired: {fired:?}, diags: {diags:?}"
+    );
+    // the findings are anchored and all errors here
+    assert!(diags.iter().all(|d| d.severity == Severity::Error));
+    assert!(diags.iter().all(|d| d.index.is_some()));
+    // W01 points at the out-of-bounds compare, T01 at the flush and the
+    // dead write
+    assert!(diags.iter().any(|d| d.rule == RuleId::W01 && d.index == Some(0)));
+    assert!(diags.iter().any(|d| d.rule == RuleId::W02 && d.index == Some(1)));
+    assert!(diags.iter().any(|d| d.rule == RuleId::T01 && d.index == Some(3)));
+    assert!(diags.iter().any(|d| d.rule == RuleId::T01 && d.index == Some(4)));
+}
+
+#[test]
+fn execute_checked_rejects_broken_and_accepts_clean_programs() {
+    let mut ctl = Controller::new(PrinsArray::new(2, 16, 16));
+    let err = ctl.execute_checked(&broken_fixture()).unwrap_err();
+    assert!(format!("{err:#}").contains("rejected by static analysis"));
+    assert_eq!(ctl.array.cycles, 0, "rejected program must not execute");
+
+    let mut clean = Program::new();
+    clean.push(Instr::SetTagsAll);
+    clean.push(Instr::Compare(vec![(0, true), (1, false)]));
+    clean.push(Instr::ReduceCount);
+    let out = ctl.execute_checked(&clean).unwrap().to_vec();
+    assert_eq!(out.len(), 1);
+    assert!(ctl.array.cycles > 0);
+}
+
+// ------------------------------------------- satellite: registry round-trip
+
+#[test]
+fn registry_usage_strings_round_trip_their_own_arities() {
+    for entry in registry() {
+        // grammar lines carry exactly the advertised arity:
+        //   query_usage    = VERB id <arity args>
+        //   one_shot_usage = VERB <arity args>
+        //   load_usage     = LOAD <VERB> ...
+        let q_tokens: Vec<&str> = entry.query_usage.split_whitespace().collect();
+        assert_eq!(q_tokens.len(), entry.query_arity + 2, "{}", entry.query_usage);
+        assert_eq!(q_tokens[0], entry.verb);
+        assert_eq!(q_tokens[1], "id");
+        let o_tokens: Vec<&str> = entry.one_shot_usage.split_whitespace().collect();
+        assert_eq!(o_tokens.len(), entry.one_shot_arity + 1, "{}", entry.one_shot_usage);
+        assert_eq!(o_tokens[0], entry.verb);
+        assert!(
+            entry.load_usage.starts_with(&format!("LOAD {} ", entry.verb)),
+            "{}",
+            entry.load_usage
+        );
+
+        // and the advertised query arity round-trips through the
+        // kernel's own parser: exactly-arity numeric args parse and run,
+        // any other count is rejected before parsing
+        let mut res = small_resident(entry);
+        let args: Vec<String> = (1..=entry.query_arity).map(|i| i.to_string()).collect();
+        let arg_refs: Vec<&str> = args.iter().map(|s| s.as_str()).collect();
+        res.query_args(&arg_refs)
+            .unwrap_or_else(|e| panic!("{}: arity-{} args rejected: {e:#}",
+                entry.name, entry.query_arity));
+        let mut extra = args.clone();
+        extra.push("1".into());
+        let extra_refs: Vec<&str> = extra.iter().map(|s| s.as_str()).collect();
+        assert!(
+            res.query_args(&extra_refs).is_err(),
+            "{}: arity {} accepted {} args",
+            entry.name,
+            entry.query_arity,
+            extra.len()
+        );
+    }
+}
+
+// --------------------------------------- satellite: random-program property
+
+#[test]
+fn random_programs_span_partition_and_cycle_accounting_hold() {
+    let shape = ArrayShape {
+        rows: 64,
+        rows_per_module: 16,
+        width: 32,
+    };
+    for seed in 0..32u64 {
+        let mut rng = Rng::seed_from(seed);
+        let len = 1 + (seed as usize % 64);
+        let p = random_program(&mut rng, shape.width as u16, 8, len);
+        assert_eq!(p.len(), len);
+
+        // spans() exactly partitions the instruction stream…
+        let spans: Vec<_> = p.spans().collect();
+        let flat: Vec<Instr> = spans
+            .iter()
+            .flat_map(|s| s.instrs.iter().cloned())
+            .collect();
+        assert_eq!(flat, p.instrs, "seed {seed}: spans lose or reorder instrs");
+        for (i, s) in spans.iter().enumerate() {
+            assert!(!s.instrs.is_empty(), "seed {seed}: empty span");
+            // …into maximal uniform runs: every instr agrees with its
+            // span's class, and adjacent spans alternate
+            assert!(s.instrs.iter().all(|x| x.is_data_parallel() == s.data_parallel));
+            if i > 0 {
+                assert_ne!(spans[i - 1].data_parallel, s.data_parallel);
+            }
+        }
+
+        // …and the program estimate is exactly the sum over spans
+        let span_cycles: u64 = spans
+            .iter()
+            .map(|s| s.instrs.iter().map(|x| x.cycles()).sum::<u64>())
+            .sum();
+        assert_eq!(p.cycle_estimate(), span_cycles, "seed {seed}");
+
+        // well-formed-by-construction: the analyzer proves it clean
+        // (max_shift 8 stays below rows_per_module and rows)
+        let diags = check_program(&p, &shape);
+        assert!(diags.is_empty(), "seed {seed}: {diags:?}");
+    }
+}
