@@ -1,0 +1,165 @@
+//! BER → accuracy fidelity bench (DESIGN.md §Reliability): for every
+//! registered kernel and every bit-error rate in the sweep, run the
+//! same seeded workload three ways —
+//!
+//!   1. **ideal**: no fault layer; the reference bits per query,
+//!   2. **raw**: faults on, scrub/retry recovery *off* — the
+//!      single-attempt accuracy floor (`exact_rate`),
+//!   3. **recovered**: faults on, recovery *on* — scrubbed accuracy
+//!      (`recovered_rate`) plus the repair counters and the recovery
+//!      overhead charged to the cycle ledger,
+//!
+//! and write one record per (kernel, BER) point to
+//! `BENCH_fidelity.json` at the repository root. Fault draws use
+//! common random numbers across BERs (a cell that flips at BER b also
+//! flips at every BER > b), so `exact_rate` is monotone non-increasing
+//! in BER by construction — the CI smoke gate asserts exactly that.
+//!
+//! Flags (after `cargo bench --bench fidelity -- ...`):
+//!   --rows N          dataset rows (default 256; dense workloads cap
+//!                     at 128 rows — printed when the cap applies)
+//!   --dims D          vector dims for dense kernels (default 2)
+//!   --queries Q       queries per point (default 4)
+//!   --ber a,b,c       BER sweep (default 0,0.0005,0.005)
+//!   --fault-seed S    fault-stream seed (default 7)
+//!   --stuck N         random stuck-at cells per shard array (default 0)
+
+use prins::host::rack::PrinsRack;
+use prins::metrics::bench::{
+    arg_u64, ber_sweep_from_args, write_fidelity_json, FidelityRecord,
+};
+use prins::reliability::FaultModel;
+use std::time::Instant;
+
+const SEED: u64 = 7;
+const DENSE_CAP: usize = 128;
+
+/// Mean per-element relative error of `got` vs the ideal `idl` bits,
+/// each element capped at 1.0 (a completely wrong element costs 1.0, so
+/// the mean stays in [0, 1] and one garbage word cannot swamp the run).
+fn rel_err(bits_f32: bool, got: &[u64], idl: &[u64]) -> f64 {
+    if got.len() != idl.len() || idl.is_empty() {
+        return 1.0;
+    }
+    let mut sum = 0.0;
+    for (&g, &r) in got.iter().zip(idl) {
+        let e = if bits_f32 {
+            let g = f32::from_bits(g as u32) as f64;
+            let r = f32::from_bits(r as u32) as f64;
+            (g - r).abs() / r.abs().max(1.0)
+        } else {
+            g.abs_diff(r) as f64 / (r as f64).max(1.0)
+        };
+        sum += if e.is_nan() { 1.0 } else { e.min(1.0) };
+    }
+    sum / idl.len() as f64
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let rows = arg_u64(&args, "--rows", 256) as usize;
+    let dims = arg_u64(&args, "--dims", 2) as usize;
+    let queries = arg_u64(&args, "--queries", 4) as usize;
+    let bers = ber_sweep_from_args(&args, &[0.0, 5e-4, 5e-3]);
+    let fault_seed = arg_u64(&args, "--fault-seed", SEED);
+    let stuck = arg_u64(&args, "--stuck", 0) as usize;
+    assert!(queries > 0, "--queries must be positive");
+
+    if rows > DENSE_CAP {
+        println!("note: dense kernels capped at {DENSE_CAP} rows (compare-only kernels use {rows})");
+    }
+    println!(
+        "rows = {rows}, dims = {dims}, queries = {queries}, ber sweep = {bers:?}, \
+         fault seed = {fault_seed}, stuck = {stuck}"
+    );
+
+    let ideal_rack = PrinsRack::new(1);
+    let mut records: Vec<FidelityRecord> = Vec::new();
+    for entry in prins::algorithms::kernel::registry() {
+        let nrows = if entry.dense { rows.min(DENSE_CAP) } else { rows };
+
+        // ideal reference bits, one result per query
+        let t0 = Instant::now();
+        let mut res = (entry.synth_load)(&ideal_rack, nrows, dims, SEED);
+        let ideal: Vec<Vec<u64>> = (0..queries)
+            .map(|q| res.query_seeded(q, SEED).bits)
+            .collect();
+
+        for &ber in &bers {
+            let t1 = Instant::now();
+            let model = FaultModel::uniform(ber, fault_seed).with_random_stuck(stuck);
+
+            // raw: single attempt, no scrub — the accuracy floor
+            let raw_rack = PrinsRack::new(1)
+                .with_fault(model.clone().with_recovery(false))
+                .expect("bench fault model rejected");
+            let mut raw = (entry.synth_load)(&raw_rack, nrows, dims, SEED);
+            let exact = (0..queries)
+                .filter(|&q| raw.query_seeded(q, SEED).bits == ideal[q])
+                .count();
+
+            // recovered: scrub/retry on, overhead charged to the ledger
+            let rec_rack = PrinsRack::new(1)
+                .with_fault(model)
+                .expect("bench fault model rejected");
+            let mut rec = (entry.synth_load)(&rec_rack, nrows, dims, SEED);
+            let (mut recovered, mut err_sum) = (0usize, 0.0f64);
+            let (mut injected, mut detected, mut repaired, mut residual) = (0u64, 0u64, 0u64, 0u64);
+            let (mut retries, mut overhead) = (0u64, 0u64);
+            for q in 0..queries {
+                let out = rec.query_seeded(q, SEED);
+                if out.bits == ideal[q] {
+                    recovered += 1;
+                }
+                err_sum += rel_err(entry.bits_f32, &out.bits, &ideal[q]);
+                let f = out.fidelity.expect("fault-layer query returned no fidelity");
+                injected += f.injected;
+                detected += f.detected;
+                repaired += f.repaired;
+                residual += f.residual;
+                retries += f.retries;
+                overhead += f.overhead_cycles;
+            }
+
+            let wall = if ber == bers[0] {
+                t0.elapsed().as_secs_f64()
+            } else {
+                t1.elapsed().as_secs_f64()
+            };
+            let exact_rate = exact as f64 / queries as f64;
+            let recovered_rate = recovered as f64 / queries as f64;
+            let mean_rel_err = err_sum / queries as f64;
+            println!(
+                "{:<6} ber={ber:<8.1e} exact={exact_rate:.2} recovered={recovered_rate:.2} \
+                 rel_err={mean_rel_err:.2e} injected={injected:<6} detected={detected:<5} \
+                 repaired={repaired:<5} residual={residual:<4} retries={retries:<3} \
+                 overhead={overhead} cycles",
+                entry.name
+            );
+            records.push(FidelityRecord {
+                bench: entry.name.into(),
+                rows: nrows as u64,
+                queries: queries as u64,
+                ber,
+                exact_rate,
+                recovered_rate,
+                mean_rel_err,
+                injected,
+                detected,
+                repaired,
+                residual,
+                retries,
+                overhead_cycles: overhead,
+                wall_s: wall,
+            });
+        }
+    }
+
+    match write_fidelity_json("fidelity", &records) {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => {
+            eprintln!("failed to write BENCH_fidelity.json: {e}");
+            std::process::exit(1);
+        }
+    }
+}

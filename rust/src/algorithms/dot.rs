@@ -258,6 +258,11 @@ impl Kernel for DotKernel {
         (self.n * self.layout.dims) as u64 // one write per stored attribute
     }
 
+    fn resident_columns(&self) -> Range<u16> {
+        // the D stored attributes; h/mult/acc/out are per-query scratch
+        0..(self.layout.dims as u16 * 33)
+    }
+
     fn query_shard(
         &self,
         ctl: &mut Controller,
@@ -357,6 +362,7 @@ pub const ENTRY: KernelEntry = KernelEntry {
     one_shot_usage: "DP n dims seed",
     dense: true,
     write_free_queries: false,
+    bits_f32: true,
     flops: |n, dims| 2.0 * (n * dims) as f64,
     load: load_args,
     synth_load,

@@ -323,6 +323,12 @@ impl Kernel for EuclideanKernel {
         (self.n * self.layout.dims) as u64 // one write per stored attribute
     }
 
+    fn resident_columns(&self) -> Range<u16> {
+        // the D stored attributes; c/diff/sq/acc/ycopy/scratch are
+        // per-query work areas
+        0..(self.layout.dims as u16 * 33)
+    }
+
     fn query_shard(
         &self,
         ctl: &mut Controller,
@@ -473,6 +479,7 @@ pub const ENTRY: KernelEntry = KernelEntry {
     one_shot_usage: "ED n dims k seed",
     dense: true,
     write_free_queries: false,
+    bits_f32: true,
     flops: |n, dims| 3.0 * (n * dims) as f64,
     load: load_args,
     synth_load,

@@ -180,6 +180,11 @@ impl Kernel for HistogramKernel {
         2 * self.n as u64 // sample value + valid bit per row
     }
 
+    fn resident_columns(&self) -> Range<u16> {
+        // sample field plus the valid bit — the whole stored row
+        self.sample.base..(self.valid.base + self.valid.width)
+    }
+
     fn query_shard(
         &self,
         ctl: &mut Controller,
@@ -274,6 +279,7 @@ pub const ENTRY: KernelEntry = KernelEntry {
     one_shot_usage: "HIST n seed",
     dense: false,
     write_free_queries: true,
+    bits_f32: false,
     flops: |n, _dims| 2.0 * n as f64,
     load: load_args,
     synth_load,

@@ -39,6 +39,7 @@ use crate::error::{ensure, Result};
 use crate::host::rack::{PrinsRack, RackStats};
 use crate::rcam::shard::{ShardPlan, CMD_BYTES};
 use crate::rcam::PrinsArray;
+use crate::reliability::{FidelityReport, Scrubber, BACKOFF_BASE_CYCLES, MAX_QUERY_RETRIES};
 use crate::storage::StorageManager;
 use std::ops::Range;
 
@@ -134,6 +135,13 @@ pub trait Kernel: Sized + Send {
     /// [`Resident::load`] cannot ship silently.
     fn load_writes(&self) -> u64;
 
+    /// Bit-columns holding this shard's *resident dataset* fields, as
+    /// opposed to scratch work areas the query program overwrites
+    /// anyway. This is what the reliability layer protects: the
+    /// scrubber's golden copy covers exactly these columns, and ambient
+    /// retention decay corrupts them between queries.
+    fn resident_columns(&self) -> Range<u16>;
+
     /// One query against the resident shard rows. `range` is this
     /// shard's slice of the global plan (readout slicing, global row
     /// offsets). Must not rewrite stored dataset fields.
@@ -198,6 +206,9 @@ pub struct ShardSlot<K> {
     pub sm: StorageManager,
     /// The shard's loaded kernel.
     pub kern: K,
+    /// ECC-style scrubber over the resident columns — present only when
+    /// the rack carries a fault model with recovery enabled.
+    pub scrub: Option<Scrubber>,
 }
 
 /// Result of one query on a [`Resident`] dataset (or of the [`sharded`]
@@ -207,6 +218,9 @@ pub struct Sharded<K: ShardMerge> {
     pub merged: K::Merged,
     /// Rack-level cycle/energy statistics (slowest shard + host link).
     pub rack: RackStats,
+    /// Combined reliability report across shards — `None` unless the
+    /// rack carries a fault model ([`crate::host::rack::PrinsRack::with_fault`]).
+    pub fidelity: Option<FidelityReport>,
 }
 
 /// A rack-resident dataset of any registered kernel: partitioned over
@@ -238,10 +252,28 @@ impl<K: ShardMerge> Resident<K> {
             let mut array = rack.shard_array(rows, width);
             let mut sm = StorageManager::new(array.total_rows());
             let kern = K::load_range(&mut sm, &mut array, data, r);
+            // reliability layer, attached after the kernel's load-stats
+            // window closed so load accounting is byte-identical with
+            // and without faults: capture the golden copy through the
+            // still-ideal storage path, install the fault model (F01
+            // checked against this shard's concrete shape), then apply
+            // write-disturb from the load burst
+            let mut scrub = None;
+            if let Some(model) = rack.fault() {
+                let cols = kern.resident_columns();
+                if model.recovery {
+                    scrub = Some(Scrubber::capture(&array, cols.clone()));
+                }
+                array
+                    .enable_faults(model.clone())
+                    .expect("rack fault model rejected for shard array");
+                array.apply_disturb(cols);
+            }
             ShardSlot {
                 ctl: Controller::new(array),
                 sm,
                 kern,
+                scrub,
             }
         });
         let stats: Vec<ExecStats> = shards.iter().map(|s| s.kern.load_stats().clone()).collect();
@@ -280,10 +312,24 @@ impl<K: ShardMerge> Resident<K> {
         let rack = &self.rack;
         let shards = &mut self.shards;
         let runs = rack.query_shards(shards, |i, sh| {
-            sh.kern
-                .query_shard(&mut sh.ctl, &sh.sm, &plan.ranges[i], params)
+            if sh.ctl.array.has_faults() {
+                query_shard_faulty(sh, &plan.ranges[i], params)
+            } else {
+                let (out, stats) =
+                    sh.kern
+                        .query_shard(&mut sh.ctl, &sh.sm, &plan.ranges[i], params);
+                (out, stats, None)
+            }
         });
-        let (outs, stats): (Vec<_>, Vec<_>) = runs.into_iter().unzip();
+        let mut outs = Vec::with_capacity(runs.len());
+        let mut stats = Vec::with_capacity(runs.len());
+        let mut fids = Vec::new();
+        for (o, s, f) in runs {
+            outs.push(o);
+            stats.push(s);
+            fids.extend(f);
+        }
+        let fidelity = FidelityReport::merge_all(fids);
         let merged = K::merge(outs, plan, params);
         let mut msgs = Vec::with_capacity(2 * plan.shards());
         for (sh, rng) in self.shards.iter().zip(&self.plan.ranges) {
@@ -294,6 +340,7 @@ impl<K: ShardMerge> Resident<K> {
         Sharded {
             merged,
             rack: self.rack.finish(stats, &msgs),
+            fidelity,
         }
     }
 
@@ -321,8 +368,79 @@ impl<K: ShardMerge> Resident<K> {
                 Vec::new()
             },
             rack: r.rack,
+            fidelity: r.fidelity,
         }
     }
+}
+
+/// The reliability-path shard query (DESIGN.md §Reliability): ambient
+/// retention decay over the resident columns, the kernel's query
+/// program, then — when recovery is on — a scrub pass and bounded retry
+/// with exponential backoff. The returned stats window covers the whole
+/// dance (kernel attempts, every charged scrub read/rewrite, backoff
+/// idle cycles), so recovery overhead lands in the rack figures instead
+/// of vanishing; the kernel's own per-attempt stats are discarded.
+///
+/// The query degrades gracefully instead of failing: after
+/// [`MAX_QUERY_RETRIES`] the last attempt's output is returned as-is and
+/// the report's `residual`/`fidelity` fields say how much to trust it.
+fn query_shard_faulty<K: Kernel>(
+    sh: &mut ShardSlot<K>,
+    range: &Range<usize>,
+    params: &K::Params,
+) -> (K::Output, ExecStats, Option<FidelityReport>) {
+    let cols = sh.kern.resident_columns();
+    let c0 = sh.ctl.array.cycles;
+    let l0 = sh.ctl.array.ledger();
+    let f0 = sh.ctl.array.fault_stats().unwrap_or_default();
+    let read_ber = sh
+        .ctl
+        .array
+        .fault_model()
+        .map(|m| m.read_ber)
+        .unwrap_or(0.0);
+    sh.ctl.array.apply_retention(cols);
+    let mut retries = 0u64;
+    let (mut detected, mut repaired, mut residual) = (0u64, 0u64, 0u64);
+    let (out, attempt_cycles, draws) = loop {
+        let a0 = sh.ctl.array.cycles;
+        let d0 = sh.ctl.array.fault_stats().unwrap_or_default().read_draws;
+        let (out, _inner) = sh.kern.query_shard(&mut sh.ctl, &sh.sm, range, params);
+        let attempt_cycles = sh.ctl.array.cycles - a0;
+        let draws = sh.ctl.array.fault_stats().unwrap_or_default().read_draws - d0;
+        let Some(scrubber) = &sh.scrub else {
+            // recovery off: raw faulty device, single attempt
+            break (out, attempt_cycles, draws);
+        };
+        let rep = scrubber.scrub(&mut sh.ctl.array);
+        detected += rep.mismatches;
+        repaired += rep.rewritten;
+        residual = rep.residual;
+        if rep.mismatches == 0 || retries >= MAX_QUERY_RETRIES {
+            break (out, attempt_cycles, draws);
+        }
+        retries += 1;
+        sh.ctl.array.add_idle_cycles(BACKOFF_BASE_CYCLES << retries);
+    };
+    let stats = ExecStats::since(&sh.ctl.array, c0, &l0);
+    let injected = sh
+        .ctl
+        .array
+        .fault_stats()
+        .unwrap_or_default()
+        .minus(&f0)
+        .injected();
+    let fidelity = FidelityReport {
+        // P(every read draw of the final attempt was clean)
+        fidelity: (1.0 - read_ber).powf(draws as f64),
+        injected,
+        detected,
+        repaired,
+        residual,
+        retries,
+        overhead_cycles: stats.cycles - attempt_cycles,
+    };
+    (out, stats, Some(fidelity))
 }
 
 /// The one generic one-shot: [`Resident::load`] followed by a single
@@ -351,6 +469,9 @@ pub struct QueryOut {
     pub bits: Vec<u64>,
     /// Rack-level stats of this query.
     pub rack: RackStats,
+    /// Combined reliability report — `None` on an ideal (fault-free)
+    /// rack, so wire replies stay byte-identical unless faults are on.
+    pub fidelity: Option<FidelityReport>,
 }
 
 /// A type-erased [`Resident`] dataset — what the server's per-session
@@ -462,6 +583,10 @@ pub struct KernelEntry {
     /// Whether queries are compare-only (zero writes — asserted by the
     /// registry-driven wear gates for kernels that claim it).
     pub write_free_queries: bool,
+    /// Whether [`ShardMerge::bits`] encodes f32 words (`to_bits`) rather
+    /// than exact integers — the fidelity bench decodes accordingly
+    /// (relative error vs bit-exact match).
+    pub bits_f32: bool,
     /// Host-FLOP estimate of one query (CLI efficiency print).
     pub flops: fn(n: usize, dims: usize) -> f64,
     /// Server `LOAD <VERB> args…` handler: parse, synthesize, load.

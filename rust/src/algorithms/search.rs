@@ -193,6 +193,11 @@ impl Kernel for SearchKernel {
         2 * self.n as u64 // key value + valid bit per row
     }
 
+    fn resident_columns(&self) -> Range<u16> {
+        // key field plus the valid bit — the whole stored row
+        self.key.base..(self.valid.base + self.valid.width)
+    }
+
     fn query_shard(
         &self,
         ctl: &mut Controller,
@@ -297,6 +302,7 @@ pub const ENTRY: KernelEntry = KernelEntry {
     one_shot_usage: "SEARCH n seed lo hi",
     dense: false,
     write_free_queries: true,
+    bits_f32: false,
     flops: |n, _dims| n as f64, // one key comparison per resident row
     load: load_args,
     synth_load,

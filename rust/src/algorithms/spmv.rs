@@ -478,6 +478,12 @@ impl Kernel for SpmvKernel {
         4 * self.nnz as u64 // rowid, colid, sign, magnitude per nonzero
     }
 
+    fn resident_columns(&self) -> Range<u16> {
+        // rowid | colid | a_sign | a_mag hold the matrix; everything
+        // from b_sign on is per-query broadcast/scratch
+        self.layout.rowid.base..(self.layout.a_mag.base + self.layout.a_mag.width)
+    }
+
     fn query_shard(
         &self,
         ctl: &mut Controller,
@@ -584,6 +590,7 @@ pub const ENTRY: KernelEntry = KernelEntry {
     one_shot_usage: "SPMV n nnz seed",
     dense: true,
     write_free_queries: false,
+    bits_f32: true,
     flops: |n, _dims| 2.0 * (n * 8) as f64, // synth density: 8 nnz per row
     load: load_args,
     synth_load,

@@ -21,6 +21,7 @@
 //! | S01  | lint      | span classification agrees with an independent threaded-path whitelist |
 //! | C01  | contract  | `write_free_queries` kernels synthesize zero `Write`/`ClearColumns` |
 //! | C02  | contract  | the synthesized plan's static cycle estimate equals `query_floor_cycles` |
+//! | F01  | config    | fault-model sanity: BERs in `[0, 1)`, finite wear coupling, stuck cells inside the array |
 //!
 //! Program-shape rules (W01/W02/T01/S01) run per [`Program`] via
 //! [`check_program`]; kernel contracts (C01/C02) run over a
@@ -62,6 +63,12 @@ pub enum RuleId {
     /// Floor consistency: the plan's static cycle estimate must equal
     /// the kernel's `query_floor_cycles` for the same shape.
     C02,
+    /// Fault-model sanity: every bit-error rate must lie in `[0, 1)`,
+    /// wear coupling must be finite and non-negative, and every explicit
+    /// stuck-at cell must address a cell inside the array. Enforced by
+    /// [`crate::rcam::PrinsArray::enable_faults`] before any fault is
+    /// ever injected.
+    F01,
 }
 
 impl RuleId {
@@ -74,6 +81,7 @@ impl RuleId {
             RuleId::S01 => "S01",
             RuleId::C01 => "C01",
             RuleId::C02 => "C02",
+            RuleId::F01 => "F01",
         }
     }
 }

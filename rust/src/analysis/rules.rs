@@ -1,11 +1,14 @@
 //! The program-shape rules of the static analyzer: W01 column bounds,
 //! W02 pattern conflicts, T01 tag liveness, S01 span safety. Each rule
 //! is a pure function `(&Program[, &ArrayShape]) -> Vec<Diagnostic>`;
-//! [`super::check_program`] runs them all.
+//! [`super::check_program`] runs them all. F01 fault-config sanity is
+//! the one non-program rule here: it checks a [`FaultModel`] against an
+//! [`ArrayShape`] and gates `PrinsArray::enable_faults`.
 
 use super::lattice::TagState;
 use super::{ArrayShape, Diagnostic, RuleId, Severity};
 use crate::isa::{Instr, Pat, Program};
+use crate::reliability::FaultModel;
 
 /// W01: every referenced bit-column must lie below the array width.
 /// Covers pattern columns (`Compare`/`Write`), column ranges
@@ -234,9 +237,59 @@ pub fn span_safety(prog: &Program) -> Vec<Diagnostic> {
     out
 }
 
+/// F01: sanity-check a fault model against the array it is about to be
+/// installed on. A bit-error *rate* must be a probability below 1 (a
+/// BER of exactly 1 would deterministically invert every access, which
+/// is a different device, not a fault), wear coupling must be a finite
+/// non-negative factor, and every explicitly placed stuck-at cell must
+/// name a cell the array actually has. All findings are errors:
+/// [`crate::rcam::PrinsArray::enable_faults`] rejects the model if this
+/// returns anything at all, so a misconfigured experiment fails loudly
+/// before the first draw instead of silently clamping.
+pub fn fault_config(model: &FaultModel, shape: &ArrayShape) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for (name, ber) in [
+        ("read_ber", model.read_ber),
+        ("write_ber", model.write_ber),
+        ("retention_ber", model.retention_ber),
+    ] {
+        if !ber.is_finite() || !(0.0..1.0).contains(&ber) {
+            out.push(Diagnostic::global(
+                RuleId::F01,
+                Severity::Error,
+                format!("{name} = {ber} is not a probability in [0, 1)"),
+            ));
+        }
+    }
+    if !model.wear_coupling.is_finite() || model.wear_coupling < 0.0 {
+        out.push(Diagnostic::global(
+            RuleId::F01,
+            Severity::Error,
+            format!(
+                "wear_coupling = {} must be finite and non-negative",
+                model.wear_coupling
+            ),
+        ));
+    }
+    for cell in &model.stuck {
+        if cell.row >= shape.rows || cell.col as usize >= shape.width {
+            out.push(Diagnostic::global(
+                RuleId::F01,
+                Severity::Error,
+                format!(
+                    "stuck cell ({}, {}) outside the {}x{} array",
+                    cell.row, cell.col, shape.rows, shape.width
+                ),
+            ));
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::reliability::StuckCell;
 
     const SHAPE: ArrayShape = ArrayShape {
         rows: 32,
@@ -314,6 +367,47 @@ mod tests {
         assert_eq!(d.len(), 1);
         assert_eq!(d[0].index, Some(2));
         assert_eq!(d[0].severity, Severity::Warning);
+    }
+
+    #[test]
+    fn f01_accepts_sane_models() {
+        assert!(fault_config(&FaultModel::uniform(0.0, 1), &SHAPE).is_empty());
+        assert!(fault_config(&FaultModel::uniform(0.05, 7), &SHAPE).is_empty());
+        let m = FaultModel::uniform(0.01, 3)
+            .with_wear_coupling(1e-6)
+            .with_stuck(vec![StuckCell {
+                row: 31,
+                col: 15,
+                value: true,
+            }]);
+        assert!(fault_config(&m, &SHAPE).is_empty());
+    }
+
+    #[test]
+    fn f01_rejects_bad_bers_and_coupling() {
+        for bad in [1.0, -0.1, 2.0, f64::NAN, f64::INFINITY] {
+            let d = fault_config(&FaultModel::uniform(bad, 1), &SHAPE);
+            // all three BERs are set by uniform(), so all three fire
+            assert_eq!(d.len(), 3, "ber {bad} must be rejected");
+            assert!(d.iter().all(|x| x.rule == RuleId::F01));
+            assert!(d.iter().all(|x| x.severity == Severity::Error));
+        }
+        let m = FaultModel::uniform(0.01, 1).with_wear_coupling(-1.0);
+        assert_eq!(fault_config(&m, &SHAPE).len(), 1);
+        let m = FaultModel::uniform(0.01, 1).with_wear_coupling(f64::NAN);
+        assert_eq!(fault_config(&m, &SHAPE).len(), 1);
+    }
+
+    #[test]
+    fn f01_rejects_out_of_bounds_stuck_cells() {
+        let m = FaultModel::uniform(0.0, 1).with_stuck(vec![
+            StuckCell { row: 32, col: 0, value: true },  // row == rows
+            StuckCell { row: 0, col: 16, value: false }, // col == width
+            StuckCell { row: 5, col: 5, value: true },   // fine
+        ]);
+        let d = fault_config(&m, &SHAPE);
+        assert_eq!(d.len(), 2);
+        assert!(d.iter().all(|x| x.rule == RuleId::F01));
     }
 
     #[test]

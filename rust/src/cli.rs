@@ -2,6 +2,7 @@
 //!
 //!   prins run <kernel|bfs> [--n N] [--dims D] [--seed S]
 //!             [--workers W] [--shards S] [--queries Q]
+//!             [--ber B] [--fault-seed S] [--stuck N]
 //!   prins validate            # PRINS vs golden XLA kernels (needs artifacts/)
 //!   prins serve [--bind ADDR] [--workers W] # TCP storage-appliance front-end
 //!                                           # (protocol: docs/PROTOCOL.md)
@@ -29,6 +30,12 @@
 //! against the resident rows, printing the amortization table — load
 //! cost paid once, query floor per repetition.
 //!
+//! `--ber B` / `--fault-seed S` / `--stuck N` turn on the seeded fault
+//! layer (DESIGN.md §Reliability): every read draws a bit flip with
+//! probability B, N random cells are stuck, and the scrub/retry
+//! recovery path runs after each query. The reply gains a fidelity
+//! line; results at `--ber 0` are bit-identical to the ideal path.
+//!
 //! (Hand-rolled argument parsing; the vendored crate set has no clap.)
 
 use crate::algorithms::kernel::{self, KernelEntry, ResidentDyn};
@@ -37,6 +44,7 @@ use crate::error::{bail, Result};
 use crate::host::rack::{PrinsRack, RackStats};
 use crate::model::figures;
 use crate::rcam::{DeviceModel, ExecBackend, InterconnectModel, PrinsArray};
+use crate::reliability::FaultModel;
 use crate::storage::StorageManager;
 use crate::workloads::*;
 
@@ -46,6 +54,30 @@ fn flag(args: &[String], name: &str, default: u64) -> u64 {
         .and_then(|i| args.get(i + 1))
         .and_then(|v| v.parse().ok())
         .unwrap_or(default)
+}
+
+fn flag_f64(args: &[String], name: &str, default: f64) -> f64 {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// `--ber` / `--fault-seed` / `--stuck` parsed into a [`FaultModel`],
+/// or `None` when none of the three flags appears (the ideal path —
+/// zero overhead, bit-identical to every prior release).
+fn fault_flags(args: &[String], seed: u64) -> Option<FaultModel> {
+    let requested = args
+        .iter()
+        .any(|a| a == "--ber" || a == "--fault-seed" || a == "--stuck");
+    if !requested {
+        return None;
+    }
+    let ber = flag_f64(args, "--ber", 0.0);
+    let fault_seed = flag(args, "--fault-seed", seed);
+    let stuck = flag(args, "--stuck", 0) as usize;
+    Some(FaultModel::uniform(ber, fault_seed).with_random_stuck(stuck))
 }
 
 /// `--workers N` simulator backend knob: default = all cores,
@@ -71,7 +103,8 @@ pub fn main() -> Result<()> {
             eprintln!("usage: prins <run|validate|serve|report|verify|info> ...");
             eprintln!(
                 "  run <{}|bfs> [--n N] [--dims D] [--seed S] \
-                 [--workers W] [--shards S] [--queries Q]",
+                 [--workers W] [--shards S] [--queries Q] \
+                 [--ber B] [--fault-seed S] [--stuck N]",
                 names.join("|")
             );
             eprintln!("  validate");
@@ -87,6 +120,10 @@ pub fn main() -> Result<()> {
             eprintln!(
                 "  (--queries: load once, run Q queries against the resident \
                  dataset; default 1)"
+            );
+            eprintln!(
+                "  (--ber/--fault-seed/--stuck: seeded fault injection with \
+                 scrub/retry recovery; default off)"
             );
             Ok(())
         }
@@ -109,6 +146,7 @@ fn run(args: &[String]) -> Result<()> {
         bail!("--queries must be at least 1");
     }
     let backend = backend_flag(args);
+    let fault = fault_flags(args, seed);
     let dev = DeviceModel::default();
     let name = args.first().map(|s| s.as_str()).unwrap_or("");
 
@@ -116,6 +154,13 @@ fn run(args: &[String]) -> Result<()> {
     // the frontier back into the resident rows, which breaks both
     // framework contracts the flags below rely on.
     if name == "bfs" {
+        if fault.is_some() {
+            bail!(
+                "bfs does not support fault injection: it runs outside the kernel \
+                 framework, so the scrub/retry recovery path (which needs the \
+                 framework's resident-column contract) cannot protect it"
+            );
+        }
         if shards > 1 {
             bail!(
                 "bfs cannot run sharded: it lacks the framework's read-only-query \
@@ -157,12 +202,15 @@ fn run(args: &[String]) -> Result<()> {
             names.join(", ")
         );
     };
-    let rack = PrinsRack::with_config(
+    let mut rack = PrinsRack::with_config(
         shards,
         DeviceModel::default(),
         backend,
         InterconnectModel::default(),
     );
+    if let Some(model) = fault {
+        rack = rack.with_fault(model)?;
+    }
     let mut res = (entry.synth_load)(&rack, n, dims, seed);
     if queries > 1 {
         return run_resident(entry, res.as_mut(), queries, seed, &dev);
@@ -178,8 +226,20 @@ fn run(args: &[String]) -> Result<()> {
             (entry.flops)(n, dims),
         );
     }
+    print_fidelity(&out.fidelity);
     println!("result       : {}", out.fields);
     Ok(())
+}
+
+/// One-line fidelity summary when the fault layer is on (no-op on the
+/// ideal path, keeping default output byte-identical).
+fn print_fidelity(fid: &Option<crate::reliability::FidelityReport>) {
+    let Some(f) = fid else { return };
+    println!(
+        "fidelity     : {:.6} (injected {}, detected {}, repaired {}, residual {}, \
+         retries {}, overhead {} cycles)",
+        f.fidelity, f.injected, f.detected, f.repaired, f.residual, f.retries, f.overhead_cycles
+    );
 }
 
 /// `run --queries Q` (Q ≥ 2): the load-once / query-many resident path,
@@ -197,11 +257,13 @@ fn run_resident(
     let mut energy_j = load.energy_j;
     let mut qcycles = Vec::with_capacity(queries);
     let mut last_fields = String::new();
+    let mut last_fid = None;
     for q in 0..queries {
         let r = res.query_seeded(q, seed);
         qcycles.push(r.rack.total_cycles);
         energy_j += r.rack.energy_j;
         last_fields = r.fields;
+        last_fid = r.fidelity;
     }
     let name = entry.name;
     let summary = format!("result (last): {last_fields}");
@@ -227,6 +289,7 @@ fn run_resident(
         crate::metrics::table::fmt_si(energy_j, "J"),
         queries
     );
+    print_fidelity(&last_fid);
     println!("{summary}");
     Ok(())
 }

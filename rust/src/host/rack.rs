@@ -30,8 +30,10 @@
 //! calls — the merge path and stats accounting are unchanged.
 
 use crate::controller::ExecStats;
+use crate::error::Result;
 use crate::rcam::shard::{ShardPlan, CMD_BYTES};
 use crate::rcam::{DeviceModel, ExecBackend, InterconnectModel, PrinsArray};
+use crate::reliability::FaultModel;
 use std::ops::Range;
 
 /// Host view of a rack of PRINS shard devices: shared configuration plus
@@ -41,6 +43,7 @@ pub struct PrinsRack {
     shards: usize,
     device: DeviceModel,
     backend: ExecBackend,
+    fault: Option<FaultModel>,
     /// Host-link cost model applied to every command/result message.
     pub interconnect: InterconnectModel,
 }
@@ -71,8 +74,32 @@ impl PrinsRack {
             shards: shards.max(1),
             device,
             backend,
+            fault: None,
             interconnect,
         }
+    }
+
+    /// Attach a fault model: every shard array built after a resident
+    /// load will inject faults from `model` (seeded per shard). The BERs
+    /// are sanity-checked here so a bad experiment config fails at rack
+    /// construction; the full F01 analyzer pass (stuck-cell bounds
+    /// against the concrete shard shape) runs at
+    /// `PrinsArray::enable_faults` time.
+    pub fn with_fault(mut self, model: FaultModel) -> Result<Self> {
+        for ber in [model.read_ber, model.write_ber, model.retention_ber] {
+            crate::error::ensure!(
+                ber.is_finite() && (0.0..1.0).contains(&ber),
+                "fault model BER {} outside [0, 1)",
+                ber
+            );
+        }
+        self.fault = Some(model);
+        Ok(self)
+    }
+
+    /// The attached fault model, if any.
+    pub fn fault(&self) -> Option<&FaultModel> {
+        self.fault.as_ref()
     }
 
     /// Number of shard devices in the rack.

@@ -31,9 +31,10 @@
 //! tokio — documented in Cargo.toml.)
 
 use super::rack::{PrinsRack, RackStats};
-use crate::algorithms::kernel::{find_verb, registry, ResidentDyn};
+use crate::algorithms::kernel::{find_verb, registry, QueryOut, ResidentDyn};
 use crate::error::{bail, ensure, Result};
 use crate::rcam::{DeviceModel, ExecBackend, InterconnectModel};
+use crate::reliability::{FaultModel, FidelityReport};
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -158,6 +159,9 @@ struct Session {
     shards: usize,
     datasets: BTreeMap<u64, Box<dyn ResidentDyn>>,
     next_id: u64,
+    /// Fault model applied to racks built for future loads/one-shots
+    /// (`FAULTS <ber> <seed> [stuck_n]`); `None` = ideal device.
+    fault: Option<FaultModel>,
 }
 
 impl Default for Session {
@@ -166,6 +170,7 @@ impl Default for Session {
             shards: 1,
             datasets: BTreeMap::new(),
             next_id: 1,
+            fault: None,
         }
     }
 }
@@ -217,14 +222,19 @@ fn handle_conn(stream: TcpStream, stop: Arc<AtomicBool>, backend: ExecBackend) -
 }
 
 /// The rack a session's sharded verbs execute on: session shard count,
-/// default device model + interconnect, the server's simulator backend.
-fn rack_for(sess: &Session, backend: ExecBackend) -> PrinsRack {
-    PrinsRack::with_config(
+/// default device model + interconnect, the server's simulator backend,
+/// plus the session's fault model when `FAULTS` is active.
+fn rack_for(sess: &Session, backend: ExecBackend) -> Result<PrinsRack> {
+    let rack = PrinsRack::with_config(
         sess.shards,
         DeviceModel::default(),
         backend,
         InterconnectModel::default(),
-    )
+    );
+    match &sess.fault {
+        Some(model) => rack.with_fault(model.clone()),
+        None => Ok(rack),
+    }
 }
 
 /// Key=value reply-line builder: the single place the `OK …` grammar is
@@ -293,11 +303,28 @@ fn stats_reply(rs: &RackStats, fields: &str) -> Reply {
     }
 }
 
+/// Append the reliability fields when the query ran on a faulty rack
+/// (docs/PROTOCOL.md §Fault injection): `fidelity=` always, and a
+/// `warn=residual-faults retries=` pair when corruption survived every
+/// scrub/retry — graceful degradation instead of a dropped reply. On an
+/// ideal rack this is a no-op, so existing replies stay byte-identical.
+fn fid_reply(r: Reply, fid: &Option<FidelityReport>) -> Reply {
+    let Some(f) = fid else { return r };
+    let r = r.kv("fidelity", format!("{:.6}", f.fidelity));
+    if f.residual > 0 {
+        r.kv("warn", "residual-faults").kv("retries", f.retries)
+    } else {
+        r
+    }
+}
+
 /// Reply line of a resident-dataset query (docs/PROTOCOL.md §Resident
 /// datasets): the shared stats grammar with the trailing `dataset=`
 /// marker.
-fn query_ok(rs: &RackStats, fields: &str, id: u64) -> String {
-    stats_reply(rs, fields).kv("dataset", id).finish()
+fn query_ok(out: &QueryOut, id: u64) -> String {
+    fid_reply(stats_reply(&out.rack, &out.fields), &out.fidelity)
+        .kv("dataset", id)
+        .finish()
 }
 
 /// `load_cycles=` (and, when sharded, `load_link_bytes=`) fields of a
@@ -331,16 +358,21 @@ fn load_dataset(
     backend: ExecBackend,
     sess: &mut Session,
 ) -> Result<Option<String>> {
-    ensure!(
-        sess.datasets.len() < MAX_DATASETS,
-        "dataset limit reached (max {})",
-        MAX_DATASETS
-    );
+    if sess.datasets.len() >= MAX_DATASETS {
+        // name the recovery verb and the droppable ids so a client can
+        // free a slot without a round-trip to DATASETS
+        let ids: Vec<String> = sess.datasets.keys().map(u64::to_string).collect();
+        bail!(
+            "dataset limit reached (max {}); DROP one of ids [{}] to free a slot",
+            MAX_DATASETS,
+            ids.join(",")
+        );
+    }
     // kinds are case-sensitive wire verbs, exactly like the kernel verbs
     let Some(entry) = args.first().and_then(|kind| find_verb(kind)) else {
         bail!("{}", load_usage());
     };
-    let rack = rack_for(sess, backend);
+    let rack = rack_for(sess, backend)?;
     let data = (entry.load)(&rack, &args[1..])?;
     let id = sess.next_id;
     sess.next_id += 1;
@@ -382,11 +414,13 @@ fn kernel_verb(
             entry.name
         );
         let out = data.query_args(&args[1..])?;
-        Ok(Some(query_ok(&out.rack, &out.fields, id)))
+        Ok(Some(query_ok(&out, id)))
     } else if args.len() == entry.one_shot_arity {
-        let rack = rack_for(sess, backend);
+        let rack = rack_for(sess, backend)?;
         let out = (entry.one_shot)(&rack, args)?;
-        Ok(Some(stats_reply(&out.rack, &out.fields).finish()))
+        Ok(Some(
+            fid_reply(stats_reply(&out.rack, &out.fields), &out.fidelity).finish(),
+        ))
     } else {
         bail!("usage: {} | {}", entry.one_shot_usage, entry.query_usage);
     }
@@ -424,6 +458,45 @@ fn dispatch(line: &str, backend: ExecBackend, sess: &mut Session) -> Result<Opti
             let id: u64 = id.parse()?;
             ensure!(sess.datasets.remove(&id).is_some(), "unknown dataset {id}");
             Ok(Some(Reply::ok().kv("dropped", id).finish()))
+        }
+        // ----- fault injection (docs/PROTOCOL.md §Fault injection) ------
+        ["FAULTS"] => Ok(Some(match &sess.fault {
+            None => Reply::ok().kv("faults", "off").finish(),
+            Some(m) => Reply::ok()
+                .kv("faults", "on")
+                .kv("ber", m.read_ber)
+                .kv("seed", m.seed)
+                .kv("stuck", m.random_stuck)
+                .finish(),
+        })),
+        ["FAULTS", "OFF"] => {
+            sess.fault = None;
+            Ok(Some(Reply::ok().kv("faults", "off").finish()))
+        }
+        ["FAULTS", rest @ ..] => {
+            ensure!(
+                rest.len() == 2 || rest.len() == 3,
+                "usage: FAULTS | FAULTS OFF | FAULTS ber seed [stuck_n]"
+            );
+            let ber: f64 = rest[0].parse()?;
+            let seed: u64 = rest[1].parse()?;
+            let stuck: usize = if rest.len() == 3 { rest[2].parse()? } else { 0 };
+            ensure!(
+                ber.is_finite() && (0.0..1.0).contains(&ber),
+                "BER {} outside [0, 1)",
+                ber
+            );
+            // takes effect on racks built for future LOADs/one-shots;
+            // already-resident datasets keep their load-time model
+            sess.fault = Some(FaultModel::uniform(ber, seed).with_random_stuck(stuck));
+            Ok(Some(
+                Reply::ok()
+                    .kv("faults", "on")
+                    .kv("ber", ber)
+                    .kv("seed", seed)
+                    .kv("stuck", stuck)
+                    .finish(),
+            ))
         }
         // ----- kernel verbs: registry-driven, arity-dispatched ----------
         [verb, args @ ..] => kernel_verb(verb, args, backend, sess),
@@ -569,6 +642,67 @@ mod tests {
             ask(&mut conn, &mut reader, "DATASETS"),
             "OK count=1 ds=2:dp:32:1"
         );
+        server.shutdown();
+    }
+
+    #[test]
+    fn faults_verb_lifecycle_and_fidelity_fields() {
+        let server = Server::spawn("127.0.0.1:0").unwrap();
+        let mut conn = TcpStream::connect(server.addr).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+        let mut ask = |conn: &mut TcpStream, reader: &mut BufReader<TcpStream>, req: &str| {
+            line.clear();
+            writeln!(conn, "{req}").unwrap();
+            reader.read_line(&mut line).unwrap();
+            line.trim().to_string()
+        };
+        let field = |r: &str, key: &str| {
+            r.split_whitespace()
+                .find_map(|kv| kv.strip_prefix(key).map(str::to_string))
+                .unwrap_or_default()
+        };
+
+        // off by default; malformed configs are rejected, not applied
+        assert_eq!(ask(&mut conn, &mut reader, "FAULTS"), "OK faults=off");
+        assert!(ask(&mut conn, &mut reader, "FAULTS 1.5 1").starts_with("ERR"));
+        assert!(ask(&mut conn, &mut reader, "FAULTS x 1").starts_with("ERR"));
+        assert!(ask(&mut conn, &mut reader, "FAULTS 0.1").starts_with("ERR"));
+        assert_eq!(ask(&mut conn, &mut reader, "FAULTS"), "OK faults=off");
+
+        // BER=0 faults: replies gain fidelity=1.000000 and values stay exact
+        assert_eq!(
+            ask(&mut conn, &mut reader, "FAULTS 0 7"),
+            "OK faults=on ber=0 seed=7 stuck=0"
+        );
+        assert_eq!(
+            ask(&mut conn, &mut reader, "FAULTS"),
+            "OK faults=on ber=0 seed=7 stuck=0"
+        );
+        let loaded = ask(&mut conn, &mut reader, "LOAD HIST 200 5");
+        assert!(loaded.starts_with("OK id=1"), "{loaded}");
+        let resident = ask(&mut conn, &mut reader, "HIST 1");
+        assert!(resident.contains("fidelity=1.000000"), "{resident}");
+        assert!(!resident.contains("warn="), "{resident}");
+        let one_shot_faulty = ask(&mut conn, &mut reader, "HIST 200 5");
+        assert!(one_shot_faulty.contains("fidelity=1.000000"), "{one_shot_faulty}");
+
+        // FAULTS OFF: new racks are ideal again, but the resident dataset
+        // keeps its load-time model and still reports fidelity
+        assert_eq!(ask(&mut conn, &mut reader, "FAULTS OFF"), "OK faults=off");
+        let one_shot_ideal = ask(&mut conn, &mut reader, "HIST 200 5");
+        assert!(!one_shot_ideal.contains("fidelity="), "{one_shot_ideal}");
+        assert_eq!(
+            field(&one_shot_faulty, "top_bin="),
+            field(&one_shot_ideal, "top_bin=")
+        );
+        assert_eq!(
+            field(&one_shot_faulty, "total="),
+            field(&one_shot_ideal, "total=")
+        );
+        let resident2 = ask(&mut conn, &mut reader, "HIST 1");
+        assert!(resident2.contains("fidelity="), "{resident2}");
+        assert_eq!(field(&resident, "total="), field(&resident2, "total="));
         server.shutdown();
     }
 

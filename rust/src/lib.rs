@@ -37,6 +37,7 @@ pub mod micro;
 pub mod metrics;
 pub mod model;
 pub mod rcam;
+pub mod reliability;
 pub mod runtime;
 pub mod storage;
 pub mod workloads;

@@ -111,6 +111,27 @@ pub fn queries_sweep_from_args(args: &[String], default: &[usize]) -> Vec<usize>
     sweep_from_args(args, "--queries", default)
 }
 
+/// BER sweep from `--ber a,b,c` (for the fidelity bench; a single value
+/// is a one-element sweep). Values are probabilities, so entries outside
+/// `[0, 1)` are dropped like any other parse failure.
+pub fn ber_sweep_from_args(args: &[String], default: &[f64]) -> Vec<f64> {
+    match arg_value(args, "--ber") {
+        Some(list) => {
+            let v: Vec<f64> = list
+                .split(',')
+                .filter_map(|s| s.trim().parse().ok())
+                .filter(|b: &f64| b.is_finite() && (0.0..1.0).contains(b))
+                .collect();
+            if v.is_empty() {
+                default.to_vec()
+            } else {
+                v
+            }
+        }
+        None => default.to_vec(),
+    }
+}
+
 /// Comma-separated `usize` sweep behind a flag, with a default.
 fn sweep_from_args(args: &[String], flag: &str, default: &[usize]) -> Vec<usize> {
     match arg_value(args, flag) {
@@ -302,6 +323,91 @@ pub fn write_resident_json(
 ) -> std::io::Result<std::path::PathBuf> {
     let path = repo_root_path(&format!("BENCH_{name}.json"));
     std::fs::write(&path, resident_records_json(records))?;
+    Ok(path)
+}
+
+// ---------------------------------------------------------------------------
+// BER → accuracy fidelity results (BENCH_fidelity.json)
+// ---------------------------------------------------------------------------
+
+/// One measured point of the BER → accuracy sweep
+/// (`benches/fidelity.rs`): for a (kernel, BER) pair, the fraction of
+/// queries whose results survive the fault layer bit-exactly — once
+/// with the raw single-attempt path and once with scrub/retry recovery
+/// — plus the recovery overhead charged to the cycle ledger
+/// (DESIGN.md §Reliability).
+pub struct FidelityRecord {
+    /// Workload name (`hist`, `dp`, `ed`, `spmv`, `search`).
+    pub bench: String,
+    /// Dataset rows (samples / vectors / matrix dimension).
+    pub rows: u64,
+    /// Queries run per point (each compared against the ideal run).
+    pub queries: u64,
+    /// Injected per-read bit-error rate (also write/retention BER).
+    pub ber: f64,
+    /// Fraction of queries bit-exact vs ideal, recovery disabled.
+    pub exact_rate: f64,
+    /// Fraction of queries bit-exact vs ideal, scrub/retry enabled.
+    pub recovered_rate: f64,
+    /// Mean relative error of the recovered results vs ideal (capped
+    /// at 1.0 per element; 0.0 when bit-exact).
+    pub mean_rel_err: f64,
+    /// Total fault events injected across the recovered run.
+    pub injected: u64,
+    /// Resident-row corruptions the scrubber detected.
+    pub detected: u64,
+    /// Corruptions repaired by golden-copy rewrite.
+    pub repaired: u64,
+    /// Corruptions surviving all retries (stuck-at cells).
+    pub residual: u64,
+    /// Query retries triggered by scrub mismatches.
+    pub retries: u64,
+    /// Recovery cycles (scrub + retries + backoff) beyond the kernel's
+    /// own query cycles, summed over the run.
+    pub overhead_cycles: u64,
+    /// Host wall-clock seconds of the three simulated runs.
+    pub wall_s: f64,
+}
+
+/// Hand-rolled JSON for [`FidelityRecord`]s (the crate set has no
+/// serde): a flat array of objects, one per (bench, ber) point.
+pub fn fidelity_records_json(records: &[FidelityRecord]) -> String {
+    let mut s = String::from("[\n");
+    for (i, r) in records.iter().enumerate() {
+        s.push_str(&format!(
+            "  {{\"bench\": \"{}\", \"rows\": {}, \"queries\": {}, \
+             \"ber\": {:e}, \"exact_rate\": {:e}, \"recovered_rate\": {:e}, \
+             \"mean_rel_err\": {:e}, \"injected\": {}, \"detected\": {}, \
+             \"repaired\": {}, \"residual\": {}, \"retries\": {}, \
+             \"overhead_cycles\": {}, \"wall_s\": {:e}}}{}\n",
+            r.bench,
+            r.rows,
+            r.queries,
+            r.ber,
+            r.exact_rate,
+            r.recovered_rate,
+            r.mean_rel_err,
+            r.injected,
+            r.detected,
+            r.repaired,
+            r.residual,
+            r.retries,
+            r.overhead_cycles,
+            r.wall_s,
+            if i + 1 < records.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("]\n");
+    s
+}
+
+/// Write `BENCH_<name>.json` of fidelity records at the repository root.
+pub fn write_fidelity_json(
+    name: &str,
+    records: &[FidelityRecord],
+) -> std::io::Result<std::path::PathBuf> {
+    let path = repo_root_path(&format!("BENCH_{name}.json"));
+    std::fs::write(&path, fidelity_records_json(records))?;
     Ok(path)
 }
 
@@ -558,6 +664,57 @@ mod tests {
         assert_eq!(s.matches("},\n").count(), 1);
         assert!(s.contains("\"total_cycles\": 4600"));
         assert!(s.contains("\"link_bytes\": 4224"));
+    }
+
+    #[test]
+    fn fidelity_json_shape_and_ber_sweep() {
+        let recs = vec![
+            FidelityRecord {
+                bench: "hist".into(),
+                rows: 256,
+                queries: 4,
+                ber: 0.0,
+                exact_rate: 1.0,
+                recovered_rate: 1.0,
+                mean_rel_err: 0.0,
+                injected: 0,
+                detected: 0,
+                repaired: 0,
+                residual: 0,
+                retries: 0,
+                overhead_cycles: 1024,
+                wall_s: 0.01,
+            },
+            FidelityRecord {
+                bench: "hist".into(),
+                rows: 256,
+                queries: 4,
+                ber: 1e-3,
+                exact_rate: 0.25,
+                recovered_rate: 0.75,
+                mean_rel_err: 0.02,
+                injected: 37,
+                detected: 12,
+                repaired: 12,
+                residual: 0,
+                retries: 3,
+                overhead_cycles: 4096,
+                wall_s: 0.02,
+            },
+        ];
+        let s = fidelity_records_json(&recs);
+        assert!(s.starts_with("[\n") && s.trim_end().ends_with(']'));
+        assert_eq!(s.matches("\"ber\"").count(), 2);
+        assert_eq!(s.matches("},\n").count(), 1);
+        assert!(s.contains("\"recovered_rate\""));
+        assert!(s.contains("\"injected\": 37"));
+
+        let args: Vec<String> = ["--ber", "0,0.001,0.01"].iter().map(|s| s.to_string()).collect();
+        assert_eq!(ber_sweep_from_args(&args, &[0.5]), vec![0.0, 0.001, 0.01]);
+        assert_eq!(ber_sweep_from_args(&[], &[0.0, 0.1]), vec![0.0, 0.1]);
+        // out-of-range and garbage entries fall back to the default
+        let bad: Vec<String> = ["--ber", "1.5,nan,x"].iter().map(|s| s.to_string()).collect();
+        assert_eq!(ber_sweep_from_args(&bad, &[0.25]), vec![0.25]);
     }
 
     #[test]

@@ -16,6 +16,8 @@ use super::device::{
 use super::exec::{self, ExecBackend, StripeOp, WorkerPool};
 use super::module::{Pattern, RcamModule};
 use crate::isa::Instr;
+use crate::reliability::{AmbientKind, FaultModel, FaultState, FaultStats};
+use std::ops::Range;
 use std::sync::{Arc, Mutex};
 
 /// The full PRINS array: daisy-chained RCAM modules presented to the
@@ -34,6 +36,9 @@ pub struct PrinsArray {
     /// Handle to the process-shared persistent worker pool for this
     /// backend's worker count (None for serial).
     pool: Option<Arc<WorkerPool>>,
+    /// Reliability layer: installed fault model + runtime state
+    /// (None = ideal device, the zero-cost default).
+    fault: Option<Box<FaultState>>,
 }
 
 impl PrinsArray {
@@ -61,6 +66,7 @@ impl PrinsArray {
             cycles: 0,
             backend: ExecBackend::Serial,
             pool: None,
+            fault: None,
         }
     }
 
@@ -105,10 +111,14 @@ impl PrinsArray {
         self.backend
     }
 
-    /// Whether data-parallel spans run on the worker pool.
+    /// Whether data-parallel spans run on the worker pool. Forced off
+    /// while faults are enabled: corruption draws must happen in one
+    /// deterministic serial order, and the serial path charges identical
+    /// cycles/ledgers, so backend invariance holds by construction
+    /// (asserted by `tests/reliability.rs`).
     #[inline]
     pub fn is_threaded(&self) -> bool {
-        self.backend.is_threaded()
+        self.backend.is_threaded() && self.fault.is_none()
     }
 
     fn ensure_pool(&mut self) -> Arc<WorkerPool> {
@@ -195,9 +205,24 @@ impl PrinsArray {
     }
 
     /// Broadcast compare: tag matching rows in every module (1 cycle).
+    /// With faults enabled, every stored cell of the pattern columns is
+    /// observed through the seeded read-noise path (stuck-at overrides,
+    /// wear-coupled BER flips) — cycle and ledger charges stay identical
+    /// to the ideal compare.
     pub fn compare(&mut self, pattern: &Pattern) {
         self.debug_check_pattern(pattern);
-        if self.is_threaded() {
+        if let Some(mut fault) = self.fault.take() {
+            fault.begin_op();
+            let rpm = self.rows_per_module;
+            for (mi, m) in self.modules.iter_mut().enumerate() {
+                let base = mi * rpm;
+                m.compare_noisy(pattern, &mut |row, col, stored, wear| {
+                    fault.observe(base + row, col, stored, wear)
+                });
+            }
+            self.cycles += CYCLES_COMPARE;
+            self.fault = Some(fault);
+        } else if self.is_threaded() {
             self.execute_ops(&[StripeOp::Compare(pattern)]);
         } else {
             for m in &mut self.modules {
@@ -207,10 +232,23 @@ impl PrinsArray {
         }
     }
 
-    /// Broadcast write: pattern into every tagged row (2 cycles).
+    /// Broadcast write: pattern into every tagged row (2 cycles). With
+    /// faults enabled, each written bit lands inverted with the
+    /// wear-coupled write BER (identical charges to the ideal write).
     pub fn write(&mut self, pattern: &Pattern) {
         self.debug_check_pattern(pattern);
-        if self.is_threaded() {
+        if let Some(mut fault) = self.fault.take() {
+            fault.begin_op();
+            let rpm = self.rows_per_module;
+            for (mi, m) in self.modules.iter_mut().enumerate() {
+                let base = mi * rpm;
+                m.write_noisy(pattern, &mut |row, col, wear| {
+                    fault.flip_written(base + row, col, wear)
+                });
+            }
+            self.cycles += CYCLES_WRITE;
+            self.fault = Some(fault);
+        } else if self.is_threaded() {
             self.execute_ops(&[StripeOp::Write(pattern)]);
         } else {
             for m in &mut self.modules {
@@ -226,6 +264,13 @@ impl PrinsArray {
     pub fn pass(&mut self, cpat: &Pattern, wpat: &Pattern) {
         self.debug_check_pattern(cpat);
         self.debug_check_pattern(wpat);
+        if self.fault.is_some() {
+            // decompose: the fused pass charges exactly compare + write,
+            // and the fault layer needs the per-row observation order
+            self.compare(cpat);
+            self.write(wpat);
+            return;
+        }
         if self.is_threaded() {
             self.execute_ops(&[StripeOp::Pass(cpat, wpat)]);
         } else {
@@ -396,8 +441,33 @@ impl PrinsArray {
     }
 
     /// Read a field from the first tagged row anywhere in the chain.
+    /// With faults enabled, each returned bit is observed through the
+    /// read-noise path (same `CYCLES_READ` + one read op charged on the
+    /// module that answered).
     pub fn read_first(&mut self, base: u16, width: u16) -> Option<u64> {
         self.cycles += CYCLES_READ;
+        if let Some(mut fault) = self.fault.take() {
+            fault.begin_op();
+            let rpm = self.rows_per_module;
+            let mut out = None;
+            for (mi, m) in self.modules.iter_mut().enumerate() {
+                let Some(r) = m.tags().first_one() else { continue };
+                m.ledger.n_read += 1;
+                let raw = m.fetch_row_bits(r, base as usize, width as usize);
+                let wear = m.wear_counters().map_or(0, |w| w[r]);
+                let mut v = raw;
+                for i in 0..width as usize {
+                    let stored = (raw >> i) & 1 == 1;
+                    if fault.observe(mi * rpm + r, base + i as u16, stored, wear) != stored {
+                        v ^= 1 << i;
+                    }
+                }
+                out = Some(v);
+                break;
+            }
+            self.fault = Some(fault);
+            return out;
+        }
         for m in &mut self.modules {
             if let Some(v) = m.read_first(base, width) {
                 return Some(v);
@@ -675,9 +745,134 @@ impl PrinsArray {
     }
 
     /// Storage-manager readout: fetch `width` bits of a global row.
+    ///
+    /// Deliberately ideal even with faults enabled: this is the
+    /// host-side result-readout path, modeled as ECC-protected DRAM-side
+    /// access (the scrubber's device-facing reads go through
+    /// [`Self::fetch_row_bits_faulty`] instead).
     pub fn fetch_row_bits(&self, row: usize, base: usize, width: usize) -> u64 {
         let (mi, r) = self.split(row);
         self.modules[mi].fetch_row_bits(r, base, width)
+    }
+
+    // ----- fault injection (reliability layer) ---------------------------
+
+    /// Install a fault model on this array (DESIGN.md §Reliability).
+    /// The configuration is validated by analyzer rule F01 first (all
+    /// BERs in `[0, 1)`, stuck cells inside the array geometry) and
+    /// invalid models are refused. While faults are enabled the array
+    /// forces the serial execution path (see [`Self::is_threaded`]), so
+    /// corruption draws are reproducible bit-for-bit on every backend.
+    pub fn enable_faults(&mut self, model: FaultModel) -> crate::error::Result<()> {
+        let shape = crate::analysis::ArrayShape::of(self);
+        let diags = crate::analysis::rules::fault_config(&model, &shape);
+        if !diags.is_empty() {
+            crate::error::bail!(
+                "fault model rejected by analyzer rule F01 ({} diagnostic(s)); first: {}",
+                diags.len(),
+                diags[0]
+            );
+        }
+        self.fault = Some(Box::new(FaultState::new(
+            model,
+            self.total_rows(),
+            self.width,
+        )));
+        Ok(())
+    }
+
+    /// Remove the fault layer; the array is ideal again.
+    pub fn disable_faults(&mut self) {
+        self.fault = None;
+    }
+
+    /// Whether a fault model is installed.
+    #[inline]
+    pub fn has_faults(&self) -> bool {
+        self.fault.is_some()
+    }
+
+    /// The installed fault model, if any.
+    pub fn fault_model(&self) -> Option<&FaultModel> {
+        self.fault.as_deref().map(FaultState::model)
+    }
+
+    /// Snapshot of the fault-event counters, if faults are enabled.
+    pub fn fault_stats(&self) -> Option<FaultStats> {
+        self.fault.as_deref().map(FaultState::stats)
+    }
+
+    /// Charge idle cycles to the array clock (query-retry backoff; no
+    /// energy events — the controller is waiting, not issuing).
+    pub fn add_idle_cycles(&mut self, n: u64) {
+        self.cycles += n;
+    }
+
+    /// Charged faulty storage-path read: like [`Self::fetch_row_bits`]
+    /// but billed as one read op + `CYCLES_READ`, with every bit
+    /// observed through the fault layer (stuck cells override, read-BER
+    /// flips apply). This is the scrubber's device-facing read — scrub
+    /// checks must pay device cycles and see device noise. Still charged
+    /// (but noise-free) when faults are disabled.
+    pub fn fetch_row_bits_faulty(&mut self, row: usize, base: usize, width: usize) -> u64 {
+        let (mi, r) = self.split(row);
+        let m = &mut self.modules[mi];
+        let raw = m.fetch_row_bits(r, base, width);
+        let wear = m.wear_counters().map_or(0, |w| w[r]);
+        m.ledger.n_read += 1;
+        self.cycles += CYCLES_READ;
+        let mut out = raw;
+        if let Some(mut fault) = self.fault.take() {
+            fault.begin_op();
+            for i in 0..width {
+                let stored = (raw >> i) & 1 == 1;
+                if fault.observe(row, (base + i) as u16, stored, wear) != stored {
+                    out ^= 1 << i;
+                }
+            }
+            self.fault = Some(fault);
+        }
+        out
+    }
+
+    fn apply_ambient(&mut self, cols: Range<u16>, kind: AmbientKind) -> u64 {
+        let Some(mut fault) = self.fault.take() else {
+            return 0;
+        };
+        let mut flips = 0u64;
+        if fault.ambient_enabled(kind) {
+            fault.begin_op();
+            let rpm = self.rows_per_module;
+            for (mi, m) in self.modules.iter_mut().enumerate() {
+                for r in 0..m.rows() {
+                    for col in cols.clone() {
+                        if fault.ambient(kind, mi * rpm + r, col) {
+                            m.flip_stored_bit(r, col);
+                            flips += 1;
+                        }
+                    }
+                }
+            }
+        }
+        self.fault = Some(fault);
+        flips
+    }
+
+    /// Ambient retention decay over `cols` (every row): storage bits
+    /// flip at the model's `retention_ber`. Uncharged — decay happens
+    /// while the device sits idle, not as an issued operation. No-op
+    /// without faults. Returns the number of flips applied.
+    pub fn apply_retention(&mut self, cols: Range<u16>) -> u64 {
+        self.apply_ambient(cols, AmbientKind::Retention)
+    }
+
+    /// Post-load write disturb over `cols` (every row): storage bits
+    /// flip at the model's `write_ber`. Applied once after a dataset
+    /// load — after the scrubber's golden capture — so resident data
+    /// carries persistent corruption for the scrubber to find. No-op
+    /// without faults. Returns the number of flips applied.
+    pub fn apply_disturb(&mut self, cols: Range<u16>) -> u64 {
+        self.apply_ambient(cols, AmbientKind::Disturb)
     }
 
     /// Elapsed wall-clock time of everything executed so far.
@@ -908,6 +1103,123 @@ mod exec_tests {
         for r in 0..100 {
             assert_eq!(a.fetch_row_bits(r, 0, 16), b.fetch_row_bits(r, 0, 16));
         }
+    }
+
+    #[test]
+    fn zero_ber_fault_layer_is_bit_identical_to_ideal() {
+        use crate::reliability::FaultModel;
+        let build = |faults: bool| {
+            let mut a = PrinsArray::new(2, 33, 16);
+            a.enable_wear_tracking();
+            for r in 0..66 {
+                a.load_row_bits(r, 0, 16, (r as u64).wrapping_mul(0x9E37) & 0xFFFF);
+            }
+            if faults {
+                a.enable_faults(FaultModel::uniform(0.0, 42)).unwrap();
+            }
+            a
+        };
+        let mut ideal = build(false);
+        let mut noisy = build(true);
+        for a in [&mut ideal, &mut noisy] {
+            a.compare(&[(1, true), (4, false)]);
+            a.write(&[(9, true)]);
+            a.pass(&[(2, false)], &[(11, true)]);
+            a.compare(&[(0, true)]);
+        }
+        assert_eq!(ideal.read_first(0, 8), noisy.read_first(0, 8));
+        assert_eq!(ideal.cycles, noisy.cycles, "cycles");
+        assert_eq!(ideal.ledger(), noisy.ledger(), "ledger");
+        assert_eq!(ideal.tags_snapshot(), noisy.tags_snapshot(), "tags");
+        for r in 0..66 {
+            assert_eq!(
+                ideal.fetch_row_bits(r, 0, 16),
+                noisy.fetch_row_bits(r, 0, 16),
+                "row {r}"
+            );
+        }
+        assert_eq!(noisy.fault_stats().unwrap().injected(), 0);
+    }
+
+    #[test]
+    fn faulty_runs_reproduce_under_one_seed_and_force_serial() {
+        use crate::reliability::FaultModel;
+        let run = |backend| {
+            let mut a = PrinsArray::new(2, 50, 16).with_backend(backend);
+            for r in 0..100 {
+                a.load_row_bits(r, 0, 16, (r as u64).wrapping_mul(37) & 0xFFFF);
+            }
+            a.enable_faults(FaultModel::uniform(0.02, 7)).unwrap();
+            assert!(!a.is_threaded(), "faults must force the serial path");
+            a.compare(&[(0, true), (3, false)]);
+            a.write(&[(8, true), (9, true)]);
+            a.pass(&[(1, true)], &[(10, false)]);
+            let rows: Vec<u64> = (0..100).map(|r| a.fetch_row_bits(r, 0, 16)).collect();
+            (rows, a.tags_snapshot(), a.cycles, a.ledger(), a.fault_stats().unwrap())
+        };
+        let serial = run(ExecBackend::Serial);
+        let serial2 = run(ExecBackend::Serial);
+        let threaded = run(ExecBackend::Threaded(4));
+        assert_eq!(serial, serial2, "same seed → identical corruption");
+        assert_eq!(serial, threaded, "backend-invariant corruption");
+        assert!(serial.4.injected() > 0, "2% BER must inject something");
+    }
+
+    #[test]
+    fn invalid_fault_models_are_rejected() {
+        use crate::reliability::{FaultModel, StuckCell};
+        let mut a = PrinsArray::single(16, 8);
+        assert!(a.enable_faults(FaultModel::uniform(1.0, 0)).is_err());
+        assert!(a.enable_faults(FaultModel::uniform(-0.1, 0)).is_err());
+        let oob = FaultModel::uniform(0.0, 0).with_stuck(vec![StuckCell {
+            row: 16,
+            col: 0,
+            value: true,
+        }]);
+        assert!(a.enable_faults(oob).is_err());
+        assert!(!a.has_faults(), "rejected models are not installed");
+        assert!(a.enable_faults(FaultModel::uniform(0.1, 0)).is_ok());
+        assert!(a.has_faults());
+        a.disable_faults();
+        assert!(!a.has_faults());
+    }
+
+    #[test]
+    fn stuck_cell_overrides_reads_until_disabled() {
+        use crate::reliability::{FaultModel, StuckCell};
+        let mut a = PrinsArray::single(8, 8);
+        a.load_row_bits(2, 0, 8, 0b0000_0001); // row 2: col0=1, col3=0
+        let model = FaultModel::uniform(0.0, 1).with_stuck(vec![StuckCell {
+            row: 2,
+            col: 3,
+            value: true,
+        }]);
+        a.enable_faults(model).unwrap();
+        a.compare(&[(0, true)]); // tags row 2
+        assert_eq!(a.read_first(0, 8), Some(0b0000_1001), "col 3 reads stuck-at-1");
+        assert_eq!(a.fetch_row_bits(2, 0, 8), 0b0000_0001, "storage untouched");
+        a.disable_faults();
+        a.compare(&[(0, true)]);
+        assert_eq!(a.read_first(0, 8), Some(0b0000_0001));
+    }
+
+    #[test]
+    fn disturb_and_retention_flip_storage_deterministically() {
+        use crate::reliability::FaultModel;
+        let mut a = PrinsArray::new(2, 32, 8);
+        a.enable_faults(FaultModel::uniform(0.05, 3)).unwrap();
+        let c0 = a.cycles;
+        let d = a.apply_disturb(0..8);
+        let r = a.apply_retention(0..8);
+        assert!(d > 0 && r > 0, "5% over 512 cells must flip ({d}, {r})");
+        assert_eq!(a.cycles, c0, "ambient passes are uncharged");
+        let s = a.fault_stats().unwrap();
+        assert_eq!(s.disturb_flips, d);
+        assert_eq!(s.retention_flips, r);
+        // started all-zero, so set bits = flips minus any cell both
+        // passes flipped (disturb 0→1 then retention 1→0)
+        let set: u64 = (0..64).map(|row| a.fetch_row_bits(row, 0, 8).count_ones() as u64).sum();
+        assert!(set > 0 && set <= d + r, "set {set} vs flips {d}+{r}");
     }
 
     #[test]

@@ -151,6 +151,59 @@ impl RcamModule {
         self.ledger.write_bit_events += (pattern.len() as u128) * (tagged as u128);
     }
 
+    /// Per-row compare used by the fault layer (`PrinsArray::compare`
+    /// with faults enabled): every pattern cell of every row is observed
+    /// through `observe(row, col, stored, wear)` — with **no**
+    /// data-dependent early exit, so the draw sequence is
+    /// input-independent — and the tag becomes the match result of the
+    /// *observed* bits. Ledger charges are identical to
+    /// [`RcamModule::compare`].
+    pub fn compare_noisy<F>(&mut self, pattern: &Pattern, observe: &mut F)
+    where
+        F: FnMut(usize, u16, bool, u32) -> bool,
+    {
+        for row in 0..self.rows() {
+            let wear = self.wear.as_ref().map_or(0, |w| w[row]);
+            let mut matched = true;
+            for &(col, bit) in pattern {
+                let stored = self.storage.plane(col as usize).get(row);
+                if observe(row, col, stored, wear) != bit {
+                    matched = false;
+                }
+            }
+            self.tags.set(row, matched);
+        }
+        self.ledger.n_compare += 1;
+        self.ledger.compare_bit_events += (self.width() * self.rows()) as u128;
+    }
+
+    /// Tagged write with post-write corruption: performs the ideal
+    /// [`RcamModule::write`] first (identical charges and wear), then
+    /// inverts each written cell where `flip(row, col, wear)` says so.
+    pub fn write_noisy<F>(&mut self, pattern: &Pattern, flip: &mut F)
+    where
+        F: FnMut(usize, u16, u32) -> bool,
+    {
+        self.write(pattern);
+        let tagged: Vec<usize> = self.tags.iter_ones().collect();
+        for row in tagged {
+            let wear = self.wear.as_ref().map_or(0, |w| w[row]);
+            for &(col, bit) in pattern {
+                if flip(row, col, wear) {
+                    self.storage.plane_mut(col as usize).set(row, !bit);
+                }
+            }
+        }
+    }
+
+    /// Invert one stored bit in place (ambient retention/disturb faults;
+    /// not an ISA operation).
+    pub fn flip_stored_bit(&mut self, row: usize, col: u16) {
+        let p = self.storage.plane_mut(col as usize);
+        let v = p.get(row);
+        p.set(row, !v);
+    }
+
     /// Fused compare + tagged write — the microcode pass — in one
     /// traversal. Results and ledger are exactly `compare(cpat)` followed
     /// by `write(wpat)`: per word, the match result is computed from the

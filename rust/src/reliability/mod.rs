@@ -1,0 +1,687 @@
+//! Reliability layer (DESIGN.md §Reliability): deterministic, seeded
+//! fault injection for the RCAM arrays, plus the report types consumed by
+//! the scrub/retry recovery machinery.
+//!
+//! The simulator's default device is ideal, but the paper's own endurance
+//! argument (§3.1) and the RRAM literature say real resistive CAM is not:
+//! ON/OFF resistance distributions are lognormal and overlap (bit errors
+//! on compare/read), cells wear out and stick, and writes occasionally
+//! land wrong. This module models all of that behind a zero-cost default:
+//!
+//! * [`FaultModel`] — the configuration: per-path bit-error rates
+//!   (`read`/`write`/`retention`), optionally derived from lognormal
+//!   ON/OFF overlap ([`lognormal_overlap_ber`]), stuck-at cells (explicit
+//!   or seeded-random), and wear-coupled BER growth read from the
+//!   per-row wear counters.
+//! * [`FaultState`] — the per-array runtime state installed by
+//!   `PrinsArray::enable_faults`: materialized stuck cells, the draw
+//!   epoch, and the [`FaultStats`] counters.
+//! * [`FidelityReport`] — what a recovered query hands back to callers
+//!   (`fidelity=` on the wire; see `docs/PROTOCOL.md`).
+//!
+//! **Determinism.** Every corruption decision is a *stateless* draw: a
+//! SplitMix64-style hash of `(seed, epoch, kind, row, col)` compared
+//! against `ber · 2⁶⁴` ([`cell_hash`] / [`ber_threshold`]). There is no
+//! mutable RNG stream to race on, so runs are reproducible bit-for-bit —
+//! and because the threshold test is monotone in the BER, the flip set at
+//! a lower BER is a subset of the flip set at a higher BER under the same
+//! seed (common-random-numbers coupling, which is what makes the
+//! `BENCH_fidelity.json` accuracy curves monotone by construction).
+//! Arrays with faults enabled force the serial execution path
+//! (`PrinsArray::is_threaded` returns false), so the epoch sequence —
+//! one epoch per array operation — is identical on every backend.
+
+pub mod scrub;
+
+pub use scrub::{ScrubReport, Scrubber};
+
+use crate::workloads::Rng;
+use std::collections::BTreeMap;
+
+/// Maximum automatic retries of a query whose scrub pass detected
+/// corruption (the recovery path in `algorithms::Resident::query`).
+pub const MAX_QUERY_RETRIES: u64 = 2;
+
+/// Idle-cycle backoff charged before retry `k` (doubled per retry:
+/// `BACKOFF_BASE_CYCLES << k`) — models the controller re-issuing the
+/// query after the scrub rewrite settles.
+pub const BACKOFF_BASE_CYCLES: u64 = 32;
+
+/// Effective BER ceiling after wear coupling: beyond 0.5 a binary read
+/// is anti-correlated with the stored value, which no physical drift
+/// model produces.
+const MAX_EFF_BER: f64 = 0.5;
+
+const KIND_READ: u64 = 1;
+const KIND_WRITE: u64 = 2;
+const KIND_RETENTION: u64 = 3;
+const KIND_DISTURB: u64 = 4;
+
+/// Salt mixed into the model seed when materializing seeded-random
+/// stuck-at cells, so the stuck layout and the flip draws are
+/// independent streams of the same user seed.
+const STUCK_SEED_SALT: u64 = 0x57AC_4CE1_15D0_0D5E;
+
+/// A cell pinned to a fixed value: reads always observe `value`
+/// regardless of what the storage holds. Stuck cells resist scrub
+/// rewrites — the storage is corrected, the observation is not — which
+/// is exactly how worn-out RRAM cells defeat ECC.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StuckCell {
+    /// Global row index (chain-wide, as used by `PrinsArray`).
+    pub row: usize,
+    /// Bit-column index.
+    pub col: u16,
+    /// The value every read of this cell observes.
+    pub value: bool,
+}
+
+/// Fault-injection configuration (validated by analyzer rule F01 before
+/// `PrinsArray::enable_faults` installs it).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultModel {
+    /// Per-cell probability that a compare/read observes the wrong bit
+    /// (transient — storage is untouched). Must be in `[0, 1)`.
+    pub read_ber: f64,
+    /// Per-cell probability that a written bit lands inverted
+    /// (persistent until rewritten). Must be in `[0, 1)`.
+    pub write_ber: f64,
+    /// Per-cell probability of an ambient retention flip applied to the
+    /// resident columns before each query. Must be in `[0, 1)`.
+    pub retention_ber: f64,
+    /// Explicit stuck-at cells (F01 checks them against array bounds).
+    pub stuck: Vec<StuckCell>,
+    /// Additional seeded-random stuck-at cells materialized at
+    /// `enable_faults` time (always in bounds by construction).
+    pub random_stuck: usize,
+    /// Wear coupling `c`: a cell with wear count `w` sees an effective
+    /// BER of `ber · (1 + c·w)`, capped at 0.5. Zero disables coupling.
+    pub wear_coupling: f64,
+    /// Whether the recovery machinery (golden capture, per-query scrub,
+    /// bounded retry) runs. Off = raw faulty device, used by the
+    /// fidelity bench to measure uncorrected accuracy.
+    pub recovery: bool,
+    /// Seed for every draw and for stuck-cell materialization.
+    pub seed: u64,
+}
+
+impl FaultModel {
+    /// A uniform model: all three BERs equal to `ber`, no stuck cells,
+    /// no wear coupling, recovery enabled.
+    pub fn uniform(ber: f64, seed: u64) -> Self {
+        FaultModel {
+            read_ber: ber,
+            write_ber: ber,
+            retention_ber: ber,
+            stuck: Vec::new(),
+            random_stuck: 0,
+            wear_coupling: 0.0,
+            recovery: true,
+            seed,
+        }
+    }
+
+    /// A uniform model whose BER is derived from lognormal ON/OFF
+    /// resistance-distribution overlap (see [`lognormal_overlap_ber`]),
+    /// à la the HyperMetric RRAM model.
+    pub fn from_lognormal(
+        mu_on: f64,
+        sigma_on: f64,
+        mu_off: f64,
+        sigma_off: f64,
+        seed: u64,
+    ) -> Self {
+        Self::uniform(lognormal_overlap_ber(mu_on, sigma_on, mu_off, sigma_off), seed)
+    }
+
+    /// Builder: add `n` seeded-random stuck-at cells.
+    pub fn with_random_stuck(mut self, n: usize) -> Self {
+        self.random_stuck = n;
+        self
+    }
+
+    /// Builder: add explicit stuck-at cells.
+    pub fn with_stuck(mut self, cells: Vec<StuckCell>) -> Self {
+        self.stuck = cells;
+        self
+    }
+
+    /// Builder: enable/disable the recovery machinery.
+    pub fn with_recovery(mut self, recovery: bool) -> Self {
+        self.recovery = recovery;
+        self
+    }
+
+    /// Builder: set the wear-coupling coefficient.
+    pub fn with_wear_coupling(mut self, c: f64) -> Self {
+        self.wear_coupling = c;
+        self
+    }
+}
+
+/// Counters accumulated by a [`FaultState`] as the array executes.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Read-path draws taken (one per observed cell that was not stuck).
+    pub read_draws: u64,
+    /// Read-path observations that flipped.
+    pub read_flips: u64,
+    /// Written bits that landed inverted.
+    pub write_flips: u64,
+    /// Ambient retention flips applied to storage.
+    pub retention_flips: u64,
+    /// Post-load disturb flips applied to storage.
+    pub disturb_flips: u64,
+    /// Observations that hit a stuck cell (no draw taken).
+    pub stuck_hits: u64,
+}
+
+impl FaultStats {
+    /// Total injected faults (flips of any kind; stuck-cell hits are
+    /// reported separately since they are persistent, not events).
+    pub fn injected(&self) -> u64 {
+        self.read_flips + self.write_flips + self.retention_flips + self.disturb_flips
+    }
+
+    /// Counter-wise difference vs. an earlier snapshot of the same
+    /// monotonically growing stats.
+    pub fn minus(&self, base: &FaultStats) -> FaultStats {
+        FaultStats {
+            read_draws: self.read_draws - base.read_draws,
+            read_flips: self.read_flips - base.read_flips,
+            write_flips: self.write_flips - base.write_flips,
+            retention_flips: self.retention_flips - base.retention_flips,
+            disturb_flips: self.disturb_flips - base.disturb_flips,
+            stuck_hits: self.stuck_hits - base.stuck_hits,
+        }
+    }
+}
+
+/// Which ambient corruption pass is being applied (see
+/// `PrinsArray::apply_retention` / `apply_disturb`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AmbientKind {
+    /// Slow storage decay before a query (drawn at `retention_ber`).
+    Retention,
+    /// Post-load write disturb (drawn at `write_ber`).
+    Disturb,
+}
+
+/// Per-array fault runtime: the model, the materialized stuck-cell map,
+/// the draw epoch, and the event counters. Installed by
+/// `PrinsArray::enable_faults`; one per array.
+#[derive(Clone, Debug)]
+pub struct FaultState {
+    model: FaultModel,
+    epoch: u64,
+    stuck: BTreeMap<(u32, u16), bool>,
+    read_t: u64,
+    write_t: u64,
+    retention_t: u64,
+    stats: FaultStats,
+}
+
+impl FaultState {
+    /// Build the runtime state for an array of `rows` × `width` cells:
+    /// copies the explicit stuck cells and materializes
+    /// `model.random_stuck` additional ones from the seed (distinct,
+    /// always in bounds).
+    pub fn new(model: FaultModel, rows: usize, width: usize) -> Self {
+        let mut stuck: BTreeMap<(u32, u16), bool> = BTreeMap::new();
+        for c in &model.stuck {
+            stuck.insert((c.row as u32, c.col), c.value);
+        }
+        if model.random_stuck > 0 && rows > 0 && width > 0 {
+            let total = rows * width;
+            let want = total.min(stuck.len() + model.random_stuck);
+            let mut rng = Rng::seed_from(model.seed ^ STUCK_SEED_SALT);
+            let mut attempts = 0usize;
+            while stuck.len() < want && attempts < model.random_stuck.saturating_mul(64) {
+                attempts += 1;
+                let row = rng.below(rows as u64) as u32;
+                let col = rng.below(width as u64) as u16;
+                let value = rng.next_u64() & 1 == 1;
+                stuck.entry((row, col)).or_insert(value);
+            }
+            // deterministic fill for the (pathological) case where random
+            // draws keep colliding because stuck cells nearly saturate
+            // the array
+            'fill: for row in 0..rows as u32 {
+                for col in 0..width as u16 {
+                    if stuck.len() >= want {
+                        break 'fill;
+                    }
+                    stuck.entry((row, col)).or_insert(false);
+                }
+            }
+        }
+        let (read_t, write_t, retention_t) = (
+            ber_threshold(model.read_ber),
+            ber_threshold(model.write_ber),
+            ber_threshold(model.retention_ber),
+        );
+        FaultState {
+            model,
+            epoch: 0,
+            stuck,
+            read_t,
+            write_t,
+            retention_t,
+            stats: FaultStats::default(),
+        }
+    }
+
+    /// The installed configuration.
+    pub fn model(&self) -> &FaultModel {
+        &self.model
+    }
+
+    /// Snapshot of the event counters.
+    pub fn stats(&self) -> FaultStats {
+        self.stats
+    }
+
+    /// Number of materialized stuck cells (explicit + random).
+    pub fn stuck_cells(&self) -> usize {
+        self.stuck.len()
+    }
+
+    /// Advance the draw epoch. Called once at the start of every array
+    /// operation that takes draws, so repeated identical operations see
+    /// fresh (but still deterministic) noise.
+    pub fn begin_op(&mut self) {
+        self.epoch = self.epoch.wrapping_add(1);
+    }
+
+    /// Observe a stored cell through the read path: a stuck cell returns
+    /// its pinned value (no draw); otherwise the stored bit flips with
+    /// the wear-coupled read BER. Callers must invoke this for **every**
+    /// cell an operation touches, with no data-dependent early exit, so
+    /// the draw count is input-independent.
+    pub fn observe(&mut self, row: usize, col: u16, stored: bool, wear: u32) -> bool {
+        if let Some(&v) = self.stuck.get(&(row as u32, col)) {
+            self.stats.stuck_hits += 1;
+            return v;
+        }
+        self.stats.read_draws += 1;
+        let t = self.coupled(self.read_t, self.model.read_ber, wear);
+        if t != 0 && cell_hash(self.model.seed, self.epoch, KIND_READ, row as u64, col as u64) < t
+        {
+            self.stats.read_flips += 1;
+            !stored
+        } else {
+            stored
+        }
+    }
+
+    /// Whether a just-written bit lands inverted (wear-coupled write
+    /// BER).
+    pub fn flip_written(&mut self, row: usize, col: u16, wear: u32) -> bool {
+        let t = self.coupled(self.write_t, self.model.write_ber, wear);
+        if t != 0 && cell_hash(self.model.seed, self.epoch, KIND_WRITE, row as u64, col as u64) < t
+        {
+            self.stats.write_flips += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Whether an ambient pass flips the storage cell at `(row, col)`.
+    pub fn ambient(&mut self, kind: AmbientKind, row: usize, col: u16) -> bool {
+        let (t, k) = match kind {
+            AmbientKind::Retention => (self.retention_t, KIND_RETENTION),
+            AmbientKind::Disturb => (self.write_t, KIND_DISTURB),
+        };
+        if t != 0 && cell_hash(self.model.seed, self.epoch, k, row as u64, col as u64) < t {
+            match kind {
+                AmbientKind::Retention => self.stats.retention_flips += 1,
+                AmbientKind::Disturb => self.stats.disturb_flips += 1,
+            }
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Whether an ambient pass of `kind` can flip anything at all (lets
+    /// the array skip the rows×cols sweep when the BER is zero).
+    pub fn ambient_enabled(&self, kind: AmbientKind) -> bool {
+        match kind {
+            AmbientKind::Retention => self.retention_t != 0,
+            AmbientKind::Disturb => self.write_t != 0,
+        }
+    }
+
+    fn coupled(&self, base_t: u64, base_ber: f64, wear: u32) -> u64 {
+        if self.model.wear_coupling <= 0.0 || wear == 0 {
+            base_t
+        } else {
+            let eff = (base_ber * (1.0 + self.model.wear_coupling * wear as f64)).min(MAX_EFF_BER);
+            ber_threshold(eff)
+        }
+    }
+}
+
+/// What a recovered (or raw-faulty) query hands back next to its result:
+/// an a-posteriori confidence estimate plus the recovery counters. On
+/// the wire this becomes the `fidelity=` reply field (PROTOCOL.md).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FidelityReport {
+    /// Estimated probability that the result is unaffected by
+    /// *undetected* read noise: `(1 − read_ber)^draws` over the final
+    /// attempt's read draws (1.0 at BER 0).
+    pub fidelity: f64,
+    /// Faults injected during the query window (all kinds).
+    pub injected: u64,
+    /// Corrupted rows the scrub parity check detected.
+    pub detected: u64,
+    /// Rows rewritten from the golden copy.
+    pub repaired: u64,
+    /// Rows still differing from golden after the rewrite (stuck cells,
+    /// or fresh noise on the verify read).
+    pub residual: u64,
+    /// Query retries taken after detected corruption.
+    pub retries: u64,
+    /// Cycles spent on recovery (scrub reads/rewrites, retry re-runs,
+    /// backoff idle) — charged to the array ledger, not free.
+    pub overhead_cycles: u64,
+}
+
+impl FidelityReport {
+    /// Combine two shard reports: fidelities multiply (independent
+    /// shards), counters sum, retries take the max (shards retry
+    /// independently in parallel).
+    pub fn combine(&self, o: &FidelityReport) -> FidelityReport {
+        FidelityReport {
+            fidelity: self.fidelity * o.fidelity,
+            injected: self.injected + o.injected,
+            detected: self.detected + o.detected,
+            repaired: self.repaired + o.repaired,
+            residual: self.residual + o.residual,
+            retries: self.retries.max(o.retries),
+            overhead_cycles: self.overhead_cycles + o.overhead_cycles,
+        }
+    }
+
+    /// Fold an iterator of shard reports into one (None when empty).
+    pub fn merge_all<I: IntoIterator<Item = FidelityReport>>(it: I) -> Option<FidelityReport> {
+        it.into_iter().reduce(|a, b| a.combine(&b))
+    }
+}
+
+// ----- stateless draw machinery -----------------------------------------
+
+#[inline]
+fn mix(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Stateless per-cell draw: a SplitMix64-finalizer hash of
+/// `(seed, epoch, kind, row, col)`, uniform over `u64`. A cell flips iff
+/// `cell_hash(..) < ber_threshold(ber)` — monotone in the BER, so flip
+/// sets at increasing BERs nest under a fixed seed.
+#[inline]
+pub fn cell_hash(seed: u64, epoch: u64, kind: u64, row: u64, col: u64) -> u64 {
+    const GOLDEN: u64 = 0x9E37_79B9_7F4A_7C15;
+    let mut h = mix(seed.wrapping_add(GOLDEN));
+    h = mix(h ^ epoch.wrapping_mul(GOLDEN));
+    h = mix(h ^ kind.wrapping_mul(GOLDEN));
+    h = mix(h ^ row.wrapping_mul(GOLDEN));
+    mix(h ^ col.wrapping_mul(GOLDEN))
+}
+
+/// Map a probability to the `u64` threshold used by the flip test
+/// (`ber · 2⁶⁴`, saturating). Zero for `ber ≤ 0`.
+pub fn ber_threshold(ber: f64) -> u64 {
+    if ber <= 0.0 {
+        return 0;
+    }
+    // f64→u64 casts saturate, so ber ≥ 1 maps to u64::MAX (always flip)
+    (ber.min(1.0) * 2f64.powi(64)) as u64
+}
+
+// ----- lognormal ON/OFF overlap → BER ------------------------------------
+
+/// Abramowitz–Stegun 7.1.26 rational approximation of erf (|error| <
+/// 1.5e-7 — far below the BERs this layer sweeps).
+fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.327_591_1 * x);
+    let poly = ((((1.061_405_429 * t - 1.453_152_027) * t) + 1.421_413_741) * t
+        - 0.284_496_736)
+        * t
+        + 0.254_829_592;
+    sign * (1.0 - poly * t * (-x * x).exp())
+}
+
+fn normal_cdf(z: f64) -> f64 {
+    0.5 * (1.0 + erf(z / std::f64::consts::SQRT_2))
+}
+
+/// Bit-error rate of a single-threshold read over lognormal ON/OFF
+/// resistance states (the RRAM.py model): `ln R_on ~ N(mu_on, σ_on²)`
+/// (low-resistance/ON), `ln R_off ~ N(mu_off, σ_off²)` (high-resistance/
+/// OFF, `mu_off > mu_on`), read threshold at the log-midpoint, equal
+/// state priors. Result clamped to `[0, 0.5]`.
+pub fn lognormal_overlap_ber(mu_on: f64, sigma_on: f64, mu_off: f64, sigma_off: f64) -> f64 {
+    assert!(sigma_on > 0.0 && sigma_off > 0.0, "sigmas must be positive");
+    let t = 0.5 * (mu_on + mu_off);
+    let p_on_misread = 1.0 - normal_cdf((t - mu_on) / sigma_on);
+    let p_off_misread = normal_cdf((t - mu_off) / sigma_off);
+    (0.5 * (p_on_misread + p_off_misread)).clamp(0.0, 0.5)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn threshold_maps_probability_endpoints() {
+        assert_eq!(ber_threshold(0.0), 0);
+        assert_eq!(ber_threshold(-1.0), 0);
+        assert_eq!(ber_threshold(1.0), u64::MAX);
+        let half = ber_threshold(0.5);
+        assert!((half as f64 / 2f64.powi(64) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn flip_sets_nest_under_increasing_ber() {
+        // common-random-numbers coupling: every cell flipped at the low
+        // BER also flips at the high BER (same seed/epoch)
+        let (lo, hi) = (ber_threshold(0.01), ber_threshold(0.2));
+        let mut flipped_lo = 0;
+        for row in 0..64u64 {
+            for col in 0..64u64 {
+                let h = cell_hash(7, 3, KIND_READ, row, col);
+                if h < lo {
+                    flipped_lo += 1;
+                    assert!(h < hi, "low-BER flip missing at high BER");
+                }
+            }
+        }
+        // 4096 cells at 1%: expect ~41 flips; just require some exist
+        assert!(flipped_lo > 0, "no flips at 1% over 4096 cells");
+    }
+
+    #[test]
+    fn hash_is_deterministic_and_key_sensitive() {
+        assert_eq!(cell_hash(1, 2, 3, 4, 5), cell_hash(1, 2, 3, 4, 5));
+        assert_ne!(cell_hash(1, 2, 3, 4, 5), cell_hash(2, 2, 3, 4, 5));
+        assert_ne!(cell_hash(1, 2, 3, 4, 5), cell_hash(1, 3, 3, 4, 5));
+        assert_ne!(cell_hash(1, 2, 3, 4, 5), cell_hash(1, 2, 4, 4, 5));
+        assert_ne!(cell_hash(1, 2, 3, 4, 5), cell_hash(1, 2, 3, 5, 5));
+        assert_ne!(cell_hash(1, 2, 3, 4, 5), cell_hash(1, 2, 3, 4, 6));
+    }
+
+    #[test]
+    fn observe_at_zero_ber_is_transparent() {
+        let mut st = FaultState::new(FaultModel::uniform(0.0, 42), 64, 16);
+        st.begin_op();
+        for row in 0..64 {
+            for col in 0..16u16 {
+                assert!(st.observe(row, col, true, 0));
+                assert!(!st.observe(row, col, false, 0));
+            }
+        }
+        assert_eq!(st.stats().read_flips, 0);
+        assert_eq!(st.stats().read_draws, 2 * 64 * 16);
+        assert!(!st.flip_written(0, 0, 0));
+        assert!(!st.ambient(AmbientKind::Retention, 0, 0));
+    }
+
+    #[test]
+    fn stuck_cells_override_reads_without_draws() {
+        let model = FaultModel::uniform(0.0, 1).with_stuck(vec![StuckCell {
+            row: 3,
+            col: 5,
+            value: true,
+        }]);
+        let mut st = FaultState::new(model, 8, 8);
+        st.begin_op();
+        assert!(st.observe(3, 5, false, 0), "stuck-at-1 read as 1");
+        assert_eq!(st.stats().stuck_hits, 1);
+        assert_eq!(st.stats().read_draws, 0);
+        assert!(!st.observe(3, 6, false, 0), "neighbour unaffected");
+    }
+
+    #[test]
+    fn random_stuck_materializes_distinct_in_bounds_cells() {
+        let st = FaultState::new(FaultModel::uniform(0.0, 9).with_random_stuck(10), 32, 8);
+        assert_eq!(st.stuck_cells(), 10);
+        for &(row, col) in st.stuck.keys() {
+            assert!((row as usize) < 32 && (col as usize) < 8);
+        }
+        // same seed → same layout; different seed → (almost surely) not
+        let st2 = FaultState::new(FaultModel::uniform(0.0, 9).with_random_stuck(10), 32, 8);
+        assert_eq!(st.stuck, st2.stuck);
+        let st3 = FaultState::new(FaultModel::uniform(0.0, 10).with_random_stuck(10), 32, 8);
+        assert_ne!(st.stuck, st3.stuck);
+    }
+
+    #[test]
+    fn random_stuck_saturates_at_array_size() {
+        let st = FaultState::new(FaultModel::uniform(0.0, 1).with_random_stuck(1000), 4, 4);
+        assert_eq!(st.stuck_cells(), 16, "capped at rows × width");
+    }
+
+    #[test]
+    fn nonzero_ber_flips_some_reads_deterministically() {
+        let run = || {
+            let mut st = FaultState::new(FaultModel::uniform(0.05, 11), 256, 16);
+            st.begin_op();
+            let mut flips = Vec::new();
+            for row in 0..256 {
+                for col in 0..16u16 {
+                    // stored=false observed as true → a read flip
+                    if st.observe(row, col, false, 0) {
+                        flips.push((row, col));
+                    }
+                }
+            }
+            (flips, st.stats())
+        };
+        let (f1, s1) = run();
+        let (f2, s2) = run();
+        assert_eq!(f1, f2, "same seed, same flips");
+        assert_eq!(s1, s2);
+        assert!(s1.read_flips > 0, "5% BER over 4096 cells must flip");
+        // loose binomial sanity: 4096 draws at 5% → ~205 ± 5σ(≈70)
+        assert!((70..=350).contains(&(s1.read_flips as i64)), "{}", s1.read_flips);
+    }
+
+    #[test]
+    fn wear_coupling_raises_effective_ber() {
+        let model = FaultModel::uniform(0.01, 5).with_wear_coupling(10.0);
+        let mut st = FaultState::new(model, 512, 8);
+        st.begin_op();
+        let mut cold = 0u64;
+        let mut hot = 0u64;
+        for row in 0..512 {
+            for col in 0..8u16 {
+                if st.observe(row, col, false, 0) {
+                    cold += 1;
+                }
+            }
+        }
+        st.begin_op();
+        for row in 0..512 {
+            for col in 0..8u16 {
+                if st.observe(row, col, false, 100) {
+                    hot += 1;
+                }
+            }
+        }
+        // 1% vs min(0.5, 1%·1001) = 50%
+        assert!(hot > cold * 10, "hot {hot} vs cold {cold}");
+    }
+
+    #[test]
+    fn lognormal_overlap_behaves() {
+        // 0.5·(1 + erf(0)) = 0.5 sanity through the CDF
+        assert!((normal_cdf(0.0) - 0.5).abs() < 1e-9);
+        // far-apart states: essentially no overlap
+        assert!(lognormal_overlap_ber(0.0, 0.1, 10.0, 0.1) < 1e-12);
+        // widening the distributions raises the BER
+        let narrow = lognormal_overlap_ber(0.0, 0.5, 4.0, 0.5);
+        let wide = lognormal_overlap_ber(0.0, 2.0, 4.0, 2.0);
+        assert!(wide > narrow, "wide {wide} vs narrow {narrow}");
+        // identical states: maximal confusion, clamped at 0.5
+        assert!((lognormal_overlap_ber(1.0, 1.0, 1.0, 1.0) - 0.5).abs() < 1e-9);
+        // always a valid probability for F01
+        for (s_on, s_off) in [(0.1, 3.0), (2.5, 0.2), (1.0, 1.0)] {
+            let b = lognormal_overlap_ber(0.0, s_on, 3.0, s_off);
+            assert!((0.0..=0.5).contains(&b), "{b}");
+        }
+    }
+
+    #[test]
+    fn fidelity_reports_combine() {
+        let a = FidelityReport {
+            fidelity: 0.9,
+            injected: 3,
+            detected: 2,
+            repaired: 2,
+            residual: 0,
+            retries: 1,
+            overhead_cycles: 100,
+        };
+        let b = FidelityReport {
+            fidelity: 0.5,
+            injected: 1,
+            detected: 1,
+            repaired: 0,
+            residual: 1,
+            retries: 2,
+            overhead_cycles: 50,
+        };
+        let c = a.combine(&b);
+        assert!((c.fidelity - 0.45).abs() < 1e-12);
+        assert_eq!(
+            (c.injected, c.detected, c.repaired, c.residual, c.retries, c.overhead_cycles),
+            (4, 3, 2, 1, 2, 150)
+        );
+        assert_eq!(FidelityReport::merge_all(Vec::new()), None);
+        assert_eq!(FidelityReport::merge_all(vec![a]), Some(a));
+    }
+
+    #[test]
+    fn stats_window_subtraction() {
+        let mut st = FaultState::new(FaultModel::uniform(0.5, 3), 64, 4);
+        st.begin_op();
+        for row in 0..64 {
+            st.observe(row, 0, false, 0);
+        }
+        let snap = st.stats();
+        st.begin_op();
+        for row in 0..64 {
+            st.observe(row, 1, false, 0);
+        }
+        let d = st.stats().minus(&snap);
+        assert_eq!(d.read_draws, 64);
+        assert!(d.read_flips > 0);
+    }
+}

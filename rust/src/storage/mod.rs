@@ -7,7 +7,10 @@
 //! layer), and wear statistics are derived from the modules' per-row
 //! write counters.
 
+pub mod remap;
 pub mod wear;
+
+pub use remap::RemapTable;
 
 use crate::error::Result;
 use crate::isa::RowLayout;
@@ -54,6 +57,7 @@ pub struct StorageManager {
     allocations: BTreeMap<u64, RowRange>,
     next_id: u64,
     total_rows: usize,
+    remap: Option<RemapTable>,
 }
 
 impl StorageManager {
@@ -64,7 +68,21 @@ impl StorageManager {
             allocations: BTreeMap::new(),
             next_id: 1,
             total_rows,
+            remap: None,
         }
+    }
+
+    /// Turn on wear-leveling remap with an identity table. Off by
+    /// default so existing workloads keep their exact row placement.
+    pub fn enable_remap(&mut self) {
+        if self.remap.is_none() {
+            self.remap = Some(RemapTable::identity(self.total_rows));
+        }
+    }
+
+    /// The remap table, when wear leveling is enabled.
+    pub fn remap(&self) -> Option<&RemapTable> {
+        self.remap.as_ref()
     }
 
     /// First-fit allocation of `n_rows` rows with the given layout.
@@ -98,10 +116,16 @@ impl StorageManager {
         self.allocations.remove(&id).is_some()
     }
 
-    /// Translate a logical row of a dataset to a physical row.
+    /// Translate a logical row of a dataset to a physical row. With
+    /// remap enabled, the allocation-relative row is one more level of
+    /// indirection away from the cell that actually stores it.
     pub fn translate(&self, ds: &Dataset, logical: usize) -> usize {
         assert!(logical < ds.rows.len, "logical row out of range");
-        ds.rows.start + logical
+        let nominal = ds.rows.start + logical;
+        match &self.remap {
+            Some(t) => t.to_physical(nominal),
+            None => nominal,
+        }
     }
 
     /// Rows currently allocated to datasets.
@@ -168,7 +192,9 @@ impl StorageManager {
         assert!(values.len() <= ds.rows.len);
         let f = ds.layout.get(field)?;
         for (i, &v) in values.iter().enumerate() {
-            array.load_row_bits(ds.rows.start + i, f.base as usize, f.width as usize, v);
+            // through translate, not `rows.start + i` — bulk loads must
+            // honor the remap indirection exactly like load_value
+            array.load_row_bits(self.translate(ds, i), f.base as usize, f.width as usize, v);
         }
         Ok(())
     }
@@ -185,9 +211,56 @@ impl StorageManager {
         let f = ds.layout.get(field)?;
         Ok((0..n)
             .map(|i| {
-                array.fetch_row_bits(ds.rows.start + i, f.base as usize, f.width as usize)
+                array.fetch_row_bits(self.translate(ds, i), f.base as usize, f.width as usize)
             })
             .collect())
+    }
+
+    // ----- wear leveling -------------------------------------------------
+
+    /// One wear-leveling step: physically swap the all-time-hottest row
+    /// with the current coldest and update the remap table so datasets
+    /// never notice. The copy goes through the charged write path —
+    /// leveling itself wears the two rows, and the ledger records it.
+    ///
+    /// Returns the swapped physical `(hot, cold)` pair, or `None` when
+    /// remap is disabled, wear tracking is off, or the wear spread is
+    /// too small (< 2 writes) to be worth a swap. Must only be called
+    /// between queries: microprograms that shift tags across rows bake
+    /// physical adjacency into the program (see `remap` module docs).
+    pub fn wear_level_step(&mut self, array: &mut PrinsArray) -> Option<(usize, usize)> {
+        let table = self.remap.as_mut()?;
+        let mut wear: Vec<u32> = Vec::with_capacity(array.total_rows());
+        for m in array.modules() {
+            wear.extend_from_slice(m.wear_counters()?);
+        }
+        let mut hot = 0usize;
+        let mut cold = 0usize;
+        for (r, &w) in wear.iter().enumerate() {
+            if w > wear[hot] {
+                hot = r;
+            }
+            if w < wear[cold] {
+                cold = r;
+            }
+        }
+        if wear[hot] - wear[cold] < 2 {
+            return None;
+        }
+        // exchange the two rows' full contents in ≤64-bit chunks:
+        // host-buffered reads, charged writes
+        let width = array.width();
+        let mut off = 0usize;
+        while off < width {
+            let w = (width - off).min(64);
+            let a = array.fetch_row_bits(hot, off, w);
+            let b = array.fetch_row_bits(cold, off, w);
+            array.load_row_bits_charged(hot, off, w, b);
+            array.load_row_bits_charged(cold, off, w, a);
+            off += 64;
+        }
+        table.swap(hot, cold);
+        Some((hot, cold))
     }
 }
 
@@ -242,6 +315,60 @@ mod tests {
         let mut sm = StorageManager::new(100);
         let ds = sm.alloc(10, layout()).unwrap();
         sm.translate(&ds, 10);
+    }
+
+    #[test]
+    fn remap_is_transparent_and_levels_wear() {
+        let mut sm = StorageManager::new(32);
+        let mut array = PrinsArray::single(32, 64);
+        array.enable_wear_tracking();
+        sm.enable_remap();
+        let ds = sm.alloc(16, layout()).unwrap();
+        let vals: Vec<u64> = (0..16).map(|i| i * 11 + 1).collect();
+        sm.load_column(&mut array, &ds, "v", &vals).unwrap();
+        // hammer logical row 3 so one physical row runs hot
+        for k in 0..20 {
+            sm.load_value(&mut array, &ds, 3, "v", 34 + (k & 1)).unwrap();
+        }
+        sm.load_value(&mut array, &ds, 3, "v", 34).unwrap();
+        let before = crate::storage::wear::wear_report(&array).unwrap();
+        let swapped = sm.wear_level_step(&mut array).unwrap();
+        assert_eq!(swapped.0, 3, "the hammered physical row was hottest");
+        assert_eq!(
+            sm.translate(&ds, 3),
+            swapped.1,
+            "hot logical row now lives in the formerly-cold physical row"
+        );
+        // the dataset still reads back exactly what it wrote
+        let got = sm.read_column(&array, &ds, "v", 16).unwrap();
+        let mut want = vals.clone();
+        want[3] = 34;
+        assert_eq!(got, want);
+        sm.remap().unwrap().assert_consistent();
+        // keep hammering the same logical row: writes now land on the
+        // formerly-cold physical row, so max wear grows slower
+        for _ in 0..20 {
+            sm.load_value(&mut array, &ds, 3, "v", 35).unwrap();
+        }
+        let after = crate::storage::wear::wear_report(&array).unwrap();
+        assert!(
+            after.max_writes < before.max_writes + 20,
+            "hot row stopped absorbing every write"
+        );
+    }
+
+    #[test]
+    fn wear_level_step_needs_remap_tracking_and_spread() {
+        let mut sm = StorageManager::new(16);
+        let mut array = PrinsArray::single(16, 64);
+        // remap off
+        assert!(sm.wear_level_step(&mut array).is_none());
+        sm.enable_remap();
+        // wear tracking off
+        assert!(sm.wear_level_step(&mut array).is_none());
+        array.enable_wear_tracking();
+        // perfectly level (all zero): spread below threshold
+        assert!(sm.wear_level_step(&mut array).is_none());
     }
 
     #[test]

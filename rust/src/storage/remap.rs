@@ -1,0 +1,120 @@
+//! Wear-leveling row remap (paper Fig. 4 names wear leveling among the
+//! storage management unit's duties; §3.1 motivates it — endurance
+//! ≈ 1e12 writes makes the *hottest* cell the lifetime bottleneck).
+//!
+//! The table is a logical→physical row indirection consulted by
+//! [`super::StorageManager::translate`]. It starts as the identity and
+//! stays off (`None`) unless [`super::StorageManager::enable_remap`] is
+//! called, so every existing workload keeps its exact row placement and
+//! ledger. When enabled, [`super::StorageManager::wear_level_step`]
+//! rotates the all-time-hottest physical row with the current coldest:
+//! the row *contents* are physically swapped (through the charged write
+//! path — leveling itself wears cells, and the ledger says so) and the
+//! indirection is updated so datasets never notice.
+//!
+//! Caveat: kernels whose microprograms move tags *between* rows (tag
+//! shifts) bake physical adjacency into the program. Remapping must only
+//! happen between queries, never mid-flight — the storage manager has no
+//! view of in-flight programs, so the caller owns that discipline.
+
+/// Bidirectional logical↔physical row permutation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RemapTable {
+    log2phys: Vec<u32>,
+    phys2log: Vec<u32>,
+    swaps: u64,
+}
+
+impl RemapTable {
+    /// The identity permutation over `rows` rows.
+    pub fn identity(rows: usize) -> Self {
+        let id: Vec<u32> = (0..rows as u32).collect();
+        RemapTable {
+            log2phys: id.clone(),
+            phys2log: id,
+            swaps: 0,
+        }
+    }
+
+    /// Physical row backing logical row `logical`.
+    pub fn to_physical(&self, logical: usize) -> usize {
+        self.log2phys[logical] as usize
+    }
+
+    /// Logical row currently living in physical row `phys`.
+    pub fn to_logical(&self, phys: usize) -> usize {
+        self.phys2log[phys] as usize
+    }
+
+    /// Rows covered by the table.
+    pub fn rows(&self) -> usize {
+        self.log2phys.len()
+    }
+
+    /// Swaps performed since creation.
+    pub fn swaps(&self) -> u64 {
+        self.swaps
+    }
+
+    /// Exchange the logical occupants of physical rows `pa` and `pb`.
+    /// The caller is responsible for also swapping the stored contents.
+    pub fn swap(&mut self, pa: usize, pb: usize) {
+        let la = self.phys2log[pa] as usize;
+        let lb = self.phys2log[pb] as usize;
+        self.log2phys[la] = pb as u32;
+        self.log2phys[lb] = pa as u32;
+        self.phys2log.swap(pa, pb);
+        self.swaps += 1;
+    }
+
+    /// Debug invariant: the two directions are inverse permutations.
+    pub fn assert_consistent(&self) {
+        for (l, &p) in self.log2phys.iter().enumerate() {
+            assert_eq!(self.phys2log[p as usize] as usize, l, "remap not a bijection");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_roundtrips() {
+        let t = RemapTable::identity(8);
+        for r in 0..8 {
+            assert_eq!(t.to_physical(r), r);
+            assert_eq!(t.to_logical(r), r);
+        }
+        assert_eq!(t.swaps(), 0);
+        t.assert_consistent();
+    }
+
+    #[test]
+    fn swap_updates_both_directions() {
+        let mut t = RemapTable::identity(8);
+        t.swap(1, 6);
+        assert_eq!(t.to_physical(1), 6);
+        assert_eq!(t.to_physical(6), 1);
+        assert_eq!(t.to_logical(6), 1);
+        assert_eq!(t.to_logical(1), 6);
+        assert_eq!(t.swaps(), 1);
+        t.assert_consistent();
+        // swapping through a chain stays a bijection
+        t.swap(6, 3);
+        t.swap(0, 1);
+        t.assert_consistent();
+    }
+
+    #[test]
+    fn swap_back_restores_identity() {
+        let mut t = RemapTable::identity(4);
+        t.swap(0, 3);
+        t.swap(0, 3);
+        assert_eq!(t, {
+            let mut id = RemapTable::identity(4);
+            id.swaps = 2;
+            id
+        });
+    }
+}

@@ -38,13 +38,17 @@ pub fn wear_report(array: &PrinsArray) -> Option<WearReport> {
             total += c as u64;
         }
     }
+    // rows == 0 (an empty chain) and total == 0 (no writes yet) must
+    // both yield finite, well-defined statistics — never 0/0 = NaN.
     let mean = if rows == 0 { 0.0 } else { total as f64 / rows as f64 };
+    let imbalance = if mean > 0.0 { max as f64 / mean } else { 1.0 };
+    debug_assert!(imbalance.is_finite());
     Some(WearReport {
         max_writes: max,
         mean_writes: mean,
         total_writes: total,
         rows,
-        imbalance: if mean > 0.0 { max as f64 / mean } else { 1.0 },
+        imbalance,
     })
 }
 
@@ -56,12 +60,24 @@ pub fn projected_lifetime_s(
     device: &DeviceModel,
     elapsed_cycles: u64,
 ) -> f64 {
+    // zero writes or zero elapsed time means no measurable write rate:
+    // the projection is "unlimited", explicitly — not 0/0 or x/0 noise
     if report.max_writes == 0 || elapsed_cycles == 0 {
         return f64::INFINITY;
     }
     let elapsed_s = device.cycles_to_seconds(elapsed_cycles);
+    if !elapsed_s.is_finite() || elapsed_s <= 0.0 {
+        return f64::INFINITY;
+    }
     let hottest_rate = report.max_writes as f64 / elapsed_s; // writes/s
-    device.endurance / hottest_rate
+    let life = device.endurance / hottest_rate;
+    // a degenerate device model (0 or non-finite endurance/frequency)
+    // must never leak NaN into reports
+    if life.is_nan() {
+        f64::INFINITY
+    } else {
+        life
+    }
 }
 
 /// Render a lifetime in hours/days/years ("unlimited" for ∞).
@@ -128,6 +144,34 @@ mod tests {
         let lt_future = projected_lifetime_s(&rep, &future, 500_000_000);
         assert!((lt_future / lt_today - 100.0).abs() < 1e-6);
         assert!(lifetime_human(lt_today).contains("days") || lifetime_human(lt_today).contains("years"));
+    }
+
+    #[test]
+    fn fresh_array_report_is_finite_not_nan() {
+        // regression: 0 total writes used to risk 0/0 in imbalance
+        let mut a = PrinsArray::new(2, 8, 4);
+        a.enable_wear_tracking();
+        let r = wear_report(&a).unwrap();
+        assert_eq!(r.max_writes, 0);
+        assert_eq!(r.mean_writes, 0.0);
+        assert_eq!(r.imbalance, 1.0, "unwritten array is perfectly level");
+        assert!(r.imbalance.is_finite() && r.mean_writes.is_finite());
+    }
+
+    #[test]
+    fn zero_cycle_projection_is_infinite_not_nan() {
+        // regression: writes observed but no elapsed time → rate is
+        // undefined; the projection must be ∞, never NaN
+        let rep = WearReport {
+            max_writes: 5,
+            mean_writes: 1.0,
+            total_writes: 10,
+            rows: 10,
+            imbalance: 5.0,
+        };
+        let lt = projected_lifetime_s(&rep, &DeviceModel::default(), 0);
+        assert!(lt.is_infinite() && !lt.is_nan());
+        assert_eq!(lifetime_human(lt), "unlimited");
     }
 
     #[test]

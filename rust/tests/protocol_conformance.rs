@@ -62,6 +62,16 @@ const MALFORMED: &[&str] = &[
     "ED 99 1 1",
     "SPMV 99 1",
     "DATASETS 1",              // wrong arity
+    // FAULTS grammar and bounds
+    "FAULTS 0.5",              // missing seed
+    "FAULTS 1 2 3 4",          // too many args
+    "FAULTS 1.5 1",            // BER >= 1
+    "FAULTS -0.1 1",           // negative BER
+    "FAULTS nan 1",            // non-finite BER
+    "FAULTS x 1",              // unparseable BER
+    "FAULTS 0.01 x",           // unparseable seed
+    "FAULTS 0.01 1 x",         // unparseable stuck count
+    "FAULTS off",              // keywords are upper-case
 ];
 
 #[test]
@@ -136,6 +146,12 @@ fn dataset_limit_is_enforced_and_recoverable() {
     }
     let full = ask(&mut conn, &mut reader, "LOAD HIST 16 1");
     assert!(full.starts_with("ERR") && full.contains("limit"), "{full}");
+    // the error is actionable: it names the DROP verb and lists every
+    // resident id the client could free
+    assert!(full.contains("DROP"), "{full}");
+    for id in 1..=16 {
+        assert!(full.contains(&id.to_string()), "id {id} missing from {full}");
+    }
     // dropping one frees a slot; ids keep monotonically increasing
     assert_eq!(ask(&mut conn, &mut reader, "DROP 3"), "OK dropped=3");
     assert!(ask(&mut conn, &mut reader, "LOAD HIST 16 1").starts_with("OK id=17"));

@@ -1,0 +1,185 @@
+//! Reliability-layer integration suite (DESIGN.md §Reliability):
+//!
+//! * the fault layer at BER = 0 is **bit-identical** to the ideal path
+//!   for every registered kernel, across serial/threaded backends and
+//!   shard counts — turning reliability on must never change results
+//!   unless faults actually fire;
+//! * the fault stream is a pure function of the seed: same seed, same
+//!   flips, same results, same fidelity report — on any backend;
+//! * stuck-at cells survive scrub rewrites and surface as graceful
+//!   degradation (residual faults + bounded retries), never a panic;
+//! * malformed fault configs are rejected up front (rack F01 gate and
+//!   `PrinsArray::enable_faults`);
+//! * wear-leveling remap flattens a hot-row workload's wear imbalance
+//!   while reads remain transparent through the indirection.
+
+use prins::algorithms::kernel::{find_name, registry};
+use prins::host::rack::PrinsRack;
+use prins::isa::RowLayout;
+use prins::rcam::{DeviceModel, ExecBackend, InterconnectModel, PrinsArray};
+use prins::reliability::{FaultModel, StuckCell, MAX_QUERY_RETRIES};
+use prins::storage::wear::wear_report;
+use prins::storage::StorageManager;
+
+const DIMS: usize = 2;
+const SEED: u64 = 5;
+const Q: usize = 2;
+
+fn rack(workers: usize, shards: usize) -> PrinsRack {
+    PrinsRack::with_config(
+        shards,
+        DeviceModel::default(),
+        ExecBackend::from_workers(workers),
+        InterconnectModel::default(),
+    )
+}
+
+#[test]
+fn ber_zero_is_bit_identical_to_ideal_across_backends_and_shards() {
+    for entry in registry() {
+        let rows = if entry.dense { 32 } else { 64 };
+        for workers in [1usize, 4] {
+            for shards in [1usize, 2, 8] {
+                let mut ideal = (entry.synth_load)(&rack(workers, shards), rows, DIMS, SEED);
+                let faulty_rack = rack(workers, shards)
+                    .with_fault(FaultModel::uniform(0.0, 99))
+                    .unwrap();
+                let mut faulty = (entry.synth_load)(&faulty_rack, rows, DIMS, SEED);
+                for q in 0..Q {
+                    let i = ideal.query_seeded(q, SEED);
+                    let f = faulty.query_seeded(q, SEED);
+                    assert_eq!(
+                        i.bits, f.bits,
+                        "{} w={workers} s={shards} q={q}: BER=0 diverged from ideal",
+                        entry.name
+                    );
+                    assert!(i.fidelity.is_none(), "{}: ideal run reported fidelity", entry.name);
+                    let fid = f.fidelity.expect("fault-layer query returned no fidelity");
+                    assert_eq!(fid.fidelity, 1.0, "{}: BER=0 fidelity", entry.name);
+                    assert_eq!(fid.injected, 0, "{}: BER=0 injected faults", entry.name);
+                    assert_eq!(fid.residual, 0, "{}: BER=0 residual faults", entry.name);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn same_fault_seed_reproduces_bit_identically_on_any_backend() {
+    let entry = find_name("hist").unwrap();
+    let model = FaultModel::uniform(0.02, 123);
+    let run = |workers: usize| {
+        let r = rack(workers, 1).with_fault(model.clone()).unwrap();
+        let mut res = (entry.synth_load)(&r, 64, DIMS, SEED);
+        (0..3)
+            .map(|q| {
+                let out = res.query_seeded(q, SEED);
+                (out.bits, out.fidelity.unwrap())
+            })
+            .collect::<Vec<_>>()
+    };
+    let a = run(1);
+    let b = run(1);
+    let c = run(4);
+    assert_eq!(a, b, "same seed, same backend: fault stream must replay exactly");
+    assert_eq!(a, c, "faulted arrays run serial regardless of backend");
+    let injected: u64 = a.iter().map(|(_, f)| f.injected).sum();
+    assert!(injected > 0, "BER=0.02 over 64 rows must inject something");
+}
+
+#[test]
+fn stuck_cells_degrade_gracefully_with_residual_and_bounded_retries() {
+    // stick the valid bit (col 32 of the hist layout) of row 0 at 0: the
+    // scrubber detects the mismatch every pass, the rewrite cannot take,
+    // and the query ends with residual faults after bounded retries
+    let entry = find_name("hist").unwrap();
+    let model = FaultModel::uniform(0.0, 7).with_stuck(vec![StuckCell {
+        row: 0,
+        col: 32,
+        value: false,
+    }]);
+    let r = rack(1, 1).with_fault(model).unwrap();
+    let mut res = (entry.synth_load)(&r, 64, DIMS, SEED);
+    let out = res.query_seeded(0, SEED);
+    let fid = out.fidelity.expect("fault-layer query returned no fidelity");
+    assert!(fid.detected >= 1, "scrub must detect the stuck valid bit: {fid:?}");
+    assert!(fid.residual >= 1, "a stuck cell cannot be repaired: {fid:?}");
+    assert_eq!(
+        fid.retries, MAX_QUERY_RETRIES,
+        "retries must stop at the bound, not loop forever: {fid:?}"
+    );
+    assert!(fid.overhead_cycles > 0, "scrub and backoff are charged work");
+}
+
+#[test]
+fn malformed_fault_configs_are_rejected_up_front() {
+    assert!(PrinsRack::new(1).with_fault(FaultModel::uniform(1.5, 1)).is_err());
+    assert!(PrinsRack::new(1).with_fault(FaultModel::uniform(f64::NAN, 1)).is_err());
+    assert!(PrinsRack::new(1).with_fault(FaultModel::uniform(0.01, 1)).is_ok());
+
+    // the array-level F01 gate catches what the rack cannot know: stuck
+    // cells outside the concrete shard shape
+    let mut array = PrinsArray::single(8, 16);
+    let bad_row = FaultModel::uniform(0.0, 1).with_stuck(vec![StuckCell {
+        row: 99,
+        col: 0,
+        value: true,
+    }]);
+    assert!(array.enable_faults(bad_row).is_err());
+    let bad_col = FaultModel::uniform(0.0, 1).with_stuck(vec![StuckCell {
+        row: 0,
+        col: 16,
+        value: true,
+    }]);
+    assert!(array.enable_faults(bad_col).is_err());
+    assert!(!array.has_faults(), "rejected configs must not half-enable");
+}
+
+#[test]
+fn remap_flattens_hot_row_wear_and_stays_transparent() {
+    let hammers = 200usize;
+    let setup = || {
+        let mut array = PrinsArray::single(32, 16);
+        array.enable_wear_tracking();
+        let mut sm = StorageManager::new(32);
+        let mut layout = RowLayout::new(16);
+        layout.alloc("v", 8);
+        let ds = sm.alloc(16, layout).unwrap();
+        (array, sm, ds)
+    };
+
+    // baseline: all writes land on logical row 3's fixed physical row
+    let (mut array, sm, ds) = setup();
+    for i in 0..hammers {
+        sm.load_value(&mut array, &ds, 3, "v", i as u64 & 0xff).unwrap();
+    }
+    let flat = wear_report(&array).unwrap();
+
+    // remap + periodic leveling: the hot logical row rotates across
+    // cold physical rows
+    let (mut array, mut sm, ds) = setup();
+    sm.enable_remap();
+    for i in 0..hammers {
+        sm.load_value(&mut array, &ds, 3, "v", i as u64 & 0xff).unwrap();
+        if i % 10 == 9 {
+            sm.wear_level_step(&mut array);
+        }
+    }
+    let leveled = wear_report(&array).unwrap();
+    assert!(
+        leveled.max_writes < flat.max_writes,
+        "leveling must cap the hottest row: {} vs {}",
+        leveled.max_writes,
+        flat.max_writes
+    );
+    assert!(
+        leveled.imbalance < flat.imbalance,
+        "leveling must flatten imbalance: {} vs {}",
+        leveled.imbalance,
+        flat.imbalance
+    );
+    // the indirection is invisible to readers
+    let got = sm.read_value(&array, &ds, 3, "v").unwrap();
+    assert_eq!(got, (hammers as u64 - 1) & 0xff);
+    sm.remap().unwrap().assert_consistent();
+}
