@@ -1,0 +1,167 @@
+//! Multiplexed-serving throughput bench (DESIGN.md §Serving): drive a
+//! live [`prins::host::server::Server`] over TCP with a sweep of
+//! concurrent clients × pipeline depths, once per admission mode —
+//!
+//!   1. **exclusive**: shared-read admission off; every request is
+//!      serialized per connection through the `&mut` resident path (the
+//!      baseline),
+//!   2. **shared**: write-free resident queries admit as concurrent
+//!      readers over the same resident rows,
+//!
+//! and write one record per (clients, pipeline, mode) cell to
+//! `BENCH_throughput.json` at the repository root. Every client loads
+//! its own resident hist dataset, then fires its queries with the
+//! requested pipeline window, asserting each reply is byte-identical to
+//! the connection's first — concurrency must never change a reply bit.
+//! The CI smoke gate checks qps(many clients) > qps(1 client) in shared
+//! mode and that both servers shut down cleanly.
+//!
+//! Flags (after `cargo bench --bench throughput -- ...`):
+//!   --rows N          resident dataset rows per client (default 2000)
+//!   --queries Q       queries per client (default 32)
+//!   --clients a,b,c   concurrent-connection sweep (default 1,4,16)
+//!   --pipeline a,b,c  in-flight request lines per client (default 1,8)
+
+use prins::host::server::{ServeOptions, Server};
+use prins::metrics::bench::{arg_u64, arg_value, write_throughput_json, ThroughputRecord};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::{Arc, Barrier};
+use std::time::Instant;
+
+/// Comma-separated `usize` sweep behind a flag, with a default.
+fn usize_sweep(args: &[String], name: &str, default: &[usize]) -> Vec<usize> {
+    match arg_value(args, name) {
+        Some(list) => {
+            let v: Vec<usize> = list
+                .split(',')
+                .filter_map(|s| s.trim().parse().ok())
+                .filter(|&n: &usize| n > 0)
+                .collect();
+            if v.is_empty() {
+                default.to_vec()
+            } else {
+                v
+            }
+        }
+        None => default.to_vec(),
+    }
+}
+
+/// One measured cell: `clients` connections, each loading a resident
+/// hist dataset and firing `queries` pipelined `HIST <id>` requests with
+/// `pipeline` lines in flight. Returns (total queries, wall seconds of
+/// the query phase). Panics on any dropped connection, non-OK reply, or
+/// reply that differs from the connection's first — so a passing bench
+/// run is itself a correctness check.
+fn run_cell(
+    addr: SocketAddr,
+    clients: usize,
+    pipeline: usize,
+    queries: usize,
+    rows: usize,
+) -> (u64, f64) {
+    let barrier = Arc::new(Barrier::new(clients + 1));
+    let mut handles = Vec::with_capacity(clients);
+    for _ in 0..clients {
+        let barrier = barrier.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut conn = TcpStream::connect(addr).expect("connect failed");
+            conn.set_nodelay(true).ok();
+            let mut reader = BufReader::new(conn.try_clone().expect("clone failed"));
+            let mut line = String::new();
+            writeln!(conn, "LOAD HIST {rows} 7").expect("load write failed");
+            reader.read_line(&mut line).expect("load reply dropped");
+            assert!(line.starts_with("OK id=1 kind=hist"), "{line}");
+            barrier.wait(); // every client loaded: start the clock
+            let window = pipeline.min(queries);
+            let mut sent = 0usize;
+            for _ in 0..window {
+                writeln!(conn, "HIST 1").expect("query write failed");
+                sent += 1;
+            }
+            let mut reference: Option<String> = None;
+            for _ in 0..queries {
+                line.clear();
+                reader.read_line(&mut line).expect("query reply dropped");
+                assert!(line.starts_with("OK"), "{line}");
+                match &reference {
+                    Some(r) => assert_eq!(
+                        r.as_str(),
+                        line.trim(),
+                        "reply drift under concurrency"
+                    ),
+                    None => reference = Some(line.trim().to_string()),
+                }
+                if sent < queries {
+                    writeln!(conn, "HIST 1").expect("query write failed");
+                    sent += 1;
+                }
+            }
+            line.clear();
+            writeln!(conn, "QUIT").expect("quit write failed");
+            reader.read_line(&mut line).expect("bye dropped");
+            assert_eq!(line.trim(), "BYE");
+        }));
+    }
+    barrier.wait();
+    let t0 = Instant::now();
+    for h in handles {
+        h.join().expect("client thread panicked");
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    ((clients * queries) as u64, wall)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let rows = arg_u64(&args, "--rows", 2000) as usize;
+    let queries = arg_u64(&args, "--queries", 32) as usize;
+    let clients_sweep = usize_sweep(&args, "--clients", &[1, 4, 16]);
+    let pipeline_sweep = usize_sweep(&args, "--pipeline", &[1, 8]);
+    assert!(queries > 0, "--queries must be positive");
+    println!(
+        "rows = {rows}, queries/client = {queries}, clients sweep = {clients_sweep:?}, \
+         pipeline sweep = {pipeline_sweep:?}"
+    );
+
+    let mut records: Vec<ThroughputRecord> = Vec::new();
+    for (mode, shared) in [("exclusive", false), ("shared", true)] {
+        let opts = ServeOptions {
+            shared_read: shared,
+            ..ServeOptions::default()
+        };
+        let server = Server::spawn_opts("127.0.0.1:0", opts).expect("server spawn failed");
+        for &clients in &clients_sweep {
+            for &pipeline in &pipeline_sweep {
+                let (nq, wall) = run_cell(server.addr, clients, pipeline, queries, rows);
+                let qps = nq as f64 / wall;
+                println!(
+                    "hist   mode={mode:<9} clients={clients:<3} pipeline={pipeline:<3} \
+                     queries={nq:<6} qps={qps:>10.1} wall={wall:.3}s"
+                );
+                records.push(ThroughputRecord {
+                    bench: "hist".into(),
+                    clients: clients as u64,
+                    pipeline: pipeline as u64,
+                    mode: mode.into(),
+                    queries: nq,
+                    qps,
+                    wall_s: wall,
+                });
+            }
+        }
+        // clean shutdown per mode — the CI smoke gate relies on this
+        // returning (a hung mux or worker would wedge the bench here)
+        server.shutdown();
+        println!("{mode} server shut down cleanly");
+    }
+
+    match write_throughput_json("throughput", &records) {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => {
+            eprintln!("failed to write BENCH_throughput.json: {e}");
+            std::process::exit(1);
+        }
+    }
+}

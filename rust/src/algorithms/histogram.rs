@@ -150,6 +150,10 @@ impl Kernel for HistogramKernel {
     const NAME: &'static str = "hist";
     const VERB: &'static str = "HIST";
     const QUERY_ARITY: usize = 0;
+    // query_at is exactly "execute program_at + tree drain, passes = 0",
+    // and the output is the collected ReduceCount vector verbatim — the
+    // shared-read contract (Kernel::SHARED_READ doc).
+    const SHARED_READ: bool = true;
 
     fn data_rows(data: &[u32]) -> usize {
         data.len()
@@ -212,6 +216,10 @@ impl Kernel for HistogramKernel {
             // the final pipelined tree drain charged by query_at
             extra_cycles: array.reduction_latency_cycles(),
         }
+    }
+
+    fn shared_output(&self, collected: Vec<u64>) -> Option<Vec<u64>> {
+        Some(collected) // one ReduceCount per bin, already in bin order
     }
 
     fn parse_params(&self, _args: &[&str]) -> Result<u16> {

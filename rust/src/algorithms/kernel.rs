@@ -34,12 +34,14 @@
 //! the rack, server or CLI.
 
 use crate::analysis::{ArrayShape, PlannedQuery, QueryPlan};
+use crate::controller::read::ReadCursor;
 use crate::controller::{Controller, ExecStats};
-use crate::error::{ensure, Result};
+use crate::error::{bail, ensure, Result};
 use crate::host::rack::{PrinsRack, RackStats};
 use crate::rcam::shard::{ShardPlan, CMD_BYTES};
 use crate::rcam::PrinsArray;
 use crate::reliability::{FidelityReport, Scrubber, BACKOFF_BASE_CYCLES, MAX_QUERY_RETRIES};
+use crate::storage::wear::{wear_report, WearReport};
 use crate::storage::StorageManager;
 use std::ops::Range;
 
@@ -79,7 +81,7 @@ impl FloatMatrix {
 /// repeat queries are bit-identical — the registry-driven test gates
 /// (`tests/resident_datasets.rs`) assert exactly that for every
 /// registered kernel.
-pub trait Kernel: Sized + Send {
+pub trait Kernel: Sized + Send + Sync {
     /// Host-side dataset type the kernel loads (`[u32]` samples, a
     /// [`FloatMatrix`], a [`crate::workloads::Csr`], …).
     type Data: ?Sized + Sync;
@@ -94,6 +96,15 @@ pub trait Kernel: Sized + Send {
     const VERB: &'static str;
     /// Wire query parameters after the dataset id (`DP id seed` → 1).
     const QUERY_ARITY: usize;
+
+    /// Opt-in to the shared-read concurrent query path (DESIGN.md
+    /// §Serving): true only when the kernel's query is exactly "execute
+    /// the [`Kernel::query_plan`] programs, charge its `extra_cycles`,
+    /// pin `passes` to 0" with programs containing only `Compare` /
+    /// `ReduceCount` (the `prins verify` C01/C02 contracts), and the
+    /// shard output is reconstructible from the collected reductions
+    /// alone ([`Kernel::shared_output`]).
+    const SHARED_READ: bool = false;
 
     /// Global logical rows of `data` (samples / vectors / matrix dim).
     fn data_rows(data: &Self::Data) -> usize;
@@ -169,6 +180,15 @@ pub trait Kernel: Sized + Send {
     /// and rule C02 pins its [`QueryPlan::cycle_estimate`] to
     /// [`Kernel::query_floor_cycles`] for the same shard and params.
     fn query_plan(&self, array: &PrinsArray, params: &Self::Params) -> QueryPlan;
+
+    /// Rebuild one shard's query output from the reduction values its
+    /// plan collected, in program order — the shared-read twin of
+    /// [`Kernel::query_shard`]'s output half. `None` (the default)
+    /// means the kernel does not support the shared path.
+    fn shared_output(&self, collected: Vec<u64>) -> Option<Self::Output> {
+        let _ = collected;
+        None
+    }
 
     /// Parse wire query parameters (the args after the dataset id).
     fn parse_params(&self, args: &[&str]) -> Result<Self::Params>;
@@ -250,6 +270,15 @@ impl<K: ShardMerge> Resident<K> {
         let shards = rack.run_shards(&plan, |_s, r| {
             let rows = K::shard_rows(data, &r);
             let mut array = rack.shard_array(rows, width);
+            // Per-row wear counters feed the server's wear-aware eviction
+            // and the wear gates. They must be enabled before the first
+            // load write (enabling replaces the modules wholesale), and
+            // never under a fault model: fault draws are wear-coupled
+            // (`FaultState::observe`), so tracking would change seeded
+            // corruption replay. Counters add no cycles or ledger events.
+            if rack.fault().is_none() {
+                array.enable_wear_tracking();
+            }
             let mut sm = StorageManager::new(array.total_rows());
             let kern = K::load_range(&mut sm, &mut array, data, r);
             // reliability layer, attached after the kernel's load-stats
@@ -344,6 +373,81 @@ impl<K: ShardMerge> Resident<K> {
         }
     }
 
+    /// Whether this dataset can serve the shared-read concurrent query
+    /// path: the kernel opted in ([`Kernel::SHARED_READ`]) and no shard
+    /// carries a fault model (faulty queries mutate fault/scrub state,
+    /// so they stay on the exclusive [`Resident::query`] path).
+    pub fn shared_readable(&self) -> bool {
+        K::SHARED_READ
+            && self.rack.fault().is_none()
+            && self.shards.iter().all(|sh| !sh.ctl.array.has_faults())
+    }
+
+    /// Shared-read query phase (DESIGN.md §Serving): bit-identical
+    /// merged result and rack stats to [`Resident::query`], through
+    /// `&self` — so any number of concurrent readers can query the same
+    /// resident rows at once. Each shard synthesizes its query plan and
+    /// executes it on a [`ReadCursor`], leaving the shard arrays'
+    /// cycles, ledgers, tags and wear counters untouched. Returns
+    /// `None` when the dataset is not [`Resident::shared_readable`].
+    pub fn query_shared(&self, params: &K::Params) -> Option<Sharded<K>> {
+        if !self.shared_readable() {
+            return None;
+        }
+        let plan = &self.plan;
+        let runs = self.rack.read_shards(&self.shards, |_i, sh| {
+            let qp = sh.kern.query_plan(&sh.ctl.array, params);
+            let mut cur = ReadCursor::new(&sh.ctl.array);
+            let mut collected = Vec::new();
+            for prog in &qp.programs {
+                collected.extend(cur.execute_collect(prog).ok()?);
+            }
+            cur.add_cycles(qp.extra_cycles);
+            let out = sh.kern.shared_output(collected)?;
+            Some((out, cur.stats()))
+        });
+        let mut outs = Vec::with_capacity(runs.len());
+        let mut stats = Vec::with_capacity(runs.len());
+        for r in runs {
+            let (o, s) = r?;
+            outs.push(o);
+            stats.push(s);
+        }
+        let merged = K::merge(outs, plan, params);
+        let mut msgs = Vec::with_capacity(2 * plan.shards());
+        for (sh, rng) in self.shards.iter().zip(&self.plan.ranges) {
+            let (cmd, back) = sh.kern.query_msg_bytes(rng, params);
+            msgs.push(CMD_BYTES + cmd);
+            msgs.push(back);
+        }
+        Some(Sharded {
+            merged,
+            rack: self.rack.finish(stats, &msgs),
+            fidelity: None,
+        })
+    }
+
+    /// Per-shard wear reports over the resident arrays (`None` where
+    /// tracking is off — faulted racks). Load-time tracking plus this
+    /// accessor is what the server's eviction policy and the wear
+    /// regression gates read.
+    pub fn shard_wear(&self) -> Vec<Option<WearReport>> {
+        self.shards
+            .iter()
+            .map(|sh| wear_report(&sh.ctl.array))
+            .collect()
+    }
+
+    /// Eviction wear score: writes seen by the hottest row across all
+    /// shards. `None` when tracking is off (faulted racks) — the
+    /// eviction policy treats untracked datasets as coldest.
+    pub fn wear_score(&self) -> Option<u32> {
+        self.shards
+            .iter()
+            .map(|sh| wear_report(&sh.ctl.array).map(|r| r.max_writes))
+            .try_fold(0u32, |acc, r| r.map(|v| acc.max(v)))
+    }
+
     /// Analytic per-query cycle floor of the slowest shard for `params`.
     pub fn query_floor_cycles(&self, params: &K::Params) -> u64 {
         self.shards
@@ -370,6 +474,20 @@ impl<K: ShardMerge> Resident<K> {
             rack: r.rack,
             fidelity: r.fidelity,
         }
+    }
+
+    fn query_out_shared(&self, params: &K::Params, want_bits: bool) -> Option<QueryOut> {
+        let r = self.query_shared(params)?;
+        Some(QueryOut {
+            fields: K::fields(&r.merged),
+            bits: if want_bits {
+                K::bits(&r.merged)
+            } else {
+                Vec::new()
+            },
+            rack: r.rack,
+            fidelity: r.fidelity,
+        })
     }
 }
 
@@ -476,8 +594,10 @@ pub struct QueryOut {
 
 /// A type-erased [`Resident`] dataset — what the server's per-session
 /// dataset registry, the CLI and the bench sweeps hold, so none of them
-/// name concrete kernels.
-pub trait ResidentDyn: Send {
+/// name concrete kernels. `Sync` so the server's worker pool can run
+/// shared-read queries ([`ResidentDyn::query_args_shared`]) from many
+/// threads over one dataset at once.
+pub trait ResidentDyn: Send + Sync {
     /// The kernel's registry name (`"hist"`, `"search"`, …).
     fn name(&self) -> &'static str;
     /// Global logical rows loaded.
@@ -490,6 +610,18 @@ pub trait ResidentDyn: Send {
     /// One query with wire parameters (the args after the dataset id).
     /// The returned [`QueryOut::bits`] is left empty (wire hot path).
     fn query_args(&mut self, args: &[&str]) -> Result<QueryOut>;
+    /// Whether this dataset can serve the shared-read concurrent query
+    /// path ([`Resident::shared_readable`]): write-free kernel, no
+    /// fault model.
+    fn shared_readable(&self) -> bool;
+    /// [`ResidentDyn::query_args`] through the shared-read path
+    /// (`&self`, no exclusive access): bit-identical reply for
+    /// write-free kernels. Errs when the dataset is not
+    /// [`ResidentDyn::shared_readable`].
+    fn query_args_shared(&self, args: &[&str]) -> Result<QueryOut>;
+    /// Eviction wear score: hottest-row writes across shards (`None` =
+    /// tracking off; see [`Resident::wear_score`]).
+    fn wear_score(&self) -> Option<u32>;
     /// One query with the deterministic `(q, seed)` parameter stream,
     /// including the canonical bit encoding ([`QueryOut::bits`]).
     fn query_seeded(&mut self, q: usize, seed: u64) -> QueryOut;
@@ -533,6 +665,28 @@ impl<K: ShardMerge + 'static> ResidentDyn for Resident<K> {
         );
         let params = self.kernel().parse_params(args)?;
         Ok(self.query_out(&params, false))
+    }
+
+    fn shared_readable(&self) -> bool {
+        Resident::shared_readable(self)
+    }
+
+    fn query_args_shared(&self, args: &[&str]) -> Result<QueryOut> {
+        ensure!(
+            args.len() == K::QUERY_ARITY,
+            "{} takes {} query parameter(s) after the dataset id",
+            K::VERB,
+            K::QUERY_ARITY
+        );
+        let params = self.kernel().parse_params(args)?;
+        match self.query_out_shared(&params, false) {
+            Some(out) => Ok(out),
+            None => bail!("dataset is not shared-readable"),
+        }
+    }
+
+    fn wear_score(&self) -> Option<u32> {
+        Resident::wear_score(self)
     }
 
     fn query_seeded(&mut self, q: usize, seed: u64) -> QueryOut {

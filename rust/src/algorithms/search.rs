@@ -163,6 +163,10 @@ impl Kernel for SearchKernel {
     const NAME: &'static str = "search";
     const VERB: &'static str = "SEARCH";
     const QUERY_ARITY: usize = 2;
+    // query is exactly "execute program + tree drain, passes = 0", and
+    // the output is the sum of the collected per-prefix ReduceCounts —
+    // the shared-read contract (Kernel::SHARED_READ doc).
+    const SHARED_READ: bool = true;
 
     fn data_rows(data: &[u32]) -> usize {
         data.len()
@@ -222,6 +226,10 @@ impl Kernel for SearchKernel {
             // the final pipelined tree drain charged by query
             extra_cycles: array.reduction_latency_cycles(),
         }
+    }
+
+    fn shared_output(&self, collected: Vec<u64>) -> Option<u64> {
+        Some(collected.iter().sum()) // one ReduceCount per prefix; the query sums them
     }
 
     fn parse_params(&self, args: &[&str]) -> Result<SearchRange> {

@@ -4,8 +4,10 @@
 //!             [--workers W] [--shards S] [--queries Q]
 //!             [--ber B] [--fault-seed S] [--stuck N]
 //!   prins validate            # PRINS vs golden XLA kernels (needs artifacts/)
-//!   prins serve [--bind ADDR] [--workers W] # TCP storage-appliance front-end
-//!                                           # (protocol: docs/PROTOCOL.md)
+//!   prins serve [--bind ADDR] [--workers W] [--pool N] [--no-shared]
+//!             # TCP storage-appliance front-end (protocol: docs/PROTOCOL.md);
+//!             # --pool sizes the serving worker pool, --no-shared disables
+//!             # shared-read admission (serialize every request per connection)
 //!   prins report <fig12|fig13|fig14|fig15|all> [--csv]
 //!   prins verify [kernel|all] [--json]  # static microprogram analyzer
 //!                                       # (DESIGN.md §Static verification)
@@ -108,7 +110,7 @@ pub fn main() -> Result<()> {
                 names.join("|")
             );
             eprintln!("  validate");
-            eprintln!("  serve [--bind ADDR] [--workers W]");
+            eprintln!("  serve [--bind ADDR] [--workers W] [--pool N] [--no-shared]");
             eprintln!("  report <fig12|fig13|fig14|fig15|all> [--csv] [--workers W]");
             eprintln!(
                 "  verify [<{}>|all] [--json]  (static analyzer over synthesized \
@@ -374,9 +376,22 @@ fn serve(args: &[String]) -> Result<()> {
         .and_then(|i| args.get(i + 1).cloned())
         .unwrap_or_else(|| "127.0.0.1:7411".to_string());
     let backend = backend_flag(args);
-    let server = crate::host::server::Server::spawn_with(&bind, backend)?;
+    let mut opts = crate::host::server::ServeOptions {
+        backend,
+        ..Default::default()
+    };
+    // --pool N: serving worker threads (distinct from --workers, the
+    // per-request simulator backend knob); --no-shared: serialize every
+    // request per connection (the exclusive-access baseline)
+    opts.workers = flag(args, "--pool", opts.workers as u64) as usize;
+    opts.shared_read = !args.iter().any(|a| a == "--no-shared");
+    let server = crate::host::server::Server::spawn_opts(&bind, opts)?;
     println!("prins storage appliance listening on {}", server.addr);
-    println!("simulator backend: {backend:?}");
+    println!(
+        "simulator backend: {backend:?} | serving pool: {} worker(s) | shared reads: {}",
+        opts.workers,
+        if opts.shared_read { "on" } else { "off" }
+    );
     let one_shots: Vec<&str> = kernel::registry().iter().map(|e| e.one_shot_usage).collect();
     let queries: Vec<&str> = kernel::registry().iter().map(|e| e.query_usage).collect();
     println!(

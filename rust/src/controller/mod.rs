@@ -4,6 +4,7 @@
 //! exposes kernel dispatch to the host interface.
 
 pub mod kernels;
+pub mod read;
 pub mod registers;
 
 use crate::isa::{Instr, Program};

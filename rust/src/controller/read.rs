@@ -1,0 +1,217 @@
+//! Read-only query execution for shared-read concurrency (DESIGN.md
+//! §Serving): a [`ReadCursor`] executes the read-only microprograms of a
+//! write-free kernel query over a *shared* `&PrinsArray` borrow, so many
+//! cursors — one per concurrent reader — can run over the same resident
+//! rows at once.
+//!
+//! The cursor privately owns everything a query would otherwise mutate:
+//! per-module tag registers, a local cycle counter, and a local energy
+//! ledger. Tag computation reuses the exact word-blocked match function
+//! behind `RcamModule::compare`, and every cycle/ledger charge mirrors
+//! the mutating path counter-for-counter, so collected outputs and
+//! windowed [`ExecStats`] are bit-identical to a [`Controller`] running
+//! the same programs on a fresh stats window — while the primary array's
+//! cycles, ledger, tags, and wear counters stay untouched.
+//!
+//! [`Controller`]: crate::controller::Controller
+
+use super::ExecStats;
+use crate::error::{bail, Result};
+use crate::isa::{Instr, Program};
+use crate::rcam::device::{CYCLES_COMPARE, CYCLES_REDUCE_ISSUE};
+use crate::rcam::module::compare_tags_into;
+use crate::rcam::{BitVec, EnergyLedger, Pattern, PrinsArray};
+
+/// One concurrent reader's execution context over a borrowed array. See
+/// the module doc for the bit-equality contract with [`Controller`].
+///
+/// Only the two read-only instructions a write-free query plan may
+/// contain (`prins verify` rule C01) are executable: `Compare` and
+/// `ReduceCount`. Anything else is refused with an error — a mutating
+/// instruction here would have to touch the array every other reader is
+/// using.
+///
+/// [`Controller`]: crate::controller::Controller
+pub struct ReadCursor<'a> {
+    array: &'a PrinsArray,
+    /// Cursor-private tag registers, one per module.
+    tags: Vec<BitVec>,
+    cycles: u64,
+    ledger: EnergyLedger,
+}
+
+impl<'a> ReadCursor<'a> {
+    /// A cursor over `array` with cleared private tags and a zeroed
+    /// stats window.
+    pub fn new(array: &'a PrinsArray) -> Self {
+        ReadCursor {
+            array,
+            tags: array
+                .modules()
+                .iter()
+                .map(|m| BitVec::zeros(m.rows()))
+                .collect(),
+            cycles: 0,
+            ledger: EnergyLedger::default(),
+        }
+    }
+
+    /// Compare: identical tags and charges to `PrinsArray::compare`,
+    /// landed in the cursor instead of the array.
+    pub fn compare(&mut self, pattern: &Pattern) {
+        for (m, tags) in self.array.modules().iter().zip(&mut self.tags) {
+            compare_tags_into(m.storage(), pattern, tags);
+            self.ledger.n_compare += 1;
+            self.ledger.compare_bit_events += (m.width() * m.rows()) as u128;
+        }
+        self.cycles += CYCLES_COMPARE;
+    }
+
+    /// Reduction-tree count over the cursor's private tags: identical
+    /// result and charges to `PrinsArray::count_tags`.
+    pub fn reduce_count(&mut self) -> u64 {
+        let mut n = 0u64;
+        for (m, tags) in self.array.modules().iter().zip(&self.tags) {
+            n += tags.count_ones();
+            self.ledger.n_reduce += 1;
+            self.ledger.reduce_bit_events +=
+                (m.rows() as u128) * (m.tree_levels() as u128);
+        }
+        self.cycles += CYCLES_REDUCE_ISSUE;
+        n
+    }
+
+    /// Execute a read-only program (`Compare`/`ReduceCount` only),
+    /// collecting reduction results in program order — the shared-read
+    /// twin of `Controller::execute_collect`.
+    pub fn execute_collect(&mut self, prog: &Program) -> Result<Vec<u64>> {
+        let mut out = Vec::new();
+        for instr in &prog.instrs {
+            match instr {
+                Instr::Compare(p) => self.compare(p),
+                Instr::ReduceCount => out.push(self.reduce_count()),
+                other => bail!(
+                    "shared-read cursor refuses non-read-only instruction {other:?}"
+                ),
+            }
+        }
+        Ok(out)
+    }
+
+    /// Charge cycles outside any program (pipelined reduction-tree
+    /// drains — a query plan's `extra_cycles`).
+    pub fn add_cycles(&mut self, n: u64) {
+        self.cycles += n;
+    }
+
+    /// The cursor's windowed stats. `passes` is pinned to 0 exactly as
+    /// the write-free kernels pin it on their query paths (no
+    /// compare+write microcode passes).
+    pub fn stats(&self) -> ExecStats {
+        ExecStats {
+            cycles: self.cycles,
+            instructions: self.ledger.n_compare
+                + self.ledger.n_write
+                + self.ledger.n_read
+                + self.ledger.n_reduce
+                + self.ledger.n_tag_op,
+            passes: 0,
+            ledger: self.ledger.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::controller::Controller;
+    use crate::isa::Field;
+    use crate::rcam::PrinsArray;
+
+    fn loaded_array(n_modules: usize, rows_per_module: usize) -> PrinsArray {
+        let mut a = PrinsArray::new(n_modules, rows_per_module, 16);
+        for r in 0..a.total_rows() {
+            a.load_row_bits(r, 0, 8, (r % 23) as u64);
+        }
+        a
+    }
+
+    fn probe_program() -> Program {
+        let f = Field::new(0, 8);
+        let mut p = Program::new();
+        for v in [5u64, 13, 22, 1] {
+            p.compare_field(f, v);
+            p.push(Instr::ReduceCount);
+        }
+        p
+    }
+
+    #[test]
+    fn cursor_matches_controller_bit_for_bit() {
+        for (m, rpm) in [(1usize, 300usize), (3, 100)] {
+            let array = loaded_array(m, rpm);
+            let prog = probe_program();
+            // reference: the mutating controller path on a fresh window
+            let mut ctl = Controller::new(array.clone());
+            ctl.begin_stats();
+            let want = ctl.execute_collect(&prog);
+            ctl.array.charge_reduction_latency();
+            let want_stats = ctl.stats();
+            // shared-read path
+            let mut cur = ReadCursor::new(&array);
+            let got = cur.execute_collect(&prog).unwrap();
+            cur.add_cycles(array.reduction_latency_cycles());
+            let stats = cur.stats();
+            assert_eq!(got, want, "{m}x{rpm}: collected outputs");
+            assert_eq!(stats.cycles, want_stats.cycles, "{m}x{rpm}: cycles");
+            assert_eq!(stats.ledger, want_stats.ledger, "{m}x{rpm}: ledger");
+            assert_eq!(stats.instructions, want_stats.instructions);
+            assert_eq!(stats.passes, 0, "write-free query pins passes to 0");
+        }
+    }
+
+    #[test]
+    fn cursor_leaves_the_array_untouched() {
+        let array = loaded_array(2, 64);
+        let cycles0 = array.cycles;
+        let ledger0 = array.ledger();
+        let tags0: Vec<_> = array.modules().iter().map(|m| m.tags().clone()).collect();
+        let mut cur = ReadCursor::new(&array);
+        cur.execute_collect(&probe_program()).unwrap();
+        assert_eq!(array.cycles, cycles0);
+        assert_eq!(array.ledger(), ledger0);
+        for (m, t0) in array.modules().iter().zip(&tags0) {
+            assert_eq!(m.tags(), t0, "array tags mutated by a read cursor");
+        }
+    }
+
+    #[test]
+    fn mutating_instructions_are_refused() {
+        let array = loaded_array(1, 32);
+        let mut p = Program::new();
+        p.compare_field(Field::new(0, 8), 3);
+        p.write_field(Field::new(8, 4), 0xA);
+        let mut cur = ReadCursor::new(&array);
+        assert!(cur.execute_collect(&p).is_err());
+    }
+
+    #[test]
+    fn concurrent_cursors_agree_with_each_other() {
+        let array = loaded_array(2, 128);
+        let prog = probe_program();
+        let runs: Vec<Vec<u64>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..8)
+                .map(|_| {
+                    s.spawn(|| {
+                        let mut cur = ReadCursor::new(&array);
+                        cur.execute_collect(&prog).unwrap()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for r in &runs[1..] {
+            assert_eq!(r, &runs[0]);
+        }
+    }
+}

@@ -9,12 +9,15 @@
 //! execution the storage is not host-accessible (no coherence hardware,
 //! §5.3).
 //!
-//! `server` exposes the same protocol over a TCP socket (std::net +
-//! threads; the vendored crate set has no tokio) so external processes
-//! can drive PRINS like a storage appliance; the wire protocol is
-//! specified in `docs/PROTOCOL.md`. `rack` scales the host view out to a
-//! multi-device shard rack with cost-modeled host-side merging
-//! (DESIGN.md §Sharding).
+//! `server` exposes the same protocol over a TCP socket so external
+//! processes can drive PRINS like a storage appliance: a readiness-polled
+//! connection multiplexer with pipelined line framing feeds a worker
+//! pool, write-free resident queries run as concurrent shared readers,
+//! and a full dataset table evicts by wear-aware LRU (std::net only; the
+//! vendored crate set has no tokio — DESIGN.md §Serving). The wire
+//! protocol is specified in `docs/PROTOCOL.md`. `rack` scales the host
+//! view out to a multi-device shard rack with cost-modeled host-side
+//! merging (DESIGN.md §Sharding).
 
 pub mod rack;
 pub mod server;

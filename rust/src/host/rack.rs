@@ -200,6 +200,37 @@ impl PrinsRack {
         })
     }
 
+    /// Execute `f(shard_index, &slot)` over every resident shard slot
+    /// concurrently and return the results in shard order — the
+    /// shared-read twin of [`PrinsRack::query_shards`]: slots are
+    /// borrowed immutably, so many callers can run `read_shards` over
+    /// the **same** slots at the same time (the server's concurrent
+    /// reader admission, DESIGN.md §Serving). Write-free kernels execute
+    /// their query plans on read cursors inside `f`; anything needing
+    /// `&mut` stays on `query_shards`.
+    pub fn read_shards<S, R, F>(&self, slots: &[S], f: F) -> Vec<R>
+    where
+        S: Sync,
+        R: Send,
+        F: Fn(usize, &S) -> R + Sync,
+    {
+        if slots.len() <= 1 {
+            return slots.iter().enumerate().map(|(i, s)| f(i, s)).collect();
+        }
+        std::thread::scope(|sc| {
+            let f = &f;
+            let handles: Vec<_> = slots
+                .iter()
+                .enumerate()
+                .map(|(i, s)| sc.spawn(move || f(i, s)))
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("rack shard worker panicked"))
+                .collect()
+        })
+    }
+
     /// Fold the **load phase** of a resident dataset: per-shard load
     /// stats plus one command + dataset-payload message per shard on the
     /// host link (`payload_bytes[i]` = shard i's raw dataset bytes; the

@@ -22,121 +22,157 @@
 //! datasets): `LOAD <kind> ...` synthesizes a dataset server-side, loads
 //! it onto a rack resident in the session, and returns a dataset id; the
 //! kernel verbs' short (dataset-id) forms then query the resident data
-//! without reloading — repeated queries charge only query cycles.
-//! `DATASETS` lists the session's registry, `DROP <id>` frees one entry.
-//! Sessions are isolated: ids, shard counts, and resident data are
+//! without reloading — repeated queries charge only query cycles. The
+//! table holds at most [`MAX_DATASETS`] entries; a `LOAD` into a full
+//! table evicts the least-recently-used dataset among the coldest-wear
+//! candidates and reports it in a trailing `evicted=` field. `DATASETS`
+//! lists the session's registry, `DROP <id>` frees one entry. Sessions
+//! are isolated: ids, shard counts, and resident data are
 //! per-connection and die with it.
 //!
-//! (std::net + a thread per connection; the vendored crate set has no
-//! tokio — documented in Cargo.toml.)
+//! **Serving model** (DESIGN.md §Serving): one readiness-polled
+//! multiplexer thread owns every connection — non-blocking accepts,
+//! per-connection input/output buffers, line framing that tolerates
+//! arbitrary packet splits and coalescing — and a worker pool runs the
+//! simulations. Clients may pipeline many request lines on one
+//! connection; replies always return in request order. Write-free
+//! resident queries (kernels opting into `Kernel::SHARED_READ`) are
+//! admitted as concurrent *shared readers* over the same resident rows;
+//! loads, drops, and every other verb take the session exclusively.
+//! (std::net only; the vendored crate set has no tokio — documented in
+//! Cargo.toml.)
 
 use super::rack::{PrinsRack, RackStats};
 use crate::algorithms::kernel::{find_verb, registry, QueryOut, ResidentDyn};
 use crate::error::{bail, ensure, Result};
 use crate::rcam::{DeviceModel, ExecBackend, InterconnectModel};
 use crate::reliability::{FaultModel, FidelityReport};
-use std::collections::BTreeMap;
-use std::io::{BufRead, BufReader, Write};
+use std::collections::{BTreeMap, VecDeque};
+use std::io::{ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::{Duration, Instant};
 
-/// Read poll interval: connection threads wake this often to observe the
-/// stop flag, so `shutdown()` can join every thread even while a client
-/// holds its connection open without sending.
-const READ_POLL: Duration = Duration::from_millis(50);
+/// Multiplexer idle nap: when a readiness sweep moved no bytes, framed
+/// no lines, and completed no work, the mux sleeps this long before the
+/// next sweep (it also observes the stop flag at this cadence).
+const IDLE_POLL: Duration = Duration::from_millis(1);
 
-/// Write timeout: a client that stops draining its receive buffer gets
-/// disconnected after this long instead of pinning its worker thread in
-/// `write` forever (which would make `shutdown()` hang on the join).
+/// Write stall timeout: a client that stops draining its receive buffer
+/// while replies are queued gets disconnected after this long instead of
+/// buffering output forever (which would also make `shutdown()` slow).
 const WRITE_TIMEOUT: Duration = Duration::from_secs(5);
 
-/// A running TCP front-end: acceptor thread + one worker per connection.
+/// Tuning knobs of [`Server::spawn_opts`].
+#[derive(Clone, Copy, Debug)]
+pub struct ServeOptions {
+    /// Simulator execution backend for the per-request PRINS devices.
+    /// Replies (cycles, energy, results) are bit-identical across
+    /// backends; the knob only sets simulation speed per request.
+    pub backend: ExecBackend,
+    /// Worker threads running request simulations (≥ 1). Pipelined and
+    /// cross-client requests execute concurrently up to this width.
+    pub workers: usize,
+    /// Admit write-free resident queries as concurrent shared readers.
+    /// `false` serializes every request per connection — the
+    /// exclusive-access baseline measured by `benches/throughput.rs`.
+    pub shared_read: bool,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            backend: ExecBackend::Serial,
+            workers: default_workers(),
+            shared_read: true,
+        }
+    }
+}
+
+/// Default worker-pool width: the machine's parallelism, clamped so
+/// tests and small hosts stay well-behaved.
+fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .clamp(2, 8)
+}
+
+/// A running TCP front-end: one multiplexer thread plus a worker pool.
 pub struct Server {
     /// The resolved listen address (useful with ephemeral-port binds).
     pub addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
-    handle: Option<std::thread::JoinHandle<()>>,
-    conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+    mux: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl Server {
-    /// Bind and serve on a background thread with the serial simulator
-    /// backend. Bind to port 0 for an ephemeral port (`self.addr`
-    /// carries the resolved address).
+    /// Bind and serve on background threads with default options
+    /// (serial simulator backend, shared reads on). Bind to port 0 for
+    /// an ephemeral port (`self.addr` carries the resolved address).
     pub fn spawn(bind: &str) -> Result<Server> {
-        Self::spawn_with(bind, ExecBackend::Serial)
+        Self::spawn_opts(bind, ServeOptions::default())
     }
 
     /// [`Server::spawn`] with an explicit simulator execution backend for
-    /// the per-request PRINS devices. Replies (cycles, energy, results)
-    /// are bit-identical across backends; the knob only sets simulation
-    /// speed per request.
+    /// the per-request PRINS devices.
     pub fn spawn_with(bind: &str, backend: ExecBackend) -> Result<Server> {
+        Self::spawn_opts(
+            bind,
+            ServeOptions {
+                backend,
+                ..ServeOptions::default()
+            },
+        )
+    }
+
+    /// [`Server::spawn`] with explicit [`ServeOptions`].
+    pub fn spawn_opts(bind: &str, opts: ServeOptions) -> Result<Server> {
+        ensure!(opts.workers >= 1, "server needs at least one worker");
         let listener = TcpListener::bind(bind)?;
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
-        let conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>> =
-            Arc::new(Mutex::new(Vec::new()));
-        let (stop2, conns2) = (stop.clone(), conns.clone());
-        let handle = std::thread::spawn(move || {
-            while !stop2.load(Ordering::Acquire) {
-                match listener.accept() {
-                    Ok((stream, _)) => {
-                        // accepted sockets can inherit the listener's
-                        // non-blocking mode on some platforms; reset it or
-                        // the timeouts below would be ineffective
-                        stream.set_nonblocking(false).ok();
-                        stream.set_read_timeout(Some(READ_POLL)).ok();
-                        stream.set_write_timeout(Some(WRITE_TIMEOUT)).ok();
-                        let st = stop2.clone();
-                        let h = std::thread::spawn(move || {
-                            let _ = handle_conn(stream, st, backend);
-                        });
-                        let mut guard = conns2.lock().unwrap();
-                        // reap finished workers so a long-running server
-                        // does not accumulate one handle per connection
-                        let mut i = 0;
-                        while i < guard.len() {
-                            if guard[i].is_finished() {
-                                let _ = guard.swap_remove(i).join();
-                            } else {
-                                i += 1;
-                            }
-                        }
-                        guard.push(h);
-                    }
-                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        std::thread::sleep(std::time::Duration::from_millis(5));
-                    }
-                    Err(_) => break,
-                }
-            }
+        let (job_tx, job_rx) = channel::<Job>();
+        let (done_tx, done_rx) = channel::<Done>();
+        let job_rx = Arc::new(Mutex::new(job_rx));
+        let mut workers = Vec::with_capacity(opts.workers);
+        for _ in 0..opts.workers {
+            let rx = job_rx.clone();
+            let tx = done_tx.clone();
+            let backend = opts.backend;
+            workers.push(std::thread::spawn(move || worker_loop(rx, tx, backend)));
+        }
+        drop(done_tx); // workers hold the senders, the mux the receiver
+        let stop2 = stop.clone();
+        let mux = std::thread::spawn(move || {
+            Mux::new(listener, stop2, opts, job_tx, done_rx).run();
         });
         Ok(Server {
             addr,
             stop,
-            handle: Some(handle),
-            conns,
+            mux: Some(mux),
+            workers,
         })
     }
 
-    /// Stop accepting, then join the acceptor AND every connection worker
-    /// (workers poll the stop flag at `READ_POLL`, so this cannot hang on
-    /// an idle client).
+    /// Stop accepting, then join the multiplexer AND every worker (the
+    /// mux observes the stop flag at `IDLE_POLL`; dropping its job
+    /// sender unblocks the workers, so this cannot hang on an idle
+    /// client).
     pub fn shutdown(mut self) {
         self.stop_and_join();
     }
 
     fn stop_and_join(&mut self) {
         self.stop.store(true, Ordering::Release);
-        if let Some(h) = self.handle.take() {
+        if let Some(h) = self.mux.take() {
             let _ = h.join();
         }
-        let workers: Vec<_> = std::mem::take(&mut *self.conns.lock().unwrap());
-        for h in workers {
+        for h in std::mem::take(&mut self.workers) {
             let _ = h.join();
         }
     }
@@ -148,20 +184,398 @@ impl Drop for Server {
     }
 }
 
-/// Most resident datasets one session may hold at once (each holds live
-/// simulated shard arrays; `DROP` frees slots).
+// ---------------------------------------------------------------------
+// Worker pool: simulation happens here, off the multiplexer thread.
+// ---------------------------------------------------------------------
+
+/// One request line handed to the worker pool.
+struct Job {
+    conn: u64,
+    seq: u64,
+    line: String,
+    sess: Arc<RwLock<Session>>,
+    shared: bool,
+}
+
+/// A finished request on its way back to the multiplexer.
+struct Done {
+    conn: u64,
+    seq: u64,
+    shared: bool,
+    outcome: Outcome,
+}
+
+/// What the multiplexer should do with a finished request.
+enum Outcome {
+    /// Write this reply line.
+    Line(String),
+    /// Write `BYE`, drop unserved pipelined input, close after flush.
+    Bye,
+}
+
+fn worker_loop(rx: Arc<Mutex<Receiver<Job>>>, tx: Sender<Done>, backend: ExecBackend) {
+    loop {
+        let job = {
+            let rx = rx.lock().unwrap();
+            rx.recv()
+        };
+        let Ok(job) = job else {
+            return; // server shut down: job sender dropped
+        };
+        let outcome = run_job(&job, backend);
+        let done = Done {
+            conn: job.conn,
+            seq: job.seq,
+            shared: job.shared,
+            outcome,
+        };
+        if tx.send(done).is_err() {
+            return; // multiplexer gone
+        }
+    }
+}
+
+fn run_job(job: &Job, backend: ExecBackend) -> Outcome {
+    if job.shared {
+        // read lock: concurrent with every other shared reader of this
+        // session; the admission rule keeps writers out while we run
+        let sess = job.sess.read().unwrap();
+        match dispatch_shared(job.line.trim(), &sess) {
+            Ok(r) => Outcome::Line(r),
+            Err(e) => Outcome::Line(format!("ERR {e}")),
+        }
+    } else {
+        let mut sess = job.sess.write().unwrap();
+        match dispatch(job.line.trim(), backend, &mut sess) {
+            Ok(Some(r)) => Outcome::Line(r),
+            Ok(None) => Outcome::Bye,
+            Err(e) => Outcome::Line(format!("ERR {e}")),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// The multiplexer: readiness-polled connection state machine.
+// ---------------------------------------------------------------------
+
+/// Per-connection multiplexer state: buffered bytes in both directions,
+/// framed-but-undispatched lines, completed-but-unemitted replies, and
+/// the admission counters that order shared readers around exclusive
+/// requests.
+struct Conn {
+    stream: TcpStream,
+    sess: Arc<RwLock<Session>>,
+    inbuf: Vec<u8>,
+    outbuf: Vec<u8>,
+    /// Framed request lines awaiting dispatch, FIFO, with their reply
+    /// sequence numbers.
+    pending: VecDeque<(u64, String)>,
+    /// Completed replies awaiting in-order emission (reorder buffer:
+    /// workers finish out of order, clients see request order).
+    done: BTreeMap<u64, Outcome>,
+    next_seq: u64,
+    next_emit: u64,
+    /// Requests dispatched to the pool and not yet completed.
+    inflight: usize,
+    /// An exclusive (session-mutating) request is in flight: nothing
+    /// else may dispatch until it completes.
+    exclusive_inflight: bool,
+    /// Read side closed; close the connection once fully drained.
+    eof: bool,
+    /// `BYE` emitted; close once the output buffer flushes.
+    bye: bool,
+    dead: bool,
+    last_progress: Instant,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Conn {
+        Conn {
+            stream,
+            sess: Arc::new(RwLock::new(Session::default())),
+            inbuf: Vec::new(),
+            outbuf: Vec::new(),
+            pending: VecDeque::new(),
+            done: BTreeMap::new(),
+            next_seq: 0,
+            next_emit: 0,
+            inflight: 0,
+            exclusive_inflight: false,
+            eof: false,
+            bye: false,
+            dead: false,
+            last_progress: Instant::now(),
+        }
+    }
+}
+
+struct Mux {
+    listener: TcpListener,
+    stop: Arc<AtomicBool>,
+    opts: ServeOptions,
+    job_tx: Sender<Job>,
+    done_rx: Receiver<Done>,
+    conns: BTreeMap<u64, Conn>,
+    next_conn: u64,
+}
+
+impl Mux {
+    fn new(
+        listener: TcpListener,
+        stop: Arc<AtomicBool>,
+        opts: ServeOptions,
+        job_tx: Sender<Job>,
+        done_rx: Receiver<Done>,
+    ) -> Mux {
+        Mux {
+            listener,
+            stop,
+            opts,
+            job_tx,
+            done_rx,
+            conns: BTreeMap::new(),
+            next_conn: 0,
+        }
+    }
+
+    fn run(mut self) {
+        while !self.stop.load(Ordering::Acquire) {
+            let mut busy = self.accept_new();
+            busy |= self.drain_completions();
+            let ids: Vec<u64> = self.conns.keys().copied().collect();
+            for id in ids {
+                busy |= self.service_conn(id);
+            }
+            self.conns.retain(|_, c| !c.dead);
+            if !busy {
+                std::thread::sleep(IDLE_POLL);
+            }
+        }
+    }
+
+    fn accept_new(&mut self) -> bool {
+        let mut busy = false;
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    busy = true;
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let id = self.next_conn;
+                    self.next_conn += 1;
+                    self.conns.insert(id, Conn::new(stream));
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(_) => break,
+            }
+        }
+        busy
+    }
+
+    /// Route finished work back to its connection's reorder buffer.
+    fn drain_completions(&mut self) -> bool {
+        let mut busy = false;
+        while let Ok(done) = self.done_rx.try_recv() {
+            busy = true;
+            let Some(c) = self.conns.get_mut(&done.conn) else {
+                continue; // connection died while its request ran
+            };
+            c.inflight -= 1;
+            if !done.shared {
+                c.exclusive_inflight = false;
+            }
+            c.done.insert(done.seq, done.outcome);
+        }
+        busy
+    }
+
+    /// One readiness sweep over a single connection: pull bytes, frame
+    /// lines, emit completed replies in order, admit pending requests,
+    /// flush output. Returns whether anything moved.
+    fn service_conn(&mut self, id: u64) -> bool {
+        let Some(c) = self.conns.get_mut(&id) else {
+            return false;
+        };
+        let mut busy = false;
+
+        // 1. Pull whatever bytes the socket has ready. Framing below
+        //    tolerates any split/coalescing: bytes accumulate in `inbuf`
+        //    until a newline lands.
+        if !c.eof && !c.bye && !c.dead {
+            let mut tmp = [0u8; 4096];
+            loop {
+                match c.stream.read(&mut tmp) {
+                    Ok(0) => {
+                        c.eof = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        c.inbuf.extend_from_slice(&tmp[..n]);
+                        busy = true;
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        c.dead = true;
+                        return true;
+                    }
+                }
+            }
+        }
+
+        // 2. Frame complete lines into the pending queue.
+        if !c.bye {
+            while let Some(pos) = c.inbuf.iter().position(|&b| b == b'\n') {
+                let raw: Vec<u8> = c.inbuf.drain(..=pos).collect();
+                let line = String::from_utf8_lossy(&raw).into_owned();
+                c.pending.push_back((c.next_seq, line));
+                c.next_seq += 1;
+                busy = true;
+            }
+            // EOF flushes a final unterminated line, like the pre-mux
+            // server did.
+            if c.eof && !c.inbuf.is_empty() {
+                let line = String::from_utf8_lossy(&c.inbuf).into_owned();
+                c.inbuf.clear();
+                c.pending.push_back((c.next_seq, line));
+                c.next_seq += 1;
+                busy = true;
+            }
+        }
+
+        // 3. Emit completed replies strictly in request order.
+        while let Some(outcome) = c.done.remove(&c.next_emit) {
+            c.next_emit += 1;
+            busy = true;
+            match outcome {
+                Outcome::Line(r) => {
+                    c.outbuf.extend_from_slice(r.as_bytes());
+                    c.outbuf.push(b'\n');
+                }
+                Outcome::Bye => {
+                    c.outbuf.extend_from_slice(b"BYE\n");
+                    c.pending.clear(); // QUIT discards later pipelined input
+                    c.bye = true;
+                }
+            }
+        }
+
+        // 4. Admission: dispatch from the front of the FIFO. Shared
+        //    readers pile up concurrently; an exclusive request waits
+        //    for the connection to drain, then runs alone — so resident
+        //    datasets cannot be dropped or evicted under a running
+        //    shared query of the same session.
+        if !c.bye && !c.dead {
+            loop {
+                if c.exclusive_inflight {
+                    break;
+                }
+                let Some((_, line)) = c.pending.front() else {
+                    break;
+                };
+                let shared = match c.sess.try_read() {
+                    Ok(sess) => classify(line, &sess, self.opts.shared_read),
+                    // a writer holds the session (only possible for our
+                    // own exclusive job); retry next sweep
+                    Err(_) => break,
+                };
+                if !shared && c.inflight > 0 {
+                    break; // exclusive runs alone: wait for drain
+                }
+                let (seq, line) = c.pending.pop_front().expect("front checked above");
+                c.inflight += 1;
+                c.exclusive_inflight = !shared;
+                busy = true;
+                let job = Job {
+                    conn: id,
+                    seq,
+                    line,
+                    sess: c.sess.clone(),
+                    shared,
+                };
+                if self.job_tx.send(job).is_err() {
+                    c.dead = true;
+                    return true;
+                }
+                if !shared {
+                    break;
+                }
+            }
+        }
+
+        // 5. Flush buffered replies; detect write-stalled clients.
+        while !c.outbuf.is_empty() {
+            match c.stream.write(&c.outbuf) {
+                Ok(0) => {
+                    c.dead = true;
+                    break;
+                }
+                Ok(n) => {
+                    c.outbuf.drain(..n);
+                    c.last_progress = Instant::now();
+                    busy = true;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    if c.last_progress.elapsed() >= WRITE_TIMEOUT {
+                        c.dead = true;
+                    }
+                    break;
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    c.dead = true;
+                    break;
+                }
+            }
+        }
+        if c.outbuf.is_empty() {
+            c.last_progress = Instant::now();
+        }
+
+        // 6. Close when done: after BYE flushes, or when a closed client
+        //    has every pipelined request answered and flushed.
+        if c.outbuf.is_empty()
+            && (c.bye
+                || (c.eof && c.pending.is_empty() && c.inflight == 0 && c.done.is_empty()))
+        {
+            c.dead = true;
+        }
+        busy
+    }
+}
+
+// ---------------------------------------------------------------------
+// Sessions, admission classes, and the wear-aware resident table.
+// ---------------------------------------------------------------------
+
+/// Capacity of a session's resident-dataset table (each entry holds
+/// live simulated shard arrays). A `LOAD` into a full table evicts the
+/// least-recently-used dataset among the coldest-wear candidates (see
+/// [`evict_for_slot`]); `DROP` still frees slots explicitly.
 const MAX_DATASETS: usize = 16;
+
+/// A resident dataset plus the bookkeeping the wear-aware evictor
+/// reads: a recency stamp from the session's logical clock, bumped by
+/// every query that touches the dataset (atomically, because shared
+/// readers touch it concurrently under the session read lock).
+struct DatasetEntry {
+    res: Box<dyn ResidentDyn>,
+    last_used: AtomicU64,
+}
 
 /// Per-connection protocol state: the shard count selected by `RACK <n>`
 /// (1 = single-device, the default) and the resident-dataset registry
 /// (`LOAD`/`DATASETS`/`DROP`); see `docs/PROTOCOL.md` §Sessions.
 struct Session {
     shards: usize,
-    datasets: BTreeMap<u64, Box<dyn ResidentDyn>>,
+    datasets: BTreeMap<u64, DatasetEntry>,
     next_id: u64,
     /// Fault model applied to racks built for future loads/one-shots
     /// (`FAULTS <ber> <seed> [stuck_n]`); `None` = ideal device.
     fault: Option<FaultModel>,
+    /// Logical clock behind the `last_used` recency stamps.
+    clock: AtomicU64,
 }
 
 impl Default for Session {
@@ -171,53 +585,82 @@ impl Default for Session {
             datasets: BTreeMap::new(),
             next_id: 1,
             fault: None,
+            clock: AtomicU64::new(0),
         }
     }
 }
 
-fn handle_conn(stream: TcpStream, stop: Arc<AtomicBool>, backend: ExecBackend) -> Result<()> {
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut out = stream;
-    let mut buf: Vec<u8> = Vec::new();
-    let mut sess = Session::default();
-    loop {
-        buf.clear();
-        // Accumulate one raw line; the read timeout doubles as the
-        // stop-flag poll. Bytes are collected with read_until (not
-        // read_line) so a timeout landing mid-multi-byte character
-        // cannot drop already-consumed bytes — everything read stays
-        // appended to `buf` across timeouts.
-        let n = loop {
-            if stop.load(Ordering::Acquire) {
-                return Ok(()); // server shutting down
+impl Session {
+    /// Next recency stamp (atomic: concurrent shared readers tick too).
+    fn tick(&self) -> u64 {
+        self.clock.fetch_add(1, Ordering::Relaxed) + 1
+    }
+}
+
+/// Admission class of one request line (DESIGN.md §Serving): `true` =
+/// shared reader — `PING`, or a registered kernel's dataset-id query
+/// form against a resident dataset whose kernel opted into
+/// `Kernel::SHARED_READ` and whose rack is fault-free. Everything else
+/// — loads, drops, one-shots, session config, malformed lines — is
+/// exclusive.
+fn classify(line: &str, sess: &Session, shared_read: bool) -> bool {
+    if !shared_read {
+        return false;
+    }
+    let parts: Vec<&str> = line.split_whitespace().collect();
+    match parts.as_slice() {
+        ["PING"] => true,
+        [verb, args @ ..] => {
+            let Some(entry) = find_verb(verb) else {
+                return false;
+            };
+            if args.len() != entry.query_arity + 1 {
+                return false;
             }
-            match reader.read_until(b'\n', &mut buf) {
-                Ok(n) => break n,
-                Err(e)
-                    if e.kind() == std::io::ErrorKind::WouldBlock
-                        || e.kind() == std::io::ErrorKind::TimedOut =>
-                {
-                    continue;
-                }
-                Err(e) => return Err(e.into()),
-            }
-        };
-        if n == 0 && buf.is_empty() {
-            return Ok(()); // client closed
+            let Ok(id) = args[0].parse::<u64>() else {
+                return false;
+            };
+            let Some(e) = sess.datasets.get(&id) else {
+                return false;
+            };
+            e.res.name() == entry.name && e.res.shared_readable()
         }
-        let line = String::from_utf8_lossy(&buf);
-        let reply = match dispatch(line.trim(), backend, &mut sess) {
-            Ok(Some(r)) => r,
-            Ok(None) => {
-                writeln!(out, "BYE")?;
-                return Ok(());
-            }
-            Err(e) => format!("ERR {e}"),
-        };
-        writeln!(out, "{reply}")?;
-        if n == 0 {
-            return Ok(()); // EOF after a final unterminated line
+        _ => false,
+    }
+}
+
+/// Read-only dispatcher of the shared admission class: executes the
+/// verbs [`classify`] marked shared — `PING` and write-free resident
+/// queries — against `&Session`, so many readers run concurrently under
+/// the session's read lock. Must produce byte-identical replies to
+/// [`dispatch`] for these verbs; the concurrency tests pin that.
+fn dispatch_shared(line: &str, sess: &Session) -> Result<String> {
+    let parts: Vec<&str> = line.split_whitespace().collect();
+    match parts.as_slice() {
+        ["PING"] => Ok("PONG".into()),
+        [verb, args @ ..] => {
+            let Some(entry) = find_verb(verb) else {
+                bail!("unknown command");
+            };
+            ensure!(
+                args.len() == entry.query_arity + 1,
+                "not a shared-readable query"
+            );
+            let id: u64 = args[0].parse()?;
+            let Some(e) = sess.datasets.get(&id) else {
+                bail!("unknown dataset {id}");
+            };
+            ensure!(
+                e.res.name() == entry.name,
+                "dataset {id} is kind {}, not {}",
+                e.res.name(),
+                entry.name
+            );
+            let out = e.res.query_args_shared(&args[1..])?;
+            e.last_used.store(sess.tick(), Ordering::Relaxed);
+            Ok(query_ok(&out, id))
         }
+        _ => bail!("unknown command"),
     }
 }
 
@@ -347,44 +790,74 @@ fn load_usage() -> String {
     format!("usage: {}", forms.join(" | "))
 }
 
+/// Make room for one more resident dataset when the table is at
+/// capacity: evict the least-recently-used dataset among those with the
+/// coldest wear. The victim key is (hottest-row write count, recency
+/// stamp, id), minimized — so wear protection comes first (a dataset
+/// whose cells are already worn is kept resident; datasets without wear
+/// tracking, i.e. faulty-rack loads, count as coldest), and recency
+/// breaks ties. Returns the evicted id for the `evicted=` reply field.
+fn evict_for_slot(sess: &mut Session) -> Option<u64> {
+    if sess.datasets.len() < MAX_DATASETS {
+        return None;
+    }
+    let victim = sess
+        .datasets
+        .iter()
+        .min_by_key(|(id, e)| {
+            (
+                e.res.wear_score().unwrap_or(0),
+                e.last_used.load(Ordering::Relaxed),
+                **id,
+            )
+        })
+        .map(|(id, _)| *id)?;
+    sess.datasets.remove(&victim);
+    Some(victim)
+}
+
 /// `LOAD <KIND> ...`: synthesize a dataset server-side via the kind's
 /// registry entry, load it once onto a rack with the session's current
 /// shard count, and register it under a fresh id. Every subsequent
 /// dataset-id kernel verb reuses the resident rows and charges only
 /// query cycles. The shard layout is fixed at `LOAD` time; later `RACK`
-/// changes affect only future loads.
+/// changes affect only future loads. A full table evicts wear-aware LRU
+/// ([`evict_for_slot`]) and reports the victim in a trailing `evicted=`
+/// field.
 fn load_dataset(
     args: &[&str],
     backend: ExecBackend,
     sess: &mut Session,
 ) -> Result<Option<String>> {
-    if sess.datasets.len() >= MAX_DATASETS {
-        // name the recovery verb and the droppable ids so a client can
-        // free a slot without a round-trip to DATASETS
-        let ids: Vec<String> = sess.datasets.keys().map(u64::to_string).collect();
-        bail!(
-            "dataset limit reached (max {}); DROP one of ids [{}] to free a slot",
-            MAX_DATASETS,
-            ids.join(",")
-        );
-    }
     // kinds are case-sensitive wire verbs, exactly like the kernel verbs
     let Some(entry) = args.first().and_then(|kind| find_verb(kind)) else {
         bail!("{}", load_usage());
     };
     let rack = rack_for(sess, backend)?;
     let data = (entry.load)(&rack, &args[1..])?;
+    // evict only after the new load synthesized successfully, so a
+    // malformed LOAD can never cost a resident dataset
+    let evicted = evict_for_slot(sess);
     let id = sess.next_id;
     sess.next_id += 1;
-    let reply = Reply::ok()
+    let mut reply = Reply::ok()
         .kv("id", id)
         .kv("kind", data.name())
         .kv("n", data.rows())
         .kv("shards", data.load_report().shards)
-        .fields(&load_fields(data.load_report()))
-        .finish();
-    sess.datasets.insert(id, data);
-    Ok(Some(reply))
+        .fields(&load_fields(data.load_report()));
+    if let Some(victim) = evicted {
+        reply = reply.kv("evicted", victim);
+    }
+    let stamp = sess.tick();
+    sess.datasets.insert(
+        id,
+        DatasetEntry {
+            res: data,
+            last_used: AtomicU64::new(stamp),
+        },
+    );
+    Ok(Some(reply.finish()))
 }
 
 /// A registered kernel verb, dispatched by arity (docs/PROTOCOL.md):
@@ -404,16 +877,18 @@ fn kernel_verb(
     if args.len() == entry.query_arity + 1 {
         // dataset-id query: no reload, query cycles only
         let id: u64 = args[0].parse()?;
-        let Some(data) = sess.datasets.get_mut(&id) else {
+        let Some(e) = sess.datasets.get_mut(&id) else {
             bail!("unknown dataset {id}");
         };
         ensure!(
-            data.name() == entry.name,
+            e.res.name() == entry.name,
             "dataset {id} is kind {}, not {}",
-            data.name(),
+            e.res.name(),
             entry.name
         );
-        let out = data.query_args(&args[1..])?;
+        let out = e.res.query_args(&args[1..])?;
+        e.last_used
+            .store(sess.clock.fetch_add(1, Ordering::Relaxed) + 1, Ordering::Relaxed);
         Ok(Some(query_ok(&out, id)))
     } else if args.len() == entry.one_shot_arity {
         let rack = rack_for(sess, backend)?;
@@ -449,7 +924,12 @@ fn dispatch(line: &str, backend: ExecBackend, sess: &mut Session) -> Result<Opti
             for (id, e) in &sess.datasets {
                 reply = reply.kv(
                     "ds",
-                    format!("{id}:{}:{}:{}", e.name(), e.rows(), e.load_report().shards),
+                    format!(
+                        "{id}:{}:{}:{}",
+                        e.res.name(),
+                        e.res.rows(),
+                        e.res.load_report().shards
+                    ),
                 );
             }
             Ok(Some(reply.finish()))
@@ -777,5 +1257,99 @@ mod tests {
         }
         serial.shutdown();
         threaded.shutdown();
+    }
+
+    #[test]
+    fn pipelined_burst_replies_in_request_order() {
+        let server = Server::spawn("127.0.0.1:0").unwrap();
+        let mut conn = TcpStream::connect(server.addr).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        // one write carrying a whole session: LOAD, a pipelined burst of
+        // shared reads racing each other through the pool, an exclusive
+        // DROP fencing them, then QUIT
+        let script = "LOAD HIST 300 5\nPING\nHIST 1\nHIST 1\nHIST 1\nPING\nDROP 1\nHIST 1\nQUIT\n";
+        conn.write_all(script.as_bytes()).unwrap();
+        let mut replies = Vec::new();
+        let mut line = String::new();
+        while reader.read_line(&mut line).unwrap() > 0 {
+            replies.push(line.trim().to_string());
+            line.clear();
+        }
+        assert_eq!(replies.len(), 9, "{replies:?}");
+        assert!(replies[0].starts_with("OK id=1 kind=hist"), "{}", replies[0]);
+        assert_eq!(replies[1], "PONG");
+        assert!(replies[2].contains("dataset=1"), "{}", replies[2]);
+        assert_eq!(replies[2], replies[3]);
+        assert_eq!(replies[3], replies[4]);
+        assert_eq!(replies[5], "PONG");
+        assert_eq!(replies[6], "OK dropped=1");
+        // the post-DROP query observes the drop: admission ordered it
+        // after the exclusive request
+        assert!(replies[7].starts_with("ERR"), "{}", replies[7]);
+        assert_eq!(replies[8], "BYE");
+        server.shutdown();
+    }
+
+    #[test]
+    fn serve_options_single_worker_exclusive_only_matches_default() {
+        let opts = ServeOptions {
+            backend: ExecBackend::Serial,
+            workers: 1,
+            shared_read: false,
+        };
+        let strict = Server::spawn_opts("127.0.0.1:0", opts).unwrap();
+        let relaxed = Server::spawn("127.0.0.1:0").unwrap();
+        let session = |server: &Server| -> Vec<String> {
+            let mut conn = TcpStream::connect(server.addr).unwrap();
+            let mut reader = BufReader::new(conn.try_clone().unwrap());
+            conn.write_all(b"LOAD SEARCH 400 9\nSEARCH 1 100 5000\nSEARCH 1 0 4294967295\nQUIT\n")
+                .unwrap();
+            let mut replies = Vec::new();
+            let mut line = String::new();
+            while reader.read_line(&mut line).unwrap() > 0 {
+                replies.push(line.trim().to_string());
+                line.clear();
+            }
+            replies
+        };
+        let a = session(&strict);
+        let b = session(&relaxed);
+        assert_eq!(a.len(), 4, "{a:?}");
+        assert!(a[1].contains("count="), "{}", a[1]);
+        assert_eq!(a, b, "shared-read admission must not change any reply byte");
+        strict.shutdown();
+        relaxed.shutdown();
+    }
+
+    #[test]
+    fn full_table_load_evicts_and_reports_victim() {
+        let mut sess = Session::default();
+        for _ in 0..MAX_DATASETS {
+            let r = load_dataset(&["HIST", "50", "3"], ExecBackend::Serial, &mut sess)
+                .unwrap()
+                .unwrap();
+            assert!(!r.contains("evicted="), "{r}");
+        }
+        assert_eq!(sess.datasets.len(), MAX_DATASETS);
+        // touch every dataset except id 2: id 2 becomes the LRU among
+        // equal-wear candidates and must be the victim
+        for id in sess.datasets.keys().copied().collect::<Vec<_>>() {
+            if id != 2 {
+                let q = dispatch(&format!("HIST {id}"), ExecBackend::Serial, &mut sess)
+                    .unwrap()
+                    .unwrap();
+                assert!(q.starts_with("OK"), "{q}");
+            }
+        }
+        let r = load_dataset(&["HIST", "50", "3"], ExecBackend::Serial, &mut sess)
+            .unwrap()
+            .unwrap();
+        assert!(r.ends_with("evicted=2"), "{r}");
+        assert_eq!(sess.datasets.len(), MAX_DATASETS);
+        assert!(!sess.datasets.contains_key(&2));
+        assert!(sess.datasets.contains_key(&17), "ids stay monotonic");
+        // a malformed LOAD into the full table must not evict anything
+        assert!(load_dataset(&["HIST", "x", "3"], ExecBackend::Serial, &mut sess).is_err());
+        assert_eq!(sess.datasets.len(), MAX_DATASETS);
     }
 }

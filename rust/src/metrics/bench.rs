@@ -412,6 +412,69 @@ pub fn write_fidelity_json(
 }
 
 // ---------------------------------------------------------------------------
+// Serving-throughput results (BENCH_throughput.json)
+// ---------------------------------------------------------------------------
+
+/// One measured point of the multiplexed-serving sweep
+/// (`benches/throughput.rs`): wall-clock queries/second against a live
+/// [`crate::host::server::Server`] for one (clients, pipeline-depth,
+/// admission-mode) cell. `mode` is `"shared"` (write-free queries admit
+/// as concurrent readers) or `"exclusive"` (every request serialized
+/// per connection — the `&mut`-access baseline).
+pub struct ThroughputRecord {
+    /// Workload name of the queried resident dataset (`hist`, `search`).
+    pub bench: String,
+    /// Concurrent client connections driving the server.
+    pub clients: u64,
+    /// Request lines each client keeps in flight (1 = strict
+    /// request/reply lockstep).
+    pub pipeline: u64,
+    /// Admission mode: `"shared"` or `"exclusive"`.
+    pub mode: String,
+    /// Total queries answered across all clients.
+    pub queries: u64,
+    /// Wall-clock queries per second across the whole run.
+    pub qps: f64,
+    /// Wall-clock seconds of the measured run.
+    pub wall_s: f64,
+}
+
+/// Hand-rolled JSON for [`ThroughputRecord`]s (the crate set has no
+/// serde): a flat array of objects, one per (bench, clients, pipeline,
+/// mode) cell.
+pub fn throughput_records_json(records: &[ThroughputRecord]) -> String {
+    let mut s = String::from("[\n");
+    for (i, r) in records.iter().enumerate() {
+        s.push_str(&format!(
+            "  {{\"bench\": \"{}\", \"clients\": {}, \"pipeline\": {}, \
+             \"mode\": \"{}\", \"queries\": {}, \"qps\": {:e}, \
+             \"wall_s\": {:e}}}{}\n",
+            r.bench,
+            r.clients,
+            r.pipeline,
+            r.mode,
+            r.queries,
+            r.qps,
+            r.wall_s,
+            if i + 1 < records.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("]\n");
+    s
+}
+
+/// Write `BENCH_<name>.json` of throughput records at the repository
+/// root.
+pub fn write_throughput_json(
+    name: &str,
+    records: &[ThroughputRecord],
+) -> std::io::Result<std::path::PathBuf> {
+    let path = repo_root_path(&format!("BENCH_{name}.json"));
+    std::fs::write(&path, throughput_records_json(records))?;
+    Ok(path)
+}
+
+// ---------------------------------------------------------------------------
 // Registry-driven sweep drivers (rack_scaling / resident_queries benches)
 // ---------------------------------------------------------------------------
 
@@ -715,6 +778,37 @@ mod tests {
         // out-of-range and garbage entries fall back to the default
         let bad: Vec<String> = ["--ber", "1.5,nan,x"].iter().map(|s| s.to_string()).collect();
         assert_eq!(ber_sweep_from_args(&bad, &[0.25]), vec![0.25]);
+    }
+
+    #[test]
+    fn throughput_json_shape() {
+        let recs = vec![
+            ThroughputRecord {
+                bench: "hist".into(),
+                clients: 1,
+                pipeline: 1,
+                mode: "exclusive".into(),
+                queries: 64,
+                qps: 1.2e3,
+                wall_s: 0.05,
+            },
+            ThroughputRecord {
+                bench: "hist".into(),
+                clients: 16,
+                pipeline: 8,
+                mode: "shared".into(),
+                queries: 1024,
+                qps: 9.6e3,
+                wall_s: 0.1,
+            },
+        ];
+        let s = throughput_records_json(&recs);
+        assert!(s.starts_with("[\n") && s.trim_end().ends_with(']'));
+        assert_eq!(s.matches("\"clients\"").count(), 2);
+        assert_eq!(s.matches("},\n").count(), 1);
+        assert!(s.contains("\"mode\": \"shared\""));
+        assert!(s.contains("\"pipeline\": 8"));
+        assert!(s.contains("\"qps\""));
     }
 
     #[test]

@@ -19,6 +19,32 @@ use super::exec::ModuleParts;
 /// masked out.
 pub type Pattern = [(u16, bool)];
 
+/// Compute the match tags of `pattern` over `storage` into `tags`,
+/// touching no module state: the pure tag function shared by
+/// [`RcamModule::compare`] and the read-only shared-query cursor
+/// (`crate::controller::read::ReadCursor`). Single word-blocked pass
+/// (DESIGN.md §Perf): each tag word stays in a register across every
+/// pattern column, instead of one full fill sweep plus one and/and-not
+/// sweep per column.
+pub(crate) fn compare_tags_into(storage: &BitMatrix, pattern: &Pattern, tags: &mut BitVec) {
+    let nwords = tags.words().len();
+    let tail = storage.rows() % WORD_BITS;
+    let tail_mask = if tail == 0 { u64::MAX } else { (1u64 << tail) - 1 };
+    let planes: Vec<&[u64]> = pattern
+        .iter()
+        .map(|&(col, _)| storage.plane(col as usize).words())
+        .collect();
+    let tags = tags.words_mut();
+    for w in 0..nwords {
+        let mut t = if w + 1 == nwords { tail_mask } else { u64::MAX };
+        for (&(_, bit), plane) in pattern.iter().zip(&planes) {
+            let p = plane[w];
+            t &= if bit { p } else { !p };
+        }
+        tags[w] = t;
+    }
+}
+
 /// One RCAM module: bit-sliced crossbar storage, tag register, and the
 /// per-module energy-event ledger.
 #[derive(Clone, Debug)]
@@ -94,25 +120,7 @@ impl RcamModule {
     /// unmasked — compare energy is rows × width × E_cmp/bit (paper §3.1:
     /// "less than 1 fJ per bit" is per match-line cell).
     pub fn compare(&mut self, pattern: &Pattern) {
-        // Single word-blocked pass (DESIGN.md §Perf): each tag word stays
-        // in a register across every pattern column, instead of one full
-        // fill sweep plus one and/and-not sweep per column.
-        let nwords = self.tags.words().len();
-        let tail = self.storage.rows() % WORD_BITS;
-        let tail_mask = if tail == 0 { u64::MAX } else { (1u64 << tail) - 1 };
-        let planes: Vec<&[u64]> = pattern
-            .iter()
-            .map(|&(col, _)| self.storage.plane(col as usize).words())
-            .collect();
-        let tags = self.tags.words_mut();
-        for w in 0..nwords {
-            let mut t = if w + 1 == nwords { tail_mask } else { u64::MAX };
-            for (&(_, bit), plane) in pattern.iter().zip(&planes) {
-                let p = plane[w];
-                t &= if bit { p } else { !p };
-            }
-            tags[w] = t;
-        }
+        compare_tags_into(&self.storage, pattern, &mut self.tags);
         self.ledger.n_compare += 1;
         self.ledger.compare_bit_events += (self.width() * self.rows()) as u128;
     }

@@ -1,0 +1,150 @@
+//! Soak/stress battery for the multiplexed server (DESIGN.md §Serving):
+//! N concurrent clients × Q pipelined queries over resident datasets,
+//! with every reply asserted byte-identical to a single-client serial
+//! reference session — concurrency, pipelining, and shared-read
+//! admission must never change a reply bit — plus zero dropped
+//! connections and consistent ledger windows after the storm.
+
+use prins::host::server::{ServeOptions, Server};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, Barrier};
+
+/// Serial reference: one connection, strict request/reply lockstep.
+fn ask_serially(addr: std::net::SocketAddr, script: &[&str]) -> Vec<String> {
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut replies = Vec::with_capacity(script.len());
+    let mut line = String::new();
+    for req in script {
+        line.clear();
+        writeln!(conn, "{req}").unwrap();
+        assert!(
+            reader.read_line(&mut line).unwrap() > 0,
+            "serial reference dropped at {req:?}"
+        );
+        replies.push(line.trim().to_string());
+    }
+    replies
+}
+
+/// Fire the whole script as one pipelined burst and collect every reply.
+fn ask_pipelined(addr: std::net::SocketAddr, script: &[&str]) -> Vec<String> {
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let burst: String = script.iter().map(|r| format!("{r}\n")).collect();
+    conn.write_all(burst.as_bytes()).unwrap();
+    let mut replies = Vec::with_capacity(script.len());
+    let mut line = String::new();
+    for req in script {
+        line.clear();
+        assert!(
+            reader.read_line(&mut line).unwrap() > 0,
+            "pipelined connection dropped at {req:?}"
+        );
+        replies.push(line.trim().to_string());
+    }
+    replies
+}
+
+/// The soak driver: `clients` threads each run `script` as a pipelined
+/// burst against `server`, and every thread's replies must equal the
+/// serial single-client reference, reply for reply.
+fn soak(server: &Server, clients: usize, script: &[&str]) {
+    let reference = ask_serially(server.addr, script);
+    let barrier = Arc::new(Barrier::new(clients));
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(clients);
+        for _ in 0..clients {
+            let (reference, barrier) = (&reference, barrier.clone());
+            handles.push(s.spawn(move || {
+                barrier.wait(); // maximize overlap
+                let got = ask_pipelined(server.addr, script);
+                assert_eq!(got.len(), reference.len(), "dropped replies");
+                for (i, (g, r)) in got.iter().zip(reference).enumerate() {
+                    assert_eq!(g, r, "reply {i} ({:?}) diverged under load", script[i]);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().expect("soak client panicked");
+        }
+    });
+}
+
+/// The scripted session used across client counts: a resident hist
+/// dataset (write-free → shared-read admitted), a burst of queries, an
+/// exclusive DATASETS fence in the middle, and more shared reads after.
+fn hist_script() -> Vec<&'static str> {
+    let mut s = vec!["LOAD HIST 300 5", "PING"];
+    s.extend(std::iter::repeat("HIST 1").take(8));
+    s.push("DATASETS");
+    s.extend(std::iter::repeat("HIST 1").take(8));
+    s.push("QUIT");
+    s
+}
+
+#[test]
+fn soak_4_clients_bit_equal_to_serial_reference() {
+    let server = Server::spawn("127.0.0.1:0").unwrap();
+    soak(&server, 4, &hist_script());
+    server.shutdown();
+}
+
+#[test]
+fn soak_16_clients_bit_equal_to_serial_reference() {
+    let server = Server::spawn("127.0.0.1:0").unwrap();
+    soak(&server, 16, &hist_script());
+    server.shutdown();
+}
+
+#[test]
+fn soak_64_clients_bit_equal_to_serial_reference() {
+    let server = Server::spawn("127.0.0.1:0").unwrap();
+    soak(&server, 64, &hist_script());
+    server.shutdown();
+}
+
+#[test]
+fn soak_search_kernel_and_single_worker_server() {
+    // the second shared-read kernel, and the degenerate pool: one
+    // worker must still serve pipelined concurrent clients correctly
+    let script = vec![
+        "LOAD SEARCH 400 9",
+        "SEARCH 1 100 5000",
+        "SEARCH 1 0 4294967295",
+        "SEARCH 1 100 5000",
+        "SEARCH 1 7 7",
+        "SEARCH 1 100 5000",
+        "QUIT",
+    ];
+    let server = Server::spawn("127.0.0.1:0").unwrap();
+    soak(&server, 16, &script);
+    server.shutdown();
+
+    let one = Server::spawn_opts(
+        "127.0.0.1:0",
+        ServeOptions {
+            workers: 1,
+            ..ServeOptions::default()
+        },
+    )
+    .unwrap();
+    soak(&one, 8, &script);
+    one.shutdown();
+}
+
+#[test]
+fn ledger_windows_stay_consistent_after_the_storm() {
+    // after a soak, a fresh session's resident queries must still
+    // repeat bit-identically and match the pre-storm reference: no
+    // cross-session ledger or cycle leakage through the shared pool
+    let server = Server::spawn("127.0.0.1:0").unwrap();
+    let script = ["LOAD HIST 300 5", "HIST 1", "HIST 1"];
+    let before = ask_serially(server.addr, &script);
+    soak(&server, 16, &hist_script());
+    let after = ask_serially(server.addr, &script);
+    assert_eq!(before, after, "session state leaked across the soak");
+    assert_eq!(after[1], after[2], "resident query stopped repeating");
+    server.shutdown();
+}
