@@ -13,6 +13,10 @@
 //!   --rows N          dataset rows (default 1<<14; dense workloads cap
 //!                     at 512 rows — printed when the cap applies)
 //!   --queries a,b,c   query-count sweep (default 1,4,16,64)
+//!   --batch a,b,c     operands packed per query sweep (default 1,2,4;
+//!                     batch > 1 covers only the kernels with a batched
+//!                     parameter stream — search and ed — and the JSON
+//!                     gains per-operand cycles vs the unbatched floor)
 //!   --shards S        shard-device count of the resident rack (default 1)
 //!   --workers W       per-shard simulator backend threads (default 1)
 //!   --verify          assert the first and last query of each sweep
@@ -23,8 +27,8 @@
 
 use prins::host::rack::PrinsRack;
 use prins::metrics::bench::{
-    arg_u64, queries_sweep_from_args, resident_registry_points, write_resident_json,
-    ResidentRecord,
+    arg_u64, batch_sweep_from_args, queries_sweep_from_args, resident_registry_points,
+    write_resident_json, ResidentRecord,
 };
 use prins::rcam::{DeviceModel, ExecBackend, InterconnectModel};
 
@@ -36,6 +40,7 @@ fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let rows = arg_u64(&args, "--rows", 1 << 14) as usize;
     let sweep = queries_sweep_from_args(&args, &[1, 4, 16, 64]);
+    let batches = batch_sweep_from_args(&args, &[1, 2, 4]);
     let shards = arg_u64(&args, "--shards", 1) as usize;
     let workers = arg_u64(&args, "--workers", 1) as usize;
     let backend = ExecBackend::from_workers(workers);
@@ -46,7 +51,10 @@ fn main() {
     if rows > DENSE_CAP {
         println!("note: dense kernels capped at {DENSE_CAP} rows (compare-only kernels use {rows})");
     }
-    println!("rows = {rows}, query sweep = {sweep:?}, shards = {shards}, backend = {backend:?}");
+    println!(
+        "rows = {rows}, query sweep = {sweep:?}, batch sweep = {batches:?}, \
+         shards = {shards}, backend = {backend:?}"
+    );
 
     let rack = PrinsRack::with_config(
         shards,
@@ -55,10 +63,12 @@ fn main() {
         InterconnectModel::default(),
     );
     let mut records: Vec<ResidentRecord> = Vec::new();
-    for &q_count in &sweep {
-        records.extend(resident_registry_points(
-            &rack, rows, DENSE_CAP, DIMS, q_count, SEED, verify,
-        ));
+    for &batch in &batches {
+        for &q_count in &sweep {
+            records.extend(resident_registry_points(
+                &rack, rows, DENSE_CAP, DIMS, q_count, batch, SEED, verify,
+            ));
+        }
     }
 
     if verify {

@@ -7,6 +7,17 @@
 //! and accumulate — all in fp32 microcode, all rows in parallel. The
 //! cycle count is independent of the number of samples, which is the
 //! paper's headline property.
+//!
+//! **Center batching** (DESIGN.md §Batching & program cache): the row
+//! layout carries [`MAX_ED_LANES`] parallel work lanes (own
+//! c/diff/sq/acc slots each), so one sweep packs up to that many centers
+//! into spare pattern columns — the accumulator zeroing and every
+//! per-dimension center broadcast become **one** merged tagged write
+//! shared by all lanes instead of one per center. Per-center cycles at
+//! batch B drop strictly below the single-center floor (the saving is
+//! `3·(dims+1)·(B−1)` cycles per full chunk); the per-lane fp pipeline
+//! is unchanged, so distances stay bit-identical to the sequential
+//! per-center sweep at any batch size.
 
 use crate::algorithms::kernel::{
     one_shot_out, sharded, FloatMatrix, Kernel, KernelEntry, QueryOut, Resident, ResidentDyn,
@@ -24,14 +35,16 @@ use crate::storage::{Dataset, StorageManager};
 use crate::workloads::{synth_samples, synth_uniform};
 use std::ops::Range;
 
-/// Row layout: D attribute slots + center copy + work area.
-/// 33 bits per unpacked fp32; W must fit x, c, diff, acc + scratch.
-pub struct EuclideanLayout {
-    /// Attributes per sample.
-    pub dims: usize,
-    /// The D stored attribute fields (unpacked fp32).
-    pub x: Vec<FloatField>,
-    /// Broadcast slot for the current center coordinate.
+/// Most centers one ED sweep packs into the layout's parallel work
+/// lanes — the in-array batch bound (wire `k`, CLI `--batch`).
+pub const MAX_ED_LANES: usize = 4;
+
+/// One center-batching work lane: private c/diff/sq/acc slots, so the
+/// lane's fp pipeline never aliases another lane's operands. Lane 0
+/// occupies the classic single-center columns.
+#[derive(Clone, Copy, Debug)]
+pub struct EdLane {
+    /// Broadcast slot for this lane's center coordinate.
     pub c: FloatField,
     /// Difference work area (`x_j − c`).
     pub diff: FloatField,
@@ -39,20 +52,43 @@ pub struct EuclideanLayout {
     pub sq: FloatField,
     /// Running squared-distance accumulator.
     pub acc: FloatField,
-    /// Operand copy used by the fp-sub swap step.
+}
+
+/// Row layout: D attribute slots + center copy + work area.
+/// 33 bits per unpacked fp32; W must fit x, c, diff, acc + scratch.
+pub struct EuclideanLayout {
+    /// Attributes per sample.
+    pub dims: usize,
+    /// The D stored attribute fields (unpacked fp32).
+    pub x: Vec<FloatField>,
+    /// Broadcast slot for the current center coordinate (lane 0).
+    pub c: FloatField,
+    /// Difference work area (`x_j − c`, lane 0).
+    pub diff: FloatField,
+    /// Squared-difference work area (lane 0).
+    pub sq: FloatField,
+    /// Running squared-distance accumulator (lane 0).
+    pub acc: FloatField,
+    /// Operand copy used by the fp-sub swap step (shared: lane fp ops
+    /// run sequentially inside one sweep).
     pub ycopy: FloatField,
-    /// fp-add/sub scratch flags/fields.
+    /// fp-add/sub scratch flags/fields (shared across lanes).
     pub scratch: FpScratch,
-    /// Working exponent field of the fp alignment step.
+    /// Working exponent field of the fp alignment step (shared).
     pub wexp: Field,
-    /// Base column of the fp-mul scratch area.
+    /// Base column of the fp-mul scratch area (shared).
     pub mul_scratch: u16,
+    /// The [`MAX_ED_LANES`] work lanes. `lanes[0]` aliases the legacy
+    /// `c`/`diff`/`sq`/`acc` columns, so a 1-lane sweep is bit- and
+    /// cycle-identical to the pre-batching per-center program.
+    pub lanes: Vec<EdLane>,
     /// Total columns the layout occupies.
     pub width: u16,
 }
 
 impl EuclideanLayout {
-    /// Columns: D×33 attributes | c | diff | sq | acc | ycopy | scratch.
+    /// Columns: D×33 attributes | c | diff | sq | acc | ycopy | scratch
+    /// | lanes 1…MAX−1 (4×33 each).
     pub fn new(dims: usize) -> Self {
         let mut base = 0u16;
         let mut next = |w: u16| {
@@ -69,6 +105,15 @@ impl EuclideanLayout {
         let scratch = FpScratch::at(next(FP_SCRATCH_BITS));
         let wexp = Field::new(next(8), 8);
         let mul_scratch = next(crate::micro::float::FP_MUL_SCRATCH_BITS);
+        let mut lanes = vec![EdLane { c, diff, sq, acc }];
+        for _ in 1..MAX_ED_LANES {
+            lanes.push(EdLane {
+                c: FloatField::at(next(33)),
+                diff: FloatField::at(next(33)),
+                sq: FloatField::at(next(33)),
+                acc: FloatField::at(next(33)),
+            });
+        }
         EuclideanLayout {
             dims,
             x,
@@ -80,6 +125,7 @@ impl EuclideanLayout {
             scratch,
             wexp,
             mul_scratch,
+            lanes,
             width: base,
         }
     }
@@ -162,50 +208,90 @@ impl EuclideanKernel {
     }
 
     /// Analytic cycle cost of one query over `n_centers` centers — the
-    /// query floor a resident dataset pays per repetition. The emitted
-    /// microcode's shape depends only on the layout (never on center
-    /// values), so the floor is exact: the wear/ledger regression suite
-    /// asserts measured query cycles equal it.
+    /// query floor a resident dataset pays per repetition, with the
+    /// centers chunked into [`MAX_ED_LANES`]-lane sweeps exactly as
+    /// [`EuclideanKernel::query`] dispatches them. The emitted
+    /// microcode's shape depends only on the layout and the lane count
+    /// (never on center values), so the floor is exact: the wear/ledger
+    /// regression suite asserts measured query cycles equal it.
     pub fn query_floor_cycles(&self, n_centers: usize) -> u64 {
-        let zeros = vec![0.0f32; self.layout.dims];
-        self.center_program(&zeros).cycle_estimate() * n_centers as u64
+        let zeros = vec![0.0f32; n_centers * self.layout.dims];
+        self.sweep_programs(&zeros, n_centers)
+            .iter()
+            .map(|p| p.cycle_estimate())
+            .sum()
     }
 
-    /// The per-center associative program (Fig. 7 lines 2–7).
+    /// The per-center associative program (Fig. 7 lines 2–7) — a 1-lane
+    /// [`EuclideanKernel::sweep_program`].
     pub fn center_program(&self, center: &[f32]) -> Program {
+        assert_eq!(center.len(), self.layout.dims);
+        self.sweep_program(center)
+    }
+
+    /// One batched sweep over ≤ [`MAX_ED_LANES`] centers (`chunk` is
+    /// their row-major coordinates): the accumulator zeroing and every
+    /// per-dimension broadcast are **one** merged tagged write covering
+    /// all lanes' slots; the per-lane fp pipeline then runs sequentially
+    /// over disjoint lane fields (shared ycopy/scratch areas are dead
+    /// between lanes), so lane values are bit-identical to the
+    /// sequential per-center program.
+    pub fn sweep_program(&self, chunk: &[f32]) -> Program {
         let l = &self.layout;
-        assert_eq!(center.len(), l.dims);
+        assert!(
+            !chunk.is_empty() && chunk.len() % l.dims == 0,
+            "sweep chunk must hold whole centers"
+        );
+        let lanes = chunk.len() / l.dims;
+        assert!(lanes <= MAX_ED_LANES, "sweep chunk exceeds the lane count");
         let mut prog = Program::new();
-        // line 3: broadcast center coords — here one write per attribute
-        // iteration (the center value is folded into the write key).
-        // acc := 0
+        // acc := 0, all lanes in one write
         prog.push(crate::isa::Instr::SetTagsAll);
-        let mut zero = l.acc.exp.pattern(0);
-        zero.extend(l.acc.man.pattern(0));
-        zero.push((l.acc.sign, false));
+        let mut zero = Vec::new();
+        for slot in &l.lanes[..lanes] {
+            zero.extend(slot.acc.exp.pattern(0));
+            zero.extend(slot.acc.man.pattern(0));
+            zero.push((slot.acc.sign, false));
+        }
         prog.push(crate::isa::Instr::Write(zero));
         for j in 0..l.dims {
-            // broadcast c_j into the center field of every row
+            // line 3: broadcast every lane's c_j in one tagged write
+            // (the center values are folded into the write key)
             prog.push(crate::isa::Instr::SetTagsAll);
-            let bits = unpacked_bits(center[j]);
-            let mut w = l.c.exp.pattern((bits >> 1) & 0xFF);
-            w.extend(l.c.man.pattern(bits >> 9));
-            w.push((l.c.sign, bits & 1 == 1));
+            let mut w = Vec::new();
+            for (lane, slot) in l.lanes[..lanes].iter().enumerate() {
+                let bits = unpacked_bits(chunk[lane * l.dims + j]);
+                w.extend(slot.c.exp.pattern((bits >> 1) & 0xFF));
+                w.extend(slot.c.man.pattern(bits >> 9));
+                w.push((slot.c.sign, bits & 1 == 1));
+            }
             prog.push(crate::isa::Instr::Write(w));
-            // diff = x_j - c   (line 5)
-            micro::float::fp_sub(
-                &mut prog, l.x[j], l.c, l.diff, l.ycopy, l.scratch, l.wexp,
-            );
-            // sq = diff^2      (line 6, associative mult)
-            micro::float::fp_mul(&mut prog, l.diff, l.diff, l.sq, l.mul_scratch);
-            // acc += sq        (line 7)
-            micro::float::fp_add(&mut prog, l.acc, l.sq, l.diff, l.scratch, l.wexp);
-            // fp_add writes into `diff` (reused as output); move back
-            micro::copy_field_cond(&mut prog, l.diff.exp, l.acc.exp, &vec![]);
-            micro::copy_field_cond(&mut prog, l.diff.man, l.acc.man, &vec![]);
-            micro::shift::copy_col_cond(&mut prog, l.diff.sign, l.acc.sign, &vec![]);
+            for slot in &l.lanes[..lanes] {
+                // diff = x_j - c   (line 5)
+                micro::float::fp_sub(
+                    &mut prog, l.x[j], slot.c, slot.diff, l.ycopy, l.scratch, l.wexp,
+                );
+                // sq = diff^2      (line 6, associative mult)
+                micro::float::fp_mul(&mut prog, slot.diff, slot.diff, slot.sq, l.mul_scratch);
+                // acc += sq        (line 7)
+                micro::float::fp_add(&mut prog, slot.acc, slot.sq, slot.diff, l.scratch, l.wexp);
+                // fp_add writes into `diff` (reused as output); move back
+                micro::copy_field_cond(&mut prog, slot.diff.exp, slot.acc.exp, &vec![]);
+                micro::copy_field_cond(&mut prog, slot.diff.man, slot.acc.man, &vec![]);
+                micro::shift::copy_col_cond(&mut prog, slot.diff.sign, slot.acc.sign, &vec![]);
+            }
         }
         prog
+    }
+
+    /// The query's sweep programs, in dispatch order: the centers
+    /// chunked into [`MAX_ED_LANES`]-lane sweeps.
+    pub fn sweep_programs(&self, centers: &[f32], n_centers: usize) -> Vec<Program> {
+        assert_eq!(centers.len(), n_centers * self.layout.dims);
+        centers
+            .chunks(MAX_ED_LANES * self.layout.dims)
+            .map(|chunk| self.sweep_program(chunk))
+            .collect()
     }
 
     /// One-shot alias for [`EuclideanKernel::query`], kept for the
@@ -232,29 +318,49 @@ impl EuclideanKernel {
         centers: &[f32],
         n_centers: usize,
     ) -> EdResult {
-        let l = &self.layout;
+        let programs = self.sweep_programs(&centers[..n_centers * self.layout.dims], n_centers);
+        self.query_with(ctl, sm, &programs, n_centers)
+    }
+
+    /// Execute an already-synthesized sweep sequence and read each
+    /// lane's distances back. Shared by the fresh and cached query
+    /// paths, so the two are bit-identical by construction.
+    fn query_with(
+        &self,
+        ctl: &mut Controller,
+        sm: &StorageManager,
+        programs: &[Program],
+        n_centers: usize,
+    ) -> EdResult {
         ctl.begin_stats();
         let mut dists = Vec::with_capacity(n_centers);
-        for c in 0..n_centers {
-            let prog = self.center_program(&centers[c * l.dims..(c + 1) * l.dims]);
-            ctl.execute(&prog);
+        let mut remaining = n_centers;
+        for prog in programs {
+            ctl.execute(prog);
             // readout (storage path, not counted as kernel time by the
             // paper's convention: results stay in storage)
-            let mut out = Vec::with_capacity(self.n);
-            for i in 0..self.n {
-                let bits = ctl.array.fetch_row_bits(
-                    sm.translate(&self.ds, i),
-                    l.acc.sign as usize,
-                    33,
-                );
-                out.push(bits_to_f32(bits));
+            for slot in &self.layout.lanes[..remaining.min(MAX_ED_LANES)] {
+                dists.push(self.fetch_lane(ctl, sm, slot));
             }
-            dists.push(out);
+            remaining = remaining.saturating_sub(MAX_ED_LANES);
         }
         EdResult {
             dists,
             stats: ctl.stats(),
         }
+    }
+
+    /// Read one lane's per-sample squared distances out of its
+    /// accumulator slot (storage path, uncharged).
+    fn fetch_lane(&self, ctl: &Controller, sm: &StorageManager, slot: &EdLane) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.n);
+        for i in 0..self.n {
+            let bits =
+                ctl.array
+                    .fetch_row_bits(sm.translate(&self.ds, i), slot.acc.sign as usize, 33);
+            out.push(bits_to_f32(bits));
+        }
+        out
     }
 }
 
@@ -348,19 +454,46 @@ impl Kernel for EuclideanKernel {
     }
 
     fn query_floor_cycles(&self, _array: &PrinsArray, params: &EdParams) -> u64 {
-        self.query_floor_cycles(params.k) // the inherent per-center floor
+        self.query_floor_cycles(params.k) // the inherent chunked floor
+    }
+
+    fn query_floor_unbatched_cycles(&self, _array: &PrinsArray, params: &EdParams) -> u64 {
+        // k independent single-center queries: every center pays its own
+        // accumulator zeroing and per-dimension broadcast writes
+        params.k as u64 * self.query_floor_cycles(1)
     }
 
     fn query_plan(&self, _array: &PrinsArray, params: &EdParams) -> crate::analysis::QueryPlan {
         crate::analysis::QueryPlan {
-            // one per-center program per center, exactly as query dispatches
-            programs: params
-                .centers
-                .chunks(self.layout.dims)
-                .map(|c| self.center_program(c))
-                .collect(),
+            // one sweep program per ≤MAX_ED_LANES-center chunk, exactly
+            // as query dispatches
+            programs: self.sweep_programs(&params.centers, params.k),
             extra_cycles: 0, // readout is storage-path, not kernel time
         }
+    }
+
+    fn params_key(&self, params: &EdParams) -> Option<String> {
+        // the plan folds the center bits into its write keys, so the
+        // cache key must carry the exact values (topk is host-side merge
+        // only and correctly excluded)
+        let mut key = params.k.to_string();
+        for c in &params.centers {
+            key.push(':');
+            key.push_str(&format!("{:08x}", c.to_bits()));
+        }
+        Some(key)
+    }
+
+    fn query_shard_planned(
+        &self,
+        ctl: &mut Controller,
+        sm: &StorageManager,
+        _range: &Range<usize>,
+        params: &EdParams,
+        plan: &crate::analysis::QueryPlan,
+    ) -> Option<(Vec<Vec<f32>>, ExecStats)> {
+        let res = self.query_with(ctl, sm, &plan.programs, params.k);
+        Some((res.dists, res.stats))
     }
 
     fn parse_params(&self, args: &[&str]) -> Result<EdParams> {
@@ -374,11 +507,25 @@ impl Kernel for EuclideanKernel {
     }
 
     fn seeded_params(&self, q: usize, seed: u64) -> EdParams {
+        // every fourth query runs a 3-center batch, so the seeded stream
+        // (and the `prins verify` shape grid) covers multi-lane sweeps
+        let k = if q % 4 == 3 { 3 } else { 1 };
         EdParams {
-            centers: synth_uniform(self.layout.dims, seed + 1 + q as u64),
-            k: 1,
+            centers: synth_uniform(k * self.layout.dims, seed + 1 + q as u64),
+            k,
             topk: 5,
         }
+    }
+
+    fn seeded_batch(&self, q: usize, seed: u64, batch: usize) -> Option<EdParams> {
+        if batch == 0 || batch > 16 {
+            return None;
+        }
+        Some(EdParams {
+            centers: synth_uniform(batch * self.layout.dims, seed + 1 + q as u64),
+            k: batch,
+            topk: 1,
+        })
     }
 }
 
@@ -611,6 +758,44 @@ mod tests {
         let mut ctl = Controller::new(array);
         let res = kern.query(&mut ctl, &sm, &centers, k);
         assert_eq!(res.stats.cycles, kern.query_floor_cycles(k));
+    }
+
+    #[test]
+    fn batched_sweeps_match_sequential_centers_and_beat_the_unbatched_floor() {
+        // k = 6 crosses the MAX_ED_LANES chunk boundary: one 4-lane
+        // sweep plus one 2-lane sweep
+        let (n, dims, k) = (32usize, 3usize, 6usize);
+        let mut rng = Rng::seed_from(31);
+        let x: Vec<f32> = (0..n * dims).map(|_| rng.f32_range(-6.0, 6.0)).collect();
+        let centers: Vec<f32> = (0..k * dims).map(|_| rng.f32_range(-6.0, 6.0)).collect();
+        let layout = EuclideanLayout::new(dims);
+        let mut array = PrinsArray::single(n, layout.width as usize);
+        let mut sm = StorageManager::new(n);
+        let kern = EuclideanKernel::load(&mut sm, &mut array, &x, n, dims);
+        let mut ctl = Controller::new(array);
+        let batched = kern.query(&mut ctl, &sm, &centers, k);
+        assert_eq!(batched.dists.len(), k);
+        // lane values are bit-identical to the sequential per-center runs
+        for c in 0..k {
+            let single = kern.query(&mut ctl, &sm, &centers[c * dims..(c + 1) * dims], 1);
+            assert!(
+                batched.dists[c]
+                    .iter()
+                    .zip(&single.dists[0])
+                    .all(|(a, b)| a.to_bits() == b.to_bits()),
+                "center {c}: batched lane diverged from the sequential sweep"
+            );
+        }
+        // measured == chunked floor, strictly below k independent
+        // single-center queries: the merged broadcast writes save
+        // 3·(dims+1) cycles per extra lane in every chunk (3+1 here)
+        assert_eq!(batched.stats.cycles, kern.query_floor_cycles(k));
+        let unbatched = k as u64 * kern.query_floor_cycles(1);
+        assert!(kern.query_floor_cycles(k) < unbatched);
+        assert_eq!(
+            unbatched - kern.query_floor_cycles(k),
+            3 * (dims as u64 + 1) * 4
+        );
     }
 
     #[test]

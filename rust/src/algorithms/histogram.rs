@@ -89,9 +89,28 @@ impl HistogramKernel {
     /// `[lo_bit + 7 .. lo_bit]` — re-binnable edges for resident
     /// datasets: a different `lo_bit` is a brand-new 256-bin histogram of
     /// the same stored samples, still two operations per bin and zero
-    /// writes.
+    /// writes. Panics on an out-of-window `lo_bit`; fallible callers use
+    /// [`HistogramKernel::try_program_at`].
     pub fn program_at(&self, lo_bit: u16) -> Program {
-        assert!(lo_bit + 8 <= 32, "bin window [lo_bit+7..lo_bit] exceeds the 32-bit sample");
+        self.try_program_at(lo_bit).expect("invalid bin window")
+    }
+
+    /// Fallible twin of [`HistogramKernel::program_at`]: a `lo_bit`
+    /// whose bin window leaves the 32-bit sample field — which would
+    /// place bin compare columns at or past the array width, a W01
+    /// violation — returns a clean `Err` and synthesizes nothing.
+    ///
+    /// The window check runs in u32: the old u16 `lo_bit + 8 <= 32`
+    /// guard wrapped for `lo_bit ≥ 65528` (panic in debug, silently
+    /// *passing* the guard in release), so e.g. `lo_bit = 65535` would
+    /// emit a wrapped program instead of failing.
+    pub fn try_program_at(&self, lo_bit: u16) -> Result<Program> {
+        ensure!(
+            lo_bit as u32 + 8 <= 32,
+            "bin window [{}..={}] leaves the 32-bit sample field (bin columns would land at or past the array width)",
+            lo_bit,
+            lo_bit as u32 + 7
+        );
         let mut prog = Program::new();
         let byte = self.sample.slice(lo_bit, 8);
         for bin in 0..BINS as u64 {
@@ -100,7 +119,7 @@ impl HistogramKernel {
             prog.push(Instr::Compare(pat));
             prog.push(Instr::ReduceCount); // line 4: H_bin ← Reduction(tags)
         }
-        prog
+        Ok(prog)
     }
 
     /// One-shot alias for [`HistogramKernel::query`], kept for the
@@ -117,11 +136,27 @@ impl HistogramKernel {
     /// Query phase: execute the 256-bin program binning on bits
     /// `[lo_bit + 7 .. lo_bit]` of the resident samples and read the
     /// counts back. Compare-only — charges zero writes, so wear is
-    /// untouched no matter how many queries run.
+    /// untouched no matter how many queries run. Panics on an
+    /// out-of-window `lo_bit`; fallible callers use
+    /// [`HistogramKernel::try_query_at`].
     pub fn query_at(&self, ctl: &mut Controller, lo_bit: u16) -> HistResult {
+        self.try_query_at(ctl, lo_bit).expect("invalid bin window")
+    }
+
+    /// Fallible twin of [`HistogramKernel::query_at`]: an out-of-window
+    /// `lo_bit` returns a clean `Err` **before** the stats window opens —
+    /// no cycles charged, no array state touched.
+    pub fn try_query_at(&self, ctl: &mut Controller, lo_bit: u16) -> Result<HistResult> {
+        let prog = self.try_program_at(lo_bit)?;
+        Ok(self.query_program(ctl, &prog))
+    }
+
+    /// Execute one already-synthesized bin-sweep program and collect the
+    /// counts. Shared by the fresh and cached query paths, so the two
+    /// are bit-identical by construction.
+    fn query_program(&self, ctl: &mut Controller, prog: &Program) -> HistResult {
         ctl.begin_stats();
-        let prog = self.program_at(lo_bit);
-        let hist = ctl.execute_collect(&prog);
+        let hist = ctl.execute_collect(prog);
         // one pipelined tree-drain latency at the end of the bin sweep
         ctl.array.charge_reduction_latency();
         let mut stats = ctl.stats();
@@ -218,8 +253,25 @@ impl Kernel for HistogramKernel {
         }
     }
 
-    fn shared_output(&self, collected: Vec<u64>) -> Option<Vec<u64>> {
+    fn shared_output(&self, _params: &u16, collected: Vec<u64>) -> Option<Vec<u64>> {
         Some(collected) // one ReduceCount per bin, already in bin order
+    }
+
+    fn params_key(&self, params: &u16) -> Option<String> {
+        // the plan depends only on the bin window position
+        Some(params.to_string())
+    }
+
+    fn query_shard_planned(
+        &self,
+        ctl: &mut Controller,
+        _sm: &StorageManager,
+        _range: &Range<usize>,
+        _params: &u16,
+        plan: &crate::analysis::QueryPlan,
+    ) -> Option<(Vec<u64>, ExecStats)> {
+        let res = self.query_program(ctl, &plan.programs[0]);
+        Some((res.hist, res.stats))
     }
 
     fn parse_params(&self, _args: &[&str]) -> Result<u16> {
@@ -382,6 +434,51 @@ mod tests {
         for lo in [24u16, 8] {
             assert_eq!(res.query(&lo).merged, histogram_baseline_at(&xs, lo));
         }
+    }
+
+    /// Satellite regression (ISSUE 9): out-of-window `lo_bit` must be a
+    /// clean `Err`, never a wrapped/truncated program — including the
+    /// u16-wrap zone `lo_bit ≥ 65528` where the old `lo_bit + 8 <= 32`
+    /// guard silently passed in release builds. Anchored to W01: the
+    /// program the wrapped guard would have emitted references bin
+    /// columns at/past the array width, which the static analyzer flags,
+    /// while every accepted window stays W01-clean.
+    #[test]
+    fn out_of_window_rebins_err_cleanly_and_are_w01_anchored() {
+        use crate::analysis::{check_program, ArrayShape, RuleId};
+        let xs = synth_hist_samples(64, 3);
+        let mut array = PrinsArray::single(xs.len(), 40);
+        let mut sm = StorageManager::new(xs.len());
+        let kern = HistogramKernel::load(&mut sm, &mut array, &xs);
+        let mut ctl = Controller::new(array);
+        let shape = ArrayShape::of(&ctl.array);
+        // every accepted window synthesizes a W01-clean program
+        for lo in [0u16, 8, 16, 24] {
+            let prog = kern.try_program_at(lo).expect("in-window lo_bit");
+            assert!(
+                check_program(&prog, &shape).is_empty(),
+                "lo_bit={lo}: accepted window must verify clean"
+            );
+        }
+        // out-of-window lo_bits err cleanly — no panic, no program, and
+        // try_query_at charges nothing before refusing
+        let c0 = ctl.array.cycles;
+        for lo in [25u16, 32, 33, 40, 255, 65527, 65528, 65535] {
+            assert!(kern.try_program_at(lo).is_err(), "lo_bit={lo}");
+            assert!(kern.try_query_at(&mut ctl, lo).is_err(), "lo_bit={lo}");
+        }
+        assert_eq!(ctl.array.cycles, c0, "a refused re-bin must charge nothing");
+        // the W01 anchor: a compare over the columns lo_bit = 33 would
+        // have produced (bins land at cols 33..=40 on this 40-col
+        // layout) is exactly an out-of-bounds-column diagnostic
+        let mut wrapped = Program::new();
+        wrapped.push(Instr::Compare((33u16..41).map(|b| (b, false)).collect()));
+        assert!(
+            check_program(&wrapped, &shape)
+                .iter()
+                .any(|d| d.rule == RuleId::W01),
+            "the guarded-against program must be a W01 violation"
+        );
     }
 
     #[test]

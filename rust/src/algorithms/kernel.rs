@@ -34,7 +34,7 @@
 //! the rack, server or CLI.
 
 use crate::analysis::{ArrayShape, PlannedQuery, QueryPlan};
-use crate::controller::read::ReadCursor;
+use crate::controller::read::{ProgramCache, ReadCursor};
 use crate::controller::{Controller, ExecStats};
 use crate::error::{bail, ensure, Result};
 use crate::host::rack::{PrinsRack, RackStats};
@@ -183,19 +183,80 @@ pub trait Kernel: Sized + Send + Sync {
 
     /// Rebuild one shard's query output from the reduction values its
     /// plan collected, in program order — the shared-read twin of
-    /// [`Kernel::query_shard`]'s output half. `None` (the default)
-    /// means the kernel does not support the shared path.
-    fn shared_output(&self, collected: Vec<u64>) -> Option<Self::Output> {
-        let _ = collected;
+    /// [`Kernel::query_shard`]'s output half. `params` carries whatever
+    /// the output grouping needs (a batched SEARCH splits the collected
+    /// counts back per range). `None` (the default) means the kernel
+    /// does not support the shared path.
+    fn shared_output(&self, params: &Self::Params, collected: Vec<u64>) -> Option<Self::Output> {
+        let _ = (params, collected);
+        None
+    }
+
+    /// Canonical *params-class* string for the compiled-program cache
+    /// (DESIGN.md §Batching & program cache): two params with the same
+    /// key **must** synthesize identical [`Kernel::query_plan`]s on the
+    /// same [`ArrayShape`]. `None` (the default) opts the kernel out of
+    /// plan caching; a kernel returning `Some` must also implement
+    /// [`Kernel::query_shard_planned`], or cached plans would be
+    /// synthesized and counted without ever being consumed.
+    fn params_key(&self, params: &Self::Params) -> Option<String> {
+        let _ = params;
+        None
+    }
+
+    /// Execute one query from an already-synthesized plan — the
+    /// cache-hit twin of [`Kernel::query_shard`], which must produce
+    /// bit-identical output and stats when `plan` equals
+    /// [`Kernel::query_plan`] for the same `(array, params)`. `None`
+    /// (the default) means the kernel's query path does not consume
+    /// plans; the framework then falls back to [`Kernel::query_shard`].
+    fn query_shard_planned(
+        &self,
+        ctl: &mut Controller,
+        sm: &StorageManager,
+        range: &Range<usize>,
+        params: &Self::Params,
+        plan: &QueryPlan,
+    ) -> Option<(Self::Output, ExecStats)> {
+        let _ = (ctl, sm, range, params, plan);
         None
     }
 
     /// Parse wire query parameters (the args after the dataset id).
     fn parse_params(&self, args: &[&str]) -> Result<Self::Params>;
 
+    /// Parse the wire **batched** query form (the args after the dataset
+    /// id, e.g. `SEARCH id B lo1 hi1 …` → `["B", "lo1", "hi1", …]`) into
+    /// params packing B operands into one in-array sweep. The default
+    /// refuses: kernels without a packed-operand program keep their
+    /// single-operand grammar only.
+    fn parse_batch(&self, args: &[&str]) -> Result<Self::Params> {
+        let _ = args;
+        bail!("{} has no batched query form", Self::VERB)
+    }
+
     /// Deterministic parameter stream for CLI sweeps, benches and the
     /// registry-driven test gates: query index `q` under `seed`.
     fn seeded_params(&self, q: usize, seed: u64) -> Self::Params;
+
+    /// Deterministic **batched** parameter stream: `batch` operands for
+    /// query index `q` under `seed`, packed into one sweep. `None` (the
+    /// default) means the kernel has no batched form — the bench and CLI
+    /// batch sweeps skip it.
+    fn seeded_batch(&self, q: usize, seed: u64, batch: usize) -> Option<Self::Params> {
+        let _ = (q, seed, batch);
+        None
+    }
+
+    /// Analytic cycle cost of running `params`' operands **unbatched** —
+    /// one independent single-operand query per operand, Σ over operands.
+    /// For single-operand params this equals
+    /// [`Kernel::query_floor_cycles`] (the default); for batched params
+    /// it is the baseline the in-array packing must strictly beat at
+    /// B ≥ 2 (the bench floor gate).
+    fn query_floor_unbatched_cycles(&self, array: &PrinsArray, params: &Self::Params) -> u64 {
+        self.query_floor_cycles(array, params)
+    }
 }
 
 /// The host-side merge half of the pipeline: fold per-shard outputs
@@ -257,6 +318,12 @@ pub struct Resident<K: ShardMerge> {
     pub n: usize,
     shards: Vec<ShardSlot<K>>,
     load: RackStats,
+    /// Compiled-program cache over this dataset's shard arrays, shared
+    /// by the exclusive and shared-read query paths (DESIGN.md
+    /// §Batching & program cache). Born empty with the dataset, dies
+    /// with it (LOAD/DROP invalidation for free); FAULTS and remap call
+    /// [`ProgramCache::invalidate`] through [`ResidentDyn`].
+    cache: ProgramCache,
 }
 
 impl<K: ShardMerge> Resident<K> {
@@ -314,6 +381,7 @@ impl<K: ShardMerge> Resident<K> {
             n,
             shards,
             load,
+            cache: ProgramCache::new(),
         }
     }
 
@@ -339,14 +407,31 @@ impl<K: ShardMerge> Resident<K> {
     pub fn query(&mut self, params: &K::Params) -> Sharded<K> {
         let plan = &self.plan;
         let rack = &self.rack;
+        let cache = &self.cache;
         let shards = &mut self.shards;
         let runs = rack.query_shards(shards, |i, sh| {
             if sh.ctl.array.has_faults() {
+                // faulty shards skip the cache entirely: the fault layer
+                // mutates array state between attempts, so plans are not
+                // reusable and must be synthesized per attempt
                 query_shard_faulty(sh, &plan.ranges[i], params)
             } else {
-                let (out, stats) =
-                    sh.kern
-                        .query_shard(&mut sh.ctl, &sh.sm, &plan.ranges[i], params);
+                let planned = match sh.kern.params_key(params) {
+                    Some(key) => {
+                        let qp = cache.get_or_insert(ArrayShape::of(&sh.ctl.array), &key, || {
+                            sh.kern.query_plan(&sh.ctl.array, params)
+                        });
+                        sh.kern
+                            .query_shard_planned(&mut sh.ctl, &sh.sm, &plan.ranges[i], params, &qp)
+                    }
+                    None => None,
+                };
+                let (out, stats) = match planned {
+                    Some(r) => r,
+                    None => sh
+                        .kern
+                        .query_shard(&mut sh.ctl, &sh.sm, &plan.ranges[i], params),
+                };
                 (out, stats, None)
             }
         });
@@ -395,15 +480,23 @@ impl<K: ShardMerge> Resident<K> {
             return None;
         }
         let plan = &self.plan;
+        let cache = &self.cache;
         let runs = self.rack.read_shards(&self.shards, |_i, sh| {
-            let qp = sh.kern.query_plan(&sh.ctl.array, params);
+            // cached plans are handed out as Arcs, so any number of
+            // concurrent readers execute one synthesized plan at once
+            let qp = match sh.kern.params_key(params) {
+                Some(key) => cache.get_or_insert(ArrayShape::of(&sh.ctl.array), &key, || {
+                    sh.kern.query_plan(&sh.ctl.array, params)
+                }),
+                None => std::sync::Arc::new(sh.kern.query_plan(&sh.ctl.array, params)),
+            };
             let mut cur = ReadCursor::new(&sh.ctl.array);
             let mut collected = Vec::new();
             for prog in &qp.programs {
                 collected.extend(cur.execute_collect(prog).ok()?);
             }
             cur.add_cycles(qp.extra_cycles);
-            let out = sh.kern.shared_output(collected)?;
+            let out = sh.kern.shared_output(params, collected)?;
             Some((out, cur.stats()))
         });
         let mut outs = Vec::with_capacity(runs.len());
@@ -455,6 +548,31 @@ impl<K: ShardMerge> Resident<K> {
             .map(|s| s.kern.query_floor_cycles(&s.ctl.array, params))
             .max()
             .unwrap_or(0)
+    }
+
+    /// Slowest-shard analytic cost of running `params`' operands as
+    /// independent single-operand queries
+    /// ([`Kernel::query_floor_unbatched_cycles`]) — the baseline a
+    /// batched sweep must strictly beat at B ≥ 2.
+    pub fn query_floor_unbatched(&self, params: &K::Params) -> u64 {
+        self.shards
+            .iter()
+            .map(|s| s.kern.query_floor_unbatched_cycles(&s.ctl.array, params))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Cumulative `(hits, misses)` of this dataset's compiled-program
+    /// cache (both query paths count; see [`ProgramCache::stats`]).
+    pub fn cache_stats(&self) -> (u64, u64) {
+        self.cache.stats()
+    }
+
+    /// Drop every cached plan, forcing re-synthesis on the next query
+    /// (FAULTS arming, storage remap). Counters are cumulative across
+    /// invalidations.
+    pub fn invalidate_cache(&self) {
+        self.cache.invalidate()
     }
 
     /// Exact charged row writes of the whole load phase (Σ shards).
@@ -610,6 +728,14 @@ pub trait ResidentDyn: Send + Sync {
     /// One query with wire parameters (the args after the dataset id).
     /// The returned [`QueryOut::bits`] is left empty (wire hot path).
     fn query_args(&mut self, args: &[&str]) -> Result<QueryOut>;
+    /// One **batched** query with wire parameters (the args after the
+    /// dataset id in the batched grammar, e.g. `SEARCH id B lo1 hi1 …`).
+    /// Errs for kernels without a batched form ([`Kernel::parse_batch`]).
+    fn query_args_batch(&mut self, args: &[&str]) -> Result<QueryOut>;
+    /// [`ResidentDyn::query_args_batch`] through the shared-read path
+    /// (`&self`). Errs when the dataset is not
+    /// [`ResidentDyn::shared_readable`] or has no batched form.
+    fn query_args_batch_shared(&self, args: &[&str]) -> Result<QueryOut>;
     /// Whether this dataset can serve the shared-read concurrent query
     /// path ([`Resident::shared_readable`]): write-free kernel, no
     /// fault model.
@@ -625,6 +751,24 @@ pub trait ResidentDyn: Send + Sync {
     /// One query with the deterministic `(q, seed)` parameter stream,
     /// including the canonical bit encoding ([`QueryOut::bits`]).
     fn query_seeded(&mut self, q: usize, seed: u64) -> QueryOut;
+    /// One **batched** query with the deterministic `(q, seed, batch)`
+    /// parameter stream ([`Kernel::seeded_batch`]), including the
+    /// canonical bit encoding. `None` when the kernel has no batched
+    /// form — bench and CLI batch sweeps skip it.
+    fn query_seeded_batch(&mut self, q: usize, seed: u64, batch: usize) -> Option<QueryOut>;
+    /// Analytic slowest-shard cost of running the `(q, seed, batch)`
+    /// operands as independent single-operand queries
+    /// ([`Resident::query_floor_unbatched`]) — the baseline the batched
+    /// sweep's measured cycles must strictly beat at batch ≥ 2. `None`
+    /// when the kernel has no batched form.
+    fn query_floor_seeded_batch(&self, q: usize, seed: u64, batch: usize) -> Option<u64>;
+    /// Cumulative `(hits, misses)` of the dataset's compiled-program
+    /// cache ([`Resident::cache_stats`]).
+    fn cache_stats(&self) -> (u64, u64);
+    /// Drop every cached plan, forcing re-synthesis on the next query
+    /// ([`Resident::invalidate_cache`]) — called on FAULTS arming and
+    /// storage remap.
+    fn invalidate_cache(&self);
     /// Analytic slowest-shard cycle floor for the `(q, seed)` parameter
     /// stream ([`Resident::query_floor_cycles`]) — the exact value the
     /// matching [`ResidentDyn::query_seeded`]'s `max_shard_cycles` must
@@ -667,6 +811,19 @@ impl<K: ShardMerge + 'static> ResidentDyn for Resident<K> {
         Ok(self.query_out(&params, false))
     }
 
+    fn query_args_batch(&mut self, args: &[&str]) -> Result<QueryOut> {
+        let params = self.kernel().parse_batch(args)?;
+        Ok(self.query_out(&params, false))
+    }
+
+    fn query_args_batch_shared(&self, args: &[&str]) -> Result<QueryOut> {
+        let params = self.kernel().parse_batch(args)?;
+        match self.query_out_shared(&params, false) {
+            Some(out) => Ok(out),
+            None => bail!("dataset is not shared-readable"),
+        }
+    }
+
     fn shared_readable(&self) -> bool {
         Resident::shared_readable(self)
     }
@@ -692,6 +849,24 @@ impl<K: ShardMerge + 'static> ResidentDyn for Resident<K> {
     fn query_seeded(&mut self, q: usize, seed: u64) -> QueryOut {
         let params = self.kernel().seeded_params(q, seed);
         self.query_out(&params, true)
+    }
+
+    fn query_seeded_batch(&mut self, q: usize, seed: u64, batch: usize) -> Option<QueryOut> {
+        let params = self.kernel().seeded_batch(q, seed, batch)?;
+        Some(self.query_out(&params, true))
+    }
+
+    fn query_floor_seeded_batch(&self, q: usize, seed: u64, batch: usize) -> Option<u64> {
+        let params = self.kernel().seeded_batch(q, seed, batch)?;
+        Some(Resident::query_floor_unbatched(self, &params))
+    }
+
+    fn cache_stats(&self) -> (u64, u64) {
+        Resident::cache_stats(self)
+    }
+
+    fn invalidate_cache(&self) {
+        Resident::invalidate_cache(self)
     }
 
     fn query_floor_seeded(&self, q: usize, seed: u64) -> u64 {

@@ -45,7 +45,9 @@ pub use kernel::{
     find, find_name, find_verb, one_shot_out, registry, sharded, FloatMatrix, Kernel, KernelEntry,
     QueryOut, Resident, ResidentDyn, ShardMerge, ShardSlot, Sharded,
 };
-pub use search::{range_prefixes, search_baseline, SearchKernel, SearchRange};
+pub use search::{
+    range_prefixes, search_baseline, SearchBatch, SearchKernel, SearchRange, MAX_SEARCH_BATCH,
+};
 // deprecated pre-framework aliases, re-exported so PR-4-era callers get
 // the deprecation nudge instead of an unresolved-import hard break
 #[allow(deprecated)]

@@ -10,19 +10,26 @@
 //! zero kernel-specific code in the rack, server, CLI or benches.
 //!
 //! One u32 key per RCAM row (plus the dataset-membership valid bit, as
-//! in the histogram kernel). A query is a closed range `[lo, hi]`
-//! (`lo == hi` = exact match), answered associatively by the classic
-//! TCAM range expansion: the range decomposes into ≤ 62 power-of-two
+//! in the histogram kernel). A query is a **batch** of closed ranges
+//! `[lo, hi]` (`lo == hi` = exact match; batch size 1 is the classic
+//! single-range query), answered associatively by the classic TCAM
+//! range expansion: each range decomposes into ≤ 62 power-of-two
 //! aligned prefixes ([`range_prefixes`]); each prefix is one masked
 //! compare (fixed high bits only — unlisted columns are don't-care) plus
 //! one reduction count. Prefixes are disjoint, so the host sums the
-//! per-prefix counts. Cycles depend only on the range shape, never on
-//! the key count — and counts are integers, so shard merging is a plain
-//! sum (bin-add with one bin) that is bit-exact by construction.
+//! per-prefix counts per range. Batching B ranges into one sweep keeps
+//! the reduction tree pipelined across the whole sweep, so the final
+//! tree drain is charged **once per batch** instead of once per range —
+//! per-range cycles drop strictly below the single-range analytic floor
+//! at B ≥ 2 (DESIGN.md §Batching & program cache). Cycles depend only
+//! on the range shapes, never on the key count — and counts are
+//! integers, so shard merging is a plain element-wise sum that is
+//! bit-exact by construction.
 
 use crate::algorithms::kernel::{
     one_shot_out, Kernel, KernelEntry, QueryOut, Resident, ResidentDyn, ShardMerge,
 };
+use crate::analysis::QueryPlan;
 use crate::controller::{Controller, ExecStats};
 use crate::error::{ensure, Result};
 use crate::host::rack::PrinsRack;
@@ -33,8 +40,12 @@ use crate::storage::{Dataset, StorageManager};
 use crate::workloads::{synth_hist_samples, Rng};
 use std::ops::Range;
 
-/// A closed key range `[lo, hi]` (`lo == hi` = exact match) — the SEARCH
-/// kernel's per-query parameter.
+/// Most ranges one batched SEARCH sweep accepts (wire + CLI bound; keeps
+/// one reply line and one command payload within protocol line limits).
+pub const MAX_SEARCH_BATCH: usize = 16;
+
+/// A closed key range `[lo, hi]` (`lo == hi` = exact match) — one
+/// operand of a SEARCH query.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct SearchRange {
     /// Inclusive lower bound.
@@ -56,11 +67,42 @@ impl SearchRange {
     }
 }
 
+/// The SEARCH kernel's per-query parameter: B ranges counted in one
+/// in-array sweep (one pipelined tree drain for the whole batch). Batch
+/// size 1 is the classic single-range query and keeps its wire reply
+/// byte-identical to the pre-batching protocol.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SearchBatch {
+    /// The ranges, in operand order (non-empty, ≤ [`MAX_SEARCH_BATCH`]).
+    pub ranges: Vec<SearchRange>,
+}
+
+impl SearchBatch {
+    /// A single-range (unbatched) query.
+    pub fn single(r: SearchRange) -> Self {
+        SearchBatch { ranges: vec![r] }
+    }
+
+    /// A batch of ranges (asserts `1 ..= MAX_SEARCH_BATCH` operands).
+    pub fn of(ranges: Vec<SearchRange>) -> Self {
+        assert!(
+            !ranges.is_empty() && ranges.len() <= MAX_SEARCH_BATCH,
+            "SearchBatch: 1..={MAX_SEARCH_BATCH} ranges"
+        );
+        SearchBatch { ranges }
+    }
+}
+
 /// Decompose the closed range `[lo, hi]` into the minimal list of
 /// power-of-two aligned prefixes `(value, fixed_bits)`: each prefix
 /// covers `[value, value + 2^(32-fixed_bits) - 1]`, the prefixes are
 /// disjoint, ascending, and their union is exactly `[lo, hi]`. At most
 /// 62 prefixes for any u32 range — the classic TCAM range expansion.
+///
+/// All internal arithmetic is u64 so the `hi == u32::MAX` and full-range
+/// `[0, u32::MAX]` boundaries cannot overflow (`lo + 2^k - 1` and the
+/// post-prefix advance both exceed u32 there); the boundary property
+/// test below pins this against the scalar membership count.
 pub fn range_prefixes(lo: u32, hi: u32) -> Vec<(u32, u32)> {
     assert!(lo <= hi);
     let mut out = Vec::new();
@@ -140,32 +182,53 @@ impl SearchKernel {
         prog
     }
 
-    /// Query phase: count resident keys in `[r.lo, r.hi]`. Compare-only
-    /// (zero writes); cycles depend on the range shape, not on the key
-    /// count (bar the pipelined tree drain).
-    pub fn query(&self, ctl: &mut Controller, r: &SearchRange) -> (u64, ExecStats) {
+    /// The batch's sweep programs, in operand order: one per range.
+    pub fn batch_programs(&self, b: &SearchBatch) -> Vec<Program> {
+        b.ranges.iter().map(|r| self.program(r)).collect()
+    }
+
+    /// Execute an already-synthesized sweep (one program per range) and
+    /// fold each program's per-prefix counts into that range's count.
+    /// Shared by the fresh and cached query paths, so the two are
+    /// bit-identical by construction.
+    fn run_programs(&self, ctl: &mut Controller, programs: &[Program]) -> Vec<u64> {
+        programs
+            .iter()
+            .map(|p| ctl.execute_collect(p).iter().sum())
+            .collect()
+    }
+
+    /// Query phase: count resident keys in every range of the batch.
+    /// Compare-only (zero writes); cycles depend on the range shapes,
+    /// not on the key count (bar the single pipelined tree drain charged
+    /// once for the whole sweep).
+    pub fn query(&self, ctl: &mut Controller, b: &SearchBatch) -> (Vec<u64>, ExecStats) {
+        let programs = self.batch_programs(b);
+        self.query_with(ctl, &programs)
+    }
+
+    fn query_with(&self, ctl: &mut Controller, programs: &[Program]) -> (Vec<u64>, ExecStats) {
         ctl.begin_stats();
-        let prog = self.program(r);
-        let counts = ctl.execute_collect(&prog);
-        // one pipelined tree-drain latency at the end of the prefix sweep
+        let counts = self.run_programs(ctl, programs);
+        // one pipelined tree-drain latency at the end of the whole sweep
         ctl.array.charge_reduction_latency();
         let mut stats = ctl.stats();
         stats.passes = 0; // no writes in this kernel
-        (counts.iter().sum(), stats)
+        (counts, stats)
     }
 }
 
 impl Kernel for SearchKernel {
     type Data = [u32];
-    type Params = SearchRange;
-    type Output = u64;
+    type Params = SearchBatch;
+    type Output = Vec<u64>;
 
     const NAME: &'static str = "search";
     const VERB: &'static str = "SEARCH";
     const QUERY_ARITY: usize = 2;
-    // query is exactly "execute program + tree drain, passes = 0", and
-    // the output is the sum of the collected per-prefix ReduceCounts —
-    // the shared-read contract (Kernel::SHARED_READ doc).
+    // query is exactly "execute programs + one tree drain, passes = 0",
+    // and the output is the per-range sum of the collected per-prefix
+    // ReduceCounts — the shared-read contract (Kernel::SHARED_READ doc).
     const SHARED_READ: bool = true;
 
     fn data_rows(data: &[u32]) -> usize {
@@ -207,61 +270,164 @@ impl Kernel for SearchKernel {
         ctl: &mut Controller,
         _sm: &StorageManager,
         _range: &Range<usize>,
-        params: &SearchRange,
-    ) -> (u64, ExecStats) {
+        params: &SearchBatch,
+    ) -> (Vec<u64>, ExecStats) {
         self.query(ctl, params)
     }
 
-    fn query_msg_bytes(&self, _range: &Range<usize>, _params: &SearchRange) -> (u64, u64) {
-        (8, 8) // lo+hi down, one u64 count back
+    fn query_msg_bytes(&self, _range: &Range<usize>, params: &SearchBatch) -> (u64, u64) {
+        // lo+hi per range down, one u64 count per range back
+        (8 * params.ranges.len() as u64, 8 * params.ranges.len() as u64)
     }
 
-    fn query_floor_cycles(&self, array: &PrinsArray, params: &SearchRange) -> u64 {
-        self.program(params).cycle_estimate() + array.reduction_latency_cycles()
+    fn query_floor_cycles(&self, array: &PrinsArray, params: &SearchBatch) -> u64 {
+        params
+            .ranges
+            .iter()
+            .map(|r| self.program(r).cycle_estimate())
+            .sum::<u64>()
+            + array.reduction_latency_cycles()
     }
 
-    fn query_plan(&self, array: &PrinsArray, params: &SearchRange) -> crate::analysis::QueryPlan {
-        crate::analysis::QueryPlan {
-            programs: vec![self.program(params)],
-            // the final pipelined tree drain charged by query
+    fn query_floor_unbatched_cycles(&self, array: &PrinsArray, params: &SearchBatch) -> u64 {
+        // B independent single-range queries: each pays its own drain
+        params
+            .ranges
+            .iter()
+            .map(|r| self.program(r).cycle_estimate() + array.reduction_latency_cycles())
+            .sum()
+    }
+
+    fn query_plan(&self, array: &PrinsArray, params: &SearchBatch) -> QueryPlan {
+        QueryPlan {
+            programs: self.batch_programs(params),
+            // the final pipelined tree drain, charged once per sweep
             extra_cycles: array.reduction_latency_cycles(),
         }
     }
 
-    fn shared_output(&self, collected: Vec<u64>) -> Option<u64> {
-        Some(collected.iter().sum()) // one ReduceCount per prefix; the query sums them
+    fn shared_output(&self, params: &SearchBatch, collected: Vec<u64>) -> Option<Vec<u64>> {
+        // the plan collects one ReduceCount per prefix, in range order:
+        // split the flat stream back per range and sum each slice
+        let mut it = collected.into_iter();
+        let mut out = Vec::with_capacity(params.ranges.len());
+        for r in &params.ranges {
+            let k = range_prefixes(r.lo, r.hi).len();
+            out.push((&mut it).take(k).sum());
+        }
+        Some(out)
     }
 
-    fn parse_params(&self, args: &[&str]) -> Result<SearchRange> {
+    fn params_key(&self, params: &SearchBatch) -> Option<String> {
+        // the plan depends only on the range bounds (prefix expansion)
+        let parts: Vec<String> = params
+            .ranges
+            .iter()
+            .map(|r| format!("{}:{}", r.lo, r.hi))
+            .collect();
+        Some(parts.join(";"))
+    }
+
+    fn query_shard_planned(
+        &self,
+        ctl: &mut Controller,
+        _sm: &StorageManager,
+        _range: &Range<usize>,
+        _params: &SearchBatch,
+        plan: &QueryPlan,
+    ) -> Option<(Vec<u64>, ExecStats)> {
+        Some(self.query_with(ctl, &plan.programs))
+    }
+
+    fn parse_params(&self, args: &[&str]) -> Result<SearchBatch> {
         let (lo, hi): (u32, u32) = (args[0].parse()?, args[1].parse()?);
         ensure!(lo <= hi, "search range: lo > hi");
-        Ok(SearchRange { lo, hi })
+        Ok(SearchBatch::single(SearchRange { lo, hi }))
     }
 
-    fn seeded_params(&self, q: usize, seed: u64) -> SearchRange {
+    fn parse_batch(&self, args: &[&str]) -> Result<SearchBatch> {
+        // docs/PROTOCOL.md: SEARCH id B lo1 hi1 … loB hiB, B >= 2 (the
+        // B = 1 case is the classic SEARCH id lo hi form)
+        ensure!(args.len() >= 3, "usage: SEARCH id B lo1 hi1 … (B >= 2)");
+        let b: usize = args[0].parse()?;
+        ensure!(
+            (2..=MAX_SEARCH_BATCH).contains(&b),
+            "search batch size must be in 2..={MAX_SEARCH_BATCH}"
+        );
+        ensure!(
+            args.len() == 1 + 2 * b,
+            "SEARCH batch of {b} takes exactly {} bounds",
+            2 * b
+        );
+        let mut ranges = Vec::with_capacity(b);
+        for pair in args[1..].chunks(2) {
+            let (lo, hi): (u32, u32) = (pair[0].parse()?, pair[1].parse()?);
+            ensure!(lo <= hi, "search range: lo > hi");
+            ranges.push(SearchRange { lo, hi });
+        }
+        Ok(SearchBatch { ranges })
+    }
+
+    fn seeded_params(&self, q: usize, seed: u64) -> SearchBatch {
         let mut rng = Rng::seed_from(seed.wrapping_add(1 + q as u64));
         let (a, b) = (rng.next_u32(), rng.next_u32());
         if q % 4 == 3 {
-            SearchRange::exact(a) // every fourth query: the exact-match form
+            SearchBatch::single(SearchRange::exact(a)) // the exact-match form
+        } else if q % 4 == 1 {
+            // every fourth query is a 2-range batch, so the seeded stream
+            // (and with it the `prins verify` shape grid) covers batched
+            // plans without a separate driver
+            let (c, d) = (rng.next_u32(), rng.next_u32());
+            SearchBatch::of(vec![
+                SearchRange::new(a.min(b), a.max(b)),
+                SearchRange::new(c.min(d), c.max(d)),
+            ])
         } else {
-            SearchRange::new(a.min(b), a.max(b))
+            SearchBatch::single(SearchRange::new(a.min(b), a.max(b)))
         }
+    }
+
+    fn seeded_batch(&self, q: usize, seed: u64, batch: usize) -> Option<SearchBatch> {
+        if batch == 0 || batch > MAX_SEARCH_BATCH {
+            return None;
+        }
+        let mut rng = Rng::seed_from(seed.wrapping_add(1 + q as u64));
+        let ranges = (0..batch)
+            .map(|_| {
+                let (a, b) = (rng.next_u32(), rng.next_u32());
+                SearchRange::new(a.min(b), a.max(b))
+            })
+            .collect();
+        Some(SearchBatch { ranges })
     }
 }
 
 impl ShardMerge for SearchKernel {
-    type Merged = u64;
+    type Merged = Vec<u64>;
 
-    fn merge(outputs: Vec<u64>, _plan: &ShardPlan, _params: &SearchRange) -> u64 {
-        outputs.iter().sum() // disjoint row partition: counts just add
+    fn merge(outputs: Vec<Vec<u64>>, _plan: &ShardPlan, params: &SearchBatch) -> Vec<u64> {
+        // disjoint row partition: per-range counts just add
+        let mut merged = vec![0u64; params.ranges.len()];
+        for out in outputs {
+            for (m, c) in merged.iter_mut().zip(out) {
+                *m += c;
+            }
+        }
+        merged
     }
 
-    fn fields(merged: &u64) -> String {
-        format!("count={merged}")
+    fn fields(merged: &Vec<u64>) -> String {
+        if merged.len() == 1 {
+            // byte-identical to the pre-batching single-range reply
+            format!("count={}", merged[0])
+        } else {
+            let counts: Vec<String> = merged.iter().map(|c| c.to_string()).collect();
+            format!("batch={} counts={}", merged.len(), counts.join(","))
+        }
     }
 
-    fn bits(merged: &u64) -> Vec<u64> {
-        vec![*merged]
+    fn bits(merged: &Vec<u64>) -> Vec<u64> {
+        merged.clone()
     }
 }
 
@@ -294,7 +460,7 @@ fn one_shot(rack: &PrinsRack, args: &[&str]) -> Result<QueryOut> {
     Ok(one_shot_out::<SearchKernel>(
         rack,
         &xs,
-        &SearchRange { lo, hi },
+        &SearchBatch::single(SearchRange { lo, hi }),
     ))
 }
 
@@ -306,7 +472,7 @@ pub const ENTRY: KernelEntry = KernelEntry {
     query_arity: SearchKernel::QUERY_ARITY,
     one_shot_arity: 4,
     load_usage: "LOAD SEARCH n seed",
-    query_usage: "SEARCH id lo hi",
+    query_usage: "SEARCH id lo hi | SEARCH id B lo1 hi1 … (B>=2)",
     one_shot_usage: "SEARCH n seed lo hi",
     dense: false,
     write_free_queries: true,
@@ -332,6 +498,7 @@ mod tests {
             (100, 1000),
             (0x7FFF_FFFF, 0x8000_0001),
             (u32::MAX - 3, u32::MAX),
+            (u32::MAX, u32::MAX),
             (0, 1 << 20),
         ];
         for (lo, hi) in cases {
@@ -346,6 +513,59 @@ mod tests {
                 next = v as u64 + span;
             }
             assert_eq!(next, hi as u64 + 1, "[{lo},{hi}]: cover ends early/late");
+        }
+    }
+
+    /// Satellite audit (ISSUE 9): the prefix expansion at the u32
+    /// boundaries, pinned against the scalar reference count. For every
+    /// boundary range and 200 seeded ranges, summing per-prefix scalar
+    /// membership over the expansion must equal `search_baseline` — any
+    /// off-by-one or overflow in the `(lo, 32 - k)` arithmetic (e.g. a
+    /// u32 `lo + 2^k - 1` wrap at `hi == u32::MAX`) would double-count,
+    /// drop keys, or loop forever here.
+    #[test]
+    fn prefix_membership_matches_scalar_baseline_at_boundaries() {
+        let xs: Vec<u32> = {
+            let mut v = synth_hist_samples(2000, 77);
+            // plant the exact boundary keys so [u32::MAX, u32::MAX] and
+            // friends count something real
+            v.extend([0, 1, u32::MAX, u32::MAX - 1, 0x8000_0000]);
+            v
+        };
+        let member = |lo: u32, hi: u32| -> u64 {
+            range_prefixes(lo, hi)
+                .iter()
+                .map(|&(v, fixed)| {
+                    let span = 1u64 << (32 - fixed);
+                    let p_lo = v as u64;
+                    let p_hi = p_lo + span - 1;
+                    xs.iter()
+                        .filter(|&&x| p_lo <= x as u64 && x as u64 <= p_hi)
+                        .count() as u64
+                })
+                .sum()
+        };
+        let mut cases = vec![
+            (0u32, 0u32),
+            (0, u32::MAX),
+            (u32::MAX, u32::MAX),
+            (u32::MAX - 1, u32::MAX),
+            (0, 1),
+            (1, u32::MAX),
+            (0x8000_0000, u32::MAX),
+        ];
+        let mut rng = Rng::seed_from(41);
+        for _ in 0..200 {
+            let (a, b) = (rng.next_u32(), rng.next_u32());
+            cases.push((a.min(b), a.max(b)));
+            cases.push((a, a)); // lo == hi exact form
+        }
+        for (lo, hi) in cases {
+            assert_eq!(
+                member(lo, hi),
+                search_baseline(&xs, lo, hi),
+                "[{lo},{hi}]: prefix membership diverged from scalar count"
+            );
         }
     }
 
@@ -364,24 +584,59 @@ mod tests {
             SearchRange::exact(xs[17]),
             SearchRange::exact(xs[0] ^ 1), // likely absent key
         ] {
-            let (count, stats) = kern.query(&mut ctl, &r);
-            assert_eq!(count, search_baseline(&xs, r.lo, r.hi), "{r:?}");
+            let b = SearchBatch::single(r);
+            let (counts, stats) = kern.query(&mut ctl, &b);
+            assert_eq!(counts, vec![search_baseline(&xs, r.lo, r.hi)], "{r:?}");
             assert_eq!(stats.ledger.n_write, 0, "queries never write");
             assert_eq!(
                 stats.cycles,
-                kern.query_floor_cycles(&ctl.array, &r),
+                kern.query_floor_cycles(&ctl.array, &b),
                 "{r:?} off the analytic floor"
             );
         }
         // full range counts exactly the loaded keys (valid bit gates
         // unloaded all-zero rows out)
-        let (all, _) = kern.query(&mut ctl, &SearchRange::new(0, u32::MAX));
-        assert_eq!(all, xs.len() as u64);
+        let (all, _) = kern.query(&mut ctl, &SearchBatch::single(SearchRange::new(0, u32::MAX)));
+        assert_eq!(all, vec![xs.len() as u64]);
+    }
+
+    #[test]
+    fn batched_sweep_matches_singles_and_beats_the_unbatched_floor() {
+        let xs = synth_hist_samples(2500, 13);
+        let mut array = PrinsArray::single(xs.len(), 40);
+        let mut sm = StorageManager::new(xs.len());
+        let kern = SearchKernel::load(&mut sm, &mut array, &xs);
+        let mut ctl = Controller::new(array);
+        let ranges = vec![
+            SearchRange::new(0, 1 << 20),
+            SearchRange::exact(xs[42]),
+            SearchRange::new(1 << 30, u32::MAX),
+        ];
+        let batch = SearchBatch::of(ranges.clone());
+        let (counts, stats) = kern.query(&mut ctl, &batch);
+        // per-range counts are bit-identical to three single queries
+        for (i, r) in ranges.iter().enumerate() {
+            let (single, _) = kern.query(&mut ctl, &SearchBatch::single(*r));
+            assert_eq!(counts[i], single[0], "{r:?}");
+            assert_eq!(counts[i], search_baseline(&xs, r.lo, r.hi), "{r:?}");
+        }
+        // measured == batched floor, strictly below the unbatched Σ:
+        // the sweep drains the reduction tree once instead of B times
+        let floor = kern.query_floor_cycles(&ctl.array, &batch);
+        let unbatched = kern.query_floor_unbatched_cycles(&ctl.array, &batch);
+        assert_eq!(stats.cycles, floor);
+        assert_eq!(
+            unbatched - floor,
+            2 * ctl.array.reduction_latency_cycles(),
+            "batch of 3 saves exactly 2 tree drains"
+        );
+        assert!(stats.cycles < unbatched);
+        assert_eq!(stats.ledger.n_write, 0, "batched queries never write");
     }
 
     #[test]
     fn cycles_independent_of_key_count() {
-        let r = SearchRange::new(1000, 90_000);
+        let r = SearchBatch::single(SearchRange::new(1000, 90_000));
         let run_n = |n: usize| {
             let xs = synth_hist_samples(n, 9);
             let mut array = PrinsArray::single(n, 40);
@@ -401,8 +656,8 @@ mod tests {
         let expect = search_baseline(&xs, r.lo, r.hi);
         for shards in [1usize, 2, 3, 8] {
             let rack = PrinsRack::new(shards);
-            let res = sharded::<SearchKernel>(&rack, &xs, &r);
-            assert_eq!(res.merged, expect, "shards={shards}");
+            let res = sharded::<SearchKernel>(&rack, &xs, &SearchBatch::single(r));
+            assert_eq!(res.merged, vec![expect], "shards={shards}");
             assert_eq!(res.rack.shards, shards);
             assert_eq!(res.rack.link_messages, 2 * shards as u64);
         }
@@ -414,15 +669,37 @@ mod tests {
         let rack = PrinsRack::new(2);
         let mut res = Resident::<SearchKernel>::load(&rack, &xs);
         assert!(res.load_report().total_cycles > 0);
-        let r1 = SearchRange::new(0, 1 << 31);
+        let r1 = SearchBatch::single(SearchRange::new(0, 1 << 31));
         let a = res.query(&r1);
-        let b = res.query(&SearchRange::new(55, 99)); // new range, same keys
+        let b = res.query(&SearchBatch::single(SearchRange::new(55, 99)));
         let c = res.query(&r1);
         assert_eq!(a.merged, c.merged);
         assert_eq!(a.rack.total_cycles, c.rack.total_cycles);
-        assert_eq!(b.merged, search_baseline(&xs, 55, 99));
+        assert_eq!(b.merged, vec![search_baseline(&xs, 55, 99)]);
         for st in &a.rack.shard_stats {
             assert_eq!(st.ledger.n_write, 0, "search queries never write");
         }
+        // the repeat of r1 was served from the compiled-program cache
+        let (hits, misses) = res.cache_stats();
+        assert!(hits > 0, "repeat query never hit the program cache");
+        assert!(misses > 0);
+    }
+
+    #[test]
+    fn shared_path_handles_batches_bit_identically() {
+        let xs = synth_hist_samples(1500, 61);
+        let rack = PrinsRack::new(2);
+        let mut res = Resident::<SearchKernel>::load(&rack, &xs);
+        let batch = SearchBatch::of(vec![
+            SearchRange::new(0, 1 << 16),
+            SearchRange::new(1 << 16, 1 << 24),
+            SearchRange::exact(xs[7]),
+            SearchRange::new(0, u32::MAX),
+        ]);
+        let shared = res.query_shared(&batch).expect("search is shared-readable");
+        let excl = res.query(&batch);
+        assert_eq!(shared.merged, excl.merged);
+        assert_eq!(shared.rack.total_cycles, excl.rack.total_cycles);
+        assert_eq!(shared.merged[3], xs.len() as u64, "full range counts all keys");
     }
 }

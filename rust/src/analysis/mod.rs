@@ -164,7 +164,7 @@ impl fmt::Display for Diagnostic {
 /// The geometry facts the analyzer needs about the target array —
 /// everything the rules consume, decoupled from [`PrinsArray`] so
 /// fixture tests can fabricate shapes.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct ArrayShape {
     /// Total rows across the daisy chain.
     pub rows: usize,

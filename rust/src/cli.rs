@@ -1,7 +1,7 @@
 //! `prins` command line: drive the PRINS system from a shell.
 //!
 //!   prins run <kernel|bfs> [--n N] [--dims D] [--seed S]
-//!             [--workers W] [--shards S] [--queries Q]
+//!             [--workers W] [--shards S] [--queries Q] [--batch B]
 //!             [--ber B] [--fault-seed S] [--stuck N]
 //!   prins validate            # PRINS vs golden XLA kernels (needs artifacts/)
 //!   prins serve [--bind ADDR] [--workers W] [--pool N] [--no-shared]
@@ -31,6 +31,13 @@
 //! hyperplane, new bin edges, new x vector, new search range) run
 //! against the resident rows, printing the amortization table — load
 //! cost paid once, query floor per repetition.
+//!
+//! `--batch B` (B ≥ 2) packs B operands into every query's in-array
+//! sweep (DESIGN.md §Batching & program cache): each seeded query
+//! carries B search ranges / B centers, and the table gains a
+//! per-operand line plus the analytic unbatched floor the packing
+//! beats. Only kernels with a batched parameter stream (search, ed)
+//! accept the flag; the rest refuse with a clean error.
 //!
 //! `--ber B` / `--fault-seed S` / `--stuck N` turn on the seeded fault
 //! layer (DESIGN.md §Reliability): every read draws a bit flip with
@@ -105,7 +112,7 @@ pub fn main() -> Result<()> {
             eprintln!("usage: prins <run|validate|serve|report|verify|info> ...");
             eprintln!(
                 "  run <{}|bfs> [--n N] [--dims D] [--seed S] \
-                 [--workers W] [--shards S] [--queries Q] \
+                 [--workers W] [--shards S] [--queries Q] [--batch B] \
                  [--ber B] [--fault-seed S] [--stuck N]",
                 names.join("|")
             );
@@ -122,6 +129,10 @@ pub fn main() -> Result<()> {
             eprintln!(
                 "  (--queries: load once, run Q queries against the resident \
                  dataset; default 1)"
+            );
+            eprintln!(
+                "  (--batch: pack B operands into each query's sweep; \
+                 search/ed only, default 1)"
             );
             eprintln!(
                 "  (--ber/--fault-seed/--stuck: seeded fault injection with \
@@ -146,6 +157,10 @@ fn run(args: &[String]) -> Result<()> {
     let queries = flag(args, "--queries", 1) as usize;
     if queries == 0 {
         bail!("--queries must be at least 1");
+    }
+    let batch = flag(args, "--batch", 1) as usize;
+    if batch == 0 {
+        bail!("--batch must be at least 1");
     }
     let backend = backend_flag(args);
     let fault = fault_flags(args, seed);
@@ -179,6 +194,9 @@ fn run(args: &[String]) -> Result<()> {
                  mutates the resident rows, so query #2 would start from query #1's \
                  visited/dist state instead of a fresh graph; run bfs with --queries 1"
             );
+        }
+        if batch > 1 {
+            bail!("bfs has no batched query form; run bfs without --batch");
         }
         let g = synth_power_law(n, (dims as f64).max(2.0), 2.5, seed);
         let mut array = PrinsArray::single(g.edges(), 128).with_backend(backend);
@@ -214,8 +232,8 @@ fn run(args: &[String]) -> Result<()> {
         rack = rack.with_fault(model)?;
     }
     let mut res = (entry.synth_load)(&rack, n, dims, seed);
-    if queries > 1 {
-        return run_resident(entry, res.as_mut(), queries, seed, &dev);
+    if queries > 1 || batch > 1 {
+        return run_resident(entry, res.as_mut(), queries, seed, batch, &dev);
     }
     let out = res.query_seeded(0, seed);
     if shards > 1 {
@@ -244,15 +262,17 @@ fn print_fidelity(fid: &Option<crate::reliability::FidelityReport>) {
     );
 }
 
-/// `run --queries Q` (Q ≥ 2): the load-once / query-many resident path,
-/// generic over the registry. The dataset is already loaded; run Q
-/// queries with fresh parameters per query (the kernel's seeded
-/// parameter stream) and print the amortization table.
+/// `run --queries Q` / `--batch B`: the load-once / query-many resident
+/// path, generic over the registry. The dataset is already loaded; run
+/// Q queries with fresh parameters per query (the kernel's seeded
+/// parameter stream, B operands per query when batched) and print the
+/// amortization table.
 fn run_resident(
     entry: &KernelEntry,
     res: &mut dyn ResidentDyn,
     queries: usize,
     seed: u64,
+    batch: usize,
     dev: &DeviceModel,
 ) -> Result<()> {
     let load: RackStats = res.load_report().clone();
@@ -261,7 +281,19 @@ fn run_resident(
     let mut last_fields = String::new();
     let mut last_fid = None;
     for q in 0..queries {
-        let r = res.query_seeded(q, seed);
+        let r = if batch > 1 {
+            match res.query_seeded_batch(q, seed, batch) {
+                Some(r) => r,
+                None => bail!(
+                    "{} has no batched parameter stream; drop --batch (batching \
+                     is available for kernels with a packed-operand program, \
+                     e.g. search and ed)",
+                    entry.name
+                ),
+            }
+        } else {
+            res.query_seeded(q, seed)
+        };
         qcycles.push(r.rack.total_cycles);
         energy_j += r.rack.energy_j;
         last_fields = r.fields;
@@ -281,6 +313,22 @@ fn run_resident(
         load.total_cycles, load.link_bytes
     );
     println!("query phase  : {per_query:.1} cycles/query");
+    if batch > 1 {
+        // per-operand price of the packed sweep vs the analytic floor
+        // of running the same operands one query each
+        println!(
+            "batching     : {batch} operands/query, {:.1} cycles/operand",
+            per_query / batch as f64
+        );
+        if let Some(unbatched) = res.query_floor_seeded_batch(0, seed, batch) {
+            println!(
+                "unbatched    : {} device cycles/query if each operand ran alone",
+                unbatched
+            );
+        }
+    }
+    let (hits, misses) = res.cache_stats();
+    println!("plan cache   : {hits} hit(s), {misses} miss(es)");
     println!(
         "amortized    : {amortized:.1} cycles/query ({} at Q=1, {})",
         load.total_cycles + qcycles[0],

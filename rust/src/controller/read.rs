@@ -16,11 +16,92 @@
 //! [`Controller`]: crate::controller::Controller
 
 use super::ExecStats;
+use crate::analysis::{ArrayShape, QueryPlan};
 use crate::error::{bail, Result};
 use crate::isa::{Instr, Program};
 use crate::rcam::device::{CYCLES_COMPARE, CYCLES_REDUCE_ISSUE};
 use crate::rcam::module::compare_tags_into;
 use crate::rcam::{BitVec, EnergyLedger, Pattern, PrinsArray};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Compiled-program cache (DESIGN.md §Batching & program cache): memoizes
+/// [`QueryPlan`] synthesis keyed by the shard array's [`ArrayShape`] plus
+/// a kernel-chosen canonical *params-class* string, so repeat resident
+/// queries skip microprogram synthesis entirely and re-execute the cached
+/// plan. One cache lives inside each `Resident<K>` (the kernel identity
+/// is therefore implicit in the owner), shared by the exclusive
+/// `query_shards` path and the concurrent shared-read `read_shards` path
+/// alike — the map is behind a [`Mutex`] and plans are handed out as
+/// [`Arc`]s, so any number of concurrent readers can execute one cached
+/// plan at once.
+///
+/// Invalidation is the owner's job (the rules live with the server):
+/// LOAD/DROP recreate or destroy the owning `Resident` and its cache with
+/// it; arming the fault layer (`FAULTS`) and storage remap both call
+/// [`ProgramCache::invalidate`], forcing re-synthesis against the new
+/// array state. Hit/miss counters are cumulative across invalidations so
+/// a forced re-synthesis is observable as a miss delta.
+#[derive(Debug, Default)]
+pub struct ProgramCache {
+    plans: Mutex<HashMap<(ArrayShape, String), Arc<QueryPlan>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl ProgramCache {
+    /// An empty cache with zeroed counters.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The cached plan for `(shape, key)`, synthesizing (and counting a
+    /// miss) via `synth` on first use. The map lock is held across
+    /// synthesis so concurrent shards racing for the same key synthesize
+    /// once — the losers block briefly and then count hits.
+    pub fn get_or_insert(
+        &self,
+        shape: ArrayShape,
+        key: &str,
+        synth: impl FnOnce() -> QueryPlan,
+    ) -> Arc<QueryPlan> {
+        let mut plans = self.plans.lock().expect("program cache poisoned");
+        if let Some(plan) = plans.get(&(shape, key.to_string())) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Arc::clone(plan);
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let plan = Arc::new(synth());
+        plans.insert((shape, key.to_string()), Arc::clone(&plan));
+        plan
+    }
+
+    /// Drop every cached plan (counters survive, so forced re-synthesis
+    /// shows up as a miss delta). Called on FAULTS arming and storage
+    /// remap; LOAD/DROP destroy the whole cache with its owner.
+    pub fn invalidate(&self) {
+        self.plans.lock().expect("program cache poisoned").clear();
+    }
+
+    /// Cumulative `(hits, misses)` since the cache was created.
+    pub fn stats(&self) -> (u64, u64) {
+        (
+            self.hits.load(Ordering::Relaxed),
+            self.misses.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Number of distinct `(shape, params-class)` plans currently held.
+    pub fn len(&self) -> usize {
+        self.plans.lock().expect("program cache poisoned").len()
+    }
+
+    /// True when no plan is cached.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
 
 /// One concurrent reader's execution context over a borrowed array. See
 /// the module doc for the bit-equality contract with [`Controller`].
@@ -193,6 +274,73 @@ mod tests {
         p.write_field(Field::new(8, 4), 0xA);
         let mut cur = ReadCursor::new(&array);
         assert!(cur.execute_collect(&p).is_err());
+    }
+
+    #[test]
+    fn program_cache_hits_misses_and_invalidates() {
+        let cache = ProgramCache::new();
+        let shape = ArrayShape {
+            rows: 64,
+            rows_per_module: 64,
+            width: 16,
+        };
+        let synth_count = std::sync::atomic::AtomicU64::new(0);
+        let synth = || {
+            synth_count.fetch_add(1, Ordering::Relaxed);
+            QueryPlan {
+                programs: vec![probe_program()],
+                extra_cycles: 3,
+            }
+        };
+        let a = cache.get_or_insert(shape, "k1", synth);
+        let b = cache.get_or_insert(shape, "k1", synth);
+        assert!(Arc::ptr_eq(&a, &b), "repeat key must return the cached Arc");
+        assert_eq!(synth_count.load(Ordering::Relaxed), 1, "synthesized once");
+        assert_eq!(cache.stats(), (1, 1));
+        // a different params-class or shape is a distinct entry
+        cache.get_or_insert(shape, "k2", synth);
+        let other = ArrayShape {
+            rows: 128,
+            ..shape
+        };
+        cache.get_or_insert(other, "k1", synth);
+        assert_eq!(cache.stats(), (1, 3));
+        assert_eq!(cache.len(), 3);
+        // invalidation clears plans but keeps cumulative counters, so the
+        // forced re-synthesis is observable as a miss delta
+        cache.invalidate();
+        assert!(cache.is_empty());
+        cache.get_or_insert(shape, "k1", synth);
+        assert_eq!(cache.stats(), (1, 4));
+        assert_eq!(synth_count.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn program_cache_synthesizes_once_under_contention() {
+        let cache = ProgramCache::new();
+        let shape = ArrayShape {
+            rows: 32,
+            rows_per_module: 32,
+            width: 8,
+        };
+        let synth_count = std::sync::atomic::AtomicU64::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    cache.get_or_insert(shape, "shared", || {
+                        synth_count.fetch_add(1, Ordering::Relaxed);
+                        QueryPlan::default()
+                    });
+                });
+            }
+        });
+        assert_eq!(
+            synth_count.load(Ordering::Relaxed),
+            1,
+            "the lock is held across synthesis: racing readers must not re-synthesize"
+        );
+        let (hits, misses) = cache.stats();
+        assert_eq!((hits, misses), (7, 1));
     }
 
     #[test]

@@ -7,8 +7,8 @@
 //! replies, and worked netcat sessions — is specified in
 //! `docs/PROTOCOL.md`; keep that file authoritative. Summary:
 //!
-//!   PING | RACK \[n\] | LOAD | DATASETS | DROP | HIST | DP | ED | SPMV
-//!   | SEARCH | QUIT
+//!   PING | RACK \[n\] | LOAD | DATASETS | DROP | STATS | HIST | DP | ED
+//!   | SPMV | SEARCH | QUIT
 //!
 //! Every kernel verb is dispatched through the **kernel registry**
 //! ([`crate::algorithms::kernel::registry`]): this module contains zero
@@ -29,6 +29,13 @@
 //! lists the session's registry, `DROP <id>` frees one entry. Sessions
 //! are isolated: ids, shard counts, and resident data are
 //! per-connection and die with it.
+//!
+//! Kernels with a **batched query form** (docs/PROTOCOL.md §Batched
+//! queries) accept a longer dataset-id line — `SEARCH id B lo1 hi1 …`
+//! (B ≥ 2) — packing B operands into one in-array sweep; dispatch is
+//! still purely by arity. `STATS <id>` reports a resident dataset's
+//! compiled-program cache counters (`cache_hits=`/`cache_misses=`),
+//! kept out of query replies so repeated queries stay byte-identical.
 //!
 //! **Serving model** (DESIGN.md §Serving): one readiness-polled
 //! multiplexer thread owns every connection — non-blocking accepts,
@@ -599,10 +606,10 @@ impl Session {
 
 /// Admission class of one request line (DESIGN.md §Serving): `true` =
 /// shared reader — `PING`, or a registered kernel's dataset-id query
-/// form against a resident dataset whose kernel opted into
-/// `Kernel::SHARED_READ` and whose rack is fault-free. Everything else
-/// — loads, drops, one-shots, session config, malformed lines — is
-/// exclusive.
+/// form (single or batched) against a resident dataset whose kernel
+/// opted into `Kernel::SHARED_READ` and whose rack is fault-free.
+/// Everything else — loads, drops, one-shots, session config, malformed
+/// lines — is exclusive.
 fn classify(line: &str, sess: &Session, shared_read: bool) -> bool {
     if !shared_read {
         return false;
@@ -614,7 +621,13 @@ fn classify(line: &str, sess: &Session, shared_read: bool) -> bool {
             let Some(entry) = find_verb(verb) else {
                 return false;
             };
-            if args.len() != entry.query_arity + 1 {
+            // dataset-id query form, or the longer batched form — never
+            // the one-shot form, which builds a fresh rack and must run
+            // exclusively
+            let query = args.len() == entry.query_arity + 1;
+            let batched =
+                args.len() > entry.query_arity + 1 && args.len() != entry.one_shot_arity;
+            if !query && !batched {
                 return false;
             }
             let Ok(id) = args[0].parse::<u64>() else {
@@ -642,10 +655,10 @@ fn dispatch_shared(line: &str, sess: &Session) -> Result<String> {
             let Some(entry) = find_verb(verb) else {
                 bail!("unknown command");
             };
-            ensure!(
-                args.len() == entry.query_arity + 1,
-                "not a shared-readable query"
-            );
+            let query = args.len() == entry.query_arity + 1;
+            let batched =
+                args.len() > entry.query_arity + 1 && args.len() != entry.one_shot_arity;
+            ensure!(query || batched, "not a shared-readable query");
             let id: u64 = args[0].parse()?;
             let Some(e) = sess.datasets.get(&id) else {
                 bail!("unknown dataset {id}");
@@ -656,7 +669,13 @@ fn dispatch_shared(line: &str, sess: &Session) -> Result<String> {
                 e.res.name(),
                 entry.name
             );
-            let out = e.res.query_args_shared(&args[1..])?;
+            let out = if query {
+                e.res.query_args_shared(&args[1..])?
+            } else {
+                e.res.query_args_batch_shared(&args[1..])?
+            };
+            // every shared read refreshes recency — batched or not — so
+            // read-hot datasets stay off the eviction victim list
             e.last_used.store(sess.tick(), Ordering::Relaxed);
             Ok(query_ok(&out, id))
         }
@@ -863,8 +882,12 @@ fn load_dataset(
 /// A registered kernel verb, dispatched by arity (docs/PROTOCOL.md):
 /// `<VERB> id params…` (the dataset-id query form) when the arg count
 /// matches the kernel's query arity + 1, `<VERB> …` (the one-shot form)
-/// when it matches the one-shot arity. No per-kernel code: parsing,
-/// synthesis and reply fields all come from the registry entry.
+/// when it matches the one-shot arity, and the **batched** dataset-id
+/// form (`<VERB> id B op1 … opB`, longer than the single-query form)
+/// for any other arg count that leads with a dataset id — kernels
+/// without a batched grammar refuse it with a clean error. No
+/// per-kernel code: parsing, synthesis and reply fields all come from
+/// the registry entry.
 fn kernel_verb(
     verb: &str,
     args: &[&str],
@@ -896,6 +919,22 @@ fn kernel_verb(
         Ok(Some(
             fid_reply(stats_reply(&out.rack, &out.fields), &out.fidelity).finish(),
         ))
+    } else if args.len() > entry.query_arity + 1 && args[0].parse::<u64>().is_ok() {
+        // batched dataset-id query: B operands packed into one sweep
+        let id: u64 = args[0].parse()?;
+        let Some(e) = sess.datasets.get_mut(&id) else {
+            bail!("unknown dataset {id}");
+        };
+        ensure!(
+            e.res.name() == entry.name,
+            "dataset {id} is kind {}, not {}",
+            e.res.name(),
+            entry.name
+        );
+        let out = e.res.query_args_batch(&args[1..])?;
+        e.last_used
+            .store(sess.clock.fetch_add(1, Ordering::Relaxed) + 1, Ordering::Relaxed);
+        Ok(Some(query_ok(&out, id)))
     } else {
         bail!("usage: {} | {}", entry.one_shot_usage, entry.query_usage);
     }
@@ -939,6 +978,23 @@ fn dispatch(line: &str, backend: ExecBackend, sess: &mut Session) -> Result<Opti
             ensure!(sess.datasets.remove(&id).is_some(), "unknown dataset {id}");
             Ok(Some(Reply::ok().kv("dropped", id).finish()))
         }
+        // compiled-program cache counters of one resident dataset; a
+        // separate verb (not query-reply fields) so repeated queries
+        // stay byte-identical for the throughput-bench equality gates
+        ["STATS", id] => {
+            let id: u64 = id.parse()?;
+            let Some(e) = sess.datasets.get(&id) else {
+                bail!("unknown dataset {id}");
+            };
+            let (hits, misses) = e.res.cache_stats();
+            Ok(Some(
+                Reply::ok()
+                    .kv("dataset", id)
+                    .kv("cache_hits", hits)
+                    .kv("cache_misses", misses)
+                    .finish(),
+            ))
+        }
         // ----- fault injection (docs/PROTOCOL.md §Fault injection) ------
         ["FAULTS"] => Ok(Some(match &sess.fault {
             None => Reply::ok().kv("faults", "off").finish(),
@@ -951,6 +1007,12 @@ fn dispatch(line: &str, backend: ExecBackend, sess: &mut Session) -> Result<Opti
         })),
         ["FAULTS", "OFF"] => {
             sess.fault = None;
+            // the fault regime frames every cached plan's validity:
+            // flush resident program caches so the next query
+            // re-synthesizes (counters stay cumulative)
+            for e in sess.datasets.values() {
+                e.res.invalidate_cache();
+            }
             Ok(Some(Reply::ok().kv("faults", "off").finish()))
         }
         ["FAULTS", rest @ ..] => {
@@ -967,8 +1029,13 @@ fn dispatch(line: &str, backend: ExecBackend, sess: &mut Session) -> Result<Opti
                 ber
             );
             // takes effect on racks built for future LOADs/one-shots;
-            // already-resident datasets keep their load-time model
+            // already-resident datasets keep their load-time model but
+            // drop their cached plans (invalidation rule: arming faults
+            // is a regime change, re-synthesize on next query)
             sess.fault = Some(FaultModel::uniform(ber, seed).with_random_stuck(stuck));
+            for e in sess.datasets.values() {
+                e.res.invalidate_cache();
+            }
             Ok(Some(
                 Reply::ok()
                     .kv("faults", "on")
@@ -1351,5 +1418,132 @@ mod tests {
         // a malformed LOAD into the full table must not evict anything
         assert!(load_dataset(&["HIST", "x", "3"], ExecBackend::Serial, &mut sess).is_err());
         assert_eq!(sess.datasets.len(), MAX_DATASETS);
+    }
+
+    #[test]
+    fn batched_search_wire_form_matches_singles_and_shared_dispatch() {
+        let mut sess = Session::default();
+        let loaded = load_dataset(&["SEARCH", "400", "9"], ExecBackend::Serial, &mut sess)
+            .unwrap()
+            .unwrap();
+        assert!(loaded.starts_with("OK id=1 kind=search"), "{loaded}");
+        let field = |r: &str, key: &str| {
+            r.split_whitespace()
+                .find_map(|kv| kv.strip_prefix(key).map(str::to_string))
+                .unwrap_or_default()
+        };
+        let ask = |sess: &mut Session, req: &str| {
+            dispatch(req, ExecBackend::Serial, sess).unwrap().unwrap()
+        };
+
+        let a = ask(&mut sess, "SEARCH 1 100 5000");
+        let b = ask(&mut sess, "SEARCH 1 6000 40000");
+        let batched = ask(&mut sess, "SEARCH 1 2 100 5000 6000 40000");
+        assert_eq!(field(&batched, "batch="), "2", "{batched}");
+        assert_eq!(
+            field(&batched, "counts="),
+            format!("{},{}", field(&a, "count="), field(&b, "count=")),
+            "batched counts must match the two single-range queries"
+        );
+        // packing both ranges into one sweep shares the reduction-tree
+        // drain: strictly cheaper than the two singles summed
+        let cyc = |r: &str| field(r, "cycles=").parse::<u64>().unwrap();
+        assert!(cyc(&batched) < cyc(&a) + cyc(&b), "{batched} vs {a} + {b}");
+
+        // the shared-read path admits the batched form, stamps recency,
+        // and replies byte-identically to exclusive dispatch
+        assert!(classify("SEARCH 1 2 100 5000 6000 40000", &sess, true));
+        assert!(!classify("SEARCH 400 9", &sess, true), "one-shots stay exclusive");
+        let before = sess.datasets[&1].last_used.load(Ordering::Relaxed);
+        let shared = dispatch_shared("SEARCH 1 2 100 5000 6000 40000", &sess).unwrap();
+        assert_eq!(shared, batched);
+        let after = sess.datasets[&1].last_used.load(Ordering::Relaxed);
+        assert!(after > before, "batched shared reads must refresh last_used");
+
+        // malformed batched lines are clean errors, not panics: odd
+        // operand count, B < 2, and kernels without a batched grammar
+        assert!(dispatch("SEARCH 1 2 100 5000 6000", ExecBackend::Serial, &mut sess).is_err());
+        assert!(dispatch("SEARCH 1 1 100 5000", ExecBackend::Serial, &mut sess).is_err());
+        let hist = load_dataset(&["HIST", "50", "3"], ExecBackend::Serial, &mut sess)
+            .unwrap()
+            .unwrap();
+        assert!(hist.starts_with("OK id=2"), "{hist}");
+        let err = dispatch("HIST 2 5 7", ExecBackend::Serial, &mut sess).unwrap_err();
+        assert!(err.to_string().contains("no batched query form"), "{err}");
+    }
+
+    #[test]
+    fn shared_reads_refresh_recency_for_the_evictor() {
+        let mut sess = Session::default();
+        for _ in 0..MAX_DATASETS {
+            load_dataset(&["HIST", "50", "3"], ExecBackend::Serial, &mut sess).unwrap();
+        }
+        // exclusive-query every dataset except id 7…
+        for id in 1..=MAX_DATASETS as u64 {
+            if id != 7 {
+                let q = dispatch(&format!("HIST {id}"), ExecBackend::Serial, &mut sess)
+                    .unwrap()
+                    .unwrap();
+                assert!(q.starts_with("OK"), "{q}");
+            }
+        }
+        // …id 7 stays hot through shared reads ONLY: its recency stamp
+        // must come from dispatch_shared
+        let r = dispatch_shared("HIST 7", &sess).unwrap();
+        assert!(r.starts_with("OK"), "{r}");
+        let r = load_dataset(&["HIST", "50", "3"], ExecBackend::Serial, &mut sess)
+            .unwrap()
+            .unwrap();
+        // were shared reads not stamping last_used, id 7 would still
+        // carry its load-time stamp — the oldest — and be evicted; the
+        // true LRU is id 1 (first exclusive query of the touch loop)
+        assert!(r.ends_with("evicted=1"), "{r}");
+        assert!(sess.datasets.contains_key(&7), "shared-read-hot dataset evicted");
+    }
+
+    #[test]
+    fn stats_verb_tracks_cache_and_invalidation_forces_resynthesis() {
+        let mut sess = Session::default();
+        load_dataset(&["SEARCH", "300", "5"], ExecBackend::Serial, &mut sess).unwrap();
+        let ask = |sess: &mut Session, req: &str| {
+            dispatch(req, ExecBackend::Serial, sess).unwrap().unwrap()
+        };
+        let stats = |sess: &mut Session| -> (u64, u64) {
+            let r = dispatch("STATS 1", ExecBackend::Serial, sess).unwrap().unwrap();
+            let field = |key: &str| {
+                r.split_whitespace()
+                    .find_map(|kv| kv.strip_prefix(key))
+                    .unwrap()
+                    .parse::<u64>()
+                    .unwrap()
+            };
+            (field("cache_hits="), field("cache_misses="))
+        };
+
+        assert_eq!(stats(&mut sess), (0, 0), "cache born empty");
+        ask(&mut sess, "SEARCH 1 100 5000");
+        assert_eq!(stats(&mut sess), (0, 1), "first query synthesizes");
+        ask(&mut sess, "SEARCH 1 100 5000");
+        assert_eq!(stats(&mut sess), (1, 1), "repeat query hits the cache");
+        // a batched query is its own cache key
+        ask(&mut sess, "SEARCH 1 2 10 20 30 40");
+        ask(&mut sess, "SEARCH 1 2 10 20 30 40");
+        assert_eq!(stats(&mut sess), (2, 2));
+        // FAULTS (arming and disarming) flushes every resident cache:
+        // the repeat of a previously-hot query must re-synthesize
+        ask(&mut sess, "FAULTS 0 9");
+        ask(&mut sess, "SEARCH 1 100 5000");
+        assert_eq!(stats(&mut sess), (2, 3), "post-FAULTS query must miss");
+        ask(&mut sess, "FAULTS OFF");
+        ask(&mut sess, "SEARCH 1 100 5000");
+        assert_eq!(stats(&mut sess), (2, 4));
+        // DROP destroys the cache with the dataset; a reload starts cold
+        assert_eq!(ask(&mut sess, "DROP 1"), "OK dropped=1");
+        assert!(dispatch("STATS 1", ExecBackend::Serial, &mut sess).is_err());
+        load_dataset(&["SEARCH", "300", "5"], ExecBackend::Serial, &mut sess).unwrap();
+        assert_eq!(
+            ask(&mut sess, "STATS 2"),
+            "OK dataset=2 cache_hits=0 cache_misses=0"
+        );
     }
 }

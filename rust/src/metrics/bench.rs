@@ -111,6 +111,12 @@ pub fn queries_sweep_from_args(args: &[String], default: &[usize]) -> Vec<usize>
     sweep_from_args(args, "--queries", default)
 }
 
+/// Batch-size sweep from `--batch a,b,c` (for the resident bench's
+/// packed-operand points; a single value is a one-element sweep).
+pub fn batch_sweep_from_args(args: &[String], default: &[usize]) -> Vec<usize> {
+    sweep_from_args(args, "--batch", default)
+}
+
 /// BER sweep from `--ber a,b,c` (for the fidelity bench; a single value
 /// is a one-element sweep). Values are probabilities, so entries outside
 /// `[0, 1)` are dropped like any other parse failure.
@@ -279,12 +285,27 @@ pub struct ResidentRecord {
     pub shards: u64,
     /// Queries run against the resident dataset.
     pub queries: u64,
+    /// Operands packed into each query's sweep (1 = the single-operand
+    /// path; > 1 = the kernel's batched parameter stream).
+    pub batch: u64,
     /// Modeled one-time load-phase cycles (device + link).
     pub load_cycles: u64,
     /// Modeled mean cycles per query (constant for a fixed workload).
     pub query_cycles: f64,
     /// `(load_cycles + Σ query cycles) / queries` — the amortized figure.
     pub amortized_cycles: f64,
+    /// Mean slowest-shard **device** cycles per packed operand:
+    /// `Σ max_shard_cycles / (queries × batch)` — link charges excluded
+    /// so batched and unbatched points compare on in-array work alone.
+    pub per_op_cycles: f64,
+    /// Analytic device-cycle floor per operand if every operand ran as
+    /// its own query (`Σ unbatched floors / (queries × batch)`); the CI
+    /// gate asserts `per_op_cycles < floor_per_op` at batch ≥ 2.
+    pub floor_per_op: f64,
+    /// Cumulative compiled-program cache hits across the sweep.
+    pub cache_hits: u64,
+    /// Cumulative compiled-program cache misses (plan syntheses).
+    pub cache_misses: u64,
     /// Modeled total energy \[J\] (load + all queries).
     pub energy_j: f64,
     /// Host wall-clock seconds of the simulated load + queries.
@@ -292,21 +313,30 @@ pub struct ResidentRecord {
 }
 
 /// Hand-rolled JSON for [`ResidentRecord`]s (the crate set has no
-/// serde): a flat array of objects, one per (bench, queries) point.
+/// serde): a flat array of objects, one per (bench, queries, batch)
+/// point.
 pub fn resident_records_json(records: &[ResidentRecord]) -> String {
     let mut s = String::from("[\n");
     for (i, r) in records.iter().enumerate() {
         s.push_str(&format!(
             "  {{\"bench\": \"{}\", \"rows\": {}, \"shards\": {}, \
-             \"queries\": {}, \"load_cycles\": {}, \"query_cycles\": {:e}, \
-             \"amortized_cycles\": {:e}, \"energy_j\": {:e}, \"wall_s\": {:e}}}{}\n",
+             \"queries\": {}, \"batch\": {}, \"load_cycles\": {}, \
+             \"query_cycles\": {:e}, \"amortized_cycles\": {:e}, \
+             \"per_op_cycles\": {:e}, \"floor_per_op\": {:e}, \
+             \"cache_hits\": {}, \"cache_misses\": {}, \
+             \"energy_j\": {:e}, \"wall_s\": {:e}}}{}\n",
             r.bench,
             r.rows,
             r.shards,
             r.queries,
+            r.batch,
             r.load_cycles,
             r.query_cycles,
             r.amortized_cycles,
+            r.per_op_cycles,
+            r.floor_per_op,
+            r.cache_hits,
+            r.cache_misses,
             r.energy_j,
             r.wall_s,
             if i + 1 < records.len() { "," } else { "" }
@@ -547,9 +577,13 @@ pub fn rack_registry_points(
 }
 
 /// Run the load-once / query-many amortization sweep for every
-/// registered kernel at one query count: load once, run `q_count`
-/// queries with the kernel's seeded fresh-parameters stream, return one
-/// [`ResidentRecord`] per kernel (printing the per-point summary line).
+/// registered kernel at one (query count, batch size) cell: load once,
+/// run `q_count` queries with the kernel's seeded fresh-parameters
+/// stream — `batch` operands packed into each query's sweep when
+/// `batch > 1` — and return one [`ResidentRecord`] per kernel (printing
+/// the per-point summary line). Kernels without a batched parameter
+/// stream are skipped (with a note) at `batch > 1`, so `batch = 1`
+/// covers the whole registry and larger batches cover search/ed.
 /// With `verify`, the first and last query of each kernel's sweep is
 /// asserted bit-equal to a freshly loaded run with the same parameters
 /// (every intermediate query is covered by `tests/resident_datasets.rs`).
@@ -559,42 +593,76 @@ pub fn resident_registry_points(
     dense_cap: usize,
     dims: usize,
     q_count: usize,
+    batch: usize,
     seed: u64,
     verify: bool,
 ) -> Vec<ResidentRecord> {
     assert!(q_count > 0, "--queries entries must be positive");
+    assert!(batch > 0, "--batch entries must be positive");
     let shards = rack.n_shards() as u64;
     let mut records = Vec::new();
     for entry in registry() {
         let nrows = sweep_rows(entry.dense, rows, dense_cap);
         let t0 = Instant::now();
         let mut res = (entry.synth_load)(rack, nrows, dims, seed);
+        // analytic probe, no execution: does this kernel pack operands?
+        if batch > 1 && res.query_floor_seeded_batch(0, seed, batch).is_none() {
+            println!("{:<6} B={batch:<3} skipped (no batched query form)", entry.name);
+            continue;
+        }
         let load_cycles = res.load_report().total_cycles;
         let mut energy = res.load_report().energy_j;
         let mut qcycles = Vec::with_capacity(q_count);
+        let mut device_cycles = 0u64;
+        let mut floor_sum = 0u64;
         for q in 0..q_count {
-            let r = res.query_seeded(q, seed);
+            let r = if batch > 1 {
+                res.query_seeded_batch(q, seed, batch)
+                    .expect("batched stream probed above")
+            } else {
+                res.query_seeded(q, seed)
+            };
             qcycles.push(r.rack.total_cycles);
+            device_cycles += r.rack.max_shard_cycles;
+            // what the same operands would cost as one query each
+            floor_sum += if batch > 1 {
+                res.query_floor_seeded_batch(q, seed, batch)
+                    .expect("batched stream probed above")
+            } else {
+                res.query_floor_seeded(q, seed)
+            };
             energy += r.rack.energy_j;
             if verify && (q == 0 || q == q_count - 1) {
                 // fresh load + the same parameter index = the one-shot
                 // reference; results must be bit-equal
                 let mut fresh = (entry.synth_load)(rack, nrows, dims, seed);
-                let f = fresh.query_seeded(q, seed);
+                let f = if batch > 1 {
+                    fresh
+                        .query_seeded_batch(q, seed, batch)
+                        .expect("batched stream probed above")
+                } else {
+                    fresh.query_seeded(q, seed)
+                };
                 assert_eq!(
                     r.bits, f.bits,
-                    "{} Q={q_count} q={q}: resident query diverged from fresh load",
+                    "{} Q={q_count} B={batch} q={q}: resident query diverged from fresh load",
                     entry.name
                 );
             }
         }
         let wall = t0.elapsed().as_secs_f64();
         let qsum: u64 = qcycles.iter().sum();
+        let ops = (q_count * batch) as f64;
         let query_cycles = qsum as f64 / q_count as f64;
         let amortized = (load_cycles + qsum) as f64 / q_count as f64;
+        let per_op = device_cycles as f64 / ops;
+        let floor_per_op = floor_sum as f64 / ops;
+        let (cache_hits, cache_misses) = res.cache_stats();
         println!(
-            "{:<6} Q={q_count:<3} load={load_cycles:>9} query/Q={query_cycles:>12.1} \
-             amortized/Q={amortized:>12.1} energy={energy:.3e} J  wall={wall:.3}s",
+            "{:<6} Q={q_count:<3} B={batch:<2} load={load_cycles:>9} \
+             query/Q={query_cycles:>12.1} amortized/Q={amortized:>12.1} \
+             per_op={per_op:>9.1} floor={floor_per_op:>9.1} \
+             cache={cache_hits}h/{cache_misses}m energy={energy:.3e} J  wall={wall:.3}s",
             entry.name
         );
         records.push(ResidentRecord {
@@ -602,9 +670,14 @@ pub fn resident_registry_points(
             rows: nrows as u64,
             shards,
             queries: q_count as u64,
+            batch: batch as u64,
             load_cycles,
             query_cycles,
             amortized_cycles: amortized,
+            per_op_cycles: per_op,
+            floor_per_op,
+            cache_hits,
+            cache_misses,
             energy_j: energy,
             wall_s: wall,
         });
@@ -619,17 +692,55 @@ mod tests {
     #[test]
     fn registry_sweep_covers_every_kernel_and_amortizes() {
         let rack = PrinsRack::new(1);
-        let recs = resident_registry_points(&rack, 64, 32, 2, 2, 5, true);
+        let recs = resident_registry_points(&rack, 64, 32, 2, 2, 1, 5, true);
         assert_eq!(recs.len(), registry().len());
         for r in &recs {
             assert!(r.load_cycles > 0, "{}: uncharged load", r.bench);
             assert!(r.amortized_cycles > r.query_cycles, "{}", r.bench);
+            assert_eq!(r.batch, 1);
+            assert!(r.per_op_cycles > 0.0 && r.floor_per_op > 0.0, "{}", r.bench);
         }
         let pts = rack_registry_points(&rack, 64, 32, 2, 5);
         assert_eq!(pts.len(), registry().len());
         for p in &pts {
             assert!(!p.bits.is_empty(), "{}: empty bit encoding", p.name);
             assert!(p.record.total_cycles >= p.record.max_shard_cycles);
+        }
+    }
+
+    #[test]
+    fn batched_sweep_covers_packing_kernels_and_beats_the_unbatched_floor() {
+        let rack = PrinsRack::new(1);
+        let recs = resident_registry_points(&rack, 64, 32, 2, 2, 4, 5, true);
+        // only kernels with a batched parameter stream produce points
+        let names: Vec<&str> = recs.iter().map(|r| r.bench.as_str()).collect();
+        assert_eq!(names, ["ed", "search"], "batched registry points: {names:?}");
+        for r in &recs {
+            assert_eq!(r.batch, 4);
+            assert!(
+                r.per_op_cycles < r.floor_per_op,
+                "{}: packed per-operand cost {} must beat the unbatched floor {}",
+                r.bench,
+                r.per_op_cycles,
+                r.floor_per_op
+            );
+            assert!(
+                r.cache_misses > 0,
+                "{}: batched plans must flow through the program cache",
+                r.bench
+            );
+        }
+        // the same kernels at batch=1 cost strictly more per operand
+        let base = resident_registry_points(&rack, 64, 32, 2, 2, 1, 5, false);
+        for r in &recs {
+            let b1 = base.iter().find(|b| b.bench == r.bench).unwrap();
+            assert!(
+                r.per_op_cycles < b1.per_op_cycles,
+                "{}: per-op at B=4 ({}) must undercut B=1 ({})",
+                r.bench,
+                r.per_op_cycles,
+                b1.per_op_cycles
+            );
         }
     }
 
@@ -671,20 +782,30 @@ mod tests {
                 rows: 4096,
                 shards: 1,
                 queries: 1,
+                batch: 1,
                 load_cycles: 16384,
                 query_cycles: 524.0,
                 amortized_cycles: 16908.0,
+                per_op_cycles: 524.0,
+                floor_per_op: 524.0,
+                cache_hits: 0,
+                cache_misses: 1,
                 energy_j: 1.0e-6,
                 wall_s: 0.01,
             },
             ResidentRecord {
-                bench: "hist".into(),
+                bench: "search".into(),
                 rows: 4096,
                 shards: 1,
                 queries: 64,
+                batch: 4,
                 load_cycles: 16384,
                 query_cycles: 524.0,
                 amortized_cycles: 780.0,
+                per_op_cycles: 131.0,
+                floor_per_op: 164.0,
+                cache_hits: 63,
+                cache_misses: 1,
                 energy_j: 3.0e-6,
                 wall_s: 0.4,
             },
@@ -692,9 +813,15 @@ mod tests {
         let s = resident_records_json(&recs);
         assert!(s.starts_with("[\n") && s.trim_end().ends_with(']'));
         assert_eq!(s.matches("\"queries\"").count(), 2);
+        assert_eq!(s.matches("\"batch\"").count(), 2);
         assert_eq!(s.matches("},\n").count(), 1);
         assert!(s.contains("\"load_cycles\": 16384"));
         assert!(s.contains("\"amortized_cycles\""));
+        assert!(s.contains("\"batch\": 4"));
+        assert!(s.contains("\"per_op_cycles\""));
+        assert!(s.contains("\"floor_per_op\""));
+        assert!(s.contains("\"cache_hits\": 63"));
+        assert!(s.contains("\"cache_misses\": 1"));
     }
 
     #[test]

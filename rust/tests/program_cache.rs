@@ -1,0 +1,167 @@
+//! Compiled-program cache correctness gates (DESIGN.md §Batching &
+//! program cache): serving a query from a cached [`QueryPlan`] must be
+//! observationally identical to synthesizing the plan fresh — same
+//! result bits, same reply fields, same charged cycles — across
+//! simulator worker counts and shard layouts, and invalidation must
+//! force re-synthesis without changing any result.
+
+use prins::algorithms::kernel::registry;
+use prins::host::rack::PrinsRack;
+use prins::rcam::{DeviceModel, ExecBackend, InterconnectModel};
+
+const ROWS: usize = 96;
+const DENSE_CAP: usize = 48;
+const DIMS: usize = 3;
+const SEED: u64 = 11;
+
+fn rack(shards: usize, workers: usize) -> PrinsRack {
+    PrinsRack::with_config(
+        shards,
+        DeviceModel::default(),
+        ExecBackend::from_workers(workers),
+        InterconnectModel::default(),
+    )
+}
+
+/// Rows for one registry entry: dense (microcoded) kernels cap like the
+/// bench sweeps so the matrix of configurations stays fast.
+fn rows_for(dense: bool) -> usize {
+    if dense {
+        ROWS.min(DENSE_CAP)
+    } else {
+        ROWS
+    }
+}
+
+#[test]
+fn cached_queries_are_bit_identical_to_fresh_synthesis() {
+    for &workers in &[1usize, 4] {
+        for &shards in &[1usize, 2, 8] {
+            let rack = rack(shards, workers);
+            for entry in registry() {
+                let nrows = rows_for(entry.dense);
+                let mut res = (entry.synth_load)(&rack, nrows, DIMS, SEED);
+                // q=0 twice: the first run synthesizes (or not, for
+                // kernels without cache keys), the repeat serves any
+                // cached plans — every observable must agree exactly
+                let cold = res.query_seeded(0, SEED);
+                let warm = res.query_seeded(0, SEED);
+                let ctx = format!("{} workers={workers} shards={shards}", entry.name);
+                assert_eq!(cold.bits, warm.bits, "{ctx}: result bits drifted");
+                assert_eq!(cold.fields, warm.fields, "{ctx}: reply fields drifted");
+                assert_eq!(
+                    cold.rack.total_cycles, warm.rack.total_cycles,
+                    "{ctx}: cycle ledger drifted"
+                );
+                assert_eq!(
+                    cold.rack.max_shard_cycles, warm.rack.max_shard_cycles,
+                    "{ctx}: shard critical path drifted"
+                );
+                assert_eq!(
+                    cold.rack.link_bytes, warm.rack.link_bytes,
+                    "{ctx}: link traffic drifted"
+                );
+                // a fresh load answering the same parameters — all
+                // synthesis, no cache — must also agree
+                let mut fresh = (entry.synth_load)(&rack, nrows, DIMS, SEED);
+                let f = fresh.query_seeded(0, SEED);
+                assert_eq!(cold.bits, f.bits, "{ctx}: cached vs fresh-load bits");
+                assert_eq!(cold.fields, f.fields, "{ctx}: cached vs fresh-load fields");
+                assert_eq!(
+                    cold.rack.total_cycles, f.rack.total_cycles,
+                    "{ctx}: cached vs fresh-load cycles"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn cache_counters_account_for_repeats_across_shards() {
+    for &shards in &[1usize, 2, 8] {
+        let s = shards as u64;
+        let rack = rack(shards, 1);
+        let entry = registry().iter().find(|e| e.name == "search").unwrap();
+        let mut res = (entry.synth_load)(&rack, ROWS, DIMS, SEED);
+        assert_eq!(res.cache_stats(), (0, 0), "cache born empty");
+        // every shard consults the cache once per query; equal-shape
+        // shards share one entry, so a fresh key synthesizes at least
+        // once and at most once per distinct shard shape — concurrent
+        // shards that lose the synthesis race count as hits
+        res.query_seeded(0, SEED);
+        let (h1, m1) = res.cache_stats();
+        assert_eq!(h1 + m1, s, "shards={shards}: one lookup per shard");
+        assert!(m1 >= 1, "shards={shards}: first query must synthesize");
+        res.query_seeded(0, SEED);
+        let (h2, m2) = res.cache_stats();
+        assert_eq!(m2, m1, "shards={shards}: repeat must not re-synthesize");
+        assert_eq!(
+            h2,
+            h1 + s,
+            "shards={shards}: the repeat serves every shard's plan from cache"
+        );
+        // a new parameter index is a new key: misses must grow
+        res.query_seeded(2, SEED);
+        let (h3, m3) = res.cache_stats();
+        assert!(m3 > m2, "shards={shards}: new params must synthesize");
+        assert_eq!(h3 + m3, h2 + m2 + s, "shards={shards}: one lookup per shard");
+    }
+}
+
+#[test]
+fn invalidation_forces_resynthesis_without_changing_results() {
+    let rack = rack(2, 1);
+    for name in ["search", "ed", "hist"] {
+        let entry = registry().iter().find(|e| e.name == name).unwrap();
+        let mut res = (entry.synth_load)(&rack, rows_for(entry.dense), DIMS, SEED);
+        let before = res.query_seeded(0, SEED);
+        res.query_seeded(0, SEED);
+        let (h, m) = res.cache_stats();
+        assert!(h > 0 && m > 0, "{name}: warm-up should hit and miss");
+        res.invalidate_cache();
+        let after = res.query_seeded(0, SEED);
+        let (h2, m2) = res.cache_stats();
+        assert!(
+            m2 > m,
+            "{name}: post-invalidation query must re-synthesize (counters are \
+             cumulative across invalidations)"
+        );
+        assert_eq!(h2 + m2, h + m + 2, "{name}: one lookup per shard");
+        assert_eq!(before.bits, after.bits, "{name}: invalidation changed results");
+        assert_eq!(before.fields, after.fields, "{name}: invalidation changed fields");
+        assert_eq!(
+            before.rack.total_cycles, after.rack.total_cycles,
+            "{name}: invalidation changed the cycle ledger"
+        );
+    }
+}
+
+#[test]
+fn batched_queries_share_cached_plans_with_repeats() {
+    let rack = rack(2, 1);
+    let entry = registry().iter().find(|e| e.name == "search").unwrap();
+    let mut res = (entry.synth_load)(&rack, ROWS, DIMS, SEED);
+    let a = res
+        .query_seeded_batch(0, SEED, 4)
+        .expect("search has a batched parameter stream");
+    let (h1, m1) = res.cache_stats();
+    assert!(m1 >= 1, "first batched query must synthesize");
+    assert_eq!(h1 + m1, 2, "one lookup per shard");
+    let b = res
+        .query_seeded_batch(0, SEED, 4)
+        .expect("search has a batched parameter stream");
+    let (h2, m2) = res.cache_stats();
+    assert_eq!(m2, m1, "batched repeat must not re-synthesize");
+    assert_eq!(h2, h1 + 2, "batched repeat serves every shard's plan from cache");
+    assert_eq!(a.bits, b.bits, "batched repeat drifted");
+    assert_eq!(a.rack.total_cycles, b.rack.total_cycles);
+    // the packed sweep stays under the analytic unbatched floor
+    let floor = res
+        .query_floor_seeded_batch(0, SEED, 4)
+        .expect("search reports an unbatched floor");
+    assert!(
+        a.rack.max_shard_cycles < floor,
+        "batched device cycles {} must beat the unbatched floor {floor}",
+        a.rack.max_shard_cycles
+    );
+}

@@ -126,3 +126,42 @@ fn recency_breaks_ties_at_equal_wear() {
     assert!(!ds.contains("ds=7:"), "{ds}");
     server.shutdown();
 }
+
+/// A dataset whose only traffic is shared-read queries must still count
+/// as recently used: the server's default shared-read admission routes
+/// every write-free resident query (batched included) through
+/// `dispatch_shared`, and that path has to stamp `last_used` exactly
+/// like exclusive dispatch — otherwise a read-hot dataset becomes the
+/// eviction victim the moment the table fills.
+#[test]
+fn shared_read_only_hot_dataset_survives_eviction() {
+    let server = Server::spawn("127.0.0.1:0").unwrap();
+    let mut conn = TcpStream::connect(server.addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+
+    // 16 equal-wear search datasets (write-free queries → all traffic
+    // below routes through the shared-read path on the default server)
+    for i in 1..=16u64 {
+        let r = ask(&mut conn, &mut reader, "LOAD SEARCH 40 9");
+        assert!(r.starts_with(&format!("OK id={i} ")), "{r}");
+    }
+    // touch ids 2..=16 first, then id 1 LAST — with a *batched* shared
+    // query, so the batched shared arm's recency stamp is what keeps it
+    // resident. Were shared reads not stamping, id 1 would keep its
+    // load-time stamp (the table minimum) and be evicted here.
+    for id in 2..=16u64 {
+        let q = ask(&mut conn, &mut reader, &format!("SEARCH {id} 100 5000"));
+        assert!(q.starts_with("OK"), "{q}");
+    }
+    let hot = ask(&mut conn, &mut reader, "SEARCH 1 2 100 5000 6000 40000");
+    assert!(hot.contains("batch=2") && hot.contains("dataset=1"), "{hot}");
+
+    let full = ask(&mut conn, &mut reader, "LOAD SEARCH 40 9");
+    assert!(full.starts_with("OK id=17 "), "{full}");
+    // the true LRU is id 2 (first touch of the loop), not id 1
+    assert!(full.ends_with(" evicted=2"), "{full}");
+    let ds = ask(&mut conn, &mut reader, "DATASETS");
+    assert!(ds.contains("ds=1:search:40:1"), "shared-read-hot dataset evicted: {ds}");
+    assert!(!ds.contains("ds=2:"), "{ds}");
+    server.shutdown();
+}
