@@ -3,21 +3,28 @@
 //! concurrent clients × pipeline depths, once per admission mode —
 //!
 //!   1. **exclusive**: shared-read admission off; every request is
-//!      serialized per connection through the `&mut` resident path (the
-//!      baseline),
+//!      serialized through the resident slot (the baseline),
 //!   2. **shared**: write-free resident queries admit as concurrent
-//!      readers over the same resident rows,
+//!      readers, each client over its own resident hist dataset,
+//!   3. **cross_exclusive** / **cross_session**: every client hammers
+//!      **one** search dataset loaded once by a setup connection — the
+//!      cross-session shape (docs/PROTOCOL.md §Sharing). `cross_session`
+//!      adds shared admission plus the cross-connection coalescer, and
+//!      its records carry `coalesced_per_op_cycles` scraped from the
+//!      dataset's `STATS` counters,
 //!
 //! and write one record per (clients, pipeline, mode) cell to
-//! `BENCH_throughput.json` at the repository root. Every client loads
-//! its own resident hist dataset, then fires its queries with the
-//! requested pipeline window, asserting each reply is byte-identical to
-//! the connection's first — concurrency must never change a reply bit.
+//! `BENCH_throughput.json` at the repository root. Every reply is
+//! asserted byte-identical to the connection's first — concurrency and
+//! coalescing must never change a reply bit — and the cross_session
+//! mode ends with a deterministic one-packet burst proving the
+//! coalescer's amortized per-query cycles beat the solo-query cost.
 //! The CI smoke gate checks qps(many clients) > qps(1 client) in shared
-//! mode and that both servers shut down cleanly.
+//! mode, qps(cross_session) > qps(cross_exclusive) at the widest cell,
+//! and that all four servers shut down cleanly.
 //!
 //! Flags (after `cargo bench --bench throughput -- ...`):
-//!   --rows N          resident dataset rows per client (default 2000)
+//!   --rows N          resident dataset rows (default 2000)
 //!   --queries Q       queries per client (default 32)
 //!   --clients a,b,c   concurrent-connection sweep (default 1,4,16)
 //!   --pipeline a,b,c  in-flight request lines per client (default 1,8)
@@ -48,12 +55,67 @@ fn usize_sweep(args: &[String], name: &str, default: &[usize]) -> Vec<usize> {
     }
 }
 
-/// One measured cell: `clients` connections, each loading a resident
-/// hist dataset and firing `queries` pipelined `HIST <id>` requests with
-/// `pipeline` lines in flight. Returns (total queries, wall seconds of
-/// the query phase). Panics on any dropped connection, non-OK reply, or
-/// reply that differs from the connection's first — so a passing bench
-/// run is itself a correctness check.
+fn connect(addr: SocketAddr) -> (TcpStream, BufReader<TcpStream>) {
+    let conn = TcpStream::connect(addr).expect("connect failed");
+    conn.set_nodelay(true).ok();
+    let reader = BufReader::new(conn.try_clone().expect("clone failed"));
+    (conn, reader)
+}
+
+fn ask(conn: &mut TcpStream, reader: &mut BufReader<TcpStream>, req: &str) -> String {
+    writeln!(conn, "{req}").expect("write failed");
+    let mut line = String::new();
+    reader.read_line(&mut line).expect("reply dropped");
+    line.trim().to_string()
+}
+
+/// `key=`-prefixed numeric field of a reply.
+fn field(reply: &str, key: &str) -> u64 {
+    reply
+        .split_whitespace()
+        .find_map(|kv| kv.strip_prefix(key))
+        .unwrap_or_else(|| panic!("no {key} in {reply}"))
+        .parse()
+        .unwrap_or_else(|e| panic!("bad {key} in {reply}: {e}"))
+}
+
+/// Fire `queries` pipelined lines of `query` and assert every reply is
+/// byte-identical to the connection's first.
+fn drive_queries(
+    conn: &mut TcpStream,
+    reader: &mut BufReader<TcpStream>,
+    query: &str,
+    pipeline: usize,
+    queries: usize,
+) {
+    let window = pipeline.min(queries);
+    let mut sent = 0usize;
+    for _ in 0..window {
+        writeln!(conn, "{query}").expect("query write failed");
+        sent += 1;
+    }
+    let mut line = String::new();
+    let mut reference: Option<String> = None;
+    for _ in 0..queries {
+        line.clear();
+        reader.read_line(&mut line).expect("query reply dropped");
+        assert!(line.starts_with("OK"), "{line}");
+        match &reference {
+            Some(r) => assert_eq!(r.as_str(), line.trim(), "reply drift under concurrency"),
+            None => reference = Some(line.trim().to_string()),
+        }
+        if sent < queries {
+            writeln!(conn, "{query}").expect("query write failed");
+            sent += 1;
+        }
+    }
+}
+
+/// Per-client-dataset cell: `clients` connections each load their own
+/// resident hist dataset (ids are global, so each parses its own from
+/// the `LOAD` reply) and fire `queries` pipelined `HIST <id>` requests,
+/// dropping the dataset before `QUIT` so cells never pressure the
+/// table cap. Returns (total queries, wall seconds of the query phase).
 fn run_cell(
     addr: SocketAddr,
     clients: usize,
@@ -66,42 +128,14 @@ fn run_cell(
     for _ in 0..clients {
         let barrier = barrier.clone();
         handles.push(std::thread::spawn(move || {
-            let mut conn = TcpStream::connect(addr).expect("connect failed");
-            conn.set_nodelay(true).ok();
-            let mut reader = BufReader::new(conn.try_clone().expect("clone failed"));
-            let mut line = String::new();
-            writeln!(conn, "LOAD HIST {rows} 7").expect("load write failed");
-            reader.read_line(&mut line).expect("load reply dropped");
-            assert!(line.starts_with("OK id=1 kind=hist"), "{line}");
+            let (mut conn, mut reader) = connect(addr);
+            let loaded = ask(&mut conn, &mut reader, &format!("LOAD HIST {rows} 7"));
+            assert!(loaded.starts_with("OK id="), "{loaded}");
+            let id = field(&loaded, "id=");
             barrier.wait(); // every client loaded: start the clock
-            let window = pipeline.min(queries);
-            let mut sent = 0usize;
-            for _ in 0..window {
-                writeln!(conn, "HIST 1").expect("query write failed");
-                sent += 1;
-            }
-            let mut reference: Option<String> = None;
-            for _ in 0..queries {
-                line.clear();
-                reader.read_line(&mut line).expect("query reply dropped");
-                assert!(line.starts_with("OK"), "{line}");
-                match &reference {
-                    Some(r) => assert_eq!(
-                        r.as_str(),
-                        line.trim(),
-                        "reply drift under concurrency"
-                    ),
-                    None => reference = Some(line.trim().to_string()),
-                }
-                if sent < queries {
-                    writeln!(conn, "HIST 1").expect("query write failed");
-                    sent += 1;
-                }
-            }
-            line.clear();
-            writeln!(conn, "QUIT").expect("quit write failed");
-            reader.read_line(&mut line).expect("bye dropped");
-            assert_eq!(line.trim(), "BYE");
+            drive_queries(&mut conn, &mut reader, &format!("HIST {id}"), pipeline, queries);
+            assert_eq!(ask(&mut conn, &mut reader, &format!("DROP {id}")), format!("OK dropped={id}"));
+            assert_eq!(ask(&mut conn, &mut reader, "QUIT"), "BYE");
         }));
     }
     barrier.wait();
@@ -111,6 +145,81 @@ fn run_cell(
     }
     let wall = t0.elapsed().as_secs_f64();
     ((clients * queries) as u64, wall)
+}
+
+/// Cross-session cell: `clients` connections all fire pipelined
+/// single-operand `SEARCH` queries at the one pre-loaded dataset (id 1
+/// on a fresh server). Returns (total queries, wall seconds).
+fn run_cross_cell(
+    addr: SocketAddr,
+    clients: usize,
+    pipeline: usize,
+    queries: usize,
+) -> (u64, f64) {
+    let barrier = Arc::new(Barrier::new(clients + 1));
+    let mut handles = Vec::with_capacity(clients);
+    for _ in 0..clients {
+        let barrier = barrier.clone();
+        handles.push(std::thread::spawn(move || {
+            let (mut conn, mut reader) = connect(addr);
+            barrier.wait();
+            drive_queries(&mut conn, &mut reader, "SEARCH 1 100 5000", pipeline, queries);
+            assert_eq!(ask(&mut conn, &mut reader, "QUIT"), "BYE");
+        }));
+    }
+    barrier.wait();
+    let t0 = Instant::now();
+    for h in handles {
+        h.join().expect("client thread panicked");
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    ((clients * queries) as u64, wall)
+}
+
+/// (coal_batches, coal_members, coal_cycles) of dataset 1 via `STATS`.
+fn coal_counters(addr: SocketAddr) -> (u64, u64, u64) {
+    let (mut conn, mut reader) = connect(addr);
+    let stats = ask(&mut conn, &mut reader, "STATS 1");
+    assert!(stats.starts_with("OK dataset=1"), "{stats}");
+    let out = (
+        field(&stats, "coal_batches="),
+        field(&stats, "coal_members="),
+        field(&stats, "coal_cycles="),
+    );
+    ask(&mut conn, &mut reader, "QUIT");
+    out
+}
+
+/// Deterministic coalescing probe: one connection writes `burst`
+/// identical `SEARCH` lines in a single packet, so the mux sees them
+/// pending together and must merge the front run. Packet boundaries are
+/// not guaranteed end to end, so retry a few times; every reply must
+/// equal the solo `reference` on every attempt, merged or not. Returns
+/// the amortized device cycles per coalesced query.
+fn ensure_coalesced(addr: SocketAddr, burst: usize, reference: &str) -> f64 {
+    let (b0, m0, c0) = coal_counters(addr);
+    for attempt in 0..20 {
+        let (mut conn, mut reader) = connect(addr);
+        let packet: String = std::iter::repeat("SEARCH 1 100 5000\n").take(burst).collect();
+        conn.write_all(packet.as_bytes()).expect("burst write failed");
+        let mut line = String::new();
+        for _ in 0..burst {
+            line.clear();
+            reader.read_line(&mut line).expect("burst reply dropped");
+            assert_eq!(line.trim(), reference, "coalesced reply diverged from solo");
+        }
+        ask(&mut conn, &mut reader, "QUIT");
+        let (b1, m1, c1) = coal_counters(addr);
+        if b1 > b0 {
+            println!(
+                "coalescing probe: attempt {attempt}, {} batches / {} members merged",
+                b1 - b0,
+                m1 - m0
+            );
+            return (c1 - c0) as f64 / (m1 - m0) as f64;
+        }
+    }
+    panic!("coalescing probe: no burst merged in 20 attempts");
 }
 
 fn main() {
@@ -126,6 +235,8 @@ fn main() {
     );
 
     let mut records: Vec<ThroughputRecord> = Vec::new();
+
+    // per-client-dataset sweep (the original shape)
     for (mode, shared) in [("exclusive", false), ("shared", true)] {
         let opts = ServeOptions {
             shared_read: shared,
@@ -137,7 +248,7 @@ fn main() {
                 let (nq, wall) = run_cell(server.addr, clients, pipeline, queries, rows);
                 let qps = nq as f64 / wall;
                 println!(
-                    "hist   mode={mode:<9} clients={clients:<3} pipeline={pipeline:<3} \
+                    "hist   mode={mode:<15} clients={clients:<3} pipeline={pipeline:<3} \
                      queries={nq:<6} qps={qps:>10.1} wall={wall:.3}s"
                 );
                 records.push(ThroughputRecord {
@@ -148,11 +259,70 @@ fn main() {
                     queries: nq,
                     qps,
                     wall_s: wall,
+                    coalesced_per_op_cycles: 0.0,
                 });
             }
         }
         // clean shutdown per mode — the CI smoke gate relies on this
         // returning (a hung mux or worker would wedge the bench here)
+        server.shutdown();
+        println!("{mode} server shut down cleanly");
+    }
+
+    // cross-session sweep: one dataset, loaded once, hammered by all
+    for (mode, shared) in [("cross_exclusive", false), ("cross_session", true)] {
+        let opts = ServeOptions {
+            shared_read: shared,
+            ..ServeOptions::default()
+        };
+        let server = Server::spawn_opts("127.0.0.1:0", opts).expect("server spawn failed");
+        let (mut setup, mut setup_r) = connect(server.addr);
+        let loaded = ask(&mut setup, &mut setup_r, &format!("LOAD SEARCH {rows} 9"));
+        assert!(loaded.starts_with("OK id=1 "), "{loaded}");
+        let solo = ask(&mut setup, &mut setup_r, "SEARCH 1 100 5000");
+        let solo_cycles = field(&solo, "cycles=");
+        for &clients in &clients_sweep {
+            for &pipeline in &pipeline_sweep {
+                let (_, m0, c0) = coal_counters(server.addr);
+                let (nq, wall) = run_cross_cell(server.addr, clients, pipeline, queries);
+                let (_, m1, c1) = coal_counters(server.addr);
+                let qps = nq as f64 / wall;
+                let coalesced_per_op_cycles = if m1 > m0 {
+                    (c1 - c0) as f64 / (m1 - m0) as f64
+                } else {
+                    0.0
+                };
+                println!(
+                    "search mode={mode:<15} clients={clients:<3} pipeline={pipeline:<3} \
+                     queries={nq:<6} qps={qps:>10.1} wall={wall:.3}s \
+                     coalesced_per_op_cycles={coalesced_per_op_cycles:.1}"
+                );
+                records.push(ThroughputRecord {
+                    bench: "search".into(),
+                    clients: clients as u64,
+                    pipeline: pipeline as u64,
+                    mode: mode.into(),
+                    queries: nq,
+                    qps,
+                    wall_s: wall,
+                    coalesced_per_op_cycles,
+                });
+            }
+        }
+        if shared {
+            // the amortization gate: a merged burst must cost fewer
+            // device cycles per query than the solo dispatch it replaces
+            let per_op = ensure_coalesced(server.addr, 8, &solo);
+            assert!(
+                per_op < solo_cycles as f64,
+                "coalesced per-op cycles {per_op:.1} did not beat solo {solo_cycles}"
+            );
+            println!(
+                "coalesced_per_op_cycles={per_op:.1} < solo_query_cycles={solo_cycles}"
+            );
+        }
+        assert_eq!(ask(&mut setup, &mut setup_r, "DROP 1"), "OK dropped=1");
+        assert_eq!(ask(&mut setup, &mut setup_r, "QUIT"), "BYE");
         server.shutdown();
         println!("{mode} server shut down cleanly");
     }

@@ -7,6 +7,7 @@ use crate::algorithms::kernel::{
     one_shot_out, sharded, FloatMatrix, Kernel, KernelEntry, QueryOut, Resident, ResidentDyn,
     ShardMerge, Sharded,
 };
+use crate::controller::read::ReadCursor;
 use crate::controller::{Controller, ExecStats};
 use crate::error::{ensure, Result};
 use crate::host::rack::PrinsRack;
@@ -228,6 +229,10 @@ impl Kernel for DotKernel {
     const NAME: &'static str = "dp";
     const VERB: &'static str = "DP";
     const QUERY_ARITY: usize = 1;
+    // the DP program writes scratch columns only (verified statically by
+    // the `prins verify` overlay C03 contract), so queries run
+    // concurrently through the scratch-overlay cursor
+    const SHARED_READ: bool = true;
 
     fn data_rows(data: &FloatMatrix) -> usize {
         data.n
@@ -287,6 +292,68 @@ impl Kernel for DotKernel {
             programs: vec![self.program(params)],
             extra_cycles: 0, // readout is storage-path, not kernel time
         }
+    }
+
+    fn params_key(&self, params: &Vec<f32>) -> Option<String> {
+        // the program folds the H bits into its write keys, so the cache
+        // key must carry the exact values
+        let mut key = String::new();
+        for h in params {
+            key.push_str(&format!("{:08x}:", h.to_bits()));
+        }
+        Some(key)
+    }
+
+    fn query_shard_planned(
+        &self,
+        ctl: &mut Controller,
+        sm: &StorageManager,
+        _range: &Range<usize>,
+        _params: &Vec<f32>,
+        plan: &crate::analysis::QueryPlan,
+    ) -> Option<(Vec<f32>, ExecStats)> {
+        ctl.begin_stats();
+        for prog in &plan.programs {
+            ctl.execute(prog);
+        }
+        let l = &self.layout;
+        let dp = (0..self.n)
+            .map(|i| {
+                bits_to_f32(ctl.array.fetch_row_bits(
+                    sm.translate(&self.ds, i),
+                    l.acc.sign as usize,
+                    33,
+                ))
+            })
+            .collect();
+        Some((dp, ctl.stats()))
+    }
+
+    fn query_shard_overlay(
+        &self,
+        cur: &mut ReadCursor<'_>,
+        sm: &StorageManager,
+        _range: &Range<usize>,
+        _params: &Vec<f32>,
+        plan: &crate::analysis::QueryPlan,
+    ) -> Option<(Vec<f32>, ExecStats)> {
+        // mirror of query on the overlay cursor: execute the DP program,
+        // then read every accumulator back overlay-first
+        for prog in &plan.programs {
+            cur.execute_overlay(prog).ok()?;
+        }
+        let l = &self.layout;
+        let dp = (0..self.n)
+            .map(|i| {
+                bits_to_f32(cur.fetch_row_bits(
+                    sm.translate(&self.ds, i),
+                    l.acc.sign as usize,
+                    33,
+                ))
+            })
+            .collect();
+        cur.add_cycles(plan.extra_cycles);
+        Some((dp, cur.stats_microcoded()))
     }
 
     fn parse_params(&self, args: &[&str]) -> Result<Vec<f32>> {
@@ -362,6 +429,8 @@ pub const ENTRY: KernelEntry = KernelEntry {
     one_shot_usage: "DP n dims seed",
     dense: true,
     write_free_queries: false,
+    overlay_queries: true,
+    coalesce_queries: false,
     bits_f32: true,
     flops: |n, dims| 2.0 * (n * dims) as f64,
     load: load_args,
@@ -461,6 +530,35 @@ mod tests {
         let mut ctl = Controller::new(array);
         let r = kern.query(&mut ctl, &sm, &h1);
         assert_eq!(r.stats.cycles, kern.query_floor_cycles());
+    }
+
+    #[test]
+    fn shared_overlay_dp_matches_the_exclusive_path_bitwise() {
+        let (n, dims) = (28usize, 3usize);
+        let mut rng = Rng::seed_from(23);
+        let x: Vec<f32> = (0..n * dims).map(|_| rng.f32_range(-3.0, 3.0)).collect();
+        let h: Vec<f32> = (0..dims).map(|_| rng.f32_range(-3.0, 3.0)).collect();
+        let rack = PrinsRack::new(2);
+        let data = FloatMatrix::new(x, n, dims);
+        let mut res = Resident::<DotKernel>::load(&rack, &data);
+        assert!(res.shared_readable(), "dp opts into the shared-read path");
+        let wear0 = res.shard_wear();
+        let shared = res.query_shared(&h).expect("shared path refused");
+        assert_eq!(res.shard_wear(), wear0, "shared query advanced wear");
+        let excl = res.query(&h);
+        assert!(shared
+            .merged
+            .dp
+            .iter()
+            .zip(&excl.merged.dp)
+            .all(|(a, b)| a.to_bits() == b.to_bits()));
+        assert_eq!(
+            shared.merged.checksum.to_bits(),
+            excl.merged.checksum.to_bits()
+        );
+        assert_eq!(shared.rack.total_cycles, excl.rack.total_cycles);
+        assert_eq!(shared.rack.link_bytes, excl.rack.link_bytes);
+        assert_eq!(shared.rack.shard_stats, excl.rack.shard_stats);
     }
 
     #[test]

@@ -23,6 +23,7 @@ use crate::algorithms::kernel::{
     one_shot_out, sharded, FloatMatrix, Kernel, KernelEntry, QueryOut, Resident, ResidentDyn,
     ShardMerge, Sharded,
 };
+use crate::controller::read::ReadCursor;
 use crate::controller::{Controller, ExecStats};
 use crate::error::{ensure, Result};
 use crate::host::rack::PrinsRack;
@@ -399,6 +400,10 @@ impl Kernel for EuclideanKernel {
     const NAME: &'static str = "ed";
     const VERB: &'static str = "ED";
     const QUERY_ARITY: usize = 2;
+    // the sweep programs write scratch columns only (verified statically
+    // by the `prins verify` overlay C03 contract), so queries run
+    // concurrently through the scratch-overlay cursor
+    const SHARED_READ: bool = true;
 
     fn data_rows(data: &FloatMatrix) -> usize {
         data.n
@@ -494,6 +499,35 @@ impl Kernel for EuclideanKernel {
     ) -> Option<(Vec<Vec<f32>>, ExecStats)> {
         let res = self.query_with(ctl, sm, &plan.programs, params.k);
         Some((res.dists, res.stats))
+    }
+
+    fn query_shard_overlay(
+        &self,
+        cur: &mut ReadCursor<'_>,
+        sm: &StorageManager,
+        _range: &Range<usize>,
+        params: &EdParams,
+        plan: &crate::analysis::QueryPlan,
+    ) -> Option<(Vec<Vec<f32>>, ExecStats)> {
+        // mirror of query_with on the overlay cursor: execute each sweep,
+        // then read every active lane's accumulator back overlay-first
+        let mut dists = Vec::with_capacity(params.k);
+        let mut remaining = params.k;
+        for prog in &plan.programs {
+            cur.execute_overlay(prog).ok()?;
+            for slot in &self.layout.lanes[..remaining.min(MAX_ED_LANES)] {
+                let mut out = Vec::with_capacity(self.n);
+                for i in 0..self.n {
+                    let bits =
+                        cur.fetch_row_bits(sm.translate(&self.ds, i), slot.acc.sign as usize, 33);
+                    out.push(bits_to_f32(bits));
+                }
+                dists.push(out);
+            }
+            remaining = remaining.saturating_sub(MAX_ED_LANES);
+        }
+        cur.add_cycles(plan.extra_cycles);
+        Some((dists, cur.stats_microcoded()))
     }
 
     fn parse_params(&self, args: &[&str]) -> Result<EdParams> {
@@ -626,6 +660,8 @@ pub const ENTRY: KernelEntry = KernelEntry {
     one_shot_usage: "ED n dims k seed",
     dense: true,
     write_free_queries: false,
+    overlay_queries: true,
+    coalesce_queries: false,
     bits_f32: true,
     flops: |n, dims| 3.0 * (n * dims) as f64,
     load: load_args,
@@ -796,6 +832,42 @@ mod tests {
             unbatched - kern.query_floor_cycles(k),
             3 * (dims as u64 + 1) * 4
         );
+    }
+
+    #[test]
+    fn shared_overlay_queries_match_the_exclusive_path_bitwise() {
+        // k = 6 crosses the lane-chunk boundary, so the overlay path is
+        // exercised across multiple sweep programs
+        let (n, dims, k) = (24usize, 2usize, 6usize);
+        let mut rng = Rng::seed_from(41);
+        let x: Vec<f32> = (0..n * dims).map(|_| rng.f32_range(-4.0, 4.0)).collect();
+        let centers: Vec<f32> = (0..k * dims).map(|_| rng.f32_range(-4.0, 4.0)).collect();
+        let rack = PrinsRack::new(2);
+        let data = FloatMatrix::new(x, n, dims);
+        let mut res = Resident::<EuclideanKernel>::load(&rack, &data);
+        assert!(res.shared_readable(), "ed opts into the shared-read path");
+        let params = EdParams { centers, k, topk: 2 };
+        let wear0 = res.shard_wear();
+        let shared = res.query_shared(&params).expect("shared path refused");
+        assert_eq!(res.shard_wear(), wear0, "shared query advanced wear");
+        let excl = res.query(&params);
+        for c in 0..k {
+            assert!(
+                shared.merged.dists[c]
+                    .iter()
+                    .zip(&excl.merged.dists[c])
+                    .all(|(a, b)| a.to_bits() == b.to_bits()),
+                "center {c}: shared overlay diverged from the exclusive path"
+            );
+        }
+        assert_eq!(shared.merged.nearest, excl.merged.nearest);
+        assert_eq!(
+            shared.merged.checksum.to_bits(),
+            excl.merged.checksum.to_bits()
+        );
+        assert_eq!(shared.rack.total_cycles, excl.rack.total_cycles);
+        assert_eq!(shared.rack.link_bytes, excl.rack.link_bytes);
+        assert_eq!(shared.rack.shard_stats, excl.rack.shard_stats);
     }
 
     #[test]

@@ -339,6 +339,8 @@ pub const ENTRY: KernelEntry = KernelEntry {
     one_shot_usage: "HIST n seed",
     dense: false,
     write_free_queries: true,
+    overlay_queries: true,
+    coalesce_queries: false,
     bits_f32: false,
     flops: |n, _dims| 2.0 * n as f64,
     load: load_args,

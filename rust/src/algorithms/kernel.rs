@@ -98,12 +98,21 @@ pub trait Kernel: Sized + Send + Sync {
     const QUERY_ARITY: usize;
 
     /// Opt-in to the shared-read concurrent query path (DESIGN.md
-    /// §Serving): true only when the kernel's query is exactly "execute
-    /// the [`Kernel::query_plan`] programs, charge its `extra_cycles`,
-    /// pin `passes` to 0" with programs containing only `Compare` /
-    /// `ReduceCount` (the `prins verify` C01/C02 contracts), and the
-    /// shard output is reconstructible from the collected reductions
-    /// alone ([`Kernel::shared_output`]).
+    /// §Serving). Two ways to qualify:
+    ///
+    ///   * **compare-only** (hist, search): the query is exactly
+    ///     "execute the [`Kernel::query_plan`] programs, charge its
+    ///     `extra_cycles`, pin `passes` to 0" with programs containing
+    ///     only `Compare` / `ReduceCount` (the `prins verify` C01/C02
+    ///     contracts), and the shard output is reconstructible from the
+    ///     collected reductions alone ([`Kernel::shared_output`]);
+    ///   * **scratch-overlay** (ed, dp): the query's microprograms write
+    ///     *scratch* columns only — never the
+    ///     [`Kernel::resident_columns`] (the `prins verify` overlay
+    ///     C03 contract) — and the kernel implements
+    ///     [`Kernel::query_shard_overlay`], executing on a
+    ///     [`ReadCursor`] whose copy-on-write overlay makes those
+    ///     scratch writes cursor-local.
     const SHARED_READ: bool = false;
 
     /// Global logical rows of `data` (samples / vectors / matrix dim).
@@ -219,6 +228,30 @@ pub trait Kernel: Sized + Send + Sync {
         plan: &QueryPlan,
     ) -> Option<(Self::Output, ExecStats)> {
         let _ = (ctl, sm, range, params, plan);
+        None
+    }
+
+    /// Execute one query on a shared-read [`ReadCursor`] through its
+    /// scratch overlay — the concurrent twin of
+    /// [`Kernel::query_shard_planned`] for microcoded kernels whose
+    /// programs write only scratch columns. The implementation must
+    /// execute exactly `plan`'s programs via
+    /// [`ReadCursor::execute_overlay`] (readout through
+    /// [`ReadCursor::fetch_row_bits`]) and report
+    /// [`ReadCursor::stats_microcoded`], so output and stats are
+    /// bit-identical to the exclusive path on a fresh stats window.
+    /// `None` (the default) means the kernel has no overlay form; the
+    /// shared path then falls back to the collected-reductions route
+    /// ([`Kernel::shared_output`]).
+    fn query_shard_overlay(
+        &self,
+        cur: &mut ReadCursor<'_>,
+        sm: &StorageManager,
+        range: &Range<usize>,
+        params: &Self::Params,
+        plan: &QueryPlan,
+    ) -> Option<(Self::Output, ExecStats)> {
+        let _ = (cur, sm, range, params, plan);
         None
     }
 
@@ -481,7 +514,7 @@ impl<K: ShardMerge> Resident<K> {
         }
         let plan = &self.plan;
         let cache = &self.cache;
-        let runs = self.rack.read_shards(&self.shards, |_i, sh| {
+        let runs = self.rack.read_shards(&self.shards, |i, sh| {
             // cached plans are handed out as Arcs, so any number of
             // concurrent readers execute one synthesized plan at once
             let qp = match sh.kern.params_key(params) {
@@ -491,6 +524,14 @@ impl<K: ShardMerge> Resident<K> {
                 None => std::sync::Arc::new(sh.kern.query_plan(&sh.ctl.array, params)),
             };
             let mut cur = ReadCursor::new(&sh.ctl.array);
+            // microcoded kernels execute through the scratch overlay;
+            // compare-only kernels fall through to collected reductions
+            if let Some(r) =
+                sh.kern
+                    .query_shard_overlay(&mut cur, &sh.sm, &plan.ranges[i], params, &qp)
+            {
+                return Some(r);
+            }
             let mut collected = Vec::new();
             for prog in &qp.programs {
                 collected.extend(cur.execute_collect(prog).ok()?);
@@ -518,6 +559,86 @@ impl<K: ShardMerge> Resident<K> {
             rack: self.rack.finish(stats, &msgs),
             fidelity: None,
         })
+    }
+
+    /// Execute many single-operand queries **coalesced** on one cursor
+    /// pass per shard (DESIGN.md §Serving, cross-connection coalescing):
+    /// each member's (cached) solo plan runs sequentially on one
+    /// [`ReadCursor`] per shard inside a per-member stats window
+    /// ([`ReadCursor::stats_since`]), so every member's merged result and
+    /// [`RackStats`] are byte-identical to a solo
+    /// [`Resident::query_shared`] call. The second return value is the
+    /// modeled **batch device timeline** — the slowest shard's
+    /// Σ member program cycles plus ONE shared reduction-tree drain —
+    /// the in-array sweep the coalesced members share. At B ≥ 2 that
+    /// timeline divided by B sits strictly below the single-query
+    /// analytic floor whenever the kernel charges a drain (search).
+    /// `None` when the dataset is not shared-readable or the kernel has
+    /// no collected-reductions shared form (overlay kernels keep solo
+    /// dispatch).
+    pub fn query_multi_shared(&self, params_list: &[K::Params]) -> Option<(Vec<Sharded<K>>, u64)> {
+        if !self.shared_readable() || params_list.is_empty() {
+            return None;
+        }
+        let plan = &self.plan;
+        let cache = &self.cache;
+        let runs = self.rack.read_shards(&self.shards, |_i, sh| {
+            let mut cur = ReadCursor::new(&sh.ctl.array);
+            let mut members = Vec::with_capacity(params_list.len());
+            let mut program_cycles = 0u64;
+            let mut shared_drain = 0u64;
+            for params in params_list {
+                let qp = match sh.kern.params_key(params) {
+                    Some(key) => cache.get_or_insert(ArrayShape::of(&sh.ctl.array), &key, || {
+                        sh.kern.query_plan(&sh.ctl.array, params)
+                    }),
+                    None => std::sync::Arc::new(sh.kern.query_plan(&sh.ctl.array, params)),
+                };
+                let mark = cur.mark();
+                let mut collected = Vec::new();
+                for prog in &qp.programs {
+                    collected.extend(cur.execute_collect(prog).ok()?);
+                }
+                cur.add_cycles(qp.extra_cycles);
+                let out = sh.kern.shared_output(params, collected)?;
+                let stats = cur.stats_since(&mark);
+                program_cycles += stats.cycles - qp.extra_cycles;
+                shared_drain = shared_drain.max(qp.extra_cycles);
+                members.push((out, stats));
+            }
+            Some((members, program_cycles + shared_drain))
+        });
+        let mut per_shard = Vec::with_capacity(runs.len());
+        let mut batch_cycles = 0u64;
+        for r in runs {
+            let (m, t) = r?;
+            batch_cycles = batch_cycles.max(t);
+            per_shard.push(m);
+        }
+        let mut shard_iters: Vec<_> = per_shard.into_iter().map(|v| v.into_iter()).collect();
+        let mut out = Vec::with_capacity(params_list.len());
+        for params in params_list {
+            let mut outs = Vec::with_capacity(shard_iters.len());
+            let mut stats = Vec::with_capacity(shard_iters.len());
+            for it in &mut shard_iters {
+                let (o, s) = it.next().expect("member count uniform across shards");
+                outs.push(o);
+                stats.push(s);
+            }
+            let merged = K::merge(outs, plan, params);
+            let mut msgs = Vec::with_capacity(2 * plan.shards());
+            for (sh, rng) in self.shards.iter().zip(&plan.ranges) {
+                let (cmd, back) = sh.kern.query_msg_bytes(rng, params);
+                msgs.push(CMD_BYTES + cmd);
+                msgs.push(back);
+            }
+            out.push(Sharded {
+                merged,
+                rack: self.rack.finish(stats, &msgs),
+                fidelity: None,
+            });
+        }
+        Some((out, batch_cycles))
     }
 
     /// Per-shard wear reports over the resident arrays (`None` where
@@ -745,6 +866,15 @@ pub trait ResidentDyn: Send + Sync {
     /// write-free kernels. Errs when the dataset is not
     /// [`ResidentDyn::shared_readable`].
     fn query_args_shared(&self, args: &[&str]) -> Result<QueryOut>;
+    /// Many single-operand shared queries **coalesced** on one cursor
+    /// pass per shard ([`Resident::query_multi_shared`]): one argset
+    /// per member (the args after the dataset id). Per-member replies
+    /// are byte-identical to solo [`ResidentDyn::query_args_shared`]
+    /// calls; the second value is the modeled batch device timeline.
+    /// `None` when the dataset has no coalesceable shared form or any
+    /// member's parameters fail to parse — callers fall back to solo
+    /// dispatch.
+    fn query_args_coalesced(&self, argsets: &[Vec<String>]) -> Option<(Vec<QueryOut>, u64)>;
     /// Eviction wear score: hottest-row writes across shards (`None` =
     /// tracking off; see [`Resident::wear_score`]).
     fn wear_score(&self) -> Option<u32>;
@@ -842,6 +972,28 @@ impl<K: ShardMerge + 'static> ResidentDyn for Resident<K> {
         }
     }
 
+    fn query_args_coalesced(&self, argsets: &[Vec<String>]) -> Option<(Vec<QueryOut>, u64)> {
+        let mut params_list = Vec::with_capacity(argsets.len());
+        for args in argsets {
+            if args.len() != K::QUERY_ARITY {
+                return None;
+            }
+            let refs: Vec<&str> = args.iter().map(|s| s.as_str()).collect();
+            params_list.push(self.kernel().parse_params(&refs).ok()?);
+        }
+        let (runs, batch_cycles) = self.query_multi_shared(&params_list)?;
+        let outs = runs
+            .into_iter()
+            .map(|r| QueryOut {
+                fields: K::fields(&r.merged),
+                bits: Vec::new(),
+                rack: r.rack,
+                fidelity: r.fidelity,
+            })
+            .collect();
+        Some((outs, batch_cycles))
+    }
+
     fn wear_score(&self) -> Option<u32> {
         Resident::wear_score(self)
     }
@@ -882,6 +1034,7 @@ impl<K: ShardMerge + 'static> ResidentDyn for Resident<K> {
                 plan: sh.kern.query_plan(&sh.ctl.array, &params),
                 floor_cycles: sh.kern.query_floor_cycles(&sh.ctl.array, &params),
                 shape: ArrayShape::of(&sh.ctl.array),
+                resident_columns: sh.kern.resident_columns(),
             })
             .collect()
     }
@@ -912,6 +1065,18 @@ pub struct KernelEntry {
     /// Whether queries are compare-only (zero writes — asserted by the
     /// registry-driven wear gates for kernels that claim it).
     pub write_free_queries: bool,
+    /// Whether queries mutate only scratch columns outside
+    /// [`Kernel::resident_columns`], qualifying for the scratch-overlay
+    /// shared-read path. The C03 contract rule proves the claim
+    /// statically; `write_free_queries` kernels trivially satisfy it.
+    pub overlay_queries: bool,
+    /// Whether the server may merge compatible single-operand wire
+    /// queries from different connections into one coalesced sweep
+    /// ([`ResidentDyn::query_args_coalesced`]). Only meaningful for
+    /// kernels whose shared path goes through collected reductions —
+    /// overlay-dispatch kernels return `None` from the coalesced entry
+    /// point and must leave this `false`.
+    pub coalesce_queries: bool,
     /// Whether [`ShardMerge::bits`] encodes f32 words (`to_bits`) rather
     /// than exact integers — the fidelity bench decodes accordingly
     /// (relative error vs bit-exact match).
@@ -1017,5 +1182,41 @@ mod tests {
     fn float_matrix_slices_rows() {
         let m = FloatMatrix::new(vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0], 3, 2);
         assert_eq!(m.rows(&(1..3)), &[2.0, 3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn coalesced_shared_queries_match_solo_replies_and_beat_unshared_sweeps() {
+        let rack = PrinsRack::new(2);
+        let e = find_name("search").unwrap();
+        let res = (e.synth_load)(&rack, 24, 2, 7);
+        let sets: Vec<Vec<String>> = vec![
+            vec!["100".into(), "5000".into()],
+            vec!["100".into(), "5000".into()],
+            vec!["6000".into(), "40000".into()],
+        ];
+        let (outs, batch_cycles) = res.query_args_coalesced(&sets).expect("search coalesces");
+        assert_eq!(outs.len(), sets.len());
+        let mut max_solo = 0u64;
+        for (set, out) in sets.iter().zip(&outs) {
+            let refs: Vec<&str> = set.iter().map(|s| s.as_str()).collect();
+            let solo = res.query_args_shared(&refs).unwrap();
+            // every member reply is byte-identical to its solo shared query
+            assert_eq!(out.fields, solo.fields);
+            assert_eq!(out.rack.total_cycles, solo.rack.total_cycles);
+            assert_eq!(out.rack.max_shard_cycles, solo.rack.max_shard_cycles);
+            assert_eq!(out.rack.link_bytes, solo.rack.link_bytes);
+            assert_eq!(out.rack.energy_j.to_bits(), solo.rack.energy_j.to_bits());
+            assert!(out.fidelity.is_none());
+            max_solo = max_solo.max(solo.rack.max_shard_cycles);
+        }
+        assert!(batch_cycles > 0);
+        assert!(
+            batch_cycles < sets.len() as u64 * max_solo,
+            "coalesced batch timeline {batch_cycles} must beat {} unshared sweeps of {max_solo}",
+            sets.len()
+        );
+        // malformed member arity → the whole group falls back to solo dispatch
+        assert!(res.query_args_coalesced(&[vec!["100".into()]]).is_none());
+        assert!(res.query_args_coalesced(&[]).is_none());
     }
 }

@@ -476,6 +476,8 @@ pub const ENTRY: KernelEntry = KernelEntry {
     one_shot_usage: "SEARCH n seed lo hi",
     dense: false,
     write_free_queries: true,
+    overlay_queries: true,
+    coalesce_queries: true,
     bits_f32: false,
     flops: |n, _dims| n as f64, // one key comparison per resident row
     load: load_args,

@@ -590,6 +590,8 @@ pub const ENTRY: KernelEntry = KernelEntry {
     one_shot_usage: "SPMV n nnz seed",
     dense: true,
     write_free_queries: false,
+    overlay_queries: false,
+    coalesce_queries: false,
     bits_f32: true,
     flops: |n, _dims| 2.0 * (n * 8) as f64, // synth density: 8 nnz per row
     load: load_args,

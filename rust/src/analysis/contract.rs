@@ -1,4 +1,5 @@
-//! Kernel-contract rules: C01 write-freedom and C02 floor-consistency.
+//! Kernel-contract rules: C01 write-freedom, C02 floor-consistency and
+//! C03 overlay write-freedom.
 //!
 //! These rules operate on a whole [`QueryPlan`] — the synthesized set of
 //! microprograms one query would dispatch — rather than on a single
@@ -9,6 +10,7 @@
 
 use super::{Diagnostic, QueryPlan, RuleId, Severity};
 use crate::isa::Instr;
+use std::ops::Range;
 
 /// C01: prove a query plan never mutates the array. Any `Write` or
 /// `ClearColumns` in any program of the plan is an error. The driver
@@ -34,6 +36,65 @@ pub fn write_freedom(plan: &QueryPlan) -> Vec<Diagnostic> {
                         "program {pi} of a write-free query contains a column clear"
                     ),
                 )),
+                _ => {}
+            }
+        }
+    }
+    out
+}
+
+/// C03: prove an overlay-shared kernel's query plan confines every
+/// mutation to scratch columns. The scratch-overlay read cursor
+/// ([`crate::controller::read::ReadCursor`]) serves such kernels on the
+/// concurrent shared-read path by materializing written columns
+/// cursor-locally — sound only if no query program ever writes a column
+/// inside `resident`, the range holding stored data. A `Write` whose
+/// pattern touches a resident column, or a `ClearColumns` overlapping
+/// the range, is an error: that instruction's effect would have to
+/// escape the overlay to be correct. The driver applies this to kernels
+/// whose registry entry declares `overlay_queries = true`; writes kept
+/// outside `resident` are classified cursor-local and accepted.
+pub fn write_freedom_overlay(plan: &QueryPlan, resident: &Range<u16>) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for (pi, prog) in plan.programs.iter().enumerate() {
+        for (idx, instr) in prog.instrs.iter().enumerate() {
+            match instr {
+                Instr::Write(p) => {
+                    let stored: Vec<u16> = p
+                        .iter()
+                        .map(|&(col, _)| col)
+                        .filter(|col| resident.contains(col))
+                        .collect();
+                    if !stored.is_empty() {
+                        out.push(Diagnostic::at(
+                            RuleId::C03,
+                            Severity::Error,
+                            idx,
+                            format!(
+                                "program {pi} of an overlay query writes stored \
+                                 column(s) {stored:?} inside resident range \
+                                 {}..{}",
+                                resident.start, resident.end
+                            ),
+                        ));
+                    }
+                }
+                Instr::ClearColumns { base, width } => {
+                    let end = base.saturating_add(*width);
+                    if *width > 0 && *base < resident.end && end > resident.start {
+                        out.push(Diagnostic::at(
+                            RuleId::C03,
+                            Severity::Error,
+                            idx,
+                            format!(
+                                "program {pi} of an overlay query clears \
+                                 columns {base}..{end} overlapping resident \
+                                 range {}..{}",
+                                resident.start, resident.end
+                            ),
+                        ));
+                    }
+                }
                 _ => {}
             }
         }
@@ -95,6 +156,40 @@ mod tests {
         assert!(d.iter().all(|x| x.rule == RuleId::C01));
         assert!(d[0].message.contains("program 1"));
         assert_eq!(d[0].index, Some(0));
+        assert_eq!(d[1].index, Some(1));
+    }
+
+    #[test]
+    fn c03_accepts_scratch_confined_writes() {
+        // resident data in cols 0..8; the query writes/clears only 8..
+        let mut p = Program::new();
+        p.push(Instr::ClearColumns { base: 8, width: 4 });
+        p.push(Instr::Compare(vec![(0, true), (7, false)]));
+        p.push(Instr::Write(vec![(8, true), (11, false)]));
+        p.push(Instr::ReduceCount);
+        let plan = QueryPlan {
+            programs: vec![p],
+            extra_cycles: 0,
+        };
+        assert!(write_freedom_overlay(&plan, &(0..8)).is_empty());
+    }
+
+    #[test]
+    fn c03_flags_stored_column_writes_and_overlapping_clears() {
+        let mut p = Program::new();
+        p.push(Instr::Write(vec![(8, true), (3, false)])); // col 3 stored
+        p.push(Instr::ClearColumns { base: 6, width: 4 }); // 6..10 overlaps 0..8
+        p.push(Instr::ClearColumns { base: 0, width: 0 }); // zero-width: no columns
+        let plan = QueryPlan {
+            programs: vec![Program::new(), p],
+            extra_cycles: 0,
+        };
+        let d = write_freedom_overlay(&plan, &(0..8));
+        assert_eq!(d.len(), 2);
+        assert!(d.iter().all(|x| x.rule == RuleId::C03));
+        assert!(d[0].message.contains("program 1") && d[0].message.contains("[3]"));
+        assert_eq!(d[0].index, Some(0));
+        assert!(d[1].message.contains("6..10"));
         assert_eq!(d[1].index, Some(1));
     }
 

@@ -51,7 +51,8 @@ impl KernelReport {
 /// seeded dataset on a rack of the grid's shard count, synthesize every
 /// shard's query plan for [`QUERIES_PER_SHAPE`] seeded queries, and run
 /// W01/W02/T01/S01 on every program plus C01 (when the entry claims
-/// `write_free_queries`) and C02 on every plan.
+/// `write_free_queries`), C03 (when it claims `overlay_queries`) and
+/// C02 on every plan.
 pub fn verify_kernel(entry: &KernelEntry) -> KernelReport {
     let mut report = KernelReport {
         kernel: entry.name,
@@ -81,6 +82,13 @@ pub fn verify_kernel(entry: &KernelEntry) -> KernelReport {
                 }
                 if entry.write_free_queries {
                     for d in contract::write_freedom(&pq.plan) {
+                        report.diagnostics.push((ctx("plan"), d));
+                    }
+                }
+                if entry.overlay_queries {
+                    for d in
+                        contract::write_freedom_overlay(&pq.plan, &pq.resident_columns)
+                    {
                         report.diagnostics.push((ctx("plan"), d));
                     }
                 }

@@ -21,6 +21,7 @@
 //! | S01  | lint      | span classification agrees with an independent threaded-path whitelist |
 //! | C01  | contract  | `write_free_queries` kernels synthesize zero `Write`/`ClearColumns` |
 //! | C02  | contract  | the synthesized plan's static cycle estimate equals `query_floor_cycles` |
+//! | C03  | contract  | overlay-shared kernels confine every `Write`/`ClearColumns` to scratch columns outside the resident range |
 //! | F01  | config    | fault-model sanity: BERs in `[0, 1)`, finite wear coupling, stuck cells inside the array |
 //!
 //! Program-shape rules (W01/W02/T01/S01) run per [`Program`] via
@@ -42,6 +43,7 @@ pub use lattice::TagState;
 use crate::isa::Program;
 use crate::rcam::PrinsArray;
 use std::fmt;
+use std::ops::Range;
 
 /// Identifier of one analyzer rule (see the module-level table).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -63,6 +65,12 @@ pub enum RuleId {
     /// Floor consistency: the plan's static cycle estimate must equal
     /// the kernel's `query_floor_cycles` for the same shape.
     C02,
+    /// Overlay write freedom: kernels that serve the scratch-overlay
+    /// shared-read path (`overlay_queries = true`) must confine every
+    /// query-program `Write`/`ClearColumns` to scratch columns — any
+    /// mutation of a column inside the dataset's resident (stored) range
+    /// would escape the cursor-local overlay.
+    C03,
     /// Fault-model sanity: every bit-error rate must lie in `[0, 1)`,
     /// wear coupling must be finite and non-negative, and every explicit
     /// stuck-at cell must address a cell inside the array. Enforced by
@@ -81,6 +89,7 @@ impl RuleId {
             RuleId::S01 => "S01",
             RuleId::C01 => "C01",
             RuleId::C02 => "C02",
+            RuleId::C03 => "C03",
             RuleId::F01 => "F01",
         }
     }
@@ -215,9 +224,10 @@ impl QueryPlan {
     }
 }
 
-/// One shard's synthesized query plan together with the two facts the
+/// One shard's synthesized query plan together with the facts the
 /// contract rules compare it against: the kernel's own analytic floor
-/// for the identical shard, and the shard array's geometry.
+/// for the identical shard, the shard array's geometry, and the
+/// column range holding stored (resident) data.
 #[derive(Clone, Debug)]
 pub struct PlannedQuery {
     /// The synthesized plan.
@@ -226,6 +236,9 @@ pub struct PlannedQuery {
     pub floor_cycles: u64,
     /// The shard array's geometry.
     pub shape: ArrayShape,
+    /// `Kernel::resident_columns` — the stored-data column range the
+    /// C03 overlay contract proves query writes stay out of.
+    pub resident_columns: Range<u16>,
 }
 
 /// Run every program-shape rule (W01, W02, T01, S01) over one program.

@@ -11,7 +11,7 @@ use crate::isa::{Instr, Program};
 use crate::rcam::{DeviceModel, EnergyLedger, PrinsArray};
 
 /// Execution statistics for one program/kernel invocation.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct ExecStats {
     /// Modeled device cycles elapsed in the stats window.
     pub cycles: u64,

@@ -5,13 +5,35 @@
 //! rows at once.
 //!
 //! The cursor privately owns everything a query would otherwise mutate:
-//! per-module tag registers, a local cycle counter, and a local energy
-//! ledger. Tag computation reuses the exact word-blocked match function
-//! behind `RcamModule::compare`, and every cycle/ledger charge mirrors
-//! the mutating path counter-for-counter, so collected outputs and
-//! windowed [`ExecStats`] are bit-identical to a [`Controller`] running
-//! the same programs on a fresh stats window — while the primary array's
-//! cycles, ledger, tags, and wear counters stay untouched.
+//! per-module tag registers, a local cycle counter, a local energy
+//! ledger, and — for microcoded kernels — a copy-on-write **scratch
+//! overlay** of bit-column planes. Tag computation reuses the exact
+//! word-blocked match function behind `RcamModule::compare`, and every
+//! cycle/ledger charge mirrors the mutating path counter-for-counter, so
+//! collected outputs and windowed [`ExecStats`] are bit-identical to a
+//! [`Controller`] running the same programs on a fresh stats window —
+//! while the primary array's cycles, ledger, tags, wear counters and
+//! stored planes stay untouched.
+//!
+//! Two execution surfaces, two contracts:
+//!
+//!   * [`ReadCursor::execute_collect`] — strictly read-only
+//!     (`Compare`/`ReduceCount` only); anything else is refused. This is
+//!     the path of the compare-only kernels (hist, search).
+//!   * [`ReadCursor::execute_overlay`] — additionally accepts the
+//!     data-parallel mutators (`Write`, `ClearColumns`, `SetTagsAll`),
+//!     landing every written plane in the cursor's private overlay
+//!     instead of the shared array. This is the path of the microcoded
+//!     fp kernels (ed, dp), whose queries write only *scratch* columns:
+//!     the overlay makes those writes cursor-local, so any number of
+//!     concurrent overlay cursors can run over one resident dataset at
+//!     once. The `prins verify` overlay contract (rule C03) proves
+//!     statically that an overlay kernel's plan never writes a *stored*
+//!     column, which is what makes overlay outputs equal exclusive
+//!     outputs: queries never read a scratch column before writing it.
+//!     Overlay writes charge the exact mutating-path cycles and ledger
+//!     events but no wear — wear counters stay frozen at the load
+//!     anchor, and wear is never part of a wire reply.
 //!
 //! [`Controller`]: crate::controller::Controller
 
@@ -19,7 +41,8 @@ use super::ExecStats;
 use crate::analysis::{ArrayShape, QueryPlan};
 use crate::error::{bail, Result};
 use crate::isa::{Instr, Program};
-use crate::rcam::device::{CYCLES_COMPARE, CYCLES_REDUCE_ISSUE};
+use crate::rcam::bitvec::WORD_BITS;
+use crate::rcam::device::{CYCLES_COMPARE, CYCLES_REDUCE_ISSUE, CYCLES_TAG_OP, CYCLES_WRITE};
 use crate::rcam::module::compare_tags_into;
 use crate::rcam::{BitVec, EnergyLedger, Pattern, PrinsArray};
 use std::collections::HashMap;
@@ -104,26 +127,27 @@ impl ProgramCache {
 }
 
 /// One concurrent reader's execution context over a borrowed array. See
-/// the module doc for the bit-equality contract with [`Controller`].
-///
-/// Only the two read-only instructions a write-free query plan may
-/// contain (`prins verify` rule C01) are executable: `Compare` and
-/// `ReduceCount`. Anything else is refused with an error — a mutating
-/// instruction here would have to touch the array every other reader is
-/// using.
+/// the module doc for the bit-equality contract with [`Controller`] and
+/// for the two execution surfaces (read-only vs scratch-overlay).
 ///
 /// [`Controller`]: crate::controller::Controller
 pub struct ReadCursor<'a> {
     array: &'a PrinsArray,
     /// Cursor-private tag registers, one per module.
     tags: Vec<BitVec>,
+    /// Copy-on-write scratch planes, one map per module: bit-column →
+    /// cursor-private plane, cloned from storage on first overlay write.
+    /// Compares and readout resolve overlay-first, so a query sees its
+    /// own scratch writes while every other reader sees the untouched
+    /// stored planes.
+    overlay: Vec<HashMap<u16, BitVec>>,
     cycles: u64,
     ledger: EnergyLedger,
 }
 
 impl<'a> ReadCursor<'a> {
-    /// A cursor over `array` with cleared private tags and a zeroed
-    /// stats window.
+    /// A cursor over `array` with cleared private tags, an empty scratch
+    /// overlay and a zeroed stats window.
     pub fn new(array: &'a PrinsArray) -> Self {
         ReadCursor {
             array,
@@ -132,20 +156,110 @@ impl<'a> ReadCursor<'a> {
                 .iter()
                 .map(|m| BitVec::zeros(m.rows()))
                 .collect(),
+            overlay: vec![HashMap::new(); array.n_modules()],
             cycles: 0,
             ledger: EnergyLedger::default(),
         }
     }
 
     /// Compare: identical tags and charges to `PrinsArray::compare`,
-    /// landed in the cursor instead of the array.
+    /// landed in the cursor instead of the array. Pattern columns the
+    /// overlay has materialized are matched against the cursor-private
+    /// planes; everything else reads the shared stored planes.
     pub fn compare(&mut self, pattern: &Pattern) {
-        for (m, tags) in self.array.modules().iter().zip(&mut self.tags) {
-            compare_tags_into(m.storage(), pattern, tags);
+        for (mi, (m, tags)) in self.array.modules().iter().zip(&mut self.tags).enumerate() {
+            let ov = &self.overlay[mi];
+            if ov.is_empty() {
+                compare_tags_into(m.storage(), pattern, tags);
+            } else {
+                // overlay-resolving twin of `compare_tags_into`: same
+                // word-blocked pass, each plane slice picked
+                // overlay-first
+                let nwords = tags.words().len();
+                let tail = m.rows() % WORD_BITS;
+                let tail_mask = if tail == 0 { u64::MAX } else { (1u64 << tail) - 1 };
+                let planes: Vec<&[u64]> = pattern
+                    .iter()
+                    .map(|&(col, _)| match ov.get(&col) {
+                        Some(p) => p.words(),
+                        None => m.storage().plane(col as usize).words(),
+                    })
+                    .collect();
+                let tw = tags.words_mut();
+                for w in 0..nwords {
+                    let mut t = if w + 1 == nwords { tail_mask } else { u64::MAX };
+                    for (&(_, bit), plane) in pattern.iter().zip(&planes) {
+                        let p = plane[w];
+                        t &= if bit { p } else { !p };
+                    }
+                    tw[w] = t;
+                }
+            }
             self.ledger.n_compare += 1;
             self.ledger.compare_bit_events += (m.width() * m.rows()) as u128;
         }
         self.cycles += CYCLES_COMPARE;
+    }
+
+    /// Overlay write: identical tag-gated plane updates and charges to
+    /// `PrinsArray::write`, landed in the cursor's private overlay
+    /// instead of the shared stored planes. Target columns materialize
+    /// copy-on-write (cloned from storage on first touch). No wear is
+    /// recorded — the shared array's wear counters stay frozen.
+    pub fn write(&mut self, pattern: &Pattern) {
+        for (mi, m) in self.array.modules().iter().enumerate() {
+            let ov = &mut self.overlay[mi];
+            for &(col, _) in pattern {
+                ov.entry(col)
+                    .or_insert_with(|| m.storage().plane(col as usize).clone());
+            }
+            let tags = &self.tags[mi];
+            let mut tagged: u64 = 0;
+            for (w, &t) in tags.words().iter().enumerate() {
+                if t == 0 {
+                    continue;
+                }
+                tagged += t.count_ones() as u64;
+                for &(col, bit) in pattern {
+                    let pw = &mut ov.get_mut(&col).expect("materialized above").words_mut()[w];
+                    if bit {
+                        *pw |= t;
+                    } else {
+                        *pw &= !t;
+                    }
+                }
+            }
+            self.ledger.n_write += 1;
+            self.ledger.write_bit_events += (pattern.len() as u128) * (tagged as u128);
+        }
+        self.cycles += CYCLES_WRITE;
+    }
+
+    /// Overlay bulk clear: identical charges to
+    /// `PrinsArray::clear_columns`, landing all-zero planes in the
+    /// overlay (no storage clone needed — the result is all zeros
+    /// regardless of what was stored).
+    pub fn clear_columns(&mut self, base: u16, width: u16) {
+        for (mi, m) in self.array.modules().iter().enumerate() {
+            let rows = m.rows();
+            let ov = &mut self.overlay[mi];
+            for col in base..base + width {
+                ov.insert(col, BitVec::zeros(rows));
+            }
+            self.ledger.n_write += 1;
+            self.ledger.write_bit_events += (width as u128) * (rows as u128);
+        }
+        self.cycles += CYCLES_WRITE;
+    }
+
+    /// Tag every row in the cursor's private tag registers: identical
+    /// charges to `PrinsArray::set_tags_all`.
+    pub fn set_tags_all(&mut self) {
+        for tags in &mut self.tags {
+            tags.fill(true);
+            self.ledger.n_tag_op += 1;
+        }
+        self.cycles += CYCLES_TAG_OP;
     }
 
     /// Reduction-tree count over the cursor's private tags: identical
@@ -179,6 +293,56 @@ impl<'a> ReadCursor<'a> {
         Ok(out)
     }
 
+    /// Execute a microcoded program through the scratch overlay: the
+    /// data-parallel instruction set (`Compare`, `Write`, `SetTagsAll`,
+    /// `ClearColumns`) plus `ReduceCount`, with every write landing in
+    /// the cursor's private overlay. Reduction results are collected in
+    /// program order. Serializing instructions with no cursor-local form
+    /// (`Read`, `IfMatch`, `FirstMatch`, `ReduceField`, tag shifts) are
+    /// refused — the fp microcode pipeline never emits them, and the
+    /// `prins verify` overlay contract proves plans clean before they
+    /// reach a cursor.
+    pub fn execute_overlay(&mut self, prog: &Program) -> Result<Vec<u64>> {
+        let mut out = Vec::new();
+        for instr in &prog.instrs {
+            match instr {
+                Instr::Compare(p) => self.compare(p),
+                Instr::Write(p) => self.write(p),
+                Instr::SetTagsAll => self.set_tags_all(),
+                Instr::ClearColumns { base, width } => self.clear_columns(*base, *width),
+                Instr::ReduceCount => out.push(self.reduce_count()),
+                other => bail!(
+                    "overlay cursor refuses instruction {other:?} (no cursor-local form)"
+                ),
+            }
+        }
+        Ok(out)
+    }
+
+    /// Uncharged row-field readout, overlay-first: bit `i` of the result
+    /// is column `base + i` of `row` — the cursor's private plane where
+    /// the overlay has one, the shared stored plane otherwise. The
+    /// shared-read twin of `PrinsArray::fetch_row_bits` (readout slicing
+    /// of microcoded query results).
+    pub fn fetch_row_bits(&self, row: usize, base: usize, width: usize) -> u64 {
+        let rpm = self.array.total_rows() / self.array.n_modules();
+        let (mi, r) = (row / rpm, row % rpm);
+        let m = &self.array.modules()[mi];
+        let ov = &self.overlay[mi];
+        let mut v = 0u64;
+        for i in 0..width {
+            let col = (base + i) as u16;
+            let bit = match ov.get(&col) {
+                Some(plane) => plane.get(r),
+                None => m.storage().plane(col as usize).get(r),
+            };
+            if bit {
+                v |= 1 << i;
+            }
+        }
+        v
+    }
+
     /// Charge cycles outside any program (pipelined reduction-tree
     /// drains — a query plan's `extra_cycles`).
     pub fn add_cycles(&mut self, n: u64) {
@@ -190,13 +354,52 @@ impl<'a> ReadCursor<'a> {
     /// compare+write microcode passes).
     pub fn stats(&self) -> ExecStats {
         ExecStats {
+            passes: 0,
+            ..self.stats_microcoded()
+        }
+    }
+
+    /// Snapshot of the cursor's cycle/ledger counters — the window
+    /// anchor for [`ReadCursor::stats_since`].
+    pub fn mark(&self) -> (u64, EnergyLedger) {
+        (self.cycles, self.ledger.clone())
+    }
+
+    /// Stats accumulated since `mark`, in the [`ReadCursor::stats`]
+    /// shape (`passes` pinned to 0). The charge counters are purely
+    /// additive, so a query executed mid-cursor reports through this
+    /// window exactly what it would report on a fresh cursor — the
+    /// invariant the cross-connection query coalescer relies on to keep
+    /// per-member replies byte-identical to solo dispatch.
+    pub fn stats_since(&self, mark: &(u64, EnergyLedger)) -> ExecStats {
+        let ledger = self.ledger.minus(&mark.1);
+        ExecStats {
+            cycles: self.cycles - mark.0,
+            instructions: ledger.n_compare
+                + ledger.n_write
+                + ledger.n_read
+                + ledger.n_reduce
+                + ledger.n_tag_op,
+            passes: 0,
+            ledger,
+        }
+    }
+
+    /// The cursor's windowed stats for the microcoded overlay path:
+    /// identical to [`ReadCursor::stats`] except `passes` counts
+    /// compares, exactly as `ExecStats::since` derives it for the
+    /// mutating [`Controller`] path the fp kernels use.
+    ///
+    /// [`Controller`]: crate::controller::Controller
+    pub fn stats_microcoded(&self) -> ExecStats {
+        ExecStats {
             cycles: self.cycles,
             instructions: self.ledger.n_compare
                 + self.ledger.n_write
                 + self.ledger.n_read
                 + self.ledger.n_reduce
                 + self.ledger.n_tag_op,
-            passes: 0,
+            passes: self.ledger.n_compare,
             ledger: self.ledger.clone(),
         }
     }
@@ -263,6 +466,135 @@ mod tests {
         assert_eq!(array.ledger(), ledger0);
         for (m, t0) in array.modules().iter().zip(&tags0) {
             assert_eq!(m.tags(), t0, "array tags mutated by a read cursor");
+        }
+    }
+
+    /// A microcoded-style scratch program over the 16-bit test rows:
+    /// stored data in columns 0..8, scratch in 8..16. Clears scratch,
+    /// broadcasts into it, tag-gates more writes off stored bits, then
+    /// compares over a stored/scratch mix and reduces — every overlay
+    /// instruction class, with results depending on the written values.
+    fn scratch_program() -> Program {
+        let stored = Field::new(0, 8);
+        let scratch = Field::new(8, 8);
+        let mut p = Program::new();
+        p.clear_field(scratch);
+        p.push(Instr::SetTagsAll);
+        p.write_field(scratch.slice(0, 4), 0x5);
+        p.compare_field(stored.slice(0, 2), 1);
+        p.write_field(scratch.slice(4, 4), 0xC);
+        let mut probe = scratch.pattern(0xC5);
+        probe.push((stored.col(0), true));
+        p.push(Instr::Compare(probe));
+        p.push(Instr::ReduceCount);
+        p
+    }
+
+    #[test]
+    fn overlay_matches_controller_bit_for_bit() {
+        for (m, rpm) in [(1usize, 300usize), (3, 100)] {
+            let mut array = loaded_array(m, rpm);
+            // dirty the scratch columns so equality cannot depend on a
+            // pristine all-zero scratch state
+            for r in 0..array.total_rows() {
+                array.load_row_bits(r, 8, 8, (r % 7) as u64);
+            }
+            let prog = scratch_program();
+            // reference: the mutating controller path on a fresh window
+            let mut ctl = Controller::new(array.clone());
+            ctl.begin_stats();
+            let want = ctl.execute_collect(&prog);
+            let want_stats = ctl.stats();
+            let want_rows: Vec<u64> = (0..array.total_rows())
+                .map(|r| ctl.array.fetch_row_bits(r, 8, 8))
+                .collect();
+            // overlay path over the shared borrow
+            let mut cur = ReadCursor::new(&array);
+            let got = cur.execute_overlay(&prog).unwrap();
+            let stats = cur.stats_microcoded();
+            assert_eq!(got, want, "{m}x{rpm}: collected outputs");
+            assert_eq!(stats.cycles, want_stats.cycles, "{m}x{rpm}: cycles");
+            assert_eq!(stats.ledger, want_stats.ledger, "{m}x{rpm}: ledger");
+            assert_eq!(stats.instructions, want_stats.instructions);
+            assert_eq!(stats.passes, want_stats.passes, "{m}x{rpm}: passes");
+            for (r, want_bits) in want_rows.iter().enumerate() {
+                assert_eq!(
+                    cur.fetch_row_bits(r, 8, 8),
+                    *want_bits,
+                    "{m}x{rpm}: overlay readout of row {r}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn overlay_leaves_array_wear_and_planes_untouched() {
+        let mut array = loaded_array(2, 64);
+        array.enable_wear_tracking();
+        let cycles0 = array.cycles;
+        let ledger0 = array.ledger();
+        let planes0: Vec<u64> = (0..array.total_rows())
+            .map(|r| array.fetch_row_bits(r, 0, 16))
+            .collect();
+        let wear0: Vec<_> = array
+            .modules()
+            .iter()
+            .map(|m| m.wear_counters().unwrap().to_vec())
+            .collect();
+        let mut cur = ReadCursor::new(&array);
+        cur.execute_overlay(&scratch_program()).unwrap();
+        assert_eq!(array.cycles, cycles0);
+        assert_eq!(array.ledger(), ledger0);
+        for (r, p0) in planes0.iter().enumerate() {
+            assert_eq!(array.fetch_row_bits(r, 0, 16), *p0, "stored row {r} mutated");
+        }
+        for (m, w0) in array.modules().iter().zip(&wear0) {
+            assert_eq!(
+                m.wear_counters().unwrap(),
+                &w0[..],
+                "overlay writes must not advance wear counters"
+            );
+        }
+    }
+
+    #[test]
+    fn concurrent_overlay_cursors_agree() {
+        let array = loaded_array(2, 128);
+        let prog = scratch_program();
+        let runs: Vec<(Vec<u64>, Vec<u64>)> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..8)
+                .map(|_| {
+                    s.spawn(|| {
+                        let mut cur = ReadCursor::new(&array);
+                        let counts = cur.execute_overlay(&prog).unwrap();
+                        let rows = (0..array.total_rows())
+                            .map(|r| cur.fetch_row_bits(r, 8, 8))
+                            .collect();
+                        (counts, rows)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for r in &runs[1..] {
+            assert_eq!(r, &runs[0]);
+        }
+    }
+
+    #[test]
+    fn overlay_refuses_serializing_instructions() {
+        let array = loaded_array(1, 32);
+        for bad in [
+            Instr::Read { base: 0, width: 8 },
+            Instr::IfMatch,
+            Instr::FirstMatch,
+            Instr::ReduceField { col: 0 },
+            Instr::ShiftTagsUp(1),
+        ] {
+            let mut p = Program::new();
+            p.push(bad);
+            let mut cur = ReadCursor::new(&array);
+            assert!(cur.execute_overlay(&p).is_err());
         }
     }
 

@@ -20,15 +20,39 @@
 //!
 //! **Resident datasets** (load-once / query-many, DESIGN.md §Resident
 //! datasets): `LOAD <kind> ...` synthesizes a dataset server-side, loads
-//! it onto a rack resident in the session, and returns a dataset id; the
-//! kernel verbs' short (dataset-id) forms then query the resident data
-//! without reloading — repeated queries charge only query cycles. The
-//! table holds at most [`MAX_DATASETS`] entries; a `LOAD` into a full
-//! table evicts the least-recently-used dataset among the coldest-wear
-//! candidates and reports it in a trailing `evicted=` field. `DATASETS`
-//! lists the session's registry, `DROP <id>` frees one entry. Sessions
-//! are isolated: ids, shard counts, and resident data are
-//! per-connection and die with it.
+//! it onto a rack, and returns a dataset id; the kernel verbs' short
+//! (dataset-id) forms then query the resident data without reloading —
+//! repeated queries charge only query cycles. The table holds at most
+//! [`MAX_DATASETS`] entries; a `LOAD` into a full table evicts the
+//! least-recently-used dataset among the coldest-wear candidates and
+//! reports it in a trailing `evicted=` field. `DATASETS` lists the
+//! registry, `DROP <id>` frees one entry.
+//!
+//! **Cross-session sharing** (docs/PROTOCOL.md §Sharing): resident
+//! datasets live in one server-wide [`Namespace`] every connection
+//! shares — ids are globally monotonic, any connection may query, wear,
+//! or `DROP` a dataset another connection loaded, and the
+//! compiled-program cache and eviction recency stamps are shared too.
+//! Admission is two-level and strictly FIFO ([`FairGate`]): dataset
+//! queries, `DATASETS` and `STATS` enter as concurrent *shared readers*
+//! of the namespace, while `LOAD`, `DROP` and `FAULTS` changes take the
+//! global gate exclusively — fencing every connection at once and
+//! bumping the `epoch=` stamp `DATASETS` reports — and a per-dataset
+//! gate orders shared readers around exclusive queries of that dataset.
+//! Tickets grant in draw order with reader batches bounded by
+//! [`READER_BATCH`], so neither side can starve the other. Shard counts
+//! (`RACK`) and the reply stream remain per-connection.
+//!
+//! **Cross-connection query coalescing**: each multiplexer sweep merges
+//! compatible pending single-operand queries — same resident dataset,
+//! kernel opted into `coalesce_queries` (`SEARCH`) — from any mix of
+//! connections into one batched in-array sweep of at most
+//! [`COALESCE_MAX`] members, scattering per-query replies back through
+//! each connection's reorder buffer. Replies stay byte-identical to
+//! solo dispatch (pinned by tests); only the modeled device time drops,
+//! because members share one array traversal and one reduction-tree
+//! drain. `STATS <id>` reports the accumulated
+//! `coal_batches=`/`coal_members=`/`coal_cycles=` counters.
 //!
 //! Kernels with a **batched query form** (docs/PROTOCOL.md §Batched
 //! queries) accept a longer dataset-id line — `SEARCH id B lo1 hi1 …`
@@ -44,9 +68,10 @@
 //! simulations. Clients may pipeline many request lines on one
 //! connection; replies always return in request order. Write-free
 //! resident queries (kernels opting into `Kernel::SHARED_READ`) are
-//! admitted as concurrent *shared readers* over the same resident rows;
-//! loads, drops, and every other verb take the session exclusively.
-//! (std::net only; the vendored crate set has no tokio — documented in
+//! admitted as concurrent shared readers over the same resident rows —
+//! across connections, not just within one — while loads, drops, and
+//! every other verb run exclusively at the matching scope. (std::net
+//! only; the vendored crate set has no tokio — documented in
 //! Cargo.toml.)
 
 use super::rack::{PrinsRack, RackStats};
@@ -59,7 +84,7 @@ use std::io::{ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 /// Multiplexer idle nap: when a readiness sweep moved no bytes, framed
@@ -155,8 +180,11 @@ impl Server {
         }
         drop(done_tx); // workers hold the senders, the mux the receiver
         let stop2 = stop.clone();
+        // one namespace for the whole server: every accepted connection
+        // shares this resident-dataset table, gate, and fault model
+        let ns = Arc::new(Namespace::default());
         let mux = std::thread::spawn(move || {
-            Mux::new(listener, stop2, opts, job_tx, done_rx).run();
+            Mux::new(listener, stop2, opts, job_tx, done_rx, ns).run();
         });
         Ok(Server {
             addr,
@@ -195,13 +223,32 @@ impl Drop for Server {
 // Worker pool: simulation happens here, off the multiplexer thread.
 // ---------------------------------------------------------------------
 
-/// One request line handed to the worker pool.
-struct Job {
+/// Work handed to the pool: one request line, or one coalesced group.
+enum Job {
+    /// A single request line from one connection.
+    One {
+        conn: u64,
+        seq: u64,
+        line: String,
+        sess: Arc<RwLock<Session>>,
+        shared: bool,
+    },
+    /// A cross-connection coalesced batch: ≥ 2 compatible single-operand
+    /// query lines on one dataset, executed as one in-array sweep. Every
+    /// member gets its own [`Done`] so replies scatter back to each
+    /// connection's reorder buffer.
+    Coalesced {
+        ns: Arc<Namespace>,
+        dataset: u64,
+        members: Vec<CoalMember>,
+    },
+}
+
+/// One line of a coalesced batch and where its reply belongs.
+struct CoalMember {
     conn: u64,
     seq: u64,
     line: String,
-    sess: Arc<RwLock<Session>>,
-    shared: bool,
 }
 
 /// A finished request on its way back to the multiplexer.
@@ -229,34 +276,92 @@ fn worker_loop(rx: Arc<Mutex<Receiver<Job>>>, tx: Sender<Done>, backend: ExecBac
         let Ok(job) = job else {
             return; // server shut down: job sender dropped
         };
-        let outcome = run_job(&job, backend);
-        let done = Done {
-            conn: job.conn,
-            seq: job.seq,
-            shared: job.shared,
-            outcome,
-        };
-        if tx.send(done).is_err() {
-            return; // multiplexer gone
+        match job {
+            Job::One {
+                conn,
+                seq,
+                line,
+                sess,
+                shared,
+            } => {
+                let outcome = run_one(&line, &sess, shared, backend);
+                if tx.send(Done { conn, seq, shared, outcome }).is_err() {
+                    return; // multiplexer gone
+                }
+            }
+            Job::Coalesced { ns, dataset, members } => {
+                run_coalesced(&ns, dataset, &members, &tx);
+            }
         }
     }
 }
 
-fn run_job(job: &Job, backend: ExecBackend) -> Outcome {
-    if job.shared {
+fn run_one(line: &str, sess: &Arc<RwLock<Session>>, shared: bool, backend: ExecBackend) -> Outcome {
+    if shared {
         // read lock: concurrent with every other shared reader of this
-        // session; the admission rule keeps writers out while we run
-        let sess = job.sess.read().unwrap();
-        match dispatch_shared(job.line.trim(), &sess) {
+        // session; the admission rule keeps the connection's exclusive
+        // requests out while we run, the namespace gate everyone else's
+        let sess = sess.read().unwrap();
+        match dispatch_shared(line.trim(), &sess.ns) {
             Ok(r) => Outcome::Line(r),
             Err(e) => Outcome::Line(format!("ERR {e}")),
         }
     } else {
-        let mut sess = job.sess.write().unwrap();
-        match dispatch(job.line.trim(), backend, &mut sess) {
+        let mut sess = sess.write().unwrap();
+        match dispatch(line.trim(), backend, &mut sess) {
             Ok(Some(r)) => Outcome::Line(r),
             Ok(None) => Outcome::Bye,
             Err(e) => Outcome::Line(format!("ERR {e}")),
+        }
+    }
+}
+
+/// Execute one coalesced group as a single in-array sweep
+/// ([`crate::algorithms::kernel::ResidentDyn::query_args_coalesced`]).
+/// Per-member replies are byte-identical to solo shared dispatch; only
+/// the modeled device time (recorded in the slot's `coal_cycles`
+/// counter) shrinks, because members share one traversal and one
+/// reduction drain. Any reason the batch cannot run — dataset dropped
+/// between the mux sweep and now, kernel without a coalesced form,
+/// member parse failure — falls back to per-member [`dispatch_shared`],
+/// which reproduces exactly the reply (or error) the solo path would
+/// have produced.
+fn run_coalesced(ns: &Namespace, dataset: u64, members: &[CoalMember], tx: &Sender<Done>) {
+    let coalesced: Option<Vec<String>> = (|| {
+        let _admit = ns.gate.lock_shared();
+        let slot = slot_of(ns, dataset)?;
+        let _slot_admit = slot.gate.lock_shared();
+        let res = slot.res.read().unwrap();
+        // verb + dataset id off, operand tokens stay
+        let argsets: Vec<Vec<String>> = members
+            .iter()
+            .map(|m| m.line.split_whitespace().skip(2).map(String::from).collect())
+            .collect();
+        let (outs, batch_cycles) = res.query_args_coalesced(&argsets)?;
+        for _ in members {
+            slot.last_used.store(ns.tick(), Ordering::Relaxed);
+        }
+        slot.coal_batches.fetch_add(1, Ordering::Relaxed);
+        slot.coal_members.fetch_add(members.len() as u64, Ordering::Relaxed);
+        slot.coal_cycles.fetch_add(batch_cycles, Ordering::Relaxed);
+        Some(outs.iter().map(|o| query_ok(o, dataset)).collect())
+    })();
+    for (i, m) in members.iter().enumerate() {
+        let line = match &coalesced {
+            Some(lines) => lines[i].clone(),
+            None => match dispatch_shared(m.line.trim(), ns) {
+                Ok(r) => r,
+                Err(e) => format!("ERR {e}"),
+            },
+        };
+        let done = Done {
+            conn: m.conn,
+            seq: m.seq,
+            shared: true,
+            outcome: Outcome::Line(line),
+        };
+        if tx.send(done).is_err() {
+            return; // multiplexer gone
         }
     }
 }
@@ -296,10 +401,10 @@ struct Conn {
 }
 
 impl Conn {
-    fn new(stream: TcpStream) -> Conn {
+    fn new(stream: TcpStream, ns: Arc<Namespace>) -> Conn {
         Conn {
             stream,
-            sess: Arc::new(RwLock::new(Session::default())),
+            sess: Arc::new(RwLock::new(Session::with_ns(ns))),
             inbuf: Vec::new(),
             outbuf: Vec::new(),
             pending: VecDeque::new(),
@@ -324,6 +429,8 @@ struct Mux {
     done_rx: Receiver<Done>,
     conns: BTreeMap<u64, Conn>,
     next_conn: u64,
+    /// The server-wide namespace every accepted connection shares.
+    ns: Arc<Namespace>,
 }
 
 impl Mux {
@@ -333,6 +440,7 @@ impl Mux {
         opts: ServeOptions,
         job_tx: Sender<Job>,
         done_rx: Receiver<Done>,
+        ns: Arc<Namespace>,
     ) -> Mux {
         Mux {
             listener,
@@ -342,6 +450,7 @@ impl Mux {
             done_rx,
             conns: BTreeMap::new(),
             next_conn: 0,
+            ns,
         }
     }
 
@@ -350,8 +459,16 @@ impl Mux {
             let mut busy = self.accept_new();
             busy |= self.drain_completions();
             let ids: Vec<u64> = self.conns.keys().copied().collect();
-            for id in ids {
-                busy |= self.service_conn(id);
+            // ingest every connection first (frame lines, emit finished
+            // replies), THEN coalesce across the freshly framed queues,
+            // THEN admit the rest solo — so compatible queries arriving
+            // in one sweep can merge instead of racing out one by one
+            for &id in &ids {
+                busy |= self.ingest_conn(id);
+            }
+            busy |= self.coalesce_pass();
+            for &id in &ids {
+                busy |= self.admit_flush_conn(id);
             }
             self.conns.retain(|_, c| !c.dead);
             if !busy {
@@ -371,7 +488,7 @@ impl Mux {
                     }
                     let id = self.next_conn;
                     self.next_conn += 1;
-                    self.conns.insert(id, Conn::new(stream));
+                    self.conns.insert(id, Conn::new(stream, self.ns.clone()));
                 }
                 Err(e) if e.kind() == ErrorKind::WouldBlock => break,
                 Err(_) => break,
@@ -397,10 +514,10 @@ impl Mux {
         busy
     }
 
-    /// One readiness sweep over a single connection: pull bytes, frame
-    /// lines, emit completed replies in order, admit pending requests,
-    /// flush output. Returns whether anything moved.
-    fn service_conn(&mut self, id: u64) -> bool {
+    /// Ingest half of a connection's readiness sweep: pull bytes, frame
+    /// lines into the pending FIFO, emit completed replies in order.
+    /// Returns whether anything moved.
+    fn ingest_conn(&mut self, id: u64) -> bool {
         let Some(c) = self.conns.get_mut(&id) else {
             return false;
         };
@@ -467,6 +584,99 @@ impl Mux {
                 }
             }
         }
+        busy
+    }
+
+    /// One cross-connection coalescing sweep (docs/PROTOCOL.md
+    /// §Sharing): scan every live connection's pending FIFO front for a
+    /// run of coalescible single-operand queries on one dataset, group
+    /// the runs by dataset across connections, and hand every group of
+    /// ≥ 2 members to the pool as one [`Job::Coalesced`] batch. Each
+    /// connection contributes only its longest *front* run on a single
+    /// dataset, so the pops below stay contiguous and per-connection
+    /// reply order is preserved by the reorder buffer. Groups of one are
+    /// left to the solo path — coalescing must never slow a lone query.
+    fn coalesce_pass(&mut self) -> bool {
+        if !self.opts.shared_read {
+            return false;
+        }
+        // dataset id -> [(conn id, lines to take off that conn's front)]
+        let mut groups: BTreeMap<u64, Vec<(u64, usize)>> = BTreeMap::new();
+        for (&cid, c) in &self.conns {
+            if c.bye || c.dead || c.exclusive_inflight {
+                continue;
+            }
+            // a writer holds the session only during our own exclusive
+            // job; skip the connection for this sweep
+            let Ok(sess) = c.sess.try_read() else { continue };
+            let mut run_ds = None;
+            let mut take = 0usize;
+            for (_, line) in &c.pending {
+                match coalescable(line, &sess.ns) {
+                    Some(ds) if run_ds.is_none() || run_ds == Some(ds) => {
+                        run_ds = Some(ds);
+                        take += 1;
+                    }
+                    _ => break,
+                }
+            }
+            if let Some(ds) = run_ds {
+                groups.entry(ds).or_default().push((cid, take));
+            }
+        }
+        let mut busy = false;
+        for (ds, mut contribs) in groups {
+            let total: usize = contribs.iter().map(|&(_, n)| n).sum();
+            if total < 2 {
+                continue; // solo queries take the ordinary shared path
+            }
+            // bound the batch; trim later contributions first so every
+            // connection's take stays front-contiguous
+            let mut over = total.saturating_sub(COALESCE_MAX);
+            for slot in contribs.iter_mut().rev() {
+                let cut = over.min(slot.1);
+                slot.1 -= cut;
+                over -= cut;
+            }
+            let mut members = Vec::new();
+            for (cid, take) in contribs {
+                let Some(c) = self.conns.get_mut(&cid) else {
+                    continue;
+                };
+                for _ in 0..take {
+                    let (seq, line) = c.pending.pop_front().expect("counted above");
+                    c.inflight += 1;
+                    members.push(CoalMember { conn: cid, seq, line });
+                }
+            }
+            busy = true;
+            let job = Job::Coalesced {
+                ns: self.ns.clone(),
+                dataset: ds,
+                members,
+            };
+            if self.job_tx.send(job).is_err() {
+                // shutdown: the pool is gone, no Done will ever arrive
+                for c in self.conns.values_mut() {
+                    c.dead = true;
+                }
+                return true;
+            }
+        }
+        busy
+    }
+
+    /// Admission + flush half of a connection's readiness sweep:
+    /// dispatch pending requests, flush buffered replies, close drained
+    /// connections. Returns whether anything moved.
+    fn admit_flush_conn(&mut self, id: u64) -> bool {
+        let Some(c) = self.conns.get_mut(&id) else {
+            return false;
+        };
+        if c.dead {
+            return false;
+        }
+        let mut busy = false;
 
         // 4. Admission: dispatch from the front of the FIFO. Shared
         //    readers pile up concurrently; an exclusive request waits
@@ -494,7 +704,7 @@ impl Mux {
                 c.inflight += 1;
                 c.exclusive_inflight = !shared;
                 busy = true;
-                let job = Job {
+                let job = Job::One {
                     conn: id,
                     seq,
                     line,
@@ -553,54 +763,247 @@ impl Mux {
 }
 
 // ---------------------------------------------------------------------
-// Sessions, admission classes, and the wear-aware resident table.
+// The shared namespace, fair admission gates, and per-connection state.
 // ---------------------------------------------------------------------
 
-/// Capacity of a session's resident-dataset table (each entry holds
+/// Capacity of the server-wide resident-dataset table (each entry holds
 /// live simulated shard arrays). A `LOAD` into a full table evicts the
 /// least-recently-used dataset among the coldest-wear candidates (see
 /// [`evict_for_slot`]); `DROP` still frees slots explicitly.
 const MAX_DATASETS: usize = 16;
 
-/// A resident dataset plus the bookkeeping the wear-aware evictor
-/// reads: a recency stamp from the session's logical clock, bumped by
-/// every query that touches the dataset (atomically, because shared
-/// readers touch it concurrently under the session read lock).
-struct DatasetEntry {
-    res: Box<dyn ResidentDyn>,
+/// Upper bound on one coalesced batch (mirrors the in-array batched
+/// query form's `MAX_SEARCH_BATCH`): the mux never merges more pending
+/// lines than one batched sweep could carry.
+const COALESCE_MAX: usize = 16;
+
+/// Bound on consecutively admitted shared readers per [`FairGate`]
+/// grant batch: an exclusive ticket never waits on more than this many
+/// in-flight readers draining (plus the strictly earlier tickets FIFO
+/// order already owes). The tradeoff is deliberate: a pure reader
+/// stream pays a drain barrier every `READER_BATCH` admissions.
+const READER_BATCH: usize = 32;
+
+/// Ticket-ordered readers/writer gate (docs/DESIGN.md §Serving).
+///
+/// Admission is strictly FIFO: every acquisition draws a ticket and
+/// tickets are granted in draw order, so an exclusive acquisition (a
+/// "writer": `LOAD`/`DROP`/`FAULTS` at namespace scope, an exclusive
+/// query at dataset scope) is delayed only by tickets drawn before it —
+/// an unbounded stream of later shared readers cannot starve it, and
+/// symmetrically a reader queued behind a writer-heavy stream is
+/// granted at its ticket, never pushed to the back. Consecutive reader
+/// grants are additionally capped at [`READER_BATCH`] (the batch resets
+/// when the last active reader releases, or when a writer is granted),
+/// bounding the drain a writer waits out after its ticket comes up.
+struct FairGate {
+    state: Mutex<GateState>,
+    cv: Condvar,
+}
+
+/// Mutable state behind a [`FairGate`]'s mutex.
+#[derive(Default)]
+struct GateState {
+    /// Next ticket to hand out.
+    next_ticket: u64,
+    /// The ticket currently allowed to admit (FIFO grant cursor).
+    grant: u64,
+    /// Shared holders currently inside the gate.
+    active_readers: usize,
+    /// An exclusive holder is inside the gate.
+    writer_active: bool,
+    /// Readers admitted since the batch last reset (see [`READER_BATCH`]).
+    readers_in_batch: usize,
+}
+
+impl FairGate {
+    fn new() -> FairGate {
+        FairGate {
+            state: Mutex::new(GateState::default()),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Draw the next FIFO ticket. The two-phase form (`ticket` +
+    /// `lock_*_at`) exists so tests can pin grant order deterministically;
+    /// `lock_shared`/`lock_exclusive` fuse the two steps.
+    fn ticket(&self) -> u64 {
+        let mut st = self.state.lock().unwrap();
+        let t = st.next_ticket;
+        st.next_ticket += 1;
+        t
+    }
+
+    /// Admit as a shared reader (next free ticket).
+    fn lock_shared(&self) -> GateShared<'_> {
+        let t = self.ticket();
+        self.lock_shared_at(t)
+    }
+
+    /// Admit as a shared reader holding ticket `t`.
+    fn lock_shared_at(&self, t: u64) -> GateShared<'_> {
+        let mut st = self.state.lock().unwrap();
+        while !(st.grant == t && !st.writer_active && st.readers_in_batch < READER_BATCH) {
+            st = self.cv.wait(st).unwrap();
+        }
+        st.grant += 1;
+        st.readers_in_batch += 1;
+        st.active_readers += 1;
+        drop(st);
+        // the next ticket may be another reader able to run concurrently
+        self.cv.notify_all();
+        GateShared { gate: self }
+    }
+
+    /// Admit exclusively (next free ticket).
+    fn lock_exclusive(&self) -> GateExclusive<'_> {
+        let t = self.ticket();
+        self.lock_exclusive_at(t)
+    }
+
+    /// Admit exclusively holding ticket `t`: waits for its FIFO turn AND
+    /// for every in-flight reader to drain.
+    fn lock_exclusive_at(&self, t: u64) -> GateExclusive<'_> {
+        let mut st = self.state.lock().unwrap();
+        while !(st.grant == t && !st.writer_active && st.active_readers == 0) {
+            st = self.cv.wait(st).unwrap();
+        }
+        st.grant += 1;
+        st.writer_active = true;
+        st.readers_in_batch = 0;
+        GateExclusive { gate: self }
+    }
+}
+
+/// RAII shared hold of a [`FairGate`].
+struct GateShared<'a> {
+    gate: &'a FairGate,
+}
+
+impl Drop for GateShared<'_> {
+    fn drop(&mut self) {
+        let mut st = self.gate.state.lock().unwrap();
+        st.active_readers -= 1;
+        if st.active_readers == 0 {
+            // batch resets at full drain so a capped reader stream can
+            // keep flowing once nobody is inside the gate
+            st.readers_in_batch = 0;
+        }
+        drop(st);
+        self.gate.cv.notify_all();
+    }
+}
+
+/// RAII exclusive hold of a [`FairGate`].
+struct GateExclusive<'a> {
+    gate: &'a FairGate,
+}
+
+impl Drop for GateExclusive<'_> {
+    fn drop(&mut self) {
+        let mut st = self.gate.state.lock().unwrap();
+        st.writer_active = false;
+        drop(st);
+        self.gate.cv.notify_all();
+    }
+}
+
+/// One resident dataset in the server-wide table, with everything
+/// concurrent access needs alongside the data itself: the dataset RwLock
+/// (shared queries read, exclusive queries write), the per-dataset
+/// [`FairGate`] ordering those two classes, the recency stamp the
+/// wear-aware evictor reads (bumped by *any* connection's queries), and
+/// the coalescing counters `STATS` reports.
+struct DatasetSlot {
+    res: RwLock<Box<dyn ResidentDyn>>,
     last_used: AtomicU64,
+    gate: FairGate,
+    /// Coalesced batches executed on this dataset.
+    coal_batches: AtomicU64,
+    /// Total member queries across those batches.
+    coal_members: AtomicU64,
+    /// Total modeled batch device cycles across those batches (per-op
+    /// cost = `coal_cycles / coal_members`, compared against the solo
+    /// floor by `benches/throughput.rs`).
+    coal_cycles: AtomicU64,
 }
 
-/// Per-connection protocol state: the shard count selected by `RACK <n>`
-/// (1 = single-device, the default) and the resident-dataset registry
-/// (`LOAD`/`DATASETS`/`DROP`); see `docs/PROTOCOL.md` §Sessions.
-struct Session {
-    shards: usize,
-    datasets: BTreeMap<u64, DatasetEntry>,
-    next_id: u64,
-    /// Fault model applied to racks built for future loads/one-shots
-    /// (`FAULTS <ber> <seed> [stuck_n]`); `None` = ideal device.
-    fault: Option<FaultModel>,
-    /// Logical clock behind the `last_used` recency stamps.
-    clock: AtomicU64,
-}
-
-impl Default for Session {
-    fn default() -> Self {
-        Session {
-            shards: 1,
-            datasets: BTreeMap::new(),
-            next_id: 1,
-            fault: None,
-            clock: AtomicU64::new(0),
+impl DatasetSlot {
+    fn new(res: Box<dyn ResidentDyn>, stamp: u64) -> DatasetSlot {
+        DatasetSlot {
+            res: RwLock::new(res),
+            last_used: AtomicU64::new(stamp),
+            gate: FairGate::new(),
+            coal_batches: AtomicU64::new(0),
+            coal_members: AtomicU64::new(0),
+            coal_cycles: AtomicU64::new(0),
         }
     }
 }
 
-impl Session {
+/// The server-wide serving state every connection shares
+/// (docs/PROTOCOL.md §Sharing): the resident-dataset table with its
+/// globally monotonic ids, the global admission gate, the logical clock
+/// behind recency stamps, the table `epoch` (bumped by every `LOAD`,
+/// `DROP`, and `FAULTS` change, reported by `DATASETS`), and the fault
+/// model applied to racks built for future loads/one-shots.
+struct Namespace {
+    datasets: RwLock<BTreeMap<u64, Arc<DatasetSlot>>>,
+    next_id: AtomicU64,
+    clock: AtomicU64,
+    epoch: AtomicU64,
+    /// Global gate: dataset queries + `DATASETS`/`STATS` shared;
+    /// `LOAD`/`DROP`/`FAULTS` changes exclusive (namespace fences).
+    gate: FairGate,
+    /// `FAULTS <ber> <seed> [stuck_n]` model; `None` = ideal device.
+    fault: Mutex<Option<FaultModel>>,
+}
+
+impl Default for Namespace {
+    fn default() -> Self {
+        Namespace {
+            datasets: RwLock::new(BTreeMap::new()),
+            next_id: AtomicU64::new(1),
+            clock: AtomicU64::new(0),
+            epoch: AtomicU64::new(0),
+            gate: FairGate::new(),
+            fault: Mutex::new(None),
+        }
+    }
+}
+
+impl Namespace {
     /// Next recency stamp (atomic: concurrent shared readers tick too).
     fn tick(&self) -> u64 {
         self.clock.fetch_add(1, Ordering::Relaxed) + 1
+    }
+}
+
+/// Clone one resident dataset's slot handle out of the namespace table
+/// (brief table read lock; callers then lock the slot itself, never the
+/// table, while running).
+fn slot_of(ns: &Namespace, id: u64) -> Option<Arc<DatasetSlot>> {
+    ns.datasets.read().unwrap().get(&id).cloned()
+}
+
+/// Per-connection protocol state: the shard count selected by `RACK <n>`
+/// (1 = single-device, the default — still per-connection) plus the
+/// handle to the shared [`Namespace`]. Direct-dispatch unit tests build
+/// a default session, which owns a private fresh namespace.
+struct Session {
+    shards: usize,
+    ns: Arc<Namespace>,
+}
+
+impl Default for Session {
+    fn default() -> Self {
+        Session::with_ns(Arc::new(Namespace::default()))
+    }
+}
+
+impl Session {
+    fn with_ns(ns: Arc<Namespace>) -> Session {
+        Session { shards: 1, ns }
     }
 }
 
@@ -633,21 +1036,48 @@ fn classify(line: &str, sess: &Session, shared_read: bool) -> bool {
             let Ok(id) = args[0].parse::<u64>() else {
                 return false;
             };
-            let Some(e) = sess.datasets.get(&id) else {
+            let Some(slot) = slot_of(&sess.ns, id) else {
                 return false;
             };
-            e.res.name() == entry.name && e.res.shared_readable()
+            // an exclusive query of this dataset may hold the slot write
+            // lock right now; classify runs on the mux thread and must
+            // not block, so contention falls back to the (byte-identical)
+            // exclusive path
+            let Ok(res) = slot.res.try_read() else {
+                return false;
+            };
+            res.name() == entry.name && res.shared_readable()
         }
         _ => false,
     }
 }
 
+/// Mux-side test of one pending line for the cross-connection coalescer:
+/// the single-operand (never batched) query form of a registered kernel
+/// that opted into `coalesce_queries`, aimed at a resident
+/// shared-readable dataset of that kind. Returns the dataset id the
+/// line targets. Conservative on any contention — `None` only means
+/// "dispatch solo this sweep", never an error.
+fn coalescable(line: &str, ns: &Namespace) -> Option<u64> {
+    let parts: Vec<&str> = line.split_whitespace().collect();
+    let (verb, args) = parts.split_first()?;
+    let entry = find_verb(verb)?;
+    if !entry.coalesce_queries || args.len() != entry.query_arity + 1 {
+        return None;
+    }
+    let id = args[0].parse::<u64>().ok()?;
+    let slot = slot_of(ns, id)?;
+    let res = slot.res.try_read().ok()?;
+    (res.name() == entry.name && res.shared_readable()).then_some(id)
+}
+
 /// Read-only dispatcher of the shared admission class: executes the
 /// verbs [`classify`] marked shared — `PING` and write-free resident
-/// queries — against `&Session`, so many readers run concurrently under
-/// the session's read lock. Must produce byte-identical replies to
+/// queries — against the shared [`Namespace`], so readers from any
+/// number of connections run concurrently (global gate shared, slot
+/// gate shared, slot read lock). Must produce byte-identical replies to
 /// [`dispatch`] for these verbs; the concurrency tests pin that.
-fn dispatch_shared(line: &str, sess: &Session) -> Result<String> {
+fn dispatch_shared(line: &str, ns: &Namespace) -> Result<String> {
     let parts: Vec<&str> = line.split_whitespace().collect();
     match parts.as_slice() {
         ["PING"] => Ok("PONG".into()),
@@ -660,23 +1090,27 @@ fn dispatch_shared(line: &str, sess: &Session) -> Result<String> {
                 args.len() > entry.query_arity + 1 && args.len() != entry.one_shot_arity;
             ensure!(query || batched, "not a shared-readable query");
             let id: u64 = args[0].parse()?;
-            let Some(e) = sess.datasets.get(&id) else {
+            let _admit = ns.gate.lock_shared();
+            let Some(slot) = slot_of(ns, id) else {
                 bail!("unknown dataset {id}");
             };
+            let _slot_admit = slot.gate.lock_shared();
+            let res = slot.res.read().unwrap();
             ensure!(
-                e.res.name() == entry.name,
+                res.name() == entry.name,
                 "dataset {id} is kind {}, not {}",
-                e.res.name(),
+                res.name(),
                 entry.name
             );
             let out = if query {
-                e.res.query_args_shared(&args[1..])?
+                res.query_args_shared(&args[1..])?
             } else {
-                e.res.query_args_batch_shared(&args[1..])?
+                res.query_args_batch_shared(&args[1..])?
             };
-            // every shared read refreshes recency — batched or not — so
-            // read-hot datasets stay off the eviction victim list
-            e.last_used.store(sess.tick(), Ordering::Relaxed);
+            // every shared read refreshes recency — batched or not, from
+            // any connection — so read-hot datasets stay off the
+            // eviction victim list
+            slot.last_used.store(ns.tick(), Ordering::Relaxed);
             Ok(query_ok(&out, id))
         }
         _ => bail!("unknown command"),
@@ -685,7 +1119,7 @@ fn dispatch_shared(line: &str, sess: &Session) -> Result<String> {
 
 /// The rack a session's sharded verbs execute on: session shard count,
 /// default device model + interconnect, the server's simulator backend,
-/// plus the session's fault model when `FAULTS` is active.
+/// plus the namespace fault model when `FAULTS` is active.
 fn rack_for(sess: &Session, backend: ExecBackend) -> Result<PrinsRack> {
     let rack = PrinsRack::with_config(
         sess.shards,
@@ -693,8 +1127,9 @@ fn rack_for(sess: &Session, backend: ExecBackend) -> Result<PrinsRack> {
         backend,
         InterconnectModel::default(),
     );
-    match &sess.fault {
-        Some(model) => rack.with_fault(model.clone()),
+    let fault = sess.ns.fault.lock().unwrap().clone();
+    match fault {
+        Some(model) => rack.with_fault(model),
         None => Ok(rack),
     }
 }
@@ -815,23 +1250,26 @@ fn load_usage() -> String {
 /// stamp, id), minimized — so wear protection comes first (a dataset
 /// whose cells are already worn is kept resident; datasets without wear
 /// tracking, i.e. faulty-rack loads, count as coldest), and recency
-/// breaks ties. Returns the evicted id for the `evicted=` reply field.
-fn evict_for_slot(sess: &mut Session) -> Option<u64> {
-    if sess.datasets.len() < MAX_DATASETS {
+/// breaks ties — stamps come from *every* connection's queries, so a
+/// dataset kept hot purely by another connection's shared reads is not
+/// a victim. Runs under the global exclusive gate (inside `LOAD`), so
+/// no query is in flight on any slot. Returns the evicted id for the
+/// `evicted=` reply field.
+fn evict_for_slot(table: &mut BTreeMap<u64, Arc<DatasetSlot>>) -> Option<u64> {
+    if table.len() < MAX_DATASETS {
         return None;
     }
-    let victim = sess
-        .datasets
+    let victim = table
         .iter()
-        .min_by_key(|(id, e)| {
+        .min_by_key(|(id, slot)| {
             (
-                e.res.wear_score().unwrap_or(0),
-                e.last_used.load(Ordering::Relaxed),
+                slot.res.read().unwrap().wear_score().unwrap_or(0),
+                slot.last_used.load(Ordering::Relaxed),
                 **id,
             )
         })
         .map(|(id, _)| *id)?;
-    sess.datasets.remove(&victim);
+    table.remove(&victim);
     Some(victim)
 }
 
@@ -842,23 +1280,24 @@ fn evict_for_slot(sess: &mut Session) -> Option<u64> {
 /// query cycles. The shard layout is fixed at `LOAD` time; later `RACK`
 /// changes affect only future loads. A full table evicts wear-aware LRU
 /// ([`evict_for_slot`]) and reports the victim in a trailing `evicted=`
-/// field.
-fn load_dataset(
-    args: &[&str],
-    backend: ExecBackend,
-    sess: &mut Session,
-) -> Result<Option<String>> {
+/// field. `LOAD` fences the whole namespace: synthesis, eviction and
+/// the table insert run under the global exclusive gate, so no shared
+/// reader on any connection observes a half-loaded table, and the
+/// `epoch` bump is atomic with the insert.
+fn load_dataset(args: &[&str], backend: ExecBackend, sess: &Session) -> Result<Option<String>> {
     // kinds are case-sensitive wire verbs, exactly like the kernel verbs
     let Some(entry) = args.first().and_then(|kind| find_verb(kind)) else {
         bail!("{}", load_usage());
     };
+    let ns = &sess.ns;
+    let _fence = ns.gate.lock_exclusive();
     let rack = rack_for(sess, backend)?;
     let data = (entry.load)(&rack, &args[1..])?;
     // evict only after the new load synthesized successfully, so a
     // malformed LOAD can never cost a resident dataset
-    let evicted = evict_for_slot(sess);
-    let id = sess.next_id;
-    sess.next_id += 1;
+    let mut table = ns.datasets.write().unwrap();
+    let evicted = evict_for_slot(&mut table);
+    let id = ns.next_id.fetch_add(1, Ordering::Relaxed);
     let mut reply = Reply::ok()
         .kv("id", id)
         .kv("kind", data.name())
@@ -868,14 +1307,9 @@ fn load_dataset(
     if let Some(victim) = evicted {
         reply = reply.kv("evicted", victim);
     }
-    let stamp = sess.tick();
-    sess.datasets.insert(
-        id,
-        DatasetEntry {
-            res: data,
-            last_used: AtomicU64::new(stamp),
-        },
-    );
+    let stamp = ns.tick();
+    table.insert(id, Arc::new(DatasetSlot::new(data, stamp)));
+    ns.epoch.fetch_add(1, Ordering::Relaxed);
     Ok(Some(reply.finish()))
 }
 
@@ -892,26 +1326,33 @@ fn kernel_verb(
     verb: &str,
     args: &[&str],
     backend: ExecBackend,
-    sess: &mut Session,
+    sess: &Session,
 ) -> Result<Option<String>> {
     let Some(entry) = find_verb(verb) else {
         bail!("unknown command");
     };
+    let ns = &sess.ns;
     if args.len() == entry.query_arity + 1 {
-        // dataset-id query: no reload, query cycles only
+        // dataset-id query: no reload, query cycles only. Exclusive at
+        // dataset scope (slot gate + write lock), shared at namespace
+        // scope — other datasets keep serving.
         let id: u64 = args[0].parse()?;
-        let Some(e) = sess.datasets.get_mut(&id) else {
+        let _admit = ns.gate.lock_shared();
+        let Some(slot) = slot_of(ns, id) else {
             bail!("unknown dataset {id}");
         };
+        let _slot_fence = slot.gate.lock_exclusive();
+        // the write lock (not strictly needed by `&self` queries) is the
+        // signal mux-side `try_read` probes observe as contention
+        let res = slot.res.write().unwrap();
         ensure!(
-            e.res.name() == entry.name,
+            res.name() == entry.name,
             "dataset {id} is kind {}, not {}",
-            e.res.name(),
+            res.name(),
             entry.name
         );
-        let out = e.res.query_args(&args[1..])?;
-        e.last_used
-            .store(sess.clock.fetch_add(1, Ordering::Relaxed) + 1, Ordering::Relaxed);
+        let out = res.query_args(&args[1..])?;
+        slot.last_used.store(ns.tick(), Ordering::Relaxed);
         Ok(Some(query_ok(&out, id)))
     } else if args.len() == entry.one_shot_arity {
         let rack = rack_for(sess, backend)?;
@@ -922,18 +1363,20 @@ fn kernel_verb(
     } else if args.len() > entry.query_arity + 1 && args[0].parse::<u64>().is_ok() {
         // batched dataset-id query: B operands packed into one sweep
         let id: u64 = args[0].parse()?;
-        let Some(e) = sess.datasets.get_mut(&id) else {
+        let _admit = ns.gate.lock_shared();
+        let Some(slot) = slot_of(ns, id) else {
             bail!("unknown dataset {id}");
         };
+        let _slot_fence = slot.gate.lock_exclusive();
+        let res = slot.res.write().unwrap();
         ensure!(
-            e.res.name() == entry.name,
+            res.name() == entry.name,
             "dataset {id} is kind {}, not {}",
-            e.res.name(),
+            res.name(),
             entry.name
         );
-        let out = e.res.query_args_batch(&args[1..])?;
-        e.last_used
-            .store(sess.clock.fetch_add(1, Ordering::Relaxed) + 1, Ordering::Relaxed);
+        let out = res.query_args_batch(&args[1..])?;
+        slot.last_used.store(ns.tick(), Ordering::Relaxed);
         Ok(Some(query_ok(&out, id)))
     } else {
         bail!("usage: {} | {}", entry.one_shot_usage, entry.query_usage);
@@ -959,44 +1402,58 @@ fn dispatch(line: &str, backend: ExecBackend, sess: &mut Session) -> Result<Opti
         // ----- resident-dataset registry (docs/PROTOCOL.md) -------------
         ["LOAD", rest @ ..] => load_dataset(rest, backend, sess),
         ["DATASETS"] => {
-            let mut reply = Reply::ok().kv("count", sess.datasets.len());
-            for (id, e) in &sess.datasets {
+            let ns = &sess.ns;
+            let _admit = ns.gate.lock_shared();
+            let table = ns.datasets.read().unwrap();
+            let mut reply = Reply::ok()
+                .kv("count", table.len())
+                .kv("epoch", ns.epoch.load(Ordering::Relaxed));
+            for (id, slot) in table.iter() {
+                let res = slot.res.read().unwrap();
                 reply = reply.kv(
                     "ds",
-                    format!(
-                        "{id}:{}:{}:{}",
-                        e.res.name(),
-                        e.res.rows(),
-                        e.res.load_report().shards
-                    ),
+                    format!("{id}:{}:{}:{}", res.name(), res.rows(), res.load_report().shards),
                 );
             }
             Ok(Some(reply.finish()))
         }
         ["DROP", id] => {
             let id: u64 = id.parse()?;
-            ensure!(sess.datasets.remove(&id).is_some(), "unknown dataset {id}");
+            let ns = &sess.ns;
+            // namespace fence: every connection's in-flight shared
+            // readers drain before the slot disappears
+            let _fence = ns.gate.lock_exclusive();
+            ensure!(
+                ns.datasets.write().unwrap().remove(&id).is_some(),
+                "unknown dataset {id}"
+            );
+            ns.epoch.fetch_add(1, Ordering::Relaxed);
             Ok(Some(Reply::ok().kv("dropped", id).finish()))
         }
-        // compiled-program cache counters of one resident dataset; a
-        // separate verb (not query-reply fields) so repeated queries
-        // stay byte-identical for the throughput-bench equality gates
+        // compiled-program cache + coalescing counters of one resident
+        // dataset; a separate verb (not query-reply fields) so repeated
+        // queries stay byte-identical for the bench equality gates
         ["STATS", id] => {
             let id: u64 = id.parse()?;
-            let Some(e) = sess.datasets.get(&id) else {
+            let ns = &sess.ns;
+            let _admit = ns.gate.lock_shared();
+            let Some(slot) = slot_of(ns, id) else {
                 bail!("unknown dataset {id}");
             };
-            let (hits, misses) = e.res.cache_stats();
+            let (hits, misses) = slot.res.read().unwrap().cache_stats();
             Ok(Some(
                 Reply::ok()
                     .kv("dataset", id)
                     .kv("cache_hits", hits)
                     .kv("cache_misses", misses)
+                    .kv("coal_batches", slot.coal_batches.load(Ordering::Relaxed))
+                    .kv("coal_members", slot.coal_members.load(Ordering::Relaxed))
+                    .kv("coal_cycles", slot.coal_cycles.load(Ordering::Relaxed))
                     .finish(),
             ))
         }
         // ----- fault injection (docs/PROTOCOL.md §Fault injection) ------
-        ["FAULTS"] => Ok(Some(match &sess.fault {
+        ["FAULTS"] => Ok(Some(match &*sess.ns.fault.lock().unwrap() {
             None => Reply::ok().kv("faults", "off").finish(),
             Some(m) => Reply::ok()
                 .kv("faults", "on")
@@ -1006,13 +1463,17 @@ fn dispatch(line: &str, backend: ExecBackend, sess: &mut Session) -> Result<Opti
                 .finish(),
         })),
         ["FAULTS", "OFF"] => {
-            sess.fault = None;
+            let ns = &sess.ns;
+            // regime change = namespace fence + epoch bump, like LOAD/DROP
+            let _fence = ns.gate.lock_exclusive();
+            *ns.fault.lock().unwrap() = None;
             // the fault regime frames every cached plan's validity:
             // flush resident program caches so the next query
             // re-synthesizes (counters stay cumulative)
-            for e in sess.datasets.values() {
-                e.res.invalidate_cache();
+            for slot in ns.datasets.read().unwrap().values() {
+                slot.res.read().unwrap().invalidate_cache();
             }
+            ns.epoch.fetch_add(1, Ordering::Relaxed);
             Ok(Some(Reply::ok().kv("faults", "off").finish()))
         }
         ["FAULTS", rest @ ..] => {
@@ -1032,10 +1493,14 @@ fn dispatch(line: &str, backend: ExecBackend, sess: &mut Session) -> Result<Opti
             // already-resident datasets keep their load-time model but
             // drop their cached plans (invalidation rule: arming faults
             // is a regime change, re-synthesize on next query)
-            sess.fault = Some(FaultModel::uniform(ber, seed).with_random_stuck(stuck));
-            for e in sess.datasets.values() {
-                e.res.invalidate_cache();
+            let ns = &sess.ns;
+            let _fence = ns.gate.lock_exclusive();
+            *ns.fault.lock().unwrap() =
+                Some(FaultModel::uniform(ber, seed).with_random_stuck(stuck));
+            for slot in ns.datasets.read().unwrap().values() {
+                slot.res.read().unwrap().invalidate_cache();
             }
+            ns.epoch.fetch_add(1, Ordering::Relaxed);
             Ok(Some(
                 Reply::ok()
                     .kv("faults", "on")
@@ -1173,9 +1638,10 @@ mod tests {
         let dpq2 = ask(&mut conn, &mut reader, "DP 2 10");
         assert_ne!(field(&dpq, "checksum="), field(&dpq2, "checksum="));
         assert_eq!(field(&dpq, "cycles="), field(&dpq2, "cycles="));
+        // epoch counts the two LOADs — the namespace's change stamp
         assert_eq!(
             ask(&mut conn, &mut reader, "DATASETS"),
-            "OK count=2 ds=1:hist:500:1 ds=2:dp:32:1"
+            "OK count=2 epoch=2 ds=1:hist:500:1 ds=2:dp:32:1"
         );
 
         // kind/verb mismatch and unknown ids are errors, not panics
@@ -1187,7 +1653,7 @@ mod tests {
         assert!(ask(&mut conn, &mut reader, "HIST 1").starts_with("ERR"));
         assert_eq!(
             ask(&mut conn, &mut reader, "DATASETS"),
-            "OK count=1 ds=2:dp:32:1"
+            "OK count=1 epoch=3 ds=2:dp:32:1"
         );
         server.shutdown();
     }
@@ -1391,16 +1857,18 @@ mod tests {
     #[test]
     fn full_table_load_evicts_and_reports_victim() {
         let mut sess = Session::default();
+        let count = |sess: &Session| sess.ns.datasets.read().unwrap().len();
+        let has = |sess: &Session, id: u64| sess.ns.datasets.read().unwrap().contains_key(&id);
         for _ in 0..MAX_DATASETS {
-            let r = load_dataset(&["HIST", "50", "3"], ExecBackend::Serial, &mut sess)
+            let r = load_dataset(&["HIST", "50", "3"], ExecBackend::Serial, &sess)
                 .unwrap()
                 .unwrap();
             assert!(!r.contains("evicted="), "{r}");
         }
-        assert_eq!(sess.datasets.len(), MAX_DATASETS);
+        assert_eq!(count(&sess), MAX_DATASETS);
         // touch every dataset except id 2: id 2 becomes the LRU among
         // equal-wear candidates and must be the victim
-        for id in sess.datasets.keys().copied().collect::<Vec<_>>() {
+        for id in 1..=MAX_DATASETS as u64 {
             if id != 2 {
                 let q = dispatch(&format!("HIST {id}"), ExecBackend::Serial, &mut sess)
                     .unwrap()
@@ -1408,22 +1876,22 @@ mod tests {
                 assert!(q.starts_with("OK"), "{q}");
             }
         }
-        let r = load_dataset(&["HIST", "50", "3"], ExecBackend::Serial, &mut sess)
+        let r = load_dataset(&["HIST", "50", "3"], ExecBackend::Serial, &sess)
             .unwrap()
             .unwrap();
         assert!(r.ends_with("evicted=2"), "{r}");
-        assert_eq!(sess.datasets.len(), MAX_DATASETS);
-        assert!(!sess.datasets.contains_key(&2));
-        assert!(sess.datasets.contains_key(&17), "ids stay monotonic");
+        assert_eq!(count(&sess), MAX_DATASETS);
+        assert!(!has(&sess, 2));
+        assert!(has(&sess, 17), "ids stay monotonic");
         // a malformed LOAD into the full table must not evict anything
-        assert!(load_dataset(&["HIST", "x", "3"], ExecBackend::Serial, &mut sess).is_err());
-        assert_eq!(sess.datasets.len(), MAX_DATASETS);
+        assert!(load_dataset(&["HIST", "x", "3"], ExecBackend::Serial, &sess).is_err());
+        assert_eq!(count(&sess), MAX_DATASETS);
     }
 
     #[test]
     fn batched_search_wire_form_matches_singles_and_shared_dispatch() {
         let mut sess = Session::default();
-        let loaded = load_dataset(&["SEARCH", "400", "9"], ExecBackend::Serial, &mut sess)
+        let loaded = load_dataset(&["SEARCH", "400", "9"], ExecBackend::Serial, &sess)
             .unwrap()
             .unwrap();
         assert!(loaded.starts_with("OK id=1 kind=search"), "{loaded}");
@@ -1454,17 +1922,21 @@ mod tests {
         // and replies byte-identically to exclusive dispatch
         assert!(classify("SEARCH 1 2 100 5000 6000 40000", &sess, true));
         assert!(!classify("SEARCH 400 9", &sess, true), "one-shots stay exclusive");
-        let before = sess.datasets[&1].last_used.load(Ordering::Relaxed);
-        let shared = dispatch_shared("SEARCH 1 2 100 5000 6000 40000", &sess).unwrap();
+        let stamp = |sess: &Session| {
+            sess.ns.datasets.read().unwrap()[&1]
+                .last_used
+                .load(Ordering::Relaxed)
+        };
+        let before = stamp(&sess);
+        let shared = dispatch_shared("SEARCH 1 2 100 5000 6000 40000", &sess.ns).unwrap();
         assert_eq!(shared, batched);
-        let after = sess.datasets[&1].last_used.load(Ordering::Relaxed);
-        assert!(after > before, "batched shared reads must refresh last_used");
+        assert!(stamp(&sess) > before, "batched shared reads must refresh last_used");
 
         // malformed batched lines are clean errors, not panics: odd
         // operand count, B < 2, and kernels without a batched grammar
         assert!(dispatch("SEARCH 1 2 100 5000 6000", ExecBackend::Serial, &mut sess).is_err());
         assert!(dispatch("SEARCH 1 1 100 5000", ExecBackend::Serial, &mut sess).is_err());
-        let hist = load_dataset(&["HIST", "50", "3"], ExecBackend::Serial, &mut sess)
+        let hist = load_dataset(&["HIST", "50", "3"], ExecBackend::Serial, &sess)
             .unwrap()
             .unwrap();
         assert!(hist.starts_with("OK id=2"), "{hist}");
@@ -1476,7 +1948,7 @@ mod tests {
     fn shared_reads_refresh_recency_for_the_evictor() {
         let mut sess = Session::default();
         for _ in 0..MAX_DATASETS {
-            load_dataset(&["HIST", "50", "3"], ExecBackend::Serial, &mut sess).unwrap();
+            load_dataset(&["HIST", "50", "3"], ExecBackend::Serial, &sess).unwrap();
         }
         // exclusive-query every dataset except id 7…
         for id in 1..=MAX_DATASETS as u64 {
@@ -1489,22 +1961,25 @@ mod tests {
         }
         // …id 7 stays hot through shared reads ONLY: its recency stamp
         // must come from dispatch_shared
-        let r = dispatch_shared("HIST 7", &sess).unwrap();
+        let r = dispatch_shared("HIST 7", &sess.ns).unwrap();
         assert!(r.starts_with("OK"), "{r}");
-        let r = load_dataset(&["HIST", "50", "3"], ExecBackend::Serial, &mut sess)
+        let r = load_dataset(&["HIST", "50", "3"], ExecBackend::Serial, &sess)
             .unwrap()
             .unwrap();
         // were shared reads not stamping last_used, id 7 would still
         // carry its load-time stamp — the oldest — and be evicted; the
         // true LRU is id 1 (first exclusive query of the touch loop)
         assert!(r.ends_with("evicted=1"), "{r}");
-        assert!(sess.datasets.contains_key(&7), "shared-read-hot dataset evicted");
+        assert!(
+            sess.ns.datasets.read().unwrap().contains_key(&7),
+            "shared-read-hot dataset evicted"
+        );
     }
 
     #[test]
     fn stats_verb_tracks_cache_and_invalidation_forces_resynthesis() {
         let mut sess = Session::default();
-        load_dataset(&["SEARCH", "300", "5"], ExecBackend::Serial, &mut sess).unwrap();
+        load_dataset(&["SEARCH", "300", "5"], ExecBackend::Serial, &sess).unwrap();
         let ask = |sess: &mut Session, req: &str| {
             dispatch(req, ExecBackend::Serial, sess).unwrap().unwrap()
         };
@@ -1540,10 +2015,177 @@ mod tests {
         // DROP destroys the cache with the dataset; a reload starts cold
         assert_eq!(ask(&mut sess, "DROP 1"), "OK dropped=1");
         assert!(dispatch("STATS 1", ExecBackend::Serial, &mut sess).is_err());
-        load_dataset(&["SEARCH", "300", "5"], ExecBackend::Serial, &mut sess).unwrap();
+        load_dataset(&["SEARCH", "300", "5"], ExecBackend::Serial, &sess).unwrap();
         assert_eq!(
             ask(&mut sess, "STATS 2"),
-            "OK dataset=2 cache_hits=0 cache_misses=0"
+            "OK dataset=2 cache_hits=0 cache_misses=0 coal_batches=0 coal_members=0 coal_cycles=0"
         );
+    }
+
+    #[test]
+    fn fair_gate_grants_in_ticket_order_so_writers_cannot_be_starved() {
+        let gate = Arc::new(FairGate::new());
+        // a lone reader stream never stalls on the batch cap: every full
+        // release drains the batch and resets it
+        for _ in 0..(READER_BATCH * 2 + 1) {
+            drop(gate.lock_shared());
+        }
+        // FIFO: with the gate held exclusively, a reader ticket drawn
+        // BEFORE a writer ticket is granted first once the holder leaves
+        // — and symmetrically the queued writer admits right after that
+        // reader drains, no matter how the threads raced to wait
+        let held = gate.lock_exclusive();
+        let rt = gate.ticket();
+        let wt = gate.ticket();
+        let (tx, rx) = channel::<&'static str>();
+        let reader = {
+            let gate = gate.clone();
+            let tx = tx.clone();
+            std::thread::spawn(move || {
+                let g = gate.lock_shared_at(rt);
+                tx.send("reader").unwrap();
+                drop(g);
+            })
+        };
+        let writer = {
+            let gate = gate.clone();
+            std::thread::spawn(move || {
+                let g = gate.lock_exclusive_at(wt);
+                tx.send("writer").unwrap();
+                drop(g);
+            })
+        };
+        drop(held);
+        assert_eq!(rx.recv().unwrap(), "reader");
+        assert_eq!(rx.recv().unwrap(), "writer");
+        reader.join().unwrap();
+        writer.join().unwrap();
+    }
+
+    #[test]
+    fn fair_gate_bounds_concurrent_readers_per_batch() {
+        let gate = Arc::new(FairGate::new());
+        let held: Vec<GateShared> = (0..READER_BATCH).map(|_| gate.lock_shared()).collect();
+        let (tx, rx) = channel::<()>();
+        let over = {
+            let gate = gate.clone();
+            std::thread::spawn(move || {
+                drop(gate.lock_shared());
+                tx.send(()).unwrap();
+            })
+        };
+        // the reader over the cap must wait for the batch to drain…
+        assert!(
+            rx.recv_timeout(Duration::from_millis(80)).is_err(),
+            "reader admitted past READER_BATCH"
+        );
+        drop(held);
+        // …and must then be admitted (no lost wakeup, no deadlock)
+        rx.recv_timeout(Duration::from_secs(10))
+            .expect("reader starved after batch drain");
+        over.join().unwrap();
+    }
+
+    #[test]
+    fn coalesced_group_replies_match_solo_shared_dispatch() {
+        let sess = Session::default();
+        load_dataset(&["SEARCH", "400", "9"], ExecBackend::Serial, &sess).unwrap();
+        let ns = &sess.ns;
+        let lines = ["SEARCH 1 100 5000", "SEARCH 1 100 5000", "SEARCH 1 6000 40000"];
+        let solo: Vec<String> = lines
+            .iter()
+            .map(|l| dispatch_shared(l, ns).unwrap())
+            .collect();
+        let members: Vec<CoalMember> = lines
+            .iter()
+            .enumerate()
+            .map(|(i, l)| CoalMember {
+                conn: 1,
+                seq: i as u64,
+                line: (*l).into(),
+            })
+            .collect();
+        let (tx, rx) = channel::<Done>();
+        run_coalesced(ns, 1, &members, &tx);
+        let mut got: Vec<Done> = (0..lines.len()).map(|_| rx.recv().unwrap()).collect();
+        got.sort_by_key(|d| d.seq);
+        for (d, want) in got.iter().zip(&solo) {
+            assert!(d.shared);
+            match &d.outcome {
+                Outcome::Line(l) => assert_eq!(l, want, "coalesced reply differs from solo"),
+                Outcome::Bye => panic!("BYE from a coalesced member"),
+            }
+        }
+        // the slot recorded one batch of three with a modeled batch
+        // timeline strictly below three solo sweeps (tentpole (c))
+        let slot = slot_of(ns, 1).unwrap();
+        assert_eq!(slot.coal_batches.load(Ordering::Relaxed), 1);
+        assert_eq!(slot.coal_members.load(Ordering::Relaxed), 3);
+        let batch_cycles = slot.coal_cycles.load(Ordering::Relaxed);
+        assert!(batch_cycles > 0);
+        let solo_cycles: u64 = solo[0]
+            .split_whitespace()
+            .find_map(|kv| kv.strip_prefix("cycles="))
+            .unwrap()
+            .parse()
+            .unwrap();
+        assert!(
+            batch_cycles < 3 * solo_cycles,
+            "batch {batch_cycles} vs 3 x solo {solo_cycles}"
+        );
+        // a group whose grouping key vanished (e.g. the dataset was
+        // dropped between the mux sweep and execution) falls back to
+        // per-member solo dispatch: byte-identical replies, and the
+        // coalescing counters do not advance
+        let (tx2, rx2) = channel::<Done>();
+        run_coalesced(ns, 99, &members, &tx2);
+        let mut fb: Vec<Done> = (0..members.len()).map(|_| rx2.recv().unwrap()).collect();
+        fb.sort_by_key(|d| d.seq);
+        for (d, want) in fb.iter().zip(&solo) {
+            match &d.outcome {
+                Outcome::Line(l) => assert_eq!(l, want, "fallback reply differs from solo"),
+                Outcome::Bye => panic!("BYE from a fallback member"),
+            }
+        }
+        assert_eq!(slot.coal_batches.load(Ordering::Relaxed), 1);
+        assert_eq!(slot.coal_members.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn namespace_is_shared_across_connections() {
+        let server = Server::spawn("127.0.0.1:0").unwrap();
+        let mut a = TcpStream::connect(server.addr).unwrap();
+        let mut ra = BufReader::new(a.try_clone().unwrap());
+        let mut b = TcpStream::connect(server.addr).unwrap();
+        let mut rb = BufReader::new(b.try_clone().unwrap());
+        let ask = |conn: &mut TcpStream, reader: &mut BufReader<TcpStream>, req: &str| {
+            let mut line = String::new();
+            writeln!(conn, "{req}").unwrap();
+            reader.read_line(&mut line).unwrap();
+            line.trim().to_string()
+        };
+
+        // connection A loads; connection B sees the dataset and queries it
+        let loaded = ask(&mut a, &mut ra, "LOAD SEARCH 400 9");
+        assert!(loaded.starts_with("OK id=1 kind=search"), "{loaded}");
+        assert_eq!(
+            ask(&mut b, &mut rb, "DATASETS"),
+            "OK count=1 epoch=1 ds=1:search:400:1"
+        );
+        let qa = ask(&mut a, &mut ra, "SEARCH 1 100 5000");
+        let qb = ask(&mut b, &mut rb, "SEARCH 1 100 5000");
+        assert_eq!(qa, qb, "cross-connection replies must be byte-identical");
+        // the compiled-program cache is shared too (satellite 1): A's
+        // query synthesized the plan, B's identical query hit it
+        let stats = ask(&mut b, &mut rb, "STATS 1");
+        assert!(
+            stats.contains("cache_hits=1") && stats.contains("cache_misses=1"),
+            "{stats}"
+        );
+        // B may DROP what A loaded; A observes the fence
+        assert_eq!(ask(&mut b, &mut rb, "DROP 1"), "OK dropped=1");
+        assert_eq!(ask(&mut a, &mut ra, "SEARCH 1 100 5000"), "ERR unknown dataset 1");
+        assert_eq!(ask(&mut a, &mut ra, "DATASETS"), "OK count=0 epoch=2");
+        server.shutdown();
     }
 }

@@ -450,7 +450,11 @@ pub fn write_fidelity_json(
 /// [`crate::host::server::Server`] for one (clients, pipeline-depth,
 /// admission-mode) cell. `mode` is `"shared"` (write-free queries admit
 /// as concurrent readers) or `"exclusive"` (every request serialized
-/// per connection — the `&mut`-access baseline).
+/// per connection — the `&mut`-access baseline); the cross-session
+/// cells, where every client hammers **one** dataset loaded by a setup
+/// connection, report as `"cross_session"` (shared admission plus the
+/// cross-connection coalescer) vs `"cross_exclusive"` (the same
+/// workload fully serialized through the slot gate).
 pub struct ThroughputRecord {
     /// Workload name of the queried resident dataset (`hist`, `search`).
     pub bench: String,
@@ -467,6 +471,12 @@ pub struct ThroughputRecord {
     pub qps: f64,
     /// Wall-clock seconds of the measured run.
     pub wall_s: f64,
+    /// Device cycles per query attributed by the cross-connection
+    /// coalescer over this cell (`coal_cycles / coal_members` from the
+    /// dataset's `STATS` deltas). `0.0` when the cell coalesced nothing
+    /// — exclusive modes, per-client-dataset cells, or bursts the mux
+    /// never saw pending together.
+    pub coalesced_per_op_cycles: f64,
 }
 
 /// Hand-rolled JSON for [`ThroughputRecord`]s (the crate set has no
@@ -478,7 +488,7 @@ pub fn throughput_records_json(records: &[ThroughputRecord]) -> String {
         s.push_str(&format!(
             "  {{\"bench\": \"{}\", \"clients\": {}, \"pipeline\": {}, \
              \"mode\": \"{}\", \"queries\": {}, \"qps\": {:e}, \
-             \"wall_s\": {:e}}}{}\n",
+             \"wall_s\": {:e}, \"coalesced_per_op_cycles\": {:e}}}{}\n",
             r.bench,
             r.clients,
             r.pipeline,
@@ -486,6 +496,7 @@ pub fn throughput_records_json(records: &[ThroughputRecord]) -> String {
             r.queries,
             r.qps,
             r.wall_s,
+            r.coalesced_per_op_cycles,
             if i + 1 < records.len() { "," } else { "" }
         ));
     }
@@ -918,24 +929,27 @@ mod tests {
                 queries: 64,
                 qps: 1.2e3,
                 wall_s: 0.05,
+                coalesced_per_op_cycles: 0.0,
             },
             ThroughputRecord {
-                bench: "hist".into(),
+                bench: "search".into(),
                 clients: 16,
                 pipeline: 8,
-                mode: "shared".into(),
+                mode: "cross_session".into(),
                 queries: 1024,
                 qps: 9.6e3,
                 wall_s: 0.1,
+                coalesced_per_op_cycles: 812.5,
             },
         ];
         let s = throughput_records_json(&recs);
         assert!(s.starts_with("[\n") && s.trim_end().ends_with(']'));
         assert_eq!(s.matches("\"clients\"").count(), 2);
         assert_eq!(s.matches("},\n").count(), 1);
-        assert!(s.contains("\"mode\": \"shared\""));
+        assert!(s.contains("\"mode\": \"cross_session\""));
         assert!(s.contains("\"pipeline\": 8"));
         assert!(s.contains("\"qps\""));
+        assert_eq!(s.matches("\"coalesced_per_op_cycles\"").count(), 2);
     }
 
     #[test]

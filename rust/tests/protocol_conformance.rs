@@ -120,7 +120,7 @@ fn errors_do_not_corrupt_session_state() {
     assert_eq!(ask(&mut conn, &mut reader, "RACK"), "OK shards=2");
     assert_eq!(
         ask(&mut conn, &mut reader, "DATASETS"),
-        "OK count=1 ds=1:hist:400:2"
+        "OK count=1 epoch=1 ds=1:hist:400:2"
     );
     let q = ask(&mut conn, &mut reader, "HIST 1");
     assert!(q.contains("total=400") && q.contains("dataset=1"), "{q}");
@@ -174,8 +174,10 @@ fn dataset_cap_evicts_instead_of_erroring() {
 #[test]
 fn framing_survives_random_chunking_and_interleaved_garbage() {
     use prins::workloads::Rng;
-    let server = Server::spawn("127.0.0.1:0").unwrap();
     for seed in [11u64, 29, 83] {
+        // fresh server per seed: the resident table is server-wide, so a
+        // reused server would carry ids and epoch across seeds
+        let server = Server::spawn("127.0.0.1:0").unwrap();
         let mut rng = Rng::seed_from(seed);
         let mut conn = TcpStream::connect(server.addr).unwrap();
         let mut reader = BufReader::new(conn.try_clone().unwrap());
@@ -225,11 +227,11 @@ fn framing_survives_random_chunking_and_interleaved_garbage() {
         line.clear();
         writeln!(conn, "DATASETS").unwrap();
         reader.read_line(&mut line).unwrap();
-        assert_eq!(line.trim(), "OK count=1 ds=1:hist:32:1", "seed {seed}");
+        assert_eq!(line.trim(), "OK count=1 epoch=1 ds=1:hist:32:1", "seed {seed}");
         line.clear();
         writeln!(conn, "QUIT").unwrap();
         reader.read_line(&mut line).unwrap();
         assert_eq!(line.trim(), "BYE", "seed {seed}");
+        server.shutdown();
     }
-    server.shutdown();
 }

@@ -1,30 +1,80 @@
-//! Multi-client server concurrency suite: N client threads drive one
-//! `Server` with interleaved `RACK` / `LOAD` / query / `DROP` verbs.
-//! Sessions must be fully isolated — per-connection dataset ids, shard
-//! counts, and resident data — and every reply must be bit-equal to the
-//! same script executed alone on a single connection.
+//! Multi-client server concurrency suite over the shared namespace: N
+//! client threads drive one `Server` with interleaved `RACK` / `LOAD` /
+//! query / `DROP` verbs. Dataset ids are **globally monotonic** (the
+//! resident table is server-wide, docs/PROTOCOL.md §Sharing), so
+//! clients parse the ids their `LOAD`s return and scripts reference
+//! them through placeholders; replies are then compared **modulo those
+//! ids** — every other byte must match a serial single-client
+//! reference run. Shard counts (`RACK`) stay per-connection.
 
 use prins::host::server::Server;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 
-/// Run a request script on one fresh connection, collecting the replies.
-fn run_script(addr: std::net::SocketAddr, script: &[String]) -> Vec<String> {
+/// Run a request script on one fresh connection. `{0}`, `{1}`, … in a
+/// request line expand to the ids returned by the script's `LOAD`s so
+/// far (in order). Returns the replies plus the parsed ids.
+fn run_script(addr: std::net::SocketAddr, script: &[String]) -> (Vec<String>, Vec<u64>) {
     let mut conn = TcpStream::connect(addr).unwrap();
     let mut reader = BufReader::new(conn.try_clone().unwrap());
     let mut replies = Vec::with_capacity(script.len());
+    let mut ids: Vec<u64> = Vec::new();
     for req in script {
+        let mut req = req.clone();
+        for (i, id) in ids.iter().enumerate() {
+            req = req.replace(&format!("{{{i}}}"), &id.to_string());
+        }
         writeln!(conn, "{req}").unwrap();
         let mut line = String::new();
         reader.read_line(&mut line).unwrap();
-        replies.push(line.trim().to_string());
+        let reply = line.trim().to_string();
+        if req.starts_with("LOAD ") {
+            let id = reply
+                .split_whitespace()
+                .find_map(|kv| kv.strip_prefix("id="))
+                .unwrap_or_else(|| panic!("LOAD did not return an id: {reply}"))
+                .parse::<u64>()
+                .unwrap();
+            ids.push(id);
+        }
+        replies.push(reply);
     }
-    replies
+    (replies, ids)
+}
+
+/// Rewrite the id-bearing tokens of one reply (`id=`, `dataset=`,
+/// `dropped=`, and the trailing id of `ERR unknown dataset N`) to
+/// placeholder tags, so runs that drew different global ids compare
+/// byte-for-byte everywhere else.
+fn normalize(reply: &str, ids: &[u64]) -> String {
+    let toks: Vec<&str> = reply.split_whitespace().collect();
+    let mut out: Vec<String> = Vec::with_capacity(toks.len());
+    for (pos, tok) in toks.iter().enumerate() {
+        let mut mapped = (*tok).to_string();
+        for (i, id) in ids.iter().enumerate() {
+            for key in ["id=", "dataset=", "dropped="] {
+                if mapped == format!("{key}{id}") {
+                    mapped = format!("{key}#{i}");
+                }
+            }
+            // "ERR unknown dataset N"
+            if pos > 0 && toks[pos - 1] == "dataset" && mapped == id.to_string() {
+                mapped = format!("#{i}");
+            }
+        }
+        out.push(mapped);
+    }
+    out.join(" ")
+}
+
+fn normalized(replies: &[String], ids: &[u64]) -> Vec<String> {
+    replies.iter().map(|r| normalize(r, ids)).collect()
 }
 
 /// Per-client script: client i gets its own shard count, workload sizes
-/// and seeds, so concurrent sessions that leak state into each other
-/// cannot produce the reference replies.
+/// and seeds, so cross-talk between concurrent workloads cannot
+/// reproduce the reference replies. Every loaded dataset is dropped at
+/// the end so concurrent passes never trip table eviction.
 fn script_for(i: usize) -> Vec<String> {
     let shards = 1 + (i % 3); // 1, 2, 3, 1, ...
     let n = 300 + 40 * i;
@@ -34,45 +84,53 @@ fn script_for(i: usize) -> Vec<String> {
         format!("RACK {shards}"),
         format!("LOAD HIST {n} {seed}"),
         format!("LOAD DP 24 4 {seed}"),
-        "DATASETS".to_string(),
-        "HIST 1".to_string(),
-        "HIST 1".to_string(), // repeat: resident query must be stable
-        format!("DP 2 {}", seed + 1),
+        "HIST {0}".to_string(),
+        "HIST {0}".to_string(), // repeat: resident query must be stable
+        format!("DP {{1}} {}", seed + 1),
         format!("HIST {n} {seed}"), // one-shot interleaved with resident
-        "DROP 1".to_string(),
-        "DATASETS".to_string(),
-        "HIST 1".to_string(), // dropped: ERR, but session stays usable
-        format!("DP 2 {}", seed + 1),
+        "DROP {0}".to_string(),
+        "HIST {0}".to_string(), // dropped: ERR, but the session stays usable
+        format!("DP {{1}} {}", seed + 1),
+        "DROP {1}".to_string(),
         "QUIT".to_string(),
     ]
 }
 
 #[test]
-fn concurrent_sessions_are_isolated_and_bit_equal_to_single_client() {
+fn concurrent_clients_stay_bit_equal_to_serial_runs_modulo_global_ids() {
     const CLIENTS: usize = 4;
     let server = Server::spawn("127.0.0.1:0").unwrap();
     let addr = server.addr;
 
-    // reference pass: each script alone, sequentially
+    // reference pass: each script alone, sequentially, same server
     let expected: Vec<Vec<String>> = (0..CLIENTS)
-        .map(|i| run_script(addr, &script_for(i)))
+        .map(|i| {
+            let (replies, ids) = run_script(addr, &script_for(i));
+            normalized(&replies, &ids)
+        })
         .collect();
     // sanity on the reference itself
     for (i, replies) in expected.iter().enumerate() {
         assert_eq!(replies[0], "PONG");
-        assert!(replies[2].starts_with("OK id=1 kind=hist"), "client {i}: {}", replies[2]);
-        assert!(replies[3].starts_with("OK id=2 kind=dp"), "client {i}: {}", replies[3]);
-        assert!(replies[4].starts_with("OK count=2"), "client {i}: {}", replies[4]);
-        assert_eq!(replies[5], replies[6], "client {i}: resident repeat drifted");
-        assert!(replies[11].starts_with("ERR"), "client {i}: {}", replies[11]);
-        assert_eq!(replies[7], replies[12], "client {i}: DP after DROP drifted");
+        assert!(replies[2].starts_with("OK id=#0 kind=hist"), "client {i}: {}", replies[2]);
+        assert!(replies[3].starts_with("OK id=#1 kind=dp"), "client {i}: {}", replies[3]);
+        assert_eq!(replies[4], replies[5], "client {i}: resident repeat drifted");
+        assert_eq!(replies[8], "OK dropped=#0", "client {i}: {}", replies[8]);
+        assert_eq!(replies[9], "ERR unknown dataset #0", "client {i}: {}", replies[9]);
+        assert_eq!(replies[6], replies[10], "client {i}: DP after DROP drifted");
         assert_eq!(*replies.last().unwrap(), "BYE");
     }
 
-    // concurrent pass: all clients at once against the same server
+    // concurrent pass: all clients at once against the same server; the
+    // global ids differ, everything else must not
     let got: Vec<Vec<String>> = std::thread::scope(|s| {
         let handles: Vec<_> = (0..CLIENTS)
-            .map(|i| s.spawn(move || run_script(addr, &script_for(i))))
+            .map(|i| {
+                s.spawn(move || {
+                    let (replies, ids) = run_script(addr, &script_for(i));
+                    normalized(&replies, &ids)
+                })
+            })
             .collect();
         handles.into_iter().map(|h| h.join().unwrap()).collect()
     });
@@ -86,31 +144,39 @@ fn concurrent_sessions_are_isolated_and_bit_equal_to_single_client() {
 #[test]
 fn interleaved_queries_on_one_shared_server_stay_deterministic() {
     // Two rounds of the same mixed workload from many threads: every
-    // reply for a given request line must be identical across rounds and
-    // across threads (the server holds no cross-connection state).
+    // normalized reply for a given request line must be identical across
+    // rounds and across threads — concurrent loads shift the global ids,
+    // nothing else.
     let server = Server::spawn("127.0.0.1:0").unwrap();
     let addr = server.addr;
     let script: Vec<String> = vec![
         "LOAD SPMV 40 280 5".into(),
-        "SPMV 1 9".into(),
-        "SPMV 1 9".into(),
+        "SPMV {0} 9".into(),
+        "SPMV {0} 9".into(),
         "LOAD ED 32 2 6".into(),
-        "ED 2 3 11".into(),
-        "SPMV 1 9".into(),
+        "ED {1} 3 11".into(),
+        "SPMV {0} 9".into(),
+        "DROP {0}".into(),
+        "DROP {1}".into(),
         "QUIT".into(),
     ];
     let rounds: Vec<Vec<Vec<String>>> = (0..2)
         .map(|_| {
             std::thread::scope(|s| {
                 let handles: Vec<_> = (0..3)
-                    .map(|_| s.spawn(|| run_script(addr, &script)))
+                    .map(|_| {
+                        s.spawn(|| {
+                            let (replies, ids) = run_script(addr, &script);
+                            normalized(&replies, &ids)
+                        })
+                    })
                     .collect();
                 handles.into_iter().map(|h| h.join().unwrap()).collect()
             })
         })
         .collect();
     let reference = &rounds[0][0];
-    assert!(reference[1].contains("checksum=") && reference[1].contains("dataset=1"));
+    assert!(reference[1].contains("checksum=") && reference[1].contains("dataset=#0"));
     assert_eq!(reference[1], reference[2], "resident SPMV repeat drifted");
     assert_eq!(reference[1], reference[5], "resident SPMV drifted after another LOAD");
     for (r, round) in rounds.iter().enumerate() {

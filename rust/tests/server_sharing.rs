@@ -1,0 +1,223 @@
+//! Cross-session sharing battery (docs/PROTOCOL.md §Sharing): the
+//! resident table is server-wide, so datasets loaded on one connection
+//! are queryable from every other. This suite pins the three guarantees
+//! that make that safe: shared reads from any number of connections are
+//! bit-equal to a lone serial session and leave no trace (frozen wear,
+//! unchanged epoch); reads from *other* connections refresh eviction
+//! recency; and the FIFO admission gate never starves a shared reader
+//! behind an exclusive query stream. A fourth test makes the
+//! cross-connection coalescer observable through the `STATS` counters
+//! while holding the bit-equality line.
+
+use prins::host::server::Server;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+fn ask(conn: &mut TcpStream, reader: &mut BufReader<TcpStream>, req: &str) -> String {
+    writeln!(conn, "{req}").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    line.trim().to_string()
+}
+
+fn connect(addr: std::net::SocketAddr) -> (TcpStream, BufReader<TcpStream>) {
+    let conn = TcpStream::connect(addr).unwrap();
+    let reader = BufReader::new(conn.try_clone().unwrap());
+    (conn, reader)
+}
+
+fn ask_serially(addr: std::net::SocketAddr, script: &[&str]) -> Vec<String> {
+    let (mut conn, mut reader) = connect(addr);
+    script.iter().map(|req| ask(&mut conn, &mut reader, req)).collect()
+}
+
+fn ask_pipelined(addr: std::net::SocketAddr, script: &[&str]) -> Vec<String> {
+    let (mut conn, mut reader) = connect(addr);
+    let burst: String = script.iter().map(|r| format!("{r}\n")).collect();
+    conn.write_all(burst.as_bytes()).unwrap();
+    let mut replies = Vec::with_capacity(script.len());
+    let mut line = String::new();
+    for req in script {
+        line.clear();
+        assert!(
+            reader.read_line(&mut line).unwrap() > 0,
+            "connection dropped at {req:?}"
+        );
+        replies.push(line.trim().to_string());
+    }
+    replies
+}
+
+fn stat_field(reply: &str, key: &str) -> u64 {
+    reply
+        .split_whitespace()
+        .find_map(|kv| kv.strip_prefix(key))
+        .unwrap_or_else(|| panic!("no {key} in {reply}"))
+        .parse()
+        .unwrap()
+}
+
+#[test]
+fn shared_reads_across_connections_are_bit_equal_and_leave_no_trace() {
+    let server = Server::spawn("127.0.0.1:0").unwrap();
+    let setup = ask_serially(
+        server.addr,
+        &["LOAD SEARCH 400 9", "LOAD HIST 300 5", "QUIT"],
+    );
+    assert!(setup[0].starts_with("OK id=1 kind=search"), "{}", setup[0]);
+    assert!(setup[1].starts_with("OK id=2 kind=hist"), "{}", setup[1]);
+
+    // mixed shared reads over both datasets, including the listing —
+    // every field of every reply is pinned by the lone reference run
+    let mut script = Vec::new();
+    for _ in 0..4 {
+        script.extend_from_slice(&[
+            "SEARCH 1 100 5000",
+            "HIST 2",
+            "SEARCH 1 7 7",
+            "SEARCH 1 100 5000",
+        ]);
+    }
+    script.push("DATASETS");
+    script.push("QUIT");
+    let reference = ask_serially(server.addr, &script);
+    assert_eq!(
+        reference[script.len() - 2],
+        "OK count=2 epoch=2 ds=1:search:400:1 ds=2:hist:300:1"
+    );
+
+    const CLIENTS: usize = 8;
+    let barrier = Arc::new(Barrier::new(CLIENTS));
+    std::thread::scope(|s| {
+        for _ in 0..CLIENTS {
+            let (reference, barrier, script) = (&reference, barrier.clone(), &script);
+            s.spawn(move || {
+                barrier.wait();
+                let got = ask_pipelined(server.addr, script);
+                assert_eq!(&got, reference, "shared reads diverged under concurrency");
+            });
+        }
+    });
+
+    // no trace: wear is frozen under shared reads, the epoch did not
+    // move, so a post-storm lone run repeats the reference bit for bit
+    let after = ask_serially(server.addr, &script);
+    assert_eq!(after, reference, "the storm left state behind");
+    server.shutdown();
+}
+
+#[test]
+fn reads_from_another_connection_keep_a_dataset_hot_against_eviction() {
+    let server = Server::spawn("127.0.0.1:0").unwrap();
+    let (mut a, mut ra) = connect(server.addr);
+    // connection A fills the table: ids 1..=16, identical wear
+    for i in 0..16 {
+        let r = ask(&mut a, &mut ra, "LOAD HIST 32 1");
+        assert!(r.starts_with(&format!("OK id={}", i + 1)), "{r}");
+    }
+    // connection B reads id 1 — recency must be stamped through the
+    // shared table, not per-session bookkeeping
+    let (mut b, mut rb) = connect(server.addr);
+    let q = ask(&mut b, &mut rb, "HIST 1");
+    assert!(q.contains("dataset=1"), "{q}");
+
+    // A's next load evicts wear-aware LRU: id 1 was refreshed by B, so
+    // the victim is id 2 — were sessions still isolated, A would evict
+    // the dataset B just read
+    let r = ask(&mut a, &mut ra, "LOAD HIST 32 1");
+    assert!(r.ends_with("evicted=2"), "{r}");
+    let ds = ask(&mut a, &mut ra, "DATASETS");
+    assert!(ds.contains("ds=1:"), "B's read did not keep id 1 hot: {ds}");
+    // and B still sees its dataset alive
+    let q2 = ask(&mut b, &mut rb, "HIST 1");
+    assert_eq!(q2, q, "survivor dataset drifted across the eviction");
+    server.shutdown();
+}
+
+#[test]
+fn shared_reader_is_not_starved_by_exclusive_query_streams() {
+    // regression for FIFO admission: two connections stream exclusive
+    // SPMV queries back to back while a third issues serial shared
+    // reads. The ticket gate admits the reader in arrival order, so
+    // every read must complete well inside the socket timeout — a
+    // writer-preference or exclusive-streak gate would starve it.
+    let server = Server::spawn("127.0.0.1:0").unwrap();
+    let setup = ask_serially(server.addr, &["LOAD SPMV 40 280 5", "LOAD HIST 300 5", "QUIT"]);
+    assert!(setup[0].starts_with("OK id=1"), "{}", setup[0]);
+    assert!(setup[1].starts_with("OK id=2"), "{}", setup[1]);
+
+    let exclusive_script: Vec<&str> = std::iter::repeat("SPMV 1 9")
+        .take(150)
+        .chain(["QUIT"])
+        .collect();
+    let barrier = Arc::new(Barrier::new(3));
+    std::thread::scope(|s| {
+        for _ in 0..2 {
+            let (barrier, script) = (barrier.clone(), &exclusive_script);
+            s.spawn(move || {
+                barrier.wait();
+                let replies = ask_pipelined(server.addr, script);
+                assert_eq!(replies.len(), script.len());
+            });
+        }
+        let barrier = barrier.clone();
+        s.spawn(move || {
+            barrier.wait();
+            let (mut conn, mut reader) = connect(server.addr);
+            conn.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+            let first = ask(&mut conn, &mut reader, "HIST 2");
+            assert!(first.contains("dataset=2"), "{first}");
+            for _ in 0..24 {
+                // a starved reader times out the socket and panics here
+                let r = ask(&mut conn, &mut reader, "HIST 2");
+                assert_eq!(r, first, "shared read drifted under exclusive load");
+            }
+            assert_eq!(ask(&mut conn, &mut reader, "QUIT"), "BYE");
+        });
+    });
+    server.shutdown();
+}
+
+#[test]
+fn coalesced_search_bursts_stay_bit_equal_and_show_in_stats() {
+    let server = Server::spawn("127.0.0.1:0").unwrap();
+    let setup = ask_serially(server.addr, &["LOAD SEARCH 400 9", "QUIT"]);
+    assert!(setup[0].starts_with("OK id=1"), "{}", setup[0]);
+
+    // lone-reference reply for the probe query: search is wear-free, so
+    // this is the pinned answer for every later burst member
+    let reference = ask_serially(server.addr, &["SEARCH 1 100 5000"])[0].clone();
+    assert!(reference.contains("dataset=1"), "{reference}");
+
+    // fire one-packet bursts until the mux provably merged one: packet
+    // arrival isn't guaranteed to land in a single sweep, so retry — the
+    // replies must be bit-equal to the lone reference on every attempt,
+    // coalesced or not
+    let script: Vec<&str> = std::iter::repeat("SEARCH 1 100 5000").take(8).collect();
+    let mut merged = false;
+    for _ in 0..20 {
+        let barrier = Arc::new(Barrier::new(2));
+        std::thread::scope(|s| {
+            for _ in 0..2 {
+                let (barrier, script, reference) = (barrier.clone(), &script, &reference);
+                s.spawn(move || {
+                    barrier.wait();
+                    for got in ask_pipelined(server.addr, script) {
+                        assert_eq!(&got, reference, "coalesced reply diverged");
+                    }
+                });
+            }
+        });
+        let stats = ask_serially(server.addr, &["STATS 1"])[0].clone();
+        if stat_field(&stats, "coal_batches=") >= 1 {
+            assert!(stat_field(&stats, "coal_members=") >= 2, "{stats}");
+            assert!(stat_field(&stats, "coal_cycles=") >= 1, "{stats}");
+            merged = true;
+            break;
+        }
+    }
+    assert!(merged, "no burst was ever coalesced across 20 attempts");
+    server.shutdown();
+}

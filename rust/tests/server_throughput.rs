@@ -1,9 +1,12 @@
 //! Soak/stress battery for the multiplexed server (DESIGN.md §Serving):
-//! N concurrent clients × Q pipelined queries over resident datasets,
-//! with every reply asserted byte-identical to a single-client serial
-//! reference session — concurrency, pipelining, and shared-read
-//! admission must never change a reply bit — plus zero dropped
-//! connections and consistent ledger windows after the storm.
+//! N concurrent clients × Q pipelined queries over one **shared**
+//! resident dataset — the table is server-wide (docs/PROTOCOL.md
+//! §Sharing), so a setup connection loads once and every client queries
+//! the same id. Every reply is asserted byte-identical to a
+//! single-client serial reference session: concurrency, pipelining,
+//! shared-read admission, and cross-connection coalescing must never
+//! change a reply bit — plus zero dropped connections and consistent
+//! ledger windows after the storm.
 
 use prins::host::server::{ServeOptions, Server};
 use std::io::{BufRead, BufReader, Write};
@@ -47,6 +50,14 @@ fn ask_pipelined(addr: std::net::SocketAddr, script: &[&str]) -> Vec<String> {
     replies
 }
 
+/// Load one dataset into the fresh server's shared table from a setup
+/// connection; on a fresh server the first load is always id 1, which
+/// the client scripts reference directly.
+fn load_once(addr: std::net::SocketAddr, load_line: &str) {
+    let replies = ask_serially(addr, &[load_line, "QUIT"]);
+    assert!(replies[0].starts_with("OK id=1 "), "{}", replies[0]);
+}
+
 /// The soak driver: `clients` threads each run `script` as a pipelined
 /// burst against `server`, and every thread's replies must equal the
 /// serial single-client reference, reply for reply.
@@ -72,11 +83,12 @@ fn soak(server: &Server, clients: usize, script: &[&str]) {
     });
 }
 
-/// The scripted session used across client counts: a resident hist
-/// dataset (write-free → shared-read admitted), a burst of queries, an
-/// exclusive DATASETS fence in the middle, and more shared reads after.
+/// The scripted session used across client counts: shared reads of the
+/// pre-loaded hist dataset with a `DATASETS` listing in the middle —
+/// its `count=`/`epoch=` fields are pinned by the single setup load, so
+/// it too must stay byte-stable under the storm.
 fn hist_script() -> Vec<&'static str> {
-    let mut s = vec!["LOAD HIST 300 5", "PING"];
+    let mut s = vec!["PING"];
     s.extend(std::iter::repeat("HIST 1").take(8));
     s.push("DATASETS");
     s.extend(std::iter::repeat("HIST 1").take(8));
@@ -84,33 +96,40 @@ fn hist_script() -> Vec<&'static str> {
     s
 }
 
+fn hist_server() -> Server {
+    let server = Server::spawn("127.0.0.1:0").unwrap();
+    load_once(server.addr, "LOAD HIST 300 5");
+    server
+}
+
 #[test]
 fn soak_4_clients_bit_equal_to_serial_reference() {
-    let server = Server::spawn("127.0.0.1:0").unwrap();
+    let server = hist_server();
     soak(&server, 4, &hist_script());
     server.shutdown();
 }
 
 #[test]
 fn soak_16_clients_bit_equal_to_serial_reference() {
-    let server = Server::spawn("127.0.0.1:0").unwrap();
+    let server = hist_server();
     soak(&server, 16, &hist_script());
     server.shutdown();
 }
 
 #[test]
 fn soak_64_clients_bit_equal_to_serial_reference() {
-    let server = Server::spawn("127.0.0.1:0").unwrap();
+    let server = hist_server();
     soak(&server, 64, &hist_script());
     server.shutdown();
 }
 
 #[test]
 fn soak_search_kernel_and_single_worker_server() {
-    // the second shared-read kernel, and the degenerate pool: one
+    // the coalescable shared-read kernel (concurrent clients firing the
+    // same pipelined SEARCH burst is exactly the shape the
+    // cross-connection coalescer merges), and the degenerate pool: one
     // worker must still serve pipelined concurrent clients correctly
     let script = vec![
-        "LOAD SEARCH 400 9",
         "SEARCH 1 100 5000",
         "SEARCH 1 0 4294967295",
         "SEARCH 1 100 5000",
@@ -119,6 +138,7 @@ fn soak_search_kernel_and_single_worker_server() {
         "QUIT",
     ];
     let server = Server::spawn("127.0.0.1:0").unwrap();
+    load_once(server.addr, "LOAD SEARCH 400 9");
     soak(&server, 16, &script);
     server.shutdown();
 
@@ -130,6 +150,7 @@ fn soak_search_kernel_and_single_worker_server() {
         },
     )
     .unwrap();
+    load_once(one.addr, "LOAD SEARCH 400 9");
     soak(&one, 8, &script);
     one.shutdown();
 }
@@ -138,13 +159,13 @@ fn soak_search_kernel_and_single_worker_server() {
 fn ledger_windows_stay_consistent_after_the_storm() {
     // after a soak, a fresh session's resident queries must still
     // repeat bit-identically and match the pre-storm reference: no
-    // cross-session ledger or cycle leakage through the shared pool
-    let server = Server::spawn("127.0.0.1:0").unwrap();
-    let script = ["LOAD HIST 300 5", "HIST 1", "HIST 1"];
+    // cross-session ledger or cycle leakage through the shared table
+    let server = hist_server();
+    let script = ["HIST 1", "HIST 1"];
     let before = ask_serially(server.addr, &script);
     soak(&server, 16, &hist_script());
     let after = ask_serially(server.addr, &script);
-    assert_eq!(before, after, "session state leaked across the soak");
+    assert_eq!(before, after, "dataset state leaked across the soak");
     assert_eq!(after[1], after[2], "resident query stopped repeating");
     server.shutdown();
 }

@@ -8,8 +8,9 @@
 //! structural property tests.
 
 use prins::algorithms::kernel::{registry, ResidentDyn};
+use prins::analysis::contract::write_freedom_overlay;
 use prins::analysis::{
-    check_program, verify_registry, ArrayShape, RuleId, Severity,
+    check_program, verify_registry, ArrayShape, QueryPlan, RuleId, Severity,
 };
 use prins::controller::Controller;
 use prins::host::rack::PrinsRack;
@@ -77,6 +78,74 @@ fn c01_write_freedom_is_a_structural_proof_for_claiming_kernels() {
             }
         }
     }
+}
+
+#[test]
+fn c03_overlay_kernels_confine_query_writes_to_scratch_columns() {
+    // the scratch-overlay shared-read path is sound only if overlay
+    // kernels never write a stored column; beyond the driver's C03 pass,
+    // inspect the synthesized streams directly
+    let claiming: Vec<_> = registry().iter().filter(|e| e.overlay_queries).collect();
+    assert!(
+        claiming.iter().map(|e| e.name).collect::<HashSet<_>>()
+            == ["hist", "dp", "ed", "search"].into_iter().collect(),
+        "overlay_queries set drifted: update this gate"
+    );
+    for entry in claiming {
+        let res = small_resident(entry);
+        for q in 0..4 {
+            for pq in res.query_plans_seeded(q, 7) {
+                assert!(
+                    write_freedom_overlay(&pq.plan, &pq.resident_columns).is_empty(),
+                    "{}: overlay query plan writes stored columns",
+                    entry.name
+                );
+                for prog in &pq.plan.programs {
+                    for instr in &prog.instrs {
+                        match instr {
+                            Instr::Write(p) => assert!(
+                                p.iter().all(|(c, _)| !pq.resident_columns.contains(c)),
+                                "{}: write {instr:?} touches resident {:?}",
+                                entry.name,
+                                pq.resident_columns
+                            ),
+                            Instr::ClearColumns { base, width } => assert!(
+                                *base >= pq.resident_columns.end
+                                    || base.saturating_add(*width)
+                                        <= pq.resident_columns.start,
+                                "{}: {instr:?} overlaps resident {:?}",
+                                entry.name,
+                                pq.resident_columns
+                            ),
+                            _ => {}
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn c03_fixture_writing_a_stored_column_is_rejected() {
+    // a deliberately-broken overlay plan: one write hitting stored col 2
+    // and a clear straddling the resident/scratch boundary
+    let mut p = Program::new();
+    p.push(Instr::Compare(vec![(0, true)]));
+    p.push(Instr::Write(vec![(8, true), (2, false)]));
+    p.push(Instr::ClearColumns { base: 7, width: 2 });
+    let plan = QueryPlan {
+        programs: vec![p],
+        extra_cycles: 0,
+    };
+    let diags = write_freedom_overlay(&plan, &(0..8));
+    assert_eq!(diags.len(), 2, "{diags:?}");
+    assert!(diags.iter().all(|d| d.rule == RuleId::C03));
+    assert!(diags.iter().all(|d| d.severity == Severity::Error));
+    assert_eq!(diags[0].index, Some(1));
+    assert_eq!(diags[1].index, Some(2));
+    // the same plan confined to scratch columns is clean
+    assert!(write_freedom_overlay(&plan, &(20..28)).is_empty());
 }
 
 #[test]
